@@ -1,0 +1,157 @@
+"""AOT lowering: jax programs -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text* (not serialized HloModuleProto): jax >=
+0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts [--only 'fact-s-.*'] [--list]
+
+Layout written:
+    artifacts/<variant>/{init,step[,grad,apply]}.hlo.txt + manifest.json
+    artifacts/eval/<eval_key>.hlo.txt + <eval_key>.json
+    artifacts/index.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import VariantCfg, load_variants
+from .programs import make_apply, make_eval, make_grad, make_init, make_step
+from .state import HDR, StateLayout
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def lower_variant(cfg: VariantCfg, out_dir: str, use_pallas: bool = True) -> dict:
+    layout = StateLayout(cfg)
+    m = cfg.model
+    vdir = os.path.join(out_dir, cfg.name)
+    state_spec = jax.ShapeDtypeStruct((layout.total,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, m.seq_len + 1), jnp.int32)
+    entry = {"programs": {}}
+
+    t0 = time.time()
+    if "init" in cfg.programs:
+        lowered = jax.jit(make_init(layout)).lower(
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+        )
+        _write(os.path.join(vdir, "init.hlo.txt"), to_hlo_text(lowered))
+        entry["programs"]["init"] = f"{cfg.name}/init.hlo.txt"
+    if "step" in cfg.programs:
+        lowered = jax.jit(make_step(layout, use_pallas)).lower(state_spec, tokens_spec)
+        _write(os.path.join(vdir, "step.hlo.txt"), to_hlo_text(lowered))
+        entry["programs"]["step"] = f"{cfg.name}/step.hlo.txt"
+    if "grad" in cfg.programs:
+        lowered = jax.jit(make_grad(layout)).lower(state_spec, tokens_spec)
+        _write(os.path.join(vdir, "grad.hlo.txt"), to_hlo_text(lowered))
+        entry["programs"]["grad"] = f"{cfg.name}/grad.hlo.txt"
+    if "apply" in cfg.programs:
+        gspec = jax.ShapeDtypeStruct((1 + layout.n_params,), jnp.float32)
+        lowered = jax.jit(make_apply(layout, use_pallas)).lower(state_spec, gspec)
+        _write(os.path.join(vdir, "apply.hlo.txt"), to_hlo_text(lowered))
+        entry["programs"]["apply"] = f"{cfg.name}/apply.hlo.txt"
+
+    manifest = layout.manifest()
+    manifest["programs"] = entry["programs"]
+    _write(os.path.join(vdir, "manifest.json"), json.dumps(manifest, indent=1))
+    entry["manifest"] = f"{cfg.name}/manifest.json"
+    entry["seconds"] = round(time.time() - t0, 2)
+    return entry
+
+
+def lower_eval(cfg: VariantCfg, out_dir: str) -> dict:
+    """One eval program per (model, factorize, rank) — shared across optimizers."""
+    layout = StateLayout(cfg)
+    m = cfg.model
+    prefix_spec = jax.ShapeDtypeStruct((layout.params_end,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, m.seq_len + 1), jnp.int32)
+    spans_spec = jax.ShapeDtypeStruct((cfg.batch, 2), jnp.int32)
+    lowered = jax.jit(make_eval(layout)).lower(prefix_spec, tokens_spec, spans_spec)
+    path = os.path.join(out_dir, "eval", f"{cfg.eval_key}.hlo.txt")
+    _write(path, to_hlo_text(lowered))
+    meta = {
+        "eval_key": cfg.eval_key,
+        "params_end": layout.params_end,
+        "batch": cfg.batch,
+        "seq_len": m.seq_len,
+        "hdr": HDR,
+        "out_len": 2 + 2 * cfg.batch,
+    }
+    _write(
+        os.path.join(out_dir, "eval", f"{cfg.eval_key}.json"),
+        json.dumps(meta, indent=1),
+    )
+    return {"hlo": f"eval/{cfg.eval_key}.hlo.txt", "meta": meta}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="regex filter on variant names")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower optimizer with the jnp reference instead of Pallas kernels",
+    )
+    args = ap.parse_args()
+
+    variants = load_variants()
+    if args.only:
+        pat = re.compile(args.only)
+        variants = {k: v for k, v in variants.items() if pat.search(k)}
+    if args.list:
+        for name, v in variants.items():
+            layout = StateLayout(v)
+            print(
+                f"{name:28s} model={v.model.name:7s} opt={v.optimizer:11s} "
+                f"params={layout.n_params:>9} state={layout.total:>9}"
+            )
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    index = {"variants": {}, "evals": {}}
+    done_evals: set[str] = set()
+    for name, cfg in variants.items():
+        print(f"[aot] lowering {name} ...", flush=True)
+        entry = lower_variant(cfg, args.out, use_pallas=not args.no_pallas)
+        index["variants"][name] = entry
+        if "eval" in cfg.programs and cfg.eval_key not in done_evals:
+            print(f"[aot]   eval program {cfg.eval_key}", flush=True)
+            index["evals"][cfg.eval_key] = lower_eval(cfg, args.out)
+            done_evals.add(cfg.eval_key)
+        print(f"[aot]   done in {entry['seconds']}s", flush=True)
+
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] wrote {len(index['variants'])} variants, "
+          f"{len(index['evals'])} eval programs to {args.out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

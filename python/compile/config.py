@@ -1,0 +1,114 @@
+"""Config registry shared with the Rust runtime.
+
+Both sides read the same ``configs/*.toml`` files; python lowers programs
+from them at build time, rust resolves the identical variant names at run
+time. Keep this module dependency-free (stdlib ``tomllib`` only).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import tomllib
+from dataclasses import dataclass, field
+
+_REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+def _round_mult(x: float, m: int) -> int:
+    return max(m, int(round(x / m)) * m)
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """LLaMA-style architecture shape (see configs/models.toml)."""
+
+    name: str
+    hidden: int
+    layers: int
+    heads: int
+    vocab: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def ffn(self) -> int:
+        """SwiGLU inner width: 8/3 * hidden rounded to a multiple of 32."""
+        return _round_mult(8.0 / 3.0 * self.hidden, 32)
+
+
+@dataclass(frozen=True)
+class VariantCfg:
+    """One AOT program family (configs/variants.toml)."""
+
+    name: str
+    model: ModelCfg
+    factorize: str  # "all" | "ffn" | "none"
+    rank_ratio: float
+    optimizer: str  # adamw | sgd | muon | renorm | spectron | selfguided
+    batch: int
+    telemetry: bool
+    telemetry_matrix: str
+    emb_lr_mult: float
+    programs: tuple[str, ...] = field(default=("init", "step", "eval"))
+
+    def rank(self, fan_in: int) -> int:
+        """Low rank for a matrix with input dimension ``fan_in``.
+
+        The paper sets r = rank_ratio * n (n = input dim); we additionally
+        round to a multiple of 8 for kernel tile friendliness.
+        """
+        return _round_mult(self.rank_ratio * fan_in, 8)
+
+    @property
+    def eval_key(self) -> str:
+        """Variants sharing (model, factorize, rank) share one eval.hlo."""
+        if self.factorize == "none":
+            return f"eval-{self.model.name}-dense"
+        return f"eval-{self.model.name}-{self.factorize}-r{self.rank_ratio:g}"
+
+
+def load_models(path: str | None = None) -> dict[str, ModelCfg]:
+    path = path or os.path.join(_REPO, "configs", "models.toml")
+    with open(path, "rb") as f:
+        raw = tomllib.load(f)
+    out = {}
+    for name, m in raw["model"].items():
+        out[name] = ModelCfg(
+            name=name,
+            hidden=int(m["hidden"]),
+            layers=int(m["layers"]),
+            heads=int(m["heads"]),
+            vocab=int(m["vocab"]),
+            seq_len=int(m["seq_len"]),
+        )
+    return out
+
+
+def load_variants(path: str | None = None) -> dict[str, VariantCfg]:
+    models = load_models()
+    path = path or os.path.join(_REPO, "configs", "variants.toml")
+    with open(path, "rb") as f:
+        raw = tomllib.load(f)
+    d = raw.get("defaults", {})
+    out = {}
+    for name, v in raw["variant"].items():
+        out[name] = VariantCfg(
+            name=name,
+            model=models[v["model"]],
+            factorize=str(v.get("factorize", "all")),
+            rank_ratio=float(v.get("rank_ratio", d.get("rank_ratio", 0.25))),
+            optimizer=str(v["optimizer"]),
+            batch=int(v.get("batch", d.get("batch", 8))),
+            telemetry=bool(v.get("telemetry", d.get("telemetry", True))),
+            telemetry_matrix=str(
+                v.get("telemetry_matrix", d.get("telemetry_matrix", "attn_o"))
+            ),
+            emb_lr_mult=float(v.get("emb_lr_mult", d.get("emb_lr_mult", 0.3))),
+            programs=tuple(v.get("programs", ["init", "step", "eval"])),
+        )
+    return out

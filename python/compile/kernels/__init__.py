@@ -1,0 +1,28 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+``newton_schulz`` / ``power_iter`` / ``lowrank_matmul`` take a
+``use_pallas`` flag (default True in the optimizer path) and are validated
+against the pure-jnp oracles in ``ref.py`` by python/tests.
+"""
+
+from .lowrank_matmul import lowrank_matmul
+from .newton_schulz import newton_schulz
+from .power_iter import power_iter
+from .ref import (
+    NS_COEFFS,
+    NS_EPS,
+    lowrank_matmul_ref,
+    newton_schulz_ref,
+    power_iter_ref,
+)
+
+__all__ = [
+    "NS_COEFFS",
+    "NS_EPS",
+    "lowrank_matmul",
+    "lowrank_matmul_ref",
+    "newton_schulz",
+    "newton_schulz_ref",
+    "power_iter",
+    "power_iter_ref",
+]

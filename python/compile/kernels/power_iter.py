@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: power iteration spectral-norm estimate (Algorithm 3).
+
+Spectron estimates sigma_max(A) and sigma_max(B) every step with a single
+power iteration whose left vector u persists in optimizer state (the
+PowerSGD trick the paper cites). Cost is 2mn FLOPs per matrix — two
+matvecs — so the kernel is bandwidth-bound: one streaming pass of the
+factor through VMEM per matvec, vector operands resident.
+
+Grid iterates the stacked layer axis; each program instance handles one
+(m, r) factor and its (m,) vector. interpret=True on this image (see
+newton_schulz.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import power_iter_ref
+
+
+def _pi_kernel(w_ref, u_ref, sig_ref, uo_ref, *, iters: int):
+    w = w_ref[0].astype(jnp.float32)  # (m, r)
+    u = u_ref[0].astype(jnp.float32)  # (m,)
+    u = u / (jnp.sqrt(jnp.sum(u * u)) + 1e-20)
+    v = jnp.zeros((w.shape[1],), jnp.float32)
+    for _ in range(iters):
+        v = jnp.dot(w.T, u)
+        v = v / (jnp.sqrt(jnp.sum(v * v)) + 1e-20)
+        u = jnp.dot(w, v)
+        u = u / (jnp.sqrt(jnp.sum(u * u)) + 1e-20)
+    sig_ref[0, 0] = jnp.dot(u, jnp.dot(w, v))  # Rayleigh quotient
+    uo_ref[0] = u
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "use_pallas"))
+def power_iter(w: jnp.ndarray, u: jnp.ndarray, iters: int = 1, use_pallas: bool = True):
+    """sigma_max estimate. (m,r)/(m,) or stacked (L,m,r)/(L,m).
+
+    Returns (sigma, u'): scalars/vectors, stacked when input is stacked.
+    """
+    if not use_pallas:
+        if w.ndim == 3:
+            return jax.vmap(lambda wi, ui: power_iter_ref(wi, ui, iters))(w, u)
+        return power_iter_ref(w, u, iters)
+
+    squeeze = w.ndim == 2
+    ws = w[None] if squeeze else w
+    us = u[None] if squeeze else u
+    lyr, m, r = ws.shape
+    sig, uo = pl.pallas_call(
+        functools.partial(_pi_kernel, iters=iters),
+        grid=(lyr,),
+        in_specs=[
+            pl.BlockSpec((1, m, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lyr, 1), jnp.float32),
+            jax.ShapeDtypeStruct((lyr, m), jnp.float32),
+        ],
+        interpret=True,
+    )(ws.astype(jnp.float32), us.astype(jnp.float32))
+    sig = sig[:, 0]
+    if squeeze:
+        return sig[0], uo[0]
+    return sig, uo

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every L1 kernel is validated against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes/dtypes) before
+anything is lowered to HLO.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Newton-Schulz quintic coefficients from Jordan et al. (2024), used by the
+# paper's Algorithm 2.
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+NS_EPS = 1e-7
+
+
+def newton_schulz_ref(g: jnp.ndarray, steps: int = 5) -> jnp.ndarray:
+    """Orthogonalize ``g`` (singular values -> ~1) via Newton-Schulz.
+
+    Matches the paper's Algorithm 2. ``g`` is (m, n); the Gram matrix is
+    always formed on the smaller side, which for tall factor matrices
+    (m >> r) keeps the iteration at r x r.
+    """
+    a, b, c = NS_COEFFS
+    x = g.astype(jnp.float32)
+    transposed = x.shape[0] < x.shape[1]
+    if transposed:
+        x = x.T  # make tall: gram on the trailing (small) dim
+    x = x / (jnp.linalg.norm(x) + NS_EPS)
+    for _ in range(steps):
+        gram = x.T @ x  # (n, n), n = small side
+        bmat = b * gram + c * (gram @ gram)
+        x = a * x + x @ bmat
+    return (x.T if transposed else x).astype(g.dtype)
+
+
+def power_iter_ref(w: jnp.ndarray, u: jnp.ndarray, iters: int = 1):
+    """Paper Algorithm 3: approximate sigma_max and left singular vector.
+
+    Returns (sigma, u'). ``w`` is (p, q), ``u`` is (p,).
+    """
+    w = w.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    u = u / (jnp.linalg.norm(u) + 1e-20)
+    v = None
+    for _ in range(iters):
+        v = w.T @ u
+        v = v / (jnp.linalg.norm(v) + 1e-20)
+        u = w @ v
+        u = u / (jnp.linalg.norm(u) + 1e-20)
+    sigma = u @ (w @ v)
+    return sigma, u
+
+
+def lowrank_matmul_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray):
+    """Fused low-rank apply: y = (x @ B) @ Aᵀ for W = A Bᵀ (y = W x).
+
+    ``x`` is (t, n), ``a`` is (m, r), ``b`` is (n, r); result (t, m).
+    """
+    return (x @ b) @ a.T

@@ -1,0 +1,162 @@
+"""L2: LLaMA-style transformer with native low-rank factorized weights.
+
+Architecture follows the paper's Appendix E: RMSNorm pre-norm, RoPE
+attention, SwiGLU FFN, untied embedding/head, no biases. Every
+non-embedding matrix can be parameterized as W = A Bᵀ (factorize="all"),
+only the FFN matrices (factorize="ffn", the Wei et al. 2024a setting), or
+kept dense (factorize="none").
+
+Layer parameters are stored stacked along a leading layer axis and the
+block is applied with ``lax.scan`` — this keeps the lowered HLO compact
+(one layer body regardless of depth) and lets the optimizer vmap the
+Newton-Schulz kernel across layers.
+
+Python here runs at build time only: ``aot.py`` lowers the jitted step
+functions to HLO text consumed by the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import VariantCfg
+from .kernels import lowrank_matmul
+from .state import MATRIX_NAMES, is_factorized
+
+
+def rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    return x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * gain
+
+
+def rope_tables(seq_len: int, head_dim: int, base: float = 10000.0):
+    """Precompute RoPE cos/sin tables (seq, head_dim/2)."""
+    half = head_dim // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T, H, hd) -> rotated pairs (Su et al. 2024)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def apply_matrix(
+    x: jnp.ndarray,
+    lp: dict,
+    mat: str,
+    cfg: VariantCfg,
+    alpha=None,
+    use_pallas_matmul: bool = False,
+) -> jnp.ndarray:
+    """y = W x for one per-layer matrix (factorized or dense).
+
+    ``lp`` holds this layer's tensors. When ``alpha`` is given and a
+    self-guided auxiliary dense weight ``sg.<mat>`` is present, the output
+    mixes o = alpha * W_aux x + (1 - alpha) * A Bᵀ x  (paper Eq. 17).
+    """
+    if is_factorized(cfg, mat):
+        a, b = lp[f"{mat}_a"], lp[f"{mat}_b"]
+        if use_pallas_matmul:
+            flat = x.reshape(-1, x.shape[-1])
+            y = lowrank_matmul(flat, a, b).reshape(*x.shape[:-1], a.shape[0])
+        else:
+            y = (x @ b) @ a.T
+        if alpha is not None and f"sg.{mat}" in lp:
+            y = alpha * (x @ lp[f"sg.{mat}"].T) + (1.0 - alpha) * y
+        return y
+    return x @ lp[mat].T
+
+
+def layer_tensors(tensors: dict, cfg: VariantCfg) -> dict:
+    """Collect the stacked per-layer tensors (leading layer axis)."""
+    out = {}
+    for mat in MATRIX_NAMES:
+        if is_factorized(cfg, mat):
+            out[f"{mat}_a"] = tensors[f"{mat}_a"]
+            out[f"{mat}_b"] = tensors[f"{mat}_b"]
+            if f"sg.{mat}" in tensors:
+                out[f"sg.{mat}"] = tensors[f"sg.{mat}"]
+        else:
+            out[mat] = tensors[mat]
+    out["rms1"] = tensors["rms1"]
+    out["rms2"] = tensors["rms2"]
+    return out
+
+
+def forward(
+    tensors: dict,
+    tokens: jnp.ndarray,
+    cfg: VariantCfg,
+    alpha=None,
+    use_pallas_matmul: bool = False,
+) -> jnp.ndarray:
+    """tokens (B, T) int32 -> logits (B, T, V). Causal."""
+    m = cfg.model
+    bsz, seq = tokens.shape
+    h = tensors["embed"][tokens]  # (B, T, d)
+    cos, sin = rope_tables(seq, m.head_dim)
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.bool_))
+
+    def block(h, lp):
+        n1 = rms_norm(h, lp["rms1"])
+        q = apply_matrix(n1, lp, "attn_q", cfg, alpha, use_pallas_matmul)
+        k = apply_matrix(n1, lp, "attn_k", cfg, alpha, use_pallas_matmul)
+        v = apply_matrix(n1, lp, "attn_v", cfg, alpha, use_pallas_matmul)
+        q = apply_rope(q.reshape(bsz, seq, m.heads, m.head_dim), cos, sin)
+        k = apply_rope(k.reshape(bsz, seq, m.heads, m.head_dim), cos, sin)
+        v = v.reshape(bsz, seq, m.heads, m.head_dim)
+        scores = jnp.einsum("bthe,bshe->bhts", q, k) / jnp.sqrt(
+            jnp.asarray(m.head_dim, jnp.float32)
+        )
+        scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhts,bshe->bthe", probs, v).reshape(bsz, seq, m.hidden)
+        h = h + apply_matrix(ctx, lp, "attn_o", cfg, alpha, use_pallas_matmul)
+
+        n2 = rms_norm(h, lp["rms2"])
+        gate = apply_matrix(n2, lp, "ffn_gate", cfg, alpha, use_pallas_matmul)
+        up = apply_matrix(n2, lp, "ffn_up", cfg, alpha, use_pallas_matmul)
+        inner = jax.nn.silu(gate) * up
+        h = h + apply_matrix(inner, lp, "ffn_down", cfg, alpha, use_pallas_matmul)
+        return h, None
+
+    stacked = layer_tensors(tensors, cfg)
+    h, _ = lax.scan(block, h, stacked)
+    h = rms_norm(h, tensors["rms_f"])
+    return h @ tensors["head"].T
+
+
+def token_nll(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-token next-token NLL, (B, T)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def loss_fn(
+    tensors: dict, tokens: jnp.ndarray, cfg: VariantCfg, alpha=None
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy over a packed (B, T+1) batch."""
+    logits = forward(tensors, tokens[:, :-1], cfg, alpha)
+    return jnp.mean(token_nll(logits, tokens[:, 1:]))
+
+
+def span_scores(tensors: dict, tokens: jnp.ndarray, spans: jnp.ndarray, cfg: VariantCfg):
+    """Per-sequence NLL restricted to a span (for eval + downstream scoring).
+
+    tokens: (B, T+1) padded; spans: (B, 2) int32 [start, end) over token
+    positions — position i is *scored* when start <= i < end-1, i.e. the
+    model predicts tokens[i+1]. Returns (per_seq_nll, per_seq_count).
+    """
+    logits = forward(tensors, tokens[:, :-1], cfg)
+    nll = token_nll(logits, tokens[:, 1:])  # (B, T)
+    pos = jnp.arange(nll.shape[1], dtype=jnp.int32)[None, :]
+    mask = (pos >= spans[:, :1]) & (pos < spans[:, 1:2] - 1)
+    maskf = mask.astype(jnp.float32)
+    return jnp.sum(nll * maskf, axis=1), jnp.sum(maskf, axis=1)

@@ -1,0 +1,228 @@
+"""Program builders: the jax functions that aot.py lowers to HLO text.
+
+Every program obeys the single-flat-f32-output convention (DESIGN.md):
+
+* ``init(seed i32[], knobs f32[8])      -> state f32[L]``
+* ``step(state f32[L], tokens i32[B,T+1]) -> state' f32[L]``
+* ``eval(prefix f32[P], tokens i32[B,T+1], spans i32[B,2]) -> f32[2+2B]``
+* ``grad(state f32[L], tokens i32[B,T+1]) -> f32[1+NP]  ([loss | grads])``
+* ``apply(state f32[L], gradvec f32[1+NP]) -> state' f32[L]``
+
+``eval`` takes only the header+params prefix of the state so that one eval
+program is shared by every optimizer with the same architecture. ``grad``
+and ``apply`` split the train step for the coordinator's gradient
+accumulation and simulated data-parallel all-reduce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import state as st
+from .config import VariantCfg
+from .kernels import newton_schulz
+from .model import loss_fn, span_scores
+from .optim import alpha_schedule, optimizer_step
+from .state import HDR, RING, RING_BASE, StateLayout, is_factorized, matrix_dims
+from .telemetry import spectral_telemetry
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_tensors(layout: StateLayout, key) -> dict:
+    """Parameter init. Factorized matrices use Newton-Schulz orthogonalized
+    factors scaled so that ||A Bᵀ||_2 matches the spectral norm of the dense
+    init — an SVD-free stand-in for Khodak et al.'s spectral initialization
+    (no LAPACK custom-calls survive in the lowered HLO; see DESIGN.md
+    substitutions)."""
+    cfg = layout.cfg
+    m = cfg.model
+    n_res = 2.0 * m.layers  # residual-branch variance scaling (GPT-2 style)
+    tensors = {}
+    keys = iter(jax.random.split(key, 64))
+
+    tensors["embed"] = 0.02 * jax.random.normal(next(keys), (m.vocab, m.hidden))
+    tensors["head"] = (1.0 / jnp.sqrt(m.hidden)) * jax.random.normal(
+        next(keys), (m.vocab, m.hidden)
+    )
+    tensors["rms1"] = jnp.ones((m.layers, m.hidden), jnp.float32)
+    tensors["rms2"] = jnp.ones((m.layers, m.hidden), jnp.float32)
+    tensors["rms_f"] = jnp.ones((m.hidden,), jnp.float32)
+
+    for mat in st.MATRIX_NAMES:
+        om, on = matrix_dims(cfg, mat)
+        res_scale = 1.0 / jnp.sqrt(n_res) if mat in ("attn_o", "ffn_down") else 1.0
+        if is_factorized(cfg, mat):
+            r = cfg.rank(on)
+            # dense-init spectral norm estimate for iid N(0, 1/n) entries
+            sigma_tgt = (jnp.sqrt(om * 1.0) + jnp.sqrt(on * 1.0)) / jnp.sqrt(on * 1.0)
+            sa = jnp.sqrt(sigma_tgt) * res_scale
+            ga = jax.random.normal(next(keys), (m.layers, om, r))
+            gb = jax.random.normal(next(keys), (m.layers, on, r))
+            tensors[f"{mat}_a"] = sa * newton_schulz(ga, use_pallas=False)
+            tensors[f"{mat}_b"] = jnp.sqrt(sigma_tgt) * newton_schulz(
+                gb, use_pallas=False
+            )
+        else:
+            std = res_scale / jnp.sqrt(on * 1.0)
+            tensors[mat] = std * jax.random.normal(next(keys), (m.layers, om, on))
+
+    # optimizer section
+    for name in layout.opt_names():
+        spec = layout.specs[name]
+        if name.startswith("opt.u"):  # power-iteration vectors: unit random
+            v = jax.random.normal(next(keys), spec.shape)
+            tensors[name] = v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-20)
+        elif name.startswith("sg."):  # self-guided aux: W0 = A0 B0ᵀ (Eq. 18)
+            base = name[3:]
+            a, b = tensors[f"{base}_a"], tensors[f"{base}_b"]
+            tensors[name] = jnp.einsum("lmr,lnr->lmn", a, b)
+        else:
+            tensors[name] = jnp.zeros(spec.shape, jnp.float32)
+    return tensors
+
+
+def make_init(layout: StateLayout):
+    def init(seed: jnp.ndarray, knobs: jnp.ndarray) -> jnp.ndarray:
+        key = jax.random.PRNGKey(seed)
+        tensors = _init_tensors(layout, key)
+        header = jnp.zeros((HDR,), jnp.float32)
+        # knobs = [total_steps, base_lr, weight_decay, warmup_frac, ...]
+        header = header.at[st.TOTAL_STEPS].set(knobs[0])
+        header = header.at[st.BASE_LR].set(knobs[1])
+        header = header.at[st.WEIGHT_DECAY].set(knobs[2])
+        header = header.at[st.WARMUP_FRAC].set(knobs[3])
+        return layout.pack(header, tensors)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def _trainable_names(layout: StateLayout) -> list[str]:
+    names = layout.param_names()
+    if layout.cfg.optimizer == "selfguided":
+        names = names + [f"sg.{b}" for b in layout.factor_pairs()]
+    return names
+
+
+def _compute_grads(layout: StateLayout, tensors: dict, tokens, header):
+    cfg = layout.cfg
+    alpha = alpha_schedule(header) if cfg.optimizer == "selfguided" else None
+    trainable = {n: tensors[n] for n in _trainable_names(layout)}
+
+    def lf(tr):
+        merged = {**tensors, **tr}
+        return loss_fn(merged, tokens, cfg, alpha)
+
+    loss, grads = jax.value_and_grad(lf)(trainable)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads.values())
+    )
+    return loss, grads, gnorm, alpha
+
+
+def _finish_header(layout, header, loss, gnorm, info, alpha, batch_tokens):
+    t = header[st.STEP]
+    h = header
+    h = h.at[st.STEP].set(t + 1.0)
+    h = h.at[st.LOSS].set(loss)
+    h = h.at[st.LR].set(info["lr"])
+    h = h.at[st.GRAD_NORM].set(gnorm)
+    h = h.at[st.SIGMA_A].set(info["sigma_a"])
+    h = h.at[st.SIGMA_B].set(info["sigma_b"])
+    h = h.at[st.RHO].set(info["rho"])
+    h = h.at[st.ALPHA].set(alpha if alpha is not None else 0.0)
+    h = h.at[st.TOKENS_SEEN].set(header[st.TOKENS_SEEN] + batch_tokens)
+    ring_idx = RING_BASE + jnp.mod(t.astype(jnp.int32), RING)
+    h = jax.lax.dynamic_update_slice(h, loss[None], (ring_idx,))
+    return h
+
+
+def _apply_update(layout, tensors, grads, header, loss, gnorm, alpha, use_pallas):
+    cfg = layout.cfg
+    new_tensors, info = optimizer_step(layout, tensors, grads, header, use_pallas)
+    if cfg.telemetry:
+        w_spec, dw_spec, dy_rms = spectral_telemetry(
+            layout, tensors, new_tensors, header[st.STEP]
+        )
+    else:
+        w_spec = dw_spec = dy_rms = jnp.float32(0.0)
+    batch_tokens = jnp.float32(cfg.batch * cfg.model.seq_len)
+    h = _finish_header(layout, header, loss, gnorm, info, alpha, batch_tokens)
+    h = h.at[st.W_SPEC].set(w_spec)
+    h = h.at[st.DW_SPEC].set(dw_spec)
+    h = h.at[st.DY_RMS].set(dy_rms)
+    return layout.pack(h, new_tensors)
+
+
+# ---------------------------------------------------------------------------
+# step / grad / apply / eval
+# ---------------------------------------------------------------------------
+def make_step(layout: StateLayout, use_pallas: bool = True):
+    def step(state: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+        header, tensors = layout.unpack(state)
+        loss, grads, gnorm, alpha = _compute_grads(layout, tensors, tokens, header)
+        return _apply_update(
+            layout, tensors, grads, header, loss, gnorm, alpha, use_pallas
+        )
+
+    return step
+
+
+def make_grad(layout: StateLayout):
+    """[loss | flat grads] for the coordinator's microbatching/all-reduce."""
+    assert layout.cfg.optimizer != "selfguided", "grad program: params-only"
+
+    def grad(state: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+        header, tensors = layout.unpack(state)
+        loss, grads, _gnorm, _ = _compute_grads(layout, tensors, tokens, header)
+        parts = [loss[None]]
+        for n in layout.param_names():
+            parts.append(grads[n].reshape(-1).astype(jnp.float32))
+        return jnp.concatenate(parts)
+
+    return grad
+
+
+def make_apply(layout: StateLayout, use_pallas: bool = True):
+    def apply(state: jnp.ndarray, gradvec: jnp.ndarray) -> jnp.ndarray:
+        header, tensors = layout.unpack(state)
+        loss = gradvec[0]
+        grads = {}
+        off = 1
+        for n in layout.param_names():
+            spec = layout.specs[n]
+            grads[n] = gradvec[off : off + spec.size].reshape(spec.shape)
+            off += spec.size
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        return _apply_update(
+            layout, tensors, grads, header, loss, gnorm, None, use_pallas
+        )
+
+    return apply
+
+
+def make_eval(layout: StateLayout):
+    """Shared per-(model, factorize, rank): takes the header+params prefix."""
+    cfg = layout.cfg
+
+    def evaluate(prefix: jnp.ndarray, tokens: jnp.ndarray, spans: jnp.ndarray):
+        _header, tensors = _unpack_params_only(layout, prefix)
+        nll, cnt = span_scores(tensors, tokens, spans, cfg)
+        total = jnp.stack([jnp.sum(nll), jnp.sum(cnt)])
+        return jnp.concatenate([total, nll, cnt])
+
+    return evaluate
+
+
+def _unpack_params_only(layout: StateLayout, prefix: jnp.ndarray):
+    header = prefix[:HDR]
+    tensors = {}
+    for n in layout.param_names():
+        s = layout.specs[n]
+        tensors[n] = prefix[s.offset : s.offset + s.size].reshape(s.shape)
+    return header, tensors

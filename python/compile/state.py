@@ -1,0 +1,232 @@
+"""Flat train-state layout.
+
+Every lowered program exchanges exactly ONE flat f32 vector with the Rust
+runtime (the PJRT wrapper in the ``xla`` crate cannot untuple results, see
+DESIGN.md). The vector is laid out as::
+
+    state = [ header (HDR=80) | params | optimizer state ]
+
+Header slots carry run-time knobs written by Rust at init (so a single
+lowered program serves every lr / token-budget configuration) plus scalar
+telemetry and a 64-slot loss ring that lets the trainer read the state back
+only every <=64 steps while still recovering a per-step loss curve.
+
+The layout (name -> offset/shape) is serialized into ``manifest.json`` so
+the Rust side can view any tensor inside a host copy of the state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import VariantCfg
+
+# ---- header slots --------------------------------------------------------
+STEP = 0  # current step, as f32
+TOTAL_STEPS = 1  # run length (knob, written by rust at init)
+BASE_LR = 2  # peak lr (knob)
+WEIGHT_DECAY = 3  # decoupled wd (knob)
+WARMUP_FRAC = 4  # warmup fraction of total steps (knob)
+LOSS = 5  # last step loss
+LR = 6  # last applied lr
+GRAD_NORM = 7  # global grad l2
+W_SPEC = 8  # telemetry: ||W||_2 of tracked matrix
+DW_SPEC = 9  # telemetry: ||dW||_2 of tracked matrix update
+DY_RMS = 10  # telemetry: |dy|_rms for a unit-rms probe
+SIGMA_A = 11  # telemetry: power-iter sigma_max(A) of tracked pair
+SIGMA_B = 12  # telemetry: power-iter sigma_max(B)
+RHO = 13  # telemetry: spectron constraint radius eta/(sA+sB+1)
+ALPHA = 14  # self-guided mixing coefficient (0 when unused)
+TOKENS_SEEN = 15  # cumulative trained tokens
+RING_BASE = 16
+RING = 64  # loss ring: ring[step % RING] = loss
+HDR = RING_BASE + RING  # = 80
+
+KNOB_SLOTS = 8  # init() takes knobs f32[8] -> header[1..9)? no: [1..5) + pad
+
+MATRIX_NAMES = ("attn_q", "attn_k", "attn_v", "attn_o", "ffn_gate", "ffn_up", "ffn_down")
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: tuple[int, ...]
+    offset: int  # element offset into the state vector
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def matrix_dims(cfg: VariantCfg, mat: str) -> tuple[int, int]:
+    """(out_dim m, in_dim n) of each per-layer matrix, y = W x convention."""
+    d, f = cfg.model.hidden, cfg.model.ffn
+    return {
+        "attn_q": (d, d),
+        "attn_k": (d, d),
+        "attn_v": (d, d),
+        "attn_o": (d, d),
+        "ffn_gate": (f, d),
+        "ffn_up": (f, d),
+        "ffn_down": (d, f),
+    }[mat]
+
+
+def is_factorized(cfg: VariantCfg, mat: str) -> bool:
+    if cfg.factorize == "none":
+        return False
+    if cfg.factorize == "ffn":
+        return mat.startswith("ffn")
+    return True  # "all": every non-embedding matrix
+
+
+class StateLayout:
+    """Orders tensors and assigns offsets; mirrored in manifest.json."""
+
+    def __init__(self, cfg: VariantCfg):
+        self.cfg = cfg
+        self.specs: dict[str, TensorSpec] = {}
+        self._cursor = HDR
+
+        # ---- parameter section (identical across optimizers) ----
+        m = cfg.model
+        self._add("embed", (m.vocab, m.hidden))
+        for mat in MATRIX_NAMES:
+            om, on = matrix_dims(cfg, mat)
+            if is_factorized(cfg, mat):
+                r = cfg.rank(on)
+                self._add(f"{mat}_a", (m.layers, om, r))
+                self._add(f"{mat}_b", (m.layers, on, r))
+            else:
+                self._add(mat, (m.layers, om, on))
+        self._add("rms1", (m.layers, m.hidden))
+        self._add("rms2", (m.layers, m.hidden))
+        self._add("rms_f", (m.hidden,))
+        self._add("head", (m.vocab, m.hidden))
+        self.params_end = self._cursor
+
+        # ---- optimizer section ----
+        self._build_opt()
+        self.total = self._cursor
+
+    # ------------------------------------------------------------------
+    def _add(self, name: str, shape: tuple[int, ...]) -> None:
+        assert name not in self.specs, name
+        spec = TensorSpec(name, tuple(int(s) for s in shape), self._cursor)
+        self.specs[name] = spec
+        self._cursor += spec.size
+
+    def _build_opt(self) -> None:
+        cfg = self.cfg
+        opt = cfg.optimizer
+        pnames = self.param_names()
+
+        def adamw_for(names):
+            for n in names:
+                self._add(f"opt.m.{n}", self.specs[n].shape)
+                self._add(f"opt.v.{n}", self.specs[n].shape)
+
+        if opt in ("adamw", "selfguided"):
+            adamw_for(pnames)
+            if opt == "selfguided":
+                # dense auxiliary weights for every factorized pair, plus
+                # their own AdamW moments (Wei et al. 2024a, Appendix C).
+                for base in self.factor_pairs():
+                    om, on = matrix_dims(cfg, base)
+                    shape = (cfg.model.layers, om, on)
+                    self._add(f"sg.{base}", shape)
+                    self._add(f"opt.m.sg.{base}", shape)
+                    self._add(f"opt.v.sg.{base}", shape)
+        elif opt == "sgd":
+            for n in pnames:
+                self._add(f"opt.mom.{n}", self.specs[n].shape)
+        elif opt in ("muon", "spectron", "renorm"):
+            mats = self.matrix_param_names()
+            for n in mats:
+                self._add(f"opt.mom.{n}", self.specs[n].shape)
+            if opt in ("spectron", "renorm"):
+                # persisted power-iteration left vectors for each factor
+                # (u_A in R^m per layer); `renorm` additionally persists
+                # vectors for the momentum normalization.
+                for n in mats:
+                    if n.endswith("_a") or n.endswith("_b"):
+                        lyr, mm, _r = self.specs[n].shape
+                        self._add(f"opt.u.{n}", (lyr, mm))
+                        if opt == "renorm":
+                            self._add(f"opt.um.{n}", (lyr, mm))
+            adamw_for([n for n in pnames if n not in mats])
+        else:
+            raise ValueError(f"unknown optimizer {opt}")
+
+    # ------------------------------------------------------------------
+    def param_names(self) -> list[str]:
+        return [n for n, s in self.specs.items() if s.offset < self.params_end]
+
+    def opt_names(self) -> list[str]:
+        return [n for n, s in self.specs.items() if s.offset >= self.params_end]
+
+    def matrix_param_names(self) -> list[str]:
+        """Hidden-layer matrices (muon/spectron targets): stacked 3-D params."""
+        return [
+            n
+            for n in self.param_names()
+            if len(self.specs[n].shape) == 3 and n not in ("embed", "head")
+        ]
+
+    def factor_pairs(self) -> list[str]:
+        """Base names of factorized matrices (have `_a` and `_b` entries)."""
+        return [m for m in MATRIX_NAMES if f"{m}_a" in self.specs]
+
+    @property
+    def n_params(self) -> int:
+        return self.params_end - HDR
+
+    # ---- in-graph pack/unpack ----------------------------------------
+    def unpack(self, state):
+        header = state[:HDR]
+        tensors = {
+            n: state[s.offset : s.offset + s.size].reshape(s.shape)
+            for n, s in self.specs.items()
+        }
+        return header, tensors
+
+    def pack(self, header, tensors):
+        parts = [header]
+        for n, s in self.specs.items():
+            t = tensors[n]
+            assert t.shape == s.shape, (n, t.shape, s.shape)
+            parts.append(t.reshape(-1).astype(jnp.float32))
+        return jnp.concatenate(parts)
+
+    def manifest(self) -> dict:
+        cfg = self.cfg
+        return {
+            "variant": cfg.name,
+            "model": {
+                "name": cfg.model.name,
+                "hidden": cfg.model.hidden,
+                "layers": cfg.model.layers,
+                "heads": cfg.model.heads,
+                "vocab": cfg.model.vocab,
+                "seq_len": cfg.model.seq_len,
+                "ffn": cfg.model.ffn,
+            },
+            "factorize": cfg.factorize,
+            "rank_ratio": cfg.rank_ratio,
+            "optimizer": cfg.optimizer,
+            "batch": cfg.batch,
+            "state_len": self.total,
+            "hdr": HDR,
+            "ring": RING,
+            "ring_base": RING_BASE,
+            "params_end": self.params_end,
+            "n_params": self.n_params,
+            "eval_key": cfg.eval_key,
+            "tensors": [
+                {"name": s.name, "shape": list(s.shape), "offset": s.offset}
+                for s in self.specs.values()
+            ],
+        }

@@ -1,0 +1,75 @@
+"""In-graph spectral telemetry (reproduces the paper's Figures 2 and 3).
+
+Tracks, for one configured matrix (default: the middle layer's attention
+output projection, the paper tracks layer 4's), three quantities per step:
+
+* ``||W||_2``   — spectral norm of the current (product) weight,
+* ``||dW||_2``  — spectral norm of the composite weight update
+                  dW = A'B'ᵀ - ABᵀ (paper Eq. 2),
+* ``|dy|_rms``  — RMS activation change for a unit-RMS probe (Eq. 9-10).
+
+For factorized layers the product matrix is never materialized: power
+iteration runs on the matvec pair x -> A(Bᵀx), exactly the trick the
+optimizer itself uses. Results land in state-header slots so the Rust
+trainer reads them with the ordinary state readback.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import VariantCfg
+from .state import StateLayout, is_factorized
+
+POWER_ITERS = 8  # more than the optimizer's k=1: these are *measurements*
+
+
+def _spectral_norm(matvec, matvec_t, n: int, key) -> jnp.ndarray:
+    """Power iteration on an implicit linear operator R^n -> R^m."""
+    v = jax.random.normal(key, (n,), jnp.float32)
+    v = v / (jnp.linalg.norm(v) + 1e-20)
+    for _ in range(POWER_ITERS):
+        u = matvec(v)
+        u = u / (jnp.linalg.norm(u) + 1e-20)
+        v = matvec_t(u)
+        nv = jnp.linalg.norm(v)
+        v = v / (nv + 1e-20)
+    return nv
+
+
+def tracked_ops(layout: StateLayout, tensors: dict, mat: str, lyr: int):
+    """(matvec, matvec_t, n) for the tracked matrix in `tensors`."""
+    cfg = layout.cfg
+    if is_factorized(cfg, mat):
+        a = tensors[f"{mat}_a"][lyr]  # (m, r)
+        b = tensors[f"{mat}_b"][lyr]  # (n, r)
+        return (lambda x: a @ (b.T @ x)), (lambda y: b @ (a.T @ y)), b.shape[0]
+    w = tensors[mat][lyr]  # (m, n)
+    return (lambda x: w @ x), (lambda y: w.T @ y), w.shape[1]
+
+
+def spectral_telemetry(
+    layout: StateLayout, old: dict, new: dict, step: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (w_spec, dw_spec, dy_rms) for the tracked matrix."""
+    cfg: VariantCfg = layout.cfg
+    mat = cfg.telemetry_matrix
+    lyr = cfg.model.layers // 2
+    key = jax.random.fold_in(jax.random.PRNGKey(1234), step.astype(jnp.int32))
+    k_w, k_dw, k_probe = jax.random.split(key, 3)
+
+    mv1, mt1, n = tracked_ops(layout, new, mat, lyr)
+    mv0, mt0, _ = tracked_ops(layout, old, mat, lyr)
+    dmv = lambda x: mv1(x) - mv0(x)
+    dmt = lambda y: mt1(y) - mt0(y)
+
+    w_spec = _spectral_norm(mv1, mt1, n, k_w)
+    dw_spec = _spectral_norm(dmv, dmt, n, k_dw)
+
+    # |dy|_rms for a unit-RMS probe x: dy = dW x   (paper Eq. 9)
+    x = jax.random.normal(k_probe, (n,), jnp.float32)
+    x = x / (jnp.sqrt(jnp.mean(x * x)) + 1e-20)
+    dy = dmv(x)
+    dy_rms = jnp.sqrt(jnp.mean(dy * dy))
+    return w_spec, dw_spec, dy_rms

@@ -1,0 +1,43 @@
+"""Shared fixtures: small architectures so the suite stays fast."""
+
+import jax
+import pytest
+
+from compile.config import ModelCfg, VariantCfg
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tiny_model(hidden=64, layers=2, heads=2, vocab=128, seq_len=32) -> ModelCfg:
+    return ModelCfg(
+        name="test", hidden=hidden, layers=layers, heads=heads, vocab=vocab,
+        seq_len=seq_len,
+    )
+
+
+def variant(
+    optimizer="spectron",
+    factorize="all",
+    rank_ratio=0.25,
+    batch=2,
+    telemetry=True,
+    programs=("init", "step", "eval", "grad", "apply"),
+    **model_kw,
+) -> VariantCfg:
+    return VariantCfg(
+        name=f"test-{optimizer}-{factorize}",
+        model=tiny_model(**model_kw),
+        factorize=factorize,
+        rank_ratio=rank_ratio,
+        optimizer=optimizer,
+        batch=batch,
+        telemetry=telemetry,
+        telemetry_matrix="attn_o",
+        emb_lr_mult=0.3,
+        programs=tuple(programs),
+    )
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

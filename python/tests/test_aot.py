@@ -1,0 +1,100 @@
+"""AOT lowering: HLO text generation and manifest contracts.
+
+Uses a throwaway tiny variant so the test doesn't depend on (or clobber)
+the real artifacts/ tree.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import lower_eval, lower_variant, to_hlo_text
+from compile.config import load_models, load_variants
+from compile.state import HDR, StateLayout
+
+from .conftest import variant
+
+
+def test_to_hlo_text_is_parseable_hlo(rng):
+    lowered = jax.jit(lambda x: x * 2.0 + 1.0).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+    # single-output convention: root is an array, not a tuple
+    root_lines = [l for l in text.splitlines() if "ROOT" in l]
+    assert root_lines, text
+    assert all("tuple(" not in l for l in root_lines), root_lines
+
+
+def test_lower_variant_writes_programs_and_manifest(tmp_path):
+    cfg = variant(optimizer="spectron", programs=("init", "step", "eval"))
+    entry = lower_variant(cfg, str(tmp_path))
+    vdir = tmp_path / cfg.name
+    assert (vdir / "init.hlo.txt").stat().st_size > 1000
+    assert (vdir / "step.hlo.txt").stat().st_size > 1000
+    man = json.loads((vdir / "manifest.json").read_text())
+    layout = StateLayout(cfg)
+    assert man["state_len"] == layout.total
+    assert man["hdr"] == HDR
+    assert man["programs"].keys() == {"init", "step"}
+    assert entry["programs"]["step"].endswith("step.hlo.txt")
+    # tensor table is gapless and covers the state
+    cursor = HDR
+    for t in man["tensors"]:
+        assert t["offset"] == cursor
+        size = 1
+        for d in t["shape"]:
+            size *= d
+        cursor += size
+    assert cursor == man["state_len"]
+
+
+def test_lower_eval_shares_across_optimizers(tmp_path):
+    a = variant(optimizer="spectron")
+    b = variant(optimizer="adamw")
+    assert a.eval_key == b.eval_key
+    meta = lower_eval(a, str(tmp_path))["meta"]
+    assert meta["params_end"] == StateLayout(a).params_end
+    assert meta["out_len"] == 2 + 2 * a.batch
+    assert (tmp_path / "eval" / f"{a.eval_key}.hlo.txt").exists()
+
+
+def test_registry_configs_are_loadable_and_consistent():
+    models = load_models()
+    variants = load_variants()
+    assert "tiny-s" in models and "z5" in models
+    for name, v in variants.items():
+        assert v.model.name in models, name
+        assert v.model.hidden % v.model.heads == 0, name
+        assert v.model.head_dim % 2 == 0, f"{name}: RoPE needs even head_dim"
+        assert v.optimizer in {"adamw", "sgd", "muon", "renorm", "spectron", "selfguided"}
+        assert 0.0 < v.rank_ratio < 1.0
+        # every variant must build a layout without error
+        layout = StateLayout(v)
+        assert layout.n_params > 0
+
+
+def test_step_program_hlo_contains_while_loop_for_scan(tmp_path):
+    """The scan-over-layers design keeps the HLO compact: depth shows up
+    as a while loop, not unrolled layers."""
+    small = variant(layers=2)
+    big = variant(layers=5)
+    from compile.programs import make_step
+
+    def text_for(cfg):
+        layout = StateLayout(cfg)
+        lowered = jax.jit(make_step(layout, use_pallas=False)).lower(
+            jax.ShapeDtypeStruct((layout.total,), jnp.float32),
+            jax.ShapeDtypeStruct((cfg.batch, cfg.model.seq_len + 1), jnp.int32),
+        )
+        return to_hlo_text(lowered)
+
+    t_small, t_big = text_for(small), text_for(big)
+    assert "while" in t_big
+    # compactness: 2.5x the layers must not cost 2x the HLO
+    assert len(t_big) < 1.6 * len(t_small), (len(t_small), len(t_big))

@@ -1,0 +1,126 @@
+"""L2 model correctness: shapes, causality, factorization modes, grads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import forward, loss_fn, rms_norm, rope_tables, apply_rope, token_nll
+from compile.programs import _init_tensors
+from compile.state import StateLayout, is_factorized
+
+from .conftest import variant
+
+
+def _setup(optimizer="spectron", factorize="all", **kw):
+    cfg = variant(optimizer=optimizer, factorize=factorize, **kw)
+    layout = StateLayout(cfg)
+    tensors = _init_tensors(layout, jax.random.PRNGKey(0))
+    return cfg, layout, tensors
+
+
+def _tokens(cfg, key=0):
+    k = jax.random.PRNGKey(key)
+    return jax.random.randint(k, (cfg.batch, cfg.model.seq_len), 0, cfg.model.vocab)
+
+
+@pytest.mark.parametrize("factorize", ["all", "ffn", "none"])
+def test_forward_shapes(factorize):
+    cfg, layout, tensors = _setup(factorize=factorize)
+    logits = forward(tensors, _tokens(cfg), cfg)
+    assert logits.shape == (cfg.batch, cfg.model.seq_len, cfg.model.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    cfg, layout, tensors = _setup()
+    toks = _tokens(cfg)
+    logits1 = forward(tensors, toks, cfg)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.model.vocab)
+    logits2 = forward(tensors, toks2, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(logits1[:, -1]), np.asarray(logits2[:, -1]))
+
+
+def test_initial_loss_near_uniform():
+    cfg, layout, tensors = _setup()
+    k = jax.random.PRNGKey(5)
+    toks = jax.random.randint(k, (cfg.batch, cfg.model.seq_len + 1), 0, cfg.model.vocab)
+    loss = float(loss_fn(tensors, toks, cfg))
+    assert abs(loss - np.log(cfg.model.vocab)) < 0.75, loss
+
+
+def test_grads_flow_to_all_params():
+    cfg, layout, tensors = _setup()
+    k = jax.random.PRNGKey(5)
+    toks = jax.random.randint(k, (cfg.batch, cfg.model.seq_len + 1), 0, cfg.model.vocab)
+    pnames = layout.param_names()
+    grads = jax.grad(
+        lambda tr: loss_fn({**tensors, **tr}, toks, cfg)
+    )({n: tensors[n] for n in pnames})
+    for n in pnames:
+        g = np.asarray(grads[n])
+        assert np.isfinite(g).all(), n
+        if n != "embed":  # embed rows for unseen tokens legitimately zero
+            assert np.abs(g).max() > 0, f"zero grad for {n}"
+
+
+def test_factorized_params_fewer_than_dense():
+    _, lf, _ = _setup(factorize="all")
+    _, ld, _ = _setup(factorize="none")
+    _, lffn, _ = _setup(factorize="ffn")
+    assert lf.n_params < lffn.n_params < ld.n_params
+
+
+def test_selfguided_alpha_mixing():
+    """alpha=1 must reproduce the dense auxiliary path exactly."""
+    cfg, layout, tensors = _setup(optimizer="selfguided")
+    toks = _tokens(cfg)
+    # alpha=0: pure factorized == forward without alpha
+    l0 = forward(tensors, toks, cfg, alpha=jnp.float32(0.0))
+    lfact = forward({k: v for k, v in tensors.items() if not k.startswith("sg.")},
+                    toks, cfg)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(lfact), atol=1e-5)
+    # at init W0 = A0 B0^T so alpha=1 and alpha=0 agree too (paper Eq. 18)
+    l1 = forward(tensors, toks, cfg, alpha=jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0), atol=1e-3)
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 7.0
+    y = rms_norm(x, jnp.ones(64))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relativity():
+    cos, sin = rope_tables(16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 2, 8))
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <R_i q, R_j k> depends only on i - j
+    q = jax.random.normal(jax.random.PRNGKey(1), (8,))
+    k = jax.random.normal(jax.random.PRNGKey(2), (8,))
+    qk = jnp.stack([q, k])[None, None]  # (1,1,2,8) -> rotate both
+    def dot_at(i, j):
+        qi = apply_rope(jnp.broadcast_to(q, (1, 16, 1, 8)), cos, sin)[0, i, 0]
+        kj = apply_rope(jnp.broadcast_to(k, (1, 16, 1, 8)), cos, sin)[0, j, 0]
+        return float(qi @ kj)
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(5, 2)) > 1e-6
+
+
+def test_token_nll_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 16))
+    targets = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, 16)
+    nll = token_nll(logits, targets)
+    lp = jax.nn.log_softmax(logits, -1)
+    want = -np.take_along_axis(np.asarray(lp), np.asarray(targets)[..., None], -1)[..., 0]
+    np.testing.assert_allclose(np.asarray(nll), want, atol=1e-5)

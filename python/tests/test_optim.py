@@ -1,0 +1,196 @@
+"""Optimizer correctness — including the paper's core guarantee:
+
+    ||dW||_2 = ||A'B'^T - AB^T||_2  <=  eta     (paper Eq. 11-16)
+
+for Spectron updates, verified numerically on random factor pairs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import state as st
+from compile.optim import (
+    ADAM_B1,
+    ADAM_B2,
+    ADAM_EPS,
+    alpha_schedule,
+    lr_schedule,
+    optimizer_step,
+)
+from compile.programs import _init_tensors
+from compile.state import HDR, StateLayout
+
+from .conftest import variant
+
+
+def _header(step=10.0, total=100.0, lr=0.01, wd=0.0, warmup=0.05):
+    h = np.zeros(HDR, np.float32)
+    h[st.STEP] = step
+    h[st.TOTAL_STEPS] = total
+    h[st.BASE_LR] = lr
+    h[st.WEIGHT_DECAY] = wd
+    h[st.WARMUP_FRAC] = warmup
+    return jnp.asarray(h)
+
+
+def _setup(optimizer, wd=0.0, lr=0.01, step=50.0, **kw):
+    cfg = variant(optimizer=optimizer, **kw)
+    layout = StateLayout(cfg)
+    tensors = _init_tensors(layout, jax.random.PRNGKey(0))
+    # fake gradients: same scale as params
+    keys = jax.random.split(jax.random.PRNGKey(1), 256)
+    names = layout.param_names()
+    if optimizer == "selfguided":
+        names = names + [f"sg.{b}" for b in layout.factor_pairs()]
+    grads = {
+        n: 0.1 * jax.random.normal(keys[i], tensors[n].shape)
+        for i, n in enumerate(names)
+    }
+    header = _header(step=step, lr=lr, wd=wd)
+    return cfg, layout, tensors, grads, header
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def test_lr_schedule_shape():
+    hs = [_header(step=s, total=100.0, lr=1.0, warmup=0.1) for s in range(100)]
+    lrs = [float(lr_schedule(h)) for h in hs]
+    assert lrs[0] == pytest.approx(0.1)  # (0+1)/10
+    assert max(lrs) == pytest.approx(1.0)
+    assert np.argmax(lrs) in range(8, 12)
+    assert lrs[-1] < 0.002  # decays to ~0
+    # monotone decreasing after warmup
+    post = lrs[12:]
+    assert all(a >= b - 1e-9 for a, b in zip(post, post[1:]))
+
+
+def test_alpha_schedule_half_cosine():
+    assert float(alpha_schedule(_header(step=0, total=100))) == pytest.approx(1.0)
+    assert float(alpha_schedule(_header(step=25, total=100))) == pytest.approx(0.5, abs=1e-5)
+    assert float(alpha_schedule(_header(step=50, total=100))) == pytest.approx(0.0, abs=1e-6)
+    assert float(alpha_schedule(_header(step=80, total=100))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the paper's spectral bound
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_spectron_bounds_composite_update(seed):
+    """||A'B'^T - AB^T||_2 <= eta for every factor pair (Eq. 11)."""
+    eta = 0.01
+    cfg, layout, tensors, grads, header = _setup("spectron", lr=eta, step=60.0)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 10), 256)
+    grads = {
+        n: 2.0 * jax.random.normal(keys[i], g.shape)  # large, adversarial grads
+        for i, (n, g) in enumerate(grads.items())
+    }
+    # warm the persisted power-iteration vectors so sigma estimates are tight
+    cur = tensors
+    for _ in range(3):
+        cur, _ = optimizer_step(layout, cur, grads, header, use_pallas=False)
+    new, info = optimizer_step(layout, cur, grads, header, use_pallas=False)
+    eta_t = float(lr_schedule(header))
+    for base in layout.factor_pairs():
+        for lyr in range(cfg.model.layers):
+            w0 = np.asarray(cur[f"{base}_a"][lyr] @ cur[f"{base}_b"][lyr].T)
+            w1 = np.asarray(new[f"{base}_a"][lyr] @ new[f"{base}_b"][lyr].T)
+            spec = np.linalg.svd(w1 - w0, compute_uv=False)[0]
+            # NS singular values overshoot unity by up to ~1.3 (Jordan
+            # coefficients), so the practical bound carries that factor.
+            assert spec <= 1.4 * eta_t, (base, lyr, spec, eta_t)
+
+
+def test_spectron_factor_update_norms_bounded_by_rho():
+    cfg, layout, tensors, grads, header = _setup("spectron", lr=0.01)
+    new, info = optimizer_step(layout, tensors, grads, header, use_pallas=False)
+    rho = float(info["rho"])
+    base = layout.factor_pairs()[0]
+    lyr = cfg.model.layers // 2
+    da = np.asarray(new[f"{base}_a"][lyr] - tensors[f"{base}_a"][lyr])
+    assert np.linalg.svd(da, compute_uv=False)[0] <= 1.4 * rho
+
+
+def test_adamw_matches_reference_formula():
+    cfg, layout, tensors, grads, header = _setup("adamw", lr=0.01, wd=0.1, step=0.0)
+    new, _ = optimizer_step(layout, tensors, grads, header)
+    lr = float(lr_schedule(header))
+    n = "rms_f"
+    g = np.asarray(grads[n], np.float64)
+    p = np.asarray(tensors[n], np.float64)
+    m = (1 - ADAM_B1) * g
+    v = (1 - ADAM_B2) * g * g
+    mh, vh = m / (1 - ADAM_B1), v / (1 - ADAM_B2)
+    want = p - lr * (mh / (np.sqrt(vh) + ADAM_EPS))  # rms_f: no weight decay
+    np.testing.assert_allclose(np.asarray(new[n]), want, atol=1e-6)
+    # weight-decayed tensor
+    n = "embed"
+    g = np.asarray(grads[n], np.float64)
+    p = np.asarray(tensors[n], np.float64)
+    m = (1 - ADAM_B1) * g
+    v = (1 - ADAM_B2) * g * g
+    mh, vh = m / (1 - ADAM_B1), v / (1 - ADAM_B2)
+    want = p - lr * (mh / (np.sqrt(vh) + ADAM_EPS) + 0.1 * p)
+    np.testing.assert_allclose(np.asarray(new[n]), want, atol=1e-6)
+
+
+def test_muon_update_is_orthogonal():
+    cfg, layout, tensors, grads, header = _setup("muon", lr=0.01, wd=0.0)
+    new, _ = optimizer_step(layout, tensors, grads, header, use_pallas=False)
+    lr = float(lr_schedule(header))
+    n = layout.matrix_param_names()[0]
+    delta = np.asarray(tensors[n][0] - new[n][0]) / lr
+    s = np.linalg.svd(delta, compute_uv=False)
+    assert s.max() < 1.35 and s.min() > 0.4, s
+
+
+def test_sgd_momentum_rule():
+    cfg, layout, tensors, grads, header = _setup("sgd", lr=0.1, wd=0.0)
+    new, _ = optimizer_step(layout, tensors, grads, header)
+    lr = float(lr_schedule(header))
+    n = "embed"
+    mom = 0.05 * np.asarray(grads[n])  # (1-beta)*g with zero init momentum
+    np.testing.assert_allclose(
+        np.asarray(new[n]), np.asarray(tensors[n]) - lr * mom, atol=1e-6
+    )
+    np.testing.assert_allclose(np.asarray(new[f"opt.mom.{n}"]), mom, atol=1e-7)
+
+
+def test_renorm_constrains_update_without_ortho():
+    cfg, layout, tensors, grads, header = _setup("renorm", lr=0.01)
+    cur = tensors
+    for _ in range(3):  # warm persisted vectors
+        cur, _ = optimizer_step(layout, cur, grads, header, use_pallas=False)
+    new, info = optimizer_step(layout, cur, grads, header, use_pallas=False)
+    base = layout.factor_pairs()[0]
+    lyr = cfg.model.layers // 2
+    da = np.asarray(new[f"{base}_a"][lyr] - cur[f"{base}_a"][lyr])
+    s = np.linalg.svd(da, compute_uv=False)
+    assert s[0] <= 1.4 * float(info["rho"])
+    # renorm only rescales the momentum — the update direction must stay
+    # parallel to it (unlike Newton-Schulz, which reshapes the spectrum)
+    mom = np.asarray(new[f"opt.mom.{base}_a"][lyr])
+    cos = np.sum(da * -mom) / (np.linalg.norm(da) * np.linalg.norm(mom))
+    assert cos > 0.999, cos
+
+
+def test_selfguided_updates_aux_weights():
+    cfg, layout, tensors, grads, header = _setup("selfguided", lr=0.01)
+    new, _ = optimizer_step(layout, tensors, grads, header)
+    base = layout.factor_pairs()[0]
+    assert not np.allclose(
+        np.asarray(new[f"sg.{base}"]), np.asarray(tensors[f"sg.{base}"])
+    )
+
+
+def test_weight_decay_shrinks_matrices():
+    cfg, layout, t0, grads, header = _setup("spectron", lr=0.01, wd=0.5)
+    zero_grads = {n: jnp.zeros_like(g) for n, g in grads.items()}
+    new, _ = optimizer_step(layout, t0, zero_grads, header, use_pallas=False)
+    n = "embed"
+    assert float(jnp.linalg.norm(new[n])) < float(jnp.linalg.norm(t0[n]))
+    # norm gains don't decay
+    np.testing.assert_allclose(np.asarray(new["rms_f"]), np.asarray(t0["rms_f"]),
+                               atol=1e-6)

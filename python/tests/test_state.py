@@ -1,0 +1,103 @@
+"""State layout: pack/unpack round-trips, manifests, optimizer sections."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import state as st
+from compile.state import HDR, StateLayout, matrix_dims
+
+from .conftest import variant
+
+
+@pytest.mark.parametrize(
+    "optimizer", ["adamw", "sgd", "muon", "renorm", "spectron", "selfguided"]
+)
+def test_pack_unpack_roundtrip(optimizer):
+    layout = StateLayout(variant(optimizer=optimizer))
+    key = jax.random.PRNGKey(0)
+    state = jax.random.normal(key, (layout.total,))
+    header, tensors = layout.unpack(state)
+    repacked = layout.pack(header, tensors)
+    np.testing.assert_array_equal(np.asarray(state), np.asarray(repacked))
+
+
+def test_param_section_is_optimizer_independent():
+    layouts = {
+        o: StateLayout(variant(optimizer=o))
+        for o in ["adamw", "sgd", "muon", "renorm", "spectron", "selfguided"]
+    }
+    ref = layouts["adamw"]
+    for o, l in layouts.items():
+        assert l.params_end == ref.params_end, o
+        for n in ref.param_names():
+            assert l.specs[n].offset == ref.specs[n].offset, (o, n)
+            assert l.specs[n].shape == ref.specs[n].shape, (o, n)
+
+
+def test_offsets_are_contiguous_and_disjoint():
+    layout = StateLayout(variant(optimizer="spectron"))
+    cursor = HDR
+    for spec in layout.specs.values():
+        assert spec.offset == cursor
+        cursor += spec.size
+    assert cursor == layout.total
+
+
+def test_rank_rounding():
+    cfg = variant(rank_ratio=0.25, hidden=64)
+    assert cfg.rank(64) == 16
+    assert cfg.rank(100) == 24  # rounded to multiple of 8
+    assert cfg.rank(8) == 8  # floor at 8
+
+
+def test_factor_pair_shapes_follow_paper():
+    """W (m x n) -> A (m x r), B (n x r), r = ratio * n (input dim)."""
+    cfg = variant(optimizer="spectron", hidden=64)
+    layout = StateLayout(cfg)
+    for mat in ("attn_q", "ffn_gate", "ffn_down"):
+        m, n = matrix_dims(cfg, mat)
+        r = cfg.rank(n)
+        assert layout.specs[f"{mat}_a"].shape == (cfg.model.layers, m, r)
+        assert layout.specs[f"{mat}_b"].shape == (cfg.model.layers, n, r)
+
+
+def test_manifest_contents():
+    cfg = variant(optimizer="spectron")
+    layout = StateLayout(cfg)
+    man = layout.manifest()
+    assert man["state_len"] == layout.total
+    assert man["hdr"] == HDR
+    assert man["n_params"] == layout.params_end - HDR
+    names = {t["name"] for t in man["tensors"]}
+    assert "embed" in names and "attn_q_a" in names and "opt.mom.attn_q_a" in names
+    total = HDR + sum(int(np.prod(t["shape"])) for t in man["tensors"])
+    assert total == man["state_len"]
+
+
+def test_selfguided_has_dense_aux_per_pair():
+    cfg = variant(optimizer="selfguided")
+    layout = StateLayout(cfg)
+    for base in layout.factor_pairs():
+        m, n = matrix_dims(cfg, base)
+        assert layout.specs[f"sg.{base}"].shape == (cfg.model.layers, m, n)
+
+
+def test_ffn_only_factorization_splits_correctly():
+    cfg = variant(factorize="ffn")
+    layout = StateLayout(cfg)
+    assert "attn_q" in layout.specs and "attn_q_a" not in layout.specs
+    assert "ffn_gate_a" in layout.specs and "ffn_gate" not in layout.specs
+    assert layout.factor_pairs() == ["ffn_gate", "ffn_up", "ffn_down"]
+
+
+def test_header_slots_distinct():
+    slots = [
+        st.STEP, st.TOTAL_STEPS, st.BASE_LR, st.WEIGHT_DECAY, st.WARMUP_FRAC,
+        st.LOSS, st.LR, st.GRAD_NORM, st.W_SPEC, st.DW_SPEC, st.DY_RMS,
+        st.SIGMA_A, st.SIGMA_B, st.RHO, st.ALPHA, st.TOKENS_SEEN,
+    ]
+    assert len(set(slots)) == len(slots)
+    assert max(slots) < st.RING_BASE
+    assert st.RING_BASE + st.RING == HDR

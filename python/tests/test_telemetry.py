@@ -1,0 +1,86 @@
+"""In-graph spectral telemetry vs numpy ground truth."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.programs import _init_tensors
+from compile.state import StateLayout
+from compile.telemetry import spectral_telemetry, tracked_ops, _spectral_norm
+
+from .conftest import variant
+
+
+def test_tracked_ops_factored_matches_dense_product():
+    cfg = variant(optimizer="spectron")
+    layout = StateLayout(cfg)
+    tensors = _init_tensors(layout, jax.random.PRNGKey(0))
+    lyr = cfg.model.layers // 2
+    mv, mt, n = tracked_ops(layout, tensors, "attn_o", lyr)
+    a = np.asarray(tensors["attn_o_a"][lyr])
+    b = np.asarray(tensors["attn_o_b"][lyr])
+    w = a @ b.T
+    x = np.random.default_rng(0).normal(size=n).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(mv(jnp.asarray(x))), w @ x, atol=1e-4)
+    y = np.random.default_rng(1).normal(size=w.shape[0]).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(mt(jnp.asarray(y))), w.T @ y, atol=1e-4)
+
+
+def test_spectral_norm_power_iteration_accuracy():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(48, 32)).astype(np.float32)
+    # boost the top direction for a clean spectral gap
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    s[0] *= 3.0
+    w = (u * s) @ vt
+    wj = jnp.asarray(w)
+    est = _spectral_norm(
+        lambda x: wj @ x, lambda y: wj.T @ y, 32, jax.random.PRNGKey(0)
+    )
+    assert abs(float(est) - s[0]) / s[0] < 0.01
+
+
+def test_spectral_telemetry_detects_known_update():
+    """Plant a rank-1 update of known spectral norm in the tracked pair and
+    check dw_spec reports it."""
+    cfg = variant(optimizer="spectron")
+    layout = StateLayout(cfg)
+    old = _init_tensors(layout, jax.random.PRNGKey(0))
+    new = dict(old)
+    lyr = cfg.model.layers // 2
+    a = old["attn_o_a"]
+    # bump one column of A by delta: dW = (delta e_col) B^T
+    delta = 0.05
+    new["attn_o_a"] = a.at[lyr, :, 0].add(delta * jnp.ones(a.shape[1]))
+    w_spec, dw_spec, dy_rms = spectral_telemetry(layout, old, new, jnp.float32(3))
+    b0 = np.asarray(old["attn_o_b"][lyr])
+    dw_true = np.linalg.svd(
+        np.outer(delta * np.ones(a.shape[1]), b0[:, 0]), compute_uv=False
+    )[0]
+    assert abs(float(dw_spec) - dw_true) / dw_true < 0.05, (float(dw_spec), dw_true)
+    assert float(w_spec) > 0.1
+    assert float(dy_rms) > 0.0
+
+
+def test_telemetry_zero_update_reports_zero():
+    cfg = variant(optimizer="spectron")
+    layout = StateLayout(cfg)
+    t = _init_tensors(layout, jax.random.PRNGKey(0))
+    _, dw_spec, dy_rms = spectral_telemetry(layout, t, dict(t), jnp.float32(0))
+    assert float(dw_spec) < 1e-6
+    assert float(dy_rms) < 1e-6
+
+
+def test_telemetry_dense_variant():
+    cfg = variant(optimizer="muon", factorize="none")
+    layout = StateLayout(cfg)
+    old = _init_tensors(layout, jax.random.PRNGKey(0))
+    new = dict(old)
+    lyr = cfg.model.layers // 2
+    new["attn_o"] = old["attn_o"].at[lyr].add(0.01)
+    w_spec, dw_spec, _ = spectral_telemetry(layout, old, new, jnp.float32(1))
+    d = cfg.model.hidden
+    # dW = 0.01 * ones(d,d) -> spectral norm 0.01*d
+    assert abs(float(dw_spec) - 0.01 * d) / (0.01 * d) < 0.05
+    assert float(w_spec) > 0.0

@@ -1,0 +1,47 @@
+//! Data-pipeline throughput: corpus generation, BPE training/encoding,
+//! window packing, and batch drawing. The pipeline must comfortably
+//! outrun the trainer (hundreds of ms/step) — these benches verify the
+//! margin and catch regressions.
+
+use spectron::data::bpe::Bpe;
+use spectron::data::corpus::{Corpus, CorpusCfg};
+use spectron::data::dataset::{Dataset, Split};
+use spectron::util::bench::{header, Bench};
+
+fn main() {
+    header("synthetic corpus generation");
+    let corpus = Corpus::new(CorpusCfg::default());
+    let r = Bench::new("generate 200 documents").iters(10).run(|| corpus.text_range(0, 200));
+    let text = corpus.text_range(0, 200);
+    println!(
+        "  -> {:.1} MB/s",
+        text.len() as f64 / 1e6 / r.mean_s
+    );
+
+    header("BPE");
+    let train_text = corpus.text_range(0, 300);
+    Bench::new(&format!("train vocab 1024 on {} KB", train_text.len() / 1024))
+        .iters(3)
+        .run(|| Bpe::train(&train_text, 1024));
+    let bpe = Bpe::train(&train_text, 1024);
+    let enc_text = corpus.text_range(300, 200);
+    let r = Bench::new(&format!("encode {} KB", enc_text.len() / 1024))
+        .iters(10)
+        .run(|| bpe.encode(&enc_text));
+    println!("  -> {:.2} MB/s", enc_text.len() as f64 / 1e6 / r.mean_s);
+    let ids = bpe.encode(&enc_text);
+    Bench::new("decode").iters(10).run(|| bpe.decode(&ids));
+
+    header("dataset packing + batching");
+    Bench::new("pack 1000 documents (vocab 1024, seq 128)")
+        .iters(3)
+        .run(|| Dataset::build_with(&corpus, &bpe, 1000, 128));
+    let ds = Dataset::build_with(&corpus, &bpe, 1000, 128);
+    let mut it = ds.batches(Split::Train, 8, 0);
+    let r = Bench::new("draw batch (8 x 129)").iters(50).run(|| it.next_batch());
+    println!(
+        "  -> {:.1}k tokens/s ({}x margin over a 150 ms train step)",
+        8.0 * 129.0 / r.mean_s / 1e3,
+        (0.150 / r.mean_s) as u64
+    );
+}

@@ -1,0 +1,73 @@
+//! Runtime I/O costs around the hot loop: token upload, state readback
+//! (the loss-ring amortization target), init, and program compilation.
+//! These are exactly the L3 overheads the §Perf pass optimizes — the step
+//! itself should dominate, not the plumbing.
+
+use spectron::config::{Registry, RunCfg};
+use spectron::runtime::state as slots;
+use spectron::runtime::{client, ArtifactIndex, Runtime};
+use spectron::util::bench::{header, Bench};
+use spectron::util::rng::Pcg64;
+
+fn main() {
+    let root = ArtifactIndex::default_root();
+    if !root.join("index.json").exists() {
+        println!("runtime_io: artifacts missing, run `make artifacts`");
+        return;
+    }
+    let idx = ArtifactIndex::load(&root).unwrap();
+    let reg = Registry::load().unwrap();
+    let rt = Runtime::shared().unwrap();
+    let variant = "fact-s-spectron";
+    let v = reg.variant(variant).unwrap();
+    let m = idx.manifest(variant).unwrap();
+
+    header("program loading / compilation");
+    // fresh runtime each iteration to bypass the cache: measures the real
+    // cold-start cost an experiment pays per variant
+    Bench::new("compile init.hlo (cold)").iters(3).run(|| {
+        Runtime::new()
+            .unwrap()
+            .load_program(&idx.program_path(variant, "init"))
+            .unwrap()
+    });
+    Bench::new("load_program (cached)").iters(20).run(|| {
+        rt.load_program(&idx.program_path(variant, "init")).unwrap()
+    });
+
+    header("host <-> device transfers");
+    let init = rt.load_program(&idx.program_path(variant, "init")).unwrap();
+    let knobs = slots::knobs(&RunCfg::default());
+    let state_buf = init
+        .run_literals(&[client::scalar_i32(0), client::vec_f32(&knobs)])
+        .unwrap();
+
+    let mut rng = Pcg64::new(0);
+    let tokens: Vec<i32> = (0..v.batch * (m.seq_len + 1))
+        .map(|_| rng.below(m.vocab as u64) as i32)
+        .collect();
+    let r_up = Bench::new(&format!("upload tokens ({} i32)", tokens.len()))
+        .iters(50)
+        .run(|| {
+            let lit = client::tokens_literal(&tokens, v.batch, m.seq_len + 1).unwrap();
+            rt.upload_literal(&lit).unwrap()
+        });
+    let r_down = Bench::new(&format!("read back state ({} f32 = {:.1} MB)",
+        m.state_len, m.state_len as f64 * 4.0 / 1e6))
+        .iters(20)
+        .run(|| rt.download_f32(&state_buf).unwrap());
+    println!(
+        "  -> upload {:.2} GB/s, readback {:.2} GB/s",
+        tokens.len() as f64 * 4.0 / 1e9 / r_up.mean_s,
+        m.state_len as f64 * 4.0 / 1e9 / r_down.mean_s
+    );
+    println!(
+        "  loss-ring amortization: readback every 50 steps costs {:.3}% of a 150 ms step",
+        r_down.mean_s / 50.0 / 0.150 * 100.0
+    );
+
+    header("init program");
+    Bench::new("init fact-s-spectron (weights + NS init)").iters(5).run(|| {
+        init.run_literals(&[client::scalar_i32(1), client::vec_f32(&knobs)]).unwrap()
+    });
+}

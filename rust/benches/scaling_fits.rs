@@ -1,0 +1,41 @@
+//! Scaling-law analysis cost: the isoFLOP quadratic fits, the power-law
+//! regression, and the Appendix-D parametric Huber + L-BFGS fit (with its
+//! multi-init grid). All must be negligible next to training.
+
+use spectron::scaling::{isoflop, parametric, powerlaw, RunPoint};
+use spectron::util::bench::{header, Bench};
+use spectron::util::rng::Pcg64;
+
+fn synth_grid() -> Vec<RunPoint> {
+    let mut rng = Pcg64::new(3);
+    let mut pts = Vec::new();
+    for &c in &[3.0e11, 6.0e11, 1.2e12, 2.4e12] {
+        for &n in &[1.8e5, 3.7e5, 6.9e5, 1.1e6, 1.8e6, 3.8e6] {
+            let d = c / (6.0 * n);
+            let loss = 1.8 + 25.0 / f64::powf(n, 0.4) + 300.0 / f64::powf(d, 0.33)
+                + 0.002 * rng.normal();
+            pts.push(RunPoint { params: n, tokens: d, flops: c, loss });
+        }
+    }
+    pts
+}
+
+fn main() {
+    let pts = synth_grid();
+    header("scaling-law fits (24-point synthetic grid)");
+    Bench::new("isoFLOP quadratic fits (4 budgets)")
+        .iters(200)
+        .run(|| isoflop::fit_all(&pts));
+    let fits = isoflop::fit_all(&pts);
+    Bench::new("power-law fit of optima").iters(500).run(|| powerlaw::fit(&fits));
+    Bench::new("parametric Huber+L-BFGS fit (36-init grid)")
+        .iters(5)
+        .run(|| parametric::fit(&pts));
+
+    let fit = parametric::fit(&pts);
+    let (na, da) = fit.compute_optimal_exponents();
+    println!(
+        "\nsanity: recovered alpha={:.3} beta={:.3} -> N_opt ∝ C^{:.3}, D_opt ∝ C^{:.3}",
+        fit.alpha, fit.beta, na, da
+    );
+}

@@ -1,0 +1,248 @@
+//! Run-time view of the shared config registry (`configs/*.toml`).
+//!
+//! Mirrors `python/compile/config.py` — both sides parse the same files,
+//! so a variant name is the single source of truth for an experiment's
+//! architecture + optimizer.
+
+use std::collections::BTreeMap;
+
+use crate::util::toml::{parse_file, TomlValue};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+impl ModelCfg {
+    pub fn ffn(&self) -> usize {
+        // 8/3 * hidden rounded to a multiple of 32 (mirror of python)
+        round_mult(8.0 / 3.0 * self.hidden as f64, 32)
+    }
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantCfg {
+    pub name: String,
+    pub model: ModelCfg,
+    pub factorize: String,
+    pub rank_ratio: f64,
+    pub optimizer: String,
+    pub batch: usize,
+    pub telemetry: bool,
+    pub programs: Vec<String>,
+}
+
+impl VariantCfg {
+    pub fn rank(&self, fan_in: usize) -> usize {
+        round_mult(self.rank_ratio * fan_in as f64, 8)
+    }
+    pub fn eval_key(&self) -> String {
+        if self.factorize == "none" {
+            format!("eval-{}-dense", self.model.name)
+        } else {
+            format!(
+                "eval-{}-{}-r{}",
+                self.model.name,
+                self.factorize,
+                trim_float(self.rank_ratio)
+            )
+        }
+    }
+    /// Tokens consumed per training step.
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.model.seq_len
+    }
+}
+
+fn trim_float(x: f64) -> String {
+    // match python's `%g`-ish formatting for the eval_key
+    let s = format!("{x}");
+    s
+}
+
+fn round_mult(x: f64, m: usize) -> usize {
+    let r = ((x / m as f64).round() as usize) * m;
+    r.max(m)
+}
+
+pub struct Registry {
+    pub models: BTreeMap<String, ModelCfg>,
+    pub variants: BTreeMap<String, VariantCfg>,
+}
+
+impl Registry {
+    pub fn load() -> Result<Registry, String> {
+        let models_doc = parse_file(&crate::repo_path("configs/models.toml"))?;
+        let mut models = BTreeMap::new();
+        for (table, kv) in &models_doc {
+            if let Some(name) = table.strip_prefix("model.") {
+                models.insert(
+                    name.to_string(),
+                    ModelCfg {
+                        name: name.to_string(),
+                        hidden: req_usize(kv, table, "hidden")?,
+                        layers: req_usize(kv, table, "layers")?,
+                        heads: req_usize(kv, table, "heads")?,
+                        vocab: req_usize(kv, table, "vocab")?,
+                        seq_len: req_usize(kv, table, "seq_len")?,
+                    },
+                );
+            }
+        }
+
+        let var_doc = parse_file(&crate::repo_path("configs/variants.toml"))?;
+        let empty = BTreeMap::new();
+        let defaults = var_doc.get("defaults").unwrap_or(&empty);
+        let d_batch = opt_usize(defaults, "batch").unwrap_or(8);
+        let d_ratio = opt_f64(defaults, "rank_ratio").unwrap_or(0.25);
+        let d_tel = defaults
+            .get("telemetry")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(true);
+
+        let mut variants = BTreeMap::new();
+        for (table, kv) in &var_doc {
+            if let Some(name) = table.strip_prefix("variant.") {
+                let model_name = kv
+                    .get("model")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("{table}: missing model"))?;
+                let model = models
+                    .get(model_name)
+                    .ok_or_else(|| format!("{table}: unknown model '{model_name}'"))?
+                    .clone();
+                let programs = kv
+                    .get("programs")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|x| x.as_str().map(str::to_string))
+                            .collect()
+                    })
+                    .unwrap_or_else(|| vec!["init".into(), "step".into(), "eval".into()]);
+                variants.insert(
+                    name.to_string(),
+                    VariantCfg {
+                        name: name.to_string(),
+                        model,
+                        factorize: kv
+                            .get("factorize")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("all")
+                            .to_string(),
+                        rank_ratio: opt_f64(kv, "rank_ratio").unwrap_or(d_ratio),
+                        optimizer: kv
+                            .get("optimizer")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| format!("{table}: missing optimizer"))?
+                            .to_string(),
+                        batch: opt_usize(kv, "batch").unwrap_or(d_batch),
+                        telemetry: kv
+                            .get("telemetry")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(d_tel),
+                        programs,
+                    },
+                );
+            }
+        }
+        Ok(Registry { models, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantCfg, String> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| format!("unknown variant '{name}' (see configs/variants.toml)"))
+    }
+}
+
+fn req_usize(
+    kv: &BTreeMap<String, TomlValue>,
+    table: &str,
+    key: &str,
+) -> Result<usize, String> {
+    kv.get(key)
+        .and_then(|v| v.as_i64())
+        .map(|v| v as usize)
+        .ok_or_else(|| format!("{table}: missing int '{key}'"))
+}
+
+fn opt_usize(kv: &BTreeMap<String, TomlValue>, key: &str) -> Option<usize> {
+    kv.get(key).and_then(|v| v.as_i64()).map(|v| v as usize)
+}
+
+fn opt_f64(kv: &BTreeMap<String, TomlValue>, key: &str) -> Option<f64> {
+    kv.get(key).and_then(|v| v.as_f64())
+}
+
+/// One training run's knobs (the values Rust writes into the state header
+/// at init — NOT baked into the HLO).
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    pub total_steps: usize,
+    pub base_lr: f64,
+    pub weight_decay: f64,
+    pub warmup_frac: f64,
+    pub seed: u64,
+    /// read the state back every N steps (<= loss-ring size 64)
+    pub read_interval: usize,
+}
+
+impl Default for RunCfg {
+    fn default() -> Self {
+        RunCfg {
+            total_steps: 200,
+            base_lr: 0.01,
+            weight_decay: 0.01,
+            warmup_frac: 0.05,
+            seed: 0,
+            read_interval: 50,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_loads_and_cross_references() {
+        let reg = Registry::load().unwrap();
+        assert!(reg.models.contains_key("tiny-s"));
+        let v = reg.variant("fact-s-spectron").unwrap();
+        assert_eq!(v.model.hidden, 128);
+        assert_eq!(v.optimizer, "spectron");
+        assert_eq!(v.rank_ratio, 0.25);
+        assert!(v.programs.iter().any(|p| p == "grad"));
+        assert!(reg.variant("no-such-variant").is_err());
+    }
+
+    #[test]
+    fn ffn_and_rank_match_python_rounding() {
+        let reg = Registry::load().unwrap();
+        let m = &reg.models["tiny-s"];
+        assert_eq!(m.ffn(), 352); // 8/3*128 = 341.3 -> 352
+        let v = reg.variant("fact-s-spectron").unwrap();
+        assert_eq!(v.rank(128), 32);
+        assert_eq!(v.rank(352), 88);
+    }
+
+    #[test]
+    fn eval_keys_dedupe_optimizers() {
+        let reg = Registry::load().unwrap();
+        let a = reg.variant("fact-s-spectron").unwrap().eval_key();
+        let b = reg.variant("fact-s-adamw").unwrap().eval_key();
+        let c = reg.variant("dense-s-muon").unwrap().eval_key();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, "eval-tiny-s-all-r0.25");
+    }
+}

@@ -1,0 +1,84 @@
+//! Gradient accumulation: N microbatches through the `grad` program,
+//! averaged on the host, then one `apply`. Semantically equivalent to one
+//! large-batch step (test_grad_linearity in python/tests establishes the
+//! linearity the average relies on).
+
+use anyhow::{Context, Result};
+
+use crate::config::{RunCfg, VariantCfg};
+use crate::data::dataset::BatchIter;
+use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
+use crate::runtime::state as slots;
+
+pub struct GradAccumulator {
+    rt: Runtime,
+    manifest: Manifest,
+    grad_prog: std::sync::Arc<Program>,
+    apply_prog: std::sync::Arc<Program>,
+    state_buf: xla::PjRtBuffer,
+}
+
+impl GradAccumulator {
+    pub fn new(
+        rt: &Runtime,
+        idx: &ArtifactIndex,
+        variant: &VariantCfg,
+        run: RunCfg,
+    ) -> Result<GradAccumulator> {
+        let manifest = idx.manifest(&variant.name)?;
+        anyhow::ensure!(
+            manifest.programs.contains_key("grad") && manifest.programs.contains_key("apply"),
+            "variant {} lacks grad/apply programs",
+            variant.name
+        );
+        let init = rt.load_program(&idx.program_path(&variant.name, "init"))?;
+        let grad_prog = rt.load_program(&idx.program_path(&variant.name, "grad"))?;
+        let apply_prog = rt.load_program(&idx.program_path(&variant.name, "apply"))?;
+        let knobs = slots::knobs(&run);
+        let state_buf = init
+            .run_literals(&[client::scalar_i32(run.seed as i32), client::vec_f32(&knobs)])
+            .context("init")?;
+        Ok(GradAccumulator { rt: rt.clone(), manifest, grad_prog, apply_prog, state_buf })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// One compound step: `micro` gradient microbatches, averaged, applied.
+    /// Returns the averaged loss.
+    pub fn step(&mut self, batches: &mut BatchIter, micro: usize) -> Result<f64> {
+        anyhow::ensure!(micro >= 1);
+        let b = self.manifest.batch;
+        let w = self.manifest.seq_len + 1;
+        let g_len = 1 + self.manifest.n_params;
+        let mut acc = vec![0f32; g_len];
+        for _ in 0..micro {
+            let mb = batches.next_batch();
+            let tok_lit = client::tokens_literal(&mb, b, w)?;
+            let tok = self.rt.upload_literal(&tok_lit)?;
+            let out = self.grad_prog.run_buffers(&[&self.state_buf, &tok])?;
+            drop(tok_lit);
+            let g = self.rt.download_f32(&out)?;
+            anyhow::ensure!(g.len() == g_len, "grad length {}", g.len());
+            for (a, v) in acc.iter_mut().zip(&g) {
+                *a += v;
+            }
+        }
+        let inv = 1.0 / micro as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        let loss = acc[0] as f64;
+        let g_lit = client::vec_f32(&acc);
+        let g_buf = self.rt.upload_literal(&g_lit)?;
+        let out = self.apply_prog.run_buffers(&[&self.state_buf, &g_buf])?;
+        drop(g_lit);
+        self.state_buf = out;
+        Ok(loss)
+    }
+
+    pub fn state(&self) -> Result<StateHost> {
+        StateHost::new(self.rt.download_f32(&self.state_buf)?, &self.manifest)
+    }
+}

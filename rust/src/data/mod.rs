@@ -1,0 +1,18 @@
+//! Data substrate: everything between "nothing" and `i32` token batches.
+//!
+//! The paper pretrains on FineWeb with the LLaMA-2 tokenizer; neither is
+//! available here, so we build the closest synthetic equivalent
+//! (DESIGN.md §Substitutions):
+//!
+//! * [`corpus`] — seeded hierarchical Zipf-Markov document generator
+//!   (topics → sentences → words) with long-tailed statistics and
+//!   learnable bigram structure,
+//! * [`bpe`] — a byte-level BPE tokenizer trained on that corpus,
+//! * [`dataset`] — packing, shuffled batching, train/val split, sharding,
+//! * [`tasks`] — synthetic multiple-choice suites standing in for
+//!   HellaSwag / PIQA / ARC-Easy, scored by per-sequence log-prob.
+
+pub mod bpe;
+pub mod corpus;
+pub mod dataset;
+pub mod tasks;

@@ -1,0 +1,151 @@
+//! Downstream multiple-choice accuracy (lm-eval-harness `acc_norm`
+//! equivalent): every candidate is scored as the length-normalized NLL of
+//! its tokens given the context; the lowest-NLL candidate wins.
+
+use anyhow::Result;
+
+use super::Evaluator;
+use crate::data::bpe::{Bpe, BOS, PAD};
+use crate::data::corpus::Corpus;
+use crate::data::tasks::{self, Item, Task};
+
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: String,
+    pub accuracy: f64,
+    pub n_items: usize,
+    pub chance: f64,
+}
+
+/// One scoring row: tokens padded to (seq_len+1) and the candidate span.
+fn build_row(
+    bpe: &Bpe,
+    context: &str,
+    candidate: &str,
+    width: usize,
+) -> (Vec<i32>, [i32; 2]) {
+    let mut ctx = vec![BOS];
+    ctx.extend(bpe.encode(context));
+    let cand = bpe.encode(&format!(" {candidate}"));
+    // truncate context from the left if needed, always keep the candidate
+    let max_ctx = width.saturating_sub(cand.len()).max(1);
+    if ctx.len() > max_ctx {
+        let cut = ctx.len() - max_ctx;
+        ctx.drain(1..1 + cut); // keep BOS
+    }
+    let cs = ctx.len();
+    let mut row = ctx;
+    row.extend(&cand);
+    row.truncate(width);
+    let ce = row.len();
+    row.resize(width, PAD);
+    // score positions cs-1 .. ce-2 => they predict tokens cs..ce-1
+    (row, [(cs as i32) - 1, ce as i32])
+}
+
+/// Evaluate one task suite; items are scored in eval-batch groups.
+pub fn run_task(
+    ev: &Evaluator,
+    prefix: &[f32],
+    bpe: &Bpe,
+    items: &[Item],
+    task: Task,
+) -> Result<TaskResult> {
+    let width = ev.seq_len + 1;
+    // flatten all candidate rows
+    let mut rows: Vec<(Vec<i32>, [i32; 2])> = Vec::new();
+    for it in items {
+        for cand in &it.candidates {
+            rows.push(build_row(bpe, &it.context, cand, width));
+        }
+    }
+    // score in batches of ev.batch (pad the tail with repeats)
+    let mut scores = vec![0f64; rows.len()];
+    let mut i = 0;
+    while i < rows.len() {
+        let mut toks = Vec::with_capacity(ev.batch * width);
+        let mut spans = Vec::with_capacity(ev.batch * 2);
+        for k in 0..ev.batch {
+            let r = &rows[(i + k).min(rows.len() - 1)];
+            toks.extend_from_slice(&r.0);
+            spans.extend_from_slice(&r.1);
+        }
+        let (_, _, nll, cnt) = ev.score_batch(prefix, &toks, &spans)?;
+        for k in 0..ev.batch {
+            if i + k < rows.len() {
+                scores[i + k] = nll[k] as f64 / (cnt[k] as f64).max(1.0);
+            }
+        }
+        i += ev.batch;
+    }
+    // pick argmin per item
+    let n_choices = task.n_choices();
+    let mut correct = 0usize;
+    for (ix, it) in items.iter().enumerate() {
+        let s = &scores[ix * n_choices..(ix + 1) * n_choices];
+        let best = s
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == it.answer {
+            correct += 1;
+        }
+    }
+    Ok(TaskResult {
+        task: task.name().to_string(),
+        accuracy: correct as f64 / items.len() as f64,
+        n_items: items.len(),
+        chance: 1.0 / n_choices as f64,
+    })
+}
+
+/// The full suite (hs-syn, piqa-syn, arc-syn) for one model state.
+pub fn run_suite(
+    ev: &Evaluator,
+    prefix: &[f32],
+    bpe: &Bpe,
+    corpus: &Corpus,
+    n_items: usize,
+    seed: u64,
+) -> Result<Vec<TaskResult>> {
+    Task::all()
+        .into_iter()
+        .map(|task| {
+            let items = tasks::generate(task, corpus, n_items, seed);
+            run_task(ev, prefix, bpe, &items, task)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::bpe::Bpe;
+
+    #[test]
+    fn row_layout_and_spans() {
+        let bpe = Bpe::train("some tiny corpus for bpe some tiny corpus", 270);
+        let (row, span) = build_row(&bpe, "some tiny", "corpus", 33);
+        assert_eq!(row.len(), 33);
+        assert_eq!(row[0], BOS);
+        assert!(span[0] >= 1 && span[1] > span[0]);
+        // decoded candidate region must contain the candidate text
+        let region: Vec<i32> = row[(span[0] as usize + 1)..span[1] as usize].to_vec();
+        assert!(bpe.decode(&region).contains("corpus"));
+        // tail is padding
+        assert_eq!(row[32], PAD);
+    }
+
+    #[test]
+    fn long_context_truncates_left_keeps_candidate() {
+        let bpe = Bpe::train("word ".repeat(50).as_str(), 270);
+        let long_ctx = "word ".repeat(200);
+        let (row, span) = build_row(&bpe, &long_ctx, "tailcand", 33);
+        assert_eq!(row.len(), 33);
+        assert!(span[1] as usize <= 33);
+        let region: Vec<i32> = row[(span[0] as usize + 1)..span[1] as usize].to_vec();
+        assert!(bpe.decode(&region).contains("tailcand"));
+    }
+}

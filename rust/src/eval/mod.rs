@@ -1,0 +1,67 @@
+//! Evaluation: validation perplexity and the synthetic downstream suites,
+//! both driven through the shared `eval` program (one per architecture,
+//! reused across optimizers — it consumes only the header+params prefix
+//! of the state).
+
+pub mod downstream;
+pub mod perplexity;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime};
+
+/// Handle on a compiled eval program plus its shapes.
+pub struct Evaluator {
+    rt: Runtime,
+    prog: std::sync::Arc<Program>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub params_end: usize,
+}
+
+impl Evaluator {
+    pub fn new(rt: &Runtime, idx: &ArtifactIndex, manifest: &Manifest) -> Result<Evaluator> {
+        let path = idx.eval_path(&manifest.eval_key);
+        let prog = rt
+            .load_program(&path)
+            .with_context(|| format!("loading eval program {}", manifest.eval_key))?;
+        Ok(Evaluator {
+            rt: rt.clone(),
+            prog,
+            batch: manifest.batch,
+            seq_len: manifest.seq_len,
+            params_end: manifest.params_end,
+        })
+    }
+
+    /// Score one batch. `tokens` is row-major (batch, seq_len+1); `spans`
+    /// is (batch, 2) [start, end). Returns (total_nll, total_count,
+    /// per_seq_nll, per_seq_count).
+    pub fn score_batch(
+        &self,
+        prefix: &[f32],
+        tokens: &[i32],
+        spans: &[i32],
+    ) -> Result<(f64, f64, Vec<f32>, Vec<f32>)> {
+        if prefix.len() != self.params_end {
+            return Err(anyhow!(
+                "eval prefix length {} != {}",
+                prefix.len(),
+                self.params_end
+            ));
+        }
+        let b = self.batch;
+        let w = self.seq_len + 1;
+        anyhow::ensure!(tokens.len() == b * w, "tokens shape");
+        anyhow::ensure!(spans.len() == b * 2, "spans shape");
+        let p_lit = client::vec_f32(prefix);
+        let t_lit = client::tokens_literal(tokens, b, w)?;
+        let s_lit = client::tokens_literal(spans, b, 2)?;
+        let out = self.prog.run_literals(&[p_lit, t_lit, s_lit])?;
+        let v = self.rt.download_f32(&out)?;
+        anyhow::ensure!(v.len() == 2 + 2 * b, "eval output length {}", v.len());
+        let nll = v[2..2 + b].to_vec();
+        let cnt = v[2 + b..].to_vec();
+        Ok((v[0] as f64, v[1] as f64, nll, cnt))
+    }
+}

@@ -1,0 +1,43 @@
+//! Validation perplexity over the held-out split (the paper's headline
+//! metric in Table 1).
+
+use anyhow::Result;
+
+use super::Evaluator;
+use crate::data::dataset::Dataset;
+
+/// Mean-NLL perplexity over up to `max_batches` sequential val batches.
+pub fn perplexity(
+    ev: &Evaluator,
+    prefix: &[f32],
+    ds: &Dataset,
+    max_batches: usize,
+) -> Result<PplResult> {
+    let w = ds.seq_len + 1;
+    let full_span: Vec<i32> = (0..ev.batch).flat_map(|_| [0i32, w as i32]).collect();
+    let mut total_nll = 0.0;
+    let mut total_cnt = 0.0;
+    let mut batches = 0;
+    for b in ds.val_batches(ev.batch).into_iter().take(max_batches) {
+        let (nll, cnt, _, _) = ev.score_batch(prefix, &b, &full_span)?;
+        total_nll += nll;
+        total_cnt += cnt;
+        batches += 1;
+    }
+    anyhow::ensure!(batches > 0, "no validation batches");
+    let mean_nll = total_nll / total_cnt;
+    Ok(PplResult {
+        mean_nll,
+        ppl: mean_nll.exp(),
+        tokens: total_cnt,
+        batches,
+    })
+}
+
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub mean_nll: f64,
+    pub ppl: f64,
+    pub tokens: f64,
+    pub batches: usize,
+}

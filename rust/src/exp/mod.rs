@@ -1,0 +1,213 @@
+//! Experiment drivers: one module per table/figure of the paper
+//! (DESIGN.md §Experiment index). Each driver trains/evaluates the
+//! relevant variants, prints the paper's rows/series, renders an ASCII
+//! plot, and dumps CSV under `results/`.
+
+pub mod ablations; // tab2/fig10, tab3/fig11, fig12, fig13
+pub mod baselines; // fig4 + tab1
+pub mod dense; // fig1/fig5, fig6, fig7, fig2, fig3
+pub mod plot;
+pub mod scalinglaws; // fig8, fig9, appD
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{Registry, RunCfg};
+use crate::data::bpe::Bpe;
+use crate::data::corpus::{Corpus, CorpusCfg};
+use crate::data::dataset::{Dataset, Split};
+use crate::eval::{downstream, perplexity, Evaluator};
+use crate::runtime::{ArtifactIndex, Runtime};
+use crate::train::{MetricsLog, TrainResult, Trainer};
+use crate::util::json::Json;
+
+/// Shared experiment context: config registry, artifacts, corpus,
+/// tokenizer and the packed dataset (one per (vocab, seq) — all variants
+/// in the registry share 1024/128).
+pub struct Ctx {
+    pub reg: Registry,
+    pub idx: ArtifactIndex,
+    pub corpus: Arc<Corpus>,
+    pub bpe: Arc<Bpe>,
+    pub ds: Arc<Dataset>,
+    /// smoke mode: shrink every run to a few steps (CI-style)
+    pub smoke: bool,
+}
+
+pub const VOCAB: usize = 1024;
+pub const SEQ_LEN: usize = 128;
+
+impl Ctx {
+    pub fn new(n_docs: u64, smoke: bool) -> Result<Ctx> {
+        let reg = Registry::load().map_err(|e| anyhow!(e))?;
+        let root = ArtifactIndex::default_root();
+        let idx = ArtifactIndex::load(&root)
+            .map_err(|e| anyhow!("{e}\n  hint: run `make artifacts` first"))?;
+        let corpus = Arc::new(Corpus::new(CorpusCfg::default()));
+        crate::info!("ctx", "training BPE tokenizer (vocab {VOCAB})...");
+        let sample = corpus.text_range(1, 400.min(n_docs));
+        let bpe = Arc::new(Bpe::train(&sample, VOCAB));
+        crate::info!("ctx", "packing {n_docs} documents...");
+        let ds = Arc::new(Dataset::build_with(&corpus, &bpe, n_docs, SEQ_LEN));
+        crate::info!(
+            "ctx",
+            "dataset ready: {} train windows, {} val windows",
+            ds.n_windows(Split::Train),
+            ds.n_windows(Split::Val)
+        );
+        Ok(Ctx { reg, idx, corpus, bpe, ds, smoke })
+    }
+
+    /// Scale a step count down in smoke mode.
+    pub fn steps(&self, full: usize) -> usize {
+        if self.smoke {
+            (full / 20).clamp(8, 40)
+        } else {
+            full
+        }
+    }
+
+    /// Train one variant; returns the result and the final state vector.
+    pub fn train_run(
+        &self,
+        rt: &Runtime,
+        variant: &str,
+        run: RunCfg,
+        log_name: Option<&str>,
+    ) -> Result<(TrainResult, Vec<f32>)> {
+        let v = self.reg.variant(variant).map_err(|e| anyhow!(e))?;
+        let mut trainer = Trainer::new(rt, &self.idx, v, run.clone())
+            .with_context(|| format!("trainer for {variant}"))?;
+        let mut batches = self.ds.batches(Split::Train, v.batch, run.seed);
+        let mut metrics = match log_name {
+            Some(n) => MetricsLog::with_file(n)?,
+            None => MetricsLog::in_memory(variant),
+        };
+        let res = trainer.train_with(&mut batches, run.total_steps, &mut metrics)?;
+        let state = trainer.state_vec()?;
+        Ok((res, state))
+    }
+
+    /// Validation perplexity for a trained state.
+    pub fn ppl(&self, rt: &Runtime, variant: &str, state: &[f32]) -> Result<f64> {
+        let v = self.reg.variant(variant).map_err(|e| anyhow!(e))?;
+        let manifest = self.idx.manifest(&v.name)?;
+        let ev = Evaluator::new(rt, &self.idx, &manifest)?;
+        let max_b = if self.smoke { 4 } else { 40 };
+        let prefix = &state[..manifest.params_end];
+        Ok(perplexity::perplexity(&ev, prefix, &self.ds, max_b)?.ppl)
+    }
+
+    /// Downstream suite accuracies (hs-syn, piqa-syn, arc-syn).
+    pub fn downstream(
+        &self,
+        rt: &Runtime,
+        variant: &str,
+        state: &[f32],
+    ) -> Result<Vec<downstream::TaskResult>> {
+        let v = self.reg.variant(variant).map_err(|e| anyhow!(e))?;
+        let manifest = self.idx.manifest(&v.name)?;
+        let ev = Evaluator::new(rt, &self.idx, &manifest)?;
+        let n_items = if self.smoke { 16 } else { 120 };
+        let prefix = &state[..manifest.params_end];
+        downstream::run_suite(&ev, prefix, &self.bpe, &self.corpus, n_items, 777)
+    }
+}
+
+/// Write a CSV file under results/.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<()> {
+    let dir = crate::repo_path("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    let mut out = String::from(header);
+    out.push('\n');
+    for r in rows {
+        out.push_str(r);
+        out.push('\n');
+    }
+    std::fs::write(&path, out)?;
+    crate::info!("exp", "wrote {}", path.display());
+    Ok(())
+}
+
+/// Write an experiment's JSON summary under results/.
+pub fn write_json(name: &str, j: &Json) -> Result<()> {
+    let dir = crate::repo_path("results");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(name), j.to_string())?;
+    Ok(())
+}
+
+/// Default run lengths per model family (scaled for this CPU testbed; the
+/// dense/factorized FLOP-matching uses these as the dense budget).
+pub fn default_steps(model: &str) -> usize {
+    match model {
+        "tiny-s" | "z2" => 300,
+        "tiny-m" | "z4" => 350,
+        "tiny-l" | "z5" => 400,
+        "z0" => 250,
+        "z1" => 275,
+        "z3" => 325,
+        _ => 300,
+    }
+}
+
+/// Matched-FLOP step count for a factorized variant given the dense
+/// variant's steps (paper Sections 5.2: equal training FLOPs).
+pub fn matched_flop_steps(
+    ctx: &Ctx,
+    dense_variant: &str,
+    fact_variant: &str,
+    dense_steps: usize,
+) -> Result<usize> {
+    let dm = ctx.idx.manifest(dense_variant)?;
+    let fm = ctx.idx.manifest(fact_variant)?;
+    // per-token train FLOPs ∝ 6 * n_params (embedding lookups negligible)
+    let ratio = dm.n_params as f64 / fm.n_params as f64;
+    Ok(((dense_steps as f64) * ratio).round() as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactIndex;
+
+    #[test]
+    fn default_steps_grow_with_scale() {
+        assert!(default_steps("tiny-s") < default_steps("tiny-m"));
+        assert!(default_steps("tiny-m") < default_steps("tiny-l"));
+        assert!(default_steps("z0") < default_steps("z5"));
+        assert_eq!(default_steps("unknown"), 300);
+    }
+
+    #[test]
+    fn matched_flop_steps_uses_param_ratio() {
+        let root = ArtifactIndex::default_root();
+        if !root.join("index.json").exists() {
+            return;
+        }
+        let reg = crate::config::Registry::load().unwrap();
+        let idx = ArtifactIndex::load(&root).unwrap();
+        // can't build a full Ctx cheaply (tokenizer training); replicate
+        // the arithmetic against manifests directly
+        let dm = idx.manifest("dense-l-muon").unwrap();
+        let fm = idx.manifest("fact-l-spectron").unwrap();
+        let ratio = dm.n_params as f64 / fm.n_params as f64;
+        assert!(ratio > 1.4 && ratio < 2.2, "{ratio}");
+        // factorized-L is ~44% smaller than dense-L, as the paper's 780M
+        // -> 454M reduction scales down
+        let _ = reg;
+    }
+
+    #[test]
+    fn csv_and_json_writers_create_results() {
+        write_csv("test_writer.csv", "a,b", &["1,2".into(), "3,4".into()]).unwrap();
+        let p = crate::repo_path("results/test_writer.csv");
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s.lines().count(), 3);
+        write_json("test_writer.json", &Json::num(1.5)).unwrap();
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(crate::repo_path("results/test_writer.json")).ok();
+    }
+}

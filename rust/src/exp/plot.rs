@@ -1,0 +1,178 @@
+//! ASCII plotting for experiment drivers: terminal-rendered line charts
+//! (multiple labeled series) — the repo's stand-in for the paper's figure
+//! rendering; the same data lands in results/*.csv for real plotting.
+
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: &str, points: Vec<(f64, f64)>) -> Series {
+        Series { label: label.to_string(), points }
+    }
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+/// Render series into a `width` x `height` character grid with axes.
+pub fn render(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    render_opts(title, xlabel, ylabel, series, 72, 20, false, false)
+}
+
+pub fn render_logx(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    render_opts(title, xlabel, ylabel, series, 72, 20, true, false)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn render_opts(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    logx: bool,
+    logy: bool,
+) -> String {
+    let tx = |x: f64| if logx { x.max(1e-300).log10() } else { x };
+    let ty = |y: f64| if logy { y.max(1e-300).log10() } else { y };
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for s in series {
+        for &(x, y) in &s.points {
+            if x.is_finite() && y.is_finite() {
+                xs.push(tx(x));
+                ys.push(ty(y));
+            }
+        }
+    }
+    if xs.is_empty() {
+        return format!("{title}: (no finite points)\n");
+    }
+    let (xmin, xmax) = minmax(&xs);
+    let (ymin, ymax) = minmax(&ys);
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            if !(x.is_finite() && y.is_finite()) {
+                continue;
+            }
+            let cx = (((tx(x) - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let cy = (((ty(y) - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = g;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("  {title}\n"));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("{} {}", GLYPHS[i % GLYPHS.len()], s.label))
+        .collect();
+    out.push_str(&format!("  [{}]\n", legend.join("   ")));
+    out.push_str(&format!("  {ylabel}\n"));
+    for (r, row) in grid.iter().enumerate() {
+        let yv = ymax - yspan * r as f64 / (height - 1) as f64;
+        let yv = if logy { 10f64.powf(yv) } else { yv };
+        out.push_str(&format!("  {yv:>9.3} |{}|\n", row.iter().collect::<String>()));
+    }
+    let x0 = if logx { 10f64.powf(xmin) } else { xmin };
+    let x1 = if logx { 10f64.powf(xmax) } else { xmax };
+    out.push_str(&format!(
+        "  {:>9} +{}+\n  {:>12} {:<.3e}{}{:.3e}  ({xlabel})\n",
+        "",
+        "-".repeat(width),
+        "",
+        x0,
+        " ".repeat(width.saturating_sub(22)),
+        x1
+    ));
+    out
+}
+
+fn minmax(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// Fixed-width table rendering.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String| {
+        for w in &widths {
+            out.push('+');
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    line(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        out.push_str(&format!("| {:<w$} ", h, w = widths[i]));
+    }
+    out.push_str("|\n");
+    line(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            out.push_str(&format!("| {:<w$} ", cell, w = widths[i]));
+        }
+        out.push_str("|\n");
+    }
+    line(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_series_and_legend() {
+        let s = vec![
+            Series::new("a", (0..50).map(|i| (i as f64, (i as f64).sin())).collect()),
+            Series::new("b", (0..50).map(|i| (i as f64, (i as f64).cos())).collect()),
+        ];
+        let out = render("test", "x", "y", &s);
+        assert!(out.contains("* a") && out.contains("o b"));
+        assert!(out.matches('*').count() > 10);
+    }
+
+    #[test]
+    fn handles_empty_and_nan() {
+        let s = vec![Series::new("e", vec![(f64::NAN, 1.0)])];
+        let out = render("t", "x", "y", &s);
+        assert!(out.contains("no finite"));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let out = table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1.00".into()],
+                vec!["longer-name".into(), "2".into()],
+            ],
+        );
+        assert!(out.contains("| longer-name |"));
+        assert!(out.lines().all(|l| l.len() == out.lines().next().unwrap().len()));
+    }
+}

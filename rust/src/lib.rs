@@ -1,0 +1,54 @@
+//! # Spectron — native low-rank LLM pretraining, reproduced
+//!
+//! Rust runtime for the three-layer reproduction of *"Stabilizing Native
+//! Low-Rank LLM Pretraining"* (Janson, Oyallon & Belilovsky, 2026).
+//!
+//! The layer split (see `DESIGN.md`):
+//!
+//! * **L1/L2 (build time, Python)** — Pallas kernels + JAX model/optimizer,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — everything that runs: config registry, synthetic
+//!   corpus + BPE tokenizer, data pipeline, PJRT runtime, trainer,
+//!   coordinator (grad accumulation, simulated data-parallel all-reduce,
+//!   experiment scheduler), evaluation, scaling-law fits, and one driver
+//!   per table/figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `repro` binary is self-contained.
+//!
+//! Only the `xla` crate (PJRT bindings) and `anyhow` are external; every
+//! other substrate — JSON, TOML, RNG, stats, property testing, the bench
+//! harness — lives in [`util`].
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod linalg;
+pub mod runtime;
+pub mod scaling;
+pub mod train;
+pub mod util;
+
+/// Repo-relative path helper: resolves against `SPECTRON_ROOT` or the
+/// current directory, so binaries work from the repo root and tests work
+/// under `cargo test`.
+pub fn repo_path(rel: &str) -> std::path::PathBuf {
+    let root = std::env::var("SPECTRON_ROOT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            let cwd = std::env::current_dir().unwrap();
+            // walk up until we find configs/ (handles target/ subdirs)
+            let mut dir = cwd.clone();
+            loop {
+                if dir.join("configs").is_dir() {
+                    return dir;
+                }
+                if !dir.pop() {
+                    return cwd;
+                }
+            }
+        });
+    root.join(rel)
+}

@@ -1,0 +1,295 @@
+//! Host-side dense linear algebra (f64, row-major).
+//!
+//! Used by the scaling-law fits, the coordinator's host-side cross-checks
+//! of the in-graph spectral telemetry, and the test suite. This is NOT the
+//! hot path — model math runs inside the AOT-compiled XLA programs.
+
+pub mod lbfgs;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut crate::util::rng::Pcg64) -> Mat {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *out.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order for cache locality
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                self.data[i * self.cols..(i + 1) * self.cols]
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+
+    pub fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, y.len());
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let yi = y[i];
+            if yi == 0.0 {
+                continue;
+            }
+            for j in 0..self.cols {
+                out[j] += self.at(i, j) * yi;
+            }
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|a| a * s).collect(),
+        }
+    }
+
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+pub fn norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+pub fn normalize(x: &mut [f64]) -> f64 {
+    let n = norm(x);
+    if n > 0.0 {
+        for v in x.iter_mut() {
+            *v /= n;
+        }
+    }
+    n
+}
+
+/// Spectral norm via power iteration on an implicit operator
+/// (matvec, matvec_t) : R^n -> R^m — mirrors the in-graph telemetry so the
+/// Rust tests can cross-check HLO-computed values.
+pub fn spectral_norm_op(
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    matvec_t: impl Fn(&[f64]) -> Vec<f64>,
+    n: usize,
+    iters: usize,
+    rng: &mut crate::util::rng::Pcg64,
+) -> f64 {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    normalize(&mut v);
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let mut u = matvec(&v);
+        normalize(&mut u);
+        v = matvec_t(&u);
+        sigma = normalize(&mut v);
+    }
+    sigma
+}
+
+pub fn spectral_norm(m: &Mat, iters: usize, rng: &mut crate::util::rng::Pcg64) -> f64 {
+    spectral_norm_op(|x| m.matvec(x), |y| m.matvec_t(y), m.cols, iters, rng)
+}
+
+/// Newton-Schulz orthogonalization — host mirror of the L1 kernel, same
+/// coefficients (Jordan et al. 2024). Used only in tests to cross-validate
+/// numerics between layers.
+pub const NS_COEFFS: (f64, f64, f64) = (3.4445, -4.7750, 2.0315);
+
+pub fn newton_schulz(g: &Mat, steps: usize) -> Mat {
+    let (a, b, c) = NS_COEFFS;
+    let transposed = g.rows < g.cols;
+    let mut x = if transposed { g.t() } else { g.clone() };
+    let f = x.fro() + 1e-7;
+    x = x.scale(1.0 / f);
+    for _ in 0..steps {
+        let gram = x.t().matmul(&x);
+        let gram2 = gram.matmul(&gram);
+        let mut bmat = gram.scale(b);
+        for (o, g2) in bmat.data.iter_mut().zip(&gram2.data) {
+            *o += c * g2;
+        }
+        let xb = x.matmul(&bmat);
+        x = x.scale(a);
+        for (o, v) in x.data.iter_mut().zip(&xb.data) {
+            *o += v;
+        }
+    }
+    if transposed {
+        x.t()
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(0);
+        let a = Mat::randn(5, 7, &mut rng);
+        let mut eye = Mat::zeros(7, 7);
+        for i in 0..7 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        assert_eq!(a.matmul(&eye).data, a.data);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::randn(6, 4, &mut rng);
+        let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let xm = Mat { rows: 4, cols: 1, data: x.clone() };
+        let want = a.matmul(&xm).data;
+        assert_eq!(a.matvec(&x), want);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::randn(3, 8, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut m = Mat::zeros(4, 4);
+        for (i, s) in [3.0, 7.0, 1.0, 5.0].iter().enumerate() {
+            *m.at_mut(i, i) = *s;
+        }
+        let mut rng = Pcg64::new(3);
+        let s = spectral_norm(&m, 50, &mut rng);
+        assert!((s - 7.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn spectral_norm_rank1_product_op() {
+        // ||a bᵀ||_2 = |a||b|, computed through the implicit factored op
+        let a = vec![1.0, 2.0, 2.0]; // |a| = 3
+        let b = vec![3.0, 4.0]; // |b| = 5
+        let mv = |x: &[f64]| -> Vec<f64> {
+            let s: f64 = b.iter().zip(x).map(|(p, q)| p * q).sum();
+            a.iter().map(|ai| ai * s).collect()
+        };
+        let mt = |y: &[f64]| -> Vec<f64> {
+            let s: f64 = a.iter().zip(y).map(|(p, q)| p * q).sum();
+            b.iter().map(|bi| bi * s).collect()
+        };
+        let mut rng = Pcg64::new(4);
+        let s = spectral_norm_op(mv, mt, 2, 30, &mut rng);
+        assert!((s - 15.0).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn newton_schulz_orthogonalizes() {
+        let mut rng = Pcg64::new(5);
+        let g = Mat::randn(32, 8, &mut rng);
+        let o = newton_schulz(&g, 5);
+        // OᵀO ≈ I within the Jordan-coefficient band: the quintic pushes
+        // singular values into roughly [0.7, 1.2] after 5 iterations, so
+        // diagonal entries (σ²) live in ~[0.49, 1.45] and off-diagonals
+        // stay small relative to the diagonal.
+        let gram = o.t().matmul(&o);
+        for i in 0..8 {
+            let d = gram.at(i, i);
+            assert!((0.4..1.5).contains(&d), "gram[{i}][{i}] = {d}");
+            for j in 0..8 {
+                if i != j {
+                    assert!(gram.at(i, j).abs() < 0.35, "gram[{i}][{j}] = {}", gram.at(i, j));
+                }
+            }
+        }
+        let mut rng2 = Pcg64::new(6);
+        let s = spectral_norm(&o, 40, &mut rng2);
+        assert!(s < 1.35 && s > 0.6, "{s}");
+    }
+
+    #[test]
+    fn newton_schulz_wide_matches_tall() {
+        let mut rng = Pcg64::new(7);
+        let g = Mat::randn(8, 32, &mut rng);
+        let o_wide = newton_schulz(&g, 5);
+        let o_tall = newton_schulz(&g.t(), 5).t();
+        for (a, b) in o_wide.data.iter().zip(&o_tall.data) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! `repro` — the Spectron reproduction launcher.
+//!
+//! ```text
+//! repro info                          list variants + artifact status
+//! repro train --variant V [...]      train one variant
+//! repro eval --ckpt PATH             ppl + downstream for a checkpoint
+//! repro exp <id> [--smoke]           regenerate a paper table/figure
+//!        ids: fig1 fig2 fig3 fig4 tab1 fig6 fig9 fig8 tab2 tab3 fig12
+//!             fig13 appd all
+//! repro dp-demo [--workers N]        simulated data-parallel training
+//! repro accum-demo [--micro N]       gradient-accumulation training
+//! repro data [--docs N]              dataset/tokenizer statistics
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+use spectron::config::{Registry, RunCfg};
+use spectron::coordinator::{DataParallelSim, GradAccumulator};
+use spectron::data::dataset::Split;
+use spectron::exp::{self, Ctx};
+use spectron::runtime::{ArtifactIndex, Runtime};
+use spectron::train::{checkpoint, MetricsLog, Trainer};
+use spectron::util::cli::Args;
+use spectron::{info, util};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env().map_err(|e| anyhow!(e))?;
+    if args.flag("debug") {
+        util::logger::set_level(util::logger::Level::Debug);
+    }
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "info" => info_cmd(),
+        "train" => train_cmd(&mut args),
+        "eval" => eval_cmd(&mut args),
+        "exp" => exp_cmd(&mut args),
+        "dp-demo" => dp_demo(&mut args),
+        "accum-demo" => accum_demo(&mut args),
+        "data" => data_cmd(&mut args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+repro — Spectron (native low-rank LLM pretraining) reproduction
+
+  repro info                         variants + artifact status
+  repro train --variant V [--steps N --lr F --wd F --seed N --docs N]
+              [--ckpt out.ckpt] [--resume in.ckpt] [--read-interval N]
+  repro eval  --ckpt in.ckpt [--docs N] [--items N]
+  repro exp   <fig1|fig2|fig3|fig4|tab1|fig6|fig9|fig8|tab2|tab3|fig12|fig13|appd|all>
+              [--smoke] [--docs N] [--force]
+  repro dp-demo    [--workers N --steps N --variant V]
+  repro accum-demo [--micro N --steps N --variant V]
+  repro data  [--docs N]
+";
+
+fn info_cmd() -> Result<()> {
+    let reg = Registry::load().map_err(|e| anyhow!(e))?;
+    let root = ArtifactIndex::default_root();
+    let built = ArtifactIndex::load(&root).ok();
+    println!("platform: {}", Runtime::shared()?.platform());
+    println!(
+        "artifacts: {}",
+        if built.is_some() { "built" } else { "MISSING (run `make artifacts`)" }
+    );
+    println!("{:<28} {:>8} {:>11} {:>11} {:>10}", "variant", "model", "opt", "params", "state");
+    for (name, v) in &reg.variants {
+        let (p, s) = match &built {
+            Some(idx) => match idx.manifest(name) {
+                Ok(m) => (m.n_params.to_string(), m.state_len.to_string()),
+                Err(_) => ("?".into(), "?".into()),
+            },
+            None => ("-".into(), "-".into()),
+        };
+        println!("{name:<28} {:>8} {:>11} {p:>11} {s:>10}", v.model.name, v.optimizer);
+    }
+    Ok(())
+}
+
+fn train_cmd(args: &mut Args) -> Result<()> {
+    let variant = args.str("variant", "fact-s-spectron");
+    let docs = args.usize("docs", 6000);
+    let run = RunCfg {
+        total_steps: args.usize("steps", 300),
+        base_lr: args.f64("lr", 0.01),
+        weight_decay: args.f64("wd", 0.01),
+        warmup_frac: args.f64("warmup", 0.05),
+        seed: args.usize("seed", 0) as u64,
+        read_interval: args.usize("read-interval", 25),
+    };
+    let ckpt_out = args.opt_str("ckpt");
+    let resume = args.opt_str("resume");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let ctx = Arc::new(Ctx::new(docs as u64, false)?);
+    let rt = Runtime::shared()?;
+    let v = ctx.reg.variant(&variant).map_err(|e| anyhow!(e))?;
+
+    let mut trainer = match resume {
+        Some(path) => {
+            let (ck_variant, state) = checkpoint::load(std::path::Path::new(&path))?;
+            anyhow::ensure!(
+                ck_variant == variant,
+                "checkpoint is for '{ck_variant}', requested '{variant}'"
+            );
+            info!("train", "resuming {variant} from {path}");
+            Trainer::from_state(&rt, &ctx.idx, v, run.clone(), state)?
+        }
+        None => Trainer::new(&rt, &ctx.idx, v, run.clone())?,
+    };
+    let mut batches = ctx.ds.batches(Split::Train, v.batch, run.seed);
+    let mut metrics = MetricsLog::with_file(&format!("train-{variant}"))?;
+    info!("train", "{variant}: {} steps at lr {}", run.total_steps, run.base_lr);
+    let res = trainer.train_with(&mut batches, run.total_steps, &mut metrics)?;
+    println!(
+        "done: {} steps in {:.1}s ({:.0} ms/step), final loss {:.4}{}",
+        res.steps_done,
+        res.wall_s,
+        res.step_seconds_mean * 1e3,
+        res.final_loss,
+        if res.diverged { "  [DIVERGED]" } else { "" }
+    );
+    let state = trainer.state_vec()?;
+    let ppl = ctx.ppl(&rt, &variant, &state)?;
+    println!("validation ppl: {ppl:.3}");
+    if let Some(path) = ckpt_out {
+        checkpoint::save(std::path::Path::new(&path), &variant, &state)?;
+        println!("checkpoint -> {path}");
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &mut Args) -> Result<()> {
+    let path = args.opt_str("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+    let docs = args.usize("docs", 6000);
+    let items = args.usize("items", 120);
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let (variant, state) = checkpoint::load(std::path::Path::new(&path))?;
+    let ctx = Arc::new(Ctx::new(docs as u64, false)?);
+    let rt = Runtime::shared()?;
+    let ppl = ctx.ppl(&rt, &variant, &state)?;
+    println!("{variant}: validation ppl {ppl:.3}");
+    let manifest = ctx.idx.manifest(&variant)?;
+    let ev = spectron::eval::Evaluator::new(&rt, &ctx.idx, &manifest)?;
+    let suite = spectron::eval::downstream::run_suite(
+        &ev,
+        &state[..manifest.params_end],
+        &ctx.bpe,
+        &ctx.corpus,
+        items,
+        777,
+    )?;
+    for t in suite {
+        println!(
+            "  {:<10} acc {:.1}%  (chance {:.0}%, {} items)",
+            t.task,
+            t.accuracy * 100.0,
+            t.chance * 100.0,
+            t.n_items
+        );
+    }
+    Ok(())
+}
+
+fn exp_cmd(args: &mut Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: repro exp <id>"))?;
+    let smoke = args.flag("smoke");
+    let docs = args.usize("docs", if smoke { 1200 } else { 6000 });
+    let force = args.flag("force");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let ctx = Arc::new(Ctx::new(docs as u64, smoke)?);
+    if force {
+        let _ = std::fs::remove_file(spectron::repo_path("results/scaling_runs.json"));
+    }
+    let t0 = std::time::Instant::now();
+    let run_one = |id: &str| -> Result<()> {
+        info!("exp", "=== {id} ===");
+        match id {
+            "fig1" | "fig5" => exp::dense::fig1(&ctx).map(drop),
+            "fig2" => exp::dense::fig2(&ctx).map(drop),
+            "fig3" => exp::dense::fig3(&ctx).map(drop),
+            "fig4" => exp::baselines::fig4(&ctx).map(drop),
+            "tab1" => exp::baselines::tab1(&ctx).map(drop),
+            "fig6" | "fig7" => exp::dense::fig6_fig7(&ctx).map(drop),
+            "fig9" => exp::scalinglaws::fig9(&ctx).map(drop),
+            "fig8" => exp::scalinglaws::fig8(&ctx).map(drop),
+            "appd" => exp::scalinglaws::appd(&ctx).map(drop),
+            "tab2" | "fig10" => exp::ablations::tab2(&ctx).map(drop),
+            "tab3" | "fig11" => exp::ablations::tab3(&ctx).map(drop),
+            "fig12" => exp::ablations::fig12(&ctx).map(drop),
+            "fig13" => exp::ablations::fig13(&ctx).map(drop),
+            other => Err(anyhow!("unknown experiment '{other}'")),
+        }
+        .with_context(|| format!("experiment {id}"))
+    };
+    if id == "all" {
+        for id in [
+            "fig2", "fig3", "tab2", "tab3", "fig12", "fig13", "fig4", "tab1", "fig6",
+            "fig1", "fig9", "fig8", "appd",
+        ] {
+            run_one(id)?;
+        }
+    } else {
+        run_one(&id)?;
+    }
+    info!("exp", "total wall time {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn dp_demo(args: &mut Args) -> Result<()> {
+    let workers = args.usize("workers", 4);
+    let steps = args.usize("steps", 30);
+    let variant = args.str("variant", "fact-s-spectron");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let ctx = Ctx::new(3000, false)?;
+    let rt = Runtime::shared()?;
+    let v = ctx.reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let run = RunCfg { total_steps: steps, ..RunCfg::default() };
+    let mut dp = DataParallelSim::new(&rt, &ctx.idx, v, run, &ctx.ds, workers)?;
+    info!("dp", "{workers} workers, global batch {}", workers * v.batch);
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let stats = dp.step()?;
+        if s % 5 == 0 || s == steps - 1 {
+            let hi = stats.worker_losses.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lo = stats.worker_losses.iter().cloned().fold(f64::INFINITY, f64::min);
+            println!(
+                "step {s:>4}  mean loss {:.4}  worker spread {:.4}  |g| {:.3}",
+                stats.mean_loss,
+                hi - lo,
+                stats.grad_norm
+            );
+        }
+    }
+    let st = dp.state()?;
+    println!(
+        "done in {:.1}s — trained {} steps, final loss {:.4}",
+        t0.elapsed().as_secs_f64(),
+        st.step(),
+        st.loss()
+    );
+    Ok(())
+}
+
+fn accum_demo(args: &mut Args) -> Result<()> {
+    let micro = args.usize("micro", 4);
+    let steps = args.usize("steps", 30);
+    let variant = args.str("variant", "fact-s-spectron");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let ctx = Ctx::new(3000, false)?;
+    let rt = Runtime::shared()?;
+    let v = ctx.reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let run = RunCfg { total_steps: steps, ..RunCfg::default() };
+    let mut acc = GradAccumulator::new(&rt, &ctx.idx, v, run)?;
+    let mut batches = ctx.ds.batches(Split::Train, v.batch, 0);
+    info!("accum", "{micro} microbatches/step -> effective batch {}", micro * v.batch);
+    for s in 0..steps {
+        let loss = acc.step(&mut batches, micro)?;
+        if s % 5 == 0 || s == steps - 1 {
+            println!("step {s:>4}  loss {loss:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn data_cmd(args: &mut Args) -> Result<()> {
+    let docs = args.usize("docs", 6000);
+    args.finish().map_err(|e| anyhow!(e))?;
+    let ctx = Ctx::new(docs as u64, false)?;
+    let train_tokens = ctx.ds.tokens(Split::Train).len();
+    let val_tokens = ctx.ds.tokens(Split::Val).len();
+    println!("documents: {docs}");
+    println!("tokenizer: byte-BPE vocab {} ({} merges)", exp::VOCAB, ctx.bpe.merges.len());
+    println!("train tokens: {train_tokens}  ({} windows)", ctx.ds.n_windows(Split::Train));
+    println!("val tokens:   {val_tokens}  ({} windows)", ctx.ds.n_windows(Split::Val));
+    let sample = ctx.corpus.document(42);
+    println!("\nsample document:\n  {}", &sample[..sample.len().min(300)]);
+    let enc = ctx.bpe.encode(&sample);
+    println!(
+        "\ncompression: {} chars -> {} tokens ({:.2} chars/token)",
+        sample.len(),
+        enc.len(),
+        sample.len() as f64 / enc.len() as f64
+    );
+    Ok(())
+}

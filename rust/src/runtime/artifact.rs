@@ -1,0 +1,271 @@
+//! Artifact loading: the `manifest.json` emitted by `python -m
+//! compile.aot` is the contract between the build side and this runtime —
+//! tensor offsets/shapes inside the flat state, program paths, model
+//! dimensions.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl TensorSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variant: String,
+    pub optimizer: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub state_len: usize,
+    pub hdr: usize,
+    pub ring: usize,
+    pub ring_base: usize,
+    pub params_end: usize,
+    pub n_params: usize,
+    pub eval_key: String,
+    pub tensors: Vec<TensorSpec>,
+    pub programs: BTreeMap<String, String>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let j = Json::parse_file(&path).map_err(|e| anyhow!(e))?;
+        Self::from_json(&j).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_str()
+                .ok_or_else(|| anyhow!("{k}: not a string"))?
+                .to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("{k}: not a number"))
+        };
+        let model = j.req("model").map_err(|e| anyhow!(e))?;
+        let mu = |k: &str| -> Result<usize> {
+            model
+                .req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("model.{k}: not a number"))
+        };
+
+        let mut tensors = Vec::new();
+        let mut by_name = BTreeMap::new();
+        for (i, t) in j
+            .req("tensors")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensors: not an array"))?
+            .iter()
+            .enumerate()
+        {
+            let name = t
+                .req("name")
+                .map_err(|e| anyhow!(e))?
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor name"))?
+                .to_string();
+            let shape = t
+                .req("shape")
+                .map_err(|e| anyhow!(e))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("tensor shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let offset = t
+                .req("offset")
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("tensor offset"))?;
+            by_name.insert(name.clone(), i);
+            tensors.push(TensorSpec { name, shape, offset });
+        }
+
+        let mut programs = BTreeMap::new();
+        if let Some(p) = j.get("programs").and_then(|p| p.as_obj()) {
+            for (k, v) in p {
+                if let Some(path) = v.as_str() {
+                    programs.insert(k.clone(), path.to_string());
+                }
+            }
+        }
+
+        Ok(Manifest {
+            variant: s("variant")?,
+            optimizer: s("optimizer")?,
+            batch: u("batch")?,
+            seq_len: mu("seq_len")?,
+            vocab: mu("vocab")?,
+            hidden: mu("hidden")?,
+            layers: mu("layers")?,
+            state_len: u("state_len")?,
+            hdr: u("hdr")?,
+            ring: u("ring")?,
+            ring_base: u("ring_base")?,
+            params_end: u("params_end")?,
+            n_params: u("n_params")?,
+            eval_key: s("eval_key")?,
+            tensors,
+            programs,
+            by_name,
+        })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&TensorSpec> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow!("tensor '{name}' not in manifest"))
+    }
+
+    /// Total trained FLOPs estimate, 6·N·D with N = trainable params.
+    pub fn flops_for_tokens(&self, tokens: f64) -> f64 {
+        6.0 * self.n_params as f64 * tokens
+    }
+
+    pub fn sanity_check(&self) -> Result<()> {
+        let mut cursor = self.hdr;
+        for t in &self.tensors {
+            if t.offset != cursor {
+                return Err(anyhow!(
+                    "manifest hole before '{}': offset {} != cursor {cursor}",
+                    t.name,
+                    t.offset
+                ));
+            }
+            cursor += t.size();
+        }
+        if cursor != self.state_len {
+            return Err(anyhow!("state_len {} != layout end {cursor}", self.state_len));
+        }
+        if self.ring_base + self.ring != self.hdr {
+            return Err(anyhow!("header layout mismatch"));
+        }
+        Ok(())
+    }
+}
+
+/// The `artifacts/index.json` written by aot.py.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub root: PathBuf,
+    pub variants: Vec<String>,
+    pub evals: Vec<String>,
+}
+
+impl ArtifactIndex {
+    pub fn load(root: &Path) -> Result<ArtifactIndex> {
+        let j = Json::parse_file(&root.join("index.json")).map_err(|e| anyhow!(e))?;
+        let variants = j
+            .req("variants")
+            .map_err(|e| anyhow!(e))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("variants: not an object"))?
+            .keys()
+            .cloned()
+            .collect();
+        let evals = j
+            .req("evals")
+            .map_err(|e| anyhow!(e))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("evals: not an object"))?
+            .keys()
+            .cloned()
+            .collect();
+        Ok(ArtifactIndex { root: root.to_path_buf(), variants, evals })
+    }
+
+    pub fn default_root() -> PathBuf {
+        crate::repo_path("artifacts")
+    }
+
+    pub fn manifest(&self, variant: &str) -> Result<Manifest> {
+        let m = Manifest::load(&self.root.join(variant))?;
+        m.sanity_check()?;
+        Ok(m)
+    }
+
+    pub fn program_path(&self, variant: &str, program: &str) -> PathBuf {
+        self.root.join(variant).join(format!("{program}.hlo.txt"))
+    }
+
+    pub fn eval_path(&self, eval_key: &str) -> PathBuf {
+        self.root.join("eval").join(format!("{eval_key}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> Option<ArtifactIndex> {
+        let root = ArtifactIndex::default_root();
+        if root.join("index.json").exists() {
+            Some(ArtifactIndex::load(&root).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_and_is_consistent() {
+        let Some(idx) = artifacts_available() else { return };
+        assert!(idx.variants.iter().any(|v| v == "fact-s-spectron"));
+        let m = idx.manifest("fact-s-spectron").unwrap();
+        assert_eq!(m.optimizer, "spectron");
+        assert_eq!(m.hidden, 128);
+        assert!(m.n_params > 500_000);
+        let emb = m.tensor("embed").unwrap();
+        assert_eq!(emb.shape, vec![m.vocab, m.hidden]);
+        assert_eq!(emb.offset, m.hdr);
+        assert!(m.tensor("attn_q_a").is_ok());
+        assert!(m.tensor("nonexistent").is_err());
+        assert!(m.programs.contains_key("step"));
+    }
+
+    #[test]
+    fn manifest_matches_config_registry() {
+        let Some(idx) = artifacts_available() else { return };
+        let reg = crate::config::Registry::load().unwrap();
+        for name in &idx.variants {
+            let m = idx.manifest(name).unwrap();
+            let v = reg.variant(name).unwrap();
+            assert_eq!(m.hidden, v.model.hidden, "{name}");
+            assert_eq!(m.batch, v.batch, "{name}");
+            assert_eq!(m.eval_key, v.eval_key(), "{name}");
+            assert!(idx.eval_path(&m.eval_key).exists(), "{name} eval missing");
+        }
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        let j = Json::parse(r#"{"variant": "x"}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

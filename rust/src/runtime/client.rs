@@ -1,0 +1,278 @@
+//! PJRT client wrapper: HLO-text program loading, compilation caching,
+//! and lifetime-safe host->device uploads.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A host upload that keeps its source `Literal` alive for as long as the
+/// device buffer exists. `BufferFromHostLiteral` is asynchronous and the C
+/// wrapper does not await the transfer — dropping the literal early is a
+/// use-after-free (observed as a segfault in the de-risk pass).
+pub struct HostBuffer {
+    _lit: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+impl HostBuffer {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+/// Compiled program handle. All programs obey the single-flat-f32-output
+/// convention, so `run*` return exactly one buffer.
+pub struct Program {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute with host literals (first call of a run; PJRT uploads and
+    /// awaits internally on this path).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<xla::PjRtBuffer> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {}", self.name))?;
+        Self::single(outs, &self.name)
+    }
+
+    /// Execute with device buffers (steady-state hot path).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("execute_b {}", self.name))?;
+        Self::single(outs, &self.name)
+    }
+
+    fn single(outs: Vec<Vec<xla::PjRtBuffer>>, name: &str) -> Result<xla::PjRtBuffer> {
+        let mut replica = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{name}: no replica outputs"))?;
+        if replica.len() != 1 {
+            return Err(anyhow!(
+                "{name}: expected 1 output (flat-state convention), got {}",
+                replica.len()
+            ));
+        }
+        Ok(replica.pop().unwrap())
+    }
+}
+
+/// Shared PJRT CPU client with a compiled-program cache (compiling a step
+/// program takes seconds; experiments reuse them across runs).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    cache: Arc<Mutex<HashMap<String, Arc<Program>>>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        // xla_extension 0.5.1's CPU client constructor is not safe to run
+        // concurrently (observed: instant segfault with >=6 simultaneous
+        // creations from scheduler workers). Serialize construction
+        // process-wide; execution afterwards is independent per client.
+        static CREATE: Mutex<()> = Mutex::new(());
+        let _guard = CREATE.lock().unwrap_or_else(|e| e.into_inner());
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client: Arc::new(client),
+            cache: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+
+    /// Thread-local shared runtime. The `xla` wrapper types hold `Rc`s and
+    /// raw pointers (`!Send`), so the singleton is per-thread: the main
+    /// thread reuses one client, and each scheduler worker owns its own
+    /// (multiple CPU clients per process are fine with PJRT).
+    pub fn shared() -> Result<Runtime> {
+        use std::cell::RefCell;
+        thread_local! {
+            static TL: RefCell<Option<Runtime>> = const { RefCell::new(None) };
+        }
+        TL.with(|cell| {
+            if let Some(rt) = cell.borrow().as_ref() {
+                return Ok(rt.clone());
+            }
+            let rt = Runtime::new()?;
+            *cell.borrow_mut() = Some(rt.clone());
+            Ok(rt)
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text program, memoized by path.
+    pub fn load_program(&self, path: &Path) -> Result<Arc<Program>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(p) = self.cache.lock().unwrap().get(&key) {
+            return Ok(p.clone());
+        }
+        let t0 = std::time::Instant::now();
+        // Serialize parse+compile process-wide: xla_extension 0.5.1's
+        // compilation path is not reentrant across clients (concurrent
+        // compiles from >=6 scheduler workers segfault instantly, while
+        // serialized compiles of the same programs are rock solid).
+        // Compiles are memoized per runtime, so this costs a one-time
+        // queue per worker, nothing in the steady state.
+        static COMPILE: Mutex<()> = Mutex::new(());
+        let _guard = COMPILE.lock().unwrap_or_else(|e| e.into_inner());
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let name = path
+            .parent()
+            .and_then(|d| d.file_name())
+            .map(|d| d.to_string_lossy().to_string())
+            .unwrap_or_default()
+            + "/"
+            + &path
+                .file_stem()
+                .map(|f| f.to_string_lossy().to_string())
+                .unwrap_or_default();
+        crate::debug!("runtime", "compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let prog = Arc::new(Program { name, exe });
+        self.cache.lock().unwrap().insert(key, prog.clone());
+        Ok(prog)
+    }
+
+    /// Upload an f32 vector (lifetime-safe).
+    pub fn upload_f32(&self, data: &[f32]) -> Result<HostBuffer> {
+        let lit = xla::Literal::vec1(data);
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("upload f32")?;
+        Ok(HostBuffer { _lit: lit, buf })
+    }
+
+    /// Upload an i32 tensor with a shape (tokens, spans).
+    pub fn upload_i32(&self, data: &[i32], shape: &[i64]) -> Result<HostBuffer> {
+        let n: i64 = shape.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        let lit = xla::Literal::vec1(data)
+            .reshape(shape)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("upload i32")?;
+        Ok(HostBuffer { _lit: lit, buf })
+    }
+
+    /// Upload a pre-built literal and WAIT for the transfer to complete
+    /// before returning, so the caller may drop `lit` immediately.
+    ///
+    /// `BufferFromHostLiteral` schedules `CopyFromLiteral` on the client's
+    /// thread pool and the C wrapper exposes no ready-future; even
+    /// "execute then drop" is unsound because PJRT execution is async too.
+    /// Under load the delayed copy reads a freed literal — observed as
+    /// segfaults inside `ShapeUtil::ByteSizeOfElements` with >=6 busy
+    /// workers (gdb backtrace in EXPERIMENTS.md §Perf). The only
+    /// synchronization the wrapper exposes is `ToLiteralSync`, so we pay a
+    /// small readback: ~4 KB for token batches on the hot path (µs), and a
+    /// one-off for the rare big uploads (checkpoint resume, grad vectors).
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, lit)
+            .context("buffer_from_host_literal")?;
+        let _ = buf.to_literal_sync().context("awaiting host->device copy")?;
+        Ok(buf)
+    }
+
+    /// Read a whole f32 buffer back to the host.
+    pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().context("to_literal_sync")?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// Literal constructors for program arguments.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn vec_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+pub fn tokens_literal(data: &[i32], batch: usize, width: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == batch * width, "token batch shape mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[batch as i64, width as i64])
+        .map_err(|e| anyhow!("reshape tokens: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_program_is_a_clean_error() {
+        let rt = Runtime::shared().unwrap();
+        let res = rt.load_program(std::path::Path::new("/nonexistent/step.hlo.txt"));
+        let err = res.err().expect("must fail");
+        assert!(format!("{err:#}").contains("parsing HLO text"), "{err:#}");
+    }
+
+    #[test]
+    fn garbage_hlo_is_a_clean_error() {
+        let p = std::env::temp_dir().join(format!("spectron-garbage-{}.hlo.txt",
+            std::process::id()));
+        std::fs::write(&p, "this is not an HLO module").unwrap();
+        let rt = Runtime::shared().unwrap();
+        assert!(rt.load_program(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn upload_shape_mismatch_rejected() {
+        let rt = Runtime::shared().unwrap();
+        assert!(rt.upload_i32(&[1, 2, 3], &[2, 2]).is_err());
+        assert!(tokens_literal(&[1, 2, 3], 2, 2).is_err());
+    }
+
+    #[test]
+    fn runtime_boots_and_runs_init() {
+        let root = crate::runtime::ArtifactIndex::default_root();
+        if !root.join("index.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let idx = crate::runtime::ArtifactIndex::load(&root).unwrap();
+        let rt = Runtime::shared().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        let m = idx.manifest("fact-z0-spectron").unwrap();
+        let prog = rt
+            .load_program(&idx.program_path("fact-z0-spectron", "init"))
+            .unwrap();
+        let knobs = vec_f32(&[100.0, 0.01, 0.01, 0.05, 0.0, 0.0, 0.0, 0.0]);
+        let out = prog.run_literals(&[scalar_i32(7), knobs]).unwrap();
+        let state = rt.download_f32(&out).unwrap();
+        assert_eq!(state.len(), m.state_len);
+        // knobs landed in the header
+        assert_eq!(state[1], 100.0);
+        assert!((state[2] - 0.01).abs() < 1e-8);
+        // params are initialized non-trivially
+        let emb = m.tensor("embed").unwrap();
+        let s: f32 = state[emb.offset..emb.offset + 64].iter().map(|x| x.abs()).sum();
+        assert!(s > 0.0);
+        // program cache hit
+        let again = rt
+            .load_program(&idx.program_path("fact-z0-spectron", "init"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&prog, &again));
+    }
+}

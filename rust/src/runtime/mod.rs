@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT artifacts and executes them.
+//!
+//! * [`artifact`] — `manifest.json` / `index.json` parsing, tensor specs,
+//! * [`client`]   — PJRT CPU client + HLO-text program loading/compiling,
+//! * [`state`]    — host mirror of the flat train-state vector (header
+//!   slots, loss ring, per-tensor views).
+//!
+//! Conventions (established in DESIGN.md and the de-risk pass):
+//!
+//! * every program returns ONE flat f32 array — the wrapper cannot
+//!   untuple PJRT results, so multi-output programs are impossible;
+//! * `BufferFromHostLiteral` is asynchronous and the C wrapper does not
+//!   await the transfer, so a source `Literal` must outlive the first
+//!   execute that consumes its buffer ([`client::HostBuffer`] enforces
+//!   this by construction);
+//! * state threads through `execute_b` buffer-to-buffer (zero host copies
+//!   in the steady-state train loop); read-backs are full `ToLiteralSync`
+//!   copies, amortized by the loss ring.
+
+pub mod artifact;
+pub mod client;
+pub mod state;
+
+pub use artifact::{ArtifactIndex, Manifest, TensorSpec};
+pub use client::{HostBuffer, Program, Runtime};
+pub use state::StateHost;

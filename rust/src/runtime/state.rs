@@ -1,0 +1,171 @@
+//! Host mirror of the flat train state.
+//!
+//! Slot numbers mirror `python/compile/state.py` exactly; the integration
+//! tests cross-check them against every manifest.
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::Manifest;
+
+// ---- header slots (MUST match python/compile/state.py) -------------------
+pub const STEP: usize = 0;
+pub const TOTAL_STEPS: usize = 1;
+pub const BASE_LR: usize = 2;
+pub const WEIGHT_DECAY: usize = 3;
+pub const WARMUP_FRAC: usize = 4;
+pub const LOSS: usize = 5;
+pub const LR: usize = 6;
+pub const GRAD_NORM: usize = 7;
+pub const W_SPEC: usize = 8;
+pub const DW_SPEC: usize = 9;
+pub const DY_RMS: usize = 10;
+pub const SIGMA_A: usize = 11;
+pub const SIGMA_B: usize = 12;
+pub const RHO: usize = 13;
+pub const ALPHA: usize = 14;
+pub const TOKENS_SEEN: usize = 15;
+pub const RING_BASE: usize = 16;
+pub const RING: usize = 64;
+pub const HDR: usize = RING_BASE + RING;
+
+/// A host copy of the state vector with typed access.
+#[derive(Debug, Clone)]
+pub struct StateHost {
+    pub data: Vec<f32>,
+    pub params_end: usize,
+    pub hdr: usize,
+}
+
+impl StateHost {
+    pub fn new(data: Vec<f32>, manifest: &Manifest) -> Result<StateHost> {
+        if data.len() != manifest.state_len {
+            return Err(anyhow!(
+                "state length {} != manifest {}",
+                data.len(),
+                manifest.state_len
+            ));
+        }
+        if manifest.hdr != HDR || manifest.ring != RING || manifest.ring_base != RING_BASE {
+            return Err(anyhow!("header layout drift between python and rust"));
+        }
+        Ok(StateHost { data, params_end: manifest.params_end, hdr: manifest.hdr })
+    }
+
+    pub fn slot(&self, idx: usize) -> f32 {
+        self.data[idx]
+    }
+    pub fn step(&self) -> usize {
+        self.data[STEP] as usize
+    }
+    pub fn loss(&self) -> f32 {
+        self.data[LOSS]
+    }
+    pub fn lr(&self) -> f32 {
+        self.data[LR]
+    }
+    pub fn grad_norm(&self) -> f32 {
+        self.data[GRAD_NORM]
+    }
+    pub fn tokens_seen(&self) -> f64 {
+        self.data[TOKENS_SEEN] as f64
+    }
+
+    /// Spectral telemetry (w_spec, dw_spec, dy_rms, sigma_a, sigma_b, rho).
+    pub fn telemetry(&self) -> [f32; 6] {
+        [
+            self.data[W_SPEC],
+            self.data[DW_SPEC],
+            self.data[DY_RMS],
+            self.data[SIGMA_A],
+            self.data[SIGMA_B],
+            self.data[RHO],
+        ]
+    }
+
+    /// Decode per-step losses covered by the ring since `last_step`
+    /// (exclusive) up to the current step (inclusive). Returns
+    /// (step, loss) pairs in order. The ring holds the most recent
+    /// `RING` losses: ring[(t-1) % RING] = loss at step t-1 -> after the
+    /// update the loss of step index `s` (0-based) sits at `s % RING`.
+    pub fn ring_losses(&self, last_step: usize) -> Vec<(usize, f32)> {
+        let cur = self.step(); // number of completed steps
+        let lo = last_step.max(cur.saturating_sub(RING));
+        (lo..cur)
+            .map(|s| (s, self.data[RING_BASE + (s % RING)]))
+            .collect()
+    }
+
+    /// View a tensor inside the state (params or opt).
+    pub fn tensor<'a>(&'a self, manifest: &Manifest, name: &str) -> Result<&'a [f32]> {
+        let spec = manifest.tensor(name)?;
+        Ok(&self.data[spec.offset..spec.offset + spec.size()])
+    }
+
+    /// The header+params prefix consumed by the shared eval program.
+    pub fn eval_prefix(&self) -> &[f32] {
+        &self.data[..self.params_end]
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data[LOSS].is_finite() && self.data[GRAD_NORM].is_finite()
+    }
+}
+
+/// Knob vector for init programs:
+/// `[total_steps, base_lr, weight_decay, warmup_frac, 0, 0, 0, 0]`.
+pub fn knobs(cfg: &crate::config::RunCfg) -> [f32; 8] {
+    [
+        cfg.total_steps as f32,
+        cfg.base_lr as f32,
+        cfg.weight_decay as f32,
+        cfg.warmup_frac as f32,
+        0.0,
+        0.0,
+        0.0,
+        0.0,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_decoding() {
+        // fake state: 3 completed steps, losses 3.0, 2.0, 1.0
+        let mut data = vec![0f32; HDR];
+        data[STEP] = 3.0;
+        data[RING_BASE] = 3.0;
+        data[RING_BASE + 1] = 2.0;
+        data[RING_BASE + 2] = 1.0;
+        let s = StateHost { data, params_end: HDR, hdr: HDR };
+        assert_eq!(s.ring_losses(0), vec![(0, 3.0), (1, 2.0), (2, 1.0)]);
+        assert_eq!(s.ring_losses(2), vec![(2, 1.0)]);
+        assert!(s.ring_losses(3).is_empty());
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let mut data = vec![0f32; HDR];
+        data[STEP] = 100.0; // steps 36..100 are in the ring
+        for s in 36..100usize {
+            data[RING_BASE + (s % RING)] = s as f32;
+        }
+        let st = StateHost { data, params_end: HDR, hdr: HDR };
+        let got = st.ring_losses(0);
+        assert_eq!(got.len(), RING);
+        assert_eq!(got[0], (36, 36.0));
+        assert_eq!(got[63], (99, 99.0));
+        let tail = st.ring_losses(98);
+        assert_eq!(tail, vec![(98, 98.0), (99, 99.0)]);
+    }
+
+    #[test]
+    fn header_constants_match_python() {
+        // the authoritative cross-check runs against manifests in the
+        // integration suite; here: internal consistency
+        assert_eq!(HDR, 80);
+        assert_eq!(RING_BASE, 16);
+        assert!(TOKENS_SEEN < RING_BASE);
+    }
+}

@@ -1,0 +1,21 @@
+//! Scaling-law analysis (paper Section 6 + Appendix D).
+//!
+//! * [`isoflop`]    — quadratic fits of loss vs log(N) per compute budget,
+//!   extracting the loss-minimizing model size (Figure 9),
+//! * [`powerlaw`]   — log-log regression of the optima: `N_opt ∝ C^a`,
+//!   `D_opt ∝ C^b`, plus the inference-savings estimate (Figure 8),
+//! * [`parametric`] — the Appendix D fit `L(N,D) = E + A/N^α + B/D^β`
+//!   via Huber loss + the in-tree L-BFGS.
+
+pub mod isoflop;
+pub mod parametric;
+pub mod powerlaw;
+
+/// One completed scaling run.
+#[derive(Debug, Clone)]
+pub struct RunPoint {
+    pub params: f64,
+    pub tokens: f64,
+    pub flops: f64,
+    pub loss: f64,
+}

@@ -1,0 +1,98 @@
+//! Power-law fits of the isoFLOP optima (paper Figure 8):
+//! `N_opt = k_N * C^a`, `D_opt = k_D * C^b`, via log-log least squares,
+//! plus the inference-savings estimate of Figure 8 (right).
+
+use crate::util::stats::linreg;
+
+use super::isoflop::IsoflopFit;
+
+#[derive(Debug, Clone)]
+pub struct PowerLaw {
+    /// N_opt exponent a in N_opt ∝ C^a
+    pub a_n: f64,
+    pub k_n: f64,
+    pub r2_n: f64,
+    /// D_opt exponent b in D_opt ∝ C^b
+    pub b_d: f64,
+    pub k_d: f64,
+    pub r2_d: f64,
+}
+
+pub fn fit(fits: &[IsoflopFit]) -> PowerLaw {
+    assert!(fits.len() >= 2, "need >=2 budgets");
+    let lc: Vec<f64> = fits.iter().map(|f| f.flops.ln()).collect();
+    let ln: Vec<f64> = fits.iter().map(|f| f.n_opt.ln()).collect();
+    let ld: Vec<f64> = fits.iter().map(|f| f.d_opt.ln()).collect();
+    let (kn, an, r2n) = linreg(&lc, &ln);
+    let (kd, bd, r2d) = linreg(&lc, &ld);
+    PowerLaw {
+        a_n: an,
+        k_n: kn.exp(),
+        r2_n: r2n,
+        b_d: bd,
+        k_d: kd.exp(),
+        r2_d: r2d,
+    }
+}
+
+impl PowerLaw {
+    pub fn n_opt(&self, c: f64) -> f64 {
+        self.k_n * c.powf(self.a_n)
+    }
+    pub fn d_opt(&self, c: f64) -> f64 {
+        self.k_d * c.powf(self.b_d)
+    }
+
+    /// Inference savings vs a reference (Chinchilla-like) exponent at
+    /// compute `c`: `(1 - N_opt/N_ref) * 100` with both laws anchored at
+    /// `c_anchor` (paper Fig. 8 right uses identical proportionality
+    /// constants, i.e. savings = (1 - C^(a - a_ref)) * 100 relative to
+    /// the anchor).
+    pub fn inference_savings_pct(&self, a_ref: f64, c: f64, c_anchor: f64) -> f64 {
+        let ratio = (c / c_anchor).powf(self.a_n - a_ref);
+        (1.0 - ratio) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::isoflop::IsoflopFit;
+
+    fn fake_fit(c: f64, a: f64) -> IsoflopFit {
+        let n = 2.0 * c.powf(a);
+        IsoflopFit {
+            flops: c,
+            coef: [0.0; 3],
+            n_opt: n,
+            d_opt: c / (6.0 * n),
+            loss_min: 2.0,
+            points: vec![],
+        }
+    }
+
+    #[test]
+    fn recovers_planted_exponents() {
+        let fits: Vec<IsoflopFit> =
+            [1e12, 4e12, 1.6e13, 6.4e13].iter().map(|&c| fake_fit(c, 0.48)).collect();
+        let pl = fit(&fits);
+        assert!((pl.a_n - 0.48).abs() < 1e-9, "{}", pl.a_n);
+        // D ∝ C / N -> exponent 1 - 0.48
+        assert!((pl.b_d - 0.52).abs() < 1e-9, "{}", pl.b_d);
+        assert!(pl.r2_n > 0.999 && pl.r2_d > 0.999);
+        // prediction consistency
+        let c = 2.5e13;
+        assert!((pl.n_opt(c) / (2.0 * c.powf(0.48)) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn savings_grow_with_compute_when_exponent_smaller() {
+        let fits: Vec<IsoflopFit> =
+            [1e12, 1e13, 1e14].iter().map(|&c| fake_fit(c, 0.479)).collect();
+        let pl = fit(&fits);
+        let s1 = pl.inference_savings_pct(0.49, 1e16, 1e12);
+        let s2 = pl.inference_savings_pct(0.49, 1e20, 1e12);
+        assert!(s1 > 0.0 && s2 > s1, "{s1} {s2}");
+        assert!(s2 < 100.0);
+    }
+}

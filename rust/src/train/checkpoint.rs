@@ -1,0 +1,133 @@
+//! Checkpointing: the entire run is one flat f32 vector, so a checkpoint
+//! is that vector plus identifying metadata. Binary format:
+//!
+//! ```text
+//! magic "SPCKPT01" | name_len u32 LE | variant name utf-8 |
+//! state_len u64 LE | f32 LE data ... | crc64 of data
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+const MAGIC: &[u8; 8] = b"SPCKPT01";
+
+pub fn save(path: &Path, variant: &str, state: &[f32]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(variant.len() as u32).to_le_bytes())?;
+    w.write_all(variant.as_bytes())?;
+    w.write_all(&(state.len() as u64).to_le_bytes())?;
+    let mut crc = Crc64::new();
+    for v in state {
+        let b = v.to_le_bytes();
+        crc.update(&b);
+        w.write_all(&b)?;
+    }
+    w.write_all(&crc.finish().to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(anyhow!("not a spectron checkpoint: bad magic"));
+    }
+    let mut u32b = [0u8; 4];
+    r.read_exact(&mut u32b)?;
+    let name_len = u32::from_le_bytes(u32b) as usize;
+    if name_len > 4096 {
+        return Err(anyhow!("implausible variant name length {name_len}"));
+    }
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let variant = String::from_utf8(name).context("variant name utf-8")?;
+    let mut u64b = [0u8; 8];
+    r.read_exact(&mut u64b)?;
+    let n = u64::from_le_bytes(u64b) as usize;
+    let mut state = Vec::with_capacity(n);
+    let mut crc = Crc64::new();
+    let mut buf = [0u8; 4];
+    for _ in 0..n {
+        r.read_exact(&mut buf)?;
+        crc.update(&buf);
+        state.push(f32::from_le_bytes(buf));
+    }
+    r.read_exact(&mut u64b)?;
+    if u64::from_le_bytes(u64b) != crc.finish() {
+        return Err(anyhow!("checkpoint corrupt: crc mismatch"));
+    }
+    Ok((variant, state))
+}
+
+/// CRC-64/XZ, bitwise (checkpoints are not huge; simplicity wins).
+struct Crc64 {
+    crc: u64,
+}
+
+impl Crc64 {
+    fn new() -> Crc64 {
+        Crc64 { crc: !0 }
+    }
+    fn update(&mut self, data: &[u8]) {
+        for &b in data {
+            self.crc ^= b as u64;
+            for _ in 0..8 {
+                let mask = (self.crc & 1).wrapping_neg();
+                self.crc = (self.crc >> 1) ^ (0xC96C5795D7870F42 & mask);
+            }
+        }
+    }
+    fn finish(&self) -> u64 {
+        !self.crc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("spectron-ckpt-test-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("rt");
+        let state: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        save(&p, "fact-s-spectron", &state).unwrap();
+        let (v, s) = load(&p).unwrap();
+        assert_eq!(v, "fact-s-spectron");
+        assert_eq!(s, state);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmp("corrupt");
+        save(&p, "x", &[1.0, 2.0, 3.0]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 12] ^= 0xFF; // flip a data byte
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_other_files() {
+        let p = tmp("other");
+        std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

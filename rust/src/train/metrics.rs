@@ -1,0 +1,148 @@
+//! Metrics: in-memory records + JSONL sink under `results/`.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One logged observation (a read-back of the state header).
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub grad_norm: f64,
+    pub tokens_seen: f64,
+    /// [w_spec, dw_spec, dy_rms, sigma_a, sigma_b, rho]
+    pub telemetry: [f32; 6],
+    pub wall_s: f64,
+}
+
+impl Record {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("loss", Json::num(self.loss)),
+            ("lr", Json::num(self.lr)),
+            ("grad_norm", Json::num(self.grad_norm)),
+            ("tokens", Json::num(self.tokens_seen)),
+            ("w_spec", Json::num(self.telemetry[0] as f64)),
+            ("dw_spec", Json::num(self.telemetry[1] as f64)),
+            ("dy_rms", Json::num(self.telemetry[2] as f64)),
+            ("sigma_a", Json::num(self.telemetry[3] as f64)),
+            ("sigma_b", Json::num(self.telemetry[4] as f64)),
+            ("rho", Json::num(self.telemetry[5] as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+        ])
+    }
+}
+
+/// Collects records and per-step losses (ring-decoded); optionally tees
+/// each record to a JSONL file.
+pub struct MetricsLog {
+    pub run_name: String,
+    pub records: Vec<Record>,
+    pub losses: Vec<(usize, f32)>,
+    sink: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl MetricsLog {
+    pub fn in_memory(run_name: &str) -> MetricsLog {
+        MetricsLog {
+            run_name: run_name.to_string(),
+            records: Vec::new(),
+            losses: Vec::new(),
+            sink: None,
+        }
+    }
+
+    /// Tee to `results/<run_name>/metrics.jsonl`.
+    pub fn with_file(run_name: &str) -> Result<MetricsLog> {
+        let dir: PathBuf = crate::repo_path("results").join(run_name);
+        std::fs::create_dir_all(&dir).context("mkdir results")?;
+        let f = std::fs::File::create(dir.join("metrics.jsonl"))?;
+        let mut m = Self::in_memory(run_name);
+        m.sink = Some(std::io::BufWriter::new(f));
+        Ok(m)
+    }
+
+    pub fn push(&mut self, rec: Record, ring: Vec<(usize, f32)>) {
+        if let Some(sink) = &mut self.sink {
+            let _ = writeln!(sink, "{}", rec.to_json());
+        }
+        self.records.push(rec);
+        self.losses.extend(ring);
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(s) = &mut self.sink {
+            let _ = s.flush();
+        }
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Smoothed loss curve (simple trailing mean over `w` points).
+    pub fn smoothed_losses(&self, w: usize) -> Vec<(usize, f64)> {
+        let w = w.max(1);
+        self.losses
+            .iter()
+            .enumerate()
+            .map(|(i, &(s, _))| {
+                let lo = i.saturating_sub(w - 1);
+                let vals: f64 = self.losses[lo..=i].iter().map(|&(_, l)| l as f64).sum();
+                (s, vals / (i - lo + 1) as f64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64) -> Record {
+        Record {
+            step,
+            loss,
+            lr: 0.01,
+            grad_norm: 1.0,
+            tokens_seen: 0.0,
+            telemetry: [0.0; 6],
+            wall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn collects_ring_losses_in_order() {
+        let mut m = MetricsLog::in_memory("t");
+        m.push(rec(2, 3.0), vec![(0, 5.0), (1, 4.0)]);
+        m.push(rec(4, 2.0), vec![(2, 3.0), (3, 2.5)]);
+        assert_eq!(m.losses.len(), 4);
+        assert!(m.losses.windows(2).all(|w| w[0].0 < w[1].0));
+        assert_eq!(m.final_loss(), Some(2.0));
+    }
+
+    #[test]
+    fn smoothing_reduces_noise() {
+        let mut m = MetricsLog::in_memory("t");
+        let ring: Vec<(usize, f32)> =
+            (0..100).map(|i| (i, 3.0 + if i % 2 == 0 { 0.5 } else { -0.5 })).collect();
+        m.push(rec(100, 3.0), ring);
+        let sm = m.smoothed_losses(10);
+        let spread = sm[20..].iter().map(|&(_, l)| (l - 3.0).abs()).fold(0.0, f64::max);
+        assert!(spread < 0.1, "{spread}");
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let r = rec(7, 2.5);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("step").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(2.5));
+    }
+}

@@ -1,0 +1,9 @@
+//! Training runtime: the hot loop over the AOT-compiled `step` program.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::{MetricsLog, Record};
+pub use trainer::{TrainResult, Trainer};

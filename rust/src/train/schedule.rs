@@ -1,0 +1,57 @@
+//! Host mirror of the in-graph lr / alpha schedules (python/compile/
+//! optim.py). Used for logging, expected-lr assertions in tests, and the
+//! experiment drivers' plots — the authoritative schedule runs in HLO.
+
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    pub total_steps: usize,
+    pub base_lr: f64,
+    pub warmup_frac: f64,
+}
+
+impl Schedule {
+    pub fn lr_at(&self, step: usize) -> f64 {
+        let t = step as f64;
+        let total = (self.total_steps as f64).max(1.0);
+        let warm = (self.warmup_frac * total).max(1.0);
+        if t < warm {
+            // clip: with fractional warm the last warmup step would overshoot
+            self.base_lr * ((t + 1.0) / warm).min(1.0)
+        } else {
+            let prog = ((t - warm) / (total - warm).max(1.0)).clamp(0.0, 1.0);
+            self.base_lr * 0.5 * (1.0 + (std::f64::consts::PI * prog).cos())
+        }
+    }
+
+    /// Self-guided mixing coefficient (cosine 1 -> 0 over the first half).
+    pub fn alpha_at(&self, step: usize) -> f64 {
+        let half = (0.5 * self.total_steps as f64).max(1.0);
+        let prog = (step as f64 / half).clamp(0.0, 1.0);
+        0.5 * (1.0 + (std::f64::consts::PI * prog).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_cosine_to_zero() {
+        let s = Schedule { total_steps: 100, base_lr: 1.0, warmup_frac: 0.1 };
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-12);
+        assert!(s.lr_at(99) < 0.002);
+        for t in 11..99 {
+            assert!(s.lr_at(t) >= s.lr_at(t + 1) - 1e-12);
+        }
+    }
+
+    #[test]
+    fn alpha_halfway_zero() {
+        let s = Schedule { total_steps: 100, base_lr: 1.0, warmup_frac: 0.05 };
+        assert!((s.alpha_at(0) - 1.0).abs() < 1e-12);
+        assert!((s.alpha_at(25) - 0.5).abs() < 1e-9);
+        assert!(s.alpha_at(50).abs() < 1e-12);
+        assert_eq!(s.alpha_at(80), 0.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! The L3 hot loop: thread the state buffer through the compiled `step`
+//! program, uploading only the token batch each step and reading the state
+//! back every `read_interval` steps (the loss ring recovers the per-step
+//! curve in between).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{RunCfg, VariantCfg};
+use crate::data::dataset::BatchIter;
+use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
+use crate::train::metrics::{MetricsLog, Record};
+use crate::runtime::state as slots;
+
+pub struct Trainer {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub variant: VariantCfg,
+    pub run: RunCfg,
+    step_prog: std::sync::Arc<Program>,
+    state_buf: xla::PjRtBuffer,
+    last_host: StateHost,
+    last_ring_step: usize,
+}
+
+#[derive(Debug)]
+pub struct TrainResult {
+    pub losses: Vec<(usize, f32)>,
+    pub records: Vec<Record>,
+    pub final_loss: f64,
+    pub diverged: bool,
+    pub wall_s: f64,
+    pub steps_done: usize,
+    pub tokens_seen: f64,
+    pub step_seconds_mean: f64,
+}
+
+impl Trainer {
+    /// Compile programs and run `init` (knobs land in the state header).
+    pub fn new(
+        rt: &Runtime,
+        idx: &ArtifactIndex,
+        variant: &VariantCfg,
+        run: RunCfg,
+    ) -> Result<Trainer> {
+        let manifest = idx.manifest(&variant.name)?;
+        let init = rt.load_program(&idx.program_path(&variant.name, "init"))?;
+        let step_prog = rt.load_program(&idx.program_path(&variant.name, "step"))?;
+
+        let knobs = slots::knobs(&run);
+        let out = init
+            .run_literals(&[client::scalar_i32(run.seed as i32), client::vec_f32(&knobs)])
+            .context("init program")?;
+        let host = StateHost::new(rt.download_f32(&out)?, &manifest)?;
+        Ok(Trainer {
+            rt: rt.clone(),
+            manifest,
+            variant: variant.clone(),
+            run,
+            step_prog,
+            state_buf: out,
+            last_host: host,
+            last_ring_step: 0,
+        })
+    }
+
+    /// Resume from a checkpointed state vector.
+    pub fn from_state(
+        rt: &Runtime,
+        idx: &ArtifactIndex,
+        variant: &VariantCfg,
+        run: RunCfg,
+        state: Vec<f32>,
+    ) -> Result<Trainer> {
+        let manifest = idx.manifest(&variant.name)?;
+        if state.len() != manifest.state_len {
+            return Err(anyhow!("checkpoint length mismatch"));
+        }
+        let step_prog = rt.load_program(&idx.program_path(&variant.name, "step"))?;
+        let host = StateHost::new(state.clone(), &manifest)?;
+        let up = rt.upload_f32(&state)?;
+        // one sync readback forces the async upload to complete before the
+        // source literal drops (HostBuffer keeps it alive anyway; this is
+        // belt-and-braces for the resume path)
+        let _ = rt.download_f32(&up.buf)?;
+        let last_ring_step = host.step();
+        Ok(Trainer {
+            rt: rt.clone(),
+            manifest,
+            variant: variant.clone(),
+            run,
+            step_prog,
+            state_buf: up.buf,
+            last_host: host,
+            last_ring_step,
+        })
+    }
+
+    pub fn state(&self) -> &StateHost {
+        &self.last_host
+    }
+
+    /// Force a state readback now (updates `state()`).
+    pub fn sync(&mut self) -> Result<&StateHost> {
+        let data = self.rt.download_f32(&self.state_buf)?;
+        self.last_host = StateHost::new(data, &self.manifest)?;
+        Ok(&self.last_host)
+    }
+
+    /// Run `n_steps` training steps pulling batches from `batches`.
+    /// Stops early (with `diverged = true`) if the loss goes non-finite or
+    /// explodes past `20 + initial`; that is an observation, not an error —
+    /// the lr-stability figures rely on recording divergence.
+    pub fn train(&mut self, batches: &mut BatchIter, n_steps: usize) -> Result<TrainResult> {
+        self.train_with(batches, n_steps, &mut MetricsLog::in_memory(&self.variant.name))
+    }
+
+    pub fn train_with(
+        &mut self,
+        batches: &mut BatchIter,
+        n_steps: usize,
+        metrics: &mut MetricsLog,
+    ) -> Result<TrainResult> {
+        let b = self.manifest.batch;
+        let w = self.manifest.seq_len + 1;
+        let read_every = self.run.read_interval.clamp(1, slots::RING);
+        let t0 = Instant::now();
+        let mut diverged = false;
+        let mut steps_done = 0;
+        let mut all_losses: Vec<(usize, f32)> = Vec::new();
+        let mut all_records: Vec<Record> = Vec::new();
+
+        for k in 0..n_steps {
+            let batch = batches.next_batch();
+            // the token literal must outlive the execute (async upload);
+            // `run_buffers` is synchronous, so dropping it afterwards is safe
+            let tok_lit = client::tokens_literal(&batch, b, w)?;
+            let tok = self.rt.upload_literal(&tok_lit).context("upload tokens")?;
+            let out = self.step_prog.run_buffers(&[&self.state_buf, &tok])?;
+            drop(tok_lit);
+            self.state_buf = out;
+            steps_done = k + 1;
+
+            let is_last = k + 1 == n_steps;
+            if (k + 1) % read_every == 0 || is_last {
+                self.sync()?;
+                let host = &self.last_host;
+                let ring = host.ring_losses(self.last_ring_step);
+                self.last_ring_step = host.step();
+                let rec = Record {
+                    step: host.step(),
+                    loss: host.loss() as f64,
+                    lr: host.lr() as f64,
+                    grad_norm: host.grad_norm() as f64,
+                    tokens_seen: host.tokens_seen(),
+                    telemetry: host.telemetry(),
+                    wall_s: t0.elapsed().as_secs_f64(),
+                };
+                all_losses.extend(ring.iter().copied());
+                all_records.push(rec.clone());
+                metrics.push(rec, ring);
+                if !host.is_finite() || host.loss() > 30.0 {
+                    diverged = true;
+                    break;
+                }
+            }
+        }
+        metrics.flush();
+        let wall = t0.elapsed().as_secs_f64();
+        let final_loss = all_records.last().map(|r| r.loss).unwrap_or(f64::NAN);
+        Ok(TrainResult {
+            losses: all_losses,
+            records: all_records,
+            final_loss,
+            diverged,
+            wall_s: wall,
+            steps_done,
+            tokens_seen: self.last_host.tokens_seen(),
+            step_seconds_mean: wall / steps_done.max(1) as f64,
+        })
+    }
+
+    /// Current state vector (host copy) for checkpointing.
+    pub fn state_vec(&mut self) -> Result<Vec<f32>> {
+        Ok(self.sync()?.data.clone())
+    }
+}
+

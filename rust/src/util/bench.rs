@@ -1,0 +1,130 @@
+//! Mini-criterion: the benchmark harness behind `cargo bench`
+//! (criterion itself is not vendored). Warms up, runs timed iterations,
+//! reports mean / std / p50 / p95 and optional throughput; `BENCH_FAST=1`
+//! shrinks iteration counts for smoke runs.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{mean, quantile, std};
+
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        Bench {
+            name: name.to_string(),
+            warmup: if fast { 1 } else { 3 },
+            iters: if fast { 5 } else { 20 },
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        if std::env::var("BENCH_FAST").is_ok() {
+            self.iters = n.clamp(1, 5);
+        } else {
+            self.iters = n;
+        }
+        self
+    }
+
+    /// Time `f` and print one result row. Returns timings for callers that
+    /// want to assert on them or dump CSV.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: self.name.clone(),
+            mean_s: mean(&samples),
+            std_s: std(&samples),
+            p50_s: quantile(&samples, 0.5),
+            p95_s: quantile(&samples, 0.95),
+            iters: self.iters,
+        };
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}  n={}",
+            r.name,
+            fmt_dur(r.mean_s),
+            fmt_dur(r.std_s),
+            fmt_dur(r.p50_s),
+            fmt_dur(r.p95_s),
+            r.iters
+        );
+        r
+    }
+
+    /// Like `run`, reporting a derived items/second throughput too.
+    pub fn run_throughput<T>(&self, items: f64, unit: &str, f: impl FnMut() -> T) -> BenchResult {
+        let r = self.run(f);
+        println!(
+            "{:<44} {:>14.1} {unit}/s",
+            format!("{} [throughput]", r.name),
+            items / r.mean_s
+        );
+        r
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "std", "p50", "p95"
+    );
+}
+
+fn fmt_dur(s: f64) -> String {
+    let d = Duration::from_secs_f64(s.max(0.0));
+    if d.as_secs() >= 1 {
+        format!("{:.3}s", s)
+    } else if d.as_millis() >= 1 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("BENCH_FAST", "1");
+        let r = Bench::new("spin").iters(3).run(|| {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.p50_s <= r.p95_s + 1e-12);
+    }
+}

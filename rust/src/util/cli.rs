@@ -1,0 +1,109 @@
+//! Tiny CLI argument helper (clap is not vendored).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.flags.insert(rest.to_string(), v);
+                } else {
+                    a.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&mut self, key: &str, default: &str) -> String {
+        self.known.push(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&mut self, key: &str) -> Option<String> {
+        self.known.push(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&mut self, key: &str, default: usize) -> usize {
+        self.known.push(key.to_string());
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&mut self, key: &str, default: f64) -> f64 {
+        self.known.push(key.to_string());
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.known.push(key.to_string());
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Call after reading all expected flags: errors on unknown ones.
+    pub fn finish(&self) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !self.known.contains(k) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // boolean flags go last or use --flag=true: `--fast name` would
+        // greedily read "name" as the flag's value (documented limitation)
+        let mut a = mk(&["train", "name", "--steps", "100", "--lr=0.01", "--fast"]);
+        assert_eq!(a.positional, vec!["train", "name"]);
+        assert_eq!(a.usize("steps", 0), 100);
+        assert_eq!(a.f64("lr", 0.0), 0.01);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut a = mk(&["--typo", "x"]);
+        let _ = a.str("steps", "");
+        assert!(a.finish().is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Leveled stderr logger with monotonic timestamps (the `log` facade is
+//! not wired to anything in this environment; keep it simple and direct).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn log(lvl: Level, tag: &str, msg: std::fmt::Arguments<'_>) {
+    if lvl < level() {
+        return;
+    }
+    let t = start().elapsed().as_secs_f64();
+    let l = match lvl {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{t:9.3}s {l} {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, $tag,
+                                  format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, $tag,
+                                  format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, $tag,
+                                  format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info && Level::Info < Level::Error);
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree substrates: everything a normal project would pull from
+//! crates.io, rebuilt here because only the `xla` dependency closure is
+//! vendored in this environment (see Cargo.toml).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,109 @@
+//! Property-testing harness (proptest is not vendored).
+//!
+//! A `Gen` closure draws a random case from a `Pcg64`; `check` runs many
+//! seeded cases and reports the failing seed so a case replays
+//! deterministically with `PROP_SEED=<n>`. `PROP_CASES` overrides the case
+//! count. No shrinking — failing seeds are small enough to debug directly.
+
+use super::rng::Pcg64;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop(rng)` for many deterministic seeds; panic with the seed on the
+/// first failure (an `Err(reason)` return or a panic inside the property).
+pub fn check<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    let cfg = Config::default();
+    // explicit seed replay mode: run only that seed
+    if std::env::var("PROP_REPLAY").is_ok() {
+        let mut rng = Pcg64::new(cfg.seed);
+        if let Err(e) = prop(&mut rng) {
+            panic!("property '{name}' failed on replay seed {}: {e}", cfg.seed);
+        }
+        return;
+    }
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::new(seed);
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng))) {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => panic!(
+                "property '{name}' failed (case {case}, seed {seed}): {e}\n\
+                 replay: PROP_REPLAY=1 PROP_SEED={seed} cargo test"
+            ),
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<panic>".into());
+                panic!(
+                    "property '{name}' panicked (case {case}, seed {seed}): {msg}\n\
+                     replay: PROP_REPLAY=1 PROP_SEED={seed} cargo test"
+                );
+            }
+        }
+    }
+}
+
+// -- common generators ------------------------------------------------------
+pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+    lo + rng.next_f64() * (hi - lo)
+}
+
+pub fn vec_f64(rng: &mut Pcg64, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| f64_in(rng, lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("reverse twice is identity", |rng| {
+            count += 1;
+            let n = usize_in(rng, 0, 20);
+            let v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+        assert!(count >= 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay")]
+    fn failing_property_reports_seed() {
+        check("always fails", |_| Err("nope".into()));
+    }
+}

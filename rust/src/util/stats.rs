@@ -1,0 +1,210 @@
+//! Small statistics toolkit used by metrics, benches and the scaling fits.
+
+/// Streaming mean/variance (Welford) with min/max tracking.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Quantile with linear interpolation; q in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    s[lo] + (s[hi] - s[lo]) * (pos - lo as f64)
+}
+
+/// Ordinary least squares y ~ a + b*x. Returns (a, b, r2).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (a + b * x)).powi(2))
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    let _ = n;
+    (a, b, r2)
+}
+
+/// Least-squares quadratic fit y ~ c0 + c1 x + c2 x^2 via normal equations.
+/// Returns [c0, c1, c2]. Used for the isoFLOP minima (paper Section 6).
+pub fn quadfit(xs: &[f64], ys: &[f64]) -> [f64; 3] {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 3, "need >=3 points for a quadratic");
+    // build X^T X (3x3) and X^T y (3)
+    let mut xtx = [[0.0f64; 3]; 3];
+    let mut xty = [0.0f64; 3];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let row = [1.0, x, x * x];
+        for i in 0..3 {
+            for j in 0..3 {
+                xtx[i][j] += row[i] * row[j];
+            }
+            xty[i] += row[i] * y;
+        }
+    }
+    solve3(xtx, xty)
+}
+
+/// Solve a 3x3 linear system by Gaussian elimination with partial pivoting.
+pub fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
+    for col in 0..3 {
+        let piv = (col..3)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-30, "singular system");
+        for row in 0..3 {
+            if row == col {
+                continue;
+            }
+            let f = a[row][col] / d;
+            for k in 0..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    [b[0] / a[0][0], b[1] / a[1][1], b[2] / a[2][2]]
+}
+
+/// Huber loss (delta-robust), the objective of the paper's Appendix D fit.
+pub fn huber(residual: f64, delta: f64) -> f64 {
+    let a = residual.abs();
+    if a <= delta {
+        0.5 * residual * residual
+    } else {
+        delta * (a - 0.5 * delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut o = OnlineStats::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(o.min(), 1.0);
+        assert_eq!(o.max(), 16.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9 && (b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quadfit_recovers_parabola() {
+        let xs: Vec<f64> = (-10..=10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 5.0 - 3.0 * x + 0.5 * x * x).collect();
+        let c = quadfit(&xs, &ys);
+        assert!((c[0] - 5.0).abs() < 1e-8);
+        assert!((c[1] + 3.0).abs() < 1e-8);
+        assert!((c[2] - 0.5).abs() < 1e-8);
+        // vertex at x = -c1/(2 c2) = 3
+        assert!((-c[1] / (2.0 * c[2]) - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn huber_transitions() {
+        assert!((huber(0.5, 1.0) - 0.125).abs() < 1e-12);
+        assert!((huber(2.0, 1.0) - 1.5).abs() < 1e-12);
+        assert_eq!(huber(-2.0, 1.0), huber(2.0, 1.0));
+    }
+}

@@ -1,0 +1,229 @@
+//! TOML-subset parser for `configs/*.toml` (the `toml` crate is not
+//! vendored). Supports exactly the grammar the config files use:
+//!
+//! * `[table.subtable]` headers (dotted, arbitrary depth)
+//! * `key = value` with string / integer / float / bool / flat array values
+//! * `#` comments and blank lines
+//!
+//! Anything else (inline tables, multi-line strings, dates) is rejected
+//! loudly — configs should stay in the shared subset both sides parse.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: map from dotted table path (e.g. "model.tiny-s") to
+/// its key/value pairs. Root-level keys live under "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse(text: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut table = String::new();
+    doc.entry(table.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') {
+                return Err(format!("line {}: bad table name '{name}'", lineno + 1));
+            }
+            table = name.to_string();
+            doc.entry(table.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&table).unwrap().insert(key, val);
+    }
+    Ok(doc)
+}
+
+pub fn parse_file(path: &std::path::Path) -> Result<TomlDoc, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        if inner.contains('"') {
+            return Err(format!("embedded quote unsupported: {s}"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner)? {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).ok_or("unbalanced ]")?,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config_shape() {
+        let doc = parse(
+            r#"
+# comment
+top = 1
+[model.tiny-s]
+hidden = 128        # trailing comment
+ratio = 0.25
+name = "tiny # s"
+flags = [1, 2, 3]
+progs = ["a", "b"]
+on = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        let t = &doc["model.tiny-s"];
+        assert_eq!(t["hidden"].as_i64(), Some(128));
+        assert_eq!(t["ratio"].as_f64(), Some(0.25));
+        assert_eq!(t["name"].as_str(), Some("tiny # s"));
+        assert_eq!(t["flags"].as_arr().unwrap().len(), 3);
+        assert_eq!(t["progs"].as_arr().unwrap()[1].as_str(), Some("b"));
+        assert_eq!(t["on"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn real_repo_configs_parse() {
+        let p = crate::repo_path("configs/models.toml");
+        if p.exists() {
+            let doc = parse_file(&p).unwrap();
+            assert!(doc.contains_key("model.tiny-s"));
+            assert_eq!(doc["model.tiny-s"]["hidden"].as_i64(), Some(128));
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("key").is_err());
+        assert!(parse("k = @@").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("n = 1_000_000\nf = 2.5e3").unwrap();
+        assert_eq!(doc[""]["n"].as_i64(), Some(1_000_000));
+        assert_eq!(doc[""]["f"].as_f64(), Some(2500.0));
+    }
+}

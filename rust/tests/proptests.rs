@@ -1,0 +1,254 @@
+//! Property-based tests over the coordinator invariants and the in-tree
+//! substrates, via the seeded harness in `spectron::util::prop`
+//! (replay any failure with `PROP_REPLAY=1 PROP_SEED=<seed> cargo test`).
+
+use spectron::coordinator::parallel::tree_allreduce_mean;
+use spectron::data::bpe::Bpe;
+use spectron::data::corpus::{Corpus, CorpusCfg};
+use spectron::data::dataset::{Dataset, Split};
+use spectron::train::schedule::Schedule;
+use spectron::util::json::Json;
+use spectron::util::prop::{check, f64_in, usize_in, vec_f64};
+use spectron::util::rng::Pcg64;
+use spectron::util::stats::{linreg, quadfit};
+
+#[test]
+fn prop_bpe_roundtrip_any_ascii() {
+    let bpe = Bpe::train(
+        "the quick brown fox jumps over the lazy dog 0123456789 again and again",
+        300,
+    );
+    check("bpe roundtrip", |rng| {
+        let len = usize_in(rng, 0, 120);
+        let s: String = (0..len)
+            .map(|_| (rng.below(95) as u8 + 32) as char) // printable ascii
+            .collect();
+        let dec = bpe.decode(&bpe.encode(&s));
+        if dec == s {
+            Ok(())
+        } else {
+            Err(format!("{s:?} -> {dec:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_bpe_ids_in_vocab() {
+    let bpe = Bpe::train("aaa bbb aab abb aabb abab", 280);
+    check("bpe ids bounded", |rng| {
+        let len = usize_in(rng, 1, 60);
+        let s: String = (0..len)
+            .map(|_| *rng.choice(&['a', 'b', ' ', 'c']))
+            .collect();
+        for id in bpe.encode(&s) {
+            if !(0..280).contains(&id) {
+                return Err(format!("id {id} out of vocab"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corpus_documents_deterministic() {
+    let c1 = Corpus::new(CorpusCfg::default());
+    let c2 = Corpus::new(CorpusCfg::default());
+    check("corpus determinism", |rng| {
+        let d = rng.below(100_000);
+        if c1.document(d) == c2.document(d) {
+            Ok(())
+        } else {
+            Err(format!("doc {d} differs"))
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_shards_partition_windows() {
+    let corpus = Corpus::new(CorpusCfg::default());
+    let bpe = Bpe::train(&corpus.text_range(1, 60), 300);
+    let ds = Dataset::build_with(&corpus, &bpe, 400, 64);
+    let total = ds.n_windows(Split::Train);
+    check("shards partition", |rng| {
+        let n_workers = usize_in(rng, 1, 6);
+        let mut seen = vec![0usize; total];
+        for w in 0..n_workers {
+            // shard membership is idx % n == w by construction; verify via
+            // the public iterator by drawing a full epoch per shard
+            let batch = 1;
+            let mut it = ds.batches_sharded(Split::Train, batch, 9, w, n_workers);
+            let shard_size = (0..total).filter(|i| i % n_workers == w).count();
+            for _ in 0..shard_size {
+                let b = it.next_batch();
+                let idx = (0..total)
+                    .find(|&i| ds.window(Split::Train, i) == &b[..])
+                    .ok_or("window not found")?;
+                seen[idx] += 1;
+            }
+        }
+        if seen.iter().all(|&c| c == 1) {
+            Ok(())
+        } else {
+            Err(format!(
+                "coverage: {} missing, {} dup",
+                seen.iter().filter(|&&c| c == 0).count(),
+                seen.iter().filter(|&&c| c > 1).count()
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_tree_allreduce_matches_naive() {
+    check("tree allreduce", |rng| {
+        let n = usize_in(rng, 1, 9);
+        let len = usize_in(rng, 1, 200);
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let naive: Vec<f32> = (0..len)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / n as f32)
+            .collect();
+        let tree = tree_allreduce_mean(bufs);
+        for (a, b) in tree.iter().zip(&naive) {
+            if (a - b).abs() > 1e-4 * (1.0 + b.abs()) {
+                return Err(format!("{a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_bounded_and_warmup_monotone() {
+    check("lr schedule invariants", |rng| {
+        let s = Schedule {
+            total_steps: usize_in(rng, 10, 5000),
+            base_lr: f64_in(rng, 1e-4, 1.0),
+            warmup_frac: f64_in(rng, 0.01, 0.3),
+        };
+        let warm = (s.warmup_frac * s.total_steps as f64).max(1.0) as usize;
+        let mut prev = 0.0;
+        for t in 0..s.total_steps {
+            let lr = s.lr_at(t);
+            if !(lr >= -1e-12 && lr <= s.base_lr * (1.0 + 1e-9)) {
+                return Err(format!("lr {lr} out of [0, base] at {t}"));
+            }
+            if t < warm && lr + 1e-12 < prev {
+                return Err(format!("warmup not monotone at {t}"));
+            }
+            prev = lr;
+        }
+        // end of schedule decays to (near) zero
+        let end = s.lr_at(s.total_steps - 1);
+        if end > 0.05 * s.base_lr {
+            return Err(format!("end lr {end} too high"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quadfit_recovers_random_parabolas() {
+    check("quadfit vertex", |rng| {
+        let c2 = f64_in(rng, 0.1, 5.0);
+        let vx = f64_in(rng, -10.0, 10.0);
+        let c0 = f64_in(rng, -5.0, 5.0);
+        let xs: Vec<f64> = (0..12).map(|i| vx - 6.0 + i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| c0 + c2 * (x - vx).powi(2)).collect();
+        let c = quadfit(&xs, &ys);
+        let vertex = -c[1] / (2.0 * c[2]);
+        if (vertex - vx).abs() < 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("vertex {vertex} != {vx}"))
+        }
+    });
+}
+
+#[test]
+fn prop_linreg_recovers_random_lines() {
+    check("linreg", |rng| {
+        let a = f64_in(rng, -10.0, 10.0);
+        let b = f64_in(rng, -3.0, 3.0);
+        let xs = vec_f64(rng, 20, -5.0, 5.0);
+        let ys: Vec<f64> = xs.iter().map(|x| a + b * x).collect();
+        let (fa, fb, r2) = linreg(&xs, &ys);
+        if (fa - a).abs() < 1e-7 && (fb - b).abs() < 1e-7 && r2 > 0.999 {
+            Ok(())
+        } else {
+            Err(format!("fit ({fa}, {fb}, {r2}) != ({a}, {b})"))
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| (rng.below(94) as u8 + 32) as char)
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", |rng| {
+        let v = random_json(rng, 3);
+        let re = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        if re == v {
+            Ok(())
+        } else {
+            Err(format!("{v} != {re}"))
+        }
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_states() {
+    check("checkpoint roundtrip", |rng| {
+        let len = usize_in(rng, 1, 5000);
+        let state: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let p = std::env::temp_dir().join(format!(
+            "spectron-prop-{}-{}.ckpt",
+            std::process::id(),
+            rng.below(u64::MAX)
+        ));
+        spectron::train::checkpoint::save(&p, "v", &state).map_err(|e| e.to_string())?;
+        let (_, loaded) = spectron::train::checkpoint::load(&p).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&p).ok();
+        if loaded == state {
+            Ok(())
+        } else {
+            Err("state mismatch".into())
+        }
+    });
+}
+
+#[test]
+fn prop_rng_below_is_bounded() {
+    check("rng below bounds", |rng| {
+        let n = 1 + rng.below(1_000_000);
+        for _ in 0..100 {
+            let x = rng.below(n);
+            if x >= n {
+                return Err(format!("{x} >= {n}"));
+            }
+        }
+        Ok(())
+    });
+}
