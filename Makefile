@@ -1,0 +1,31 @@
+# Build/verify entry points. `make artifacts` is the only step that
+# needs Python; everything after runs from the self-contained `repro`
+# binary (DESIGN.md).
+
+.PHONY: artifacts build test docs bench serve-bench clean
+
+# Lower every variant's programs to HLO text + manifests.
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+build:
+	cargo build --release
+
+# Tier-1 verify (ROADMAP.md).
+test: build
+	cargo test -q
+
+# Doc gate: rustdoc clean of warnings (broken intra-doc links included)
+# and every in-source `DESIGN.md §X` citation resolving to a heading.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	bash tools/check_design_refs.sh
+
+bench:
+	cargo bench
+
+serve-bench:
+	cargo run --release --example serve_bench
+
+clean:
+	rm -rf target artifacts results

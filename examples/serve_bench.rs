@@ -1,0 +1,132 @@
+//! serve_bench — load generator for `repro serve` (DESIGN.md §Serving).
+//!
+//! Spawns an in-process server, fires concurrent generate traffic at it,
+//! and reports client-side p50/p99 latency, throughput and server-side
+//! batch occupancy; then repeats with batching disabled (max_batch 1) so
+//! the batched-vs-sequential throughput ratio is read off directly —
+//! the serving analogue of the paper's inference-efficiency claim.
+//!
+//!     cargo run --release --example serve_bench
+//!
+//! Env knobs: SERVE_BENCH_CLIENTS (8), SERVE_BENCH_REQS (25) per client,
+//! SERVE_BENCH_CKPT (checkpoint path -> real PJRT engine; default mock
+//! engine with a simulated 3 ms device cost so the harness runs
+//! anywhere) and SERVE_BENCH_DOCS (tokenizer --docs match, 6000).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+use spectron::serve::{MockEngine, ServeCfg, Server, ServerHandle};
+use spectron::util::json::Json;
+use spectron::util::stats::quantile;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn spawn_server(max_batch: usize) -> Result<ServerHandle> {
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch,
+        max_wait: Duration::from_millis(10),
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+    };
+    match std::env::var("SERVE_BENCH_CKPT") {
+        Ok(ckpt) => {
+            use spectron::runtime::ArtifactIndex;
+            use spectron::serve::PjrtEngine;
+            use spectron::train::checkpoint;
+            let idx = ArtifactIndex::load(&ArtifactIndex::default_root())
+                .map_err(|e| anyhow!("{e}\n  hint: run `make artifacts`"))?;
+            let variant = checkpoint::peek_variant(std::path::Path::new(&ckpt))?;
+            println!("engine: PJRT ({variant} from {ckpt})");
+            let mut ckpts = std::collections::BTreeMap::new();
+            ckpts.insert(variant.clone(), std::path::PathBuf::from(&ckpt));
+            let mut cfg = cfg;
+            cfg.default_variant = Some(variant);
+            let docs = env_usize("SERVE_BENCH_DOCS", 6000) as u64;
+            Server::spawn(cfg, PjrtEngine::factory(idx, ckpts, 2, docs))
+        }
+        Err(_) => {
+            let seen = Arc::new(Mutex::new(Vec::new()));
+            Server::spawn(cfg, MockEngine::factory(Duration::from_millis(3), seen))
+        }
+    }
+}
+
+/// One client worker: sequential request/response over its own
+/// connection; concurrency comes from running many clients.
+fn client(addr: std::net::SocketAddr, reqs: usize, cid: usize) -> Result<Vec<f64>> {
+    let stream = TcpStream::connect(addr).context("connect")?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut lat_ms = Vec::with_capacity(reqs);
+    for i in 0..reqs {
+        let t0 = Instant::now();
+        writeln!(
+            writer,
+            r#"{{"id":{i},"op":"generate","prompt":"client {cid} turn {i} of many","max_tokens":8,"temperature":0.7,"seed":{cid}}}"#
+        )?;
+        writer.flush()?;
+        let mut line = String::new();
+        anyhow::ensure!(reader.read_line(&mut line)? > 0, "server closed");
+        let j = Json::parse(line.trim()).map_err(|e| anyhow!(e))?;
+        anyhow::ensure!(
+            j.get("ok") == Some(&Json::Bool(true)),
+            "request failed: {line}"
+        );
+        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(lat_ms)
+}
+
+fn run_phase(name: &str, max_batch: usize, clients: usize, reqs: usize) -> Result<f64> {
+    let handle = spawn_server(max_batch)?;
+    let addr = handle.addr;
+    let t0 = Instant::now();
+    let lats: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|cid| scope.spawn(move || client(addr, reqs, cid)))
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread").expect("client io"))
+            .collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = handle.shutdown();
+    let total = (clients * reqs) as f64;
+    let thr = total / wall;
+    println!(
+        "{name:<28} {total:>5.0} reqs in {wall:>6.2}s  {thr:>8.1} req/s   \
+         p50 {:>7.2} ms  p99 {:>7.2} ms  occupancy {:>4.2}",
+        quantile(&lats, 0.50),
+        quantile(&lats, 0.99),
+        stats.get("batch_occupancy_mean").and_then(|j| j.as_f64()).unwrap_or(0.0),
+    );
+    Ok(thr)
+}
+
+fn main() -> Result<()> {
+    let clients = env_usize("SERVE_BENCH_CLIENTS", 8);
+    let reqs = env_usize("SERVE_BENCH_REQS", 25);
+    println!(
+        "== serve_bench: {clients} concurrent clients x {reqs} generate requests ==\n"
+    );
+
+    let batched = run_phase("batched (max_batch=8)", 8, clients, reqs)?;
+    let sequential = run_phase("sequential (max_batch=1)", 1, clients, reqs)?;
+
+    let ratio = batched / sequential;
+    println!("\nbatched / sequential throughput: {ratio:.2}x");
+    if ratio <= 1.0 {
+        println!("WARNING: batching did not win — check max_wait vs execute cost");
+    }
+    Ok(())
+}

@@ -28,7 +28,14 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from .config import VariantCfg, load_variants
-from .programs import make_apply, make_eval, make_grad, make_init, make_step
+from .programs import (
+    make_apply,
+    make_eval,
+    make_grad,
+    make_init,
+    make_logits,
+    make_step,
+)
 from .state import HDR, StateLayout
 
 
@@ -85,7 +92,9 @@ def lower_variant(cfg: VariantCfg, out_dir: str, use_pallas: bool = True) -> dic
 
 
 def lower_eval(cfg: VariantCfg, out_dir: str) -> dict:
-    """One eval program per (model, factorize, rank) — shared across optimizers."""
+    """One eval + logits program per (model, factorize, rank) — shared
+    across optimizers. ``logits`` is the serve-time decode step; it rides
+    with eval because both consume the header+params prefix only."""
     layout = StateLayout(cfg)
     m = cfg.model
     prefix_spec = jax.ShapeDtypeStruct((layout.params_end,), jnp.float32)
@@ -94,6 +103,15 @@ def lower_eval(cfg: VariantCfg, out_dir: str) -> dict:
     lowered = jax.jit(make_eval(layout)).lower(prefix_spec, tokens_spec, spans_spec)
     path = os.path.join(out_dir, "eval", f"{cfg.eval_key}.hlo.txt")
     _write(path, to_hlo_text(lowered))
+
+    gen_tokens_spec = jax.ShapeDtypeStruct((cfg.batch, m.seq_len), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    lowered = jax.jit(make_logits(layout)).lower(prefix_spec, gen_tokens_spec, pos_spec)
+    _write(
+        os.path.join(out_dir, "eval", f"{cfg.eval_key}.gen.hlo.txt"),
+        to_hlo_text(lowered),
+    )
+
     meta = {
         "eval_key": cfg.eval_key,
         "params_end": layout.params_end,
@@ -101,12 +119,18 @@ def lower_eval(cfg: VariantCfg, out_dir: str) -> dict:
         "seq_len": m.seq_len,
         "hdr": HDR,
         "out_len": 2 + 2 * cfg.batch,
+        "vocab": m.vocab,
+        "gen_out_len": cfg.batch * m.vocab,
     }
     _write(
         os.path.join(out_dir, "eval", f"{cfg.eval_key}.json"),
         json.dumps(meta, indent=1),
     )
-    return {"hlo": f"eval/{cfg.eval_key}.hlo.txt", "meta": meta}
+    return {
+        "hlo": f"eval/{cfg.eval_key}.hlo.txt",
+        "gen": f"eval/{cfg.eval_key}.gen.hlo.txt",
+        "meta": meta,
+    }
 
 
 def main() -> None:

@@ -9,8 +9,12 @@ from __future__ import annotations
 
 import math
 import os
-import tomllib
 from dataclasses import dataclass, field
+
+try:  # stdlib from 3.11; this testbed pins 3.10, so gate it (DESIGN.md)
+    import tomllib
+except ModuleNotFoundError:  # pragma: no cover - depends on interpreter
+    tomllib = None
 
 _REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
 
@@ -72,10 +76,52 @@ class VariantCfg:
         return f"eval-{self.model.name}-{self.factorize}-r{self.rank_ratio:g}"
 
 
+def _parse_toml_value(text: str):
+    text = text.strip()
+    if text.startswith('"') and text.endswith('"') and len(text) >= 2:
+        return text[1:-1]
+    if text.startswith("[") and text.endswith("]"):
+        inner = text[1:-1].strip()
+        return [_parse_toml_value(p) for p in inner.split(",")] if inner else []
+    if text in ("true", "false"):
+        return text == "true"
+    try:
+        return int(text)
+    except ValueError:
+        return float(text)
+
+
+def _toml_load(path: str) -> dict:
+    """Read a config file. Prefers stdlib ``tomllib``; on 3.10 falls back
+    to the same TOML subset ``rust/src/util/toml.rs`` accepts ([a.b]
+    headers, scalar/flat-array values, # comments)."""
+    if tomllib is not None:
+        with open(path, "rb") as f:
+            return tomllib.load(f)
+    raw: dict = {}
+    with open(path, "r") as f:
+        table = raw
+        for lineno, line in enumerate(f, 1):
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            if line.startswith("["):
+                if not line.endswith("]"):
+                    raise ValueError(f"{path}:{lineno}: unterminated table header")
+                table = raw
+                for part in line[1:-1].strip().split("."):
+                    table = table.setdefault(part.strip(), {})
+                continue
+            key, eq, val = line.partition("=")
+            if not eq:
+                raise ValueError(f"{path}:{lineno}: expected key = value")
+            table[key.strip()] = _parse_toml_value(val)
+    return raw
+
+
 def load_models(path: str | None = None) -> dict[str, ModelCfg]:
     path = path or os.path.join(_REPO, "configs", "models.toml")
-    with open(path, "rb") as f:
-        raw = tomllib.load(f)
+    raw = _toml_load(path)
     out = {}
     for name, m in raw["model"].items():
         out[name] = ModelCfg(
@@ -92,8 +138,7 @@ def load_models(path: str | None = None) -> dict[str, ModelCfg]:
 def load_variants(path: str | None = None) -> dict[str, VariantCfg]:
     models = load_models()
     path = path or os.path.join(_REPO, "configs", "variants.toml")
-    with open(path, "rb") as f:
-        raw = tomllib.load(f)
+    raw = _toml_load(path)
     d = raw.get("defaults", {})
     out = {}
     for name, v in raw["variant"].items():

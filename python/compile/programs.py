@@ -7,11 +7,15 @@ Every program obeys the single-flat-f32-output convention (DESIGN.md):
 * ``eval(prefix f32[P], tokens i32[B,T+1], spans i32[B,2]) -> f32[2+2B]``
 * ``grad(state f32[L], tokens i32[B,T+1]) -> f32[1+NP]  ([loss | grads])``
 * ``apply(state f32[L], gradvec f32[1+NP]) -> state' f32[L]``
+* ``logits(prefix f32[P], tokens i32[B,T], pos i32[B]) -> f32[B*V]``
 
-``eval`` takes only the header+params prefix of the state so that one eval
-program is shared by every optimizer with the same architecture. ``grad``
+``eval`` and ``logits`` take only the header+params prefix of the state so
+that one program per architecture is shared by every optimizer. ``grad``
 and ``apply`` split the train step for the coordinator's gradient
-accumulation and simulated data-parallel all-reduce.
+accumulation and simulated data-parallel all-reduce. ``logits`` is the
+serving decode step (DESIGN.md §Serving): next-token logits at one
+position per sequence, flattened row-major to keep the single-output
+convention.
 """
 
 from __future__ import annotations
@@ -22,7 +26,7 @@ import jax.numpy as jnp
 from . import state as st
 from .config import VariantCfg
 from .kernels import newton_schulz
-from .model import loss_fn, span_scores
+from .model import forward, loss_fn, span_scores
 from .optim import alpha_schedule, optimizer_step
 from .state import HDR, RING, RING_BASE, StateLayout, is_factorized, matrix_dims
 from .telemetry import spectral_telemetry
@@ -217,6 +221,28 @@ def make_eval(layout: StateLayout):
         return jnp.concatenate([total, nll, cnt])
 
     return evaluate
+
+
+def make_logits(layout: StateLayout):
+    """Serving decode step: next-token logits at ``pos[i]`` for sequence i.
+
+    Shares the header+params prefix with ``eval`` (one program per
+    architecture, reused across optimizers and checkpoints). ``tokens`` is
+    the full (B, seq_len) decode window, PAD beyond each sequence's
+    current length; causal attention makes the padding inert. The (B, V)
+    logit rows are flattened row-major so the program keeps the
+    single-flat-f32-output convention.
+    """
+    cfg = layout.cfg
+
+    def logits(prefix: jnp.ndarray, tokens: jnp.ndarray, pos: jnp.ndarray):
+        _header, tensors = _unpack_params_only(layout, prefix)
+        lg = forward(tensors, tokens, cfg)  # (B, T, V)
+        idx = jnp.clip(pos, 0, tokens.shape[1] - 1)
+        rows = jnp.take_along_axis(lg, idx[:, None, None], axis=1)[:, 0, :]
+        return rows.reshape(-1)
+
+    return logits
 
 
 def _unpack_params_only(layout: StateLayout, prefix: jnp.ndarray):

@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not baked into this image")
 from hypothesis import given, settings, strategies as hst
 
 from compile.kernels import (

@@ -10,7 +10,14 @@ import numpy as np
 import pytest
 
 from compile import state as st
-from compile.programs import make_apply, make_eval, make_grad, make_init, make_step
+from compile.programs import (
+    make_apply,
+    make_eval,
+    make_grad,
+    make_init,
+    make_logits,
+    make_step,
+)
 from compile.state import HDR, StateLayout
 
 from .conftest import variant
@@ -140,12 +147,51 @@ def test_eval_span_restriction():
     np.testing.assert_array_equal(cnts, np.full(cfg.batch, 5.0))  # [4, 9) scored
 
 
+def test_logits_matches_forward_rows():
+    """The serve decode program returns forward()'s logit row at pos[i],
+    flattened — the contract the Rust generate path decodes against."""
+    cfg, layout, state, _ = _boot("spectron")
+    lg = jax.jit(make_logits(layout))
+    T, V = cfg.model.seq_len, cfg.model.vocab
+    toks = jax.random.randint(jax.random.PRNGKey(9), (cfg.batch, T), 0, V)
+    pos = jnp.asarray([3, T - 1], jnp.int32)
+    out = np.asarray(lg(state[: layout.params_end], toks, pos))
+    assert out.shape == (cfg.batch * V,)
+
+    from compile.model import forward
+    from compile.programs import _unpack_params_only
+
+    _, tensors = _unpack_params_only(layout, state[: layout.params_end])
+    full = np.asarray(forward(tensors, toks, cfg))
+    for i in range(cfg.batch):
+        np.testing.assert_allclose(
+            out[i * V : (i + 1) * V], full[i, int(pos[i])], atol=1e-5
+        )
+
+
+def test_logits_causal_padding_inert():
+    """Tokens after pos[i] (the PAD tail of a decode window) must not
+    change the logits at pos[i] — the batcher left-aligns prompts and
+    relies on causality for the padding."""
+    cfg, layout, state, _ = _boot("spectron")
+    lg = jax.jit(make_logits(layout))
+    T, V = cfg.model.seq_len, cfg.model.vocab
+    toks = jax.random.randint(jax.random.PRNGKey(10), (cfg.batch, T), 2, V)
+    pos = jnp.full((cfg.batch,), 5, jnp.int32)
+    base = np.asarray(lg(state[: layout.params_end], toks, pos))
+    scrambled = toks.at[:, 6:].set(0)
+    alt = np.asarray(lg(state[: layout.params_end], scrambled, pos))
+    np.testing.assert_allclose(base, alt, atol=1e-5)
+
+
 def test_divergence_is_observable_not_fatal():
     """With an absurd lr, naive sgd blows up; the step must still produce
     finite-or-inf header values the Rust trainer can detect (no crash)."""
     cfg = variant(optimizer="sgd")
     layout = StateLayout(cfg)
-    knobs = jnp.asarray([40.0, 1e4, 0.0, 0.0, 0, 0, 0, 0], jnp.float32)
+    # sgd's normalized update is insensitive to lr up to ~1e6 on this jax
+    # build; 1e8 reliably overflows to nan, which is the observable case
+    knobs = jnp.asarray([40.0, 1e8, 0.0, 0.0, 0, 0, 0, 0], jnp.float32)
     state = jax.jit(make_init(layout))(jnp.int32(0), knobs)
     toks = jax.random.randint(
         jax.random.PRNGKey(3), (cfg.batch, cfg.model.seq_len + 1), 0, cfg.model.vocab

@@ -1,0 +1,68 @@
+//! Serving-path latency benchmarks: batcher decision overhead, wire
+//! round-trip through the full server stack (mock engine, so numbers
+//! isolate the serving machinery from PJRT), and coalescing throughput.
+//!
+//!     cargo bench --offline [--bench serve_latency]   (BENCH_FAST=1 to smoke)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use spectron::serve::{DeadlineBatcher, MockEngine, ServeCfg, Server};
+use spectron::util::bench::{header, Bench};
+
+fn main() {
+    header("serve: batcher micro-costs");
+    let b = Bench::new("push+flush 8-batch (pure decision logic)").iters(200);
+    b.run(|| {
+        let mut q = DeadlineBatcher::new(8, Duration::from_millis(10));
+        let now = Instant::now();
+        for i in 0..8 {
+            q.push(i, now);
+        }
+        q.take(now, false).unwrap().items.len()
+    });
+
+    header("serve: wire round-trip (mock engine, single client)");
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+    };
+    let handle =
+        Server::spawn(cfg, MockEngine::factory(Duration::ZERO, seen)).expect("spawn");
+    let stream = TcpStream::connect(handle.addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+
+    // a lone request pays the max_wait deadline by design; measure it
+    Bench::new("request->response (pays 2ms deadline)").iters(50).run(|| {
+        writeln!(writer, r#"{{"id":1,"op":"score","text":"a b c"}}"#).unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+    });
+
+    // pipelined burst: the full batch flushes without waiting
+    let burst = 8;
+    Bench::new("8-request pipelined burst (full batch)")
+        .iters(50)
+        .run_throughput(burst as f64, "req", || {
+            for i in 0..burst {
+                writeln!(writer, r#"{{"id":{i},"op":"score","text":"a b c"}}"#).unwrap();
+            }
+            writer.flush().unwrap();
+            for _ in 0..burst {
+                line.clear();
+                reader.read_line(&mut line).unwrap();
+            }
+        });
+    handle.shutdown();
+}

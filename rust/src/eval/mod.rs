@@ -58,7 +58,32 @@ impl Evaluator {
         let t_lit = client::tokens_literal(tokens, b, w)?;
         let s_lit = client::tokens_literal(spans, b, 2)?;
         let out = self.prog.run_literals(&[p_lit, t_lit, s_lit])?;
-        let v = self.rt.download_f32(&out)?;
+        self.unpack(&out)
+    }
+
+    /// Buffer-to-buffer variant for the serving hot path: the params
+    /// prefix stays resident on device (uploaded once per
+    /// [`crate::serve::session::ModelSession`]) instead of being
+    /// re-uploaded per call as `score_batch` does.
+    pub fn score_batch_buffers(
+        &self,
+        prefix: &xla::PjRtBuffer,
+        tokens: &[i32],
+        spans: &[i32],
+    ) -> Result<(f64, f64, Vec<f32>, Vec<f32>)> {
+        let b = self.batch;
+        let w = self.seq_len + 1;
+        anyhow::ensure!(tokens.len() == b * w, "tokens shape");
+        anyhow::ensure!(spans.len() == b * 2, "spans shape");
+        let t_buf = self.rt.upload_literal(&client::tokens_literal(tokens, b, w)?)?;
+        let s_buf = self.rt.upload_literal(&client::tokens_literal(spans, b, 2)?)?;
+        let out = self.prog.run_buffers(&[prefix, &t_buf, &s_buf])?;
+        self.unpack(&out)
+    }
+
+    fn unpack(&self, out: &xla::PjRtBuffer) -> Result<(f64, f64, Vec<f32>, Vec<f32>)> {
+        let b = self.batch;
+        let v = self.rt.download_f32(out)?;
         anyhow::ensure!(v.len() == 2 + 2 * b, "eval output length {}", v.len());
         let nll = v[2..2 + b].to_vec();
         let cnt = v[2 + b..].to_vec();

@@ -10,8 +10,9 @@
 //! * **L3 (this crate)** — everything that runs: config registry, synthetic
 //!   corpus + BPE tokenizer, data pipeline, PJRT runtime, trainer,
 //!   coordinator (grad accumulation, simulated data-parallel all-reduce,
-//!   experiment scheduler), evaluation, scaling-law fits, and one driver
-//!   per table/figure of the paper.
+//!   experiment scheduler), evaluation, scaling-law fits, one driver
+//!   per table/figure of the paper, and the batched inference server
+//!   behind `repro serve` ([`serve`]).
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `repro` binary is self-contained.
@@ -28,6 +29,7 @@ pub mod exp;
 pub mod linalg;
 pub mod runtime;
 pub mod scaling;
+pub mod serve;
 pub mod train;
 pub mod util;
 

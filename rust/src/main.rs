@@ -7,6 +7,7 @@
 //! repro exp <id> [--smoke]           regenerate a paper table/figure
 //!        ids: fig1 fig2 fig3 fig4 tab1 fig6 fig9 fig8 tab2 tab3 fig12
 //!             fig13 appd all
+//! repro serve --ckpt a.ckpt[,b.ckpt] batched inference server (NDJSON/TCP)
 //! repro dp-demo [--workers N]        simulated data-parallel training
 //! repro accum-demo [--micro N]       gradient-accumulation training
 //! repro data [--docs N]              dataset/tokenizer statistics
@@ -42,6 +43,7 @@ fn run() -> Result<()> {
         "train" => train_cmd(&mut args),
         "eval" => eval_cmd(&mut args),
         "exp" => exp_cmd(&mut args),
+        "serve" => serve_cmd(&mut args),
         "dp-demo" => dp_demo(&mut args),
         "accum-demo" => accum_demo(&mut args),
         "data" => data_cmd(&mut args),
@@ -61,6 +63,10 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
   repro eval  --ckpt in.ckpt [--docs N] [--items N]
   repro exp   <fig1|fig2|fig3|fig4|tab1|fig6|fig9|fig8|tab2|tab3|fig12|fig13|appd|all>
               [--smoke] [--docs N] [--force]
+  repro serve --ckpt a.ckpt[,b.ckpt,...] [--addr HOST:PORT] [--max-batch N]
+              [--max-wait-ms F] [--workers N] [--cache N] [--docs N] [--mock]
+              (line-delimited JSON; ops: generate, score, stats, shutdown;
+               --docs must match training so the tokenizers agree)
   repro dp-demo    [--workers N --steps N --variant V]
   repro accum-demo [--micro N --steps N --variant V]
   repro data  [--docs N]
@@ -222,6 +228,63 @@ fn exp_cmd(args: &mut Args) -> Result<()> {
         run_one(&id)?;
     }
     info!("exp", "total wall time {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Batched inference server over line-delimited JSON — see
+/// DESIGN.md §Serving. Blocks until a `shutdown` request arrives.
+fn serve_cmd(args: &mut Args) -> Result<()> {
+    use spectron::serve::{MockEngine, PjrtEngine, ServeCfg, Server};
+
+    let addr = args.str("addr", "127.0.0.1:7433");
+    let ckpt_list = args.opt_str("ckpt");
+    let max_batch = args.usize("max-batch", 8);
+    let max_wait_ms = args.f64("max-wait-ms", 15.0);
+    let workers = args.usize("workers", 1);
+    let cache = args.usize("cache", 4);
+    // must match the --docs the checkpoints were trained with (the BPE
+    // sample is 400.min(docs) documents, same as exp::Ctx::new)
+    let docs = args.usize("docs", 6000);
+    let mock = args.flag("mock");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let mut cfg = ServeCfg {
+        addr,
+        max_batch,
+        max_wait: std::time::Duration::from_secs_f64(max_wait_ms.max(0.0) / 1e3),
+        workers,
+        metrics_name: Some("serve".into()),
+        ..ServeCfg::default()
+    };
+
+    let factory: spectron::serve::EngineFactory = if mock {
+        cfg.default_variant = Some("mock".into());
+        info!("serve", "MOCK engine (no artifacts touched)");
+        MockEngine::factory(
+            std::time::Duration::from_millis(2),
+            std::sync::Arc::new(std::sync::Mutex::new(Vec::new())),
+        )
+    } else {
+        let ckpt_list = ckpt_list
+            .ok_or_else(|| anyhow!("--ckpt required (comma-separated), or --mock"))?;
+        let idx = ArtifactIndex::load(&ArtifactIndex::default_root())
+            .map_err(|e| anyhow!("{e}\n  hint: run `make artifacts` first"))?;
+        let mut ckpts = std::collections::BTreeMap::new();
+        for path in ckpt_list.split(',').filter(|p| !p.is_empty()) {
+            let variant = checkpoint::peek_variant(std::path::Path::new(path))?;
+            info!("serve", "registered {variant} <- {path}");
+            if cfg.default_variant.is_none() {
+                cfg.default_variant = Some(variant.clone());
+            }
+            ckpts.insert(variant, std::path::PathBuf::from(path));
+        }
+        PjrtEngine::factory(idx, ckpts, cache, docs as u64)
+    };
+
+    let handle = Server::spawn(cfg, factory)?;
+    println!("serving on {}  (send {{\"op\":\"shutdown\"}} to stop)", handle.addr);
+    let stats = handle.wait();
+    println!("server stopped; final stats: {stats}");
     Ok(())
 }
 

@@ -218,6 +218,12 @@ impl ArtifactIndex {
     pub fn eval_path(&self, eval_key: &str) -> PathBuf {
         self.root.join("eval").join(format!("{eval_key}.hlo.txt"))
     }
+
+    /// The serving decode program (next-token logits) that rides with the
+    /// shared eval program — see `python/compile/aot.py::lower_eval`.
+    pub fn gen_path(&self, eval_key: &str) -> PathBuf {
+        self.root.join("eval").join(format!("{eval_key}.gen.hlo.txt"))
+    }
 }
 
 #[cfg(test)]

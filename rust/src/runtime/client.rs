@@ -7,10 +7,18 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-/// A host upload that keeps its source `Literal` alive for as long as the
-/// device buffer exists. `BufferFromHostLiteral` is asynchronous and the C
-/// wrapper does not await the transfer — dropping the literal early is a
-/// use-after-free (observed as a segfault in the de-risk pass).
+/// A host upload that keeps its source [`xla::Literal`] alive for as long
+/// as the device buffer exists. `BufferFromHostLiteral` is asynchronous
+/// and the C wrapper does not await the transfer — dropping the literal
+/// early is a use-after-free (observed as a segfault in the de-risk
+/// pass). The full lifetime rule is written up in DESIGN.md §Conventions.
+///
+/// Long-lived holders rely on this by construction: the trainer keeps its
+/// state upload alive across the step loop, and a serve
+/// [`crate::serve::session::ModelSession`] parks its params prefix in a
+/// `HostBuffer` that every batched execute of the
+/// [`crate::serve::batcher`] output reads from (see that module's docs
+/// for how batching interacts with upload lifetimes).
 pub struct HostBuffer {
     _lit: xla::Literal,
     pub buf: xla::PjRtBuffer,

@@ -5,7 +5,8 @@
 //! * [`state`]    — host mirror of the flat train-state vector (header
 //!   slots, loss ring, per-tensor views).
 //!
-//! Conventions (established in DESIGN.md and the de-risk pass):
+//! Conventions (DESIGN.md §Conventions; established in the de-risk
+//! pass):
 //!
 //! * every program returns ONE flat f32 array — the wrapper cannot
 //!   untuple PJRT results, so multi-output programs are impossible;

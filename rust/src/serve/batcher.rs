@@ -1,0 +1,250 @@
+//! Request batcher: coalesce concurrent requests into one PJRT execute.
+//!
+//! The policy (docs/adr/001-serve-batching.md): a batch for a key flushes
+//! as soon as it holds `max_batch` items, or when its *oldest* item has
+//! waited `max_wait` — so an idle server answers a lone request within
+//! one deadline, and a busy server fills whole batches and never waits.
+//!
+//! The decision logic is pure (time is always passed in), so the flush /
+//! deadline behaviour is unit-tested without threads or sleeps; the
+//! server wraps it in a `Mutex` + `Condvar` (see
+//! [`super::server`]). Batched uploads follow the `HostBuffer` lifetime
+//! rule — see [`crate::runtime::client::HostBuffer`].
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A flushed batch plus the bookkeeping the telemetry wants.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    /// how long the oldest item sat in the queue
+    pub waited: Duration,
+    /// items / max_batch at flush time, in (0, 1]
+    pub occupancy: f64,
+}
+
+/// Single-key deadline batcher.
+pub struct DeadlineBatcher<T> {
+    max_batch: usize,
+    max_wait: Duration,
+    queue: Vec<(T, Instant)>,
+}
+
+impl<T> DeadlineBatcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> DeadlineBatcher<T> {
+        DeadlineBatcher { max_batch: max_batch.max(1), max_wait, queue: Vec::new() }
+    }
+
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push((item, now));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// When the queue, left alone, must flush (oldest item + max_wait).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.queue.first().map(|(_, t)| *t + self.max_wait)
+    }
+
+    fn ready(&self, now: Instant) -> bool {
+        self.queue.len() >= self.max_batch
+            || self.deadline().map(|d| now >= d).unwrap_or(false)
+    }
+
+    /// Flush up to `max_batch` items if the batch is full or the deadline
+    /// has passed (or unconditionally with `force`, for drain-on-shutdown).
+    pub fn take(&mut self, now: Instant, force: bool) -> Option<Batch<T>> {
+        if self.queue.is_empty() || !(force || self.ready(now)) {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_batch);
+        let oldest = self.queue[0].1;
+        let items = self.queue.drain(..n).map(|(x, _)| x).collect::<Vec<_>>();
+        Some(Batch {
+            occupancy: items.len() as f64 / self.max_batch as f64,
+            waited: now.saturating_duration_since(oldest),
+            items,
+        })
+    }
+}
+
+/// Multi-key batcher: one [`DeadlineBatcher`] per key, flushing whichever
+/// key is ready first (full batches beat deadline flushes; ties go to the
+/// oldest queue). Keys are (variant, op) on the serve path so one slow
+/// model never blocks another's batches.
+pub struct KeyedBatcher<K, T> {
+    max_batch: usize,
+    max_wait: Duration,
+    queues: BTreeMap<K, DeadlineBatcher<T>>,
+}
+
+impl<K: Ord + Clone, T> KeyedBatcher<K, T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> KeyedBatcher<K, T> {
+        KeyedBatcher { max_batch: max_batch.max(1), max_wait, queues: BTreeMap::new() }
+    }
+
+    pub fn push(&mut self, key: K, item: T, now: Instant) {
+        let (max_batch, max_wait) = (self.max_batch, self.max_wait);
+        self.queues
+            .entry(key)
+            .or_insert_with(|| DeadlineBatcher::new(max_batch, max_wait))
+            .push(item, now);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending() == 0
+    }
+
+    /// Earliest deadline across keys — what a worker should sleep until.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues.values().filter_map(|q| q.deadline()).min()
+    }
+
+    /// Flush the most urgent ready key, if any. Keys drained empty are
+    /// removed — client-supplied variant names must not grow the map
+    /// (they are only validated downstream, in the engine).
+    pub fn take_ready(&mut self, now: Instant, force: bool) -> Option<(K, Batch<T>)> {
+        let key = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .max_by_key(|(_, q)| {
+                (q.len() >= self.max_batch, std::cmp::Reverse(q.deadline()))
+            })
+            .map(|(k, _)| k.clone())?;
+        let queue = self.queues.get_mut(&key)?;
+        let batch = queue.take(now, force);
+        if queue.is_empty() {
+            self.queues.remove(&key);
+        }
+        batch.map(|b| (key, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn flushes_when_full_without_waiting() {
+        let t0 = Instant::now();
+        let mut b = DeadlineBatcher::new(3, 1000 * MS);
+        b.push(1, t0);
+        b.push(2, t0);
+        assert!(b.take(t0, false).is_none(), "partial batch before deadline");
+        b.push(3, t0);
+        let batch = b.take(t0, false).expect("full batch flushes immediately");
+        assert_eq!(batch.items, vec![1, 2, 3]);
+        assert!((batch.occupancy - 1.0).abs() < 1e-12);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let t0 = Instant::now();
+        let mut b = DeadlineBatcher::new(8, 10 * MS);
+        b.push("a", t0);
+        b.push("b", t0 + 4 * MS);
+        assert_eq!(b.deadline(), Some(t0 + 10 * MS));
+        assert!(b.take(t0 + 9 * MS, false).is_none());
+        let batch = b.take(t0 + 10 * MS, false).expect("deadline reached");
+        assert_eq!(batch.items, vec!["a", "b"]);
+        assert_eq!(batch.waited, 10 * MS);
+        assert!((batch.occupancy - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_item() {
+        let t0 = Instant::now();
+        let mut b = DeadlineBatcher::new(8, 10 * MS);
+        b.push(1, t0 + 5 * MS);
+        b.push(2, t0); // arrives "late" in wall order but is older
+        // deadline is the FIRST pushed item's arrival + max_wait
+        assert_eq!(b.deadline(), Some(t0 + 15 * MS));
+    }
+
+    #[test]
+    fn overfull_queue_flushes_in_chunks() {
+        let t0 = Instant::now();
+        let mut b = DeadlineBatcher::new(2, 10 * MS);
+        for i in 0..5 {
+            b.push(i, t0);
+        }
+        assert_eq!(b.take(t0, false).unwrap().items, vec![0, 1]);
+        assert_eq!(b.take(t0, false).unwrap().items, vec![2, 3]);
+        // remainder is below max_batch: waits for its deadline again
+        assert!(b.take(t0, false).is_none());
+        assert_eq!(b.take(t0 + 10 * MS, false).unwrap().items, vec![4]);
+    }
+
+    #[test]
+    fn force_drains_immediately() {
+        let t0 = Instant::now();
+        let mut b = DeadlineBatcher::new(8, 1000 * MS);
+        b.push(1, t0);
+        let batch = b.take(t0, true).expect("force flush");
+        assert_eq!(batch.items, vec![1]);
+    }
+
+    #[test]
+    fn keyed_batches_are_independent() {
+        let t0 = Instant::now();
+        let mut kb = KeyedBatcher::new(2, 10 * MS);
+        kb.push("m1", 1, t0);
+        kb.push("m2", 10, t0 + MS);
+        kb.push("m1", 2, t0 + 2 * MS);
+        // m1 is full -> flushes now; m2 still waits for its deadline
+        let (k, batch) = kb.take_ready(t0 + 2 * MS, false).unwrap();
+        assert_eq!(k, "m1");
+        assert_eq!(batch.items, vec![1, 2]);
+        assert!(kb.take_ready(t0 + 2 * MS, false).is_none());
+        assert_eq!(kb.next_deadline(), Some(t0 + 11 * MS));
+        let (k, batch) = kb.take_ready(t0 + 11 * MS, false).unwrap();
+        assert_eq!(k, "m2");
+        assert_eq!(batch.items, vec![10]);
+        assert!(kb.is_empty());
+    }
+
+    #[test]
+    fn keyed_drops_drained_keys() {
+        // one map entry per client-supplied key must not outlive its
+        // pending requests (unbounded-variant-name resistance)
+        let t0 = Instant::now();
+        let mut kb = KeyedBatcher::new(4, 10 * MS);
+        for i in 0..100 {
+            kb.push(format!("bogus-variant-{i}"), i, t0);
+        }
+        assert_eq!(kb.queues.len(), 100);
+        while kb.take_ready(t0 + 20 * MS, false).is_some() {}
+        assert_eq!(kb.queues.len(), 0, "drained keys must be evicted");
+    }
+
+    #[test]
+    fn keyed_prefers_full_then_oldest() {
+        let t0 = Instant::now();
+        let mut kb = KeyedBatcher::new(2, 10 * MS);
+        kb.push("old", 1, t0); // oldest but partial
+        kb.push("full", 2, t0 + MS);
+        kb.push("full", 3, t0 + MS);
+        let (k, _) = kb.take_ready(t0 + MS, false).unwrap();
+        assert_eq!(k, "full", "full batch beats older partial one");
+        // past both deadlines, the older queue drains first
+        kb.push("newer", 4, t0 + 2 * MS);
+        kb.push("old", 5, t0 + 3 * MS);
+        let (k, _) = kb.take_ready(t0 + 20 * MS, false).unwrap();
+        assert_eq!(k, "old");
+    }
+}

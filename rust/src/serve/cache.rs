@@ -1,0 +1,139 @@
+//! Capacity-bounded LRU cache for hot serving state (model sessions,
+//! keyed by variant — DESIGN.md §Serving).
+//!
+//! Sessions hold compiled programs plus an uploaded parameter buffer, so
+//! the working set is a handful of entries; a `Vec` ordered by recency
+//! (MRU last) beats a linked-list construction at these sizes and keeps
+//! the code index-free and safe.
+
+/// LRU map: `get` promotes to most-recently-used, inserting beyond
+/// `capacity` evicts the least-recently-used entry.
+pub struct LruCache<K, V> {
+    capacity: usize,
+    /// recency order, least-recently-used first
+    entries: Vec<(K, V)>,
+}
+
+impl<K: Eq + Clone, V> LruCache<K, V> {
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        LruCache { capacity: capacity.max(1), entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.entries.iter().any(|(k, _)| k == key)
+    }
+
+    /// Look up and promote to MRU.
+    pub fn get(&mut self, key: &K) -> Option<&mut V> {
+        let i = self.entries.iter().position(|(k, _)| k == key)?;
+        let entry = self.entries.remove(i);
+        self.entries.push(entry);
+        Some(&mut self.entries.last_mut().unwrap().1)
+    }
+
+    /// Insert (or replace) as MRU; returns the evicted entry, if any.
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(i);
+        }
+        self.entries.push((key, value));
+        if self.entries.len() > self.capacity {
+            Some(self.entries.remove(0))
+        } else {
+            None
+        }
+    }
+
+    /// `get` or build-and-insert via a fallible constructor. The
+    /// constructor runs outside any entry borrow, so it may itself be
+    /// expensive (checkpoint load + program compile on the serve path).
+    pub fn get_or_try_insert(
+        &mut self,
+        key: &K,
+        build: impl FnOnce() -> anyhow::Result<V>,
+    ) -> anyhow::Result<&mut V> {
+        if let Some(i) = self.entries.iter().position(|(k, _)| k == key) {
+            let entry = self.entries.remove(i); // promote to MRU
+            self.entries.push(entry);
+        } else {
+            let value = build()?;
+            self.insert(key.clone(), value);
+        }
+        Ok(&mut self.entries.last_mut().unwrap().1)
+    }
+
+    /// Keys in recency order (least-recently-used first).
+    pub fn keys(&self) -> impl Iterator<Item = &K> {
+        self.entries.iter().map(|(k, _)| k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        assert!(c.insert("a", 1).is_none());
+        assert!(c.insert("b", 2).is_none());
+        let evicted = c.insert("c", 3).expect("must evict");
+        assert_eq!(evicted, ("a", 1));
+        assert!(!c.contains(&"a") && c.contains(&"b") && c.contains(&"c"));
+    }
+
+    #[test]
+    fn get_promotes_to_mru() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert_eq!(c.get(&"a"), Some(&mut 1)); // a is now MRU
+        let evicted = c.insert("c", 3).expect("must evict");
+        assert_eq!(evicted.0, "b");
+        assert!(c.contains(&"a"));
+    }
+
+    #[test]
+    fn reinsert_replaces_without_evicting() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert!(c.insert("a", 10).is_none());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&"a"), Some(&mut 10));
+    }
+
+    #[test]
+    fn get_or_try_insert_builds_once_and_propagates_errors() {
+        let mut c: LruCache<&str, i32> = LruCache::new(2);
+        let mut builds = 0;
+        for _ in 0..3 {
+            let v = c
+                .get_or_try_insert(&"a", || {
+                    builds += 1;
+                    Ok(7)
+                })
+                .unwrap();
+            assert_eq!(*v, 7);
+        }
+        assert_eq!(builds, 1);
+        assert!(c.get_or_try_insert(&"bad", || anyhow::bail!("boom")).is_err());
+        assert!(!c.contains(&"bad"));
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut c = LruCache::new(0);
+        c.insert("a", 1);
+        assert!(c.contains(&"a"));
+        assert_eq!(c.insert("b", 2).unwrap().0, "a");
+    }
+}

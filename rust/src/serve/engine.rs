@@ -1,0 +1,139 @@
+//! The engine boundary: what a serve worker runs a flushed batch through.
+//!
+//! Engines are constructed *inside* each worker thread (PJRT wrapper
+//! types are `!Send`, the same constraint [`crate::coordinator::sched`]
+//! works around), so the server takes an engine *factory*. Two
+//! implementations:
+//!
+//! * [`crate::serve::session::PjrtEngine`] — the real path: checkpoint +
+//!   AOT programs through the runtime,
+//! * [`MockEngine`] — deterministic, dependency-free; exercises the
+//!   batcher/protocol/socket machinery in tests and benches, and stands
+//!   in when artifacts are not built (DESIGN.md §Serving).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::protocol::{OpKind, Reply, Request};
+
+/// Batch identity: requests only coalesce when they run the same program
+/// family on the same model variant.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub variant: String,
+    pub kind: OpKind,
+}
+
+/// One engine instance per worker thread. `execute` returns exactly one
+/// reply per request, in order; per-request failures are values, not a
+/// batch-level error, so one bad prompt can't fail its batchmates.
+pub trait BatchEngine {
+    fn execute(&mut self, key: &BatchKey, batch: &[Request]) -> Vec<Result<Reply>>;
+}
+
+/// Factory the server clones into each worker thread.
+pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn BatchEngine>> + Send + Sync>;
+
+/// Deterministic stand-in engine. Generation echoes the prompt's words
+/// cyclically; scoring charges 1 nat per whitespace token. `exec_cost`
+/// models a fixed per-execute device cost, which is what makes batched
+/// throughput measurably beat sequential in `examples/serve_bench.rs`
+/// even without PJRT.
+pub struct MockEngine {
+    /// simulated per-execute latency
+    pub exec_cost: Duration,
+    /// batch sizes seen, shared with tests asserting coalescing
+    pub seen: Arc<Mutex<Vec<usize>>>,
+}
+
+impl MockEngine {
+    pub fn new(exec_cost: Duration) -> MockEngine {
+        MockEngine { exec_cost, seen: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    /// A factory producing engines that share one `seen` log.
+    pub fn factory(exec_cost: Duration, seen: Arc<Mutex<Vec<usize>>>) -> EngineFactory {
+        Arc::new(move || {
+            Ok(Box::new(MockEngine { exec_cost, seen: seen.clone() })
+                as Box<dyn BatchEngine>)
+        })
+    }
+}
+
+impl BatchEngine for MockEngine {
+    fn execute(&mut self, _key: &BatchKey, batch: &[Request]) -> Vec<Result<Reply>> {
+        if !self.exec_cost.is_zero() {
+            std::thread::sleep(self.exec_cost);
+        }
+        {
+            // bounded: a long-lived `--mock` server must not grow without
+            // limit; tests only ever look at small recent histories
+            let mut seen = self.seen.lock().unwrap();
+            if seen.len() >= 8192 {
+                let drop_n = seen.len() - 4096;
+                seen.drain(..drop_n);
+            }
+            seen.push(batch.len());
+        }
+        batch
+            .iter()
+            .map(|req| {
+                if req.text.contains("\u{0}fail") {
+                    anyhow::bail!("mock engine: poisoned request");
+                }
+                Ok(match req.kind {
+                    OpKind::Generate => {
+                        let words: Vec<&str> = req.text.split_whitespace().collect();
+                        let n = req.max_tokens;
+                        let text = (0..n)
+                            .map(|i| words.get(i % words.len().max(1)).copied().unwrap_or("pad"))
+                            .collect::<Vec<_>>()
+                            .join(" ");
+                        Reply::Generated { text, tokens_in: words.len(), tokens_out: n }
+                    }
+                    OpKind::Score => {
+                        let tokens = req.text.split_whitespace().count() as f64;
+                        Reply::Scored { nll: tokens, tokens, ppl: std::f64::consts::E }
+                    }
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn req(kind: OpKind, text: &str) -> Request {
+        Request {
+            id: Json::Null,
+            kind,
+            variant: None,
+            text: text.into(),
+            max_tokens: 4,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn mock_is_deterministic_and_per_request_failing() {
+        let mut e = MockEngine::new(Duration::ZERO);
+        let key = BatchKey { variant: "m".into(), kind: OpKind::Generate };
+        let batch = vec![req(OpKind::Generate, "a b"), req(OpKind::Generate, "\u{0}fail")];
+        let out = e.execute(&key, &batch);
+        assert_eq!(out.len(), 2);
+        let Reply::Generated { text, tokens_in, tokens_out } = out[0].as_ref().unwrap()
+        else {
+            panic!("wrong reply kind")
+        };
+        assert_eq!(text, "a b a b");
+        assert_eq!((*tokens_in, *tokens_out), (2, 4));
+        assert!(out[1].is_err(), "poisoned request fails alone");
+        assert_eq!(*e.seen.lock().unwrap(), vec![2]);
+    }
+}

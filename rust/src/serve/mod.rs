@@ -1,0 +1,37 @@
+//! Batched inference serving: the `repro serve` subsystem
+//! (DESIGN.md §Serving).
+//!
+//! A trained checkpoint plus the AOT `eval`/`logits` programs become a
+//! request-serving process: line-delimited JSON over TCP in, batched PJRT
+//! executes underneath, latency/occupancy telemetry out.
+//!
+//! * [`protocol`]  — the NDJSON wire format (generate / score / stats /
+//!   shutdown),
+//! * [`batcher`]   — max-batch / max-wait request coalescing
+//!   (docs/adr/001-serve-batching.md),
+//! * [`cache`]     — LRU of hot model sessions, keyed by variant,
+//! * [`engine`]    — the worker-side execution boundary + mock engine,
+//! * [`session`]   — the real PJRT engine (checkpoint loading, batched
+//!   score, lockstep batched decode),
+//! * [`server`]    — TCP accept loop, connection handlers, engine worker
+//!   pool,
+//! * [`telemetry`] — latency percentiles, batch occupancy, tokens/sec.
+//!
+//! Python never runs on this path: everything the server executes was
+//! AOT-lowered at build time, same as training.
+
+pub mod batcher;
+pub mod cache;
+pub mod engine;
+pub mod protocol;
+pub mod server;
+pub mod session;
+pub mod telemetry;
+
+pub use batcher::{Batch, DeadlineBatcher, KeyedBatcher};
+pub use cache::LruCache;
+pub use engine::{BatchEngine, BatchKey, EngineFactory, MockEngine};
+pub use protocol::{OpKind, Reply, Request};
+pub use server::{ServeCfg, Server, ServerHandle};
+pub use session::{ModelSession, PjrtEngine};
+pub use telemetry::ServeStats;

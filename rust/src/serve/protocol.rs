@@ -1,0 +1,206 @@
+//! Line-delimited JSON wire protocol for `repro serve`.
+//!
+//! One request per line, one response per line, ids echoed verbatim so
+//! clients may pipeline (responses can come back out of order across
+//! batches). Everything rides on [`crate::util::json`] — no external
+//! serialization dependency, matching the crate's substrate policy.
+//!
+//! ```text
+//! -> {"id":1,"op":"generate","prompt":"the cat","max_tokens":16,"temperature":0.7}
+//! <- {"id":1,"ok":true,"text":" sat on the mat","tokens_in":3,"tokens_out":5,...}
+//! -> {"id":2,"op":"score","text":"the cat sat"}
+//! <- {"id":2,"ok":true,"nll":9.31,"tokens":4,"ppl":10.25,...}
+//! -> {"id":3,"op":"stats"}          server telemetry snapshot
+//! -> {"id":4,"op":"shutdown"}       graceful stop (drains the queue)
+//! ```
+
+use crate::util::json::Json;
+
+/// Which engine path a request takes; part of the batch key, so generate
+/// and score traffic coalesce separately (they execute different
+/// programs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpKind {
+    Generate,
+    Score,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Generate => "generate",
+            OpKind::Score => "score",
+        }
+    }
+}
+
+/// A parsed model request (the batched ops; `stats`/`shutdown` are
+/// answered inline by the connection handler, see [`super::server`]).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// client correlation id, echoed verbatim (any JSON value)
+    pub id: Json,
+    pub kind: OpKind,
+    /// None = the server's default variant
+    pub variant: Option<String>,
+    /// prompt (generate) or full text to score
+    pub text: String,
+    pub max_tokens: usize,
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+/// Control ops handled outside the batch queue.
+#[derive(Debug, Clone)]
+pub enum Parsed {
+    Model(Request),
+    Stats(Json),
+    Shutdown(Json),
+}
+
+/// Per-request engine result, rendered into the response line.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    Generated { text: String, tokens_in: usize, tokens_out: usize },
+    Scored { nll: f64, tokens: f64, ppl: f64 },
+}
+
+pub fn parse_line(line: &str) -> Result<Parsed, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let id = j.get("id").cloned().unwrap_or(Json::Null);
+    let op = j
+        .get("op")
+        .and_then(|o| o.as_str())
+        .ok_or("missing 'op'")?;
+    let kind = match op {
+        "generate" => OpKind::Generate,
+        "score" => OpKind::Score,
+        "stats" => return Ok(Parsed::Stats(id)),
+        "shutdown" => return Ok(Parsed::Shutdown(id)),
+        other => return Err(format!("unknown op '{other}'")),
+    };
+    let text_key = match kind {
+        OpKind::Generate => "prompt",
+        OpKind::Score => "text",
+    };
+    let text = j
+        .get(text_key)
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| format!("{op}: missing '{text_key}'"))?
+        .to_string();
+    let max_tokens = j.get("max_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
+    if kind == OpKind::Generate && max_tokens == 0 {
+        return Err("generate: max_tokens must be >= 1".into());
+    }
+    Ok(Parsed::Model(Request {
+        id,
+        kind,
+        variant: j.get("variant").and_then(|v| v.as_str()).map(str::to_string),
+        text,
+        max_tokens,
+        temperature: j.get("temperature").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        seed: j.get("seed").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
+    }))
+}
+
+/// Extra per-response fields the server attaches (latency, batch size).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResponseMeta {
+    pub latency_ms: f64,
+    pub batch: usize,
+}
+
+pub fn render_reply(id: &Json, reply: &Reply, meta: ResponseMeta) -> String {
+    let mut pairs = vec![("id", id.clone()), ("ok", Json::Bool(true))];
+    match reply {
+        Reply::Generated { text, tokens_in, tokens_out } => {
+            pairs.push(("text", Json::str(text.clone())));
+            pairs.push(("tokens_in", Json::num(*tokens_in as f64)));
+            pairs.push(("tokens_out", Json::num(*tokens_out as f64)));
+        }
+        Reply::Scored { nll, tokens, ppl } => {
+            pairs.push(("nll", Json::num(*nll)));
+            pairs.push(("tokens", Json::num(*tokens)));
+            pairs.push(("ppl", Json::num(*ppl)));
+        }
+    }
+    pairs.push(("latency_ms", Json::num(meta.latency_ms)));
+    pairs.push(("batch", Json::num(meta.batch as f64)));
+    Json::obj(pairs).to_string()
+}
+
+pub fn render_error(id: &Json, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ])
+    .to_string()
+}
+
+pub fn render_ok(id: &Json, extra: Vec<(&str, Json)>) -> String {
+    let mut pairs = vec![("id", id.clone()), ("ok", Json::Bool(true))];
+    pairs.extend(extra);
+    Json::obj(pairs).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generate_with_defaults() {
+        let p = parse_line(r#"{"id":7,"op":"generate","prompt":"hi"}"#).unwrap();
+        let Parsed::Model(r) = p else { panic!("not a model op") };
+        assert_eq!(r.kind, OpKind::Generate);
+        assert_eq!(r.text, "hi");
+        assert_eq!(r.max_tokens, 32);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.seed, 0);
+        assert!(r.variant.is_none());
+        assert_eq!(r.id.as_usize(), Some(7));
+    }
+
+    #[test]
+    fn parses_score_and_control_ops() {
+        let p = parse_line(r#"{"op":"score","text":"abc","variant":"v1"}"#).unwrap();
+        let Parsed::Model(r) = p else { panic!() };
+        assert_eq!(r.kind, OpKind::Score);
+        assert_eq!(r.variant.as_deref(), Some("v1"));
+        assert!(matches!(parse_line(r#"{"op":"stats"}"#).unwrap(), Parsed::Stats(_)));
+        assert!(matches!(
+            parse_line(r#"{"id":"x","op":"shutdown"}"#).unwrap(),
+            Parsed::Shutdown(Json::Str(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse_line("not json").is_err());
+        assert!(parse_line(r#"{"id":1}"#).is_err());
+        assert!(parse_line(r#"{"op":"fly"}"#).is_err());
+        assert!(parse_line(r#"{"op":"generate"}"#).is_err());
+        assert!(parse_line(r#"{"op":"score","prompt":"wrong key"}"#).is_err());
+        assert!(parse_line(r#"{"op":"generate","prompt":"x","max_tokens":0}"#).is_err());
+    }
+
+    #[test]
+    fn responses_round_trip_and_echo_ids() {
+        let id = Json::str("req-1");
+        let line = render_reply(
+            &id,
+            &Reply::Scored { nll: 9.5, tokens: 4.0, ppl: 10.7 },
+            ResponseMeta { latency_ms: 1.5, batch: 3 },
+        );
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_str(), Some("req-1"));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("nll").unwrap().as_f64(), Some(9.5));
+        assert_eq!(j.get("batch").unwrap().as_usize(), Some(3));
+
+        let err = render_error(&Json::num(2.0), "nope");
+        let j = Json::parse(&err).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("nope"));
+    }
+}

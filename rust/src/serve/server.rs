@@ -1,0 +1,426 @@
+//! The `repro serve` TCP server: accept loop, connection handlers, and
+//! the engine worker pool that drains the request batcher.
+//!
+//! Thread shape (DESIGN.md §Serving):
+//!
+//! * one accept thread (spawned by [`Server::spawn`], joined through the
+//!   [`ServerHandle`]),
+//! * two threads per connection — a reader that parses NDJSON lines and
+//!   submits them, and a writer that drains that connection's response
+//!   channel (responses may complete out of order across batches),
+//! * `workers` engine threads, each owning its own engine instance (PJRT
+//!   wrapper types are `!Send`; same per-thread-client rule as
+//!   [`crate::coordinator::sched`]), all pulling from one shared
+//!   [`KeyedBatcher`] behind a `Mutex` + `Condvar`.
+//!
+//! Engine workers park on the batcher's next deadline, so an idle server
+//! costs nothing and a lone request is answered within `max_wait`. On
+//! shutdown the queue is drained with forced flushes before workers drop
+//! their engines together (PJRT client teardown must not race executes —
+//! the barrier mirrors the scheduler's).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Barrier, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::KeyedBatcher;
+use super::engine::{BatchKey, EngineFactory};
+use super::protocol::{self, Parsed, Request, ResponseMeta};
+use super::telemetry::ServeStats;
+use crate::train::MetricsLog;
+use crate::util::json::Json;
+
+/// Server knobs (CLI flags map 1:1; see `repro serve --help`).
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    pub addr: String,
+    /// coalesce up to this many requests per flush (the engine chunks
+    /// further down to each manifest's compiled batch size)
+    pub max_batch: usize,
+    /// how long a partial batch may wait for company
+    pub max_wait: Duration,
+    /// engine worker threads (each owns a PJRT client on the real path)
+    pub workers: usize,
+    /// requests with no explicit variant go here
+    pub default_variant: Option<String>,
+    /// tee per-batch telemetry rows to `results/<name>/metrics.jsonl`
+    pub metrics_name: Option<String>,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            addr: "127.0.0.1:7433".into(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(15),
+            workers: 1,
+            default_variant: None,
+            metrics_name: None,
+        }
+    }
+}
+
+/// One queued request: parsed payload + where/when to answer.
+struct Pending {
+    req: Request,
+    enqueued: Instant,
+    reply: mpsc::Sender<String>,
+}
+
+struct Shared {
+    queue: Mutex<KeyedBatcher<BatchKey, Pending>>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// workers whose engine factory succeeded (a failed worker only
+    /// error-drains the queue once no healthy sibling remains)
+    healthy: AtomicUsize,
+    stats: ServeStats,
+    metrics: Mutex<Option<MetricsLog>>,
+    cfg: ServeCfg,
+}
+
+impl Shared {
+    fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.wake.notify_all();
+    }
+}
+
+/// A running server; obtain via [`Server::spawn`], stop via `shutdown`
+/// op on the wire or [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Ask the server to stop and wait for it to drain.
+    pub fn shutdown(mut self) -> Json {
+        self.shared.request_shutdown();
+        Self::unblock_accept(self.addr);
+        self.join_threads();
+        self.shared.stats.snapshot()
+    }
+
+    /// Block until the server stops (a `shutdown` request arrived).
+    pub fn wait(mut self) -> Json {
+        self.join_threads();
+        self.shared.stats.snapshot()
+    }
+
+    fn join_threads(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(m) = self.shared.metrics.lock().unwrap().as_mut() {
+            m.flush();
+        }
+    }
+
+    /// The accept loop only re-checks the shutdown flag after a
+    /// connection; poke it with one.
+    fn unblock_accept(addr: SocketAddr) {
+        let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+    }
+}
+
+pub struct Server;
+
+impl Server {
+    /// Bind, start the worker pool and the accept thread, return
+    /// immediately. `factory` is invoked once per worker, inside that
+    /// worker's thread.
+    pub fn spawn(cfg: ServeCfg, factory: EngineFactory) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let metrics = match &cfg.metrics_name {
+            Some(name) => Some(MetricsLog::with_file(name)?),
+            None => None,
+        };
+        let n_workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(KeyedBatcher::new(cfg.max_batch, cfg.max_wait)),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            healthy: AtomicUsize::new(n_workers),
+            stats: ServeStats::new(),
+            metrics: Mutex::new(metrics),
+            cfg,
+        });
+
+        let teardown = Arc::new(Barrier::new(n_workers));
+        let workers = (0..n_workers)
+            .map(|wid| {
+                let shared = shared.clone();
+                let factory = factory.clone();
+                let teardown = teardown.clone();
+                std::thread::spawn(move || engine_worker(wid, shared, factory, teardown))
+            })
+            .collect();
+
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+
+        crate::info!("serve", "listening on {addr}");
+        Ok(ServerHandle { addr, shared, accept: Some(accept), workers })
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_connection(stream, shared) {
+                        crate::debug!("serve", "connection ended: {e:#}");
+                    }
+                });
+            }
+            Err(e) => {
+                // transient on Linux (ECONNABORTED from a reset backlog
+                // entry, EMFILE under fd pressure) — never fatal; back
+                // off briefly so an EMFILE storm doesn't spin the loop
+                crate::warn_!("serve", "accept error (continuing): {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    // however the loop ends, release the workers so joins terminate
+    shared.request_shutdown();
+}
+
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let peer = stream.peer_addr().ok();
+    crate::debug!("serve", "connection from {peer:?}");
+    let (tx, rx) = mpsc::channel::<String>();
+
+    // writer half: drains the response channel until every sender is gone
+    let writer_stream = stream.try_clone().context("cloning stream")?;
+    let writer = std::thread::spawn(move || {
+        let mut w = std::io::BufWriter::new(writer_stream);
+        while let Ok(line) = rx.recv() {
+            if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+                break; // client went away; drain silently
+            }
+        }
+    });
+
+    // reader half: parse, answer control ops inline, submit model ops
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break; // EOF
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match protocol::parse_line(trimmed) {
+            Err(e) => {
+                let _ = tx.send(protocol::render_error(&Json::Null, &e));
+                shared.stats.record_rejected();
+            }
+            Ok(Parsed::Stats(id)) => {
+                let _ = tx.send(protocol::render_ok(
+                    &id,
+                    vec![("stats", shared.stats.snapshot())],
+                ));
+            }
+            Ok(Parsed::Shutdown(id)) => {
+                let _ = tx.send(protocol::render_ok(&id, vec![]));
+                crate::info!("serve", "shutdown requested by {peer:?}");
+                shared.request_shutdown();
+                ServerHandle::unblock_accept(
+                    reader.get_ref().local_addr().context("local addr")?,
+                );
+                break;
+            }
+            Ok(Parsed::Model(req)) => {
+                let variant = req
+                    .variant
+                    .clone()
+                    .or_else(|| shared.cfg.default_variant.clone());
+                let Some(variant) = variant else {
+                    let _ = tx.send(protocol::render_error(
+                        &req.id,
+                        "no 'variant' given and the server has no default",
+                    ));
+                    shared.stats.record_rejected();
+                    continue;
+                };
+                let key = BatchKey { variant, kind: req.kind };
+                let pending =
+                    Pending { req, enqueued: Instant::now(), reply: tx.clone() };
+                let now = pending.enqueued;
+                // check the flag UNDER the queue lock: workers only exit
+                // after a force-drain under this lock with the flag set,
+                // so an accepted push is guaranteed a living worker
+                let rejected = {
+                    let mut q = shared.queue.lock().unwrap();
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        Some(pending)
+                    } else {
+                        q.push(key, pending, now);
+                        None
+                    }
+                };
+                match rejected {
+                    None => shared.wake.notify_one(),
+                    Some(p) => {
+                        let _ = p.reply.send(protocol::render_error(
+                            &p.req.id,
+                            "server is shutting down",
+                        ));
+                        shared.stats.record_rejected();
+                    }
+                }
+            }
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+fn engine_worker(
+    wid: usize,
+    shared: Arc<Shared>,
+    factory: EngineFactory,
+    teardown: Arc<Barrier>,
+) {
+    let mut engine = match factory() {
+        Ok(e) => e,
+        Err(e) => {
+            crate::warn_!("serve", "worker {wid}: engine init failed: {e:#}");
+            // only answer-with-errors when no healthy sibling remains;
+            // otherwise this worker would race healthy ones for traffic
+            if shared.healthy.fetch_sub(1, Ordering::SeqCst) == 1 {
+                drain_with_error(&shared, &format!("engine init failed: {e:#}"));
+            } else {
+                crate::warn_!("serve", "worker {wid} idle; healthy siblings keep serving");
+            }
+            teardown.wait();
+            return;
+        }
+    };
+    crate::debug!("serve", "worker {wid} ready");
+
+    loop {
+        // take a ready batch, or sleep until the next deadline / wakeup
+        let taken = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                let stopping = shared.shutdown.load(Ordering::SeqCst);
+                if let Some(kb) = q.take_ready(Instant::now(), stopping) {
+                    break Some(kb);
+                }
+                if stopping {
+                    break None; // queue fully drained
+                }
+                q = match q.next_deadline() {
+                    Some(d) => {
+                        let wait = d.saturating_duration_since(Instant::now());
+                        shared.wake.wait_timeout(q, wait).unwrap().0
+                    }
+                    None => shared.wake.wait(q).unwrap(),
+                };
+            }
+        };
+        let Some((key, batch)) = taken else { break };
+
+        let t0 = Instant::now();
+        let replies = engine.execute(&key, &batch.items);
+        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let wait_ms = batch.waited.as_secs_f64() * 1e3;
+        debug_assert_eq!(replies.len(), batch.items.len());
+
+        let done = Instant::now();
+        for (pending, reply) in batch.items.iter().zip(&replies) {
+            let latency_ms =
+                done.saturating_duration_since(pending.enqueued).as_secs_f64() * 1e3;
+            let meta = ResponseMeta { latency_ms, batch: batch.items.len() };
+            let (line, ok, tin, tout) = match reply {
+                Ok(r) => {
+                    let (tin, tout) = match r {
+                        protocol::Reply::Generated { tokens_in, tokens_out, .. } => {
+                            (*tokens_in as u64, *tokens_out as u64)
+                        }
+                        protocol::Reply::Scored { tokens, .. } => (*tokens as u64, 0),
+                    };
+                    (protocol::render_reply(&pending.req.id, r, meta), true, tin, tout)
+                }
+                Err(e) => {
+                    (protocol::render_error(&pending.req.id, &format!("{e:#}")), false, 0, 0)
+                }
+            };
+            let _ = pending.reply.send(line);
+            shared.stats.record_request(latency_ms, ok, tin, tout);
+        }
+        shared.stats.record_batch(batch.occupancy, wait_ms, exec_ms);
+        if let Some(m) = shared.metrics.lock().unwrap().as_mut() {
+            m.log_json(&ServeStats::batch_row(
+                &key.variant,
+                key.kind.name(),
+                batch.items.len(),
+                batch.occupancy,
+                wait_ms,
+                exec_ms,
+            ));
+        }
+    }
+
+    // drop engines together: PJRT client teardown races in-flight
+    // executes in sibling clients (see coordinator::sched)
+    teardown.wait();
+    crate::debug!("serve", "worker {wid} stopped");
+}
+
+fn drain_with_error(shared: &Shared, msg: &str) {
+    // a worker that can't build an engine still answers its share of the
+    // queue so clients aren't left hanging (single-worker servers have
+    // no healthy sibling to fall back to)
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            q.take_ready(Instant::now(), true)
+        };
+        let Some((_, batch)) = batch else {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            // wait for more work or shutdown
+            let q = shared.queue.lock().unwrap();
+            let (q, _) = shared
+                .wake
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            if q.is_empty() && shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            continue;
+        };
+        for p in &batch.items {
+            let _ = p.reply.send(protocol::render_error(&p.req.id, msg));
+            shared.stats.record_rejected();
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! The real serving engine: checkpoints + AOT programs through PJRT.
+//!
+//! A [`ModelSession`] is one hot model variant: its manifest, the
+//! header+params prefix of a trained checkpoint uploaded to the device
+//! *once* (a [`HostBuffer`], so the source literal outlives every execute
+//! that reads it — the lifetime rule from
+//! [`crate::runtime::client::HostBuffer`]), the shared eval program for
+//! `score`, and the `logits` decode program for `generate`. Sessions live
+//! in a per-worker [`super::cache::LruCache`] keyed by variant, so a
+//! server can keep several variants hot and fall back to
+//! load-on-first-request for the cold ones (DESIGN.md §Serving).
+//!
+//! Batched decode runs all generate requests of a batch in lockstep: one
+//! `logits` execute per decode step scores every sequence's next token at
+//! once; slots that finish early are masked out host-side. There is no KV
+//! cache — each step re-runs the full forward, which is the honest
+//! CPU-testbed trade recorded in docs/adr/001-serve-batching.md.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::cache::LruCache;
+use super::engine::{BatchEngine, BatchKey};
+use super::protocol::{OpKind, Reply, Request};
+use crate::data::bpe::{Bpe, BOS};
+use crate::eval::Evaluator;
+use crate::runtime::{client, ArtifactIndex, HostBuffer, Manifest, Program, Runtime};
+use crate::train::checkpoint;
+use crate::util::rng::Pcg64;
+
+/// One hot (variant, checkpoint) pair.
+pub struct ModelSession {
+    pub manifest: Manifest,
+    prefix_buf: HostBuffer,
+    ev: Evaluator,
+    gen: Option<Arc<Program>>,
+}
+
+impl ModelSession {
+    pub fn load(
+        rt: &Runtime,
+        idx: &ArtifactIndex,
+        variant: &str,
+        ckpt: &std::path::Path,
+    ) -> Result<ModelSession> {
+        let manifest = idx.manifest(variant)?;
+        let (ck_variant, state) = checkpoint::load(ckpt)
+            .with_context(|| format!("loading checkpoint {}", ckpt.display()))?;
+        anyhow::ensure!(
+            ck_variant == variant,
+            "checkpoint {} is for '{ck_variant}', expected '{variant}'",
+            ckpt.display()
+        );
+        anyhow::ensure!(
+            state.len() == manifest.state_len,
+            "checkpoint state length {} != manifest {}",
+            state.len(),
+            manifest.state_len
+        );
+        let prefix_buf = rt.upload_f32(&state[..manifest.params_end])?;
+        let ev = Evaluator::new(rt, idx, &manifest)?;
+        let gen_path = idx.gen_path(&manifest.eval_key);
+        let gen = if gen_path.exists() {
+            Some(rt.load_program(&gen_path)?)
+        } else {
+            crate::warn_!(
+                "serve",
+                "{variant}: no decode program at {} (artifacts predate `repro serve`; \
+                 re-run `make artifacts` to enable generate)",
+                gen_path.display()
+            );
+            None
+        };
+        Ok(ModelSession { manifest, prefix_buf, ev, gen })
+    }
+
+    /// Score a chunk (<= manifest.batch requests): one eval execute.
+    /// Returns one reply per request, in order.
+    fn score_chunk(
+        &self,
+        bpe: &Bpe,
+        chunk: &[Request],
+    ) -> Result<Vec<Result<Reply>>> {
+        let b = self.manifest.batch;
+        let w = self.manifest.seq_len + 1;
+        debug_assert!(chunk.len() <= b);
+        let mut tokens = vec![0i32; b * w];
+        let mut spans = vec![0i32; b * 2];
+        for (i, req) in chunk.iter().enumerate() {
+            let mut ids = vec![BOS];
+            ids.extend(bpe.encode(&req.text));
+            ids.truncate(w);
+            tokens[i * w..i * w + ids.len()].copy_from_slice(&ids);
+            spans[i * 2] = 0;
+            spans[i * 2 + 1] = ids.len() as i32;
+        }
+        let (_, _, nll, cnt) =
+            self.ev.score_batch_buffers(self.prefix_buf.buffer(), &tokens, &spans)?;
+        Ok(chunk
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let (n, c) = (nll[i] as f64, cnt[i] as f64);
+                if c < 1.0 {
+                    Err(anyhow!("text too short to score (needs >= 1 token)"))
+                } else {
+                    Ok(Reply::Scored { nll: n, tokens: c, ppl: (n / c).exp() })
+                }
+            })
+            .collect())
+    }
+
+    /// Generate for a chunk (<= manifest.batch requests) in lockstep:
+    /// each decode step is ONE `logits` execute covering every active
+    /// slot, then host-side sampling per slot.
+    fn generate_chunk(
+        &self,
+        rt: &Runtime,
+        bpe: &Bpe,
+        chunk: &[Request],
+    ) -> Result<Vec<Result<Reply>>> {
+        let gen = self.gen.as_ref().ok_or_else(|| {
+            anyhow!("variant has no decode program; re-run `make artifacts`")
+        })?;
+        let b = self.manifest.batch;
+        let t = self.manifest.seq_len;
+        let v = self.manifest.vocab;
+        debug_assert!(chunk.len() <= b);
+
+        // per-slot decode state: left-aligned window, PAD tail
+        let mut tokens = vec![0i32; b * t];
+        let mut lens = vec![0usize; chunk.len()];
+        let mut prompt_lens = vec![0usize; chunk.len()];
+        let mut budgets = vec![0usize; chunk.len()];
+        let mut done = vec![false; chunk.len()];
+        let mut rngs: Vec<Pcg64> = Vec::with_capacity(chunk.len());
+        for (i, req) in chunk.iter().enumerate() {
+            let mut ids = vec![BOS];
+            ids.extend(bpe.encode(&req.text));
+            // conditioning beats budget: keep the prompt whole when it
+            // fits (tail-truncate only past the window, always leaving
+            // one slot to generate) and shrink the budget instead —
+            // tokens_out < max_tokens is the visible exhaustion signal
+            if ids.len() > t - 1 {
+                ids.drain(..ids.len() - (t - 1));
+            }
+            let budget = req.max_tokens.min(t - ids.len()).max(1);
+            tokens[i * t..i * t + ids.len()].copy_from_slice(&ids);
+            lens[i] = ids.len();
+            prompt_lens[i] = ids.len();
+            budgets[i] = budget;
+            // seeded per request only — identical (prompt, seed,
+            // temperature) must reproduce regardless of what traffic
+            // happened to coalesce into the same batch
+            rngs.push(Pcg64::new(req.seed));
+        }
+
+        while !done.iter().all(|&d| d) {
+            let pos: Vec<i32> = (0..b)
+                .map(|i| {
+                    if i < chunk.len() && !done[i] {
+                        (lens[i] - 1) as i32
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let tok_buf = rt.upload_literal(&client::tokens_literal(
+                &tokens,
+                b,
+                t,
+            )?)?;
+            let pos_buf = rt.upload_literal(&xla::Literal::vec1(&pos))?;
+            let out =
+                gen.run_buffers(&[self.prefix_buf.buffer(), &tok_buf, &pos_buf])?;
+            let logits = rt.download_f32(&out)?;
+            anyhow::ensure!(logits.len() == b * v, "logits length {}", logits.len());
+
+            for i in 0..chunk.len() {
+                if done[i] {
+                    continue;
+                }
+                let row = &logits[i * v..(i + 1) * v];
+                let tok = sample(row, chunk[i].temperature, &mut rngs[i]) as i32;
+                if tok == BOS {
+                    done[i] = true; // document boundary = natural stop
+                    continue;
+                }
+                tokens[i * t + lens[i]] = tok;
+                lens[i] += 1;
+                if lens[i] - prompt_lens[i] >= budgets[i] || lens[i] >= t {
+                    done[i] = true;
+                }
+            }
+        }
+
+        Ok(chunk
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let new = &tokens[i * t + prompt_lens[i]..i * t + lens[i]];
+                Ok(Reply::Generated {
+                    text: bpe.decode(new),
+                    tokens_in: prompt_lens[i],
+                    tokens_out: new.len(),
+                })
+            })
+            .collect())
+    }
+}
+
+/// Greedy for temperature <= 0, otherwise softmax sampling at the given
+/// temperature (numerically stabilized against the row max).
+fn sample(logits: &[f32], temperature: f64, rng: &mut Pcg64) -> usize {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if temperature <= 0.0 {
+        return logits
+            .iter()
+            .position(|&l| l == max)
+            .unwrap_or(0);
+    }
+    let inv_t = 1.0 / temperature;
+    let weights: Vec<f64> =
+        logits.iter().map(|&l| (((l - max) as f64) * inv_t).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.next_f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// The production engine: per-worker PJRT runtime + LRU of hot sessions.
+pub struct PjrtEngine {
+    rt: Runtime,
+    idx: ArtifactIndex,
+    bpe: Arc<Bpe>,
+    /// variant -> checkpoint registered at startup
+    ckpts: BTreeMap<String, PathBuf>,
+    sessions: LruCache<String, ModelSession>,
+}
+
+impl PjrtEngine {
+    pub fn new(
+        idx: ArtifactIndex,
+        bpe: Arc<Bpe>,
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+    ) -> Result<PjrtEngine> {
+        anyhow::ensure!(!ckpts.is_empty(), "serve: no checkpoints registered");
+        Ok(PjrtEngine {
+            rt: Runtime::shared()?,
+            idx,
+            bpe,
+            ckpts,
+            sessions: LruCache::new(cache_cap),
+        })
+    }
+
+    /// The one way launchers should build a real serving factory: trains
+    /// the tokenizer ONCE (shared across workers) with the same
+    /// `400.min(docs)`-document sample `exp::Ctx::new` uses, so served
+    /// token ids line up with checkpoints trained at the same `--docs`.
+    pub fn factory(
+        idx: ArtifactIndex,
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+        docs: u64,
+    ) -> super::engine::EngineFactory {
+        crate::info!("serve", "training BPE tokenizer (vocab {})...", crate::exp::VOCAB);
+        let corpus = crate::data::corpus::Corpus::new(Default::default());
+        let bpe = Arc::new(Bpe::train(
+            &corpus.text_range(1, 400.min(docs.max(1))),
+            crate::exp::VOCAB,
+        ));
+        Arc::new(move || {
+            Ok(Box::new(PjrtEngine::new(
+                idx.clone(),
+                bpe.clone(),
+                ckpts.clone(),
+                cache_cap,
+            )?) as Box<dyn BatchEngine>)
+        })
+    }
+
+    fn chunked(
+        &mut self,
+        variant: &str,
+        kind: OpKind,
+        batch: &[Request],
+    ) -> Result<Vec<Result<Reply>>> {
+        let ckpt = self
+            .ckpts
+            .get(variant)
+            .ok_or_else(|| anyhow!("variant '{variant}' not registered (see --ckpt)"))?
+            .clone();
+        let (rt, idx, bpe) = (self.rt.clone(), &self.idx, self.bpe.clone());
+        let session = self
+            .sessions
+            .get_or_try_insert(&variant.to_string(), || {
+                crate::info!("serve", "loading session {variant} from {}", ckpt.display());
+                ModelSession::load(&rt, idx, variant, &ckpt)
+            })?;
+        let b = session.manifest.batch;
+        let mut out = Vec::with_capacity(batch.len());
+        for chunk in batch.chunks(b) {
+            let replies = match kind {
+                OpKind::Score => session.score_chunk(&bpe, chunk)?,
+                OpKind::Generate => session.generate_chunk(&rt, &bpe, chunk)?,
+            };
+            out.extend(replies);
+        }
+        Ok(out)
+    }
+}
+
+impl BatchEngine for PjrtEngine {
+    fn execute(&mut self, key: &BatchKey, batch: &[Request]) -> Vec<Result<Reply>> {
+        match self.chunked(&key.variant, key.kind, batch) {
+            Ok(replies) => replies,
+            // batch-level failures (bad variant, PJRT error) fan out to
+            // every request; anyhow errors aren't Clone, so re-render
+            Err(e) => batch.iter().map(|_| Err(anyhow!("{e:#}"))).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_greedy_and_tempered() {
+        let logits = [0.0f32, 3.0, 1.0];
+        let mut rng = Pcg64::new(7);
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+        assert_eq!(sample(&logits, -1.0, &mut rng), 1);
+        // high temperature: all outcomes reachable, distribution sane
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[sample(&logits, 2.0, &mut rng)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert!(counts[1] > counts[0] && counts[1] > counts[2], "{counts:?}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..50).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let a: Vec<usize> = {
+            let mut rng = Pcg64::new(9);
+            (0..20).map(|_| sample(&logits, 0.8, &mut rng)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut rng = Pcg64::new(9);
+            (0..20).map(|_| sample(&logits, 0.8, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,214 @@
+//! Serving telemetry: request latency percentiles, batch occupancy and
+//! token throughput, shared across connection and engine threads.
+//!
+//! Aggregation rides on [`crate::util::stats`] (Welford means, quantile
+//! with interpolation); per-batch rows optionally tee to a
+//! [`crate::train::MetricsLog`] JSONL sink under `results/`, the same
+//! place train runs log, so one toolchain plots both.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::{quantile, OnlineStats};
+
+/// Ring capacity for latency samples: enough for stable p99 estimates,
+/// bounded so a long-lived server never grows.
+const LATENCY_RING: usize = 4096;
+
+#[derive(Default)]
+struct Inner {
+    latencies_ms: Vec<f64>,
+    latency_next: usize,
+    occupancy: OnlineStats,
+    wait_ms: OnlineStats,
+    exec_ms: OnlineStats,
+    requests: u64,
+    errors: u64,
+    batches: u64,
+    tokens_in: u64,
+    tokens_out: u64,
+}
+
+/// Thread-shared collector. All methods take `&self`; the lock is
+/// private so callers can't deadlock it across an execute.
+pub struct ServeStats {
+    inner: Mutex<Inner>,
+    t0: Instant,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats { inner: Mutex::new(Inner::default()), t0: Instant::now() }
+    }
+
+    /// One flushed batch: occupancy in (0,1], queue wait, execute time.
+    pub fn record_batch(&self, occupancy: f64, wait_ms: f64, exec_ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.occupancy.push(occupancy);
+        g.wait_ms.push(wait_ms);
+        g.exec_ms.push(exec_ms);
+    }
+
+    /// A request answered without reaching an engine (parse error,
+    /// unknown variant, shutdown race): counted, but contributes NO
+    /// latency sample — fabricated 0 ms entries would drag the
+    /// percentiles toward a healthier-looking server.
+    pub fn record_rejected(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.errors += 1;
+    }
+
+    /// One finished request (end-to-end latency, enqueue -> response).
+    pub fn record_request(&self, latency_ms: f64, ok: bool, tokens_in: u64, tokens_out: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        if !ok {
+            g.errors += 1;
+        }
+        g.tokens_in += tokens_in;
+        g.tokens_out += tokens_out;
+        if g.latencies_ms.len() < LATENCY_RING {
+            g.latencies_ms.push(latency_ms);
+        } else {
+            let i = g.latency_next;
+            g.latencies_ms[i % LATENCY_RING] = latency_ms;
+        }
+        g.latency_next += 1;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    /// Snapshot for the `stats` op and final server report.
+    pub fn snapshot(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let uptime = self.t0.elapsed().as_secs_f64();
+        let (p50, p90, p99) = if g.latencies_ms.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                quantile(&g.latencies_ms, 0.50),
+                quantile(&g.latencies_ms, 0.90),
+                quantile(&g.latencies_ms, 0.99),
+            )
+        };
+        Json::obj(vec![
+            ("uptime_s", Json::num(uptime)),
+            ("requests", Json::num(g.requests as f64)),
+            ("errors", Json::num(g.errors as f64)),
+            ("batches", Json::num(g.batches as f64)),
+            ("latency_p50_ms", Json::num(p50)),
+            ("latency_p90_ms", Json::num(p90)),
+            ("latency_p99_ms", Json::num(p99)),
+            ("batch_occupancy_mean", Json::num(zero_if_nan(g.occupancy.mean()))),
+            ("batch_wait_ms_mean", Json::num(zero_if_nan(g.wait_ms.mean()))),
+            ("batch_exec_ms_mean", Json::num(zero_if_nan(g.exec_ms.mean()))),
+            ("tokens_in", Json::num(g.tokens_in as f64)),
+            ("tokens_out", Json::num(g.tokens_out as f64)),
+            (
+                "tokens_per_s",
+                Json::num((g.tokens_in + g.tokens_out) as f64 / uptime.max(1e-9)),
+            ),
+            (
+                "requests_per_s",
+                Json::num(g.requests as f64 / uptime.max(1e-9)),
+            ),
+        ])
+    }
+
+    /// Per-batch JSONL row for the metrics sink.
+    pub fn batch_row(
+        variant: &str,
+        op: &str,
+        batch: usize,
+        occupancy: f64,
+        wait_ms: f64,
+        exec_ms: f64,
+    ) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("op", Json::str(op)),
+            ("batch", Json::num(batch as f64)),
+            ("occupancy", Json::num(occupancy)),
+            ("wait_ms", Json::num(wait_ms)),
+            ("exec_ms", Json::num(exec_ms)),
+        ])
+    }
+}
+
+fn zero_if_nan(x: f64) -> f64 {
+    if x.is_nan() {
+        0.0
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_well_formed() {
+        let s = ServeStats::new();
+        let j = s.snapshot();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("latency_p99_ms").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("batch_occupancy_mean").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn percentiles_and_counters_accumulate() {
+        let s = ServeStats::new();
+        for i in 1..=100 {
+            s.record_request(i as f64, i % 10 != 0, 2, 3);
+        }
+        s.record_batch(0.5, 4.0, 8.0);
+        s.record_batch(1.0, 0.0, 8.0);
+        let j = s.snapshot();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(100.0));
+        assert_eq!(j.get("errors").unwrap().as_f64(), Some(10.0));
+        assert_eq!(j.get("tokens_out").unwrap().as_f64(), Some(300.0));
+        let p50 = j.get("latency_p50_ms").unwrap().as_f64().unwrap();
+        let p99 = j.get("latency_p99_ms").unwrap().as_f64().unwrap();
+        assert!((p50 - 50.5).abs() < 1.0, "{p50}");
+        assert!(p99 > 98.0 && p99 <= 100.0, "{p99}");
+        assert_eq!(j.get("batch_occupancy_mean").unwrap().as_f64(), Some(0.75));
+    }
+
+    #[test]
+    fn rejections_count_but_do_not_pollute_latency() {
+        let s = ServeStats::new();
+        s.record_request(10.0, true, 1, 1);
+        for _ in 0..50 {
+            s.record_rejected();
+        }
+        let j = s.snapshot();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(51.0));
+        assert_eq!(j.get("errors").unwrap().as_f64(), Some(50.0));
+        // the lone real sample defines the percentiles; rejections don't
+        assert_eq!(j.get("latency_p50_ms").unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn latency_ring_is_bounded() {
+        let s = ServeStats::new();
+        for i in 0..(LATENCY_RING + 100) {
+            s.record_request(i as f64, true, 0, 0);
+        }
+        let g = s.inner.lock().unwrap();
+        assert_eq!(g.latencies_ms.len(), LATENCY_RING);
+        // newest samples overwrote the oldest slots
+        assert_eq!(g.latencies_ms[0], LATENCY_RING as f64);
+    }
+}

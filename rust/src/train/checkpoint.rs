@@ -33,10 +33,9 @@ pub fn save(path: &Path, variant: &str, state: &[f32]) -> Result<()> {
     Ok(())
 }
 
-pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
-    let mut r = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
-    );
+/// Parse the fixed header (magic + variant name); shared by `load` and
+/// `peek_variant` so a format change can't drift between them.
+fn read_header(r: &mut impl Read) -> Result<String> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -50,7 +49,14 @@ pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
     }
     let mut name = vec![0u8; name_len];
     r.read_exact(&mut name)?;
-    let variant = String::from_utf8(name).context("variant name utf-8")?;
+    String::from_utf8(name).context("variant name utf-8")
+}
+
+pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let variant = read_header(&mut r)?;
     let mut u64b = [0u8; 8];
     r.read_exact(&mut u64b)?;
     let n = u64::from_le_bytes(u64b) as usize;
@@ -67,6 +73,16 @@ pub fn load(path: &Path) -> Result<(String, Vec<f32>)> {
         return Err(anyhow!("checkpoint corrupt: crc mismatch"));
     }
     Ok((variant, state))
+}
+
+/// Read just the variant name from a checkpoint header — the serve
+/// launcher maps `--ckpt` files to variants without pulling whole state
+/// vectors into memory at startup.
+pub fn peek_variant(path: &Path) -> Result<String> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    read_header(&mut r)
 }
 
 /// CRC-64/XZ, bitwise (checkpoints are not huge; simplicity wins).
@@ -121,6 +137,15 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         assert!(load(&p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn peek_reads_variant_without_state() {
+        let p = tmp("peek");
+        save(&p, "fact-s-spectron", &[0.5; 64]).unwrap();
+        assert_eq!(peek_variant(&p).unwrap(), "fact-s-spectron");
+        std::fs::remove_file(&p).ok();
+        assert!(peek_variant(&p).is_err());
     }
 
     #[test]

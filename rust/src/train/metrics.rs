@@ -76,6 +76,15 @@ impl MetricsLog {
         self.losses.extend(ring);
     }
 
+    /// Tee an arbitrary JSON row to the sink (no in-memory record). The
+    /// serve telemetry logs per-batch rows this way so serving and
+    /// training share one `results/<run>/metrics.jsonl` toolchain.
+    pub fn log_json(&mut self, row: &Json) {
+        if let Some(sink) = &mut self.sink {
+            let _ = writeln!(sink, "{row}");
+        }
+    }
+
     pub fn flush(&mut self) {
         if let Some(s) = &mut self.sink {
             let _ = s.flush();
@@ -136,6 +145,13 @@ mod tests {
         let sm = m.smoothed_losses(10);
         let spread = sm[20..].iter().map(|&(_, l)| (l - 3.0).abs()).fold(0.0, f64::max);
         assert!(spread < 0.1, "{spread}");
+    }
+
+    #[test]
+    fn log_json_without_sink_is_a_noop() {
+        let mut m = MetricsLog::in_memory("t");
+        m.log_json(&Json::obj(vec![("op", Json::str("generate"))]));
+        assert!(m.records.is_empty() && m.losses.is_empty());
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! End-to-end serve tests: a fake NDJSON client over a localhost socket
+//! against a server running the mock engine (no artifacts required), plus
+//! a PJRT-backed smoke test that only runs when artifacts are built.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use spectron::serve::{BatchEngine, MockEngine, ServeCfg, Server, ServerHandle};
+use spectron::util::json::Json;
+
+/// A line-oriented test client with a read timeout so a server bug fails
+/// the test instead of hanging it.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .expect("read timeout");
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone")),
+            writer: stream,
+        }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim()).expect("response is json")
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn mock_server(
+    max_batch: usize,
+    max_wait: Duration,
+) -> (ServerHandle, Arc<Mutex<Vec<usize>>>) {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(), // ephemeral port: tests never collide
+        max_batch,
+        max_wait,
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+    };
+    let handle = Server::spawn(cfg, MockEngine::factory(Duration::ZERO, seen.clone()))
+        .expect("spawn server");
+    (handle, seen)
+}
+
+#[test]
+fn roundtrip_generate_score_and_errors() {
+    let (handle, _) = mock_server(4, Duration::from_millis(5));
+    let mut c = Client::connect(handle.addr);
+
+    let r = c.roundtrip(r#"{"id":1,"op":"generate","prompt":"a b c","max_tokens":5}"#);
+    assert_eq!(r.get("id").unwrap().as_usize(), Some(1));
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("text").unwrap().as_str(), Some("a b c a b"));
+    assert_eq!(r.get("tokens_out").unwrap().as_usize(), Some(5));
+    assert!(r.get("latency_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+    let r = c.roundtrip(r#"{"id":2,"op":"score","text":"one two three"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("nll").unwrap().as_f64(), Some(3.0));
+    assert_eq!(r.get("tokens").unwrap().as_f64(), Some(3.0));
+
+    // malformed line: error response, connection stays usable
+    let r = c.roundtrip("this is not json");
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    let r = c.roundtrip(r#"{"id":3,"op":"fly"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("unknown op"));
+
+    let r = c.roundtrip(r#"{"id":4,"op":"score","text":"still works"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+
+    handle.shutdown();
+}
+
+#[test]
+fn pipelined_requests_coalesce_into_batches() {
+    // generous deadline so the flush trigger must be the full batch
+    let (handle, seen) = mock_server(4, Duration::from_millis(500));
+    let mut c = Client::connect(handle.addr);
+
+    for i in 0..8 {
+        c.send(&format!(r#"{{"id":{i},"op":"score","text":"w{i}"}}"#));
+    }
+    let mut got = HashMap::new();
+    for _ in 0..8 {
+        let r = c.recv();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        got.insert(
+            r.get("id").unwrap().as_usize().unwrap(),
+            r.get("batch").unwrap().as_usize().unwrap(),
+        );
+    }
+    assert_eq!(got.len(), 8, "every id answered exactly once");
+    let batches = seen.lock().unwrap().clone();
+    assert_eq!(batches.iter().sum::<usize>(), 8);
+    assert!(
+        batches.iter().any(|&b| b == 4),
+        "expected at least one full batch, saw {batches:?}"
+    );
+
+    handle.shutdown();
+}
+
+#[test]
+fn lone_request_is_flushed_by_the_deadline() {
+    let (handle, seen) = mock_server(8, Duration::from_millis(20));
+    let mut c = Client::connect(handle.addr);
+    let t0 = std::time::Instant::now();
+    let r = c.roundtrip(r#"{"id":1,"op":"score","text":"solo"}"#);
+    let elapsed = t0.elapsed();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("batch").unwrap().as_usize(), Some(1));
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "deadline flush too slow: {elapsed:?}"
+    );
+    assert_eq!(*seen.lock().unwrap(), vec![1]);
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_connections_share_batches() {
+    let (handle, seen) = mock_server(4, Duration::from_millis(100));
+    let addr = handle.addr;
+    let threads: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let r = c.roundtrip(&format!(
+                    r#"{{"id":{i},"op":"generate","prompt":"client {i}","max_tokens":3}}"#
+                ));
+                assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+                r.get("batch").unwrap().as_usize().unwrap()
+            })
+        })
+        .collect();
+    let sizes: Vec<usize> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    assert_eq!(sizes.len(), 4);
+    let batches = seen.lock().unwrap().clone();
+    assert_eq!(batches.iter().sum::<usize>(), 4);
+    assert!(
+        batches.len() < 4 || sizes.iter().any(|&s| s > 1),
+        "four concurrent requests should share at least one batch: {batches:?}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn stats_and_wire_shutdown() {
+    let (handle, _) = mock_server(4, Duration::from_millis(5));
+    let mut c = Client::connect(handle.addr);
+    for i in 0..3 {
+        c.roundtrip(&format!(r#"{{"id":{i},"op":"score","text":"x"}}"#));
+    }
+    let r = c.roundtrip(r#"{"id":9,"op":"stats"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let stats = r.get("stats").unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize(), Some(3));
+    assert_eq!(stats.get("errors").unwrap().as_usize(), Some(0));
+    assert!(stats.get("latency_p50_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(stats.get("batch_occupancy_mean").unwrap().as_f64().unwrap() > 0.0);
+
+    // graceful stop over the wire: handle.wait() must return
+    let r = c.roundtrip(r#"{"id":10,"op":"shutdown"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let final_stats = handle.wait();
+    assert_eq!(final_stats.get("requests").unwrap().as_usize(), Some(3));
+}
+
+#[test]
+fn engine_init_failure_answers_instead_of_hanging() {
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 2,
+        max_wait: Duration::from_millis(5),
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+    };
+    let factory: spectron::serve::EngineFactory =
+        Arc::new(|| anyhow::bail!("no engine for you"));
+    let handle = Server::spawn(cfg, factory).expect("spawn");
+    let mut c = Client::connect(handle.addr);
+    let r = c.roundtrip(r#"{"id":1,"op":"score","text":"x"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("engine init failed"));
+    handle.shutdown();
+}
+
+/// Real-engine smoke test; runs only with built artifacts (same gating
+/// as the train-loop integration suite).
+#[test]
+fn pjrt_engine_scores_over_the_wire() {
+    use spectron::config::{Registry, RunCfg};
+    use spectron::runtime::{ArtifactIndex, Runtime};
+    use spectron::train::{checkpoint, Trainer};
+
+    let root = ArtifactIndex::default_root();
+    if !root.join("index.json").exists() {
+        eprintln!("skipping serve PJRT test: run `make artifacts` first");
+        return;
+    }
+    let idx = ArtifactIndex::load(&root).unwrap();
+    let reg = Registry::load().unwrap();
+    let rt = Runtime::shared().unwrap();
+    let variant = "fact-z0-spectron";
+    let v = reg.variant(variant).unwrap();
+
+    // a fresh init state is a perfectly valid (if untrained) checkpoint
+    let mut trainer = Trainer::new(&rt, &idx, v, RunCfg::default()).unwrap();
+    let ckpt = std::env::temp_dir().join(format!(
+        "spectron-serve-test-{}.ckpt",
+        std::process::id()
+    ));
+    checkpoint::save(&ckpt, variant, &trainer.state_vec().unwrap()).unwrap();
+
+    let corpus = spectron::data::corpus::Corpus::new(Default::default());
+    let bpe = Arc::new(spectron::data::bpe::Bpe::train(
+        &corpus.text_range(1, 60),
+        v.model.vocab,
+    ));
+    let mut ckpts = std::collections::BTreeMap::new();
+    ckpts.insert(variant.to_string(), ckpt.clone());
+    let factory: spectron::serve::EngineFactory = {
+        let idx = idx.clone();
+        Arc::new(move || {
+            Ok(Box::new(
+                spectron::serve::PjrtEngine::new(idx.clone(), bpe.clone(), ckpts.clone(), 2)?,
+            ) as Box<dyn BatchEngine>)
+        })
+    };
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        max_wait: Duration::from_millis(10),
+        workers: 1,
+        default_variant: Some(variant.to_string()),
+        metrics_name: None,
+    };
+    let handle = Server::spawn(cfg, factory).expect("spawn");
+    let mut c = Client::connect(handle.addr);
+
+    let r = c.roundtrip(r#"{"id":1,"op":"score","text":"the cat sat on the mat"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    let nll = r.get("nll").unwrap().as_f64().unwrap();
+    let tokens = r.get("tokens").unwrap().as_f64().unwrap();
+    assert!(tokens >= 1.0);
+    // an untrained model scores near uniform: nll/token ~ ln(vocab)
+    let per_token = nll / tokens;
+    assert!(
+        per_token > 2.0 && per_token < (v.model.vocab as f64).ln() + 2.0,
+        "per-token nll {per_token}"
+    );
+
+    // generate needs the logits program; older artifact trees lack it,
+    // in which case the server must answer with a clean error
+    let r = c.roundtrip(r#"{"id":2,"op":"generate","prompt":"the cat","max_tokens":4}"#);
+    if r.get("ok") == Some(&Json::Bool(true)) {
+        assert!(r.get("tokens_out").unwrap().as_usize().unwrap() <= 4);
+    } else {
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("decode program"));
+    }
+
+    c.roundtrip(r#"{"id":3,"op":"shutdown"}"#);
+    handle.wait();
+    std::fs::remove_file(&ckpt).ok();
+}

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Verify every `DESIGN.md §X` citation in the source tree resolves to a
+# real `## X` heading in DESIGN.md (run by `make docs`). Section names
+# start with a capitalized word; following lowercase words belong to the
+# name ("Experiment index"); any punctuation ends it.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+pattern='DESIGN\.md §[A-Z][A-Za-z0-9_-]*( [a-z][A-Za-z0-9_-]*)*'
+bad=0
+count=0
+while IFS=: read -r file line match; do
+    [ -n "$match" ] || continue
+    section=${match#DESIGN.md §}
+    count=$((count + 1))
+    if ! grep -qxF "## $section" DESIGN.md; then
+        echo "BROKEN: $file:$line cites 'DESIGN.md §$section' but DESIGN.md has no '## $section' heading" >&2
+        bad=1
+    fi
+done < <(grep -rnoE "$pattern" rust python examples 2>/dev/null || true)
+
+if [ "$count" -eq 0 ]; then
+    echo "check_design_refs: found no citations — pattern drift?" >&2
+    exit 1
+fi
+if [ "$bad" -ne 0 ]; then
+    exit 1
+fi
+echo "check_design_refs: $count citations OK"
