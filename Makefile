@@ -21,8 +21,17 @@ docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	bash tools/check_design_refs.sh
 
+# Benchmarks; the hot-path suites also emit machine-readable JSON
+# (BENCH_JSON=path, see rust/src/util/bench.rs) so the committed latency
+# trajectory is diffable. NOTE: suites are listed explicitly so the two
+# JSON emitters get distinct BENCH_JSON paths — a new [[bench]] in
+# Cargo.toml must be added here too or `make bench` silently skips it.
 bench:
-	cargo bench
+	BENCH_JSON=BENCH_step_latency.json cargo bench --bench step_latency
+	BENCH_JSON=BENCH_data_pipeline.json cargo bench --bench data_pipeline
+	cargo bench --bench runtime_io
+	cargo bench --bench scaling_fits
+	cargo bench --bench serve_latency
 
 serve-bench:
 	cargo run --release --example serve_bench

@@ -3,10 +3,23 @@
 //! outrun the trainer (hundreds of ms/step) — these benches verify the
 //! margin and catch regressions.
 
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
 use spectron::data::bpe::Bpe;
 use spectron::data::corpus::{Corpus, CorpusCfg};
-use spectron::data::dataset::{Dataset, Split};
-use spectron::util::bench::{header, Bench};
+use spectron::data::dataset::{BatchSource, Dataset, Split};
+use spectron::data::prefetch::Prefetcher;
+use spectron::util::bench::{self, header, Bench};
+
+/// Busy-wait stand-in for a device step: `sleep` granularity is far too
+/// coarse for the µs-scale windows the pipeline hides work behind.
+fn spin(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
 
 fn main() {
     header("synthetic corpus generation");
@@ -36,7 +49,7 @@ fn main() {
     Bench::new("pack 1000 documents (vocab 1024, seq 128)")
         .iters(3)
         .run(|| Dataset::build_with(&corpus, &bpe, 1000, 128));
-    let ds = Dataset::build_with(&corpus, &bpe, 1000, 128);
+    let ds = Arc::new(Dataset::build_with(&corpus, &bpe, 1000, 128));
     let mut it = ds.batches(Split::Train, 8, 0);
     let r = Bench::new("draw batch (8 x 129)").iters(50).run(|| it.next_batch());
     println!(
@@ -44,4 +57,29 @@ fn main() {
         8.0 * 129.0 / r.mean_s / 1e3,
         (0.150 / r.mean_s) as u64
     );
+    let mut buf = Vec::new();
+    Bench::new("draw batch (8 x 129, reused buffer)")
+        .iters(50)
+        .run(|| it.next_batch_into(&mut buf));
+
+    // pipelined vs synchronous draw under a simulated device step: the
+    // sync path pays pack + step serially, the prefetched path hides the
+    // pack (a 64 x 129 batch, so the pack cost is visible) behind it
+    header("batch pipeline under a 30 µs consumer step");
+    let step = Duration::from_micros(30);
+    let mut sync_it = ds.batches(Split::Train, 64, 0);
+    Bench::new("pack+step (synchronous)").iters(300).run(|| {
+        let b = sync_it.next_batch_ref();
+        std::hint::black_box(b.len());
+        spin(step);
+    });
+    let mut pf = Prefetcher::new(ds.clone(), Split::Train, 64, 0);
+    let _ = pf.next_batch_ref(); // ring warm
+    Bench::new("pack+step (prefetched)").iters(300).run(|| {
+        let b = pf.next_batch_ref();
+        std::hint::black_box(b.len());
+        spin(step);
+    });
+
+    bench::write_json("data_pipeline");
 }

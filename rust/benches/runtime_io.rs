@@ -6,7 +6,7 @@
 use spectron::config::{Registry, RunCfg};
 use spectron::runtime::state as slots;
 use spectron::runtime::{client, ArtifactIndex, Runtime};
-use spectron::util::bench::{header, Bench};
+use spectron::util::bench::{self, header, Bench};
 use spectron::util::rng::Pcg64;
 
 fn main() {
@@ -70,4 +70,6 @@ fn main() {
     Bench::new("init fact-s-spectron (weights + NS init)").iters(5).run(|| {
         init.run_literals(&[client::scalar_i32(1), client::vec_f32(&knobs)]).unwrap()
     });
+
+    bench::write_json("runtime_io");
 }

@@ -3,7 +3,7 @@
 //! multi-init grid). All must be negligible next to training.
 
 use spectron::scaling::{isoflop, parametric, powerlaw, RunPoint};
-use spectron::util::bench::{header, Bench};
+use spectron::util::bench::{self, header, Bench};
 use spectron::util::rng::Pcg64;
 
 fn synth_grid() -> Vec<RunPoint> {
@@ -38,4 +38,6 @@ fn main() {
         "\nsanity: recovered alpha={:.3} beta={:.3} -> N_opt ∝ C^{:.3}, D_opt ∝ C^{:.3}",
         fit.alpha, fit.beta, na, da
     );
+
+    bench::write_json("scaling_fits");
 }

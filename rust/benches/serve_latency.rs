@@ -10,7 +10,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use spectron::serve::{DeadlineBatcher, MockEngine, ServeCfg, Server};
-use spectron::util::bench::{header, Bench};
+use spectron::util::bench::{self, header, Bench};
 
 fn main() {
     header("serve: batcher micro-costs");
@@ -65,4 +65,6 @@ fn main() {
             }
         });
     handle.shutdown();
+
+    bench::write_json("serve_latency");
 }

@@ -8,12 +8,14 @@
 use std::sync::Arc;
 
 use spectron::config::{Registry, RunCfg};
+use spectron::coordinator::DataParallelSim;
 use spectron::data::bpe::Bpe;
 use spectron::data::corpus::{Corpus, CorpusCfg};
 use spectron::data::dataset::{Dataset, Split};
+use spectron::data::prefetch::Prefetcher;
 use spectron::runtime::{ArtifactIndex, Runtime};
 use spectron::train::Trainer;
-use spectron::util::bench::{header, Bench};
+use spectron::util::bench::{self, header, Bench};
 
 fn main() {
     let root = ArtifactIndex::default_root();
@@ -69,4 +71,64 @@ fn main() {
             println!("  {:<28} {:+7.1}%", label, (t / base - 1.0) * 100.0);
         }
     }
+
+    // pipelined hot path: the same trainer driven by the synchronous
+    // iterator vs the async prefetch ring. The per-step delta is the
+    // harness cost the pipeline hides (batch pack + upload staging), so
+    // several steps per sample lift it above timer noise; prefetch-on
+    // must be no slower than prefetch-off.
+    header("pipelined hot path (fact-s-spectron, 8 steps per iter)");
+    let v = reg.variant("fact-s-spectron").unwrap();
+    let run = RunCfg { total_steps: 100_000, read_interval: 64, ..RunCfg::default() };
+    match Trainer::new(&rt, &idx, v, run.clone()) {
+        Ok(mut trainer) => {
+            let mut batches = ds.batches(Split::Train, v.batch, 0);
+            trainer.train(&mut batches, 2).unwrap();
+            let off = Bench::new("train step x8 [prefetch off]")
+                .warmup(2)
+                .iters(12)
+                .run(|| trainer.train(&mut batches, 8).unwrap());
+            let mut pf = Prefetcher::new(ds.clone(), Split::Train, v.batch, 0);
+            trainer.train(&mut pf, 2).unwrap(); // let the ring fill
+            let on = Bench::new("train step x8 [prefetch on]")
+                .warmup(2)
+                .iters(12)
+                .run(|| trainer.train(&mut pf, 8).unwrap());
+            println!(
+                "  prefetch-on vs prefetch-off mean: {:+.2}% (negative = faster)",
+                (on.mean_s / off.mean_s - 1.0) * 100.0
+            );
+        }
+        Err(e) => println!("pipelined rows skipped ({e})"),
+    }
+
+    // data-parallel step latency: threaded workers (own PJRT client per
+    // thread) vs the sequential reference at matching worker counts
+    header("data-parallel step (fact-s-spectron, grad+allreduce+apply)");
+    for workers in [1usize, 2, 4] {
+        let run = RunCfg { total_steps: 100_000, ..RunCfg::default() };
+        match DataParallelSim::new_threaded(&rt, &idx, v, run, &ds, workers) {
+            Ok(mut dp) => {
+                dp.step().unwrap(); // warm the worker compiles
+                Bench::new(&format!("dp step [threaded, workers={workers}]"))
+                    .warmup(1)
+                    .iters(8)
+                    .run(|| dp.step().unwrap());
+            }
+            Err(e) => println!("dp workers={workers}: skipped ({e})"),
+        }
+    }
+    let run = RunCfg { total_steps: 100_000, ..RunCfg::default() };
+    match DataParallelSim::new(&rt, &idx, v, run, &ds, 4) {
+        Ok(mut dp) => {
+            dp.step().unwrap();
+            Bench::new("dp step [sequential, workers=4]")
+                .warmup(1)
+                .iters(8)
+                .run(|| dp.step().unwrap());
+        }
+        Err(e) => println!("dp sequential reference: skipped ({e})"),
+    }
+
+    bench::write_json("step_latency");
 }

@@ -2,13 +2,19 @@
 //! averaged on the host, then one `apply`. Semantically equivalent to one
 //! large-batch step (test_grad_linearity in python/tests establishes the
 //! linearity the average relies on).
+//!
+//! The microbatch loop follows the pipelined-hot-path conventions
+//! (DESIGN.md §Hot-loop pipeline): batches arrive via [`BatchSource`]
+//! (reused storage), token/grad uploads are staged in a
+//! [`client::StagingPool`], and each grad readback is the fence that lets
+//! the previous step's staged literals retire.
 
 use anyhow::{Context, Result};
 
 use crate::config::{RunCfg, VariantCfg};
-use crate::data::dataset::BatchIter;
-use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
+use crate::data::dataset::BatchSource;
 use crate::runtime::state as slots;
+use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
 
 pub struct GradAccumulator {
     rt: Runtime,
@@ -16,6 +22,7 @@ pub struct GradAccumulator {
     grad_prog: std::sync::Arc<Program>,
     apply_prog: std::sync::Arc<Program>,
     state_buf: xla::PjRtBuffer,
+    staging: client::StagingPool,
 }
 
 impl GradAccumulator {
@@ -38,7 +45,14 @@ impl GradAccumulator {
         let state_buf = init
             .run_literals(&[client::scalar_i32(run.seed as i32), client::vec_f32(&knobs)])
             .context("init")?;
-        Ok(GradAccumulator { rt: rt.clone(), manifest, grad_prog, apply_prog, state_buf })
+        Ok(GradAccumulator {
+            rt: rt.clone(),
+            manifest,
+            grad_prog,
+            apply_prog,
+            state_buf,
+            staging: client::StagingPool::new(),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -47,38 +61,56 @@ impl GradAccumulator {
 
     /// One compound step: `micro` gradient microbatches, averaged, applied.
     /// Returns the averaged loss.
-    pub fn step(&mut self, batches: &mut BatchIter, micro: usize) -> Result<f64> {
+    pub fn step<B: BatchSource>(&mut self, batches: &mut B, micro: usize) -> Result<f64> {
+        let res = self.step_inner(batches, micro);
+        if res.is_err() {
+            // failed upload/execute/readback: staged literals may be
+            // unfenced, so they must be leaked, not freed later
+            self.staging.quarantine();
+        }
+        res
+    }
+
+    fn step_inner<B: BatchSource>(&mut self, batches: &mut B, micro: usize) -> Result<f64> {
         anyhow::ensure!(micro >= 1);
         let b = self.manifest.batch;
         let w = self.manifest.seq_len + 1;
         let g_len = 1 + self.manifest.n_params;
         let mut acc = vec![0f32; g_len];
         for _ in 0..micro {
-            let mb = batches.next_batch();
-            let tok_lit = client::tokens_literal(&mb, b, w)?;
-            let tok = self.rt.upload_literal(&tok_lit)?;
+            let mb = batches.next_batch_ref();
+            let tok = self.staging.upload_tokens(&self.rt, mb, b, w)?;
             let out = self.grad_prog.run_buffers(&[&self.state_buf, &tok])?;
-            drop(tok_lit);
             let g = self.rt.download_f32(&out)?;
             anyhow::ensure!(g.len() == g_len, "grad length {}", g.len());
             for (a, v) in acc.iter_mut().zip(&g) {
                 *a += v;
             }
         }
+        // every token upload above (and the previous step's staged grad
+        // vector) is upstream of a grad readback that just returned
+        self.staging.retire();
         let inv = 1.0 / micro as f32;
         for a in acc.iter_mut() {
             *a *= inv;
         }
         let loss = acc[0] as f64;
-        let g_lit = client::vec_f32(&acc);
-        let g_buf = self.rt.upload_literal(&g_lit)?;
+        let g_buf = self.staging.upload_f32(&self.rt, &acc)?;
         let out = self.apply_prog.run_buffers(&[&self.state_buf, &g_buf])?;
-        drop(g_lit);
         self.state_buf = out;
         Ok(loss)
     }
 
-    pub fn state(&self) -> Result<StateHost> {
-        StateHost::new(self.rt.download_f32(&self.state_buf)?, &self.manifest)
+    pub fn state(&mut self) -> Result<StateHost> {
+        match self.rt.download_f32(&self.state_buf) {
+            Ok(data) => {
+                self.staging.retire();
+                StateHost::new(data, &self.manifest)
+            }
+            Err(e) => {
+                self.staging.quarantine();
+                Err(e)
+            }
+        }
     }
 }

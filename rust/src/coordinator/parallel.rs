@@ -8,24 +8,61 @@
 //! all-reduces (tree mean) and applies once through `apply`, keeping every
 //! replica bit-identical — exactly the invariant a real DP runtime
 //! maintains.
+//!
+//! Two execution modes share one coordinator (DESIGN.md §Hot-loop pipeline;
+//! threading decision in docs/adr/002-pipelined-step-loop.md):
+//!
+//! * **sequential** ([`DataParallelSim::new`]) — per-worker grads run one
+//!   after another on the coordinator's client, as a real single-process
+//!   simulator would; the reference for equivalence tests.
+//! * **threaded** ([`DataParallelSim::new_threaded`]) — per-worker grads
+//!   fan out to persistent worker threads. The xla wrapper types are
+//!   `!Send` (one PJRT client per thread, DESIGN.md §Conventions), so
+//!   workers own their client + compiled `grad` program for their whole
+//!   life and receive only `Send` data: an `Arc` of the replicated state
+//!   (the per-step broadcast a real DP runtime performs) and a recycled
+//!   token buffer. Gradients return in worker order, so the tree
+//!   reduction consumes them exactly as the sequential path does and the
+//!   two modes stay bit-identical.
 
-use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::{RunCfg, VariantCfg};
 use crate::data::dataset::{BatchIter, Dataset, Split};
-use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
 use crate::runtime::state as slots;
+use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
 
 pub struct DataParallelSim<'d> {
+    /// declared first: fields drop in declaration order, and the worker
+    /// pool's join-on-drop must finish (clients torn down) before the
+    /// coordinator's own runtime handle can go away
+    pool: Option<WorkerPool>,
     rt: Runtime,
     manifest: Manifest,
-    grad_prog: std::sync::Arc<Program>,
+    /// compiled only in sequential mode (threaded workers own their copy)
+    grad_prog: Option<std::sync::Arc<Program>>,
     apply_prog: std::sync::Arc<Program>,
     state_buf: xla::PjRtBuffer,
     shards: Vec<BatchIter<'d>>,
+    /// reusable per-worker token buffers (cycle through the worker pool
+    /// in threaded mode)
+    token_bufs: Vec<Vec<i32>>,
+    staging: client::StagingPool,
+    /// step sequence number: requests and responses are tagged so a step
+    /// aborted by an error can never pair its stale responses with the
+    /// next step's requests
+    step_seq: u64,
+    last_reduced: Vec<f32>,
 }
 
 impl<'d> DataParallelSim<'d> {
+    /// Sequential-execution simulator (grads one after another on the
+    /// coordinator's client).
     pub fn new(
         rt: &Runtime,
         idx: &ArtifactIndex,
@@ -34,10 +71,43 @@ impl<'d> DataParallelSim<'d> {
         ds: &'d Dataset,
         n_workers: usize,
     ) -> Result<DataParallelSim<'d>> {
+        Self::build(rt, idx, variant, run, ds, n_workers, false)
+    }
+
+    /// Threaded simulator: one persistent OS thread per worker, each with
+    /// its own PJRT client and compiled `grad` program. Bit-identical to
+    /// the sequential mode (the integration suite asserts this for
+    /// 1/2/3/8 workers).
+    pub fn new_threaded(
+        rt: &Runtime,
+        idx: &ArtifactIndex,
+        variant: &VariantCfg,
+        run: RunCfg,
+        ds: &'d Dataset,
+        n_workers: usize,
+    ) -> Result<DataParallelSim<'d>> {
+        Self::build(rt, idx, variant, run, ds, n_workers, true)
+    }
+
+    fn build(
+        rt: &Runtime,
+        idx: &ArtifactIndex,
+        variant: &VariantCfg,
+        run: RunCfg,
+        ds: &'d Dataset,
+        n_workers: usize,
+        threaded: bool,
+    ) -> Result<DataParallelSim<'d>> {
         anyhow::ensure!(n_workers >= 1);
         let manifest = idx.manifest(&variant.name)?;
         let init = rt.load_program(&idx.program_path(&variant.name, "init"))?;
-        let grad_prog = rt.load_program(&idx.program_path(&variant.name, "grad"))?;
+        // the coordinator executes grad itself only in sequential mode;
+        // threaded workers compile their own copy on their own client
+        let grad_prog = if threaded {
+            None
+        } else {
+            Some(rt.load_program(&idx.program_path(&variant.name, "grad"))?)
+        };
         let apply_prog = rt.load_program(&idx.program_path(&variant.name, "apply"))?;
         let knobs = slots::knobs(&run);
         let state_buf = init
@@ -46,53 +116,159 @@ impl<'d> DataParallelSim<'d> {
         let shards = (0..n_workers)
             .map(|w| ds.batches_sharded(Split::Train, variant.batch, run.seed, w, n_workers))
             .collect();
-        Ok(DataParallelSim { rt: rt.clone(), manifest, grad_prog, apply_prog, state_buf, shards })
+        let pool = if threaded {
+            Some(WorkerPool::spawn(
+                idx.program_path(&variant.name, "grad"),
+                manifest.batch,
+                manifest.seq_len + 1,
+                n_workers,
+            ))
+        } else {
+            None
+        };
+        Ok(DataParallelSim {
+            pool,
+            rt: rt.clone(),
+            manifest,
+            grad_prog,
+            apply_prog,
+            state_buf,
+            shards,
+            token_bufs: vec![Vec::new(); n_workers],
+            staging: client::StagingPool::new(),
+            step_seq: 0,
+            last_reduced: Vec::new(),
+        })
     }
 
     pub fn n_workers(&self) -> usize {
         self.shards.len()
     }
 
+    pub fn is_threaded(&self) -> bool {
+        self.pool.is_some()
+    }
+
     /// One data-parallel step. Returns (mean loss, max |grad divergence|
     /// across workers for the first few elements — a replica-consistency
     /// telemetry the tests assert on).
     pub fn step(&mut self) -> Result<DpStepStats> {
-        let b = self.manifest.batch;
-        let w = self.manifest.seq_len + 1;
-        let g_len = 1 + self.manifest.n_params;
-
-        // per-worker gradients against the SAME replicated state buffer
-        let mut worker_grads: Vec<Vec<f32>> = Vec::with_capacity(self.shards.len());
-        for shard in self.shards.iter_mut() {
-            let mb = shard.next_batch();
-            let tok_lit = client::tokens_literal(&mb, b, w)?;
-            let tok = self.rt.upload_literal(&tok_lit)?;
-            let out = self.grad_prog.run_buffers(&[&self.state_buf, &tok])?;
-            drop(tok_lit);
-            let g = self.rt.download_f32(&out)?;
-            anyhow::ensure!(g.len() == g_len);
-            worker_grads.push(g);
+        let res = self.step_inner();
+        if res.is_err() {
+            // failed upload/execute/readback: staged literals may be
+            // unfenced, so they must be leaked, not freed later
+            self.staging.quarantine();
         }
+        res
+    }
+
+    fn step_inner(&mut self) -> Result<DpStepStats> {
+        let g_len = 1 + self.manifest.n_params;
+        let worker_grads = if self.pool.is_some() {
+            self.grads_threaded(g_len)?
+        } else {
+            self.grads_sequential(g_len)?
+        };
 
         let losses: Vec<f64> = worker_grads.iter().map(|g| g[0] as f64).collect();
         let reduced = tree_allreduce_mean(worker_grads);
 
-        let g_lit = client::vec_f32(&reduced);
-        let g_buf = self.rt.upload_literal(&g_lit)?;
+        // every literal staged so far is fenced by the grad readbacks (or
+        // the state broadcast) above; retire before staging the apply
+        self.staging.retire();
+        let g_buf = self.staging.upload_f32(&self.rt, &reduced)?;
         let out = self.apply_prog.run_buffers(&[&self.state_buf, &g_buf])?;
-        drop(g_lit);
         self.state_buf = out;
 
         let mean_loss = losses.iter().sum::<f64>() / losses.len() as f64;
-        Ok(DpStepStats {
-            mean_loss,
-            worker_losses: losses,
-            grad_norm: reduced[1..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt(),
-        })
+        let grad_norm =
+            reduced[1..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        self.last_reduced = reduced;
+        Ok(DpStepStats { mean_loss, worker_losses: losses, grad_norm })
     }
 
-    pub fn state(&self) -> Result<StateHost> {
-        StateHost::new(self.rt.download_f32(&self.state_buf)?, &self.manifest)
+    /// Per-worker gradients computed one after another against the SAME
+    /// replicated on-device state buffer.
+    fn grads_sequential(&mut self, g_len: usize) -> Result<Vec<Vec<f32>>> {
+        let b = self.manifest.batch;
+        let w = self.manifest.seq_len + 1;
+        let grad_prog = self.grad_prog.clone().expect("sequential mode has grad_prog");
+        let mut grads = Vec::with_capacity(self.shards.len());
+        for (wid, shard) in self.shards.iter_mut().enumerate() {
+            let buf = &mut self.token_bufs[wid];
+            shard.next_batch_into(buf);
+            let tok = self.staging.upload_tokens(&self.rt, buf, b, w)?;
+            let out = grad_prog.run_buffers(&[&self.state_buf, &tok])?;
+            let g = self.rt.download_f32(&out)?;
+            anyhow::ensure!(g.len() == g_len, "worker {wid}: grad length {}", g.len());
+            grads.push(g);
+        }
+        Ok(grads)
+    }
+
+    /// Per-worker gradients fanned out to the persistent worker threads:
+    /// broadcast one host copy of the replicated state, dispatch every
+    /// shard's batch, then collect in worker order (the reduction order
+    /// must match the sequential path bit-for-bit).
+    fn grads_threaded(&mut self, g_len: usize) -> Result<Vec<Vec<f32>>> {
+        // the per-step broadcast: one readback of the replicated state,
+        // shared with every worker through an Arc (exactly the collective
+        // a real DP runtime performs after apply). The readback also
+        // fences the previous apply's staged upload.
+        let state = Arc::new(self.rt.download_f32(&self.state_buf)?);
+        self.staging.retire();
+        // tag this step's traffic: responses from a step aborted by an
+        // earlier error must never pair with these requests
+        self.step_seq += 1;
+        let seq = self.step_seq;
+        let pool = self.pool.as_ref().expect("threaded mode");
+        for (wid, shard) in self.shards.iter_mut().enumerate() {
+            let mut toks = std::mem::take(&mut self.token_bufs[wid]);
+            shard.next_batch_into(&mut toks);
+            pool.workers[wid]
+                .req_tx
+                .as_ref()
+                .expect("worker channel live")
+                .send(GradReq { seq, state: state.clone(), tokens: toks })
+                .map_err(|_| anyhow!("dp worker {wid} is gone"))?;
+        }
+        let mut grads = Vec::with_capacity(self.shards.len());
+        for (wid, worker) in pool.workers.iter().enumerate() {
+            let (g, toks) = loop {
+                let (resp_seq, resp) = worker
+                    .resp_rx
+                    .recv()
+                    .map_err(|_| anyhow!("dp worker {wid} died"))?;
+                if resp_seq != seq {
+                    continue; // stale response from an aborted step
+                }
+                break resp.map_err(|e| anyhow!("dp worker {wid}: {e}"))?;
+            };
+            anyhow::ensure!(g.len() == g_len, "worker {wid}: grad length {}", g.len());
+            self.token_bufs[wid] = toks; // recycle the batch buffer
+            grads.push(g);
+        }
+        Ok(grads)
+    }
+
+    /// The gradient applied at the last `step()` (tree-reduced mean);
+    /// empty before the first step. The equivalence tests compare this
+    /// bit-for-bit across execution modes.
+    pub fn last_reduced_grad(&self) -> &[f32] {
+        &self.last_reduced
+    }
+
+    pub fn state(&mut self) -> Result<StateHost> {
+        match self.rt.download_f32(&self.state_buf) {
+            Ok(data) => {
+                self.staging.retire();
+                StateHost::new(data, &self.manifest)
+            }
+            Err(e) => {
+                self.staging.quarantine();
+                Err(e)
+            }
+        }
     }
 }
 
@@ -103,31 +279,234 @@ pub struct DpStepStats {
     pub grad_norm: f64,
 }
 
+// ---- worker pool ---------------------------------------------------------
+
+struct GradReq {
+    /// step sequence tag, echoed back so the coordinator can discard
+    /// responses from a step that aborted mid-collect
+    seq: u64,
+    state: Arc<Vec<f32>>,
+    tokens: Vec<i32>,
+}
+
+/// (echoed seq, (gradient, recycled token buffer) or a rendered error).
+type GradResp = (u64, Result<(Vec<f32>, Vec<i32>), String>);
+
+struct Worker {
+    /// `None` once the pool starts tearing down (closing the channel ends
+    /// the worker's receive loop)
+    req_tx: Option<Sender<GradReq>>,
+    resp_rx: Receiver<GradResp>,
+    handle: Option<JoinHandle<()>>,
+}
+
+struct WorkerPool {
+    workers: Vec<Worker>,
+}
+
+impl WorkerPool {
+    fn spawn(grad_path: PathBuf, batch: usize, width: usize, n: usize) -> WorkerPool {
+        let barrier = Arc::new(Barrier::new(n));
+        let workers = (0..n)
+            .map(|wid| {
+                let (req_tx, req_rx) = channel::<GradReq>();
+                let (resp_tx, resp_rx) = channel::<GradResp>();
+                let path = grad_path.clone();
+                let barrier = barrier.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("dp-worker-{wid}"))
+                    .spawn(move || worker_main(path, batch, width, req_rx, resp_tx, barrier))
+                    .expect("spawning dp worker");
+                Worker { req_tx: Some(req_tx), resp_rx, handle: Some(handle) }
+            })
+            .collect();
+        WorkerPool { workers }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // close every request channel first so all receive loops end...
+        for w in &mut self.workers {
+            w.req_tx = None;
+        }
+        // ...then join: workers park at a shared barrier before dropping
+        // their clients, and this join blocks until the last teardown —
+        // the coordinator cannot race an execute against a dying client
+        // (same hazard as coordinator::sched documents).
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Teardown guard: on drop — normal exit and panic unwind alike — it
+/// first CLOSES the worker's channels (so a coordinator blocked in
+/// `recv` gets a disconnect error instead of hanging on a dead worker),
+/// then parks at the barrier for the collective client teardown.
+struct TeardownGuard {
+    barrier: Arc<Barrier>,
+    io: Option<(Receiver<GradReq>, Sender<GradResp>)>,
+}
+
+impl Drop for TeardownGuard {
+    fn drop(&mut self) {
+        self.io = None; // hang up first: unblocks the coordinator
+        self.barrier.wait();
+    }
+}
+
+fn worker_main(
+    grad_path: PathBuf,
+    batch: usize,
+    width: usize,
+    req_rx: Receiver<GradReq>,
+    resp_tx: Sender<GradResp>,
+    barrier: Arc<Barrier>,
+) {
+    // One PJRT client per thread (DESIGN.md §Conventions); construction
+    // and the one-time `grad` compile are serialized process-wide inside
+    // Runtime/load_program and memoized for the worker's whole life.
+    let setup = Runtime::new().and_then(|rt| {
+        let prog = rt.load_program(&grad_path)?;
+        Ok((rt, prog))
+    });
+    // Tear PJRT clients down together: destruction must not race executes
+    // in sibling clients (see coordinator::sched). Locals drop in reverse
+    // declaration order, so this guard — declared AFTER `setup` — hangs
+    // up and parks at the barrier BEFORE the client above is destroyed,
+    // on the normal exit and on a panic unwind alike.
+    let guard = TeardownGuard { barrier, io: Some((req_rx, resp_tx)) };
+    let (req_rx, resp_tx) = guard.io.as_ref().expect("io parked in guard");
+    match &setup {
+        Ok((rt, prog)) => {
+            let mut staging = client::StagingPool::new();
+            while let Ok(req) = req_rx.recv() {
+                let seq = req.seq;
+                let resp = run_grad(rt, prog, &mut staging, req, batch, width);
+                if resp_tx.send((seq, resp)).is_err() {
+                    break; // coordinator gone
+                }
+            }
+        }
+        Err(e) => {
+            // surface the setup failure on every request instead of
+            // wedging the coordinator
+            let msg = format!("worker setup: {e:#}");
+            while let Ok(req) = req_rx.recv() {
+                if resp_tx.send((req.seq, Err(msg.clone()))).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn run_grad(
+    rt: &Runtime,
+    prog: &Program,
+    staging: &mut client::StagingPool,
+    req: GradReq,
+    batch: usize,
+    width: usize,
+) -> Result<(Vec<f32>, Vec<i32>), String> {
+    let inner = (|| -> Result<Vec<f32>> {
+        // replicated-state upload + token upload, both staged; the grad
+        // readback below fences them, then the pool retires
+        let st = staging.upload_f32(rt, &req.state)?;
+        let tok = staging.upload_tokens(rt, &req.tokens, batch, width)?;
+        let out = prog.run_buffers(&[&st, &tok])?;
+        let g = rt.download_f32(&out)?;
+        staging.retire();
+        Ok(g)
+    })();
+    match inner {
+        Ok(g) => Ok((g, req.tokens)),
+        Err(e) => {
+            // failed execute/readback: the staged state/token literals
+            // may be unfenced — leak, never free at a later retire
+            staging.quarantine();
+            Err(format!("{e:#}"))
+        }
+    }
+}
+
+// ---- tree all-reduce -----------------------------------------------------
+
+/// Below this many elements per vector the reduction stays on one thread
+/// (thread spawn costs more than the adds for the tiny-model grads).
+const PAR_MIN_ELEMS: usize = 1 << 16;
+
 /// Tree all-reduce (mean): pairwise sums up the tree, then divide by n.
 /// In-process stand-in for NCCL ring/tree collectives; the tree shape is
 /// what a multi-host implementation would use, so tests exercise it.
+///
+/// Large vectors are chunked across `std::thread::scope` threads in
+/// lockstep — task `t` reduces chunk `t` of *every* worker's vector — so
+/// the per-element pairwise tree (and therefore the f32 result, bit for
+/// bit) is identical for every thread count.
 pub fn tree_allreduce_mean(mut bufs: Vec<Vec<f32>>) -> Vec<f32> {
     assert!(!bufs.is_empty());
     let n = bufs.len() as f32;
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ragged all-reduce input");
+    let threads = if bufs.len() >= 2 && len >= PAR_MIN_ELEMS {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).clamp(1, 8)
+    } else {
+        1
+    };
+    let chunk = ((len + threads - 1) / threads).max(1);
+    {
+        // lockstep chunking: advance every buffer's chunk iterator
+        // together so task t sees the same element range of each worker
+        let mut columns: Vec<_> = bufs.iter_mut().map(|b| b.chunks_mut(chunk)).collect();
+        let mut tasks: Vec<Vec<&mut [f32]>> = Vec::new();
+        loop {
+            let cols: Vec<&mut [f32]> = columns.iter_mut().filter_map(|c| c.next()).collect();
+            if cols.is_empty() {
+                break;
+            }
+            tasks.push(cols);
+        }
+        if tasks.len() <= 1 {
+            for mut cols in tasks {
+                tree_reduce_slices(&mut cols, n);
+            }
+        } else {
+            std::thread::scope(|scope| {
+                for mut cols in tasks {
+                    scope.spawn(move || tree_reduce_slices(&mut cols, n));
+                }
+            });
+        }
+    }
+    std::mem::take(&mut bufs[0])
+}
+
+/// The pairwise tree over one chunk of every worker's vector; `cols[0]`
+/// accumulates and is divided by `n` at the end. Must mirror the shape
+/// the sequential implementation always used: stride-doubling pairs
+/// `(i, i+stride)`.
+fn tree_reduce_slices(cols: &mut [&mut [f32]], n: f32) {
     let mut stride = 1;
-    while stride < bufs.len() {
+    while stride < cols.len() {
         let mut i = 0;
-        while i + stride < bufs.len() {
-            let (a, rest) = bufs.split_at_mut(i + stride);
-            let dst = &mut a[i];
-            let src = &rest[0];
-            for (d, s) in dst.iter_mut().zip(src) {
-                *d += s;
+        while i + stride < cols.len() {
+            let (dst_part, src_part) = cols.split_at_mut(i + stride);
+            let dst = &mut dst_part[i];
+            let src = &src_part[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += *s;
             }
             i += stride * 2;
         }
         stride *= 2;
     }
-    let mut out = std::mem::take(&mut bufs[0]);
-    for v in out.iter_mut() {
+    for v in cols[0].iter_mut() {
         *v /= n;
     }
-    out
 }
 
 #[cfg(test)]
@@ -146,6 +525,51 @@ mod tests {
             let tree = tree_allreduce_mean(bufs);
             for (a, b) in tree.iter().zip(&naive) {
                 assert!((a - b).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    /// Reference single-threaded tree (the pre-chunking implementation).
+    fn tree_reference(mut bufs: Vec<Vec<f32>>) -> Vec<f32> {
+        let n = bufs.len() as f32;
+        let mut stride = 1;
+        while stride < bufs.len() {
+            let mut i = 0;
+            while i + stride < bufs.len() {
+                let (a, rest) = bufs.split_at_mut(i + stride);
+                for (d, s) in a[i].iter_mut().zip(&rest[0]) {
+                    *d += s;
+                }
+                i += stride * 2;
+            }
+            stride *= 2;
+        }
+        let mut out = std::mem::take(&mut bufs[0]);
+        for v in out.iter_mut() {
+            *v /= n;
+        }
+        out
+    }
+
+    #[test]
+    fn chunked_threaded_reduction_is_bit_identical() {
+        // sizes straddling the parallel threshold, worker counts that
+        // exercise odd tree shapes
+        for n in [1usize, 2, 3, 5, 8] {
+            for len in [0usize, 1, 17, PAR_MIN_ELEMS - 1, PAR_MIN_ELEMS, PAR_MIN_ELEMS + 13] {
+                let bufs: Vec<Vec<f32>> = (0..n)
+                    .map(|w| {
+                        (0..len)
+                            .map(|i| ((w * 31 + i) as f32 * 0.1111).sin() * 3.7)
+                            .collect()
+                    })
+                    .collect();
+                let want = tree_reference(bufs.clone());
+                let got = tree_allreduce_mean(bufs);
+                assert_eq!(want.len(), got.len());
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} len={len} i={i}");
+                }
             }
         }
     }

@@ -79,6 +79,7 @@ impl Dataset {
             cursor: 0,
             rng: Pcg64::new(seed).fold_in(0xba7c4),
             shard: (0, 1),
+            scratch: Vec::new(),
         }
     }
 
@@ -97,22 +98,65 @@ impl Dataset {
         it
     }
 
-    /// All validation windows as sequential batches (for deterministic
-    /// perplexity eval); the tail is dropped.
-    pub fn val_batches(&self, batch: usize) -> Vec<Vec<i32>> {
-        let n = self.n_windows(Split::Val);
-        let mut out = Vec::new();
-        let mut i = 0;
-        while i + batch <= n {
-            let mut b = Vec::with_capacity(batch * (self.seq_len + 1));
-            for j in 0..batch {
-                b.extend_from_slice(self.window(Split::Val, i + j));
-            }
-            out.push(b);
-            i += batch;
+    /// Sequential validation batches (for deterministic perplexity eval);
+    /// the tail is dropped. Lazy: each call to [`ValBatches::next_ref`]
+    /// packs into one reusable buffer instead of materializing every
+    /// batch up front (DESIGN.md §Hot-loop pipeline).
+    pub fn val_batches(&self, batch: usize) -> ValBatches<'_> {
+        ValBatches {
+            ds: self,
+            batch,
+            next: 0,
+            n: self.n_windows(Split::Val),
+            buf: Vec::new(),
         }
-        out
     }
+}
+
+/// Lazy iterator over sequential validation batches. Not a std
+/// `Iterator`: `next_ref` lends a view into an internal buffer that is
+/// reused on the following call.
+pub struct ValBatches<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    next: usize,
+    n: usize,
+    buf: Vec<i32>,
+}
+
+impl<'a> ValBatches<'a> {
+    /// Number of full batches the split yields in total.
+    pub fn len(&self) -> usize {
+        self.n / self.batch
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Next batch as a borrowed flat `batch * (seq_len + 1)` buffer, or
+    /// `None` once fewer than `batch` windows remain.
+    pub fn next_ref(&mut self) -> Option<&[i32]> {
+        if self.next + self.batch > self.n {
+            return None;
+        }
+        self.buf.clear();
+        self.buf.reserve(self.batch * (self.ds.seq_len + 1));
+        for j in 0..self.batch {
+            self.buf.extend_from_slice(self.ds.window(Split::Val, self.next + j));
+        }
+        self.next += self.batch;
+        Some(&self.buf)
+    }
+}
+
+/// Anything the train loop can pull batches from: the synchronous
+/// [`BatchIter`] or the pipelined [`crate::data::prefetch::Prefetcher`].
+/// `next_batch_ref` lends a flat row-major `(batch, seq_len + 1)` view
+/// that stays valid until the next call, so steady-state iteration does
+/// not allocate (DESIGN.md §Hot-loop pipeline).
+pub trait BatchSource {
+    fn next_batch_ref(&mut self) -> &[i32];
 }
 
 pub struct BatchIter<'a> {
@@ -123,13 +167,16 @@ pub struct BatchIter<'a> {
     cursor: usize,
     rng: Pcg64,
     shard: (usize, usize),
+    scratch: Vec<i32>,
 }
 
 impl<'a> BatchIter<'a> {
     fn refill(&mut self) {
         let (w, n) = self.shard;
         let total = self.ds.n_windows(self.split);
-        self.order = (0..total as u32).filter(|i| (*i as usize) % n == w).collect();
+        // reuse the epoch's shuffle-order allocation across refills
+        self.order.clear();
+        self.order.extend((0..total as u32).filter(|i| (*i as usize) % n == w));
         assert!(
             self.order.len() >= self.batch,
             "split has {} windows for worker {w}/{n}, need >= {}",
@@ -140,18 +187,38 @@ impl<'a> BatchIter<'a> {
         self.cursor = 0;
     }
 
-    /// Next batch as a flat row-major buffer (batch, seq_len + 1).
-    pub fn next_batch(&mut self) -> Vec<i32> {
+    /// Write the next batch into `out` (cleared first), reusing its
+    /// storage: a flat row-major `(batch, seq_len + 1)` buffer, identical
+    /// contents and order to [`BatchIter::next_batch`].
+    pub fn next_batch_into(&mut self, out: &mut Vec<i32>) {
         if self.cursor + self.batch > self.order.len() {
             self.refill();
         }
-        let mut out = Vec::with_capacity(self.batch * (self.ds.seq_len + 1));
+        out.clear();
+        out.reserve(self.batch * (self.ds.seq_len + 1));
         for k in 0..self.batch {
             let idx = self.order[self.cursor + k] as usize;
             out.extend_from_slice(self.ds.window(self.split, idx));
         }
         self.cursor += self.batch;
+    }
+
+    /// Next batch as a freshly allocated flat row-major buffer.
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.next_batch_into(&mut out);
         out
+    }
+}
+
+impl BatchSource for BatchIter<'_> {
+    fn next_batch_ref(&mut self) -> &[i32] {
+        // pull the scratch buffer out so `next_batch_into` can borrow
+        // `self` mutably, then park it back and lend a view
+        let mut buf = std::mem::take(&mut self.scratch);
+        self.next_batch_into(&mut buf);
+        self.scratch = buf;
+        &self.scratch
     }
 }
 
@@ -231,10 +298,38 @@ mod tests {
     #[test]
     fn val_batches_sequential_and_sized() {
         let ds = tiny();
-        let vb = ds.val_batches(2);
+        let mut vb = ds.val_batches(2);
         assert!(!vb.is_empty());
-        for b in &vb {
+        let total = vb.len();
+        let mut seen = 0;
+        let mut win = 0;
+        while let Some(b) = vb.next_ref() {
             assert_eq!(b.len(), 2 * 33);
+            // lazy packing yields the same sequential windows the eager
+            // version materialized
+            assert_eq!(&b[..33], ds.window(Split::Val, win));
+            assert_eq!(&b[33..], ds.window(Split::Val, win + 1));
+            win += 2;
+            seen += 1;
+        }
+        assert_eq!(seen, total);
+        assert_eq!(seen, ds.n_windows(Split::Val) / 2);
+    }
+
+    #[test]
+    fn next_batch_into_matches_next_batch() {
+        let ds = tiny();
+        let mut a = ds.batches(Split::Train, 4, 9);
+        let mut b = ds.batches(Split::Train, 4, 9);
+        let mut c = ds.batches(Split::Train, 4, 9);
+        let mut buf = Vec::new();
+        // run past one epoch so the reused-allocation refill is covered
+        let steps = ds.n_windows(Split::Train) / 4 + 3;
+        for s in 0..steps {
+            b.next_batch_into(&mut buf);
+            let want = a.next_batch();
+            assert_eq!(want, buf, "step {s}");
+            assert_eq!(&want[..], c.next_batch_ref(), "step {s} (ref)");
         }
     }
 }

@@ -9,10 +9,14 @@
 //!   learnable bigram structure,
 //! * [`bpe`] — a byte-level BPE tokenizer trained on that corpus,
 //! * [`dataset`] — packing, shuffled batching, train/val split, sharding,
+//! * [`prefetch`] — async producer-thread batch prefetch over a ring of
+//!   reusable buffers, byte-identical to synchronous iteration
+//!   (DESIGN.md §Hot-loop pipeline),
 //! * [`tasks`] — synthetic multiple-choice suites standing in for
 //!   HellaSwag / PIQA / ARC-Easy, scored by per-sequence log-prob.
 
 pub mod bpe;
 pub mod corpus;
 pub mod dataset;
+pub mod prefetch;
 pub mod tasks;

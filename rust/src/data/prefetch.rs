@@ -1,0 +1,191 @@
+//! Async batch prefetch: a producer thread runs the shuffled
+//! [`crate::data::dataset::BatchIter`] ahead of the device so
+//! tokenize/pack/shuffle overlaps with the PJRT execute
+//! (DESIGN.md §Hot-loop pipeline).
+//!
+//! The ring is two mpsc channels moving the *same* small set of `Vec<i32>`
+//! buffers in a cycle: `depth` empty buffers are seeded into the recycle
+//! channel, the producer pops one, packs the next batch into it with
+//! [`crate::data::dataset::BatchIter::next_batch_into`] (reusing
+//! storage), and sends it on the filled channel; the consumer lends the
+//! buffer out via
+//! [`BatchSource::next_batch_ref`] and recycles it on the following call.
+//! Steady state therefore allocates nothing and holds at most `depth`
+//! batches in flight.
+//!
+//! Determinism: the producer drives the identical `BatchIter` the
+//! synchronous path would, so the prefetched stream is byte-identical to
+//! synchronous iteration for any (split, batch, seed, shard) — the tests
+//! below and the integration suite assert this across epoch boundaries.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::dataset::{BatchSource, Dataset, Split};
+
+/// Default ring depth: enough to ride out scheduling jitter without
+/// holding a meaningful amount of token memory (depth * batch * (T+1) * 4
+/// bytes ≈ 16 KB at the tiny-model shapes).
+pub const DEFAULT_DEPTH: usize = 4;
+
+pub struct Prefetcher {
+    filled: Option<Receiver<Vec<i32>>>,
+    recycle: Option<Sender<Vec<i32>>>,
+    current: Option<Vec<i32>>,
+    producer: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Prefetch the unsharded stream (mirrors [`Dataset::batches`]).
+    pub fn new(ds: Arc<Dataset>, split: Split, batch: usize, seed: u64) -> Prefetcher {
+        Self::new_sharded(ds, split, batch, seed, 0, 1, DEFAULT_DEPTH)
+    }
+
+    /// Prefetch worker `worker` of `n_workers`'s disjoint shard (mirrors
+    /// [`Dataset::batches_sharded`]) with an explicit ring depth.
+    pub fn new_sharded(
+        ds: Arc<Dataset>,
+        split: Split,
+        batch: usize,
+        seed: u64,
+        worker: usize,
+        n_workers: usize,
+        depth: usize,
+    ) -> Prefetcher {
+        assert!(depth >= 1, "prefetch ring needs at least one buffer");
+        assert!(worker < n_workers);
+        let (filled_tx, filled_rx) = channel::<Vec<i32>>();
+        let (recycle_tx, recycle_rx) = channel::<Vec<i32>>();
+        for _ in 0..depth {
+            recycle_tx.send(Vec::new()).expect("seeding prefetch ring");
+        }
+        let producer = std::thread::Builder::new()
+            .name("batch-prefetch".into())
+            .spawn(move || {
+                // the iterator borrows the Arc'd dataset owned by this
+                // closure; batch order is exactly the synchronous path's
+                let mut it = ds.batches_sharded(split, batch, seed, worker, n_workers);
+                while let Ok(mut buf) = recycle_rx.recv() {
+                    it.next_batch_into(&mut buf);
+                    if filled_tx.send(buf).is_err() {
+                        break; // consumer dropped mid-stream
+                    }
+                }
+            })
+            .expect("spawning prefetch producer");
+        Prefetcher {
+            filled: Some(filled_rx),
+            recycle: Some(recycle_tx),
+            current: None,
+            producer: Some(producer),
+        }
+    }
+}
+
+impl BatchSource for Prefetcher {
+    fn next_batch_ref(&mut self) -> &[i32] {
+        // hand the spent buffer back to the producer...
+        if let Some(prev) = self.current.take() {
+            let _ = self.recycle.as_ref().expect("prefetcher live").send(prev);
+        }
+        // ...and block (rarely, if the ring kept ahead) on the next one.
+        // A producer death here is a panic in `refill` (dataset too small
+        // for the batch/shard) — surface it rather than looping.
+        let buf = self
+            .filled
+            .as_ref()
+            .expect("prefetcher live")
+            .recv()
+            .expect("prefetch producer terminated (dataset too small for batch/shard?)");
+        self.current = Some(buf);
+        self.current.as_deref().unwrap()
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Closing the recycle channel unparks a producer blocked in
+        // `recv`; `filled` sends never block (the ring bounds what is in
+        // flight), so after this the producer always runs to its loop
+        // exit and the join cannot hang.
+        self.recycle = None;
+        self.filled = None;
+        self.current = None;
+        if let Some(h) = self.producer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusCfg;
+
+    fn tiny() -> Arc<Dataset> {
+        Arc::new(Dataset::build(CorpusCfg::default(), 300, 300, 32))
+    }
+
+    #[test]
+    fn prefetched_stream_is_byte_identical() {
+        let ds = tiny();
+        let batch = 4;
+        // two full epochs plus a partial one: covers reshuffle boundaries
+        let steps = (ds.n_windows(Split::Train) / batch) * 2 + 3;
+        let mut sync_it = ds.batches(Split::Train, batch, 41);
+        let mut pf = Prefetcher::new(ds.clone(), Split::Train, batch, 41);
+        for s in 0..steps {
+            let want = sync_it.next_batch();
+            assert_eq!(&want[..], pf.next_batch_ref(), "step {s}");
+        }
+    }
+
+    #[test]
+    fn sharded_prefetch_is_byte_identical() {
+        let ds = tiny();
+        for (worker, n_workers) in [(0, 2), (1, 2), (2, 3)] {
+            let batch = 2;
+            let steps = (ds.n_windows(Split::Train) / n_workers / batch) * 2 + 2;
+            let mut sync_it = ds.batches_sharded(Split::Train, batch, 7, worker, n_workers);
+            let mut pf =
+                Prefetcher::new_sharded(ds.clone(), Split::Train, batch, 7, worker, n_workers, 2);
+            for s in 0..steps {
+                let want = sync_it.next_batch();
+                assert_eq!(
+                    &want[..],
+                    pf.next_batch_ref(),
+                    "worker {worker}/{n_workers} step {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn depth_does_not_change_the_stream() {
+        let ds = tiny();
+        let mut d1 = Prefetcher::new_sharded(ds.clone(), Split::Train, 4, 3, 0, 1, 1);
+        let mut d8 = Prefetcher::new_sharded(ds.clone(), Split::Train, 4, 3, 0, 1, 8);
+        for _ in 0..40 {
+            assert_eq!(d1.next_batch_ref(), d8.next_batch_ref());
+        }
+    }
+
+    #[test]
+    fn drop_mid_stream_is_clean() {
+        let ds = tiny();
+        let mut pf = Prefetcher::new(ds, Split::Train, 4, 0);
+        let _ = pf.next_batch_ref();
+        drop(pf); // must not hang or panic with batches still in flight
+    }
+
+    #[test]
+    fn val_split_prefetch() {
+        let ds = tiny();
+        let mut sync_it = ds.batches(Split::Val, 2, 5);
+        let mut pf = Prefetcher::new(ds.clone(), Split::Val, 2, 5);
+        for _ in 0..10 {
+            assert_eq!(&sync_it.next_batch()[..], pf.next_batch_ref());
+        }
+    }
+}

@@ -18,8 +18,12 @@ pub fn perplexity(
     let mut total_nll = 0.0;
     let mut total_cnt = 0.0;
     let mut batches = 0;
-    for b in ds.val_batches(ev.batch).into_iter().take(max_batches) {
-        let (nll, cnt, _, _) = ev.score_batch(prefix, &b, &full_span)?;
+    // lazy val iteration: each batch is packed into one reusable buffer
+    // instead of materializing the whole split's batches up front
+    let mut vb = ds.val_batches(ev.batch);
+    while batches < max_batches {
+        let Some(b) = vb.next_ref() else { break };
+        let (nll, cnt, _, _) = ev.score_batch(prefix, b, &full_span)?;
         total_nll += nll;
         total_cnt += cnt;
         batches += 1;

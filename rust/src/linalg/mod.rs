@@ -6,6 +6,10 @@
 
 pub mod lbfgs;
 
+/// Tile edge for the blocked transpose / tiled matmul: 64 f64 = 512 B per
+/// row segment, a few tiles fit in L1 alongside the output rows.
+const BLOCK: usize = 64;
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
     pub rows: usize,
@@ -45,30 +49,53 @@ impl Mat {
         &mut self.data[i * self.cols + j]
     }
 
+    /// Blocked transpose: walks `BLOCK x BLOCK` tiles so reads and writes
+    /// both stay within a cache-resident window on the larger test shapes
+    /// (the naive column-strided write thrashes once a row of the output
+    /// exceeds L1). Pure permutation — bit-identical to the naive loop.
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                *out.at_mut(j, i) = self.at(i, j);
+        for i0 in (0..self.rows).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(self.rows);
+            for j0 in (0..self.cols).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(self.cols);
+                for i in i0..i1 {
+                    for j in j0..j1 {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
             }
         }
         out
     }
 
+    /// Tiled ikj matmul: the `(i, k)` loops are blocked so the touched
+    /// rows of `other` and `out` stay cache-resident while a tile is
+    /// consumed. For each output element the k-accumulation still runs in
+    /// ascending k order (tiles ascend, k ascends within a tile), so the
+    /// f32/f64 sums — and the Newton-Schulz mirrors built on them — are
+    /// bit-identical to the untiled loop.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Mat::zeros(self.rows, other.cols);
-        // ikj loop order for cache locality
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self.at(i, k);
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
-                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
-                for (o, &b) in out_row.iter_mut().zip(orow) {
-                    *o += a * b;
+        let nc = other.cols;
+        let mut out = Mat::zeros(self.rows, nc);
+        for i0 in (0..self.rows).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(self.rows);
+            for k0 in (0..self.cols).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(self.cols);
+                for i in i0..i1 {
+                    let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+                    let out_row = &mut out.data[i * nc..(i + 1) * nc];
+                    for k in k0..k1 {
+                        let a = arow[k];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let orow = &other.data[k * nc..(k + 1) * nc];
+                        for (o, &b) in out_row.iter_mut().zip(orow) {
+                            *o += a * b;
+                        }
+                    }
                 }
             }
         }
@@ -280,6 +307,56 @@ mod tests {
         let mut rng2 = Pcg64::new(6);
         let s = spectral_norm(&o, 40, &mut rng2);
         assert!(s < 1.35 && s > 0.6, "{s}");
+    }
+
+    /// Naive references for the tiled kernels: the blocked versions must
+    /// be bit-identical (same per-element accumulation order), not just
+    /// close — the Newton-Schulz cross-layer mirrors rely on it.
+    fn t_naive(m: &Mat) -> Mat {
+        let mut out = Mat::zeros(m.cols, m.rows);
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                *out.at_mut(j, i) = m.at(i, j);
+            }
+        }
+        out
+    }
+
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for k in 0..a.cols {
+                let v = a.at(i, k);
+                if v == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols {
+                    out.data[i * b.cols + j] += v * b.data[k * b.cols + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tiled_kernels_bit_match_naive_across_block_edges() {
+        let mut rng = Pcg64::new(42);
+        // shapes below, at, and straddling the 64-wide tile edge
+        for (m, k, n) in [(3, 5, 4), (64, 64, 64), (70, 130, 65), (1, 200, 1), (129, 64, 63)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let t_want = t_naive(&a);
+            let t_got = a.t();
+            assert_eq!(t_want.rows, t_got.rows);
+            for (x, y) in t_want.data.iter().zip(&t_got.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "t() drifted at {m}x{k}");
+            }
+            let mm_want = matmul_naive(&a, &b);
+            let mm_got = a.matmul(&b);
+            for (x, y) in mm_want.data.iter().zip(&mm_got.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "matmul drifted at {m}x{k}x{n}");
+            }
+        }
     }
 
     #[test]

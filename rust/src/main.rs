@@ -19,6 +19,7 @@ use anyhow::{anyhow, Context, Result};
 use spectron::config::{Registry, RunCfg};
 use spectron::coordinator::{DataParallelSim, GradAccumulator};
 use spectron::data::dataset::Split;
+use spectron::data::prefetch::Prefetcher;
 use spectron::exp::{self, Ctx};
 use spectron::runtime::{ArtifactIndex, Runtime};
 use spectron::train::{checkpoint, MetricsLog, Trainer};
@@ -60,6 +61,7 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
   repro info                         variants + artifact status
   repro train --variant V [--steps N --lr F --wd F --seed N --docs N]
               [--ckpt out.ckpt] [--resume in.ckpt] [--read-interval N]
+              [--no-prefetch]  (async batch prefetch is on by default)
   repro eval  --ckpt in.ckpt [--docs N] [--items N]
   repro exp   <fig1|fig2|fig3|fig4|tab1|fig6|fig9|fig8|tab2|tab3|fig12|fig13|appd|all>
               [--smoke] [--docs N] [--force]
@@ -67,7 +69,7 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
               [--max-wait-ms F] [--workers N] [--cache N] [--docs N] [--mock]
               (line-delimited JSON; ops: generate, score, stats, shutdown;
                --docs must match training so the tokenizers agree)
-  repro dp-demo    [--workers N --steps N --variant V]
+  repro dp-demo    [--workers N --steps N --variant V --sequential]
   repro accum-demo [--micro N --steps N --variant V]
   repro data  [--docs N]
 ";
@@ -108,6 +110,9 @@ fn train_cmd(args: &mut Args) -> Result<()> {
     };
     let ckpt_out = args.opt_str("ckpt");
     let resume = args.opt_str("resume");
+    // prefetch is on by default; the stream is byte-identical either way
+    // (DESIGN.md §Hot-loop pipeline), so this only changes overlap
+    let no_prefetch = args.flag("no-prefetch");
     args.finish().map_err(|e| anyhow!(e))?;
 
     let ctx = Arc::new(Ctx::new(docs as u64, false)?);
@@ -126,10 +131,16 @@ fn train_cmd(args: &mut Args) -> Result<()> {
         }
         None => Trainer::new(&rt, &ctx.idx, v, run.clone())?,
     };
-    let mut batches = ctx.ds.batches(Split::Train, v.batch, run.seed);
     let mut metrics = MetricsLog::with_file(&format!("train-{variant}"))?;
     info!("train", "{variant}: {} steps at lr {}", run.total_steps, run.base_lr);
-    let res = trainer.train_with(&mut batches, run.total_steps, &mut metrics)?;
+    let res = if no_prefetch {
+        let mut batches = ctx.ds.batches(Split::Train, v.batch, run.seed);
+        trainer.train_with(&mut batches, run.total_steps, &mut metrics)?
+    } else {
+        let mut batches =
+            Prefetcher::new(ctx.ds.clone(), Split::Train, v.batch, run.seed);
+        trainer.train_with(&mut batches, run.total_steps, &mut metrics)?
+    };
     println!(
         "done: {} steps in {:.1}s ({:.0} ms/step), final loss {:.4}{}",
         res.steps_done,
@@ -292,14 +303,26 @@ fn dp_demo(args: &mut Args) -> Result<()> {
     let workers = args.usize("workers", 4);
     let steps = args.usize("steps", 30);
     let variant = args.str("variant", "fact-s-spectron");
+    // threaded by default (bit-identical to sequential); --sequential
+    // keeps the single-client reference path
+    let sequential = args.flag("sequential");
     args.finish().map_err(|e| anyhow!(e))?;
 
     let ctx = Ctx::new(3000, false)?;
     let rt = Runtime::shared()?;
     let v = ctx.reg.variant(&variant).map_err(|e| anyhow!(e))?;
     let run = RunCfg { total_steps: steps, ..RunCfg::default() };
-    let mut dp = DataParallelSim::new(&rt, &ctx.idx, v, run, &ctx.ds, workers)?;
-    info!("dp", "{workers} workers, global batch {}", workers * v.batch);
+    let mut dp = if sequential {
+        DataParallelSim::new(&rt, &ctx.idx, v, run, &ctx.ds, workers)?
+    } else {
+        DataParallelSim::new_threaded(&rt, &ctx.idx, v, run, &ctx.ds, workers)?
+    };
+    info!(
+        "dp",
+        "{workers} workers ({}), global batch {}",
+        if dp.is_threaded() { "threaded" } else { "sequential" },
+        workers * v.batch
+    );
     let t0 = std::time::Instant::now();
     for s in 0..steps {
         let stats = dp.step()?;

@@ -190,8 +190,10 @@ impl Runtime {
     /// segfaults inside `ShapeUtil::ByteSizeOfElements` with >=6 busy
     /// workers (gdb backtrace in EXPERIMENTS.md §Perf). The only
     /// synchronization the wrapper exposes is `ToLiteralSync`, so we pay a
-    /// small readback: ~4 KB for token batches on the hot path (µs), and a
-    /// one-off for the rare big uploads (checkpoint resume, grad vectors).
+    /// small readback: ~4 KB for token batches (µs), and a one-off for
+    /// rare big uploads. Hot loops avoid even that via [`StagingPool`],
+    /// which parks the literal until a readback the loop performs anyway
+    /// proves the copy completed (DESIGN.md §Hot-loop pipeline).
     pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
         let buf = self
             .client
@@ -205,6 +207,99 @@ impl Runtime {
     pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
         let lit = buf.to_literal_sync().context("to_literal_sync")?;
         lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// Upload staging for hot loops: keeps every staged source literal alive
+/// until the caller proves the async host->device copies completed, then
+/// retires them in one sweep (DESIGN.md §Hot-loop pipeline).
+///
+/// [`Runtime::upload_literal`] makes each upload individually safe by
+/// paying a `ToLiteralSync` readback of the uploaded buffer — a redundant
+/// device->host copy per step on the train path. The pool removes that
+/// per-upload fence and replaces it with the fence the loop performs
+/// anyway: a host readback of any buffer that *depends* on the staged
+/// uploads (the trainer's periodic state sync, a grad readback). When
+/// such a readback returns, every execute feeding it has completed, so
+/// every staged input copy has been consumed and the literals may drop.
+///
+/// Contract: call [`StagingPool::retire`] only after `download_f32` (or
+/// any `ToLiteralSync`) of a buffer downstream of every staged upload.
+/// Holders keep the pool (and thus the literals) alive across the whole
+/// loop; dropping the pool early re-opens the use-after-free window the
+/// `HostBuffer` docs describe. The pool grows by one small literal per
+/// step between fences (bounded by the trainer's `read_interval`, i.e.
+/// at most `RING` token batches ≈ a few hundred KB).
+#[derive(Default)]
+pub struct StagingPool {
+    live: Vec<xla::Literal>,
+}
+
+impl StagingPool {
+    pub fn new() -> StagingPool {
+        StagingPool { live: Vec::new() }
+    }
+
+    /// Stage-and-upload an i32 token batch shaped `(batch, width)`.
+    pub fn upload_tokens(
+        &mut self,
+        rt: &Runtime,
+        data: &[i32],
+        batch: usize,
+        width: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        let lit = tokens_literal(data, batch, width)?;
+        self.upload(rt, lit)
+    }
+
+    /// Stage-and-upload an f32 vector (state or gradient).
+    pub fn upload_f32(&mut self, rt: &Runtime, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.upload(rt, xla::Literal::vec1(data))
+    }
+
+    fn upload(&mut self, rt: &Runtime, lit: xla::Literal) -> Result<xla::PjRtBuffer> {
+        let buf = rt
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("staged buffer_from_host_literal")?;
+        self.live.push(lit);
+        Ok(buf)
+    }
+
+    /// Drop every staged literal. Sound only after a host readback that
+    /// transitively depends on all of them — see the type docs.
+    pub fn retire(&mut self) {
+        self.live.clear();
+    }
+
+    /// Leak every staged literal without freeing it. MUST be called
+    /// instead of `retire` when an error interrupted the stage->fence
+    /// chain (a failed execute or readback): such literals may still be
+    /// feeding an async copy, and a later, unrelated fence must not free
+    /// them. Bounded: a few small literals per error, error paths only.
+    pub fn quarantine(&mut self) {
+        for lit in self.live.drain(..) {
+            std::mem::forget(lit);
+        }
+    }
+
+    /// Number of literals currently pinned (telemetry / tests).
+    pub fn in_flight(&self) -> usize {
+        self.live.len()
+    }
+}
+
+impl Drop for StagingPool {
+    fn drop(&mut self) {
+        // Literals still staged here were never fenced: their async
+        // host->device copies may be in flight, so freeing them now is
+        // exactly the use-after-free `HostBuffer` guards against. The
+        // pool holds no buffers, so it cannot fence itself — leak the
+        // stragglers instead. Normal loops end with a readback (train's
+        // final sync, `state()`/`state_vec`) that empties the pool; this
+        // only fires on abort paths, bounded at `read_interval` small
+        // literals per pool lifetime.
+        self.quarantine();
     }
 }
 
@@ -251,6 +346,29 @@ mod tests {
         let rt = Runtime::shared().unwrap();
         assert!(rt.upload_i32(&[1, 2, 3], &[2, 2]).is_err());
         assert!(tokens_literal(&[1, 2, 3], 2, 2).is_err());
+    }
+
+    #[test]
+    fn staging_pool_roundtrip_and_retire() {
+        let rt = Runtime::shared().unwrap();
+        let mut pool = StagingPool::new();
+        let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let buf = pool.upload_f32(&rt, &data).unwrap();
+        assert_eq!(pool.in_flight(), 1);
+        // the dependent readback (here: the buffer itself) is the fence
+        // that makes retiring the staged literal sound
+        let back = rt.download_f32(&buf).unwrap();
+        assert_eq!(data, back);
+        pool.retire();
+        assert_eq!(pool.in_flight(), 0);
+
+        let tok = pool.upload_tokens(&rt, &[1, 2, 3, 4, 5, 6], 2, 3).unwrap();
+        assert_eq!(pool.in_flight(), 1);
+        let _ = tok.to_literal_sync().unwrap();
+        pool.retire();
+        // a bad shape never stages anything
+        assert!(pool.upload_tokens(&rt, &[1, 2, 3], 2, 2).is_err());
+        assert_eq!(pool.in_flight(), 0);
     }
 
     #[test]

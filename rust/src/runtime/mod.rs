@@ -23,5 +23,5 @@ pub mod client;
 pub mod state;
 
 pub use artifact::{ArtifactIndex, Manifest, TensorSpec};
-pub use client::{HostBuffer, Program, Runtime};
+pub use client::{HostBuffer, Program, Runtime, StagingPool};
 pub use state::StateHost;

@@ -2,16 +2,24 @@
 //! program, uploading only the token batch each step and reading the state
 //! back every `read_interval` steps (the loss ring recovers the per-step
 //! curve in between).
+//!
+//! The loop is pipelined and allocation-free in the steady state
+//! (DESIGN.md §Hot-loop pipeline): batches arrive through the
+//! [`BatchSource`] abstraction (the synchronous iterator or the async
+//! prefetch ring, byte-identical streams), token uploads go through a
+//! [`client::StagingPool`] so no per-step sync readback or literal churn
+//! remains, and the periodic state sync doubles as the fence that retires
+//! staged uploads.
 
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{RunCfg, VariantCfg};
-use crate::data::dataset::BatchIter;
+use crate::data::dataset::BatchSource;
+use crate::runtime::state as slots;
 use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
 use crate::train::metrics::{MetricsLog, Record};
-use crate::runtime::state as slots;
 
 pub struct Trainer {
     pub rt: Runtime,
@@ -20,6 +28,7 @@ pub struct Trainer {
     pub run: RunCfg,
     step_prog: std::sync::Arc<Program>,
     state_buf: xla::PjRtBuffer,
+    staging: client::StagingPool,
     last_host: StateHost,
     last_ring_step: usize,
 }
@@ -60,12 +69,17 @@ impl Trainer {
             run,
             step_prog,
             state_buf: out,
+            staging: client::StagingPool::new(),
             last_host: host,
             last_ring_step: 0,
         })
     }
 
-    /// Resume from a checkpointed state vector.
+    /// Resume from a checkpointed state vector. The upload is staged — the
+    /// source literal stays alive in the trainer's pool until the first
+    /// state readback fences it — so resume pays neither the old
+    /// belt-and-braces full-state readback nor an extra host copy of the
+    /// checkpoint vector.
     pub fn from_state(
         rt: &Runtime,
         idx: &ArtifactIndex,
@@ -78,12 +92,10 @@ impl Trainer {
             return Err(anyhow!("checkpoint length mismatch"));
         }
         let step_prog = rt.load_program(&idx.program_path(&variant.name, "step"))?;
-        let host = StateHost::new(state.clone(), &manifest)?;
-        let up = rt.upload_f32(&state)?;
-        // one sync readback forces the async upload to complete before the
-        // source literal drops (HostBuffer keeps it alive anyway; this is
-        // belt-and-braces for the resume path)
-        let _ = rt.download_f32(&up.buf)?;
+        let mut staging = client::StagingPool::new();
+        let state_buf = staging.upload_f32(rt, &state)?;
+        // the checkpoint vector itself becomes the host mirror — no clone
+        let host = StateHost::new(state, &manifest)?;
         let last_ring_step = host.step();
         Ok(Trainer {
             rt: rt.clone(),
@@ -91,7 +103,8 @@ impl Trainer {
             variant: variant.clone(),
             run,
             step_prog,
-            state_buf: up.buf,
+            state_buf,
+            staging,
             last_host: host,
             last_ring_step,
         })
@@ -101,24 +114,51 @@ impl Trainer {
         &self.last_host
     }
 
-    /// Force a state readback now (updates `state()`).
+    /// Force a state readback now (updates `state()`). The readback also
+    /// proves every staged upload was consumed, so the pool retires; if
+    /// the readback itself fails, the fence never happened and the staged
+    /// literals are quarantined (leaked) instead of freed later.
     pub fn sync(&mut self) -> Result<&StateHost> {
-        let data = self.rt.download_f32(&self.state_buf)?;
-        self.last_host = StateHost::new(data, &self.manifest)?;
-        Ok(&self.last_host)
+        match self.rt.download_f32(&self.state_buf) {
+            Ok(data) => {
+                self.staging.retire();
+                self.last_host = StateHost::new(data, &self.manifest)?;
+                Ok(&self.last_host)
+            }
+            Err(e) => {
+                self.staging.quarantine();
+                Err(e)
+            }
+        }
     }
 
     /// Run `n_steps` training steps pulling batches from `batches`.
     /// Stops early (with `diverged = true`) if the loss goes non-finite or
     /// explodes past `20 + initial`; that is an observation, not an error —
     /// the lr-stability figures rely on recording divergence.
-    pub fn train(&mut self, batches: &mut BatchIter, n_steps: usize) -> Result<TrainResult> {
+    pub fn train<B: BatchSource>(&mut self, batches: &mut B, n_steps: usize) -> Result<TrainResult> {
         self.train_with(batches, n_steps, &mut MetricsLog::in_memory(&self.variant.name))
     }
 
-    pub fn train_with(
+    pub fn train_with<B: BatchSource>(
         &mut self,
-        batches: &mut BatchIter,
+        batches: &mut B,
+        n_steps: usize,
+        metrics: &mut MetricsLog,
+    ) -> Result<TrainResult> {
+        let res = self.train_with_inner(batches, n_steps, metrics);
+        if res.is_err() {
+            // an error mid-loop (failed upload/execute/readback) can
+            // leave staged uploads unfenced; a later retire must not
+            // free them (StagingPool contract)
+            self.staging.quarantine();
+        }
+        res
+    }
+
+    fn train_with_inner<B: BatchSource>(
+        &mut self,
+        batches: &mut B,
         n_steps: usize,
         metrics: &mut MetricsLog,
     ) -> Result<TrainResult> {
@@ -132,13 +172,11 @@ impl Trainer {
         let mut all_records: Vec<Record> = Vec::new();
 
         for k in 0..n_steps {
-            let batch = batches.next_batch();
-            // the token literal must outlive the execute (async upload);
-            // `run_buffers` is synchronous, so dropping it afterwards is safe
-            let tok_lit = client::tokens_literal(&batch, b, w)?;
-            let tok = self.rt.upload_literal(&tok_lit).context("upload tokens")?;
+            let batch = batches.next_batch_ref();
+            // staged upload: the literal is parked in the pool until the
+            // next sync's readback proves the async copy was consumed
+            let tok = self.staging.upload_tokens(&self.rt, batch, b, w).context("upload tokens")?;
             let out = self.step_prog.run_buffers(&[&self.state_buf, &tok])?;
-            drop(tok_lit);
             self.state_buf = out;
             steps_done = k + 1;
 
@@ -181,9 +219,25 @@ impl Trainer {
         })
     }
 
-    /// Current state vector (host copy) for checkpointing.
+    /// Current state vector (host copy) for checkpointing: one readback,
+    /// returned directly — no second full-state allocation. Callers that
+    /// only inspect should use the by-ref [`Trainer::state_ref`] (or
+    /// [`Trainer::sync`]) instead.
     pub fn state_vec(&mut self) -> Result<Vec<f32>> {
-        Ok(self.sync()?.data.clone())
+        match self.rt.download_f32(&self.state_buf) {
+            Ok(data) => {
+                self.staging.retire();
+                Ok(data)
+            }
+            Err(e) => {
+                self.staging.quarantine();
+                Err(e)
+            }
+        }
+    }
+
+    /// Fresh state readback, lent by reference (also updates `state()`).
+    pub fn state_ref(&mut self) -> Result<&[f32]> {
+        Ok(&self.sync()?.data)
     }
 }
-

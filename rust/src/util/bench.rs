@@ -2,10 +2,20 @@
 //! (criterion itself is not vendored). Warms up, runs timed iterations,
 //! reports mean / std / p50 / p95 and optional throughput; `BENCH_FAST=1`
 //! shrinks iteration counts for smoke runs.
+//!
+//! Machine-readable output: every result is recorded process-wide, and a
+//! bench main that ends with [`write_json`] dumps them to the path in the
+//! `BENCH_JSON` env var (via the in-tree [`crate::util::json`]), so CI
+//! can track the committed latency trajectory without scraping stdout.
 
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::{mean, quantile, std};
+
+/// Every [`BenchResult`] produced in this process, in completion order.
+static RECORDED: Mutex<Vec<BenchResult>> = Mutex::new(Vec::new());
 
 pub struct Bench {
     name: String,
@@ -76,6 +86,7 @@ impl Bench {
             fmt_dur(r.p95_s),
             r.iters
         );
+        RECORDED.lock().unwrap().push(r.clone());
         r
     }
 
@@ -88,6 +99,45 @@ impl Bench {
             items / r.mean_s
         );
         r
+    }
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("mean_s", Json::num(self.mean_s)),
+            ("std_s", Json::num(self.std_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("iters", Json::num(self.iters as f64)),
+        ])
+    }
+}
+
+/// Dump every result recorded so far to the file named by `BENCH_JSON`
+/// (no-op when unset) as `{"suite": ..., "results": [...]}`. Call at the
+/// end of a bench main; `make bench` sets the env var per suite.
+pub fn write_json(suite: &str) {
+    let Ok(path) = std::env::var("BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    write_json_to(suite, std::path::Path::new(&path));
+}
+
+/// Env-free core of [`write_json`] (also what the tests drive, so they
+/// never mutate the process environment under the threaded harness).
+pub fn write_json_to(suite: &str, path: &std::path::Path) {
+    let results: Vec<Json> =
+        RECORDED.lock().unwrap().iter().map(|r| r.to_json()).collect();
+    let j = Json::obj(vec![
+        ("suite", Json::str(suite)),
+        ("results", Json::Arr(results)),
+    ]);
+    match std::fs::write(path, j.to_string()) {
+        Ok(()) => println!("\nbench json -> {}", path.display()),
+        Err(e) => eprintln!("bench json: writing {}: {e}", path.display()),
     }
 }
 
@@ -126,5 +176,25 @@ mod tests {
         });
         assert!(r.mean_s > 0.0);
         assert!(r.p50_s <= r.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn json_emission_round_trips() {
+        // drive the env-free core directly: mutating BENCH_JSON here
+        // would race other tests' env reads under the threaded harness
+        let _ = Bench::new("json-probe").iters(1).run(|| 1 + 1);
+        let path = std::env::temp_dir()
+            .join(format!("spectron-bench-{}.json", std::process::id()));
+        write_json_to("unit", &path);
+        let j = Json::parse_file(&path).unwrap();
+        assert_eq!(j.req("suite").unwrap().as_str(), Some("unit"));
+        let results = j.req("results").unwrap().as_arr().unwrap();
+        assert!(!results.is_empty());
+        let row = results.iter().find(|r| {
+            r.get("name").and_then(|n| n.as_str()) == Some("json-probe")
+        });
+        let row = row.expect("recorded row present");
+        assert!(row.req("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        std::fs::remove_file(&path).ok();
     }
 }

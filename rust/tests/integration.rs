@@ -12,6 +12,7 @@ use spectron::coordinator::{DataParallelSim, GradAccumulator};
 use spectron::data::bpe::Bpe;
 use spectron::data::corpus::{Corpus, CorpusCfg};
 use spectron::data::dataset::{Dataset, Split};
+use spectron::data::prefetch::Prefetcher;
 use spectron::eval::{downstream, perplexity, Evaluator};
 use spectron::linalg;
 use spectron::runtime::state as slots;
@@ -232,6 +233,70 @@ fn coordinator_end_to_end() {
     assert!(last < first, "dp training did not progress: {first} -> {last}");
     let st = dp.state().unwrap();
     assert_eq!(st.step(), 6);
+}
+
+/// Pipelined hot path: training through the async prefetch ring is
+/// bit-identical to training through the synchronous iterator (the
+/// prefetcher only moves *when* a batch is packed, never what's in it or
+/// how it is uploaded).
+#[test]
+fn prefetched_training_matches_sync() {
+    let Some(idx) = artifacts() else { return };
+    let reg = Registry::load().unwrap();
+    let rt = Runtime::shared().unwrap();
+    let v = reg.variant(VARIANT).unwrap();
+    let ds = tiny_dataset(v.model.vocab);
+
+    let mut t_sync = Trainer::new(&rt, &idx, v, run_cfg(12)).unwrap();
+    let mut batches = ds.batches(Split::Train, v.batch, 3);
+    t_sync.train(&mut batches, 12).unwrap();
+
+    let mut t_pf = Trainer::new(&rt, &idx, v, run_cfg(12)).unwrap();
+    let mut pf = Prefetcher::new(ds.clone(), Split::Train, v.batch, 3);
+    t_pf.train(&mut pf, 12).unwrap();
+
+    let a = t_sync.state_vec().unwrap();
+    let b = t_pf.state_vec().unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "state diverged at slot {i}");
+    }
+}
+
+/// Threaded DP (persistent per-worker PJRT clients) is bit-identical to
+/// the sequential reference: same reduced gradients, same state, for
+/// every tested worker count.
+#[test]
+fn parallel_dp_matches_sequential() {
+    let Some(idx) = artifacts() else { return };
+    let reg = Registry::load().unwrap();
+    let rt = Runtime::shared().unwrap();
+    let v = reg.variant(VARIANT).unwrap();
+    let ds = tiny_dataset(v.model.vocab);
+
+    for n in [1usize, 2, 3, 8] {
+        let mut seq = DataParallelSim::new(&rt, &idx, v, run_cfg(6), &ds, n).unwrap();
+        let mut par = DataParallelSim::new_threaded(&rt, &idx, v, run_cfg(6), &ds, n).unwrap();
+        assert!(!seq.is_threaded() && par.is_threaded());
+        for s in 0..3 {
+            let a = seq.step().unwrap();
+            let b = par.step().unwrap();
+            assert_eq!(a.worker_losses.len(), n);
+            let la: Vec<u64> = a.worker_losses.iter().map(|x| x.to_bits()).collect();
+            let lb: Vec<u64> = b.worker_losses.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(la, lb, "worker losses, n={n} step {s}");
+            let ga: Vec<u32> = seq.last_reduced_grad().iter().map(|x| x.to_bits()).collect();
+            let gb: Vec<u32> = par.last_reduced_grad().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ga.len(), gb.len());
+            assert!(ga == gb, "reduced grad bits differ, n={n} step {s}");
+        }
+        let sa = seq.state().unwrap().data;
+        let sb = par.state().unwrap().data;
+        for (i, (x, y)) in sa.iter().zip(&sb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "state slot {i}, n={n}");
+        }
+        assert_eq!(seq.state().unwrap().step(), 3);
+    }
 }
 
 /// Divergence is observed, not fatal: absurd lr on naive sgd.
