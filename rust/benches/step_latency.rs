@@ -18,17 +18,42 @@ use spectron::train::Trainer;
 use spectron::util::bench::{self, header, Bench};
 
 fn main() {
-    let root = ArtifactIndex::default_root();
-    if !root.join("index.json").exists() {
-        println!("step_latency: artifacts missing, run `make artifacts`");
-        return;
-    }
-    let idx = ArtifactIndex::load(&root).unwrap();
     let reg = Registry::load().unwrap();
-    let rt = Runtime::shared().unwrap();
     let corpus = Corpus::new(CorpusCfg::default());
     let bpe = Bpe::train(&corpus.text_range(1, 120), 1024);
     let ds = Arc::new(Dataset::build_with(&corpus, &bpe, 600, 128));
+
+    // the native-backend rows run with or without artifacts, so the
+    // PJRT-vs-native overhead lands in BENCH_step_latency.json whenever
+    // both are available and the native trajectory is tracked always
+    header("native backend train-step (pure Rust, no artifacts)");
+    let mut native_tiny_s = f64::NAN;
+    for (name, label) in [
+        ("fact-z0-spectron", "native z0 Spectron"),
+        ("fact-s-spectron", "native tiny-s Spectron"),
+    ] {
+        let v = reg.variant(name).unwrap();
+        let run = RunCfg { total_steps: 1000, read_interval: 64, ..RunCfg::default() };
+        let mut trainer = Trainer::native(v, run).unwrap();
+        let mut batches = ds.batches(Split::Train, v.batch, 0);
+        trainer.train(&mut batches, 1).unwrap(); // touch all buffers once
+        let r = Bench::new(&format!("{label} [{name}]"))
+            .warmup(1)
+            .iters(3)
+            .run(|| trainer.train(&mut batches, 1).unwrap());
+        if name == "fact-s-spectron" {
+            native_tiny_s = r.mean_s;
+        }
+    }
+
+    let root = ArtifactIndex::default_root();
+    if !root.join("index.json").exists() {
+        println!("step_latency: artifacts missing, pjrt rows skipped (run `make artifacts`)");
+        bench::write_json("step_latency");
+        return;
+    }
+    let idx = ArtifactIndex::load(&root).unwrap();
+    let rt = Runtime::shared().unwrap();
 
     header("train-step latency per optimizer (tiny-s, batch 8 x seq 128)");
     let variants = [
@@ -69,6 +94,17 @@ fn main() {
         println!("\noverhead vs naive AdamW:");
         for (label, t) in &rows {
             println!("  {:<28} {:+7.1}%", label, (t / base - 1.0) * 100.0);
+        }
+    }
+
+    // the interpret-vs-compile gap the native backend trades for zero
+    // dependencies (docs/adr/003-native-backend.md)
+    if let Some(pjrt) = rows.iter().find(|r| r.0.contains("Spectron (ortho")).map(|r| r.1) {
+        if native_tiny_s.is_finite() {
+            println!(
+                "\nnative-vs-pjrt (tiny-s spectron): {:.1}x slower natively",
+                native_tiny_s / pjrt
+            );
         }
     }
 

@@ -37,6 +37,10 @@ pub struct VariantCfg {
     pub optimizer: String,
     pub batch: usize,
     pub telemetry: bool,
+    /// matrix tracked by the spectral telemetry (python default "attn_o")
+    pub telemetry_matrix: String,
+    /// AdamW lr multiplier for non-matrix tensors under matrix optimizers
+    pub emb_lr_mult: f64,
     pub programs: Vec<String>,
 }
 
@@ -107,6 +111,12 @@ impl Registry {
             .get("telemetry")
             .and_then(|v| v.as_bool())
             .unwrap_or(true);
+        let d_tel_mat = defaults
+            .get("telemetry_matrix")
+            .and_then(|v| v.as_str())
+            .unwrap_or("attn_o")
+            .to_string();
+        let d_emb_mult = opt_f64(defaults, "emb_lr_mult").unwrap_or(0.3);
 
         let mut variants = BTreeMap::new();
         for (table, kv) in &var_doc {
@@ -149,6 +159,12 @@ impl Registry {
                             .get("telemetry")
                             .and_then(|v| v.as_bool())
                             .unwrap_or(d_tel),
+                        telemetry_matrix: kv
+                            .get("telemetry_matrix")
+                            .and_then(|v| v.as_str())
+                            .map(str::to_string)
+                            .unwrap_or_else(|| d_tel_mat.clone()),
+                        emb_lr_mult: opt_f64(kv, "emb_lr_mult").unwrap_or(d_emb_mult),
                         programs,
                     },
                 );
@@ -221,6 +237,8 @@ mod tests {
         assert_eq!(v.model.hidden, 128);
         assert_eq!(v.optimizer, "spectron");
         assert_eq!(v.rank_ratio, 0.25);
+        assert_eq!(v.telemetry_matrix, "attn_o");
+        assert!((v.emb_lr_mult - 0.3).abs() < 1e-12);
         assert!(v.programs.iter().any(|p| p == "grad"));
         assert!(reg.variant("no-such-variant").is_err());
     }

@@ -3,56 +3,52 @@
 //! large-batch step (test_grad_linearity in python/tests establishes the
 //! linearity the average relies on).
 //!
-//! The microbatch loop follows the pipelined-hot-path conventions
-//! (DESIGN.md §Hot-loop pipeline): batches arrive via [`BatchSource`]
-//! (reused storage), token/grad uploads are staged in a
-//! [`client::StagingPool`], and each grad readback is the fence that lets
-//! the previous step's staged literals retire.
+//! Backend-agnostic (DESIGN.md §Backends): under PJRT the microbatch
+//! loop follows the pipelined-hot-path conventions (token/grad uploads
+//! staged, each grad readback the retire fence); natively the same calls
+//! interpret the state in-process, where `grad`+`apply` is bit-identical
+//! to the fused step by construction.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::{RunCfg, VariantCfg};
 use crate::data::dataset::BatchSource;
+use crate::runtime::backend::{Backend, StateBuf};
 use crate::runtime::state as slots;
-use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
+use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime, StateHost};
 
 pub struct GradAccumulator {
-    rt: Runtime,
+    backend: Box<dyn Backend>,
     manifest: Manifest,
-    grad_prog: std::sync::Arc<Program>,
-    apply_prog: std::sync::Arc<Program>,
-    state_buf: xla::PjRtBuffer,
-    staging: client::StagingPool,
+    state_buf: StateBuf,
 }
 
 impl GradAccumulator {
+    /// PJRT path (requires artifacts with `grad`/`apply` programs).
     pub fn new(
         rt: &Runtime,
         idx: &ArtifactIndex,
         variant: &VariantCfg,
         run: RunCfg,
     ) -> Result<GradAccumulator> {
-        let manifest = idx.manifest(&variant.name)?;
+        Self::with_backend(Box::new(PjrtBackend::new(rt, idx, &variant.name)?), run)
+    }
+
+    /// Native path: every non-selfguided variant has the split step.
+    pub fn native(variant: &VariantCfg, run: RunCfg) -> Result<GradAccumulator> {
+        Self::with_backend(Box::new(NativeBackend::new(variant)?), run)
+    }
+
+    pub fn with_backend(mut backend: Box<dyn Backend>, run: RunCfg) -> Result<GradAccumulator> {
+        let manifest = backend.manifest().clone();
         anyhow::ensure!(
             manifest.programs.contains_key("grad") && manifest.programs.contains_key("apply"),
             "variant {} lacks grad/apply programs",
-            variant.name
+            manifest.variant
         );
-        let init = rt.load_program(&idx.program_path(&variant.name, "init"))?;
-        let grad_prog = rt.load_program(&idx.program_path(&variant.name, "grad"))?;
-        let apply_prog = rt.load_program(&idx.program_path(&variant.name, "apply"))?;
         let knobs = slots::knobs(&run);
-        let state_buf = init
-            .run_literals(&[client::scalar_i32(run.seed as i32), client::vec_f32(&knobs)])
-            .context("init")?;
-        Ok(GradAccumulator {
-            rt: rt.clone(),
-            manifest,
-            grad_prog,
-            apply_prog,
-            state_buf,
-            staging: client::StagingPool::new(),
-        })
+        let state_buf = backend.init(run.seed, &knobs)?;
+        Ok(GradAccumulator { backend, manifest, state_buf })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -62,55 +58,29 @@ impl GradAccumulator {
     /// One compound step: `micro` gradient microbatches, averaged, applied.
     /// Returns the averaged loss.
     pub fn step<B: BatchSource>(&mut self, batches: &mut B, micro: usize) -> Result<f64> {
-        let res = self.step_inner(batches, micro);
-        if res.is_err() {
-            // failed upload/execute/readback: staged literals may be
-            // unfenced, so they must be leaked, not freed later
-            self.staging.quarantine();
-        }
-        res
-    }
-
-    fn step_inner<B: BatchSource>(&mut self, batches: &mut B, micro: usize) -> Result<f64> {
         anyhow::ensure!(micro >= 1);
-        let b = self.manifest.batch;
-        let w = self.manifest.seq_len + 1;
         let g_len = 1 + self.manifest.n_params;
         let mut acc = vec![0f32; g_len];
         for _ in 0..micro {
             let mb = batches.next_batch_ref();
-            let tok = self.staging.upload_tokens(&self.rt, mb, b, w)?;
-            let out = self.grad_prog.run_buffers(&[&self.state_buf, &tok])?;
-            let g = self.rt.download_f32(&out)?;
+            let g = self.backend.grad(&self.state_buf, mb)?;
             anyhow::ensure!(g.len() == g_len, "grad length {}", g.len());
             for (a, v) in acc.iter_mut().zip(&g) {
                 *a += v;
             }
         }
-        // every token upload above (and the previous step's staged grad
-        // vector) is upstream of a grad readback that just returned
-        self.staging.retire();
         let inv = 1.0 / micro as f32;
         for a in acc.iter_mut() {
             *a *= inv;
         }
         let loss = acc[0] as f64;
-        let g_buf = self.staging.upload_f32(&self.rt, &acc)?;
-        let out = self.apply_prog.run_buffers(&[&self.state_buf, &g_buf])?;
+        let out = self.backend.apply(&self.state_buf, &acc)?;
         self.state_buf = out;
         Ok(loss)
     }
 
     pub fn state(&mut self) -> Result<StateHost> {
-        match self.rt.download_f32(&self.state_buf) {
-            Ok(data) => {
-                self.staging.retire();
-                StateHost::new(data, &self.manifest)
-            }
-            Err(e) => {
-                self.staging.quarantine();
-                Err(e)
-            }
-        }
+        let data = self.backend.download(&self.state_buf)?;
+        StateHost::new(data, &self.manifest)
     }
 }

@@ -10,49 +10,46 @@
 //! maintains.
 //!
 //! Two execution modes share one coordinator (DESIGN.md §Hot-loop pipeline;
-//! threading decision in docs/adr/002-pipelined-step-loop.md):
+//! threading decision in docs/adr/002-pipelined-step-loop.md), and both
+//! run on either backend (DESIGN.md §Backends):
 //!
 //! * **sequential** ([`DataParallelSim::new`]) — per-worker grads run one
-//!   after another on the coordinator's client, as a real single-process
+//!   after another on the coordinator's backend, as a real single-process
 //!   simulator would; the reference for equivalence tests.
 //! * **threaded** ([`DataParallelSim::new_threaded`]) — per-worker grads
 //!   fan out to persistent worker threads. The xla wrapper types are
 //!   `!Send` (one PJRT client per thread, DESIGN.md §Conventions), so
-//!   workers own their client + compiled `grad` program for their whole
-//!   life and receive only `Send` data: an `Arc` of the replicated state
-//!   (the per-step broadcast a real DP runtime performs) and a recycled
-//!   token buffer. Gradients return in worker order, so the tree
-//!   reduction consumes them exactly as the sequential path does and the
-//!   two modes stay bit-identical.
+//!   each worker constructs its own backend from a [`BackendFactory`] and
+//!   owns it for its whole life, receiving only `Send` data: an `Arc` of
+//!   the replicated state (the per-step broadcast a real DP runtime
+//!   performs) and a recycled token buffer. Gradients return in worker
+//!   order, so the tree reduction consumes them exactly as the sequential
+//!   path does and the two modes stay bit-identical.
 
-use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::config::{RunCfg, VariantCfg};
 use crate::data::dataset::{BatchIter, Dataset, Split};
+use crate::runtime::backend::{self, Backend, BackendFactory, StateBuf};
 use crate::runtime::state as slots;
-use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
+use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime, StateHost};
 
 pub struct DataParallelSim<'d> {
     /// declared first: fields drop in declaration order, and the worker
-    /// pool's join-on-drop must finish (clients torn down) before the
-    /// coordinator's own runtime handle can go away
+    /// pool's join-on-drop must finish (worker backends torn down) before
+    /// the coordinator's own backend can go away
     pool: Option<WorkerPool>,
-    rt: Runtime,
+    backend: Box<dyn Backend>,
     manifest: Manifest,
-    /// compiled only in sequential mode (threaded workers own their copy)
-    grad_prog: Option<std::sync::Arc<Program>>,
-    apply_prog: std::sync::Arc<Program>,
-    state_buf: xla::PjRtBuffer,
+    state_buf: StateBuf,
     shards: Vec<BatchIter<'d>>,
     /// reusable per-worker token buffers (cycle through the worker pool
     /// in threaded mode)
     token_bufs: Vec<Vec<i32>>,
-    staging: client::StagingPool,
     /// step sequence number: requests and responses are tagged so a step
     /// aborted by an error can never pair its stale responses with the
     /// next step's requests
@@ -61,8 +58,8 @@ pub struct DataParallelSim<'d> {
 }
 
 impl<'d> DataParallelSim<'d> {
-    /// Sequential-execution simulator (grads one after another on the
-    /// coordinator's client).
+    /// Sequential-execution simulator on PJRT (grads one after another on
+    /// the coordinator's backend).
     pub fn new(
         rt: &Runtime,
         idx: &ArtifactIndex,
@@ -71,13 +68,13 @@ impl<'d> DataParallelSim<'d> {
         ds: &'d Dataset,
         n_workers: usize,
     ) -> Result<DataParallelSim<'d>> {
-        Self::build(rt, idx, variant, run, ds, n_workers, false)
+        let coord = Box::new(PjrtBackend::new(rt, idx, &variant.name)?);
+        Self::with_backend(coord, None, variant, run, ds, n_workers)
     }
 
-    /// Threaded simulator: one persistent OS thread per worker, each with
-    /// its own PJRT client and compiled `grad` program. Bit-identical to
-    /// the sequential mode (the integration suite asserts this for
-    /// 1/2/3/8 workers).
+    /// Threaded simulator on PJRT: one persistent OS thread per worker,
+    /// each with its own client + compiled `grad` program. Bit-identical
+    /// to the sequential mode (the integration suite asserts this).
     pub fn new_threaded(
         rt: &Runtime,
         idx: &ArtifactIndex,
@@ -86,56 +83,54 @@ impl<'d> DataParallelSim<'d> {
         ds: &'d Dataset,
         n_workers: usize,
     ) -> Result<DataParallelSim<'d>> {
-        Self::build(rt, idx, variant, run, ds, n_workers, true)
+        let coord = Box::new(PjrtBackend::new(rt, idx, &variant.name)?);
+        let factory = backend::pjrt_factory(idx.clone(), variant.name.clone());
+        Self::with_backend(coord, Some(factory), variant, run, ds, n_workers)
     }
 
-    fn build(
-        rt: &Runtime,
-        idx: &ArtifactIndex,
+    /// Native simulator, sequential or threaded — no artifacts involved.
+    pub fn native(
         variant: &VariantCfg,
         run: RunCfg,
         ds: &'d Dataset,
         n_workers: usize,
         threaded: bool,
     ) -> Result<DataParallelSim<'d>> {
+        let coord = Box::new(NativeBackend::new(variant)?);
+        let factory = threaded.then(|| backend::native_factory(variant.clone()));
+        Self::with_backend(coord, factory, variant, run, ds, n_workers)
+    }
+
+    /// Generic constructor: a coordinator backend plus, for threaded
+    /// mode, a factory each worker thread builds its own backend from.
+    pub fn with_backend(
+        mut coord: Box<dyn Backend>,
+        worker_factory: Option<BackendFactory>,
+        variant: &VariantCfg,
+        run: RunCfg,
+        ds: &'d Dataset,
+        n_workers: usize,
+    ) -> Result<DataParallelSim<'d>> {
         anyhow::ensure!(n_workers >= 1);
-        let manifest = idx.manifest(&variant.name)?;
-        let init = rt.load_program(&idx.program_path(&variant.name, "init"))?;
-        // the coordinator executes grad itself only in sequential mode;
-        // threaded workers compile their own copy on their own client
-        let grad_prog = if threaded {
-            None
-        } else {
-            Some(rt.load_program(&idx.program_path(&variant.name, "grad"))?)
-        };
-        let apply_prog = rt.load_program(&idx.program_path(&variant.name, "apply"))?;
+        let manifest = coord.manifest().clone();
+        anyhow::ensure!(
+            manifest.programs.contains_key("grad") && manifest.programs.contains_key("apply"),
+            "variant {} lacks grad/apply programs",
+            manifest.variant
+        );
         let knobs = slots::knobs(&run);
-        let state_buf = init
-            .run_literals(&[client::scalar_i32(run.seed as i32), client::vec_f32(&knobs)])
-            .context("init")?;
+        let state_buf = coord.init(run.seed, &knobs)?;
         let shards = (0..n_workers)
             .map(|w| ds.batches_sharded(Split::Train, variant.batch, run.seed, w, n_workers))
             .collect();
-        let pool = if threaded {
-            Some(WorkerPool::spawn(
-                idx.program_path(&variant.name, "grad"),
-                manifest.batch,
-                manifest.seq_len + 1,
-                n_workers,
-            ))
-        } else {
-            None
-        };
+        let pool = worker_factory.map(|f| WorkerPool::spawn(f, n_workers));
         Ok(DataParallelSim {
             pool,
-            rt: rt.clone(),
+            backend: coord,
             manifest,
-            grad_prog,
-            apply_prog,
             state_buf,
             shards,
             token_bufs: vec![Vec::new(); n_workers],
-            staging: client::StagingPool::new(),
             step_seq: 0,
             last_reduced: Vec::new(),
         })
@@ -149,20 +144,10 @@ impl<'d> DataParallelSim<'d> {
         self.pool.is_some()
     }
 
-    /// One data-parallel step. Returns (mean loss, max |grad divergence|
-    /// across workers for the first few elements — a replica-consistency
-    /// telemetry the tests assert on).
+    /// One data-parallel step: per-worker grads, tree all-reduce, one
+    /// apply. Any backend error aborts the step; staged uploads are
+    /// quarantined inside the backend (DESIGN.md §Hot-loop pipeline).
     pub fn step(&mut self) -> Result<DpStepStats> {
-        let res = self.step_inner();
-        if res.is_err() {
-            // failed upload/execute/readback: staged literals may be
-            // unfenced, so they must be leaked, not freed later
-            self.staging.quarantine();
-        }
-        res
-    }
-
-    fn step_inner(&mut self) -> Result<DpStepStats> {
         let g_len = 1 + self.manifest.n_params;
         let worker_grads = if self.pool.is_some() {
             self.grads_threaded(g_len)?
@@ -173,11 +158,7 @@ impl<'d> DataParallelSim<'d> {
         let losses: Vec<f64> = worker_grads.iter().map(|g| g[0] as f64).collect();
         let reduced = tree_allreduce_mean(worker_grads);
 
-        // every literal staged so far is fenced by the grad readbacks (or
-        // the state broadcast) above; retire before staging the apply
-        self.staging.retire();
-        let g_buf = self.staging.upload_f32(&self.rt, &reduced)?;
-        let out = self.apply_prog.run_buffers(&[&self.state_buf, &g_buf])?;
+        let out = self.backend.apply(&self.state_buf, &reduced)?;
         self.state_buf = out;
 
         let mean_loss = losses.iter().sum::<f64>() / losses.len() as f64;
@@ -188,18 +169,13 @@ impl<'d> DataParallelSim<'d> {
     }
 
     /// Per-worker gradients computed one after another against the SAME
-    /// replicated on-device state buffer.
+    /// replicated state buffer.
     fn grads_sequential(&mut self, g_len: usize) -> Result<Vec<Vec<f32>>> {
-        let b = self.manifest.batch;
-        let w = self.manifest.seq_len + 1;
-        let grad_prog = self.grad_prog.clone().expect("sequential mode has grad_prog");
         let mut grads = Vec::with_capacity(self.shards.len());
         for (wid, shard) in self.shards.iter_mut().enumerate() {
             let buf = &mut self.token_bufs[wid];
             shard.next_batch_into(buf);
-            let tok = self.staging.upload_tokens(&self.rt, buf, b, w)?;
-            let out = grad_prog.run_buffers(&[&self.state_buf, &tok])?;
-            let g = self.rt.download_f32(&out)?;
+            let g = self.backend.grad(&self.state_buf, buf)?;
             anyhow::ensure!(g.len() == g_len, "worker {wid}: grad length {}", g.len());
             grads.push(g);
         }
@@ -213,10 +189,9 @@ impl<'d> DataParallelSim<'d> {
     fn grads_threaded(&mut self, g_len: usize) -> Result<Vec<Vec<f32>>> {
         // the per-step broadcast: one readback of the replicated state,
         // shared with every worker through an Arc (exactly the collective
-        // a real DP runtime performs after apply). The readback also
-        // fences the previous apply's staged upload.
-        let state = Arc::new(self.rt.download_f32(&self.state_buf)?);
-        self.staging.retire();
+        // a real DP runtime performs after apply). On PJRT the readback
+        // also fences the previous apply's staged upload.
+        let state = Arc::new(self.backend.download(&self.state_buf)?);
         // tag this step's traffic: responses from a step aborted by an
         // earlier error must never pair with these requests
         self.step_seq += 1;
@@ -259,16 +234,8 @@ impl<'d> DataParallelSim<'d> {
     }
 
     pub fn state(&mut self) -> Result<StateHost> {
-        match self.rt.download_f32(&self.state_buf) {
-            Ok(data) => {
-                self.staging.retire();
-                StateHost::new(data, &self.manifest)
-            }
-            Err(e) => {
-                self.staging.quarantine();
-                Err(e)
-            }
-        }
+        let data = self.backend.download(&self.state_buf)?;
+        StateHost::new(data, &self.manifest)
     }
 }
 
@@ -305,17 +272,17 @@ struct WorkerPool {
 }
 
 impl WorkerPool {
-    fn spawn(grad_path: PathBuf, batch: usize, width: usize, n: usize) -> WorkerPool {
+    fn spawn(factory: BackendFactory, n: usize) -> WorkerPool {
         let barrier = Arc::new(Barrier::new(n));
         let workers = (0..n)
             .map(|wid| {
                 let (req_tx, req_rx) = channel::<GradReq>();
                 let (resp_tx, resp_rx) = channel::<GradResp>();
-                let path = grad_path.clone();
+                let factory = factory.clone();
                 let barrier = barrier.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("dp-worker-{wid}"))
-                    .spawn(move || worker_main(path, batch, width, req_rx, resp_tx, barrier))
+                    .spawn(move || worker_main(factory, req_rx, resp_tx, barrier))
                     .expect("spawning dp worker");
                 Worker { req_tx: Some(req_tx), resp_rx, handle: Some(handle) }
             })
@@ -331,9 +298,10 @@ impl Drop for WorkerPool {
             w.req_tx = None;
         }
         // ...then join: workers park at a shared barrier before dropping
-        // their clients, and this join blocks until the last teardown —
-        // the coordinator cannot race an execute against a dying client
-        // (same hazard as coordinator::sched documents).
+        // their backends, and this join blocks until the last teardown —
+        // the coordinator cannot race an execute against a dying PJRT
+        // client (same hazard as coordinator::sched documents). A no-op
+        // for native workers, whose teardown is plain data.
         for w in &mut self.workers {
             if let Some(h) = w.handle.take() {
                 let _ = h.join();
@@ -345,7 +313,7 @@ impl Drop for WorkerPool {
 /// Teardown guard: on drop — normal exit and panic unwind alike — it
 /// first CLOSES the worker's channels (so a coordinator blocked in
 /// `recv` gets a disconnect error instead of hanging on a dead worker),
-/// then parks at the barrier for the collective client teardown.
+/// then parks at the barrier for the collective backend teardown.
 struct TeardownGuard {
     barrier: Arc<Barrier>,
     io: Option<(Receiver<GradReq>, Sender<GradResp>)>,
@@ -359,33 +327,30 @@ impl Drop for TeardownGuard {
 }
 
 fn worker_main(
-    grad_path: PathBuf,
-    batch: usize,
-    width: usize,
+    factory: BackendFactory,
     req_rx: Receiver<GradReq>,
     resp_tx: Sender<GradResp>,
     barrier: Arc<Barrier>,
 ) {
-    // One PJRT client per thread (DESIGN.md §Conventions); construction
-    // and the one-time `grad` compile are serialized process-wide inside
-    // Runtime/load_program and memoized for the worker's whole life.
-    let setup = Runtime::new().and_then(|rt| {
-        let prog = rt.load_program(&grad_path)?;
-        Ok((rt, prog))
-    });
-    // Tear PJRT clients down together: destruction must not race executes
-    // in sibling clients (see coordinator::sched). Locals drop in reverse
-    // declaration order, so this guard — declared AFTER `setup` — hangs
-    // up and parks at the barrier BEFORE the client above is destroyed,
-    // on the normal exit and on a panic unwind alike.
+    // One backend per thread: for PJRT that means one client + compiled
+    // `grad` program (DESIGN.md §Conventions), constructed through the
+    // factory so the pool itself never touches a !Send type.
+    let mut setup = factory();
+    // Tear backends down together: PJRT client destruction must not race
+    // executes in sibling clients (see coordinator::sched). Locals drop
+    // in reverse declaration order, so this guard — declared AFTER
+    // `setup` — hangs up and parks at the barrier BEFORE the backend
+    // above is destroyed, on the normal exit and on a panic unwind
+    // alike. The match below therefore borrows `setup` rather than
+    // moving the backend out of it: moving would re-scope the client's
+    // drop to the match arm, ahead of the barrier.
     let guard = TeardownGuard { barrier, io: Some((req_rx, resp_tx)) };
     let (req_rx, resp_tx) = guard.io.as_ref().expect("io parked in guard");
-    match &setup {
-        Ok((rt, prog)) => {
-            let mut staging = client::StagingPool::new();
+    match &mut setup {
+        Ok(be) => {
             while let Ok(req) = req_rx.recv() {
                 let seq = req.seq;
-                let resp = run_grad(rt, prog, &mut staging, req, batch, width);
+                let resp = run_grad(be.as_mut(), req);
                 if resp_tx.send((seq, resp)).is_err() {
                     break; // coordinator gone
                 }
@@ -404,32 +369,17 @@ fn worker_main(
     }
 }
 
-fn run_grad(
-    rt: &Runtime,
-    prog: &Program,
-    staging: &mut client::StagingPool,
-    req: GradReq,
-    batch: usize,
-    width: usize,
-) -> Result<(Vec<f32>, Vec<i32>), String> {
+fn run_grad(be: &mut dyn Backend, req: GradReq) -> Result<(Vec<f32>, Vec<i32>), String> {
     let inner = (|| -> Result<Vec<f32>> {
-        // replicated-state upload + token upload, both staged; the grad
-        // readback below fences them, then the pool retires
-        let st = staging.upload_f32(rt, &req.state)?;
-        let tok = staging.upload_tokens(rt, &req.tokens, batch, width)?;
-        let out = prog.run_buffers(&[&st, &tok])?;
-        let g = rt.download_f32(&out)?;
-        staging.retire();
-        Ok(g)
+        // replicated-state upload + token upload; on PJRT both are staged
+        // and the grad readback inside `grad` fences them (errors
+        // quarantine inside the backend)
+        let sb = be.upload_state(&req.state)?;
+        be.grad(&sb, &req.tokens)
     })();
     match inner {
         Ok(g) => Ok((g, req.tokens)),
-        Err(e) => {
-            // failed execute/readback: the staged state/token literals
-            // may be unfenced — leak, never free at a later retire
-            staging.quarantine();
-            Err(format!("{e:#}"))
-        }
+        Err(e) => Err(format!("{e:#}")),
     }
 }
 

@@ -1,37 +1,65 @@
 //! Evaluation: validation perplexity and the synthetic downstream suites,
 //! both driven through the shared `eval` program (one per architecture,
 //! reused across optimizers — it consumes only the header+params prefix
-//! of the state).
+//! of the state). Backend-agnostic: the same calls run the compiled HLO
+//! under PJRT or the native interpreter (DESIGN.md §Backends).
 
 pub mod downstream;
 pub mod perplexity;
 
+use std::cell::RefCell;
+
 use anyhow::{anyhow, Context, Result};
 
-use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime};
+use crate::config::VariantCfg;
+use crate::runtime::backend::{Backend, StateBuf};
+use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime};
 
-/// Handle on a compiled eval program plus its shapes.
+/// Handle on an eval-capable backend plus its shapes. Interior
+/// mutability: scoring is logically read-only (`&self` everywhere), while
+/// backends take `&mut self` for their transfer scratch.
 pub struct Evaluator {
-    rt: Runtime,
-    prog: std::sync::Arc<Program>,
+    backend: RefCell<Box<dyn Backend>>,
     pub batch: usize,
     pub seq_len: usize,
     pub params_end: usize,
 }
 
 impl Evaluator {
+    /// PJRT path (requires artifacts).
     pub fn new(rt: &Runtime, idx: &ArtifactIndex, manifest: &Manifest) -> Result<Evaluator> {
-        let path = idx.eval_path(&manifest.eval_key);
-        let prog = rt
-            .load_program(&path)
-            .with_context(|| format!("loading eval program {}", manifest.eval_key))?;
-        Ok(Evaluator {
-            rt: rt.clone(),
-            prog,
-            batch: manifest.batch,
-            seq_len: manifest.seq_len,
-            params_end: manifest.params_end,
-        })
+        let backend = PjrtBackend::new(rt, idx, &manifest.variant)
+            .with_context(|| format!("loading eval backend for {}", manifest.eval_key))?;
+        Ok(Self::with_backend(Box::new(backend)))
+    }
+
+    /// Native path: no artifacts involved.
+    pub fn native(variant: &VariantCfg) -> Result<Evaluator> {
+        Ok(Self::with_backend(Box::new(NativeBackend::new(variant)?)))
+    }
+
+    pub fn with_backend(backend: Box<dyn Backend>) -> Evaluator {
+        let m = backend.manifest();
+        let (batch, seq_len, params_end) = (m.batch, m.seq_len, m.params_end);
+        Evaluator {
+            backend: RefCell::new(backend),
+            batch,
+            seq_len,
+            params_end,
+        }
+    }
+
+    /// Park a header+params prefix backend-side (device-resident under
+    /// PJRT) for repeated scoring/decoding without per-call re-upload.
+    pub fn upload_prefix(&self, prefix: &[f32]) -> Result<StateBuf> {
+        if prefix.len() != self.params_end {
+            return Err(anyhow!(
+                "eval prefix length {} != {}",
+                prefix.len(),
+                self.params_end
+            ));
+        }
+        self.backend.borrow_mut().upload_prefix(prefix)
     }
 
     /// Score one batch. `tokens` is row-major (batch, seq_len+1); `spans`
@@ -43,31 +71,17 @@ impl Evaluator {
         tokens: &[i32],
         spans: &[i32],
     ) -> Result<(f64, f64, Vec<f32>, Vec<f32>)> {
-        if prefix.len() != self.params_end {
-            return Err(anyhow!(
-                "eval prefix length {} != {}",
-                prefix.len(),
-                self.params_end
-            ));
-        }
-        let b = self.batch;
-        let w = self.seq_len + 1;
-        anyhow::ensure!(tokens.len() == b * w, "tokens shape");
-        anyhow::ensure!(spans.len() == b * 2, "spans shape");
-        let p_lit = client::vec_f32(prefix);
-        let t_lit = client::tokens_literal(tokens, b, w)?;
-        let s_lit = client::tokens_literal(spans, b, 2)?;
-        let out = self.prog.run_literals(&[p_lit, t_lit, s_lit])?;
-        self.unpack(&out)
+        let pb = self.upload_prefix(prefix)?;
+        self.score_batch_resident(&pb, tokens, spans)
     }
 
-    /// Buffer-to-buffer variant for the serving hot path: the params
-    /// prefix stays resident on device (uploaded once per
+    /// Resident-prefix variant for the serving hot path: the params
+    /// prefix stays backend-side (uploaded once per
     /// [`crate::serve::session::ModelSession`]) instead of being
     /// re-uploaded per call as `score_batch` does.
-    pub fn score_batch_buffers(
+    pub fn score_batch_resident(
         &self,
-        prefix: &xla::PjRtBuffer,
+        prefix: &StateBuf,
         tokens: &[i32],
         spans: &[i32],
     ) -> Result<(f64, f64, Vec<f32>, Vec<f32>)> {
@@ -75,18 +89,27 @@ impl Evaluator {
         let w = self.seq_len + 1;
         anyhow::ensure!(tokens.len() == b * w, "tokens shape");
         anyhow::ensure!(spans.len() == b * 2, "spans shape");
-        let t_buf = self.rt.upload_literal(&client::tokens_literal(tokens, b, w)?)?;
-        let s_buf = self.rt.upload_literal(&client::tokens_literal(spans, b, 2)?)?;
-        let out = self.prog.run_buffers(&[prefix, &t_buf, &s_buf])?;
-        self.unpack(&out)
-    }
-
-    fn unpack(&self, out: &xla::PjRtBuffer) -> Result<(f64, f64, Vec<f32>, Vec<f32>)> {
-        let b = self.batch;
-        let v = self.rt.download_f32(out)?;
+        let v = self.backend.borrow_mut().eval(prefix, tokens, spans)?;
         anyhow::ensure!(v.len() == 2 + 2 * b, "eval output length {}", v.len());
         let nll = v[2..2 + b].to_vec();
         let cnt = v[2 + b..].to_vec();
         Ok((v[0] as f64, v[1] as f64, nll, cnt))
+    }
+
+    /// Next-token logits at one position per sequence (the serving
+    /// decode step); `tokens` is (batch, seq_len), `pos` is (batch,).
+    pub fn logits_resident(
+        &self,
+        prefix: &StateBuf,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<f32>> {
+        self.backend.borrow_mut().logits(prefix, tokens, pos)
+    }
+
+    /// Whether the decode program is available (old PJRT artifact trees
+    /// predate it; native always has it).
+    pub fn has_logits(&self) -> bool {
+        self.backend.borrow().has_logits()
     }
 }

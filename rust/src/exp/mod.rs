@@ -38,18 +38,33 @@ pub struct Ctx {
 pub const VOCAB: usize = 1024;
 pub const SEQ_LEN: usize = 128;
 
+/// The one tokenizer-training recipe: byte-BPE on the first
+/// `400.min(n_docs)` documents. Training, eval and serving must all use
+/// THIS function (not a re-derived sample range) or their token ids
+/// silently stop lining up across `repro train`/`eval`/`serve`.
+pub fn train_bpe(corpus: &Corpus, n_docs: u64) -> Arc<Bpe> {
+    crate::info!("ctx", "training BPE tokenizer (vocab {VOCAB})...");
+    let sample = corpus.text_range(1, 400.min(n_docs.max(1)));
+    Arc::new(Bpe::train(&sample, VOCAB))
+}
+
+/// Corpus + tokenizer + packed dataset — the data side every launcher
+/// command and `Ctx` share (no artifact requirement).
+pub fn build_data(n_docs: u64) -> (Arc<Corpus>, Arc<Bpe>, Arc<Dataset>) {
+    let corpus = Arc::new(Corpus::new(CorpusCfg::default()));
+    let bpe = train_bpe(&corpus, n_docs);
+    crate::info!("ctx", "packing {n_docs} documents...");
+    let ds = Arc::new(Dataset::build_with(&corpus, &bpe, n_docs, SEQ_LEN));
+    (corpus, bpe, ds)
+}
+
 impl Ctx {
     pub fn new(n_docs: u64, smoke: bool) -> Result<Ctx> {
         let reg = Registry::load().map_err(|e| anyhow!(e))?;
         let root = ArtifactIndex::default_root();
         let idx = ArtifactIndex::load(&root)
             .map_err(|e| anyhow!("{e}\n  hint: run `make artifacts` first"))?;
-        let corpus = Arc::new(Corpus::new(CorpusCfg::default()));
-        crate::info!("ctx", "training BPE tokenizer (vocab {VOCAB})...");
-        let sample = corpus.text_range(1, 400.min(n_docs));
-        let bpe = Arc::new(Bpe::train(&sample, VOCAB));
-        crate::info!("ctx", "packing {n_docs} documents...");
-        let ds = Arc::new(Dataset::build_with(&corpus, &bpe, n_docs, SEQ_LEN));
+        let (corpus, bpe, ds) = build_data(n_docs);
         crate::info!(
             "ctx",
             "dataset ready: {} train windows, {} val windows",

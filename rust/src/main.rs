@@ -12,16 +12,24 @@
 //! repro accum-demo [--micro N]       gradient-accumulation training
 //! repro data [--docs N]              dataset/tokenizer statistics
 //! ```
+//!
+//! Most commands take `--backend {pjrt,native,auto}` (DESIGN.md
+//! §Backends): `pjrt` runs the AOT artifacts, `native` the pure-Rust
+//! interpreter (no artifacts, no Python), and `auto` — the default —
+//! picks pjrt when `artifacts/index.json` exists and falls back to
+//! native otherwise, so a fresh checkout trains out of the box.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
-use spectron::config::{Registry, RunCfg};
+use spectron::config::{Registry, RunCfg, VariantCfg};
 use spectron::coordinator::{DataParallelSim, GradAccumulator};
 use spectron::data::dataset::Split;
 use spectron::data::prefetch::Prefetcher;
-use spectron::exp::{self, Ctx};
-use spectron::runtime::{ArtifactIndex, Runtime};
+use spectron::eval::{downstream, perplexity, Evaluator};
+use spectron::exp::{self, build_data, Ctx};
+use spectron::runtime::backend::{Backend, BackendKind};
+use spectron::runtime::{ArtifactIndex, NativeBackend, PjrtBackend, Runtime};
 use spectron::train::{checkpoint, MetricsLog, Trainer};
 use spectron::util::cli::Args;
 use spectron::{info, util};
@@ -58,31 +66,125 @@ fn run() -> Result<()> {
 const HELP: &str = "\
 repro — Spectron (native low-rank LLM pretraining) reproduction
 
-  repro info                         variants + artifact status
+  repro info                         variants + artifact/backend status
   repro train --variant V [--steps N --lr F --wd F --seed N --docs N]
               [--ckpt out.ckpt] [--resume in.ckpt] [--read-interval N]
-              [--no-prefetch]  (async batch prefetch is on by default)
-  repro eval  --ckpt in.ckpt [--docs N] [--items N]
+              [--backend pjrt|native|auto] [--no-prefetch]
+              (async batch prefetch is on by default; --backend native
+               needs no artifacts, no Python — pure Rust end to end)
+  repro eval  --ckpt in.ckpt [--docs N] [--items N] [--backend ...]
   repro exp   <fig1|fig2|fig3|fig4|tab1|fig6|fig9|fig8|tab2|tab3|fig12|fig13|appd|all>
               [--smoke] [--docs N] [--force]
   repro serve --ckpt a.ckpt[,b.ckpt,...] [--addr HOST:PORT] [--max-batch N]
-              [--max-wait-ms F] [--workers N] [--cache N] [--docs N] [--mock]
+              [--max-wait-ms F] [--workers N] [--cache N] [--docs N]
+              [--backend ...] [--mock]
               (line-delimited JSON; ops: generate, score, stats, shutdown;
                --docs must match training so the tokenizers agree)
-  repro dp-demo    [--workers N --steps N --variant V --sequential]
-  repro accum-demo [--micro N --steps N --variant V]
+  repro dp-demo    [--workers N --steps N --variant V --sequential --backend ...]
+  repro accum-demo [--micro N --steps N --variant V --backend ...]
   repro data  [--docs N]
 ";
+
+/// Backend selection shared by the launcher commands: `auto` prefers the
+/// compiled artifacts and falls back to the native interpreter — both
+/// when no artifacts exist at all and when the ones on disk turn out to
+/// be unusable (stale index missing the variant, PJRT runtime failure).
+struct BackendSel {
+    kind: BackendKind,
+    /// `auto` was requested, so per-variant pjrt failures may fall back
+    auto: bool,
+    idx: Option<ArtifactIndex>,
+    rt: Option<Runtime>,
+}
+
+impl BackendSel {
+    fn resolve(args: &mut Args) -> Result<BackendSel> {
+        let choice = args.str("backend", "auto");
+        let auto = choice == "auto";
+        let root = ArtifactIndex::default_root();
+        let kind = match choice.as_str() {
+            "pjrt" => BackendKind::Pjrt,
+            "native" => BackendKind::Native,
+            "auto" => {
+                if root.join("index.json").exists() {
+                    BackendKind::Pjrt
+                } else {
+                    info!("backend", "no artifacts found — using the native backend");
+                    BackendKind::Native
+                }
+            }
+            other => return Err(anyhow!("unknown backend '{other}' (pjrt|native|auto)")),
+        };
+        let (kind, idx, rt) = match kind {
+            BackendKind::Pjrt => {
+                match Self::pjrt_parts(&root) {
+                    Ok((idx, rt)) => (BackendKind::Pjrt, Some(idx), Some(rt)),
+                    Err(e) if auto => {
+                        info!("backend", "pjrt unavailable ({e:#}) — falling back to native");
+                        (BackendKind::Native, None, None)
+                    }
+                    Err(e) => {
+                        return Err(anyhow!(
+                            "{e:#}\n  hint: run `make artifacts` first, or use --backend native"
+                        ))
+                    }
+                }
+            }
+            BackendKind::Native => (BackendKind::Native, None, None),
+        };
+        Ok(BackendSel { kind, auto, idx, rt })
+    }
+
+    fn pjrt_parts(root: &std::path::Path) -> Result<(ArtifactIndex, Runtime)> {
+        let idx = ArtifactIndex::load(root).map_err(|e| anyhow!(e))?;
+        Ok((idx, Runtime::shared()?))
+    }
+
+    fn make(&self, v: &VariantCfg) -> Result<Box<dyn Backend>> {
+        match self.kind {
+            BackendKind::Pjrt => {
+                match PjrtBackend::new(
+                    self.rt.as_ref().expect("pjrt runtime"),
+                    self.idx.as_ref().expect("artifact index"),
+                    &v.name,
+                ) {
+                    Ok(b) => Ok(Box::new(b)),
+                    // stale artifacts (variant added after `make
+                    // artifacts`): auto still has a working answer
+                    Err(e) if self.auto => {
+                        info!(
+                            "backend",
+                            "artifacts unusable for {} ({e:#}) — falling back to native",
+                            v.name
+                        );
+                        Ok(Box::new(NativeBackend::new(v)?))
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            BackendKind::Native => Ok(Box::new(NativeBackend::new(v)?)),
+        }
+    }
+}
+
 
 fn info_cmd() -> Result<()> {
     let reg = Registry::load().map_err(|e| anyhow!(e))?;
     let root = ArtifactIndex::default_root();
     let built = ArtifactIndex::load(&root).ok();
-    println!("platform: {}", Runtime::shared()?.platform());
+    match Runtime::shared() {
+        Ok(rt) => println!("platform: {}", rt.platform()),
+        Err(e) => println!("platform: pjrt unavailable ({e})"),
+    }
     println!(
         "artifacts: {}",
-        if built.is_some() { "built" } else { "MISSING (run `make artifacts`)" }
+        if built.is_some() {
+            "built"
+        } else {
+            "MISSING (run `make artifacts`, or use --backend native)"
+        }
     );
+    println!("native backend: always available (pure Rust, no artifacts)");
     println!("{:<28} {:>8} {:>11} {:>11} {:>10}", "variant", "model", "opt", "params", "state");
     for (name, v) in &reg.variants {
         let (p, s) = match &built {
@@ -90,7 +192,11 @@ fn info_cmd() -> Result<()> {
                 Ok(m) => (m.n_params.to_string(), m.state_len.to_string()),
                 Err(_) => ("?".into(), "?".into()),
             },
-            None => ("-".into(), "-".into()),
+            // the layout mirror knows the shapes without artifacts
+            None => match spectron::runtime::layout::build_manifest(v) {
+                Ok(m) => (m.n_params.to_string(), m.state_len.to_string()),
+                Err(_) => ("-".into(), "-".into()),
+            },
         };
         println!("{name:<28} {:>8} {:>11} {p:>11} {s:>10}", v.model.name, v.optimizer);
     }
@@ -113,11 +219,12 @@ fn train_cmd(args: &mut Args) -> Result<()> {
     // prefetch is on by default; the stream is byte-identical either way
     // (DESIGN.md §Hot-loop pipeline), so this only changes overlap
     let no_prefetch = args.flag("no-prefetch");
+    let sel = BackendSel::resolve(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
-    let ctx = Arc::new(Ctx::new(docs as u64, false)?);
-    let rt = Runtime::shared()?;
-    let v = ctx.reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let reg = Registry::load().map_err(|e| anyhow!(e))?;
+    let v = reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let (_corpus, _bpe, ds) = build_data(docs as u64);
 
     let mut trainer = match resume {
         Some(path) => {
@@ -127,18 +234,23 @@ fn train_cmd(args: &mut Args) -> Result<()> {
                 "checkpoint is for '{ck_variant}', requested '{variant}'"
             );
             info!("train", "resuming {variant} from {path}");
-            Trainer::from_state(&rt, &ctx.idx, v, run.clone(), state)?
+            Trainer::from_state_backend(sel.make(v)?, v, run.clone(), state)?
         }
-        None => Trainer::new(&rt, &ctx.idx, v, run.clone())?,
+        None => Trainer::with_backend(sel.make(v)?, v, run.clone())?,
     };
     let mut metrics = MetricsLog::with_file(&format!("train-{variant}"))?;
-    info!("train", "{variant}: {} steps at lr {}", run.total_steps, run.base_lr);
+    info!(
+        "train",
+        "{variant} [{}]: {} steps at lr {}",
+        sel.kind,
+        run.total_steps,
+        run.base_lr
+    );
     let res = if no_prefetch {
-        let mut batches = ctx.ds.batches(Split::Train, v.batch, run.seed);
+        let mut batches = ds.batches(Split::Train, v.batch, run.seed);
         trainer.train_with(&mut batches, run.total_steps, &mut metrics)?
     } else {
-        let mut batches =
-            Prefetcher::new(ctx.ds.clone(), Split::Train, v.batch, run.seed);
+        let mut batches = Prefetcher::new(ds.clone(), Split::Train, v.batch, run.seed);
         trainer.train_with(&mut batches, run.total_steps, &mut metrics)?
     };
     println!(
@@ -150,7 +262,8 @@ fn train_cmd(args: &mut Args) -> Result<()> {
         if res.diverged { "  [DIVERGED]" } else { "" }
     );
     let state = trainer.state_vec()?;
-    let ppl = ctx.ppl(&rt, &variant, &state)?;
+    let ev = Evaluator::with_backend(sel.make(v)?);
+    let ppl = perplexity::perplexity(&ev, &state[..ev.params_end], &ds, 40)?.ppl;
     println!("validation ppl: {ppl:.3}");
     if let Some(path) = ckpt_out {
         checkpoint::save(std::path::Path::new(&path), &variant, &state)?;
@@ -163,23 +276,18 @@ fn eval_cmd(args: &mut Args) -> Result<()> {
     let path = args.opt_str("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
     let docs = args.usize("docs", 6000);
     let items = args.usize("items", 120);
+    let sel = BackendSel::resolve(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
     let (variant, state) = checkpoint::load(std::path::Path::new(&path))?;
-    let ctx = Arc::new(Ctx::new(docs as u64, false)?);
-    let rt = Runtime::shared()?;
-    let ppl = ctx.ppl(&rt, &variant, &state)?;
-    println!("{variant}: validation ppl {ppl:.3}");
-    let manifest = ctx.idx.manifest(&variant)?;
-    let ev = spectron::eval::Evaluator::new(&rt, &ctx.idx, &manifest)?;
-    let suite = spectron::eval::downstream::run_suite(
-        &ev,
-        &state[..manifest.params_end],
-        &ctx.bpe,
-        &ctx.corpus,
-        items,
-        777,
-    )?;
+    let reg = Registry::load().map_err(|e| anyhow!(e))?;
+    let v = reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let (corpus, bpe, ds) = build_data(docs as u64);
+    let ev = Evaluator::with_backend(sel.make(v)?);
+    let prefix = &state[..ev.params_end];
+    let ppl = perplexity::perplexity(&ev, prefix, &ds, 40)?.ppl;
+    println!("{variant} [{}]: validation ppl {ppl:.3}", sel.kind);
+    let suite = downstream::run_suite(&ev, prefix, &bpe, &corpus, items, 777)?;
     for t in suite {
         println!(
             "  {:<10} acc {:.1}%  (chance {:.0}%, {} items)",
@@ -245,7 +353,7 @@ fn exp_cmd(args: &mut Args) -> Result<()> {
 /// Batched inference server over line-delimited JSON — see
 /// DESIGN.md §Serving. Blocks until a `shutdown` request arrives.
 fn serve_cmd(args: &mut Args) -> Result<()> {
-    use spectron::serve::{MockEngine, PjrtEngine, ServeCfg, Server};
+    use spectron::serve::{MockEngine, NativeEngine, PjrtEngine, ServeCfg, Server};
 
     let addr = args.str("addr", "127.0.0.1:7433");
     let ckpt_list = args.opt_str("ckpt");
@@ -257,6 +365,14 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     // sample is 400.min(docs) documents, same as exp::Ctx::new)
     let docs = args.usize("docs", 6000);
     let mock = args.flag("mock");
+    let backend = if mock {
+        // --mock never touches a backend; consume the flag so it is not
+        // reported as unknown, but don't force artifact resolution
+        let _ = args.str("backend", "auto");
+        None
+    } else {
+        Some(BackendSel::resolve(args)?)
+    };
     args.finish().map_err(|e| anyhow!(e))?;
 
     let mut cfg = ServeCfg {
@@ -276,10 +392,9 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
             std::sync::Arc::new(std::sync::Mutex::new(Vec::new())),
         )
     } else {
+        let sel = backend.expect("resolved above");
         let ckpt_list = ckpt_list
             .ok_or_else(|| anyhow!("--ckpt required (comma-separated), or --mock"))?;
-        let idx = ArtifactIndex::load(&ArtifactIndex::default_root())
-            .map_err(|e| anyhow!("{e}\n  hint: run `make artifacts` first"))?;
         let mut ckpts = std::collections::BTreeMap::new();
         for path in ckpt_list.split(',').filter(|p| !p.is_empty()) {
             let variant = checkpoint::peek_variant(std::path::Path::new(path))?;
@@ -289,7 +404,16 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
             }
             ckpts.insert(variant, std::path::PathBuf::from(path));
         }
-        PjrtEngine::factory(idx, ckpts, cache, docs as u64)
+        match sel.kind {
+            BackendKind::Pjrt => {
+                let idx = sel.idx.expect("pjrt artifacts");
+                PjrtEngine::factory(idx, ckpts, cache, docs as u64)
+            }
+            BackendKind::Native => {
+                info!("serve", "NATIVE engine (no artifacts required)");
+                NativeEngine::factory(ckpts, cache, docs as u64)
+            }
+        }
     };
 
     let handle = Server::spawn(cfg, factory)?;
@@ -303,24 +427,43 @@ fn dp_demo(args: &mut Args) -> Result<()> {
     let workers = args.usize("workers", 4);
     let steps = args.usize("steps", 30);
     let variant = args.str("variant", "fact-s-spectron");
+    let docs = args.usize("docs", 3000);
     // threaded by default (bit-identical to sequential); --sequential
     // keeps the single-client reference path
     let sequential = args.flag("sequential");
+    let sel = BackendSel::resolve(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
-    let ctx = Ctx::new(3000, false)?;
-    let rt = Runtime::shared()?;
-    let v = ctx.reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let reg = Registry::load().map_err(|e| anyhow!(e))?;
+    let v = reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let (_corpus, _bpe, ds) = build_data(docs as u64);
     let run = RunCfg { total_steps: steps, ..RunCfg::default() };
-    let mut dp = if sequential {
-        DataParallelSim::new(&rt, &ctx.idx, v, run, &ctx.ds, workers)?
-    } else {
-        DataParallelSim::new_threaded(&rt, &ctx.idx, v, run, &ctx.ds, workers)?
+    let mut dp = match sel.kind {
+        BackendKind::Native => DataParallelSim::native(v, run, &ds, workers, !sequential)?,
+        BackendKind::Pjrt => {
+            let (rt, idx) = (sel.rt.as_ref().unwrap(), sel.idx.as_ref().unwrap());
+            let built = if sequential {
+                DataParallelSim::new(rt, idx, v, run.clone(), &ds, workers)
+            } else {
+                DataParallelSim::new_threaded(rt, idx, v, run.clone(), &ds, workers)
+            };
+            match built {
+                Ok(dp) => dp,
+                // same per-variant auto-fallback BackendSel::make gives
+                // the other commands (stale artifacts, missing variant)
+                Err(e) if sel.auto => {
+                    info!("dp", "artifacts unusable ({e:#}) — falling back to native");
+                    DataParallelSim::native(v, run, &ds, workers, !sequential)?
+                }
+                Err(e) => return Err(e),
+            }
+        }
     };
     info!(
         "dp",
-        "{workers} workers ({}), global batch {}",
+        "{workers} workers ({}, {}), global batch {}",
         if dp.is_threaded() { "threaded" } else { "sequential" },
+        sel.kind,
         workers * v.batch
     );
     let t0 = std::time::Instant::now();
@@ -351,15 +494,22 @@ fn accum_demo(args: &mut Args) -> Result<()> {
     let micro = args.usize("micro", 4);
     let steps = args.usize("steps", 30);
     let variant = args.str("variant", "fact-s-spectron");
+    let docs = args.usize("docs", 3000);
+    let sel = BackendSel::resolve(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
-    let ctx = Ctx::new(3000, false)?;
-    let rt = Runtime::shared()?;
-    let v = ctx.reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let reg = Registry::load().map_err(|e| anyhow!(e))?;
+    let v = reg.variant(&variant).map_err(|e| anyhow!(e))?;
+    let (_corpus, _bpe, ds) = build_data(docs as u64);
     let run = RunCfg { total_steps: steps, ..RunCfg::default() };
-    let mut acc = GradAccumulator::new(&rt, &ctx.idx, v, run)?;
-    let mut batches = ctx.ds.batches(Split::Train, v.batch, 0);
-    info!("accum", "{micro} microbatches/step -> effective batch {}", micro * v.batch);
+    let mut acc = GradAccumulator::with_backend(sel.make(v)?, run)?;
+    let mut batches = ds.batches(Split::Train, v.batch, 0);
+    info!(
+        "accum",
+        "{micro} microbatches/step [{}] -> effective batch {}",
+        sel.kind,
+        micro * v.batch
+    );
     for s in 0..steps {
         let loss = acc.step(&mut batches, micro)?;
         if s % 5 == 0 || s == steps - 1 {
@@ -372,16 +522,16 @@ fn accum_demo(args: &mut Args) -> Result<()> {
 fn data_cmd(args: &mut Args) -> Result<()> {
     let docs = args.usize("docs", 6000);
     args.finish().map_err(|e| anyhow!(e))?;
-    let ctx = Ctx::new(docs as u64, false)?;
-    let train_tokens = ctx.ds.tokens(Split::Train).len();
-    let val_tokens = ctx.ds.tokens(Split::Val).len();
+    let (corpus, bpe, ds) = build_data(docs as u64);
+    let train_tokens = ds.tokens(Split::Train).len();
+    let val_tokens = ds.tokens(Split::Val).len();
     println!("documents: {docs}");
-    println!("tokenizer: byte-BPE vocab {} ({} merges)", exp::VOCAB, ctx.bpe.merges.len());
-    println!("train tokens: {train_tokens}  ({} windows)", ctx.ds.n_windows(Split::Train));
-    println!("val tokens:   {val_tokens}  ({} windows)", ctx.ds.n_windows(Split::Val));
-    let sample = ctx.corpus.document(42);
+    println!("tokenizer: byte-BPE vocab {} ({} merges)", exp::VOCAB, bpe.merges.len());
+    println!("train tokens: {train_tokens}  ({} windows)", ds.n_windows(Split::Train));
+    println!("val tokens:   {val_tokens}  ({} windows)", ds.n_windows(Split::Val));
+    let sample = corpus.document(42);
     println!("\nsample document:\n  {}", &sample[..sample.len().min(300)]);
-    let enc = ctx.bpe.encode(&sample);
+    let enc = bpe.encode(&sample);
     println!(
         "\ncompression: {} chars -> {} tokens ({:.2} chars/token)",
         sample.len(),

@@ -137,6 +137,51 @@ impl Manifest {
         })
     }
 
+    /// Assemble a manifest from parts computed in-process (the native
+    /// backend's layout mirror builds one without any `manifest.json` on
+    /// disk — see `runtime::layout`). `state_len`/`params_end`/`n_params`
+    /// must already be consistent with `tensors`; `sanity_check` verifies.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        variant: String,
+        optimizer: String,
+        batch: usize,
+        seq_len: usize,
+        vocab: usize,
+        hidden: usize,
+        layers: usize,
+        params_end: usize,
+        state_len: usize,
+        eval_key: String,
+        tensors: Vec<TensorSpec>,
+        programs: BTreeMap<String, String>,
+    ) -> Manifest {
+        let by_name = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        Manifest {
+            variant,
+            optimizer,
+            batch,
+            seq_len,
+            vocab,
+            hidden,
+            layers,
+            state_len,
+            hdr: super::state::HDR,
+            ring: super::state::RING,
+            ring_base: super::state::RING_BASE,
+            params_end,
+            n_params: params_end - super::state::HDR,
+            eval_key,
+            tensors,
+            programs,
+            by_name,
+        }
+    }
+
     pub fn tensor(&self, name: &str) -> Result<&TensorSpec> {
         self.by_name
             .get(name)

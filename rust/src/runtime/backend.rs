@@ -1,0 +1,356 @@
+//! The execution-layer boundary: one trait over the whole program family
+//! (DESIGN.md §Backends).
+//!
+//! Every subsystem above the runtime — trainer, coordinator, eval, serve —
+//! drives the model exclusively through [`Backend`]: the six programs of
+//! DESIGN.md §Programs (`init`/`step`/`grad`/`apply`/`eval`/`logits`) plus
+//! upload/download of the flat `f32[L]` state. Two implementations:
+//!
+//! * [`PjrtBackend`] — the AOT path: compiled HLO through the PJRT
+//!   client, with the staging semantics of DESIGN.md §Hot-loop pipeline
+//!   folded in (token/state uploads are parked until a host readback
+//!   fences them; errors quarantine instead of freeing),
+//! * [`crate::runtime::native::NativeBackend`] — the pure-Rust
+//!   interpreter of the same state layout: f64 math over
+//!   [`crate::linalg::Mat`], no artifacts, no Python, no XLA
+//!   (docs/adr/003-native-backend.md).
+//!
+//! A [`StateBuf`] is the backend-resident state handle: a device buffer
+//! under PJRT (state never leaves the device in the hot loop), a plain
+//! host vector natively. Handles are only valid with the backend that
+//! created them — crossing them over is a contract error, caught at use.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::ArtifactIndex;
+use super::client::{self, Runtime, StagingPool};
+use super::Manifest;
+use crate::config::VariantCfg;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Pjrt,
+    Native,
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        })
+    }
+}
+
+/// Backend-resident state (or header+params prefix) handle.
+pub struct StateBuf(Repr);
+
+enum Repr {
+    /// program output living on the PJRT device
+    PjrtDevice(xla::PjRtBuffer),
+    /// host upload pinned with its source literal (lifetime rule of
+    /// [`crate::runtime::client::HostBuffer`])
+    PjrtHost(client::HostBuffer),
+    /// native backend: the state IS the host vector
+    Native(Vec<f32>),
+}
+
+impl StateBuf {
+    pub(crate) fn native_vec(data: Vec<f32>) -> StateBuf {
+        StateBuf(Repr::Native(data))
+    }
+
+    pub(crate) fn as_native(&self) -> Result<&[f32]> {
+        match &self.0 {
+            Repr::Native(v) => Ok(v),
+            _ => Err(anyhow!("state handle belongs to the pjrt backend")),
+        }
+    }
+
+    fn as_pjrt(&self) -> Result<&xla::PjRtBuffer> {
+        match &self.0 {
+            Repr::PjrtDevice(b) => Ok(b),
+            Repr::PjrtHost(h) => Ok(h.buffer()),
+            Repr::Native(_) => Err(anyhow!("state handle belongs to the native backend")),
+        }
+    }
+}
+
+/// The program family plus transfer semantics. Methods take `&mut self`
+/// because both implementations carry per-call scratch (the PJRT staging
+/// pool, the native workspace).
+pub trait Backend {
+    fn kind(&self) -> BackendKind;
+
+    /// Layout contract for this variant (identical across backends; the
+    /// golden fixture test pins it).
+    fn manifest(&self) -> &Manifest;
+
+    /// `init(seed, knobs f32[8]) -> state` — fresh state, knobs in header.
+    fn init(&mut self, seed: u64, knobs: &[f32; 8]) -> Result<StateBuf>;
+
+    /// Fused train step: `tokens` is flat row-major `(batch, seq_len+1)`.
+    fn step(&mut self, state: &StateBuf, tokens: &[i32]) -> Result<StateBuf>;
+
+    /// Split step, part 1: `[loss | flat grads]` read back to the host
+    /// (the readback doubles as the staging fence on PJRT).
+    fn grad(&mut self, state: &StateBuf, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Split step, part 2: apply a (possibly all-reduced) grad vector.
+    fn apply(&mut self, state: &StateBuf, gradvec: &[f32]) -> Result<StateBuf>;
+
+    /// Shared eval program: `prefix` is a resident header+params prefix,
+    /// `tokens` `(batch, seq_len+1)`, `spans` `(batch, 2)`. Returns
+    /// `[sum_nll, sum_cnt | per-seq nll | per-seq cnt]`.
+    fn eval(&mut self, prefix: &StateBuf, tokens: &[i32], spans: &[i32]) -> Result<Vec<f32>>;
+
+    /// Serving decode: next-token logits at `pos[i]` for row i of
+    /// `tokens` `(batch, seq_len)`; flat `(batch * vocab)` out.
+    fn logits(&mut self, prefix: &StateBuf, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>>;
+
+    /// Whether [`Backend::logits`] is available (old PJRT artifact trees
+    /// predate the decode program; native always has it).
+    fn has_logits(&self) -> bool {
+        true
+    }
+
+    /// Upload a full state vector (resume / DP broadcast). On PJRT the
+    /// upload is staged: the source literal stays pinned until the next
+    /// successful download fences it.
+    fn upload_state(&mut self, data: &[f32]) -> Result<StateBuf>;
+
+    /// Upload a header+params prefix for eval/logits. Long-lived-safe on
+    /// PJRT (source literal pinned inside the handle itself).
+    fn upload_prefix(&mut self, data: &[f32]) -> Result<StateBuf>;
+
+    /// Read a state (or prefix) back to the host. On PJRT this is the
+    /// fence that retires staged uploads; on failure they are
+    /// quarantined, never freed later (the StagingPool contract).
+    fn download(&mut self, buf: &StateBuf) -> Result<Vec<f32>>;
+}
+
+/// Thread-safe constructor for per-worker backend instances (PJRT wrapper
+/// types are `!Send`, so DP/serve workers build their own backend inside
+/// the thread — same pattern as [`crate::serve::engine::EngineFactory`]).
+pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
+
+/// Factory producing one PJRT backend per call, each with its OWN client
+/// (`Runtime::new`, not the thread-local shared one): the worker owns it
+/// for its whole life, mirroring the old dp-worker setup.
+pub fn pjrt_factory(idx: ArtifactIndex, variant: String) -> BackendFactory {
+    Arc::new(move || {
+        let rt = Runtime::new()?;
+        Ok(Box::new(PjrtBackend::new(&rt, &idx, &variant)?) as Box<dyn Backend>)
+    })
+}
+
+/// Factory producing native backends (pure data, cheap to construct).
+pub fn native_factory(variant: VariantCfg) -> BackendFactory {
+    Arc::new(move || {
+        Ok(Box::new(super::native::NativeBackend::new(&variant)?) as Box<dyn Backend>)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// PJRT implementation
+// ---------------------------------------------------------------------------
+
+/// The AOT path: compiled HLO programs on a PJRT client, with upload
+/// staging folded into the trait's transfer methods. Programs are loaded
+/// lazily — one backend instance serves trainer-only (init/step) and
+/// coordinator (grad/apply) uses without compiling programs it never
+/// runs — and the `Arc<Program>` handles are cached per backend, so the
+/// steady-state step keeps the zero-allocation property of the pipelined
+/// hot path (DESIGN.md §Hot-loop pipeline): no path building, no compile
+/// -cache mutex, just an `Arc` clone.
+pub struct PjrtBackend {
+    rt: Runtime,
+    idx: ArtifactIndex,
+    manifest: Manifest,
+    staging: StagingPool,
+    progs: std::collections::HashMap<&'static str, Arc<super::Program>>,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: &Runtime, idx: &ArtifactIndex, variant: &str) -> Result<PjrtBackend> {
+        let manifest = idx.manifest(variant)?;
+        Ok(PjrtBackend {
+            rt: rt.clone(),
+            idx: idx.clone(),
+            manifest,
+            staging: StagingPool::new(),
+            progs: std::collections::HashMap::new(),
+        })
+    }
+
+    fn prog(&mut self, name: &'static str) -> Result<Arc<super::Program>> {
+        if let Some(p) = self.progs.get(name) {
+            return Ok(p.clone());
+        }
+        let path = match name {
+            "eval" => self.idx.eval_path(&self.manifest.eval_key),
+            "logits" => self.idx.gen_path(&self.manifest.eval_key),
+            _ => self.idx.program_path(&self.manifest.variant, name),
+        };
+        let p = self
+            .rt
+            .load_program(&path)
+            .with_context(|| format!("loading {} program for {}", name, self.manifest.variant))?;
+        self.progs.insert(name, p.clone());
+        Ok(p)
+    }
+
+    fn token_dims(&self) -> (usize, usize) {
+        (self.manifest.batch, self.manifest.seq_len + 1)
+    }
+
+    fn step_inner(&mut self, state: &StateBuf, tokens: &[i32]) -> Result<StateBuf> {
+        let (b, w) = self.token_dims();
+        let tok = self.staging.upload_tokens(&self.rt, tokens, b, w)?;
+        let out = self.prog("step")?.run_buffers(&[state.as_pjrt()?, &tok])?;
+        Ok(StateBuf(Repr::PjrtDevice(out)))
+    }
+
+    fn grad_inner(&mut self, state: &StateBuf, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, w) = self.token_dims();
+        let tok = self.staging.upload_tokens(&self.rt, tokens, b, w)?;
+        let out = self.prog("grad")?.run_buffers(&[state.as_pjrt()?, &tok])?;
+        let g = self.rt.download_f32(&out)?;
+        // the grad readback transitively depends on every staged upload
+        self.staging.retire();
+        Ok(g)
+    }
+
+    fn apply_inner(&mut self, state: &StateBuf, gradvec: &[f32]) -> Result<StateBuf> {
+        let g = self.staging.upload_f32(&self.rt, gradvec)?;
+        let out = self.prog("apply")?.run_buffers(&[state.as_pjrt()?, &g])?;
+        Ok(StateBuf(Repr::PjrtDevice(out)))
+    }
+
+    fn eval_inner(
+        &mut self,
+        prefix: &StateBuf,
+        tokens: &[i32],
+        spans: &[i32],
+    ) -> Result<Vec<f32>> {
+        let (b, w) = self.token_dims();
+        anyhow::ensure!(tokens.len() == b * w, "eval tokens shape");
+        anyhow::ensure!(spans.len() == b * 2, "eval spans shape");
+        let t = self.staging.upload_tokens(&self.rt, tokens, b, w)?;
+        let s = self.staging.upload_tokens(&self.rt, spans, b, 2)?;
+        let out = self.prog("eval")?.run_buffers(&[prefix.as_pjrt()?, &t, &s])?;
+        let v = self.rt.download_f32(&out)?;
+        self.staging.retire();
+        Ok(v)
+    }
+
+    fn logits_inner(
+        &mut self,
+        prefix: &StateBuf,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<f32>> {
+        let (b, t_len) = (self.manifest.batch, self.manifest.seq_len);
+        anyhow::ensure!(tokens.len() == b * t_len, "logits tokens shape");
+        anyhow::ensure!(pos.len() == b, "logits pos shape");
+        let t = self.staging.upload_tokens(&self.rt, tokens, b, t_len)?;
+        let p = self.staging.upload_i32(&self.rt, pos)?;
+        let out = self.prog("logits")?.run_buffers(&[prefix.as_pjrt()?, &t, &p])?;
+        let v = self.rt.download_f32(&out)?;
+        self.staging.retire();
+        Ok(v)
+    }
+}
+
+/// Wrap an inner call so a failed upload/execute/readback quarantines the
+/// staged literals (they may still feed an in-flight async copy; freeing
+/// them at a later retire would be the use-after-free the
+/// [`crate::runtime::client::StagingPool`] docs describe).
+macro_rules! fenced {
+    ($self:ident, $body:expr) => {{
+        let res = $body;
+        if res.is_err() {
+            $self.staging.quarantine();
+        }
+        res
+    }};
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init(&mut self, seed: u64, knobs: &[f32; 8]) -> Result<StateBuf> {
+        let out = self
+            .prog("init")?
+            .run_literals(&[client::scalar_i32(seed as i32), client::vec_f32(knobs)])
+            .context("init program")?;
+        Ok(StateBuf(Repr::PjrtDevice(out)))
+    }
+
+    fn step(&mut self, state: &StateBuf, tokens: &[i32]) -> Result<StateBuf> {
+        fenced!(self, self.step_inner(state, tokens))
+    }
+
+    fn grad(&mut self, state: &StateBuf, tokens: &[i32]) -> Result<Vec<f32>> {
+        fenced!(self, self.grad_inner(state, tokens))
+    }
+
+    fn apply(&mut self, state: &StateBuf, gradvec: &[f32]) -> Result<StateBuf> {
+        fenced!(self, self.apply_inner(state, gradvec))
+    }
+
+    fn eval(&mut self, prefix: &StateBuf, tokens: &[i32], spans: &[i32]) -> Result<Vec<f32>> {
+        fenced!(self, self.eval_inner(prefix, tokens, spans))
+    }
+
+    fn logits(&mut self, prefix: &StateBuf, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        fenced!(self, self.logits_inner(prefix, tokens, pos))
+    }
+
+    fn has_logits(&self) -> bool {
+        self.idx.gen_path(&self.manifest.eval_key).exists()
+    }
+
+    fn upload_state(&mut self, data: &[f32]) -> Result<StateBuf> {
+        anyhow::ensure!(
+            data.len() == self.manifest.state_len,
+            "state length {} != manifest {}",
+            data.len(),
+            self.manifest.state_len
+        );
+        let buf = fenced!(self, self.staging.upload_f32(&self.rt, data))?;
+        Ok(StateBuf(Repr::PjrtDevice(buf)))
+    }
+
+    fn upload_prefix(&mut self, data: &[f32]) -> Result<StateBuf> {
+        anyhow::ensure!(
+            data.len() == self.manifest.params_end,
+            "prefix length {} != params_end {}",
+            data.len(),
+            self.manifest.params_end
+        );
+        Ok(StateBuf(Repr::PjrtHost(self.rt.upload_f32(data)?)))
+    }
+
+    fn download(&mut self, buf: &StateBuf) -> Result<Vec<f32>> {
+        let b = buf.as_pjrt()?;
+        match self.rt.download_f32(b) {
+            Ok(v) => {
+                self.staging.retire();
+                Ok(v)
+            }
+            Err(e) => {
+                self.staging.quarantine();
+                Err(e)
+            }
+        }
+    }
+}

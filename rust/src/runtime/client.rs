@@ -13,9 +13,9 @@ use anyhow::{anyhow, Context, Result};
 /// early is a use-after-free (observed as a segfault in the de-risk
 /// pass). The full lifetime rule is written up in DESIGN.md §Conventions.
 ///
-/// Long-lived holders rely on this by construction: the trainer keeps its
-/// state upload alive across the step loop, and a serve
-/// [`crate::serve::session::ModelSession`] parks its params prefix in a
+/// Long-lived holders rely on this by construction: the PJRT backend's
+/// `upload_prefix` (DESIGN.md §Backends) parks a serve
+/// [`crate::serve::session::ModelSession`]'s params prefix in a
 /// `HostBuffer` that every batched execute of the
 /// [`crate::serve::batcher`] output reads from (see that module's docs
 /// for how batching interacts with upload lifetimes).
@@ -254,6 +254,11 @@ impl StagingPool {
 
     /// Stage-and-upload an f32 vector (state or gradient).
     pub fn upload_f32(&mut self, rt: &Runtime, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.upload(rt, xla::Literal::vec1(data))
+    }
+
+    /// Stage-and-upload a flat i32 vector (the `logits` program's `pos`).
+    pub fn upload_i32(&mut self, rt: &Runtime, data: &[i32]) -> Result<xla::PjRtBuffer> {
         self.upload(rt, xla::Literal::vec1(data))
     }
 

@@ -1,5 +1,13 @@
-//! PJRT runtime: loads the AOT artifacts and executes them.
+//! The execution layer: both backends behind one trait
+//! (DESIGN.md §Backends).
 //!
+//! * [`backend`]  — the [`Backend`] trait over the whole program family
+//!   (`init`/`step`/`grad`/`apply`/`eval`/`logits` + transfers), plus the
+//!   PJRT implementation,
+//! * [`native`]   — the pure-Rust reference backend: same state layout,
+//!   no artifacts/Python/XLA (docs/adr/003-native-backend.md),
+//! * [`layout`]   — in-process mirror of `python/compile/state.py`'s
+//!   layout, golden-tested against a build-side fixture,
 //! * [`artifact`] — `manifest.json` / `index.json` parsing, tensor specs,
 //! * [`client`]   — PJRT CPU client + HLO-text program loading/compiling,
 //! * [`state`]    — host mirror of the flat train-state vector (header
@@ -19,9 +27,14 @@
 //!   copies, amortized by the loss ring.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
+pub mod layout;
+pub mod native;
 pub mod state;
 
 pub use artifact::{ArtifactIndex, Manifest, TensorSpec};
+pub use backend::{Backend, BackendFactory, BackendKind, PjrtBackend, StateBuf};
 pub use client::{HostBuffer, Program, Runtime, StagingPool};
+pub use native::NativeBackend;
 pub use state::StateHost;

@@ -1,0 +1,75 @@
+//! Native mirrors of the L1 kernels (`python/compile/kernels/ref.py`).
+//!
+//! Built on [`crate::linalg::Mat`] in f64: [`crate::linalg::newton_schulz`]
+//! already mirrors the Jordan-coefficient quintic; this module adds the
+//! paper's Algorithm 3 power iteration with persisted left vectors and the
+//! stacked-over-layers conveniences the optimizer uses. Property tests in
+//! `rust/tests/proptests.rs` pin orthogonality, convergence, and the
+//! Spectron update bound on these exact functions.
+
+use crate::linalg::{newton_schulz, Mat};
+
+/// Newton-Schulz iteration count (paper default, `optim.K_NS`).
+pub const K_NS: usize = 5;
+/// Power-iteration steps per optimizer step (paper default, `optim.K_POWER`).
+pub const K_POWER: usize = 1;
+
+/// `x / (|x| + 1e-20)` in place — the build side normalizes with an added
+/// epsilon (never a branch), so the mirror does too.
+pub fn normalize_eps(x: &mut [f64]) {
+    let n = crate::linalg::norm(x) + 1e-20;
+    for v in x.iter_mut() {
+        *v /= n;
+    }
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Paper Algorithm 3: approximate `sigma_max(w)` with a persisted left
+/// vector. Returns `(sigma, u')`; `w` is `(p, q)`, `u0` is `(p,)`.
+/// Mirrors `power_iter_ref` exactly (same normalization epsilons, same
+/// final Rayleigh-style product).
+pub fn power_iter(w: &Mat, u0: &[f64], iters: usize) -> (f64, Vec<f64>) {
+    assert_eq!(u0.len(), w.rows, "power_iter u/W shape mismatch");
+    let mut u = u0.to_vec();
+    normalize_eps(&mut u);
+    let mut v = vec![0.0; w.cols];
+    for _ in 0..iters.max(1) {
+        v = w.matvec_t(&u);
+        normalize_eps(&mut v);
+        u = w.matvec(&v);
+        normalize_eps(&mut u);
+    }
+    let sigma = dot(&u, &w.matvec(&v));
+    (sigma, u)
+}
+
+/// Newton-Schulz orthogonalization of one stacked `(layers, m, n)` tensor
+/// (flat storage), vmapped over the leading layer axis like the build
+/// side's kernel.
+pub fn newton_schulz_stacked(data: &[f64], layers: usize, m: usize, n: usize) -> Vec<f64> {
+    let per = m * n;
+    assert_eq!(data.len(), layers * per);
+    let mut out = Vec::with_capacity(data.len());
+    for l in 0..layers {
+        let g = Mat {
+            rows: m,
+            cols: n,
+            data: data[l * per..(l + 1) * per].to_vec(),
+        };
+        out.extend_from_slice(&newton_schulz(&g, K_NS).data);
+    }
+    out
+}
+
+/// View layer `l` of a stacked `(layers, m, n)` flat tensor as a `Mat`.
+pub fn layer_mat(data: &[f64], l: usize, m: usize, n: usize) -> Mat {
+    let per = m * n;
+    Mat {
+        rows: m,
+        cols: n,
+        data: data[l * per..(l + 1) * per].to_vec(),
+    }
+}

@@ -1,0 +1,689 @@
+//! Native low-rank transformer: forward + hand-derived backward.
+//!
+//! Mirrors `python/compile/model.py` (RMSNorm pre-norm, RoPE attention,
+//! SwiGLU FFN, untied embed/head, no biases, `W = A Bᵀ` factorization) in
+//! f64 over [`crate::linalg::Mat`]. Activations are flat `(B*T, features)`
+//! matrices; attention runs per `(batch, head)` on `(T, hd)` views. The
+//! backward pass is the standard reverse-mode derivation of exactly the
+//! forward graph — gradients land in the same tensor order the build
+//! side's `grad` program emits, so the two backends' grad vectors are
+//! directly comparable.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::VariantCfg;
+use crate::linalg::Mat;
+use crate::runtime::layout::{is_factorized, matrix_dims, MATRIX_NAMES};
+use crate::runtime::Manifest;
+
+const RMS_EPS: f64 = 1e-6;
+const ROPE_BASE: f64 = 10000.0;
+
+/// One per-layer matrix: dense `(m, n)` or a factor pair `A (m, r)`,
+/// `B (n, r)` with `y = (x B) Aᵀ`.
+pub enum MatParam {
+    Dense(Mat),
+    Fact { a: Mat, b: Mat },
+}
+
+impl MatParam {
+    /// `y = W x` for a row-batch `x (tok, n)` -> `(tok, m)`.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        match self {
+            MatParam::Dense(w) => x.matmul(&w.t()),
+            MatParam::Fact { a, b } => x.matmul(b).matmul(&a.t()),
+        }
+    }
+}
+
+struct Layer {
+    mats: Vec<MatParam>, // indexed like MATRIX_NAMES
+    rms1: Vec<f64>,
+    rms2: Vec<f64>,
+}
+
+/// Model parameters decoded (f32 -> f64) from a header+params prefix.
+pub struct Model {
+    pub hidden: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    embed: Mat, // (V, d)
+    head: Mat,  // (V, d)
+    rms_f: Vec<f64>,
+    blocks: Vec<Layer>,
+}
+
+fn mat_idx(name: &str) -> usize {
+    MATRIX_NAMES.iter().position(|m| *m == name).expect("known matrix")
+}
+
+fn tensor_f64(manifest: &Manifest, prefix: &[f32], name: &str) -> Result<Vec<f64>> {
+    let spec = manifest.tensor(name)?;
+    anyhow::ensure!(
+        spec.offset + spec.size() <= prefix.len(),
+        "tensor '{name}' outside prefix"
+    );
+    Ok(prefix[spec.offset..spec.offset + spec.size()]
+        .iter()
+        .map(|&x| x as f64)
+        .collect())
+}
+
+impl Model {
+    pub fn from_prefix(cfg: &VariantCfg, manifest: &Manifest, prefix: &[f32]) -> Result<Model> {
+        anyhow::ensure!(
+            prefix.len() >= manifest.params_end,
+            "prefix length {} < params_end {}",
+            prefix.len(),
+            manifest.params_end
+        );
+        let m = &cfg.model;
+        let d = m.hidden;
+        let l = m.layers;
+        let embed = Mat {
+            rows: m.vocab,
+            cols: d,
+            data: tensor_f64(manifest, prefix, "embed")?,
+        };
+        let head = Mat {
+            rows: m.vocab,
+            cols: d,
+            data: tensor_f64(manifest, prefix, "head")?,
+        };
+        let rms_f = tensor_f64(manifest, prefix, "rms_f")?;
+        let rms1 = tensor_f64(manifest, prefix, "rms1")?;
+        let rms2 = tensor_f64(manifest, prefix, "rms2")?;
+
+        let mut stacked: BTreeMap<String, (Vec<f64>, usize, usize)> = BTreeMap::new();
+        for mat in MATRIX_NAMES {
+            let (om, on) = matrix_dims(cfg, mat);
+            if is_factorized(cfg, mat) {
+                let r = cfg.rank(on);
+                stacked.insert(
+                    format!("{mat}_a"),
+                    (tensor_f64(manifest, prefix, &format!("{mat}_a"))?, om, r),
+                );
+                stacked.insert(
+                    format!("{mat}_b"),
+                    (tensor_f64(manifest, prefix, &format!("{mat}_b"))?, on, r),
+                );
+            } else {
+                stacked.insert(
+                    mat.to_string(),
+                    (tensor_f64(manifest, prefix, mat)?, om, on),
+                );
+            }
+        }
+
+        let take_layer = |name: &str, lyr: usize| -> Mat {
+            let (data, rows, cols) = &stacked[name];
+            super::kernels::layer_mat(data, lyr, *rows, *cols)
+        };
+        let mut blocks = Vec::with_capacity(l);
+        for lyr in 0..l {
+            let mats = MATRIX_NAMES
+                .iter()
+                .map(|mat| {
+                    if is_factorized(cfg, mat) {
+                        MatParam::Fact {
+                            a: take_layer(&format!("{mat}_a"), lyr),
+                            b: take_layer(&format!("{mat}_b"), lyr),
+                        }
+                    } else {
+                        MatParam::Dense(take_layer(mat, lyr))
+                    }
+                })
+                .collect();
+            blocks.push(Layer {
+                mats,
+                rms1: rms1[lyr * d..(lyr + 1) * d].to_vec(),
+                rms2: rms2[lyr * d..(lyr + 1) * d].to_vec(),
+            });
+        }
+        Ok(Model {
+            hidden: d,
+            heads: m.heads,
+            head_dim: m.head_dim(),
+            layers: l,
+            vocab: m.vocab,
+            embed,
+            head,
+            rms_f,
+            blocks,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// primitives
+// ---------------------------------------------------------------------------
+
+/// Row-wise RMSNorm: `y = x * rsqrt(mean(x^2) + eps) * gain`. Returns
+/// `(y, inv)` with `inv` the per-row `rsqrt` (cached for backward).
+fn rms_norm(x: &Mat, gain: &[f64]) -> (Mat, Vec<f64>) {
+    let d = x.cols;
+    let mut y = Mat::zeros(x.rows, d);
+    let mut invs = Vec::with_capacity(x.rows);
+    for i in 0..x.rows {
+        let row = &x.data[i * d..(i + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f64>() / d as f64;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        let out = &mut y.data[i * d..(i + 1) * d];
+        for j in 0..d {
+            out[j] = row[j] * inv * gain[j];
+        }
+        invs.push(inv);
+    }
+    (y, invs)
+}
+
+/// Backward of [`rms_norm`]: returns `dx`, accumulates `dgain`.
+fn rms_norm_back(x: &Mat, gain: &[f64], inv: &[f64], dy: &Mat, dgain: &mut [f64]) -> Mat {
+    let d = x.cols;
+    let mut dx = Mat::zeros(x.rows, d);
+    for i in 0..x.rows {
+        let xr = &x.data[i * d..(i + 1) * d];
+        let dyr = &dy.data[i * d..(i + 1) * d];
+        let iv = inv[i];
+        // s = sum_k dy_k * g_k * x_k
+        let mut s = 0.0;
+        for j in 0..d {
+            s += dyr[j] * gain[j] * xr[j];
+            dgain[j] += dyr[j] * xr[j] * iv;
+        }
+        let c = iv * iv * iv * s / d as f64;
+        let dxr = &mut dx.data[i * d..(i + 1) * d];
+        for j in 0..d {
+            dxr[j] = iv * gain[j] * dyr[j] - c * xr[j];
+        }
+    }
+    dx
+}
+
+/// RoPE cos/sin tables, `(seq, head_dim/2)` each.
+fn rope_tables(seq: usize, head_dim: usize) -> (Vec<f64>, Vec<f64>) {
+    let half = head_dim / 2;
+    let mut cos = vec![0.0; seq * half];
+    let mut sin = vec![0.0; seq * half];
+    for t in 0..seq {
+        for j in 0..half {
+            let freq = ROPE_BASE.powf(-(j as f64) / half as f64);
+            let ang = t as f64 * freq;
+            cos[t * half + j] = ang.cos();
+            sin[t * half + j] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotate pairs in place on a flat `(B*T, d)` activation viewed as
+/// `(B, T, H, hd)`. `dir = +1.0` applies RoPE, `-1.0` the inverse
+/// rotation (exactly the transpose, used in backward).
+fn apply_rope(x: &mut Mat, seq: usize, heads: usize, head_dim: usize, cos: &[f64], sin: &[f64], dir: f64) {
+    let half = head_dim / 2;
+    let d = x.cols;
+    for i in 0..x.rows {
+        let t = i % seq;
+        let row = &mut x.data[i * d..(i + 1) * d];
+        for h in 0..heads {
+            let base = h * head_dim;
+            for j in 0..half {
+                let c = cos[t * half + j];
+                let s = dir * sin[t * half + j];
+                let x1 = row[base + j];
+                let x2 = row[base + j + half];
+                row[base + j] = x1 * c - x2 * s;
+                row[base + j + half] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+/// Extract the `(T, hd)` head view of batch `b`, head `h` from a flat
+/// `(B*T, d)` activation.
+fn head_view(x: &Mat, b: usize, h: usize, seq: usize, head_dim: usize) -> Mat {
+    let mut out = Mat::zeros(seq, head_dim);
+    for t in 0..seq {
+        let src = &x.data[(b * seq + t) * x.cols + h * head_dim..];
+        out.data[t * head_dim..(t + 1) * head_dim].copy_from_slice(&src[..head_dim]);
+    }
+    out
+}
+
+/// Scatter-add a `(T, hd)` head gradient back into the flat layout.
+fn head_scatter(dst: &mut Mat, src: &Mat, b: usize, h: usize, seq: usize, head_dim: usize) {
+    for t in 0..seq {
+        let drow = (b * seq + t) * dst.cols + h * head_dim;
+        for e in 0..head_dim {
+            dst.data[drow + e] += src.data[t * head_dim + e];
+        }
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+// ---------------------------------------------------------------------------
+// forward (with cache) and backward
+// ---------------------------------------------------------------------------
+
+struct LayerCache {
+    x_in: Mat,             // h at layer entry
+    n1: Mat,               // rms1 output
+    inv1: Vec<f64>,        // rms1 row rsqrts
+    q: Mat,                // post-RoPE
+    k: Mat,                // post-RoPE
+    v: Mat,                // (B*T, d)
+    probs: Vec<Mat>,       // per (b*H + h): (T, T)
+    ctx: Mat,              // (B*T, d)
+    h_mid: Mat,            // after attention residual
+    n2: Mat,
+    inv2: Vec<f64>,
+    gate: Mat,             // (B*T, ffn)
+    up: Mat,
+    inner: Mat,            // silu(gate) * up
+}
+
+pub struct Cache {
+    bsz: usize,
+    seq: usize,
+    ids: Vec<i32>,     // flattened input ids (B*T)
+    cos: Vec<f64>,
+    sin: Vec<f64>,
+    layers: Vec<LayerCache>,
+    h_last: Mat,       // before the final norm
+    invf: Vec<f64>,
+    hf: Mat,           // final-norm output
+}
+
+impl Model {
+    /// Forward over flat `(bsz, seq)` input ids; returns `(logits, cache)`
+    /// with logits `(bsz*seq, vocab)`.
+    pub fn forward(&self, ids: &[i32], bsz: usize, seq: usize) -> Result<(Mat, Cache)> {
+        anyhow::ensure!(ids.len() == bsz * seq, "token shape mismatch");
+        let d = self.hidden;
+        let (cos, sin) = rope_tables(seq, self.head_dim);
+        let scale = 1.0 / (self.head_dim as f64).sqrt();
+
+        // embedding lookup
+        let mut h = Mat::zeros(bsz * seq, d);
+        for (i, &id) in ids.iter().enumerate() {
+            anyhow::ensure!(
+                (0..self.vocab as i32).contains(&id),
+                "token id {id} outside vocab {}",
+                self.vocab
+            );
+            h.data[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embed.data[id as usize * d..(id as usize + 1) * d]);
+        }
+
+        let mut layers = Vec::with_capacity(self.layers);
+        for block in &self.blocks {
+            let x_in = h.clone();
+            let (n1, inv1) = rms_norm(&h, &block.rms1);
+            let mut q = block.mats[mat_idx("attn_q")].apply(&n1);
+            let mut k = block.mats[mat_idx("attn_k")].apply(&n1);
+            let v = block.mats[mat_idx("attn_v")].apply(&n1);
+            apply_rope(&mut q, seq, self.heads, self.head_dim, &cos, &sin, 1.0);
+            apply_rope(&mut k, seq, self.heads, self.head_dim, &cos, &sin, 1.0);
+
+            let mut probs = Vec::with_capacity(bsz * self.heads);
+            let mut ctx = Mat::zeros(bsz * seq, d);
+            for b in 0..bsz {
+                for hh in 0..self.heads {
+                    let qh = head_view(&q, b, hh, seq, self.head_dim);
+                    let kh = head_view(&k, b, hh, seq, self.head_dim);
+                    let vh = head_view(&v, b, hh, seq, self.head_dim);
+                    // causal softmax over s <= t
+                    let mut p = Mat::zeros(seq, seq);
+                    for t in 0..seq {
+                        let qrow = &qh.data[t * self.head_dim..(t + 1) * self.head_dim];
+                        let mut mx = f64::NEG_INFINITY;
+                        let mut srow = vec![0.0; t + 1];
+                        for (s, sv) in srow.iter_mut().enumerate() {
+                            let krow = &kh.data[s * self.head_dim..(s + 1) * self.head_dim];
+                            *sv = super::kernels::dot(qrow, krow) * scale;
+                            if *sv > mx {
+                                mx = *sv;
+                            }
+                        }
+                        let mut z = 0.0;
+                        for sv in srow.iter_mut() {
+                            *sv = (*sv - mx).exp();
+                            z += *sv;
+                        }
+                        for (s, sv) in srow.iter().enumerate() {
+                            p.data[t * seq + s] = sv / z;
+                        }
+                    }
+                    let ctx_h = p.matmul(&vh); // (T, hd)
+                    head_scatter(&mut ctx, &ctx_h, b, hh, seq, self.head_dim);
+                    probs.push(p);
+                }
+            }
+
+            let attn_out = block.mats[mat_idx("attn_o")].apply(&ctx);
+            let mut h_mid = x_in.clone();
+            for (o, a) in h_mid.data.iter_mut().zip(&attn_out.data) {
+                *o += a;
+            }
+
+            let (n2, inv2) = rms_norm(&h_mid, &block.rms2);
+            let gate = block.mats[mat_idx("ffn_gate")].apply(&n2);
+            let up = block.mats[mat_idx("ffn_up")].apply(&n2);
+            let mut inner = Mat::zeros(gate.rows, gate.cols);
+            for i in 0..inner.data.len() {
+                let g = gate.data[i];
+                inner.data[i] = g * sigmoid(g) * up.data[i];
+            }
+            let down = block.mats[mat_idx("ffn_down")].apply(&inner);
+            let mut h_out = h_mid.clone();
+            for (o, a) in h_out.data.iter_mut().zip(&down.data) {
+                *o += a;
+            }
+
+            layers.push(LayerCache {
+                x_in,
+                n1,
+                inv1,
+                q,
+                k,
+                v,
+                probs,
+                ctx,
+                h_mid,
+                n2,
+                inv2,
+                gate,
+                up,
+                inner,
+            });
+            h = h_out;
+        }
+
+        let (hf, invf) = rms_norm(&h, &self.rms_f);
+        let logits = hf.matmul(&self.head.t()); // (B*T, V)
+        let cache = Cache {
+            bsz,
+            seq,
+            ids: ids.to_vec(),
+            cos,
+            sin,
+            layers,
+            h_last: h,
+            invf,
+            hf,
+        };
+        Ok((logits, cache))
+    }
+
+    /// Reverse-mode pass from `dlogits` `(B*T, V)`; returns flat f64
+    /// gradients keyed by parameter tensor name (stacked layer layout,
+    /// same shapes as the manifest).
+    pub fn backward(&self, cache: &Cache, dlogits: &Mat) -> BTreeMap<String, Vec<f64>> {
+        let d = self.hidden;
+        let (bsz, seq) = (cache.bsz, cache.seq);
+        let scale = 1.0 / (self.head_dim as f64).sqrt();
+
+        let mut grads: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        let mut dembed = vec![0.0; self.vocab * d];
+        let mut dhead = vec![0.0; self.vocab * d];
+        let mut drms1 = vec![0.0; self.layers * d];
+        let mut drms2 = vec![0.0; self.layers * d];
+        let mut drms_f = vec![0.0; d];
+
+        // head: logits = hf @ headᵀ
+        let dhf = dlogits.matmul(&self.head); // (BT, d)
+        {
+            let dh = dlogits.t().matmul(&cache.hf); // (V, d)
+            for (o, v) in dhead.iter_mut().zip(&dh.data) {
+                *o += v;
+            }
+        }
+        let mut dh = rms_norm_back(&cache.h_last, &self.rms_f, &cache.invf, &dhf, &mut drms_f);
+
+        // per-matrix stacked grads, allocated lazily per layer below
+        let mut mat_grads: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+
+        for (lyr, (block, lc)) in self.blocks.iter().zip(&cache.layers).enumerate().rev() {
+            // ---- FFN ----
+            // h_out = h_mid + down(inner)
+            let dinner = self.mat_backward(
+                lyr,
+                "ffn_down",
+                &block.mats[mat_idx("ffn_down")],
+                &lc.inner,
+                &dh,
+                &mut mat_grads,
+            );
+            // inner = silu(gate) * up
+            let mut dgate = Mat::zeros(lc.gate.rows, lc.gate.cols);
+            let mut dup = Mat::zeros(lc.up.rows, lc.up.cols);
+            for i in 0..dinner.data.len() {
+                let gt = lc.gate.data[i];
+                let sg = sigmoid(gt);
+                let silu = gt * sg;
+                dup.data[i] = dinner.data[i] * silu;
+                dgate.data[i] = dinner.data[i] * lc.up.data[i] * (sg * (1.0 + gt * (1.0 - sg)));
+            }
+            let mut dn2 = self.mat_backward(
+                lyr,
+                "ffn_gate",
+                &block.mats[mat_idx("ffn_gate")],
+                &lc.n2,
+                &dgate,
+                &mut mat_grads,
+            );
+            let dn2_up = self.mat_backward(
+                lyr,
+                "ffn_up",
+                &block.mats[mat_idx("ffn_up")],
+                &lc.n2,
+                &dup,
+                &mut mat_grads,
+            );
+            for (o, v) in dn2.data.iter_mut().zip(&dn2_up.data) {
+                *o += v;
+            }
+            // h_mid feeds rms2 AND the residual skip
+            let mut dh_mid = rms_norm_back(
+                &lc.h_mid,
+                &block.rms2,
+                &lc.inv2,
+                &dn2,
+                &mut drms2[lyr * d..(lyr + 1) * d],
+            );
+            for (o, v) in dh_mid.data.iter_mut().zip(&dh.data) {
+                *o += v;
+            }
+
+            // ---- attention ----
+            // h_mid = x_in + attn_o(ctx)
+            let dctx = self.mat_backward(
+                lyr,
+                "attn_o",
+                &block.mats[mat_idx("attn_o")],
+                &lc.ctx,
+                &dh_mid,
+                &mut mat_grads,
+            );
+            let mut dq = Mat::zeros(bsz * seq, d);
+            let mut dk = Mat::zeros(bsz * seq, d);
+            let mut dv = Mat::zeros(bsz * seq, d);
+            for b in 0..bsz {
+                for hh in 0..self.heads {
+                    let p = &lc.probs[b * self.heads + hh];
+                    let qh = head_view(&lc.q, b, hh, seq, self.head_dim);
+                    let kh = head_view(&lc.k, b, hh, seq, self.head_dim);
+                    let vh = head_view(&lc.v, b, hh, seq, self.head_dim);
+                    let dctx_h = head_view(&dctx, b, hh, seq, self.head_dim);
+                    // ctx_h = P V ; dV = Pᵀ dctx ; dPin = dctx Vᵀ
+                    let dvh = p.t().matmul(&dctx_h);
+                    let dpin = dctx_h.matmul(&vh.t()); // (T, T)
+                    // softmax backward row-wise: dS = P ∘ (dPin - Σ P∘dPin)
+                    let mut ds = Mat::zeros(seq, seq);
+                    for t in 0..seq {
+                        let mut row_dot = 0.0;
+                        for s in 0..=t {
+                            row_dot += p.data[t * seq + s] * dpin.data[t * seq + s];
+                        }
+                        for s in 0..=t {
+                            ds.data[t * seq + s] =
+                                p.data[t * seq + s] * (dpin.data[t * seq + s] - row_dot);
+                        }
+                    }
+                    // S = (Q Kᵀ) * scale
+                    let dqh = ds.matmul(&kh).scale(scale);
+                    let dkh = ds.t().matmul(&qh).scale(scale);
+                    head_scatter(&mut dq, &dqh, b, hh, seq, self.head_dim);
+                    head_scatter(&mut dk, &dkh, b, hh, seq, self.head_dim);
+                    head_scatter(&mut dv, &dvh, b, hh, seq, self.head_dim);
+                }
+            }
+            // inverse rotation (RoPE backward)
+            apply_rope(&mut dq, seq, self.heads, self.head_dim, &cache.cos, &cache.sin, -1.0);
+            apply_rope(&mut dk, seq, self.heads, self.head_dim, &cache.cos, &cache.sin, -1.0);
+
+            let mut dn1 = self.mat_backward(
+                lyr,
+                "attn_q",
+                &block.mats[mat_idx("attn_q")],
+                &lc.n1,
+                &dq,
+                &mut mat_grads,
+            );
+            for (name, dyy) in [("attn_k", &dk), ("attn_v", &dv)] {
+                let part = self.mat_backward(
+                    lyr,
+                    name,
+                    &block.mats[mat_idx(name)],
+                    &lc.n1,
+                    dyy,
+                    &mut mat_grads,
+                );
+                for (o, v) in dn1.data.iter_mut().zip(&part.data) {
+                    *o += v;
+                }
+            }
+            let mut dx = rms_norm_back(
+                &lc.x_in,
+                &block.rms1,
+                &lc.inv1,
+                &dn1,
+                &mut drms1[lyr * d..(lyr + 1) * d],
+            );
+            for (o, v) in dx.data.iter_mut().zip(&dh_mid.data) {
+                *o += v;
+            }
+            dh = dx;
+        }
+
+        // embedding scatter
+        for (i, &id) in cache.ids.iter().enumerate() {
+            let row = id as usize * d;
+            for j in 0..d {
+                dembed[row + j] += dh.data[i * d + j];
+            }
+        }
+
+        grads.insert("embed".into(), dembed);
+        grads.insert("head".into(), dhead);
+        grads.insert("rms1".into(), drms1);
+        grads.insert("rms2".into(), drms2);
+        grads.insert("rms_f".into(), drms_f);
+        grads.append(&mut mat_grads);
+        grads
+    }
+
+    /// Backward through one per-layer matrix apply: accumulates the
+    /// stacked weight gradient(s), returns `dx`.
+    fn mat_backward(
+        &self,
+        lyr: usize,
+        name: &str,
+        p: &MatParam,
+        x: &Mat,
+        dy: &Mat,
+        mat_grads: &mut BTreeMap<String, Vec<f64>>,
+    ) -> Mat {
+        match p {
+            MatParam::Dense(w) => {
+                let per = w.rows * w.cols;
+                let gw = mat_grads
+                    .entry(name.to_string())
+                    .or_insert_with(|| vec![0.0; self.layers * per]);
+                let dw = dy.t().matmul(x); // (m, n)
+                for (o, v) in gw[lyr * per..(lyr + 1) * per].iter_mut().zip(&dw.data) {
+                    *o += v;
+                }
+                dy.matmul(w)
+            }
+            MatParam::Fact { a, b } => {
+                let (pa, pb) = (a.rows * a.cols, b.rows * b.cols);
+                let u = x.matmul(b); // (tok, r)
+                let da = dy.t().matmul(&u); // (m, r)
+                let du = dy.matmul(a); // (tok, r)
+                let db = x.t().matmul(&du); // (n, r)
+                {
+                    let ga = mat_grads
+                        .entry(format!("{name}_a"))
+                        .or_insert_with(|| vec![0.0; self.layers * pa]);
+                    for (o, v) in ga[lyr * pa..(lyr + 1) * pa].iter_mut().zip(&da.data) {
+                        *o += v;
+                    }
+                }
+                {
+                    let gb = mat_grads
+                        .entry(format!("{name}_b"))
+                        .or_insert_with(|| vec![0.0; self.layers * pb]);
+                    for (o, v) in gb[lyr * pb..(lyr + 1) * pb].iter_mut().zip(&db.data) {
+                        *o += v;
+                    }
+                }
+                du.matmul(&b.t())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// losses on top of the forward
+// ---------------------------------------------------------------------------
+
+/// Per-token next-token NLL for `logits (n_tok, V)` against `targets`.
+pub fn token_nll(logits: &Mat, targets: &[i32]) -> Vec<f64> {
+    let v = logits.cols;
+    targets
+        .iter()
+        .enumerate()
+        .map(|(i, &tgt)| {
+            let row = &logits.data[i * v..(i + 1) * v];
+            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let z: f64 = row.iter().map(|l| (l - mx).exp()).sum();
+            (mx + z.ln()) - row[tgt as usize]
+        })
+        .collect()
+}
+
+/// `d(mean nll)/d logits`: `(softmax - onehot) / n_tok`.
+pub fn mean_nll_backward(logits: &Mat, targets: &[i32]) -> Mat {
+    let v = logits.cols;
+    let n = targets.len() as f64;
+    let mut dl = Mat::zeros(logits.rows, v);
+    for (i, &tgt) in targets.iter().enumerate() {
+        let row = &logits.data[i * v..(i + 1) * v];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = row.iter().map(|l| (l - mx).exp()).sum();
+        let out = &mut dl.data[i * v..(i + 1) * v];
+        for j in 0..v {
+            out[j] = (row[j] - mx).exp() / z / n;
+        }
+        out[tgt as usize] -= 1.0 / n;
+    }
+    dl
+}

@@ -1,0 +1,442 @@
+//! Native mirror of the L2 optimizers (`python/compile/optim.py`):
+//! AdamW, momentum SGD, Muon (Newton-Schulz orthogonalized momentum),
+//! spectral renormalization, and the full Spectron update (Algorithm 1:
+//! ortho + renorm with the shared radius `rho = eta / (sigma_A + sigma_B
+//! + 1)`), plus the in-graph spectral telemetry of `telemetry.py`.
+//!
+//! Everything runs in f64 over [`crate::linalg::Mat`] and reads/writes
+//! the same header slots as the lowered HLO, so a native state vector is
+//! bit-compatible with the PJRT one at the layout level and agrees with
+//! it numerically within the cross-backend tolerance (DESIGN.md
+//! §Backends).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::kernels::{self, power_iter, K_NS, K_POWER};
+use crate::config::VariantCfg;
+use crate::linalg::{self, newton_schulz, Mat};
+use crate::runtime::layout::{
+    factor_pairs, is_factorized, matrix_param_names, param_names,
+};
+use crate::runtime::state as slots;
+use crate::runtime::Manifest;
+use crate::util::rng::Pcg64;
+
+pub const ADAM_B1: f64 = 0.9;
+pub const ADAM_B2: f64 = 0.95;
+pub const ADAM_EPS: f64 = 1e-8;
+pub const MOMENTUM: f64 = 0.95;
+/// telemetry power-iteration depth (`telemetry.POWER_ITERS`)
+pub const POWER_ITERS: usize = 8;
+
+/// One state tensor decoded to f64.
+pub struct Ten {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Ten {
+    /// Layer `l` of a stacked `(layers, m, n)` tensor as a `Mat`.
+    pub fn layer(&self, l: usize) -> Mat {
+        assert_eq!(self.shape.len(), 3);
+        kernels::layer_mat(&self.data, l, self.shape[1], self.shape[2])
+    }
+}
+
+pub type TenMap = BTreeMap<String, Ten>;
+
+/// Decode every manifest tensor of `state` into f64 storage.
+pub fn state_to_tensors(manifest: &Manifest, state: &[f32]) -> TenMap {
+    manifest
+        .tensors
+        .iter()
+        .map(|spec| {
+            let data = state[spec.offset..spec.offset + spec.size()]
+                .iter()
+                .map(|&x| x as f64)
+                .collect();
+            (spec.name.clone(), Ten { shape: spec.shape.clone(), data })
+        })
+        .collect()
+}
+
+/// Write every tensor back into the flat f32 state.
+pub fn write_back(manifest: &Manifest, tensors: &TenMap, state: &mut [f32]) {
+    for spec in &manifest.tensors {
+        let t = &tensors[&spec.name];
+        for (dst, &src) in state[spec.offset..spec.offset + spec.size()]
+            .iter_mut()
+            .zip(&t.data)
+        {
+            *dst = src as f32;
+        }
+    }
+}
+
+/// Cosine-to-zero with linear warmup, driven by header knobs (mirror of
+/// `optim.lr_schedule`; the host-side [`crate::train::schedule::Schedule`]
+/// mirrors the same formula from run-config values).
+pub fn lr_schedule(header: &[f64]) -> f64 {
+    let t = header[slots::STEP];
+    let total = header[slots::TOTAL_STEPS].max(1.0);
+    let base = header[slots::BASE_LR];
+    let warm = (header[slots::WARMUP_FRAC] * total).max(1.0);
+    let warm_lr = ((t + 1.0) / warm).min(1.0);
+    let prog = ((t - warm) / (total - warm).max(1.0)).clamp(0.0, 1.0);
+    let cos_lr = 0.5 * (1.0 + (std::f64::consts::PI * prog).cos());
+    base * if t < warm { warm_lr } else { cos_lr }
+}
+
+fn decay(name: &str) -> f64 {
+    if name.starts_with("rms") {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+/// Telemetry scalars the header records alongside the update.
+pub struct Info {
+    pub sigma_a: f64,
+    pub sigma_b: f64,
+    pub rho: f64,
+    pub lr: f64,
+}
+
+fn adamw_update(
+    p: &mut [f64],
+    g: &[f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    t: f64,
+    lr: f64,
+    wd: f64,
+) {
+    let bc1 = 1.0 - ADAM_B1.powf(t + 1.0);
+    let bc2 = 1.0 - ADAM_B2.powf(t + 1.0);
+    for i in 0..p.len() {
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + wd * p[i]);
+    }
+}
+
+/// Take a tensor's storage out of the map to mutate alongside siblings
+/// (BTreeMap cannot lend two `&mut` at once). Panics on unknown name —
+/// the layout built the map, so a miss is a bug, not an input error.
+fn take(tensors: &mut TenMap, name: &str) -> Ten {
+    tensors.remove(name).unwrap_or_else(|| panic!("tensor '{name}' missing"))
+}
+
+fn grad_of<'a>(grads: &'a BTreeMap<String, Vec<f64>>, name: &str) -> Result<&'a [f64]> {
+    grads
+        .get(name)
+        .map(|g| g.as_slice())
+        .ok_or_else(|| anyhow!("missing gradient for '{name}'"))
+}
+
+fn adamw_all(
+    tensors: &mut TenMap,
+    grads: &BTreeMap<String, Vec<f64>>,
+    names: &[String],
+    t: f64,
+    lr_eff: f64,
+    wd: f64,
+) -> Result<()> {
+    for n in names {
+        let g = grad_of(grads, n)?;
+        let mut p = take(tensors, n);
+        let mut m = take(tensors, &format!("opt.m.{n}"));
+        let mut v = take(tensors, &format!("opt.v.{n}"));
+        adamw_update(&mut p.data, g, &mut m.data, &mut v.data, t, lr_eff, wd * decay(n));
+        tensors.insert(n.clone(), p);
+        tensors.insert(format!("opt.m.{n}"), m);
+        tensors.insert(format!("opt.v.{n}"), v);
+    }
+    Ok(())
+}
+
+/// One optimizer step, in place over `tensors`. `grads` holds f64
+/// parameter gradients keyed by name (the model's `backward` output or a
+/// decoded grad vector). Mirrors `optim.optimizer_step`.
+pub fn optimizer_step(
+    cfg: &VariantCfg,
+    tensors: &mut TenMap,
+    grads: &BTreeMap<String, Vec<f64>>,
+    header: &[f64],
+) -> Result<Info> {
+    let opt = cfg.optimizer.as_str();
+    let t = header[slots::STEP];
+    let lr = lr_schedule(header);
+    let wd = header[slots::WEIGHT_DECAY];
+    let mut info = Info { sigma_a: 0.0, sigma_b: 0.0, rho: lr, lr };
+
+    let pnames = param_names(cfg);
+    match opt {
+        "adamw" => {
+            adamw_all(tensors, grads, &pnames, t, lr, wd)?;
+            return Ok(info);
+        }
+        "selfguided" => {
+            // the dense-auxiliary path is a build-side-only feature (same
+            // restriction as the grad program); surfaced at backend
+            // construction, repeated here for direct callers
+            return Err(anyhow!("selfguided optimizer is not supported natively"));
+        }
+        "sgd" => {
+            for n in &pnames {
+                let g = grad_of(grads, n)?;
+                let mut p = take(tensors, n);
+                let mut mom = take(tensors, &format!("opt.mom.{n}"));
+                for i in 0..p.data.len() {
+                    mom.data[i] = MOMENTUM * mom.data[i] + (1.0 - MOMENTUM) * g[i];
+                    p.data[i] -= lr * mom.data[i] + lr * wd * decay(n) * p.data[i];
+                }
+                tensors.insert(n.clone(), p);
+                tensors.insert(format!("opt.mom.{n}"), mom);
+            }
+            return Ok(info);
+        }
+        "muon" | "spectron" | "renorm" => {}
+        other => return Err(anyhow!("unknown optimizer '{other}'")),
+    }
+
+    // ---- matrix optimizers: muon / renorm / spectron ----
+    let mats = matrix_param_names(cfg);
+    let others: Vec<String> =
+        pnames.iter().filter(|n| !mats.contains(*n)).cloned().collect();
+    adamw_all(tensors, grads, &others, t, lr * cfg.emb_lr_mult, wd)?;
+
+    // momentum for every matrix tensor
+    for n in &mats {
+        let g = grad_of(grads, n)?;
+        let mom = tensors.get_mut(&format!("opt.mom.{n}")).expect("momentum slot");
+        for i in 0..mom.data.len() {
+            mom.data[i] = MOMENTUM * mom.data[i] + (1.0 - MOMENTUM) * g[i];
+        }
+    }
+
+    let pairs = factor_pairs(cfg);
+    let paired: Vec<String> = pairs
+        .iter()
+        .flat_map(|b| [format!("{b}_a"), format!("{b}_b")])
+        .collect();
+
+    // plain Muon rule: all matrices under `muon`, and the dense leftovers
+    // (attention in "ffn" factorize mode) under spectron/renorm
+    for n in &mats {
+        if opt != "muon" && paired.contains(n) {
+            continue;
+        }
+        let mom = &tensors[&format!("opt.mom.{n}")];
+        let layers = mom.shape[0];
+        let (mm, nn) = (mom.shape[1], mom.shape[2]);
+        let ortho = kernels::newton_schulz_stacked(&mom.data, layers, mm, nn);
+        let p = tensors.get_mut(n).expect("matrix param");
+        for i in 0..p.data.len() {
+            p.data[i] -= lr * ortho[i] + lr * wd * p.data[i];
+        }
+    }
+    if opt == "muon" {
+        return Ok(info);
+    }
+
+    // spectron / renorm on factor pairs with the shared adaptive radius
+    let mut picked = false;
+    for base in &pairs {
+        let (na, nb) = (format!("{base}_a"), format!("{base}_b"));
+        let mut a_t = take(tensors, &na);
+        let mut b_t = take(tensors, &nb);
+        let mut u_a = take(tensors, &format!("opt.u.{na}"));
+        let mut u_b = take(tensors, &format!("opt.u.{nb}"));
+        let layers = a_t.shape[0];
+        let (am, ar) = (a_t.shape[1], a_t.shape[2]);
+        let (bm, br) = (b_t.shape[1], b_t.shape[2]);
+
+        let mut sig_a = vec![0.0; layers];
+        let mut sig_b = vec![0.0; layers];
+        for l in 0..layers {
+            let (sa, ua) = power_iter(&a_t.layer(l), &u_a.data[l * am..(l + 1) * am], K_POWER);
+            let (sb, ub) = power_iter(&b_t.layer(l), &u_b.data[l * bm..(l + 1) * bm], K_POWER);
+            u_a.data[l * am..(l + 1) * am].copy_from_slice(&ua);
+            u_b.data[l * bm..(l + 1) * bm].copy_from_slice(&ub);
+            sig_a[l] = sa;
+            sig_b[l] = sb;
+        }
+
+        let (oa, ob) = if opt == "spectron" {
+            let ma = &tensors[&format!("opt.mom.{na}")];
+            let mb = &tensors[&format!("opt.mom.{nb}")];
+            (
+                kernels::newton_schulz_stacked(&ma.data, layers, am, ar),
+                kernels::newton_schulz_stacked(&mb.data, layers, bm, br),
+            )
+        } else {
+            // renorm: momentum normalized to unit spectral norm via its
+            // own persisted power-iteration vectors (2 iters)
+            let mut um_a = take(tensors, &format!("opt.um.{na}"));
+            let mut um_b = take(tensors, &format!("opt.um.{nb}"));
+            let ma = &tensors[&format!("opt.mom.{na}")];
+            let mb = &tensors[&format!("opt.mom.{nb}")];
+            let mut oa = ma.data.clone();
+            let mut ob = mb.data.clone();
+            for l in 0..layers {
+                let (sma, uma) = power_iter(&ma.layer(l), &um_a.data[l * am..(l + 1) * am], 2);
+                let (smb, umb) = power_iter(&mb.layer(l), &um_b.data[l * bm..(l + 1) * bm], 2);
+                um_a.data[l * am..(l + 1) * am].copy_from_slice(&uma);
+                um_b.data[l * bm..(l + 1) * bm].copy_from_slice(&umb);
+                let (ia, ib) = (1.0 / (sma.abs() + 1e-8), 1.0 / (smb.abs() + 1e-8));
+                for v in oa[l * am * ar..(l + 1) * am * ar].iter_mut() {
+                    *v *= ia;
+                }
+                for v in ob[l * bm * br..(l + 1) * bm * br].iter_mut() {
+                    *v *= ib;
+                }
+            }
+            tensors.insert(format!("opt.um.{na}"), um_a);
+            tensors.insert(format!("opt.um.{nb}"), um_b);
+            (oa, ob)
+        };
+
+        for l in 0..layers {
+            let rho = lr / (sig_a[l] + sig_b[l] + 1.0);
+            let (pa, pb) = (am * ar, bm * br);
+            for i in 0..pa {
+                let idx = l * pa + i;
+                a_t.data[idx] -= rho * oa[idx] + lr * wd * a_t.data[idx];
+            }
+            for i in 0..pb {
+                let idx = l * pb + i;
+                b_t.data[idx] -= rho * ob[idx] + lr * wd * b_t.data[idx];
+            }
+        }
+
+        if *base == cfg.telemetry_matrix || !picked {
+            let mid = layers / 2;
+            info.sigma_a = sig_a[mid];
+            info.sigma_b = sig_b[mid];
+            info.rho = lr / (sig_a[mid] + sig_b[mid] + 1.0);
+            picked = true;
+        }
+
+        tensors.insert(na.clone(), a_t);
+        tensors.insert(nb.clone(), b_t);
+        tensors.insert(format!("opt.u.{na}"), u_a);
+        tensors.insert(format!("opt.u.{nb}"), u_b);
+    }
+    Ok(info)
+}
+
+// ---------------------------------------------------------------------------
+// spectral telemetry (mirror of python/compile/telemetry.py)
+// ---------------------------------------------------------------------------
+
+/// Snapshot of the tracked matrix (factor pair or dense) at one layer.
+pub enum Tracked {
+    Fact { a: Mat, b: Mat },
+    Dense(Mat),
+}
+
+impl Tracked {
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            Tracked::Fact { a, b } => a.matvec(&b.matvec_t(x)),
+            Tracked::Dense(w) => w.matvec(x),
+        }
+    }
+    fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
+        match self {
+            Tracked::Fact { a, b } => b.matvec(&a.matvec_t(y)),
+            Tracked::Dense(w) => w.matvec_t(y),
+        }
+    }
+    fn in_dim(&self) -> usize {
+        match self {
+            Tracked::Fact { b, .. } => b.rows,
+            Tracked::Dense(w) => w.cols,
+        }
+    }
+}
+
+/// Capture the tracked matrix from the current tensors (mid layer of
+/// `cfg.telemetry_matrix`, the paper's convention).
+pub fn capture_tracked(cfg: &VariantCfg, tensors: &TenMap) -> Tracked {
+    let mat = cfg.telemetry_matrix.as_str();
+    let lyr = cfg.model.layers / 2;
+    if is_factorized(cfg, mat) {
+        Tracked::Fact {
+            a: tensors[&format!("{mat}_a")].layer(lyr),
+            b: tensors[&format!("{mat}_b")].layer(lyr),
+        }
+    } else {
+        Tracked::Dense(tensors[mat].layer(lyr))
+    }
+}
+
+/// `(w_spec, dw_spec, dy_rms)` for old -> new tracked snapshots. The
+/// probe vectors come from a step-seeded [`Pcg64`] rather than the build
+/// side's jax PRNG — same estimator, different (documented) randomness;
+/// the values are measurements, not part of the update.
+pub fn spectral_telemetry(old: &Tracked, new: &Tracked, step: usize) -> (f64, f64, f64) {
+    let n = new.in_dim();
+    let base = Pcg64::new(1234).fold_in(step as u64);
+    let mut k_w = base.fold_in(0);
+    let mut k_dw = base.fold_in(1);
+    let mut k_probe = base.fold_in(2);
+
+    let w_spec =
+        linalg::spectral_norm_op(|x| new.matvec(x), |y| new.matvec_t(y), n, POWER_ITERS, &mut k_w);
+    let dmv = |x: &[f64]| -> Vec<f64> {
+        new.matvec(x).iter().zip(&old.matvec(x)).map(|(a, b)| a - b).collect()
+    };
+    let dmt = |y: &[f64]| -> Vec<f64> {
+        new.matvec_t(y).iter().zip(&old.matvec_t(y)).map(|(a, b)| a - b).collect()
+    };
+    let dw_spec = linalg::spectral_norm_op(&dmv, &dmt, n, POWER_ITERS, &mut k_dw);
+
+    let mut x: Vec<f64> = (0..n).map(|_| k_probe.normal()).collect();
+    let rms = (x.iter().map(|v| v * v).sum::<f64>() / n as f64).sqrt() + 1e-20;
+    for v in x.iter_mut() {
+        *v /= rms;
+    }
+    let dy = dmv(&x);
+    let dy_rms = (dy.iter().map(|v| v * v).sum::<f64>() / dy.len() as f64).sqrt();
+    (w_spec, dw_spec, dy_rms)
+}
+
+// ---------------------------------------------------------------------------
+// single-pair Spectron update (exposed for the property tests)
+// ---------------------------------------------------------------------------
+
+/// One Spectron update on a single factor pair: power-iteration sigma
+/// estimates, Newton-Schulz orthogonalized momenta, shared radius
+/// `rho = lr / (sa + sb + 1)`. Returns `(a', b', rho)`.
+pub fn spectron_pair_update(
+    a: &Mat,
+    b: &Mat,
+    mom_a: &Mat,
+    mom_b: &Mat,
+    u_a: &[f64],
+    u_b: &[f64],
+    lr: f64,
+    wd: f64,
+) -> (Mat, Mat, f64) {
+    let (sa, _) = power_iter(a, u_a, K_POWER);
+    let (sb, _) = power_iter(b, u_b, K_POWER);
+    let rho = lr / (sa + sb + 1.0);
+    let oa = newton_schulz(mom_a, K_NS);
+    let ob = newton_schulz(mom_b, K_NS);
+    let mut a2 = a.clone();
+    let mut b2 = b.clone();
+    for i in 0..a2.data.len() {
+        a2.data[i] -= rho * oa.data[i] + lr * wd * a.data[i];
+    }
+    for i in 0..b2.data.len() {
+        b2.data[i] -= rho * ob.data[i] + lr * wd * b.data[i];
+    }
+    (a2, b2, rho)
+}

@@ -11,8 +11,9 @@
 //!   (docs/adr/001-serve-batching.md),
 //! * [`cache`]     — LRU of hot model sessions, keyed by variant,
 //! * [`engine`]    — the worker-side execution boundary + mock engine,
-//! * [`session`]   — the real PJRT engine (checkpoint loading, batched
-//!   score, lockstep batched decode),
+//! * [`session`]   — the real engines (checkpoint loading, batched
+//!   score, lockstep batched decode) over either backend: PJRT or the
+//!   artifact-free native interpreter (DESIGN.md §Backends),
 //! * [`server`]    — TCP accept loop, connection handlers, engine worker
 //!   pool,
 //! * [`telemetry`] — latency percentiles, batch occupancy, tokens/sec.
@@ -33,5 +34,5 @@ pub use cache::LruCache;
 pub use engine::{BatchEngine, BatchKey, EngineFactory, MockEngine};
 pub use protocol::{OpKind, Reply, Request};
 pub use server::{ServeCfg, Server, ServerHandle};
-pub use session::{ModelSession, PjrtEngine};
+pub use session::{ModelSession, NativeEngine, PjrtEngine};
 pub use telemetry::ServeStats;

@@ -1,17 +1,25 @@
-//! The real serving engine: checkpoints + AOT programs through PJRT.
+//! The real serving engines: checkpoints + the `eval`/`logits` programs
+//! through a [`crate::runtime::backend::Backend`] (DESIGN.md §Backends).
 //!
 //! A [`ModelSession`] is one hot model variant: its manifest, the
-//! header+params prefix of a trained checkpoint uploaded to the device
-//! *once* (a [`HostBuffer`], so the source literal outlives every execute
-//! that reads it — the lifetime rule from
-//! [`crate::runtime::client::HostBuffer`]), the shared eval program for
-//! `score`, and the `logits` decode program for `generate`. Sessions live
-//! in a per-worker [`super::cache::LruCache`] keyed by variant, so a
-//! server can keep several variants hot and fall back to
-//! load-on-first-request for the cold ones (DESIGN.md §Serving).
+//! header+params prefix of a trained checkpoint parked backend-side
+//! *once* (device-resident under PJRT, pinned with its source literal per
+//! the [`crate::runtime::client::HostBuffer`] lifetime rule), the shared
+//! eval program for `score`, and the `logits` decode program for
+//! `generate`. Sessions live in a per-worker [`super::cache::LruCache`]
+//! keyed by variant, so a server can keep several variants hot and fall
+//! back to load-on-first-request for the cold ones (DESIGN.md §Serving).
+//!
+//! Two engines share the session machinery:
+//!
+//! * [`PjrtEngine`]   — compiled HLO through per-worker PJRT clients
+//!   (requires artifacts),
+//! * [`NativeEngine`] — the native backend end to end: `repro serve
+//!   --backend native` serves real checkpoints with no artifacts
+//!   directory and no Python (docs/adr/003-native-backend.md).
 //!
 //! Batched decode runs all generate requests of a batch in lockstep: one
-//! `logits` execute per decode step scores every sequence's next token at
+//! `logits` call per decode step scores every sequence's next token at
 //! once; slots that finish early are masked out host-side. There is no KV
 //! cache — each step re-runs the full forward, which is the honest
 //! CPU-testbed trade recorded in docs/adr/001-serve-batching.md.
@@ -25,21 +33,24 @@ use anyhow::{anyhow, Context, Result};
 use super::cache::LruCache;
 use super::engine::{BatchEngine, BatchKey};
 use super::protocol::{OpKind, Reply, Request};
+use crate::config::{Registry, VariantCfg};
 use crate::data::bpe::{Bpe, BOS};
 use crate::eval::Evaluator;
-use crate::runtime::{client, ArtifactIndex, HostBuffer, Manifest, Program, Runtime};
+use crate::runtime::backend::StateBuf;
+use crate::runtime::{ArtifactIndex, Manifest, Runtime};
 use crate::train::checkpoint;
 use crate::util::rng::Pcg64;
 
-/// One hot (variant, checkpoint) pair.
+/// One hot (variant, checkpoint) pair on some backend.
 pub struct ModelSession {
     pub manifest: Manifest,
-    prefix_buf: HostBuffer,
     ev: Evaluator,
-    gen: Option<Arc<Program>>,
+    prefix: StateBuf,
+    has_gen: bool,
 }
 
 impl ModelSession {
+    /// PJRT session from artifacts + checkpoint.
     pub fn load(
         rt: &Runtime,
         idx: &ArtifactIndex,
@@ -47,6 +58,23 @@ impl ModelSession {
         ckpt: &std::path::Path,
     ) -> Result<ModelSession> {
         let manifest = idx.manifest(variant)?;
+        let ev = Evaluator::new(rt, idx, &manifest)?;
+        Self::finish(manifest, ev, variant, ckpt)
+    }
+
+    /// Native session: the same checkpoint, no artifacts involved.
+    pub fn load_native(variant: &VariantCfg, ckpt: &std::path::Path) -> Result<ModelSession> {
+        let ev = Evaluator::native(variant)?;
+        let manifest = crate::runtime::layout::build_manifest(variant)?;
+        Self::finish(manifest, ev, &variant.name, ckpt)
+    }
+
+    fn finish(
+        manifest: Manifest,
+        ev: Evaluator,
+        variant: &str,
+        ckpt: &std::path::Path,
+    ) -> Result<ModelSession> {
         let (ck_variant, state) = checkpoint::load(ckpt)
             .with_context(|| format!("loading checkpoint {}", ckpt.display()))?;
         anyhow::ensure!(
@@ -60,30 +88,21 @@ impl ModelSession {
             state.len(),
             manifest.state_len
         );
-        let prefix_buf = rt.upload_f32(&state[..manifest.params_end])?;
-        let ev = Evaluator::new(rt, idx, &manifest)?;
-        let gen_path = idx.gen_path(&manifest.eval_key);
-        let gen = if gen_path.exists() {
-            Some(rt.load_program(&gen_path)?)
-        } else {
+        let prefix = ev.upload_prefix(&state[..manifest.params_end])?;
+        let has_gen = ev.has_logits();
+        if !has_gen {
             crate::warn_!(
                 "serve",
-                "{variant}: no decode program at {} (artifacts predate `repro serve`; \
-                 re-run `make artifacts` to enable generate)",
-                gen_path.display()
+                "{variant}: no decode program (artifacts predate `repro serve`; \
+                 re-run `make artifacts` to enable generate)"
             );
-            None
-        };
-        Ok(ModelSession { manifest, prefix_buf, ev, gen })
+        }
+        Ok(ModelSession { manifest, ev, prefix, has_gen })
     }
 
     /// Score a chunk (<= manifest.batch requests): one eval execute.
     /// Returns one reply per request, in order.
-    fn score_chunk(
-        &self,
-        bpe: &Bpe,
-        chunk: &[Request],
-    ) -> Result<Vec<Result<Reply>>> {
+    fn score_chunk(&self, bpe: &Bpe, chunk: &[Request]) -> Result<Vec<Result<Reply>>> {
         let b = self.manifest.batch;
         let w = self.manifest.seq_len + 1;
         debug_assert!(chunk.len() <= b);
@@ -97,8 +116,7 @@ impl ModelSession {
             spans[i * 2] = 0;
             spans[i * 2 + 1] = ids.len() as i32;
         }
-        let (_, _, nll, cnt) =
-            self.ev.score_batch_buffers(self.prefix_buf.buffer(), &tokens, &spans)?;
+        let (_, _, nll, cnt) = self.ev.score_batch_resident(&self.prefix, &tokens, &spans)?;
         Ok(chunk
             .iter()
             .enumerate()
@@ -114,17 +132,13 @@ impl ModelSession {
     }
 
     /// Generate for a chunk (<= manifest.batch requests) in lockstep:
-    /// each decode step is ONE `logits` execute covering every active
-    /// slot, then host-side sampling per slot.
-    fn generate_chunk(
-        &self,
-        rt: &Runtime,
-        bpe: &Bpe,
-        chunk: &[Request],
-    ) -> Result<Vec<Result<Reply>>> {
-        let gen = self.gen.as_ref().ok_or_else(|| {
-            anyhow!("variant has no decode program; re-run `make artifacts`")
-        })?;
+    /// each decode step is ONE `logits` call covering every active slot,
+    /// then host-side sampling per slot.
+    fn generate_chunk(&self, bpe: &Bpe, chunk: &[Request]) -> Result<Vec<Result<Reply>>> {
+        anyhow::ensure!(
+            self.has_gen,
+            "variant has no decode program; re-run `make artifacts`"
+        );
         let b = self.manifest.batch;
         let t = self.manifest.seq_len;
         let v = self.manifest.vocab;
@@ -168,15 +182,7 @@ impl ModelSession {
                     }
                 })
                 .collect();
-            let tok_buf = rt.upload_literal(&client::tokens_literal(
-                &tokens,
-                b,
-                t,
-            )?)?;
-            let pos_buf = rt.upload_literal(&xla::Literal::vec1(&pos))?;
-            let out =
-                gen.run_buffers(&[self.prefix_buf.buffer(), &tok_buf, &pos_buf])?;
-            let logits = rt.download_f32(&out)?;
+            let logits = self.ev.logits_resident(&self.prefix, &tokens, &pos)?;
             anyhow::ensure!(logits.len() == b * v, "logits length {}", logits.len());
 
             for i in 0..chunk.len() {
@@ -210,6 +216,20 @@ impl ModelSession {
             })
             .collect())
     }
+
+    /// Run one batch through the session in manifest-batch chunks.
+    fn run(&self, bpe: &Bpe, kind: OpKind, batch: &[Request]) -> Result<Vec<Result<Reply>>> {
+        let b = self.manifest.batch;
+        let mut out = Vec::with_capacity(batch.len());
+        for chunk in batch.chunks(b) {
+            let replies = match kind {
+                OpKind::Score => self.score_chunk(bpe, chunk)?,
+                OpKind::Generate => self.generate_chunk(bpe, chunk)?,
+            };
+            out.extend(replies);
+        }
+        Ok(out)
+    }
 }
 
 /// Greedy for temperature <= 0, otherwise softmax sampling at the given
@@ -236,7 +256,15 @@ fn sample(logits: &[f32], temperature: f64, rng: &mut Pcg64) -> usize {
     weights.len() - 1
 }
 
-/// The production engine: per-worker PJRT runtime + LRU of hot sessions.
+/// Train the serving tokenizer ONCE (shared across workers) via the one
+/// shared recipe ([`crate::exp::train_bpe`]), so served token ids line
+/// up with checkpoints trained at the same `--docs`.
+fn serving_bpe(docs: u64) -> Arc<Bpe> {
+    let corpus = crate::data::corpus::Corpus::new(Default::default());
+    crate::exp::train_bpe(&corpus, docs)
+}
+
+/// The PJRT production engine: per-worker runtime + LRU of hot sessions.
 pub struct PjrtEngine {
     rt: Runtime,
     idx: ArtifactIndex,
@@ -263,22 +291,14 @@ impl PjrtEngine {
         })
     }
 
-    /// The one way launchers should build a real serving factory: trains
-    /// the tokenizer ONCE (shared across workers) with the same
-    /// `400.min(docs)`-document sample `exp::Ctx::new` uses, so served
-    /// token ids line up with checkpoints trained at the same `--docs`.
+    /// The one way launchers should build a real PJRT serving factory.
     pub fn factory(
         idx: ArtifactIndex,
         ckpts: BTreeMap<String, PathBuf>,
         cache_cap: usize,
         docs: u64,
     ) -> super::engine::EngineFactory {
-        crate::info!("serve", "training BPE tokenizer (vocab {})...", crate::exp::VOCAB);
-        let corpus = crate::data::corpus::Corpus::new(Default::default());
-        let bpe = Arc::new(Bpe::train(
-            &corpus.text_range(1, 400.min(docs.max(1))),
-            crate::exp::VOCAB,
-        ));
+        let bpe = serving_bpe(docs);
         Arc::new(move || {
             Ok(Box::new(PjrtEngine::new(
                 idx.clone(),
@@ -307,16 +327,7 @@ impl PjrtEngine {
                 crate::info!("serve", "loading session {variant} from {}", ckpt.display());
                 ModelSession::load(&rt, idx, variant, &ckpt)
             })?;
-        let b = session.manifest.batch;
-        let mut out = Vec::with_capacity(batch.len());
-        for chunk in batch.chunks(b) {
-            let replies = match kind {
-                OpKind::Score => session.score_chunk(&bpe, chunk)?,
-                OpKind::Generate => session.generate_chunk(&rt, &bpe, chunk)?,
-            };
-            out.extend(replies);
-        }
-        Ok(out)
+        session.run(&bpe, kind, batch)
     }
 }
 
@@ -326,6 +337,74 @@ impl BatchEngine for PjrtEngine {
             Ok(replies) => replies,
             // batch-level failures (bad variant, PJRT error) fan out to
             // every request; anyhow errors aren't Clone, so re-render
+            Err(e) => batch.iter().map(|_| Err(anyhow!("{e:#}"))).collect(),
+        }
+    }
+}
+
+/// The artifact-free engine: native-backend sessions over the same
+/// checkpoints, batcher and protocol. `repro serve --backend native`.
+pub struct NativeEngine {
+    reg: Registry,
+    bpe: Arc<Bpe>,
+    ckpts: BTreeMap<String, PathBuf>,
+    sessions: LruCache<String, ModelSession>,
+}
+
+impl NativeEngine {
+    pub fn new(
+        bpe: Arc<Bpe>,
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+    ) -> Result<NativeEngine> {
+        anyhow::ensure!(!ckpts.is_empty(), "serve: no checkpoints registered");
+        let reg = Registry::load().map_err(|e| anyhow!(e))?;
+        Ok(NativeEngine { reg, bpe, ckpts, sessions: LruCache::new(cache_cap) })
+    }
+
+    pub fn factory(
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+        docs: u64,
+    ) -> super::engine::EngineFactory {
+        let bpe = serving_bpe(docs);
+        Arc::new(move || {
+            Ok(Box::new(NativeEngine::new(bpe.clone(), ckpts.clone(), cache_cap)?)
+                as Box<dyn BatchEngine>)
+        })
+    }
+
+    fn chunked(
+        &mut self,
+        variant: &str,
+        kind: OpKind,
+        batch: &[Request],
+    ) -> Result<Vec<Result<Reply>>> {
+        let ckpt = self
+            .ckpts
+            .get(variant)
+            .ok_or_else(|| anyhow!("variant '{variant}' not registered (see --ckpt)"))?
+            .clone();
+        let v = self.reg.variant(variant).map_err(|e| anyhow!(e))?.clone();
+        let bpe = self.bpe.clone();
+        let session = self
+            .sessions
+            .get_or_try_insert(&variant.to_string(), || {
+                crate::info!(
+                    "serve",
+                    "loading native session {variant} from {}",
+                    ckpt.display()
+                );
+                ModelSession::load_native(&v, &ckpt)
+            })?;
+        session.run(&bpe, kind, batch)
+    }
+}
+
+impl BatchEngine for NativeEngine {
+    fn execute(&mut self, key: &BatchKey, batch: &[Request]) -> Vec<Result<Reply>> {
+        match self.chunked(&key.variant, key.kind, batch) {
+            Ok(replies) => replies,
             Err(e) => batch.iter().map(|_| Err(anyhow!("{e:#}"))).collect(),
         }
     }

@@ -1,34 +1,33 @@
-//! The L3 hot loop: thread the state buffer through the compiled `step`
-//! program, uploading only the token batch each step and reading the state
-//! back every `read_interval` steps (the loss ring recovers the per-step
-//! curve in between).
+//! The L3 hot loop: thread the state buffer through the backend's `step`
+//! program, handing over only the token batch each step and reading the
+//! state back every `read_interval` steps (the loss ring recovers the
+//! per-step curve in between).
 //!
-//! The loop is pipelined and allocation-free in the steady state
-//! (DESIGN.md §Hot-loop pipeline): batches arrive through the
-//! [`BatchSource`] abstraction (the synchronous iterator or the async
-//! prefetch ring, byte-identical streams), token uploads go through a
-//! [`client::StagingPool`] so no per-step sync readback or literal churn
-//! remains, and the periodic state sync doubles as the fence that retires
-//! staged uploads.
+//! The loop is backend-agnostic (DESIGN.md §Backends): under PJRT the
+//! state stays device-resident and token uploads ride the staging pool
+//! (DESIGN.md §Hot-loop pipeline, with the periodic state sync as the
+//! retire fence); natively the same calls interpret the state on the
+//! host. Batches arrive through the [`BatchSource`] abstraction (the
+//! synchronous iterator or the async prefetch ring, byte-identical
+//! streams) either way.
 
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::config::{RunCfg, VariantCfg};
 use crate::data::dataset::BatchSource;
+use crate::runtime::backend::{Backend, StateBuf};
 use crate::runtime::state as slots;
-use crate::runtime::{client, ArtifactIndex, Manifest, Program, Runtime, StateHost};
+use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime, StateHost};
 use crate::train::metrics::{MetricsLog, Record};
 
 pub struct Trainer {
-    pub rt: Runtime,
+    backend: Box<dyn Backend>,
     pub manifest: Manifest,
     pub variant: VariantCfg,
     pub run: RunCfg,
-    step_prog: std::sync::Arc<Program>,
-    state_buf: xla::PjRtBuffer,
-    staging: client::StagingPool,
+    state_buf: StateBuf,
     last_host: StateHost,
     last_ring_step: usize,
 }
@@ -46,40 +45,48 @@ pub struct TrainResult {
 }
 
 impl Trainer {
-    /// Compile programs and run `init` (knobs land in the state header).
+    /// PJRT path: compile programs and run `init` (knobs land in the
+    /// state header).
     pub fn new(
         rt: &Runtime,
         idx: &ArtifactIndex,
         variant: &VariantCfg,
         run: RunCfg,
     ) -> Result<Trainer> {
-        let manifest = idx.manifest(&variant.name)?;
-        let init = rt.load_program(&idx.program_path(&variant.name, "init"))?;
-        let step_prog = rt.load_program(&idx.program_path(&variant.name, "step"))?;
+        let backend = Box::new(PjrtBackend::new(rt, idx, &variant.name)?);
+        Self::with_backend(backend, variant, run)
+    }
 
+    /// Native path: no artifacts, no PJRT — the zero-dependency fallback.
+    pub fn native(variant: &VariantCfg, run: RunCfg) -> Result<Trainer> {
+        Self::with_backend(Box::new(NativeBackend::new(variant)?), variant, run)
+    }
+
+    /// Any backend: run `init` and mirror the fresh state to the host.
+    pub fn with_backend(
+        mut backend: Box<dyn Backend>,
+        variant: &VariantCfg,
+        run: RunCfg,
+    ) -> Result<Trainer> {
+        Self::check_step(backend.as_ref())?;
         let knobs = slots::knobs(&run);
-        let out = init
-            .run_literals(&[client::scalar_i32(run.seed as i32), client::vec_f32(&knobs)])
-            .context("init program")?;
-        let host = StateHost::new(rt.download_f32(&out)?, &manifest)?;
+        let state_buf = backend.init(run.seed, &knobs)?;
+        let manifest = backend.manifest().clone();
+        let host = StateHost::new(backend.download(&state_buf)?, &manifest)?;
         Ok(Trainer {
-            rt: rt.clone(),
+            backend,
             manifest,
             variant: variant.clone(),
             run,
-            step_prog,
-            state_buf: out,
-            staging: client::StagingPool::new(),
+            state_buf,
             last_host: host,
             last_ring_step: 0,
         })
     }
 
-    /// Resume from a checkpointed state vector. The upload is staged — the
-    /// source literal stays alive in the trainer's pool until the first
-    /// state readback fences it — so resume pays neither the old
-    /// belt-and-braces full-state readback nor an extra host copy of the
-    /// checkpoint vector.
+    /// Resume from a checkpointed state vector (PJRT). The upload is
+    /// staged — the source literal stays pinned inside the backend until
+    /// the first state readback fences it.
     pub fn from_state(
         rt: &Runtime,
         idx: &ArtifactIndex,
@@ -87,55 +94,72 @@ impl Trainer {
         run: RunCfg,
         state: Vec<f32>,
     ) -> Result<Trainer> {
-        let manifest = idx.manifest(&variant.name)?;
+        let backend = Box::new(PjrtBackend::new(rt, idx, &variant.name)?);
+        Self::from_state_backend(backend, variant, run, state)
+    }
+
+    /// Resume on any backend.
+    pub fn from_state_backend(
+        mut backend: Box<dyn Backend>,
+        variant: &VariantCfg,
+        run: RunCfg,
+        state: Vec<f32>,
+    ) -> Result<Trainer> {
+        Self::check_step(backend.as_ref())?;
+        let manifest = backend.manifest().clone();
         if state.len() != manifest.state_len {
             return Err(anyhow!("checkpoint length mismatch"));
         }
-        let step_prog = rt.load_program(&idx.program_path(&variant.name, "step"))?;
-        let mut staging = client::StagingPool::new();
-        let state_buf = staging.upload_f32(rt, &state)?;
+        let state_buf = backend.upload_state(&state)?;
         // the checkpoint vector itself becomes the host mirror — no clone
         let host = StateHost::new(state, &manifest)?;
         let last_ring_step = host.step();
         Ok(Trainer {
-            rt: rt.clone(),
+            backend,
             manifest,
             variant: variant.clone(),
             run,
-            step_prog,
             state_buf,
-            staging,
             last_host: host,
             last_ring_step,
         })
+    }
+
+    /// Fail fast when the backend cannot train this variant (e.g. the
+    /// native backend's selfguided restriction, advertised by the
+    /// manifest's program map) — before any data prep happens.
+    fn check_step(backend: &dyn Backend) -> Result<()> {
+        let m = backend.manifest();
+        anyhow::ensure!(
+            m.programs.is_empty() || m.programs.contains_key("step"),
+            "variant {} has no step program on the {} backend",
+            m.variant,
+            backend.kind()
+        );
+        Ok(())
     }
 
     pub fn state(&self) -> &StateHost {
         &self.last_host
     }
 
-    /// Force a state readback now (updates `state()`). The readback also
-    /// proves every staged upload was consumed, so the pool retires; if
-    /// the readback itself fails, the fence never happened and the staged
-    /// literals are quarantined (leaked) instead of freed later.
+    pub fn backend_kind(&self) -> crate::runtime::BackendKind {
+        self.backend.kind()
+    }
+
+    /// Force a state readback now (updates `state()`). On PJRT the
+    /// readback is also the fence that retires staged uploads; the
+    /// backend quarantines them internally if it fails.
     pub fn sync(&mut self) -> Result<&StateHost> {
-        match self.rt.download_f32(&self.state_buf) {
-            Ok(data) => {
-                self.staging.retire();
-                self.last_host = StateHost::new(data, &self.manifest)?;
-                Ok(&self.last_host)
-            }
-            Err(e) => {
-                self.staging.quarantine();
-                Err(e)
-            }
-        }
+        let data = self.backend.download(&self.state_buf)?;
+        self.last_host = StateHost::new(data, &self.manifest)?;
+        Ok(&self.last_host)
     }
 
     /// Run `n_steps` training steps pulling batches from `batches`.
     /// Stops early (with `diverged = true`) if the loss goes non-finite or
-    /// explodes past `20 + initial`; that is an observation, not an error —
-    /// the lr-stability figures rely on recording divergence.
+    /// explodes; that is an observation, not an error — the lr-stability
+    /// figures rely on recording divergence.
     pub fn train<B: BatchSource>(&mut self, batches: &mut B, n_steps: usize) -> Result<TrainResult> {
         self.train_with(batches, n_steps, &mut MetricsLog::in_memory(&self.variant.name))
     }
@@ -146,24 +170,6 @@ impl Trainer {
         n_steps: usize,
         metrics: &mut MetricsLog,
     ) -> Result<TrainResult> {
-        let res = self.train_with_inner(batches, n_steps, metrics);
-        if res.is_err() {
-            // an error mid-loop (failed upload/execute/readback) can
-            // leave staged uploads unfenced; a later retire must not
-            // free them (StagingPool contract)
-            self.staging.quarantine();
-        }
-        res
-    }
-
-    fn train_with_inner<B: BatchSource>(
-        &mut self,
-        batches: &mut B,
-        n_steps: usize,
-        metrics: &mut MetricsLog,
-    ) -> Result<TrainResult> {
-        let b = self.manifest.batch;
-        let w = self.manifest.seq_len + 1;
         let read_every = self.run.read_interval.clamp(1, slots::RING);
         let t0 = Instant::now();
         let mut diverged = false;
@@ -173,10 +179,7 @@ impl Trainer {
 
         for k in 0..n_steps {
             let batch = batches.next_batch_ref();
-            // staged upload: the literal is parked in the pool until the
-            // next sync's readback proves the async copy was consumed
-            let tok = self.staging.upload_tokens(&self.rt, batch, b, w).context("upload tokens")?;
-            let out = self.step_prog.run_buffers(&[&self.state_buf, &tok])?;
+            let out = self.backend.step(&self.state_buf, batch)?;
             self.state_buf = out;
             steps_done = k + 1;
 
@@ -220,20 +223,10 @@ impl Trainer {
     }
 
     /// Current state vector (host copy) for checkpointing: one readback,
-    /// returned directly — no second full-state allocation. Callers that
-    /// only inspect should use the by-ref [`Trainer::state_ref`] (or
-    /// [`Trainer::sync`]) instead.
+    /// returned directly. Callers that only inspect should use the
+    /// by-ref [`Trainer::state_ref`] (or [`Trainer::sync`]) instead.
     pub fn state_vec(&mut self) -> Result<Vec<f32>> {
-        match self.rt.download_f32(&self.state_buf) {
-            Ok(data) => {
-                self.staging.retire();
-                Ok(data)
-            }
-            Err(e) => {
-                self.staging.quarantine();
-                Err(e)
-            }
-        }
+        self.backend.download(&self.state_buf)
     }
 
     /// Fresh state readback, lent by reference (also updates `state()`).

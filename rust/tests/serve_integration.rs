@@ -289,3 +289,72 @@ fn pjrt_engine_scores_over_the_wire() {
     handle.wait();
     std::fs::remove_file(&ckpt).ok();
 }
+
+/// Real-model serving with NO artifacts: the native engine loads a real
+/// checkpoint, scores and generates over the wire — the artifact-free
+/// deployment scenario of DESIGN.md §Backends. Runs unconditionally.
+#[test]
+fn native_engine_serves_over_the_wire() {
+    use spectron::config::{Registry, RunCfg};
+    use spectron::train::{checkpoint, Trainer};
+
+    let reg = Registry::load().unwrap();
+    let variant = "fact-z0-spectron";
+    let v = reg.variant(variant).unwrap();
+
+    // a fresh native init state is a valid (untrained) checkpoint
+    let mut trainer = Trainer::native(v, RunCfg::default()).unwrap();
+    let ckpt = std::env::temp_dir().join(format!(
+        "spectron-serve-native-{}.ckpt",
+        std::process::id()
+    ));
+    checkpoint::save(&ckpt, variant, &trainer.state_vec().unwrap()).unwrap();
+
+    let corpus = spectron::data::corpus::Corpus::new(Default::default());
+    let bpe = Arc::new(spectron::data::bpe::Bpe::train(
+        &corpus.text_range(1, 60),
+        v.model.vocab,
+    ));
+    let mut ckpts = std::collections::BTreeMap::new();
+    ckpts.insert(variant.to_string(), ckpt.clone());
+    let factory: spectron::serve::EngineFactory = {
+        Arc::new(move || {
+            Ok(Box::new(spectron::serve::NativeEngine::new(
+                bpe.clone(),
+                ckpts.clone(),
+                2,
+            )?) as Box<dyn BatchEngine>)
+        })
+    };
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        max_wait: Duration::from_millis(10),
+        workers: 1,
+        default_variant: Some(variant.to_string()),
+        metrics_name: None,
+    };
+    let handle = Server::spawn(cfg, factory).expect("spawn");
+    let mut c = Client::connect(handle.addr);
+
+    let r = c.roundtrip(r#"{"id":1,"op":"score","text":"the cat sat on the mat"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    let nll = r.get("nll").unwrap().as_f64().unwrap();
+    let tokens = r.get("tokens").unwrap().as_f64().unwrap();
+    assert!(tokens >= 1.0);
+    // an untrained model scores near uniform: nll/token ~ ln(vocab)
+    let per_token = nll / tokens;
+    assert!(
+        per_token > 2.0 && per_token < (v.model.vocab as f64).ln() + 2.0,
+        "per-token nll {per_token}"
+    );
+
+    // the native backend always has the decode program
+    let r = c.roundtrip(r#"{"id":2,"op":"generate","prompt":"the cat","max_tokens":4}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert!(r.get("tokens_out").unwrap().as_usize().unwrap() <= 4);
+
+    c.roundtrip(r#"{"id":3,"op":"shutdown"}"#);
+    handle.wait();
+    std::fs::remove_file(&ckpt).ok();
+}

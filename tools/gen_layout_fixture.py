@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Regenerate rust/tests/fixtures/state_layout.json from the build side.
+
+The fixture pins the flat-state layout (tensor names, shapes, offsets,
+section boundaries) that ``python/compile/state.py`` produces, so the Rust
+mirror in ``rust/src/runtime/layout.rs`` can be golden-tested against it
+without JAX or artifacts present. Run from the repo root:
+
+    python3 tools/gen_layout_fixture.py
+
+and commit the result whenever the layout intentionally changes.
+"""
+
+import json
+import os
+import sys
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "python"))
+
+from compile.config import load_variants  # noqa: E402
+from compile.state import StateLayout  # noqa: E402
+
+# One variant per optimizer branch plus both non-"all" factorize modes —
+# every code path of StateLayout._build_opt is covered.
+VARIANTS = [
+    "fact-z0-spectron",
+    "fact-s-adamw",
+    "fact-s-sgd",
+    "fact-s-muon",
+    "fact-s-renorm",
+    "fact-s-selfguided",
+    "ffn-s-spectron",
+    "dense-s-muon",
+]
+
+
+def main() -> None:
+    variants = load_variants()
+    out = {}
+    for name in VARIANTS:
+        layout = StateLayout(variants[name])
+        m = layout.manifest()
+        out[name] = {
+            "state_len": m["state_len"],
+            "hdr": m["hdr"],
+            "ring": m["ring"],
+            "ring_base": m["ring_base"],
+            "params_end": m["params_end"],
+            "n_params": m["n_params"],
+            "eval_key": m["eval_key"],
+            "tensors": m["tensors"],
+        }
+    path = os.path.join(REPO, "rust", "tests", "fixtures", "state_layout.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(out)} variants)")
+
+
+if __name__ == "__main__":
+    main()
