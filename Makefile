@@ -2,7 +2,7 @@
 # needs Python; everything after runs from the self-contained `repro`
 # binary (DESIGN.md).
 
-.PHONY: artifacts build test ci docs bench serve-bench clean
+.PHONY: artifacts build test ci docs bench serve-bench sweep-smoke clean
 
 # Lower every variant's programs to HLO text + manifests.
 artifacts:
@@ -50,6 +50,20 @@ bench:
 
 serve-bench:
 	cargo run --release --example serve_bench
+
+# Sweep resumability smoke (DESIGN.md §Monitoring and sweeps): run the
+# built-in grid with a simulated kill after the first run, rerun twice,
+# and assert the finished runs are skipped — i.e. crash + rerun never
+# retrains completed work. Native backend: no artifacts needed.
+sweep-smoke: build
+	rm -rf results/sweeps/smoke
+	./target/release/repro sweep --smoke --max-runs 1 --backend native
+	./target/release/repro sweep --smoke --backend native | tee sweep-smoke-2.log
+	grep -q "skipped: 1" sweep-smoke-2.log
+	./target/release/repro sweep --smoke --backend native | tee sweep-smoke-3.log
+	grep -q "executed: 0  skipped: 2" sweep-smoke-3.log
+	./target/release/repro sweep-report --name smoke
+	rm -f sweep-smoke-2.log sweep-smoke-3.log
 
 clean:
 	rm -rf target artifacts results

@@ -36,7 +36,8 @@ fn main() -> Result<()> {
             let steps = ((c / (6.0 * n)) / TOKENS_PER_STEP).round().max(8.0) as usize;
             meta.push((c, v, n, steps));
             let ctx = ctx.clone();
-            jobs.push(Job::new(format!("C={c:.0e} {v}"), move |rt| {
+            jobs.push(Job::new(format!("C={c:.0e} {v}"), move |cx| {
+                let rt = cx.runtime()?;
                 let run = RunCfg {
                     total_steps: steps,
                     base_lr: 0.01,

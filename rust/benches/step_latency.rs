@@ -13,9 +13,11 @@ use spectron::data::bpe::Bpe;
 use spectron::data::corpus::{Corpus, CorpusCfg};
 use spectron::data::dataset::{Dataset, Split};
 use spectron::data::prefetch::Prefetcher;
+use spectron::monitor::{GuardKind, Monitor, MonitorCfg, Policy};
 use spectron::runtime::{ArtifactIndex, Runtime};
-use spectron::train::Trainer;
+use spectron::train::{MetricsLog, Trainer};
 use spectron::util::bench::{self, header, Bench};
+use spectron::util::json::Json;
 
 fn main() {
     let reg = Registry::load().unwrap();
@@ -43,6 +45,53 @@ fn main() {
             .run(|| trainer.train(&mut batches, 1).unwrap());
         if name == "fact-s-spectron" {
             native_tiny_s = r.mean_s;
+        }
+    }
+
+    // stability-monitor overhead: the same trainer stepped with the
+    // observer hook off vs on (loss-spike + spectron-bound guards, log
+    // policy). The observer runs on the readback cadence only, so the
+    // on-row must land within a couple percent of the off-row — the
+    // acceptance gate recorded in BENCH_monitor_overhead.json. Native, so
+    // the row exists in every environment.
+    header("stability monitor overhead (native z0, 8 steps per iter)");
+    {
+        let v = reg.variant("fact-z0-spectron").unwrap();
+        let run = RunCfg { total_steps: 100_000, read_interval: 64, ..RunCfg::default() };
+        let mut trainer = Trainer::native(v, run).unwrap();
+        let mut batches = ds.batches(Split::Train, v.batch, 0);
+        trainer.train(&mut batches, 2).unwrap();
+        let off = Bench::new("train step x8 [observer off]")
+            .warmup(2)
+            .iters(10)
+            .run(|| trainer.train(&mut batches, 8).unwrap());
+        let mut monitor = Monitor::new(MonitorCfg {
+            guards: vec![GuardKind::LossSpike, GuardKind::SpectronBound],
+            policy: Policy::Log,
+            ..MonitorCfg::default()
+        });
+        let mut metrics = MetricsLog::in_memory("bench-monitor");
+        let on = Bench::new("train step x8 [observer on]")
+            .warmup(2)
+            .iters(10)
+            .run(|| {
+                trainer
+                    .train_observed(&mut batches, 8, &mut metrics, &mut monitor)
+                    .unwrap()
+            });
+        let pct = (on.mean_s / off.mean_s - 1.0) * 100.0;
+        println!("  observer-on vs observer-off mean: {pct:+.2}% (target: within 2%)");
+        println!("  monitor events on the healthy run: {}", monitor.events_seen);
+        let row = Json::obj(vec![
+            ("suite", Json::str("monitor_overhead")),
+            ("observer_off_s", Json::num(off.mean_s)),
+            ("observer_on_s", Json::num(on.mean_s)),
+            ("overhead_pct", Json::num(pct)),
+            ("events", Json::num(monitor.events_seen as f64)),
+        ]);
+        match std::fs::write("BENCH_monitor_overhead.json", row.to_string()) {
+            Ok(()) => println!("monitor overhead json -> BENCH_monitor_overhead.json"),
+            Err(e) => eprintln!("monitor overhead json: {e}"),
         }
     }
 

@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::config::{RunCfg, VariantCfg};
 use crate::data::dataset::BatchSource;
+use crate::monitor::{self, Signal, StepObserver};
 use crate::runtime::backend::{Backend, StateBuf};
 use crate::runtime::state as slots;
 use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime, StateHost};
@@ -21,6 +22,7 @@ pub struct GradAccumulator {
     backend: Box<dyn Backend>,
     manifest: Manifest,
     state_buf: StateBuf,
+    t0: std::time::Instant,
 }
 
 impl GradAccumulator {
@@ -48,7 +50,7 @@ impl GradAccumulator {
         );
         let knobs = slots::knobs(&run);
         let state_buf = backend.init(run.seed, &knobs)?;
-        Ok(GradAccumulator { backend, manifest, state_buf })
+        Ok(GradAccumulator { backend, manifest, state_buf, t0: std::time::Instant::now() })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -77,6 +79,31 @@ impl GradAccumulator {
         let out = self.backend.apply(&self.state_buf, &acc)?;
         self.state_buf = out;
         Ok(loss)
+    }
+
+    /// [`GradAccumulator::step`] plus a [`StepObserver`] consultation
+    /// (DESIGN.md §Monitoring and sweeps): the freshly applied state is
+    /// read back, handed to the observer as a [`crate::train::Record`],
+    /// and the returned directive applied through the shared
+    /// [`monitor::apply_directive`] path (both backends, pure
+    /// upload/download). `Signal::Halted` tells the caller to stop its
+    /// outer loop. Note the cost: one full state readback per compound
+    /// step — unlike the Trainer's observer, which rides the existing
+    /// `read_interval` readback. Use plain [`GradAccumulator::step`]
+    /// where monitoring isn't needed.
+    pub fn step_observed<B: BatchSource>(
+        &mut self,
+        batches: &mut B,
+        micro: usize,
+        observer: &mut dyn StepObserver,
+    ) -> Result<(f64, Signal)> {
+        let loss = self.step(batches, micro)?;
+        let host = self.state()?;
+        let rec = monitor::record_from_host(&host, self.t0.elapsed().as_secs_f64());
+        let ring = vec![(host.step().saturating_sub(1), host.loss())];
+        let directive = observer.observe(&host, &rec, &ring);
+        let sig = monitor::apply_directive(self.backend.as_mut(), &mut self.state_buf, directive)?;
+        Ok((loss, sig))
     }
 
     pub fn state(&mut self) -> Result<StateHost> {

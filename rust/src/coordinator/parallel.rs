@@ -34,6 +34,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{RunCfg, VariantCfg};
 use crate::data::dataset::{BatchIter, Dataset, Split};
+use crate::monitor::{self, Signal, StepObserver};
 use crate::runtime::backend::{self, Backend, BackendFactory, StateBuf};
 use crate::runtime::state as slots;
 use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime, StateHost};
@@ -224,6 +225,31 @@ impl<'d> DataParallelSim<'d> {
             grads.push(g);
         }
         Ok(grads)
+    }
+
+    /// [`DataParallelSim::step`] plus a [`StepObserver`] consultation on
+    /// the replicated state (DESIGN.md §Monitoring and sweeps). The
+    /// observer's directive goes through the shared
+    /// [`monitor::apply_directive`] path, so an intervention (lr cut,
+    /// rollback) lands on the coordinator's replica and reaches every
+    /// worker through the next step's state broadcast — the same flow a
+    /// real DP runtime would use. Costs one extra state readback per
+    /// step (the threaded mode's broadcast readback is not reused);
+    /// use plain [`DataParallelSim::step`] where monitoring isn't
+    /// needed.
+    pub fn step_observed(
+        &mut self,
+        observer: &mut dyn StepObserver,
+        wall_s: f64,
+    ) -> Result<(DpStepStats, Signal)> {
+        let stats = self.step()?;
+        let host = self.state()?;
+        let rec = monitor::record_from_host(&host, wall_s);
+        let ring = vec![(host.step().saturating_sub(1), host.loss())];
+        let directive = observer.observe(&host, &rec, &ring);
+        let sig =
+            monitor::apply_directive(self.backend.as_mut(), &mut self.state_buf, directive)?;
+        Ok((stats, sig))
     }
 
     /// The gradient applied at the last `step()` (tree-reduced mean);

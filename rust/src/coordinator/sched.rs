@@ -2,26 +2,59 @@
 //! across a small thread pool.
 //!
 //! PJRT wrapper types hold raw pointers (`!Send`), so jobs never capture a
-//! runtime — each worker thread owns its own PJRT client and hands it to
-//! the job (`FnOnce(&Runtime)`). Multiple CPU clients per process are
-//! supported by PJRT; tiny-model steps don't saturate the machine, so
-//! modest oversubscription is a win for the isoFLOP grid.
+//! runtime — each worker thread owns a [`WorkerCtx`] whose PJRT client is
+//! created *lazily* on the first job that asks for one
+//! ([`WorkerCtx::runtime`]). Purely native jobs (the `repro sweep` grid
+//! on the artifact-free backend, DESIGN.md §Monitoring and sweeps) run
+//! through the same pool without ever touching PJRT. Multiple CPU
+//! clients per process are supported by PJRT; tiny-model steps don't
+//! saturate the machine, so modest oversubscription is a win for the
+//! isoFLOP grid.
+//!
+//! Fault isolation: a panicking job is caught (`catch_unwind`), recorded
+//! as that job's failed result, and the worker keeps draining the queue —
+//! one poisoned run must not take the rest of a sweep down with it.
 
+use std::cell::OnceCell;
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 
+/// Per-worker execution context. The PJRT client is constructed on first
+/// use and then owned by the worker for its whole life (same lifetime
+/// discipline as the old always-eager design — the teardown barrier in
+/// [`Scheduler::run`] still applies).
+pub struct WorkerCtx {
+    rt: OnceCell<Runtime>,
+}
+
+impl WorkerCtx {
+    fn new() -> WorkerCtx {
+        WorkerCtx { rt: OnceCell::new() }
+    }
+
+    /// The worker's PJRT client, created on first call. Native-only jobs
+    /// simply never call this.
+    pub fn runtime(&self) -> anyhow::Result<&Runtime> {
+        if self.rt.get().is_none() {
+            let rt = Runtime::new()?;
+            let _ = self.rt.set(rt);
+        }
+        Ok(self.rt.get().expect("runtime just initialized"))
+    }
+}
+
 pub struct Job {
     pub name: String,
-    pub work: Box<dyn FnOnce(&Runtime) -> anyhow::Result<Json> + Send>,
+    pub work: Box<dyn FnOnce(&WorkerCtx) -> anyhow::Result<Json> + Send>,
 }
 
 impl Job {
     pub fn new(
         name: impl Into<String>,
-        work: impl FnOnce(&Runtime) -> anyhow::Result<Json> + Send + 'static,
+        work: impl FnOnce(&WorkerCtx) -> anyhow::Result<Json> + Send + 'static,
     ) -> Job {
         Job { name: name.into(), work: Box::new(work) }
     }
@@ -31,13 +64,21 @@ pub struct Scheduler {
     pub n_workers: usize,
 }
 
+/// Poison-tolerant lock: a panic elsewhere must not silently drop the
+/// remaining queue (the data is a plain job list / result table — there
+/// is no invariant a panicked holder could have broken mid-update).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 impl Scheduler {
     pub fn new(n_workers: usize) -> Scheduler {
         Scheduler { n_workers: n_workers.max(1) }
     }
 
     /// Run all jobs; returns (name, result) in completion-independent
-    /// submission order.
+    /// submission order. A job that returns `Err` or panics yields an
+    /// `Err(String)` result; the pool keeps going either way.
     pub fn run(&self, jobs: Vec<Job>) -> Vec<(String, Result<Json, String>)> {
         let n = jobs.len();
         let queue: Mutex<VecDeque<(usize, Job)>> =
@@ -49,7 +90,7 @@ impl Scheduler {
         // worker is still executing: xla_extension 0.5.1's CPU client
         // destruction races concurrent executes in other clients
         // (observed as a segfault when jobs > workers). Everyone parks at
-        // this barrier before dropping their runtime.
+        // this barrier before dropping their (lazily created) runtime.
         let barrier = std::sync::Barrier::new(workers);
 
         std::thread::scope(|scope| {
@@ -58,26 +99,22 @@ impl Scheduler {
                 let results = &results;
                 let barrier = &barrier;
                 scope.spawn(move || {
-                    // one PJRT client per worker thread (see module docs)
-                    let rt = match Runtime::new() {
-                        Ok(rt) => rt,
-                        Err(e) => {
-                            // drain the queue with the error
-                            while let Some((i, job)) = queue.lock().unwrap().pop_front() {
-                                results.lock().unwrap()[i] =
-                                    Some((job.name, Err(format!("runtime: {e}"))));
-                            }
-                            barrier.wait();
-                            return;
-                        }
-                    };
+                    let ctx = WorkerCtx::new();
                     loop {
-                        let next = queue.lock().unwrap().pop_front();
+                        let next = lock(queue).pop_front();
                         let Some((i, job)) = next else { break };
                         crate::debug!("sched", "worker {wid} starts '{}'", job.name);
                         let t0 = std::time::Instant::now();
                         let name = job.name.clone();
-                        let out = (job.work)(&rt).map_err(|e| format!("{e:#}"));
+                        let work = job.work;
+                        // a panicking job is THIS job's failure, not the
+                        // pool's: catch it, record it, keep draining
+                        let out = match std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| work(&ctx)),
+                        ) {
+                            Ok(res) => res.map_err(|e| format!("{e:#}")),
+                            Err(p) => Err(format!("panic: {}", panic_message(&p))),
+                        };
                         crate::info!(
                             "sched",
                             "'{}' finished in {:.1}s ({})",
@@ -85,7 +122,7 @@ impl Scheduler {
                             t0.elapsed().as_secs_f64(),
                             if out.is_ok() { "ok" } else { "ERR" }
                         );
-                        results.lock().unwrap()[i] = Some((name, out));
+                        lock(results)[i] = Some((name, out));
                     }
                     barrier.wait(); // see note above: drop clients together
                 });
@@ -94,11 +131,18 @@ impl Scheduler {
 
         results
             .into_inner()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .into_iter()
             .map(|r| r.expect("all jobs completed"))
             .collect()
     }
+}
+
+fn panic_message(p: &Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic payload>".into())
 }
 
 #[cfg(test)]
@@ -110,7 +154,7 @@ mod tests {
         // cheap jobs that don't touch PJRT still exercise the pool wiring
         let jobs: Vec<Job> = (0..7)
             .map(|i| {
-                Job::new(format!("job{i}"), move |_rt| {
+                Job::new(format!("job{i}"), move |_cx| {
                     Ok(Json::num(i as f64 * 2.0))
                 })
             })
@@ -134,5 +178,37 @@ mod tests {
         assert!(res[0].1.is_ok());
         assert!(res[1].1.as_ref().unwrap_err().contains("boom"));
         assert!(res[2].1.is_ok());
+    }
+
+    #[test]
+    fn job_panics_are_isolated_and_queue_drains() {
+        // more jobs than workers, the panicking one first in the queue:
+        // the old design let the unwind kill the worker (and with it the
+        // jobs it would have drained); now the panic is the job's result
+        let mut jobs = vec![Job::new("explodes", |_cx| -> anyhow::Result<Json> {
+            panic!("injected panic")
+        })];
+        for i in 0..5 {
+            jobs.push(Job::new(format!("after{i}"), move |_cx| Ok(Json::num(i as f64))));
+        }
+        let res = Scheduler::new(2).run(jobs);
+        assert_eq!(res.len(), 6);
+        let err = res[0].1.as_ref().unwrap_err();
+        assert!(err.contains("panic") && err.contains("injected"), "{err}");
+        for (i, (name, out)) in res.iter().enumerate().skip(1) {
+            assert_eq!(name, &format!("after{}", i - 1));
+            assert_eq!(out.as_ref().unwrap().as_f64(), Some((i - 1) as f64), "{name}");
+        }
+    }
+
+    #[test]
+    fn every_worker_sees_a_lazy_context() {
+        // jobs observe that the context exists without forcing a PJRT
+        // client into existence (runtime() is never called)
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| Job::new(format!("noop{i}"), move |_cx| Ok(Json::Null)))
+            .collect();
+        let res = Scheduler::new(4).run(jobs);
+        assert!(res.iter().all(|(_, r)| r.is_ok()));
     }
 }

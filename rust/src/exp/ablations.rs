@@ -21,7 +21,8 @@ fn train_eval_job(
     seed: u64,
 ) -> Job {
     let ctx = ctx.clone();
-    Job::new(label, move |rt| {
+    Job::new(label, move |cx| {
+        let rt = cx.runtime()?;
         let run = RunCfg {
             total_steps: ctx.steps(steps),
             base_lr: lr,

@@ -40,7 +40,8 @@ pub fn fig4(ctx: &Arc<Ctx>) -> Result<Json> {
         .map(|&v| {
             let ctx = ctx.clone();
             let opt = ctx.reg.variant(v).unwrap().optimizer.clone();
-            Job::new(v, move |rt| {
+            Job::new(v, move |cx| {
+                let rt = cx.runtime()?;
                 let run = run_cfg(&ctx, &opt, steps, 1);
                 let (res, state) = ctx.train_run(rt, v, run, Some(&format!("fig4-{v}")))?;
                 let ppl = ctx.ppl(rt, v, &state)?;
@@ -108,7 +109,8 @@ pub fn tab1(ctx: &Arc<Ctx>) -> Result<Json> {
             let ctx = ctx.clone();
             let vc = ctx.reg.variant(v).unwrap().clone();
             let steps = default_steps(&vc.model.name);
-            Job::new(format!("{scale}:{v}"), move |rt| {
+            Job::new(format!("{scale}:{v}"), move |cx| {
+                let rt = cx.runtime()?;
                 let run = run_cfg(&ctx, &vc.optimizer, steps, 2);
                 let (res, state) = ctx.train_run(rt, &vc.name, run, None)?;
                 let ppl = ctx.ppl(rt, &vc.name, &state)?;

@@ -28,7 +28,8 @@ pub fn fig1(ctx: &Arc<Ctx>) -> Result<Json> {
         .map(|(v, steps)| {
             let ctx = ctx.clone();
             let opt = ctx.reg.variant(v).unwrap().optimizer.clone();
-            Job::new(v, move |rt| {
+            Job::new(v, move |cx| {
+                let rt = cx.runtime()?;
                 let run = RunCfg {
                     total_steps: ctx.steps(steps),
                     base_lr: lr_for(&opt),
@@ -111,7 +112,8 @@ pub fn fig6_fig7(ctx: &Arc<Ctx>) -> Result<Json> {
             let vc = ctx.reg.variant(v).unwrap().clone();
             // equal compute per scale: dense budget, matched for factorized
             let dense_name = format!("dense-{}-muon", &vc.model.name[5..6]);
-            Job::new(format!("{family}:{v}"), move |rt| {
+            Job::new(format!("{family}:{v}"), move |cx| {
+                let rt = cx.runtime()?;
                 let dense_steps = default_steps(&vc.model.name);
                 let steps = if vc.factorize == "none" {
                     dense_steps
@@ -249,7 +251,8 @@ fn spectral_runs(
         .iter()
         .map(|&(v, lr)| {
             let ctx = ctx.clone();
-            Job::new(v, move |rt| {
+            Job::new(v, move |cx| {
+                let rt = cx.runtime()?;
                 let run = RunCfg {
                     total_steps: steps,
                     base_lr: lr,

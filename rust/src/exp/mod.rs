@@ -31,6 +31,9 @@ pub struct Ctx {
     pub corpus: Arc<Corpus>,
     pub bpe: Arc<Bpe>,
     pub ds: Arc<Dataset>,
+    /// corpus documents the dataset was packed from (part of the config
+    /// hash that keys the scaling-run cache)
+    pub docs: u64,
     /// smoke mode: shrink every run to a few steps (CI-style)
     pub smoke: bool,
 }
@@ -71,7 +74,7 @@ impl Ctx {
             ds.n_windows(Split::Train),
             ds.n_windows(Split::Val)
         );
-        Ok(Ctx { reg, idx, corpus, bpe, ds, smoke })
+        Ok(Ctx { reg, idx, corpus, bpe, ds, docs: n_docs, smoke })
     }
 
     /// Scale a step count down in smoke mode.

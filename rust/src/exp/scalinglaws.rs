@@ -3,15 +3,22 @@
 //! parametric L(N, D) fit (Appendix D).
 //!
 //! fig9 trains the grid and caches every run in `results/scaling_runs.json`
-//! so fig8/appd re-fit without retraining.
+//! so fig8/appd re-fit without retraining. The cache is crash-safe and
+//! edit-safe (DESIGN.md §Monitoring and sweeps): each cell is keyed by
+//! the [`crate::monitor::sweep::config_hash`] of its variant + run
+//! config, so editing budgets or variant knobs invalidates stale points
+//! instead of silently reusing them, and every finished run appends its
+//! point durably before the grid moves on — kill the process mid-grid
+//! and the rerun trains only the missing cells.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::RunCfg;
 use crate::coordinator::sched::{Job, Scheduler};
 use crate::exp::{plot, write_csv, write_json, Ctx};
+use crate::monitor::sweep::{config_hash, hash_hex};
 use crate::scaling::{isoflop, parametric, powerlaw, RunPoint};
 use crate::util::json::Json;
 
@@ -37,25 +44,34 @@ pub fn budgets(smoke: bool) -> Vec<f64> {
 
 const TOKENS_PER_STEP: f64 = 8.0 * 128.0;
 
+/// The one run recipe for a grid cell (also what its config hash covers).
+fn cell_run_cfg(steps: usize) -> RunCfg {
+    RunCfg {
+        total_steps: steps,
+        base_lr: 0.01,
+        weight_decay: 0.01,
+        warmup_frac: 0.05,
+        seed: 10,
+        read_interval: 50,
+    }
+}
+
 /// Train the grid and return run points (cached in results/).
 pub fn grid_runs(ctx: &Arc<Ctx>, force: bool) -> Result<Vec<RunPoint>> {
     let cache = crate::repo_path("results/scaling_runs.json");
     // incremental: reuse cached cells, train only the missing ones (so
-    // extending the budget grid doesn't retrain everything)
-    let mut cached: Vec<RunPoint> = Vec::new();
-    if !force && cache.exists() {
-        if let Ok(pts) = load_runs(&cache) {
-            cached = pts;
-        }
-    }
-    let have = |c: f64, n: f64| {
-        cached
-            .iter()
-            .any(|p| (p.flops / c - 1.0).abs() < 1e-9 && (p.params / n - 1.0).abs() < 1e-9)
+    // extending the budget grid doesn't retrain everything). Each cached
+    // point carries its config hash; a point whose cell config changed —
+    // or whose cell left the grid — is dropped and (if still on the
+    // grid) retrained, never silently reused.
+    let cached: Vec<(RunPoint, String)> = if force {
+        Vec::new()
+    } else {
+        load_runs(&cache).unwrap_or_default()
     };
 
-    let mut jobs = Vec::new();
-    let mut meta = Vec::new();
+    // the expected grid: (budget, variant, params, steps, cfg hash)
+    let mut cells = Vec::new();
     for &c in &budgets(ctx.smoke) {
         for v in SIZES {
             let n = ctx.idx.manifest(v)?.n_params as f64;
@@ -64,50 +80,97 @@ pub fn grid_runs(ctx: &Arc<Ctx>, force: bool) -> Result<Vec<RunPoint>> {
             if !(10..=8000).contains(&steps) {
                 continue; // off-grid corner (paper also trims)
             }
-            if have(c, n) {
-                continue;
-            }
-            meta.push((c, v, n, steps));
-            let ctx = ctx.clone();
-            jobs.push(Job::new(format!("C={c:.1e} {v} ({steps} steps)"), move |rt| {
-                let run = RunCfg {
-                    total_steps: steps,
-                    base_lr: 0.01,
-                    weight_decay: 0.01,
-                    warmup_frac: 0.05,
-                    seed: 10,
-                    read_interval: 50,
-                };
-                let (_res, state) = ctx.train_run(rt, v, run, None)?;
-                let ppl = ctx.ppl(rt, v, &state)?;
-                Ok(Json::num(ppl.ln())) // validation loss (mean NLL)
-            }));
+            let vcfg = ctx.reg.variant(v).map_err(|e| anyhow!(e))?;
+            let hash = hash_hex(config_hash(vcfg, &cell_run_cfg(steps), ctx.docs));
+            cells.push((c, v, n, steps, hash));
         }
+    }
+
+    let cell_of = |p: &RunPoint| {
+        cells.iter().find(|(c, _, n, ..)| {
+            (p.flops / c - 1.0).abs() < 1e-9 && (p.params / n - 1.0).abs() < 1e-9
+        })
+    };
+    // stale = an *in-grid* cell whose config hash no longer matches (it
+    // gets retrained below). Points for cells outside the current grid —
+    // e.g. the full-budget points while running --smoke — are preserved
+    // untouched, as the pre-hash cache always did: a smoke run must
+    // never wipe hours of full-grid training.
+    let (valid, stale): (Vec<_>, Vec<_>) = cached
+        .into_iter()
+        .partition(|(p, h)| cell_of(p).map(|(.., want)| want == h).unwrap_or(true));
+    if !stale.is_empty() {
+        crate::info!(
+            "exp",
+            "isoFLOP cache: dropping {} stale point(s) (config hash mismatch)",
+            stale.len()
+        );
+    }
+
+    let mut jobs = Vec::new();
+    let mut meta = Vec::new();
+    for (c, v, n, steps, hash) in &cells {
+        let have = valid.iter().any(|(p, _)| {
+            (p.flops / c - 1.0).abs() < 1e-9 && (p.params / n - 1.0).abs() < 1e-9
+        });
+        if have {
+            continue;
+        }
+        meta.push((*c, *v, *n, *steps, hash.clone()));
+        let (c, v, n, steps, hash) = (*c, *v, *n, *steps, hash.clone());
+        let ctx = ctx.clone();
+        let cache = cache.clone();
+        jobs.push(Job::new(format!("C={c:.1e} {v} ({steps} steps)"), move |cx| {
+            let rt = cx.runtime()?;
+            let (_res, state) = ctx.train_run(rt, v, cell_run_cfg(steps), None)?;
+            let ppl = ctx.ppl(rt, v, &state)?;
+            let loss = ppl.ln(); // validation loss (mean NLL)
+            let pt = RunPoint {
+                params: n,
+                tokens: steps as f64 * TOKENS_PER_STEP,
+                flops: c,
+                loss,
+            };
+            // durable before the grid moves on: a crash after this run
+            // must not retrain it
+            append_run(&cache, &pt, &hash)?;
+            Ok(Json::num(loss))
+        }));
     }
     crate::info!(
         "exp",
         "isoFLOP grid: {} new runs ({} cached)",
         jobs.len(),
-        cached.len()
+        valid.len()
     );
     let results = Scheduler::new(6).run(jobs);
 
-    let mut pts = cached;
-    for ((c, _v, n, steps), (name, r)) in meta.iter().zip(&results) {
+    let mut tagged = valid;
+    for ((c, _v, n, steps, hash), (name, r)) in meta.iter().zip(&results) {
         let loss = r
             .as_ref()
             .map_err(|e| anyhow!("{name}: {e}"))?
             .as_f64()
             .ok_or_else(|| anyhow!("bad loss"))?;
-        pts.push(RunPoint {
-            params: *n,
-            tokens: *steps as f64 * TOKENS_PER_STEP,
-            flops: *c,
-            loss,
-        });
+        tagged.push((
+            RunPoint {
+                params: *n,
+                tokens: *steps as f64 * TOKENS_PER_STEP,
+                flops: *c,
+                loss,
+            },
+            hash.clone(),
+        ));
     }
-    save_runs(&cache, &pts)?;
-    Ok(pts)
+    save_runs(&cache, &tagged)?;
+    // a cell that diverged this session has a NaN loss: keep it out of
+    // the fits (and say so — no silent truncation)
+    let (finite, bad): (Vec<_>, Vec<_>) =
+        tagged.into_iter().partition(|(p, _)| p.loss.is_finite());
+    if !bad.is_empty() {
+        crate::info!("exp", "isoFLOP grid: {} diverged cell(s) excluded from fits", bad.len());
+    }
+    Ok(finite.into_iter().map(|(p, _)| p).collect())
 }
 
 /// Figure 9: isoFLOP curves with quadratic minima.
@@ -246,42 +309,112 @@ pub fn appd(ctx: &Arc<Ctx>) -> Result<Json> {
 }
 
 // -- run-point cache ---------------------------------------------------------
-fn save_runs(path: &std::path::Path, pts: &[RunPoint]) -> Result<()> {
+//
+// Rows carry a `cfg` hex hash (see grid_runs). Writes are tmp+rename so
+// a kill mid-write leaves the previous cache intact; per-run appends are
+// serialized by an in-process lock (scheduler jobs write concurrently).
+
+static CACHE_LOCK: Mutex<()> = Mutex::new(());
+
+fn save_runs(path: &std::path::Path, pts: &[(RunPoint, String)]) -> Result<()> {
     if let Some(d) = path.parent() {
         std::fs::create_dir_all(d)?;
     }
     let arr = Json::Arr(
         pts.iter()
-            .map(|p| {
+            .map(|(p, cfg)| {
                 Json::obj(vec![
                     ("params", Json::num(p.params)),
                     ("tokens", Json::num(p.tokens)),
                     ("flops", Json::num(p.flops)),
                     ("loss", Json::num(p.loss)),
+                    ("cfg", Json::str(cfg.clone())),
                 ])
             })
             .collect(),
     );
-    std::fs::write(path, arr.to_string())?;
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, arr.to_string())?;
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
-fn load_runs(path: &std::path::Path) -> Result<Vec<RunPoint>> {
+/// Append one finished run durably (called from scheduler jobs as each
+/// grid cell completes, so a crash mid-grid keeps every finished point).
+fn append_run(path: &std::path::Path, pt: &RunPoint, cfg: &str) -> Result<()> {
+    let _guard = CACHE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut all = load_runs(path).unwrap_or_default();
+    all.retain(|(p, _)| {
+        !((p.flops / pt.flops - 1.0).abs() < 1e-9 && (p.params / pt.params - 1.0).abs() < 1e-9)
+    });
+    all.push((pt.clone(), cfg.to_string()));
+    save_runs(path, &all)
+}
+
+/// Load cache rows with their config hashes; rows from the pre-hash
+/// format get an empty hash, which never matches — legacy caches are
+/// treated as stale rather than silently trusted. Rows with missing or
+/// non-finite numbers (a diverged cell serializes its NaN loss as
+/// `null`) are dropped individually — one bad row must never take the
+/// whole cache down, because both callers treat a load error as "empty
+/// cache" and would rewrite the file over hours of finished runs.
+fn load_runs(path: &std::path::Path) -> Result<Vec<(RunPoint, String)>> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
     let j = Json::parse_file(path).map_err(|e| anyhow!(e))?;
     let arr = j.as_arr().ok_or_else(|| anyhow!("not an array"))?;
-    arr.iter()
-        .map(|p| {
-            let g = |k: &str| {
-                p.get(k)
-                    .and_then(Json::as_f64)
-                    .ok_or_else(|| anyhow!("missing {k}"))
-            };
-            Ok(RunPoint {
-                params: g("params")?,
-                tokens: g("tokens")?,
-                flops: g("flops")?,
-                loss: g("loss")?,
-            })
-        })
-        .collect()
+    let mut out = Vec::new();
+    let mut dropped = 0usize;
+    for p in arr {
+        let g = |k: &str| p.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let pt = RunPoint {
+            params: g("params"),
+            tokens: g("tokens"),
+            flops: g("flops"),
+            loss: g("loss"),
+        };
+        if pt.params.is_finite() && pt.flops.is_finite() && pt.loss.is_finite() {
+            let cfg = p
+                .get("cfg")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string();
+            out.push((pt, cfg));
+        } else {
+            dropped += 1;
+        }
+    }
+    if dropped > 0 {
+        crate::info!("exp", "isoFLOP cache: ignoring {dropped} non-finite row(s)");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_rows_roundtrip_with_hashes_and_reject_legacy() {
+        let p = std::env::temp_dir().join(format!(
+            "spectron-scaling-cache-{}.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&p).ok();
+        assert!(load_runs(&p).unwrap().is_empty(), "missing cache is empty, not an error");
+        let pt = RunPoint { params: 1e5, tokens: 2e6, flops: 3e11, loss: 4.5 };
+        append_run(&p, &pt, "abc123").unwrap();
+        // re-appending the same cell replaces, never duplicates
+        append_run(&p, &RunPoint { loss: 4.2, ..pt.clone() }, "def456").unwrap();
+        let rows = load_runs(&p).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].1, "def456");
+        assert!((rows[0].0.loss - 4.2).abs() < 1e-12);
+        // a legacy row without "cfg" loads with an empty (never-matching) hash
+        std::fs::write(&p, r#"[{"params":1,"tokens":2,"flops":3,"loss":4}]"#).unwrap();
+        let rows = load_runs(&p).unwrap();
+        assert_eq!(rows[0].1, "");
+        std::fs::remove_file(&p).ok();
+    }
 }

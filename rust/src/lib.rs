@@ -11,8 +11,9 @@
 //!   corpus + BPE tokenizer, data pipeline, PJRT runtime, trainer,
 //!   coordinator (grad accumulation, simulated data-parallel all-reduce,
 //!   experiment scheduler), evaluation, scaling-law fits, one driver
-//!   per table/figure of the paper, and the batched inference server
-//!   behind `repro serve` ([`serve`]).
+//!   per table/figure of the paper, the batched inference server
+//!   behind `repro serve` ([`serve`]), and the stability monitor +
+//!   crash-safe sweep orchestrator behind `repro sweep` ([`monitor`]).
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `repro` binary is self-contained.
@@ -27,6 +28,7 @@ pub mod data;
 pub mod eval;
 pub mod exp;
 pub mod linalg;
+pub mod monitor;
 pub mod runtime;
 pub mod scaling;
 pub mod serve;

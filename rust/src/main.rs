@@ -8,6 +8,8 @@
 //!        ids: fig1 fig2 fig3 fig4 tab1 fig6 fig9 fig8 tab2 tab3 fig12
 //!             fig13 appd all
 //! repro serve --ckpt a.ckpt[,b.ckpt] batched inference server (NDJSON/TCP)
+//! repro sweep --grid g.toml          crash-safe monitored training grid
+//! repro sweep-report --name N        registry status for a sweep
 //! repro dp-demo [--workers N]        simulated data-parallel training
 //! repro accum-demo [--micro N]       gradient-accumulation training
 //! repro data [--docs N]              dataset/tokenizer statistics
@@ -28,6 +30,9 @@ use spectron::data::dataset::Split;
 use spectron::data::prefetch::Prefetcher;
 use spectron::eval::{downstream, perplexity, Evaluator};
 use spectron::exp::{self, build_data, Ctx};
+use spectron::monitor::{
+    sweep, GuardKind, Monitor, MonitorCfg, NullObserver, Policy, SpikeInjector, StepObserver,
+};
 use spectron::runtime::backend::{Backend, BackendKind};
 use spectron::runtime::{ArtifactIndex, NativeBackend, PjrtBackend, Runtime};
 use spectron::train::{checkpoint, MetricsLog, Trainer};
@@ -53,6 +58,8 @@ fn run() -> Result<()> {
         "eval" => eval_cmd(&mut args),
         "exp" => exp_cmd(&mut args),
         "serve" => serve_cmd(&mut args),
+        "sweep" => sweep_cmd(&mut args),
+        "sweep-report" => sweep_report_cmd(&mut args),
         "dp-demo" => dp_demo(&mut args),
         "accum-demo" => accum_demo(&mut args),
         "data" => data_cmd(&mut args),
@@ -70,8 +77,13 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
   repro train --variant V [--steps N --lr F --wd F --seed N --docs N]
               [--ckpt out.ckpt] [--resume in.ckpt] [--read-interval N]
               [--backend pjrt|native|auto] [--no-prefetch]
+              [--guard loss-spike,spectron-bound,rho-collapse,sigma-collapse]
+              [--on-spike log|halt|lr-cut|rollback] [--inject-spike STEP:SCALE]
               (async batch prefetch is on by default; --backend native
-               needs no artifacts, no Python — pure Rust end to end)
+               needs no artifacts, no Python — pure Rust end to end;
+               --guard turns the stability monitor on: detections land in
+               results/train-V/events.jsonl and --on-spike picks the
+               response)
   repro eval  --ckpt in.ckpt [--docs N] [--items N] [--backend ...]
   repro exp   <fig1|fig2|fig3|fig4|tab1|fig6|fig9|fig8|tab2|tab3|fig12|fig13|appd|all>
               [--smoke] [--docs N] [--force]
@@ -80,6 +92,12 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
               [--backend ...] [--mock]
               (line-delimited JSON; ops: generate, score, stats, shutdown;
                --docs must match training so the tokenizers agree)
+  repro sweep [--grid grid.toml | --smoke] [--workers N] [--max-runs N]
+              [--backend ...]
+              (crash-safe grid: per-run registry under results/sweeps/;
+               kill it mid-grid and rerun — finished runs are skipped,
+               interrupted ones resume from their last checkpoint)
+  repro sweep-report --name N        (registry table for one sweep)
   repro dp-demo    [--workers N --steps N --variant V --sequential --backend ...]
   repro accum-demo [--micro N --steps N --variant V --backend ...]
   repro data  [--docs N]
@@ -219,13 +237,35 @@ fn train_cmd(args: &mut Args) -> Result<()> {
     // prefetch is on by default; the stream is byte-identical either way
     // (DESIGN.md §Hot-loop pipeline), so this only changes overlap
     let no_prefetch = args.flag("no-prefetch");
+    // stability monitor (DESIGN.md §Monitoring and sweeps)
+    let guard = args.opt_str("guard");
+    let on_spike = args.opt_str("on-spike");
+    let inject = args.opt_str("inject-spike");
     let sel = BackendSel::resolve(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
+    // validate eagerly: a typo'd policy (or a policy with no guards to
+    // trigger it) must fail loudly, not train silently unguarded
+    let policy = Policy::parse(on_spike.as_deref().unwrap_or("log")).map_err(|e| anyhow!(e))?;
+    anyhow::ensure!(
+        guard.is_some() || on_spike.is_none(),
+        "--on-spike does nothing without --guard (e.g. --guard loss-spike)"
+    );
 
     let reg = Registry::load().map_err(|e| anyhow!(e))?;
     let v = reg.variant(&variant).map_err(|e| anyhow!(e))?;
     let (_corpus, _bpe, ds) = build_data(docs as u64);
 
+    let make_backend = || -> Result<Box<dyn Backend>> {
+        let be = sel.make(v)?;
+        match &inject {
+            Some(spec) => {
+                let (step, scale) = SpikeInjector::parse_flag(spec).map_err(|e| anyhow!(e))?;
+                info!("train", "fault injection armed: gradient x{scale} at step {step}");
+                Ok(Box::new(SpikeInjector::new(be, step, scale)?) as Box<dyn Backend>)
+            }
+            None => Ok(be),
+        }
+    };
     let mut trainer = match resume {
         Some(path) => {
             let (ck_variant, state) = checkpoint::load(std::path::Path::new(&path))?;
@@ -234,11 +274,29 @@ fn train_cmd(args: &mut Args) -> Result<()> {
                 "checkpoint is for '{ck_variant}', requested '{variant}'"
             );
             info!("train", "resuming {variant} from {path}");
-            Trainer::from_state_backend(sel.make(v)?, v, run.clone(), state)?
+            Trainer::from_state_backend(make_backend()?, v, run.clone(), state)?
         }
-        None => Trainer::with_backend(sel.make(v)?, v, run.clone())?,
+        None => Trainer::with_backend(make_backend()?, v, run.clone())?,
     };
-    let mut metrics = MetricsLog::with_file(&format!("train-{variant}"))?;
+    let run_name = format!("train-{variant}");
+    let mut metrics = MetricsLog::with_file(&run_name)?;
+    let mut monitor = match &guard {
+        Some(list) => {
+            let cfg = MonitorCfg {
+                guards: GuardKind::parse_list(list).map_err(|e| anyhow!(e))?,
+                policy,
+                ..MonitorCfg::default()
+            };
+            anyhow::ensure!(!cfg.guards.is_empty(), "--guard given but empty");
+            info!(
+                "train",
+                "monitor on: guards [{list}], on-spike {} -> results/{run_name}/events.jsonl",
+                cfg.policy.name()
+            );
+            Some(Monitor::new(cfg).with_event_log(&run_name)?)
+        }
+        None => None,
+    };
     info!(
         "train",
         "{variant} [{}]: {} steps at lr {}",
@@ -246,21 +304,41 @@ fn train_cmd(args: &mut Args) -> Result<()> {
         run.total_steps,
         run.base_lr
     );
-    let res = if no_prefetch {
-        let mut batches = ds.batches(Split::Train, v.batch, run.seed);
-        trainer.train_with(&mut batches, run.total_steps, &mut metrics)?
-    } else {
-        let mut batches = Prefetcher::new(ds.clone(), Split::Train, v.batch, run.seed);
-        trainer.train_with(&mut batches, run.total_steps, &mut metrics)?
+    let res = {
+        let mut null = NullObserver;
+        let observer: &mut dyn StepObserver = match &mut monitor {
+            Some(m) => m,
+            None => &mut null,
+        };
+        if no_prefetch {
+            let mut batches = ds.batches(Split::Train, v.batch, run.seed);
+            trainer.train_observed(&mut batches, run.total_steps, &mut metrics, observer)?
+        } else {
+            let mut batches = Prefetcher::new(ds.clone(), Split::Train, v.batch, run.seed);
+            trainer.train_observed(&mut batches, run.total_steps, &mut metrics, observer)?
+        }
     };
     println!(
-        "done: {} steps in {:.1}s ({:.0} ms/step), final loss {:.4}{}",
+        "done: {} steps in {:.1}s ({:.0} ms/step), final loss {:.4}{}{}",
         res.steps_done,
         res.wall_s,
         res.step_seconds_mean * 1e3,
         res.final_loss,
-        if res.diverged { "  [DIVERGED]" } else { "" }
+        if res.diverged { "  [DIVERGED]" } else { "" },
+        if res.halted { "  [HALTED]" } else { "" }
     );
+    if let Some(m) = &monitor {
+        println!(
+            "monitor: {} event(s), {} intervention(s){}",
+            m.events_seen,
+            m.interventions,
+            if m.events_seen > 0 {
+                format!("  (see results/{run_name}/events.jsonl)")
+            } else {
+                String::new()
+            }
+        );
+    }
     let state = trainer.state_vec()?;
     let ev = Evaluator::with_backend(sel.make(v)?);
     let ppl = perplexity::perplexity(&ev, &state[..ev.params_end], &ds, 40)?.ppl;
@@ -420,6 +498,108 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     println!("serving on {}  (send {{\"op\":\"shutdown\"}} to stop)", handle.addr);
     let stats = handle.wait();
     println!("server stopped; final stats: {stats}");
+    Ok(())
+}
+
+/// Crash-safe monitored training grid over the durable run registry
+/// (DESIGN.md §Monitoring and sweeps). Safe to kill and rerun: `done`
+/// runs are skipped, interrupted ones resume from their last rolling
+/// checkpoint with their monitor state.
+fn sweep_cmd(args: &mut Args) -> Result<()> {
+    let grid_path = args.opt_str("grid");
+    let smoke = args.flag("smoke");
+    let workers = args.usize("workers", 2);
+    let max_runs = args.usize("max-runs", 0);
+    let sel = BackendSel::resolve(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let grid = match (&grid_path, smoke) {
+        (Some(p), false) => sweep::GridSpec::from_toml(std::path::Path::new(p))?,
+        (None, true) => sweep::GridSpec::smoke(),
+        (Some(_), true) => return Err(anyhow!("--grid and --smoke are exclusive")),
+        (None, false) => return Err(anyhow!("usage: repro sweep --grid grid.toml | --smoke")),
+    };
+    let reg = Registry::load().map_err(|e| anyhow!(e))?;
+    let (_corpus, _bpe, ds) = build_data(grid.docs);
+    let backend = match sel.kind {
+        BackendKind::Native => sweep::ExecBackend::Native,
+        BackendKind::Pjrt => sweep::ExecBackend::Pjrt(sel.idx.clone().expect("pjrt artifacts")),
+    };
+    info!(
+        "sweep",
+        "{} [{}]: {} runs, {} workers -> results/sweeps/{}",
+        grid.name,
+        sel.kind,
+        grid.runs.len(),
+        workers,
+        grid.name
+    );
+    let opts = sweep::SweepOpts {
+        workers,
+        max_runs: (max_runs > 0).then_some(max_runs),
+        backend,
+    };
+    let summary = sweep::run_sweep(&grid, &reg, &ds, &opts)?;
+    for (id, r) in &summary.rows {
+        match r {
+            Ok(j) => {
+                let loss = j.get("final_loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+                let resumed = j
+                    .get("resumed_from")
+                    .and_then(|v| v.as_usize())
+                    .map(|s| format!("  (resumed from {s})"))
+                    .unwrap_or_default();
+                println!("  {id}: loss {loss:.4}{resumed}");
+            }
+            Err(e) => println!("  {id}: FAILED ({e})"),
+        }
+    }
+    println!(
+        "sweep {}: executed: {}  skipped: {}  resumed: {}  failed: {}",
+        grid.name, summary.executed, summary.skipped, summary.resumed, summary.failed
+    );
+    if summary.executed == 0 {
+        println!("up-to-date: all runs already done, nothing to execute");
+    }
+    anyhow::ensure!(summary.failed == 0, "{} run(s) failed", summary.failed);
+    Ok(())
+}
+
+/// Registry status table for one sweep (reads manifests only — never
+/// touches checkpoints or backends).
+fn sweep_report_cmd(args: &mut Args) -> Result<()> {
+    let name = args
+        .opt_str("name")
+        .ok_or_else(|| anyhow!("usage: repro sweep-report --name <sweep>"))?;
+    args.finish().map_err(|e| anyhow!(e))?;
+    let runs = sweep::report(&name)?;
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|m| {
+            vec![
+                m.id.clone(),
+                m.status.clone(),
+                format!("{}/{}", m.steps_done, m.total_steps),
+                if m.final_loss.is_finite() {
+                    format!("{:.4}", m.final_loss)
+                } else {
+                    "-".into()
+                },
+                m.events.to_string(),
+                m.resumed_from.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+                m.note.clone(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        exp::plot::table(
+            &["run", "status", "steps", "loss", "events", "resumed@", "note"],
+            &rows
+        )
+    );
+    let done = runs.iter().filter(|m| m.status == "done").count();
+    println!("{done}/{} done", runs.len());
     Ok(())
 }
 

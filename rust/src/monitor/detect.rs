@@ -1,0 +1,496 @@
+//! Streaming training-health detectors (DESIGN.md §Monitoring and sweeps).
+//!
+//! Each detector consumes the [`crate::train::metrics::Record`] stream a
+//! training loop already produces (plus the ring-decoded per-step losses)
+//! and raises a [`Detection`] when its invariant breaks. The detectors
+//! encode the paper's diagnosis of low-rank pretraining instability:
+//!
+//! * [`LossSpikeDetector`] — windowed z-score on the per-step loss. The
+//!   observable symptom: a loss far above the recent trailing
+//!   distribution (or non-finite) is a spike, never fired by a
+//!   monotone non-increasing curve (proptested).
+//! * [`SpectronBoundDetector`] — the cause the paper names: the update
+//!   spectral norm `‖dW‖₂` must stay `<= margin * lr` (Eq. 13-16; the
+//!   margin covers the Newton-Schulz band and the k=1 power-iteration
+//!   sigma estimate). A Spectron run satisfies this by construction;
+//!   a baseline violating it is the paper's "uncontrolled growth".
+//! * [`RhoCollapseDetector`] / [`SigmaCollapseDetector`] — the spectral
+//!   renormalization degenerating: `rho` leaving `(0, lr]`, or a
+//!   tracked factor's dominant singular value collapsing relative to
+//!   its own running peak (rank collapse).
+//!
+//! Detector state is tiny and serializable ([`Detector::snapshot`] /
+//! [`Detector::restore`]) so a resumed sweep run continues monitoring
+//! where the crashed process stopped.
+
+use std::collections::VecDeque;
+
+use crate::train::metrics::Record;
+use crate::util::json::Json;
+
+/// One raised alarm: which detector, at which step, what it saw.
+#[derive(Debug, Clone)]
+pub struct Detection {
+    pub detector: &'static str,
+    pub step: usize,
+    /// the observed quantity (spiked loss, dw_spec, rho, sigma)
+    pub value: f64,
+    /// the threshold it crossed
+    pub threshold: f64,
+    pub detail: String,
+}
+
+impl Detection {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("detector", Json::str(self.detector)),
+            ("step", Json::num(self.step as f64)),
+            ("value", Json::num(self.value)),
+            ("threshold", Json::num(self.threshold)),
+            ("detail", Json::str(self.detail.clone())),
+        ])
+    }
+}
+
+/// A streaming detector over the record/loss stream. `observe` is called
+/// once per state readback with the fresh record and the per-step losses
+/// decoded from the ring since the previous readback.
+pub trait Detector: Send {
+    fn name(&self) -> &'static str;
+    fn observe(&mut self, rec: &Record, ring: &[(usize, f32)]) -> Option<Detection>;
+    /// Forget history (called after a rollback restores an older state —
+    /// the stream rewinds, so trailing statistics must not mix epochs).
+    fn reset(&mut self);
+    /// Serializable state for crash-safe sweep resume.
+    fn snapshot(&self) -> Json;
+    fn restore(&mut self, j: &Json);
+}
+
+/// The guard names accepted by `--guard` / sweep grids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardKind {
+    LossSpike,
+    SpectronBound,
+    RhoCollapse,
+    SigmaCollapse,
+}
+
+impl GuardKind {
+    pub fn parse(s: &str) -> Result<GuardKind, String> {
+        match s {
+            "loss-spike" => Ok(GuardKind::LossSpike),
+            "spectron-bound" => Ok(GuardKind::SpectronBound),
+            "rho-collapse" => Ok(GuardKind::RhoCollapse),
+            "sigma-collapse" => Ok(GuardKind::SigmaCollapse),
+            other => Err(format!(
+                "unknown guard '{other}' \
+                 (loss-spike|spectron-bound|rho-collapse|sigma-collapse)"
+            )),
+        }
+    }
+
+    /// Parse a comma-separated guard list (the `--guard` flag).
+    pub fn parse_list(s: &str) -> Result<Vec<GuardKind>, String> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(GuardKind::parse)
+            .collect()
+    }
+
+    pub fn build(self) -> Box<dyn Detector> {
+        match self {
+            GuardKind::LossSpike => Box::new(LossSpikeDetector::default()),
+            GuardKind::SpectronBound => Box::new(SpectronBoundDetector::default()),
+            GuardKind::RhoCollapse => Box::new(RhoCollapseDetector::default()),
+            GuardKind::SigmaCollapse => Box::new(SigmaCollapseDetector::default()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loss spike: windowed z-score over the per-step loss stream
+// ---------------------------------------------------------------------------
+
+/// Fires when a per-step loss lands `z_thresh` trailing standard
+/// deviations above the trailing window mean (or goes non-finite). The
+/// std is floored at a fraction of the mean so a near-flat curve needs a
+/// *meaningful* jump, not timer-noise jitter, to alarm. A fired loss is
+/// NOT pushed into the window (a spike must not inflate its own
+/// baseline); healthy losses are.
+pub struct LossSpikeDetector {
+    pub window: usize,
+    pub min_history: usize,
+    pub z_thresh: f64,
+    /// std floor as a fraction of |mean|
+    pub rel_floor: f64,
+    hist: VecDeque<f64>,
+}
+
+impl Default for LossSpikeDetector {
+    fn default() -> Self {
+        LossSpikeDetector {
+            window: 64,
+            min_history: 8,
+            z_thresh: 4.0,
+            rel_floor: 0.02,
+            hist: VecDeque::new(),
+        }
+    }
+}
+
+impl LossSpikeDetector {
+    /// Feed one per-step loss; `Some` when it spikes. Split out from
+    /// `observe` so property tests can drive raw loss sequences.
+    pub fn push_loss(&mut self, step: usize, loss: f64) -> Option<Detection> {
+        if !loss.is_finite() {
+            return Some(Detection {
+                detector: "loss-spike",
+                step,
+                value: loss,
+                threshold: f64::INFINITY,
+                detail: "non-finite loss".into(),
+            });
+        }
+        let fired = if self.hist.len() >= self.min_history {
+            let n = self.hist.len() as f64;
+            let mean = self.hist.iter().sum::<f64>() / n;
+            let var = self.hist.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+            let sigma = var.sqrt().max(self.rel_floor * mean.abs()).max(1e-12);
+            let threshold = mean + self.z_thresh * sigma;
+            (loss > threshold).then(|| Detection {
+                detector: "loss-spike",
+                step,
+                value: loss,
+                threshold,
+                detail: format!(
+                    "z = {:.2} over window mean {mean:.4} (n = {})",
+                    (loss - mean) / sigma,
+                    self.hist.len()
+                ),
+            })
+        } else {
+            None
+        };
+        if fired.is_none() {
+            self.hist.push_back(loss);
+            while self.hist.len() > self.window {
+                self.hist.pop_front();
+            }
+        }
+        fired
+    }
+}
+
+impl Detector for LossSpikeDetector {
+    fn name(&self) -> &'static str {
+        "loss-spike"
+    }
+
+    fn observe(&mut self, rec: &Record, ring: &[(usize, f32)]) -> Option<Detection> {
+        // per-step granularity when the ring provides it; the record's
+        // own loss is the ring's last entry, so this covers both
+        for &(step, loss) in ring {
+            if let Some(d) = self.push_loss(step, loss as f64) {
+                return Some(d);
+            }
+        }
+        if ring.is_empty() {
+            return self.push_loss(rec.step, rec.loss);
+        }
+        None
+    }
+
+    fn reset(&mut self) {
+        self.hist.clear();
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![(
+            "hist",
+            Json::Arr(self.hist.iter().map(|&l| Json::num(l)).collect()),
+        )])
+    }
+
+    fn restore(&mut self, j: &Json) {
+        self.hist.clear();
+        if let Some(arr) = j.get("hist").and_then(Json::as_arr) {
+            for v in arr {
+                if let Some(x) = v.as_f64() {
+                    self.hist.push_back(x);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spectral-norm growth bound (the Spectron invariant, Eq. 13-16)
+// ---------------------------------------------------------------------------
+
+/// Fires when the tracked update spectral norm exceeds `margin * lr` —
+/// the bound a Spectron update respects by construction (the proptest
+/// suite pins `‖dW‖₂ <= 1.5 * eta`; the default margin of 2 adds the
+/// slack-policy headroom documented in DESIGN.md §Backends), so a clean
+/// Spectron run never alarms while a baseline breaching the bound does.
+pub struct SpectronBoundDetector {
+    pub margin: f64,
+    pub min_step: usize,
+}
+
+impl Default for SpectronBoundDetector {
+    fn default() -> Self {
+        SpectronBoundDetector { margin: 2.0, min_step: 2 }
+    }
+}
+
+impl Detector for SpectronBoundDetector {
+    fn name(&self) -> &'static str {
+        "spectron-bound"
+    }
+
+    fn observe(&mut self, rec: &Record, _ring: &[(usize, f32)]) -> Option<Detection> {
+        let dw = rec.telemetry[1] as f64;
+        // telemetry off (all-zero) or warmup: nothing to judge
+        if rec.step < self.min_step || dw == 0.0 || rec.lr <= 0.0 {
+            return None;
+        }
+        let threshold = self.margin * rec.lr;
+        (!dw.is_finite() || dw > threshold).then(|| Detection {
+            detector: "spectron-bound",
+            step: rec.step,
+            value: dw,
+            threshold,
+            detail: format!("‖dW‖₂ = {dw:.4e} > {:.1} * lr ({:.4e})", self.margin, rec.lr),
+        })
+    }
+
+    fn reset(&mut self) {}
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![])
+    }
+    fn restore(&mut self, _j: &Json) {}
+}
+
+// ---------------------------------------------------------------------------
+// spectral collapse detectors
+// ---------------------------------------------------------------------------
+
+/// `rho` is Spectron's renormalized per-step budget: in a healthy run it
+/// sits in `(0, lr]`. Leaving that interval (or going non-finite) after
+/// warmup means the renormalization degenerated.
+pub struct RhoCollapseDetector {
+    pub min_step: usize,
+}
+
+impl Default for RhoCollapseDetector {
+    fn default() -> Self {
+        RhoCollapseDetector { min_step: 4 }
+    }
+}
+
+impl Detector for RhoCollapseDetector {
+    fn name(&self) -> &'static str {
+        "rho-collapse"
+    }
+
+    fn observe(&mut self, rec: &Record, _ring: &[(usize, f32)]) -> Option<Detection> {
+        let rho = rec.telemetry[5] as f64;
+        if rec.step < self.min_step || rec.lr <= 0.0 {
+            return None;
+        }
+        let bad = !rho.is_finite() || rho <= 0.0 || rho > rec.lr * (1.0 + 1e-6);
+        bad.then(|| Detection {
+            detector: "rho-collapse",
+            step: rec.step,
+            value: rho,
+            threshold: rec.lr,
+            detail: format!("rho = {rho:.4e} outside (0, lr = {:.4e}]", rec.lr),
+        })
+    }
+
+    fn reset(&mut self) {}
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![])
+    }
+    fn restore(&mut self, _j: &Json) {}
+}
+
+/// Tracks the running peak of the factor singular values `sigma_a` /
+/// `sigma_b` and fires when either collapses below `rel_floor` times its
+/// own peak — the rank-collapse failure mode of low-rank factors.
+pub struct SigmaCollapseDetector {
+    pub rel_floor: f64,
+    pub min_step: usize,
+    peak_a: f64,
+    peak_b: f64,
+}
+
+impl Default for SigmaCollapseDetector {
+    fn default() -> Self {
+        SigmaCollapseDetector { rel_floor: 1e-3, min_step: 4, peak_a: 0.0, peak_b: 0.0 }
+    }
+}
+
+impl Detector for SigmaCollapseDetector {
+    fn name(&self) -> &'static str {
+        "sigma-collapse"
+    }
+
+    fn observe(&mut self, rec: &Record, _ring: &[(usize, f32)]) -> Option<Detection> {
+        let (sa, sb) = (rec.telemetry[3] as f64, rec.telemetry[4] as f64);
+        if sa == 0.0 && sb == 0.0 {
+            return None; // telemetry off for this variant
+        }
+        self.peak_a = self.peak_a.max(sa);
+        self.peak_b = self.peak_b.max(sb);
+        if rec.step < self.min_step {
+            return None;
+        }
+        for (name, sigma, peak) in [("sigma_a", sa, self.peak_a), ("sigma_b", sb, self.peak_b)] {
+            let threshold = self.rel_floor * peak;
+            if !sigma.is_finite() || (peak > 0.0 && sigma < threshold) {
+                return Some(Detection {
+                    detector: "sigma-collapse",
+                    step: rec.step,
+                    value: sigma,
+                    threshold,
+                    detail: format!("{name} = {sigma:.4e} below {:.0e} * peak {peak:.4e}", self.rel_floor),
+                });
+            }
+        }
+        None
+    }
+
+    fn reset(&mut self) {
+        // the peaks are trailing statistics of the abandoned trajectory:
+        // a rollback restores pre-spike sigmas, and judging them against
+        // a spike-inflated peak would re-alarm forever
+        self.peak_a = 0.0;
+        self.peak_b = 0.0;
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("peak_a", Json::num(self.peak_a)),
+            ("peak_b", Json::num(self.peak_b)),
+        ])
+    }
+
+    fn restore(&mut self, j: &Json) {
+        self.peak_a = j.get("peak_a").and_then(Json::as_f64).unwrap_or(0.0);
+        self.peak_b = j.get("peak_b").and_then(Json::as_f64).unwrap_or(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64, lr: f64, telemetry: [f32; 6]) -> Record {
+        Record {
+            step,
+            loss,
+            lr,
+            grad_norm: 1.0,
+            tokens_seen: 0.0,
+            telemetry,
+            wall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn loss_spike_fires_on_injected_jump_not_noise() {
+        let mut d = LossSpikeDetector::default();
+        // noisy but stationary curve: never fires
+        for i in 0..40usize {
+            let noise = if i % 2 == 0 { 0.05 } else { -0.05 };
+            assert!(d.push_loss(i, 5.0 + noise).is_none(), "step {i}");
+        }
+        // a genuine spike fires, and the spike does not poison the window
+        let det = d.push_loss(40, 9.0).expect("spike must fire");
+        assert_eq!(det.detector, "loss-spike");
+        assert!(det.value > det.threshold);
+        assert!(d.push_loss(41, 5.0).is_none(), "recovery is healthy");
+    }
+
+    #[test]
+    fn loss_spike_fires_on_non_finite() {
+        let mut d = LossSpikeDetector::default();
+        assert!(d.push_loss(0, f64::NAN).is_some());
+        assert!(d.push_loss(1, f64::INFINITY).is_some());
+    }
+
+    #[test]
+    fn loss_spike_needs_history() {
+        let mut d = LossSpikeDetector::default();
+        // fewer than min_history samples: even a huge value cannot fire
+        for i in 0..d.min_history - 1 {
+            assert!(d.push_loss(i, 3.0).is_none());
+        }
+        assert!(d.push_loss(99, 1e6).is_none(), "no baseline yet");
+    }
+
+    #[test]
+    fn loss_spike_snapshot_roundtrip() {
+        let mut d = LossSpikeDetector::default();
+        for i in 0..20 {
+            d.push_loss(i, 4.0 - 0.05 * i as f64);
+        }
+        let snap = d.snapshot();
+        let mut d2 = LossSpikeDetector::default();
+        d2.restore(&snap);
+        assert_eq!(d.hist, d2.hist);
+        // restored detector fires identically
+        assert_eq!(
+            d.push_loss(20, 50.0).is_some(),
+            d2.push_loss(20, 50.0).is_some()
+        );
+    }
+
+    #[test]
+    fn spectron_bound_honours_margin() {
+        let mut d = SpectronBoundDetector::default();
+        // dw_spec within margin * lr: healthy (the clean-spectron case)
+        let ok = rec(10, 3.0, 0.01, [1.0, 0.014, 0.0, 1.0, 1.0, 0.008]);
+        assert!(d.observe(&ok, &[]).is_none());
+        // breach fires
+        let bad = rec(11, 3.0, 0.01, [1.0, 0.05, 0.0, 1.0, 1.0, 0.008]);
+        let det = d.observe(&bad, &[]).unwrap();
+        assert_eq!(det.detector, "spectron-bound");
+        // telemetry-off rows never fire
+        let off = rec(12, 3.0, 0.01, [0.0; 6]);
+        assert!(d.observe(&off, &[]).is_none());
+    }
+
+    #[test]
+    fn rho_collapse_interval() {
+        let mut d = RhoCollapseDetector::default();
+        assert!(d.observe(&rec(10, 3.0, 0.01, [1.0, 0.01, 0.0, 1.0, 1.0, 0.005]), &[]).is_none());
+        assert!(d.observe(&rec(10, 3.0, 0.01, [1.0, 0.01, 0.0, 1.0, 1.0, 0.0]), &[]).is_some());
+        assert!(d.observe(&rec(10, 3.0, 0.01, [1.0, 0.01, 0.0, 1.0, 1.0, 0.02]), &[]).is_some());
+        // warmup suppressed
+        assert!(d.observe(&rec(1, 3.0, 0.01, [1.0, 0.01, 0.0, 1.0, 1.0, 0.0]), &[]).is_none());
+    }
+
+    #[test]
+    fn sigma_collapse_tracks_peak() {
+        let mut d = SigmaCollapseDetector::default();
+        for s in 0..8 {
+            let r = rec(s, 3.0, 0.01, [1.0, 0.01, 0.0, 2.0, 2.0, 0.005]);
+            assert!(d.observe(&r, &[]).is_none());
+        }
+        let collapsed = rec(8, 3.0, 0.01, [1.0, 0.01, 0.0, 1e-5, 2.0, 0.005]);
+        let det = d.observe(&collapsed, &[]).unwrap();
+        assert_eq!(det.detector, "sigma-collapse");
+        assert!(det.detail.contains("sigma_a"));
+    }
+
+    #[test]
+    fn guard_list_parsing() {
+        let g = GuardKind::parse_list("loss-spike, spectron-bound").unwrap();
+        assert_eq!(g, vec![GuardKind::LossSpike, GuardKind::SpectronBound]);
+        assert!(GuardKind::parse_list("loss-spike,bogus").is_err());
+        assert!(GuardKind::parse_list("").unwrap().is_empty());
+    }
+}

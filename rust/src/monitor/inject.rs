@@ -1,0 +1,181 @@
+//! Fault injection: make the paper's "instability → detection →
+//! intervention" story executable on demand
+//! (DESIGN.md §Monitoring and sweeps).
+//!
+//! [`SpikeInjector`] wraps any [`Backend`] and, on one chosen `step()`
+//! call, replaces the fused step with `grad` → scale → `apply`: the
+//! gradient is multiplied by a large factor, which drives the update
+//! spectral norm (and the next loss) through the roof — exactly the
+//! uncontrolled-growth event the paper describes. Every other call
+//! passes through untouched, so before and after the injection the
+//! trajectory is the backend's own (natively it is bit-identical, since
+//! the native fused step IS `grad` ∘ `apply`).
+//!
+//! Used by the integration suite's end-to-end stability scenario and by
+//! `repro train --inject-spike STEP:SCALE` for demos.
+
+use anyhow::Result;
+
+use crate::runtime::backend::{Backend, BackendKind, StateBuf};
+use crate::runtime::Manifest;
+
+pub struct SpikeInjector {
+    inner: Box<dyn Backend>,
+    /// inject on the Nth `step()` call of this wrapper (1-based)
+    at_call: usize,
+    scale: f32,
+    calls: usize,
+    injected: bool,
+}
+
+impl SpikeInjector {
+    /// Inject on the `at_call`-th step (1-based, counted from this
+    /// wrapper's construction — resume offsets accordingly), scaling the
+    /// gradient by `scale`. Requires the split `grad`/`apply` programs.
+    pub fn new(inner: Box<dyn Backend>, at_call: usize, scale: f32) -> Result<SpikeInjector> {
+        let m = inner.manifest();
+        anyhow::ensure!(
+            m.programs.contains_key("grad") && m.programs.contains_key("apply"),
+            "--inject-spike needs the split grad/apply programs (variant {})",
+            m.variant
+        );
+        anyhow::ensure!(at_call >= 1, "--inject-spike step is 1-based");
+        Ok(SpikeInjector { inner, at_call, scale, calls: 0, injected: false })
+    }
+
+    /// Parse the `--inject-spike STEP:SCALE` flag value.
+    pub fn parse_flag(s: &str) -> Result<(usize, f32), String> {
+        let (step, scale) = s
+            .split_once(':')
+            .ok_or_else(|| format!("--inject-spike wants STEP:SCALE, got '{s}'"))?;
+        let step = step
+            .parse::<usize>()
+            .map_err(|_| format!("bad spike step '{step}'"))?;
+        let scale = scale
+            .parse::<f32>()
+            .map_err(|_| format!("bad spike scale '{scale}'"))?;
+        Ok((step, scale))
+    }
+
+    pub fn fired(&self) -> bool {
+        self.injected
+    }
+}
+
+impl Backend for SpikeInjector {
+    fn kind(&self) -> BackendKind {
+        self.inner.kind()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn init(&mut self, seed: u64, knobs: &[f32; 8]) -> Result<StateBuf> {
+        self.inner.init(seed, knobs)
+    }
+
+    fn step(&mut self, state: &StateBuf, tokens: &[i32]) -> Result<StateBuf> {
+        self.calls += 1;
+        if self.calls != self.at_call {
+            return self.inner.step(state, tokens);
+        }
+        self.injected = true;
+        let mut g = self.inner.grad(state, tokens)?;
+        // g[0] is the loss; the gradient payload follows
+        for v in g[1..].iter_mut() {
+            *v *= self.scale;
+        }
+        self.inner.apply(state, &g)
+    }
+
+    fn grad(&mut self, state: &StateBuf, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.inner.grad(state, tokens)
+    }
+
+    fn apply(&mut self, state: &StateBuf, gradvec: &[f32]) -> Result<StateBuf> {
+        self.inner.apply(state, gradvec)
+    }
+
+    fn eval(&mut self, prefix: &StateBuf, tokens: &[i32], spans: &[i32]) -> Result<Vec<f32>> {
+        self.inner.eval(prefix, tokens, spans)
+    }
+
+    fn logits(&mut self, prefix: &StateBuf, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        self.inner.logits(prefix, tokens, pos)
+    }
+
+    fn has_logits(&self) -> bool {
+        self.inner.has_logits()
+    }
+
+    fn upload_state(&mut self, data: &[f32]) -> Result<StateBuf> {
+        self.inner.upload_state(data)
+    }
+
+    fn upload_prefix(&mut self, data: &[f32]) -> Result<StateBuf> {
+        self.inner.upload_prefix(data)
+    }
+
+    fn download(&mut self, buf: &StateBuf) -> Result<Vec<f32>> {
+        self.inner.download(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Registry;
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn parse_flag_formats() {
+        assert_eq!(SpikeInjector::parse_flag("20:50").unwrap(), (20, 50.0));
+        assert!(SpikeInjector::parse_flag("20").is_err());
+        assert!(SpikeInjector::parse_flag("x:1").is_err());
+    }
+
+    #[test]
+    fn untouched_steps_match_inner_backend_bitwise() {
+        let reg = Registry::load().unwrap();
+        let v = reg.variant("fact-z0-spectron").unwrap();
+        let knobs = [20.0, 0.01, 0.01, 0.05, 0.0, 0.0, 0.0, 0.0];
+        let mut rng = Pcg64::new(3);
+        let toks: Vec<i32> = (0..v.batch * (v.model.seq_len + 1))
+            .map(|_| rng.below(v.model.vocab as u64) as i32)
+            .collect();
+
+        let mut plain: Box<dyn Backend> = Box::new(NativeBackend::new(v).unwrap());
+        let mut inj =
+            SpikeInjector::new(Box::new(NativeBackend::new(v).unwrap()), 3, 100.0).unwrap();
+
+        let mut sp = plain.init(0, &knobs).unwrap();
+        let mut si = inj.init(0, &knobs).unwrap();
+        for call in 1..=4usize {
+            sp = plain.step(&sp, &toks).unwrap();
+            si = inj.step(&si, &toks).unwrap();
+            let a = plain.download(&sp).unwrap();
+            let b = inj.download(&si).unwrap();
+            let same = a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits());
+            if call < 3 {
+                assert!(same, "pre-injection step {call} must be bit-identical");
+                assert!(!inj.fired());
+            } else {
+                assert!(!same, "injection at call 3 must perturb the state");
+                assert!(inj.fired());
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_variants_without_split_programs() {
+        let reg = Registry::load().unwrap();
+        // fact-z1-spectron's program list omits grad/apply... but the
+        // native layout advertises them for every trainable variant, so
+        // use selfguided (whose native manifest drops all train programs)
+        let v = reg.variant("fact-s-selfguided").unwrap();
+        let be = Box::new(NativeBackend::new(v).unwrap());
+        assert!(SpikeInjector::new(be, 1, 10.0).is_err());
+    }
+}

@@ -1,0 +1,526 @@
+//! Training-health monitoring + crash-safe sweep orchestration
+//! (DESIGN.md §Monitoring and sweeps; docs/adr/004-stability-monitor.md).
+//!
+//! The paper's central claim is that loss spikes in native low-rank
+//! pretraining are driven by uncontrolled growth of the update spectral
+//! norm — a quantity this repo already logs every readback. This module
+//! closes the loop from *telemetry* to *action*:
+//!
+//! * [`detect`] — streaming detectors over the record stream (windowed
+//!   z-score loss spikes, the Spectron `‖dW‖₂ <= ~lr` growth bound,
+//!   `rho`/`sigma` collapse),
+//! * [`policy`] — what to do when one fires (`log`, `halt`, `lr-cut`,
+//!   `rollback`) plus the durable `events.jsonl` forensics log,
+//! * [`Monitor`] — detectors + policy + healthy-state snapshots behind
+//!   the [`StepObserver`] hook that [`crate::train::Trainer`],
+//!   [`crate::coordinator::GradAccumulator`] and
+//!   [`crate::coordinator::DataParallelSim`] honor,
+//! * [`sweep`] — the durable run registry + grid driver behind
+//!   `repro sweep`: kill the process mid-grid, rerun, and only
+//!   unfinished runs execute, each resuming from its own last
+//!   checkpoint with its monitor state,
+//! * [`inject`] — fault injection (a gradient scaled on one chosen
+//!   step) so the detect→intervene path is exercisable on demand.
+//!
+//! The observer is a synchronous hook on the *readback* cadence, not a
+//! channel: it sees the state exactly when the loop already has it on
+//! the host, so monitoring adds no extra transfers and a `log`-policy
+//! monitor leaves the trained bits untouched (asserted in the
+//! integration suite).
+
+pub mod detect;
+pub mod inject;
+pub mod policy;
+pub mod sweep;
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::runtime::backend::{Backend, StateBuf};
+use crate::runtime::state as slots;
+use crate::runtime::StateHost;
+use crate::train::checkpoint::RollingCheckpoints;
+use crate::train::metrics::Record;
+use crate::util::json::Json;
+
+pub use detect::{Detection, Detector, GuardKind};
+pub use inject::SpikeInjector;
+pub use policy::{EventLog, Policy};
+
+/// What a step observer tells the training loop to do next. Training
+/// loops apply directives between steps; `Continue` is the hot path and
+/// must stay free of transfers.
+#[derive(Debug)]
+pub enum Directive {
+    Continue,
+    Halt { reason: String },
+    /// Multiply the header `base_lr` by `factor` (persisted in the state
+    /// vector, so checkpoints and resumes carry the cut schedule).
+    CutLr { factor: f64 },
+    /// Restore this full state vector (the last healthy checkpoint) and
+    /// skip `skip_batches` extra batches past the offending window.
+    Rollback { to_step: usize, state: Vec<f32>, skip_batches: usize },
+}
+
+/// Hook invoked by training loops after every state readback, with the
+/// fresh record and the ring-decoded per-step losses since the previous
+/// readback. Implementations must be cheap on the healthy path.
+pub trait StepObserver {
+    fn observe(&mut self, host: &StateHost, rec: &Record, ring: &[(usize, f32)]) -> Directive;
+
+    /// Notification that the loop applied an intervention (observers log
+    /// state transitions; the default ignores them).
+    fn applied(&mut self, _what: &Directive) {}
+}
+
+/// The no-op observer: `train_with` without monitoring routes through
+/// this, keeping the unmonitored hot path byte-identical.
+pub struct NullObserver;
+
+impl StepObserver for NullObserver {
+    fn observe(&mut self, _h: &StateHost, _r: &Record, _ring: &[(usize, f32)]) -> Directive {
+        Directive::Continue
+    }
+}
+
+/// Outcome of applying a directive outside the Trainer (accumulator /
+/// DP coordinator loops, which are driven step-by-step by their callers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signal {
+    Continue,
+    Halted,
+}
+
+/// Apply a directive to a backend-resident state. Works on both backends
+/// because it goes exclusively through [`Backend`] upload/download
+/// (DESIGN.md §Backends). The Trainer has its own richer handling (ring
+/// bookkeeping, batch skipping); this is the shared path for
+/// [`crate::coordinator::GradAccumulator`] and
+/// [`crate::coordinator::DataParallelSim`].
+pub fn apply_directive(
+    backend: &mut dyn Backend,
+    state_buf: &mut StateBuf,
+    directive: Directive,
+) -> Result<Signal> {
+    match directive {
+        Directive::Continue => Ok(Signal::Continue),
+        Directive::Halt { reason } => {
+            crate::info!("monitor", "halting: {reason}");
+            Ok(Signal::Halted)
+        }
+        Directive::CutLr { factor } => {
+            let mut data = backend.download(state_buf)?;
+            data[slots::BASE_LR] *= factor as f32;
+            *state_buf = backend.upload_state(&data)?;
+            Ok(Signal::Continue)
+        }
+        Directive::Rollback { state, .. } => {
+            *state_buf = backend.upload_state(&state)?;
+            Ok(Signal::Continue)
+        }
+    }
+}
+
+/// Build a [`Record`] from a freshly read-back state (the coordinator
+/// loops construct observer input this way; the Trainer already has one).
+pub fn record_from_host(host: &StateHost, wall_s: f64) -> Record {
+    Record {
+        step: host.step(),
+        loss: host.loss() as f64,
+        lr: host.lr() as f64,
+        grad_norm: host.grad_norm() as f64,
+        tokens_seen: host.tokens_seen(),
+        telemetry: host.telemetry(),
+        wall_s,
+    }
+}
+
+/// Monitor configuration (guards + policy + snapshot/cooldown knobs).
+#[derive(Debug, Clone)]
+pub struct MonitorCfg {
+    pub guards: Vec<GuardKind>,
+    pub policy: Policy,
+    /// suppress further interventions for this many *observations*
+    /// (readbacks) after one — counted in observations, not steps, so
+    /// the grace window is independent of `read_interval`
+    pub cooldown_obs: usize,
+    /// halt after this many interventions (runaway-instability brake)
+    pub max_interventions: usize,
+    /// rolling on-disk retention depth (when a checkpoint dir is attached)
+    pub keep_ckpts: usize,
+}
+
+impl Default for MonitorCfg {
+    fn default() -> Self {
+        MonitorCfg {
+            guards: vec![GuardKind::LossSpike],
+            policy: Policy::Log,
+            cooldown_obs: 2,
+            max_interventions: 3,
+            keep_ckpts: 3,
+        }
+    }
+}
+
+/// Detectors + policy + healthy-state snapshots, behind [`StepObserver`].
+///
+/// On every healthy readback the monitor snapshots the state (in memory,
+/// and — when a checkpoint directory is attached — through the rolling
+/// retention layer on disk, which doubles as the sweep's crash-resume
+/// point). On a detection it appends a forensics event and converts the
+/// policy into a [`Directive`].
+pub struct Monitor {
+    cfg: MonitorCfg,
+    detectors: Vec<Box<dyn Detector>>,
+    events: Option<EventLog>,
+    retention: Option<RollingCheckpoints>,
+    /// mirror of [`Monitor::to_json`] on disk, refreshed on the retention
+    /// cadence so a crashed sweep run resumes with its detector state
+    state_file: Option<std::path::PathBuf>,
+    /// last healthy (step, full state vector)
+    snapshot: Option<(usize, Vec<f32>)>,
+    /// trailing records for the forensics trace
+    recent: VecDeque<Record>,
+    /// observations left in the post-intervention grace window
+    cooldown_left: usize,
+    pub events_seen: usize,
+    pub interventions: usize,
+    halted: bool,
+}
+
+const TRACE_LEN: usize = 16;
+
+impl Monitor {
+    pub fn new(cfg: MonitorCfg) -> Monitor {
+        let detectors = cfg.guards.iter().map(|g| g.build()).collect();
+        Monitor {
+            cfg,
+            detectors,
+            events: None,
+            retention: None,
+            state_file: None,
+            snapshot: None,
+            recent: VecDeque::new(),
+            cooldown_left: 0,
+            events_seen: 0,
+            interventions: 0,
+            halted: false,
+        }
+    }
+
+    /// Tee events to `results/<run_name>/events.jsonl` (append mode).
+    pub fn with_event_log(mut self, run_name: &str) -> Result<Monitor> {
+        self.events = Some(EventLog::for_run(run_name)?);
+        Ok(self)
+    }
+
+    /// Mirror healthy snapshots to a rolling on-disk checkpoint dir
+    /// (sweep runs resume from here after a crash).
+    pub fn with_retention(mut self, dir: impl Into<std::path::PathBuf>, variant: &str) -> Result<Monitor> {
+        self.retention = Some(RollingCheckpoints::new(dir, variant, self.cfg.keep_ckpts)?);
+        Ok(self)
+    }
+
+    /// Keep a durable `monitor.json` alongside the run: rewritten (tmp +
+    /// rename) whenever detector state or counters change, read back by
+    /// [`Monitor::restore_json`] on resume.
+    pub fn with_state_file(mut self, path: impl Into<std::path::PathBuf>) -> Monitor {
+        self.state_file = Some(path.into());
+        self
+    }
+
+    fn persist_state(&self) {
+        if let Some(p) = &self.state_file {
+            let tmp = p.with_extension("json.tmp");
+            if std::fs::write(&tmp, self.to_json().to_string()).is_ok() {
+                std::fs::rename(&tmp, p).ok();
+            }
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.cfg.policy
+    }
+
+    /// The last healthy snapshot step (tests assert rollback targets).
+    pub fn snapshot_step(&self) -> Option<usize> {
+        self.snapshot.as_ref().map(|(s, _)| *s)
+    }
+
+    fn log_event(&mut self, det: &Detection, action: &str) {
+        self.events_seen += 1;
+        crate::info!(
+            "monitor",
+            "{} at step {}: {} -> {action}",
+            det.detector,
+            det.step,
+            det.detail
+        );
+        if let Some(log) = &mut self.events {
+            let row = policy::event_row(det, action, self.recent.iter().cloned());
+            if let Err(e) = log.append(&row) {
+                crate::info!("monitor", "event log write failed: {e:#}");
+            }
+        }
+        self.persist_state();
+    }
+
+    /// Serialize resumable monitor state (sweep registry `monitor.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("events_seen", Json::num(self.events_seen as f64)),
+            ("interventions", Json::num(self.interventions as f64)),
+            (
+                "detectors",
+                Json::Obj(
+                    self.detectors
+                        .iter()
+                        .map(|d| (d.name().to_string(), d.snapshot()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn restore_json(&mut self, j: &Json) {
+        self.events_seen = j
+            .get("events_seen")
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        self.interventions = j
+            .get("interventions")
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        if let Some(dets) = j.get("detectors") {
+            for d in &mut self.detectors {
+                if let Some(snap) = dets.get(d.name()) {
+                    d.restore(snap);
+                }
+            }
+        }
+    }
+}
+
+impl StepObserver for Monitor {
+    fn observe(&mut self, host: &StateHost, rec: &Record, ring: &[(usize, f32)]) -> Directive {
+        if self.halted {
+            return Directive::Halt { reason: "monitor already halted".into() };
+        }
+        self.recent.push_back(rec.clone());
+        while self.recent.len() > TRACE_LEN {
+            self.recent.pop_front();
+        }
+        let in_cooldown = self.cooldown_left > 0;
+        self.cooldown_left = self.cooldown_left.saturating_sub(1);
+
+        let mut fired: Option<Detection> = None;
+        for d in &mut self.detectors {
+            if let Some(det) = d.observe(rec, ring) {
+                fired = Some(det);
+                break; // first alarm wins; one intervention per readback
+            }
+        }
+
+        let Some(det) = fired else {
+            // healthy: this state becomes the rollback target. The
+            // in-memory clone only pays off under a rollback policy;
+            // the on-disk retention (crash-resume point) runs always.
+            if matches!(self.cfg.policy, Policy::Rollback { .. }) {
+                self.snapshot = Some((host.step(), host.data.clone()));
+            }
+            if let Some(r) = &self.retention {
+                if let Err(e) = r.save(host.step(), &host.data) {
+                    crate::info!("monitor", "retention save failed: {e:#}");
+                }
+            }
+            self.persist_state();
+            return Directive::Continue;
+        };
+
+        if in_cooldown {
+            self.log_event(&det, "suppressed(cooldown)");
+            return Directive::Continue;
+        }
+        if matches!(self.cfg.policy, Policy::LrCut { .. } | Policy::Rollback { .. })
+            && self.interventions >= self.cfg.max_interventions
+        {
+            self.log_event(&det, "halt(max-interventions)");
+            self.halted = true;
+            return Directive::Halt {
+                reason: format!(
+                    "{} interventions exhausted ({} at step {})",
+                    self.cfg.max_interventions, det.detector, det.step
+                ),
+            };
+        }
+
+        match self.cfg.policy {
+            Policy::Log => {
+                self.log_event(&det, "log");
+                Directive::Continue
+            }
+            Policy::Halt => {
+                self.log_event(&det, "halt");
+                self.halted = true;
+                Directive::Halt {
+                    reason: format!("{} at step {}: {}", det.detector, det.step, det.detail),
+                }
+            }
+            Policy::LrCut { factor } => {
+                self.log_event(&det, "lr-cut");
+                self.interventions += 1;
+                self.cooldown_left = self.cfg.cooldown_obs;
+                Directive::CutLr { factor }
+            }
+            Policy::Rollback { skip_batches } => match self.snapshot.clone() {
+                Some((to_step, state)) => {
+                    self.log_event(&det, "rollback");
+                    self.interventions += 1;
+                    // the re-run window gets a grace period (counted in
+                    // readbacks) before the monitor can intervene again
+                    self.cooldown_left = self.cfg.cooldown_obs;
+                    for d in &mut self.detectors {
+                        d.reset(); // the stream rewinds with the state
+                    }
+                    Directive::Rollback { to_step, state, skip_batches }
+                }
+                None => {
+                    self.log_event(&det, "halt(no-snapshot)");
+                    self.halted = true;
+                    Directive::Halt {
+                        reason: format!(
+                            "{} at step {} before any healthy snapshot",
+                            det.detector, det.step
+                        ),
+                    }
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn host(step: usize, loss: f32) -> StateHost {
+        let mut data = vec![0f32; slots::HDR];
+        data[slots::STEP] = step as f32;
+        data[slots::LOSS] = loss;
+        data[slots::LR] = 0.01;
+        StateHost { data, params_end: slots::HDR, hdr: slots::HDR }
+    }
+
+    fn observe_loss(m: &mut Monitor, step: usize, loss: f32) -> Directive {
+        let h = host(step, loss);
+        let rec = record_from_host(&h, 0.0);
+        let ring = vec![(step.saturating_sub(1), loss)];
+        m.observe(&h, &rec, &ring)
+    }
+
+    #[test]
+    fn healthy_stream_snapshots_and_continues() {
+        let cfg = MonitorCfg {
+            policy: Policy::Rollback { skip_batches: 0 },
+            ..MonitorCfg::default()
+        };
+        let mut m = Monitor::new(cfg);
+        for s in 1..=20 {
+            let d = observe_loss(&mut m, s, 5.0 - 0.05 * s as f32);
+            assert!(matches!(d, Directive::Continue));
+        }
+        assert_eq!(m.events_seen, 0);
+        assert_eq!(m.snapshot_step(), Some(20));
+        // a log-policy monitor never pays for the rollback snapshot
+        let mut quiet = Monitor::new(MonitorCfg::default());
+        observe_loss(&mut quiet, 1, 5.0);
+        assert_eq!(quiet.snapshot_step(), None);
+    }
+
+    #[test]
+    fn rollback_policy_returns_last_healthy_state() {
+        let cfg = MonitorCfg {
+            policy: Policy::Rollback { skip_batches: 0 },
+            ..MonitorCfg::default()
+        };
+        let mut m = Monitor::new(cfg);
+        for s in 1..=12 {
+            observe_loss(&mut m, s, 4.0);
+        }
+        let d = observe_loss(&mut m, 13, 400.0);
+        match d {
+            Directive::Rollback { to_step, state, .. } => {
+                assert_eq!(to_step, 12);
+                assert_eq!(state[slots::STEP], 12.0);
+                assert_eq!(state[slots::LOSS], 4.0);
+            }
+            other => panic!("expected rollback, got {other:?}"),
+        }
+        assert_eq!(m.events_seen, 1);
+        assert_eq!(m.interventions, 1);
+    }
+
+    #[test]
+    fn spike_before_any_snapshot_halts() {
+        let cfg = MonitorCfg {
+            policy: Policy::Rollback { skip_batches: 0 },
+            ..MonitorCfg::default()
+        };
+        let mut m = Monitor::new(cfg);
+        // non-finite loss fires even without history; no snapshot exists
+        let d = observe_loss(&mut m, 1, f32::NAN);
+        assert!(matches!(d, Directive::Halt { .. }));
+    }
+
+    #[test]
+    fn interventions_are_bounded_then_halt() {
+        let cfg = MonitorCfg {
+            policy: Policy::LrCut { factor: 0.5 },
+            cooldown_obs: 0,
+            max_interventions: 2,
+            ..MonitorCfg::default()
+        };
+        let mut m = Monitor::new(cfg);
+        for s in 1..=12 {
+            observe_loss(&mut m, s, 4.0);
+        }
+        assert!(matches!(observe_loss(&mut m, 13, 400.0), Directive::CutLr { .. }));
+        assert!(matches!(observe_loss(&mut m, 14, 400.0), Directive::CutLr { .. }));
+        assert!(matches!(observe_loss(&mut m, 15, 400.0), Directive::Halt { .. }));
+    }
+
+    #[test]
+    fn cooldown_suppresses_but_logs() {
+        let cfg = MonitorCfg {
+            policy: Policy::LrCut { factor: 0.5 },
+            cooldown_obs: 100,
+            ..MonitorCfg::default()
+        };
+        let mut m = Monitor::new(cfg);
+        for s in 1..=12 {
+            observe_loss(&mut m, s, 4.0);
+        }
+        assert!(matches!(observe_loss(&mut m, 13, 400.0), Directive::CutLr { .. }));
+        // inside the cooldown window: logged, not acted upon
+        assert!(matches!(observe_loss(&mut m, 14, 400.0), Directive::Continue));
+        assert_eq!(m.events_seen, 2);
+        assert_eq!(m.interventions, 1);
+    }
+
+    #[test]
+    fn monitor_state_roundtrips_for_resume() {
+        let mut m = Monitor::new(MonitorCfg::default());
+        for s in 1..=12 {
+            observe_loss(&mut m, s, 4.0);
+        }
+        observe_loss(&mut m, 13, 400.0); // log policy: event only
+        let j = m.to_json();
+        let mut m2 = Monitor::new(MonitorCfg::default());
+        m2.restore_json(&j);
+        assert_eq!(m2.events_seen, 1);
+        // the restored loss window fires on the same next spike
+        assert!(matches!(observe_loss(&mut m2, 14, 400.0), Directive::Continue));
+        assert_eq!(m2.events_seen, 2);
+    }
+}

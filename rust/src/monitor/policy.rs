@@ -1,0 +1,191 @@
+//! Intervention policies + the durable forensics log
+//! (DESIGN.md §Monitoring and sweeps).
+//!
+//! A policy maps a [`crate::monitor::detect::Detection`] to a
+//! [`crate::monitor::Directive`] the training loop applies:
+//!
+//! | policy     | response                                              |
+//! |------------|-------------------------------------------------------|
+//! | `log`      | record the event, keep training                       |
+//! | `halt`     | record, stop the run (status `failed` under a sweep)  |
+//! | `lr-cut`   | multiply the header `base_lr` by `factor`, continue   |
+//! | `rollback` | restore the last healthy checkpoint, skip the
+//! |            | offending batch window, resume                        |
+//!
+//! Every event — detection, intervention, suppression — is appended to
+//! `results/<run>/events.jsonl` through [`EventLog`], which flushes and
+//! fsyncs per line: the forensics trail survives the crash it documents.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::detect::Detection;
+use crate::train::metrics::Record;
+use crate::util::json::Json;
+
+/// What to do when a detector fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    Log,
+    Halt,
+    LrCut { factor: f64 },
+    Rollback { skip_batches: usize },
+}
+
+impl Policy {
+    /// Parse the `--on-spike` flag / sweep `on_event` key.
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s {
+            "log" => Ok(Policy::Log),
+            "halt" => Ok(Policy::Halt),
+            "lr-cut" => Ok(Policy::LrCut { factor: 0.5 }),
+            "rollback" => Ok(Policy::Rollback { skip_batches: 0 }),
+            other => Err(format!("unknown policy '{other}' (log|halt|lr-cut|rollback)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Log => "log",
+            Policy::Halt => "halt",
+            Policy::LrCut { .. } => "lr-cut",
+            Policy::Rollback { .. } => "rollback",
+        }
+    }
+}
+
+/// Append-only JSONL event sink under `results/<run>/events.jsonl`.
+/// Opened in append mode (a resumed run extends the same trail) and
+/// flushed + fsynced per event — durability is the point of a forensics
+/// log, and events are rare enough that the sync cost is irrelevant.
+pub struct EventLog {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl EventLog {
+    /// `results/<run_name>/events.jsonl` (the same per-run directory the
+    /// metrics sink uses; `run_name` may contain `/` for sweep runs).
+    pub fn for_run(run_name: &str) -> Result<EventLog> {
+        Self::at(&crate::repo_path("results").join(run_name).join("events.jsonl"))
+    }
+
+    pub fn at(path: &Path) -> Result<EventLog> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).context("mkdir events dir")?;
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        Ok(EventLog { path: path.to_path_buf(), file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one event row; flush + fsync before returning.
+    pub fn append(&mut self, row: &Json) -> Result<()> {
+        writeln!(self.file, "{row}")?;
+        self.file.flush()?;
+        self.file.sync_data().ok(); // best effort on exotic filesystems
+        Ok(())
+    }
+
+    /// Read every event row back (forensics / tests / sweep-report).
+    pub fn read_all(path: &Path) -> Result<Vec<Json>> {
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(path)?;
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| Json::parse(l).map_err(|e| anyhow::anyhow!("{e}")))
+            .collect()
+    }
+}
+
+/// Render one forensics row: the detection, the policy's response, and
+/// the spectral trace around the spike (the trailing record window —
+/// `w_spec`/`dw_spec`/`rho`/`sigma` trajectories leading into the event).
+pub fn event_row(
+    det: &Detection,
+    action: &str,
+    trace: impl Iterator<Item = Record>,
+) -> Json {
+    let trace_rows: Vec<Json> = trace.map(|r| r.to_json()).collect();
+    Json::obj(vec![
+        ("event", Json::str("detection")),
+        ("detector", Json::str(det.detector)),
+        ("step", Json::num(det.step as f64)),
+        ("value", Json::num(det.value)),
+        ("threshold", Json::num(det.threshold)),
+        ("detail", Json::str(det.detail.clone())),
+        ("action", Json::str(action)),
+        ("trace", Json::Arr(trace_rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(Policy::parse("log").unwrap(), Policy::Log);
+        assert_eq!(Policy::parse("halt").unwrap(), Policy::Halt);
+        assert!(matches!(Policy::parse("lr-cut").unwrap(), Policy::LrCut { .. }));
+        assert!(matches!(Policy::parse("rollback").unwrap(), Policy::Rollback { .. }));
+        assert!(Policy::parse("explode").is_err());
+    }
+
+    #[test]
+    fn event_log_appends_across_reopens() {
+        let p = std::env::temp_dir().join(format!(
+            "spectron-eventlog-{}.jsonl",
+            std::process::id()
+        ));
+        std::fs::remove_file(&p).ok();
+        {
+            let mut log = EventLog::at(&p).unwrap();
+            log.append(&Json::obj(vec![("event", Json::str("a"))])).unwrap();
+        }
+        {
+            // a resumed run must extend, not truncate
+            let mut log = EventLog::at(&p).unwrap();
+            log.append(&Json::obj(vec![("event", Json::str("b"))])).unwrap();
+        }
+        let rows = EventLog::read_all(&p).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("event").unwrap().as_str(), Some("b"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn event_row_carries_trace() {
+        let det = Detection {
+            detector: "loss-spike",
+            step: 42,
+            value: 9.0,
+            threshold: 5.0,
+            detail: "z = 8".into(),
+        };
+        let trace = (40..42).map(|s| Record {
+            step: s,
+            loss: 3.0,
+            lr: 0.01,
+            grad_norm: 1.0,
+            tokens_seen: 0.0,
+            telemetry: [0.5, 0.01, 0.0, 1.0, 1.0, 0.005],
+            wall_s: 0.0,
+        });
+        let row = event_row(&det, "rollback", trace);
+        assert_eq!(row.get("action").unwrap().as_str(), Some("rollback"));
+        assert_eq!(row.get("trace").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(row.get("step").unwrap().as_usize(), Some(42));
+    }
+}

@@ -1,0 +1,715 @@
+//! Crash-safe sweep orchestration (DESIGN.md §Monitoring and sweeps;
+//! docs/adr/004-stability-monitor.md).
+//!
+//! A sweep is a grid of independent training runs with a *durable run
+//! registry* under `results/sweeps/<name>/`:
+//!
+//! ```text
+//! results/sweeps/<name>/
+//!   sweep.json                  grid-level metadata
+//!   runs/<run-id>/
+//!     manifest.json             config hash, status, steps, final loss
+//!     ckpts/step-<N>.ckpt       rolling healthy checkpoints (monitor)
+//!     metrics.jsonl             record stream (append across resumes)
+//!     events.jsonl              monitor forensics (append across resumes)
+//!     monitor.json              resumable detector/counter state
+//! ```
+//!
+//! Kill the process anywhere mid-grid and rerun: runs whose manifest says
+//! `done` *under the same config hash* are skipped; everything else
+//! re-executes, resuming from its newest rolling checkpoint with its
+//! monitor state restored. Editing a run's config changes its hash, so
+//! stale registry state (and stale isoFLOP cache points — see
+//! [`config_hash`] use in `exp::scalinglaws`) invalidates itself instead
+//! of being silently reused.
+//!
+//! The batch stream's position is intentionally NOT part of the durable
+//! state: a resumed run replays its shard from the head, which changes
+//! *which* windows the re-run steps see but not the training contract
+//! (same seed, same shard) — the trade-off docs/adr/004 records.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::detect::GuardKind;
+use super::policy::Policy;
+use super::{Monitor, MonitorCfg};
+use crate::config::{Registry, RunCfg, VariantCfg};
+use crate::coordinator::sched::{Job, Scheduler, WorkerCtx};
+use crate::data::dataset::{Dataset, Split};
+use crate::runtime::backend::Backend;
+use crate::runtime::{ArtifactIndex, NativeBackend, PjrtBackend};
+use crate::train::{checkpoint::RollingCheckpoints, MetricsLog, Trainer};
+use crate::util::json::Json;
+use crate::util::toml;
+
+// ---------------------------------------------------------------------------
+// config hashing
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over a canonical rendering of everything that determines a
+/// run's trajectory: the variant's architecture/optimizer knobs, the run
+/// config, and the dataset size. Registry entries and isoFLOP cache
+/// points are keyed by this, so an edited config invalidates its own
+/// stale results.
+pub fn config_hash(v: &VariantCfg, run: &RunCfg, docs: u64) -> u64 {
+    let canon = format!(
+        "v={};model={};h={};l={};heads={};vocab={};seq={};fact={};rr={};opt={};batch={};\
+         tel={};telmat={};embmult={};steps={};lr={};wd={};warm={};seed={};docs={docs}",
+        v.name,
+        v.model.name,
+        v.model.hidden,
+        v.model.layers,
+        v.model.heads,
+        v.model.vocab,
+        v.model.seq_len,
+        v.factorize,
+        v.rank_ratio,
+        v.optimizer,
+        v.batch,
+        v.telemetry,
+        v.telemetry_matrix,
+        v.emb_lr_mult,
+        run.total_steps,
+        run.base_lr,
+        run.weight_decay,
+        run.warmup_frac,
+        run.seed,
+    );
+    fnv1a(canon.as_bytes())
+}
+
+/// Hex rendering used in JSON (a u64 does not survive a JSON f64
+/// round-trip above 2^53, a string does).
+pub fn hash_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// grid specification
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub id: String,
+    pub variant: String,
+    pub run: RunCfg,
+}
+
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    pub name: String,
+    pub docs: u64,
+    pub guards: Vec<GuardKind>,
+    pub policy: Policy,
+    pub runs: Vec<RunSpec>,
+}
+
+impl GridSpec {
+    /// Parse a grid TOML:
+    ///
+    /// ```toml
+    /// [sweep]
+    /// name = "demo"            # registry name (results/sweeps/<name>)
+    /// docs = 3000              # corpus documents (shared by all runs)
+    /// guard = "loss-spike"     # optional, comma list
+    /// on_event = "rollback"    # optional: log|halt|lr-cut|rollback
+    /// read_interval = 25       # optional
+    ///
+    /// [grid]                   # cartesian product
+    /// variants = ["fact-z0-spectron", "fact-s-sgd"]
+    /// steps = [50, 100]
+    /// lrs = [0.01]             # optional, default [0.01]
+    /// seeds = [0]              # optional, default [0]
+    /// wd = 0.01                # optional scalars
+    /// warmup = 0.05
+    /// ```
+    pub fn from_toml(path: &Path) -> Result<GridSpec> {
+        let doc = toml::parse_file(path).map_err(|e| anyhow!(e))?;
+        let sweep = doc.get("sweep").ok_or_else(|| anyhow!("grid needs a [sweep] table"))?;
+        let grid = doc.get("grid").ok_or_else(|| anyhow!("grid needs a [grid] table"))?;
+
+        let name = sweep
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("[sweep].name required"))?
+            .to_string();
+        anyhow::ensure!(
+            !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || "-_".contains(c)),
+            "[sweep].name must be filesystem-safe (got '{name}')"
+        );
+        let docs = sweep.get("docs").and_then(|v| v.as_i64()).unwrap_or(3000) as u64;
+        let guards = match sweep.get("guard").and_then(|v| v.as_str()) {
+            Some(s) => GuardKind::parse_list(s).map_err(|e| anyhow!(e))?,
+            None => vec![GuardKind::LossSpike],
+        };
+        let policy = match sweep.get("on_event").and_then(|v| v.as_str()) {
+            Some(s) => Policy::parse(s).map_err(|e| anyhow!(e))?,
+            None => Policy::Log,
+        };
+        let read_interval =
+            sweep.get("read_interval").and_then(|v| v.as_i64()).unwrap_or(25) as usize;
+
+        let str_list = |key: &str| -> Vec<String> {
+            grid.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                .unwrap_or_default()
+        };
+        let num_list = |key: &str, default: Vec<f64>| -> Vec<f64> {
+            grid.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or(default)
+        };
+        let variants = str_list("variants");
+        anyhow::ensure!(!variants.is_empty(), "[grid].variants must be non-empty");
+        let steps = num_list("steps", vec![]);
+        anyhow::ensure!(!steps.is_empty(), "[grid].steps must be non-empty");
+        let lrs = num_list("lrs", vec![0.01]);
+        let seeds = num_list("seeds", vec![0.0]);
+        let wd = grid.get("wd").and_then(|v| v.as_f64()).unwrap_or(0.01);
+        let warmup = grid.get("warmup").and_then(|v| v.as_f64()).unwrap_or(0.05);
+
+        let mut runs = Vec::new();
+        for v in &variants {
+            for &s in &steps {
+                for &lr in &lrs {
+                    for &seed in &seeds {
+                        let run = RunCfg {
+                            total_steps: s as usize,
+                            base_lr: lr,
+                            weight_decay: wd,
+                            warmup_frac: warmup,
+                            seed: seed as u64,
+                            read_interval,
+                        };
+                        runs.push(RunSpec {
+                            id: run_id(v, &run),
+                            variant: v.clone(),
+                            run,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(GridSpec { name, docs, guards, policy, runs })
+    }
+
+    /// The built-in resumability smoke grid (`repro sweep --smoke`): two
+    /// tiny native-friendly runs, enough to kill between and rerun.
+    pub fn smoke() -> GridSpec {
+        let mk = |steps: usize| RunCfg {
+            total_steps: steps,
+            base_lr: 0.01,
+            weight_decay: 0.01,
+            warmup_frac: 0.05,
+            seed: 0,
+            read_interval: 3,
+        };
+        let runs = [6usize, 9]
+            .into_iter()
+            .map(|s| {
+                let run = mk(s);
+                RunSpec { id: run_id("fact-z0-spectron", &run), variant: "fact-z0-spectron".into(), run }
+            })
+            .collect();
+        GridSpec {
+            name: "smoke".into(),
+            docs: 400,
+            guards: vec![GuardKind::LossSpike],
+            policy: Policy::Log,
+            runs,
+        }
+    }
+}
+
+fn run_id(variant: &str, run: &RunCfg) -> String {
+    format!(
+        "{variant}-s{}-lr{}-seed{}",
+        run.total_steps,
+        run.base_lr,
+        run.seed
+    )
+}
+
+// ---------------------------------------------------------------------------
+// per-run registry manifest
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct RunManifest {
+    pub id: String,
+    pub variant: String,
+    /// hex config hash this run's results belong to
+    pub cfg: String,
+    /// pending | running | done | failed
+    pub status: String,
+    pub steps_done: usize,
+    pub total_steps: usize,
+    pub final_loss: f64,
+    pub diverged: bool,
+    pub events: usize,
+    /// step of the checkpoint a resumed session continued from
+    pub resumed_from: Option<usize>,
+    pub note: String,
+}
+
+impl RunManifest {
+    pub fn fresh(id: &str, variant: &str, cfg: &str, total_steps: usize) -> RunManifest {
+        RunManifest {
+            id: id.into(),
+            variant: variant.into(),
+            cfg: cfg.into(),
+            status: "pending".into(),
+            steps_done: 0,
+            total_steps,
+            final_loss: f64::NAN,
+            diverged: false,
+            events: 0,
+            resumed_from: None,
+            note: String::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("id", Json::str(self.id.clone())),
+            ("variant", Json::str(self.variant.clone())),
+            ("cfg", Json::str(self.cfg.clone())),
+            ("status", Json::str(self.status.clone())),
+            ("steps_done", Json::num(self.steps_done as f64)),
+            ("total_steps", Json::num(self.total_steps as f64)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("diverged", Json::Bool(self.diverged)),
+            ("events", Json::num(self.events as f64)),
+            ("note", Json::str(self.note.clone())),
+        ];
+        if let Some(s) = self.resumed_from {
+            kv.push(("resumed_from", Json::num(s as f64)));
+        }
+        Json::obj(kv)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunManifest> {
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        Ok(RunManifest {
+            id: s("id")?,
+            variant: s("variant")?,
+            cfg: s("cfg")?,
+            status: s("status")?,
+            steps_done: j.get("steps_done").and_then(Json::as_usize).unwrap_or(0),
+            total_steps: j.get("total_steps").and_then(Json::as_usize).unwrap_or(0),
+            final_loss: j.get("final_loss").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            diverged: j.get("diverged").and_then(Json::as_bool).unwrap_or(false),
+            events: j.get("events").and_then(Json::as_usize).unwrap_or(0),
+            resumed_from: j.get("resumed_from").and_then(Json::as_usize),
+            note: j
+                .get("note")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Option<RunManifest>> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let j = Json::parse_file(&path).map_err(|e| anyhow!(e))?;
+        Ok(Some(Self::from_json(&j)?))
+    }
+
+    /// Durable write: tmp + rename, so a crash mid-write leaves either
+    /// the old manifest or the new one, never a torn file.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let tmp = dir.join(".manifest.json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        std::fs::rename(&tmp, dir.join("manifest.json")).context("commit manifest")?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sweep driver
+// ---------------------------------------------------------------------------
+
+/// Which execution backend sweep jobs build inside their worker thread.
+#[derive(Clone)]
+pub enum ExecBackend {
+    Native,
+    Pjrt(ArtifactIndex),
+}
+
+pub struct SweepOpts {
+    pub workers: usize,
+    /// execute at most this many runs this session (the CI resumability
+    /// smoke uses 1 to simulate "killed after the first run")
+    pub max_runs: Option<usize>,
+    pub backend: ExecBackend,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts { workers: 2, max_runs: None, backend: ExecBackend::Native }
+    }
+}
+
+#[derive(Debug)]
+pub struct SweepSummary {
+    pub executed: usize,
+    pub skipped: usize,
+    pub resumed: usize,
+    pub failed: usize,
+    /// executed runs in submission order: (run id, result)
+    pub rows: Vec<(String, Result<Json, String>)>,
+}
+
+pub fn registry_root(name: &str) -> PathBuf {
+    crate::repo_path("results").join("sweeps").join(name)
+}
+
+/// Execute a grid against the registry: skip `done` runs whose config
+/// hash still matches, resume interrupted ones from their newest rolling
+/// checkpoint, run the rest — each run an isolated [`Scheduler`] job (a
+/// panic or error in one run is that run's failure alone).
+pub fn run_sweep(
+    grid: &GridSpec,
+    reg: &Registry,
+    ds: &Arc<Dataset>,
+    opts: &SweepOpts,
+) -> Result<SweepSummary> {
+    let root = registry_root(&grid.name);
+    std::fs::create_dir_all(root.join("runs"))?;
+    std::fs::write(
+        root.join("sweep.json"),
+        Json::obj(vec![
+            ("name", Json::str(grid.name.clone())),
+            ("docs", Json::num(grid.docs as f64)),
+            ("n_runs", Json::num(grid.runs.len() as f64)),
+            ("policy", Json::str(grid.policy.name())),
+        ])
+        .to_string(),
+    )?;
+
+    let mut jobs = Vec::new();
+    let mut skipped = 0usize;
+    for spec in &grid.runs {
+        let v = reg.variant(&spec.variant).map_err(|e| anyhow!(e))?.clone();
+        let cfg_hex = hash_hex(config_hash(&v, &spec.run, grid.docs));
+        let dir = root.join("runs").join(&spec.id);
+        if let Some(m) = RunManifest::load(&dir)? {
+            if m.status == "done" && m.cfg == cfg_hex {
+                crate::info!("sweep", "{}: done (cfg match) — skipping", spec.id);
+                skipped += 1;
+                continue;
+            }
+            if m.cfg != cfg_hex {
+                crate::info!("sweep", "{}: config changed — retraining", spec.id);
+            } else {
+                crate::info!("sweep", "{}: status '{}' — (re)executing", spec.id, m.status);
+            }
+        }
+        if let Some(max) = opts.max_runs {
+            if jobs.len() >= max {
+                crate::info!("sweep", "--max-runs {max} reached; leaving {} queued", spec.id);
+                continue;
+            }
+        }
+        let spec = spec.clone();
+        let grid_name = grid.name.clone();
+        let guards = grid.guards.clone();
+        let policy = grid.policy;
+        let ds = ds.clone();
+        let backend = opts.backend.clone();
+        let id = spec.id.clone();
+        jobs.push(Job::new(id, move |cx| {
+            execute_run(cx, &grid_name, &spec, &v, cfg_hex, guards, policy, &ds, &backend)
+        }));
+    }
+
+    let n_jobs = jobs.len();
+    crate::info!(
+        "sweep",
+        "{}: executing {} of {} runs ({} already done)",
+        grid.name,
+        n_jobs,
+        grid.runs.len(),
+        skipped
+    );
+    let rows = Scheduler::new(opts.workers).run(jobs);
+    let failed = rows.iter().filter(|(_, r)| r.is_err()).count();
+    let resumed = rows
+        .iter()
+        .filter(|(_, r)| {
+            r.as_ref()
+                .ok()
+                .and_then(|j| j.get("resumed_from"))
+                .is_some()
+        })
+        .count();
+    Ok(SweepSummary { executed: n_jobs, skipped, resumed, failed, rows })
+}
+
+/// One registry run, inside a scheduler worker. Returns the summary JSON
+/// recorded in the manifest.
+#[allow(clippy::too_many_arguments)]
+fn execute_run(
+    cx: &WorkerCtx,
+    grid_name: &str,
+    spec: &RunSpec,
+    v: &VariantCfg,
+    cfg_hex: String,
+    guards: Vec<GuardKind>,
+    policy: Policy,
+    ds: &Arc<Dataset>,
+    backend: &ExecBackend,
+) -> Result<Json> {
+    let run_name = format!("sweeps/{grid_name}/runs/{}", spec.id);
+    let dir = registry_root(grid_name).join("runs").join(&spec.id);
+    std::fs::create_dir_all(&dir)?;
+
+    let make = || -> Result<Box<dyn Backend>> {
+        Ok(match backend {
+            ExecBackend::Native => Box::new(NativeBackend::new(v)?) as Box<dyn Backend>,
+            ExecBackend::Pjrt(idx) => {
+                Box::new(PjrtBackend::new(cx.runtime()?, idx, &v.name)?) as Box<dyn Backend>
+            }
+        })
+    };
+
+    // resume point: newest rolling checkpoint, but only if it belongs to
+    // the current config (a config edit restarts from scratch)
+    let ckpts = RollingCheckpoints::new(dir.join("ckpts"), &spec.variant, 3)?;
+    let prior = RunManifest::load(&dir)?;
+    let cfg_matches = prior.as_ref().map(|m| m.cfg == cfg_hex).unwrap_or(false);
+    let resume = if cfg_matches { ckpts.load_latest()? } else { None };
+    if resume.is_none() {
+        // restarting from scratch — config changed, or the previous
+        // session died before its first checkpoint. Drop the stale
+        // trails so metrics/events/monitor state never mix two configs
+        // or duplicate a replayed step range.
+        std::fs::remove_dir_all(dir.join("ckpts")).ok();
+        std::fs::remove_file(dir.join("metrics.jsonl")).ok();
+        std::fs::remove_file(dir.join("events.jsonl")).ok();
+        std::fs::remove_file(dir.join("monitor.json")).ok();
+        std::fs::create_dir_all(dir.join("ckpts"))?;
+    }
+
+    let mut manifest = RunManifest::fresh(&spec.id, &spec.variant, &cfg_hex, spec.run.total_steps);
+    manifest.status = "running".into();
+    manifest.resumed_from = resume.as_ref().map(|(s, _)| *s);
+    manifest.save(&dir)?;
+
+    let mut trainer = match resume {
+        Some((step, state)) => {
+            crate::info!("sweep", "{}: resuming from step {step}", spec.id);
+            Trainer::from_state_backend(make()?, v, spec.run.clone(), state)?
+        }
+        None => Trainer::with_backend(make()?, v, spec.run.clone())?,
+    };
+
+    let mut monitor = Monitor::new(MonitorCfg {
+        guards,
+        policy,
+        ..MonitorCfg::default()
+    })
+    .with_event_log(&run_name)?
+    .with_retention(dir.join("ckpts"), &spec.variant)?
+    .with_state_file(dir.join("monitor.json"));
+    if manifest.resumed_from.is_some() {
+        if let Ok(j) = Json::parse_file(&dir.join("monitor.json")) {
+            monitor.restore_json(&j);
+        }
+    }
+
+    let done_already = trainer.state().step();
+    let remaining = spec.run.total_steps.saturating_sub(done_already);
+    let mut metrics = MetricsLog::append_file(&run_name)?;
+    let res = if remaining > 0 {
+        let mut batches = ds.batches(Split::Train, v.batch, spec.run.seed);
+        Some(trainer.train_observed(&mut batches, remaining, &mut metrics, &mut monitor)?)
+    } else {
+        None
+    };
+
+    // final state -> rolling dir: if the process dies between this
+    // write and the manifest's "done" commit below, the rerun resumes
+    // here instead of replaying the tail of the run
+    let final_host = trainer.sync()?.clone();
+    ckpts.save(final_host.step(), &final_host.data)?;
+    // tmp+rename like every durable write here: a kill mid-write must
+    // not leave a torn monitor.json that a resume silently skips,
+    // resetting the intervention budget
+    let mon_tmp = dir.join(".monitor.json.tmp");
+    std::fs::write(&mon_tmp, monitor.to_json().to_string())?;
+    std::fs::rename(&mon_tmp, dir.join("monitor.json"))?;
+
+    manifest.steps_done = final_host.step();
+    manifest.final_loss = res.as_ref().map(|r| r.final_loss).unwrap_or(final_host.loss() as f64);
+    manifest.diverged = res.as_ref().map(|r| r.diverged).unwrap_or(false);
+    manifest.events = monitor.events_seen;
+    let halted = res.as_ref().map(|r| r.halted).unwrap_or(false);
+    manifest.status = if halted { "failed".into() } else { "done".into() };
+    if halted {
+        manifest.note = "halted by monitor".into();
+    } else if manifest.diverged {
+        // divergence is an observation, not an error (the lr-stability
+        // figures depend on it) — the run is complete as observed
+        manifest.note = "diverged".into();
+    }
+    manifest.save(&dir)?;
+
+    let mut out = vec![
+        ("id", Json::str(spec.id.clone())),
+        ("status", Json::str(manifest.status.clone())),
+        ("steps_done", Json::num(manifest.steps_done as f64)),
+        ("final_loss", Json::num(manifest.final_loss)),
+        ("events", Json::num(manifest.events as f64)),
+    ];
+    if let Some(s) = manifest.resumed_from {
+        out.push(("resumed_from", Json::num(s as f64)));
+    }
+    if halted {
+        anyhow::bail!("halted by monitor after {} events", manifest.events);
+    }
+    Ok(Json::obj(out))
+}
+
+/// Read a sweep's registry back for `repro sweep-report` / tests.
+pub fn report(name: &str) -> Result<Vec<RunManifest>> {
+    let runs_dir = registry_root(name).join("runs");
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(&runs_dir)
+        .with_context(|| format!("no sweep registry at {}", runs_dir.display()))?;
+    for e in entries.flatten() {
+        if let Some(m) = RunManifest::load(&e.path())? {
+            out.push(m);
+        }
+    }
+    out.sort_by(|a, b| a.id.cmp(&b.id));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn z0_cfg() -> (VariantCfg, RunCfg) {
+        let reg = Registry::load().unwrap();
+        let v = reg.variant("fact-z0-spectron").unwrap().clone();
+        (v, RunCfg::default())
+    }
+
+    #[test]
+    fn config_hash_is_stable_and_sensitive() {
+        let (v, run) = z0_cfg();
+        let h = config_hash(&v, &run, 3000);
+        assert_eq!(h, config_hash(&v, &run, 3000), "deterministic");
+        // every knob class moves the hash
+        let mut v2 = v.clone();
+        v2.rank_ratio = 0.5;
+        assert_ne!(h, config_hash(&v2, &run, 3000));
+        let mut r2 = run.clone();
+        r2.base_lr = 0.02;
+        assert_ne!(h, config_hash(&v, &r2, 3000));
+        assert_ne!(h, config_hash(&v, &run, 6000));
+        assert_eq!(hash_hex(h).len(), 16);
+    }
+
+    #[test]
+    fn run_manifest_roundtrips() {
+        let mut m = RunManifest::fresh("run-a", "fact-z0-spectron", "deadbeef00000000", 50);
+        m.status = "done".into();
+        m.steps_done = 50;
+        m.final_loss = 3.25;
+        m.events = 2;
+        m.resumed_from = Some(30);
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let back = RunManifest::from_json(&j).unwrap();
+        assert_eq!(back.id, "run-a");
+        assert_eq!(back.status, "done");
+        assert_eq!(back.steps_done, 50);
+        assert_eq!(back.resumed_from, Some(30));
+        assert_eq!(back.cfg, "deadbeef00000000");
+        assert!((back.final_loss - 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn manifest_save_load_is_atomic_shaped() {
+        let dir = std::env::temp_dir().join(format!("spectron-manifest-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let m = RunManifest::fresh("x", "v", "00", 10);
+        m.save(&dir).unwrap();
+        assert!(!dir.join(".manifest.json.tmp").exists(), "tmp must be renamed away");
+        let back = RunManifest::load(&dir).unwrap().unwrap();
+        assert_eq!(back.status, "pending");
+        assert!(RunManifest::load(&dir.join("missing")).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_toml_cartesian_product() {
+        let p = std::env::temp_dir().join(format!("spectron-grid-{}.toml", std::process::id()));
+        std::fs::write(
+            &p,
+            r#"
+[sweep]
+name = "t"
+docs = 500
+guard = "loss-spike,spectron-bound"
+on_event = "rollback"
+read_interval = 5
+
+[grid]
+variants = ["fact-z0-spectron", "fact-s-sgd"]
+steps = [10, 20]
+lrs = [0.01, 0.02]
+seeds = [0]
+"#,
+        )
+        .unwrap();
+        let g = GridSpec::from_toml(&p).unwrap();
+        assert_eq!(g.name, "t");
+        assert_eq!(g.runs.len(), 8); // 2 variants x 2 steps x 2 lrs x 1 seed
+        assert_eq!(g.guards, vec![GuardKind::LossSpike, GuardKind::SpectronBound]);
+        assert!(matches!(g.policy, Policy::Rollback { .. }));
+        assert_eq!(g.runs[0].run.read_interval, 5);
+        // ids are unique and filesystem-safe
+        let mut ids: Vec<&str> = g.runs.iter().map(|r| r.id.as_str()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 8);
+        assert!(ids.iter().all(|i| !i.contains('/')));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn smoke_grid_is_tiny_and_valid() {
+        let g = GridSpec::smoke();
+        let reg = Registry::load().unwrap();
+        for r in &g.runs {
+            assert!(reg.variant(&r.variant).is_ok());
+            assert!(r.run.total_steps <= 10, "smoke must stay fast");
+        }
+        assert_eq!(g.runs.len(), 2);
+    }
+}

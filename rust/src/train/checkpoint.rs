@@ -85,6 +85,94 @@ pub fn peek_variant(path: &Path) -> Result<String> {
     read_header(&mut r)
 }
 
+/// Rolling retention: a directory of `step-<N>.ckpt` files, pruned to
+/// the newest `keep`. The stability monitor snapshots healthy states
+/// here so `rollback` has somewhere to go, and a crashed sweep run
+/// resumes from [`RollingCheckpoints::load_latest`]
+/// (DESIGN.md §Monitoring and sweeps). Writes are tmp+rename so a crash
+/// mid-save can never replace a good checkpoint with a torn one.
+pub struct RollingCheckpoints {
+    dir: std::path::PathBuf,
+    variant: String,
+    keep: usize,
+}
+
+impl RollingCheckpoints {
+    pub fn new(dir: impl Into<std::path::PathBuf>, variant: &str, keep: usize) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).context("mkdir checkpoint dir")?;
+        Ok(RollingCheckpoints { dir, variant: variant.to_string(), keep: keep.max(1) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Save `state` as `step-<step>.ckpt` and prune beyond the retention
+    /// window. Re-saving the same step overwrites (idempotent resume).
+    pub fn save(&self, step: usize, state: &[f32]) -> Result<std::path::PathBuf> {
+        let path = self.dir.join(format!("step-{step}.ckpt"));
+        let tmp = self.dir.join(format!(".step-{step}.ckpt.tmp"));
+        save(&tmp, &self.variant, state)?;
+        std::fs::rename(&tmp, &path).context("commit checkpoint")?;
+        // prune oldest files beyond the window
+        let mut all = self.list();
+        while all.len() > self.keep {
+            let (_, oldest) = all.remove(0);
+            std::fs::remove_file(oldest).ok();
+        }
+        Ok(path)
+    }
+
+    /// `(step, path)` pairs, oldest first.
+    fn list(&self) -> Vec<(usize, std::path::PathBuf)> {
+        let mut out = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return out };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if let Some(step) = name
+                .strip_prefix("step-")
+                .and_then(|s| s.strip_suffix(".ckpt"))
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                out.push((step, e.path()));
+            }
+        }
+        out.sort_by_key(|(s, _)| *s);
+        out
+    }
+
+    pub fn latest(&self) -> Option<(usize, std::path::PathBuf)> {
+        self.list().pop()
+    }
+
+    /// Load the newest retained checkpoint, skipping over corrupt files
+    /// (a crash can tear at most the file being written, but belt and
+    /// braces: the crc already detects torn data, so fall back to the
+    /// next-newest rather than wedging the resume).
+    pub fn load_latest(&self) -> Result<Option<(usize, Vec<f32>)>> {
+        let mut all = self.list();
+        while let Some((step, path)) = all.pop() {
+            match load(&path) {
+                Ok((v, state)) if v == self.variant => return Ok(Some((step, state))),
+                Ok((v, _)) => {
+                    return Err(anyhow!(
+                        "checkpoint {} is for variant '{v}', expected '{}'",
+                        path.display(),
+                        self.variant
+                    ))
+                }
+                Err(e) => {
+                    crate::info!("ckpt", "skipping corrupt {}: {e:#}", path.display());
+                    continue;
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
 /// CRC-64/XZ, bitwise (checkpoints are not huge; simplicity wins).
 struct Crc64 {
     crc: u64,
@@ -146,6 +234,33 @@ mod tests {
         assert_eq!(peek_variant(&p).unwrap(), "fact-s-spectron");
         std::fs::remove_file(&p).ok();
         assert!(peek_variant(&p).is_err());
+    }
+
+    #[test]
+    fn rolling_retention_prunes_and_resumes() {
+        let dir = std::env::temp_dir().join(format!("spectron-roll-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let roll = RollingCheckpoints::new(&dir, "v", 3).unwrap();
+        assert!(roll.latest().is_none());
+        assert!(roll.load_latest().unwrap().is_none());
+        for step in [5usize, 10, 15, 20, 25] {
+            roll.save(step, &[step as f32; 16]).unwrap();
+        }
+        // only the newest 3 remain; latest is step 25
+        assert_eq!(roll.list().len(), 3);
+        assert_eq!(roll.list()[0].0, 15);
+        let (step, state) = roll.load_latest().unwrap().unwrap();
+        assert_eq!(step, 25);
+        assert_eq!(state, vec![25.0f32; 16]);
+        // corrupt the newest: load falls back to the next-newest
+        std::fs::write(dir.join("step-25.ckpt"), b"torn").unwrap();
+        let (step, state) = roll.load_latest().unwrap().unwrap();
+        assert_eq!(step, 20);
+        assert_eq!(state, vec![20.0f32; 16]);
+        // wrong variant is a hard error, not a silent resume
+        let other = RollingCheckpoints::new(&dir, "other", 3).unwrap();
+        assert!(other.load_latest().is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -58,11 +58,27 @@ impl MetricsLog {
         }
     }
 
-    /// Tee to `results/<run_name>/metrics.jsonl`.
+    /// Tee to `results/<run_name>/metrics.jsonl` (truncating).
     pub fn with_file(run_name: &str) -> Result<MetricsLog> {
+        Self::file_sink(run_name, false)
+    }
+
+    /// Like [`MetricsLog::with_file`] but appending — a resumed sweep run
+    /// extends its own trail instead of erasing the pre-crash history.
+    pub fn append_file(run_name: &str) -> Result<MetricsLog> {
+        Self::file_sink(run_name, true)
+    }
+
+    fn file_sink(run_name: &str, append: bool) -> Result<MetricsLog> {
         let dir: PathBuf = crate::repo_path("results").join(run_name);
         std::fs::create_dir_all(&dir).context("mkdir results")?;
-        let f = std::fs::File::create(dir.join("metrics.jsonl"))?;
+        let path = dir.join("metrics.jsonl");
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(append)
+            .write(true)
+            .truncate(!append)
+            .open(path)?;
         let mut m = Self::in_memory(run_name);
         m.sink = Some(std::io::BufWriter::new(f));
         Ok(m)
@@ -83,6 +99,15 @@ impl MetricsLog {
         if let Some(sink) = &mut self.sink {
             let _ = writeln!(sink, "{row}");
         }
+    }
+
+    /// Tee an event-class row (spike detections, interventions, run
+    /// transitions) and flush immediately: a crash right after a spike
+    /// must still leave the forensics trail on disk
+    /// (DESIGN.md §Monitoring and sweeps).
+    pub fn log_event(&mut self, row: &Json) {
+        self.log_json(row);
+        self.flush();
     }
 
     pub fn flush(&mut self) {
@@ -107,6 +132,14 @@ impl MetricsLog {
                 (s, vals / (i - lo + 1) as f64)
             })
             .collect()
+    }
+}
+
+/// Dropping the log flushes the sink: a loop that errors out (or a run
+/// torn down mid-panic-unwind) still lands its buffered records.
+impl Drop for MetricsLog {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -152,6 +185,32 @@ mod tests {
         let mut m = MetricsLog::in_memory("t");
         m.log_json(&Json::obj(vec![("op", Json::str("generate"))]));
         assert!(m.records.is_empty() && m.losses.is_empty());
+    }
+
+    #[test]
+    fn sink_flushes_on_event_and_on_drop() {
+        let name = format!("metrics-test-{}", std::process::id());
+        let dir = crate::repo_path("results").join(&name);
+        let path = dir.join("metrics.jsonl");
+        {
+            let mut m = MetricsLog::with_file(&name).unwrap();
+            m.push(rec(1, 3.0), vec![(0, 3.0)]);
+            m.log_event(&Json::obj(vec![("event", Json::str("spike"))]));
+            // the event flushed everything buffered before it
+            let on_disk = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(on_disk.lines().count(), 2, "event rows must hit disk immediately");
+            m.push(rec(2, 2.5), vec![(1, 2.5)]);
+            // dropped without an explicit flush()
+        }
+        let on_disk = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(on_disk.lines().count(), 3, "drop must flush the tail");
+        // append mode extends, truncate mode restarts
+        {
+            let mut m = MetricsLog::append_file(&name).unwrap();
+            m.push(rec(3, 2.0), vec![(2, 2.0)]);
+        }
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 4);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -17,6 +17,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{RunCfg, VariantCfg};
 use crate::data::dataset::BatchSource;
+use crate::monitor::{Directive, NullObserver, StepObserver};
 use crate::runtime::backend::{Backend, StateBuf};
 use crate::runtime::state as slots;
 use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime, StateHost};
@@ -38,6 +39,9 @@ pub struct TrainResult {
     pub records: Vec<Record>,
     pub final_loss: f64,
     pub diverged: bool,
+    /// a [`StepObserver`] directive (or the re-run budget) stopped the
+    /// run before it reached its step target
+    pub halted: bool,
     pub wall_s: f64,
     pub steps_done: usize,
     pub tokens_seen: f64,
@@ -170,40 +174,107 @@ impl Trainer {
         n_steps: usize,
         metrics: &mut MetricsLog,
     ) -> Result<TrainResult> {
+        self.train_observed(batches, n_steps, metrics, &mut NullObserver)
+    }
+
+    /// [`Trainer::train_with`] plus a [`StepObserver`] consulted after
+    /// every state readback (DESIGN.md §Monitoring and sweeps). The
+    /// observer sees each fresh [`Record`] and can direct the loop:
+    /// `Halt` stops it (`halted = true`), `CutLr` rewrites the header
+    /// `base_lr` and re-uploads, `Rollback` restores a healthy state and
+    /// re-runs the window on fresh batches (the offending window is
+    /// skipped because the batch stream does not rewind). With the
+    /// [`NullObserver`] the loop is behaviorally identical to the
+    /// unmonitored path.
+    pub fn train_observed<B: BatchSource>(
+        &mut self,
+        batches: &mut B,
+        n_steps: usize,
+        metrics: &mut MetricsLog,
+        observer: &mut dyn StepObserver,
+    ) -> Result<TrainResult> {
         let read_every = self.run.read_interval.clamp(1, slots::RING);
         let t0 = Instant::now();
         let mut diverged = false;
+        let mut halted = false;
         let mut steps_done = 0;
         let mut all_losses: Vec<(usize, f32)> = Vec::new();
         let mut all_records: Vec<Record> = Vec::new();
 
-        for k in 0..n_steps {
+        let start_step = self.last_host.step();
+        let target = start_step + n_steps;
+        // rollbacks re-run their window, so executions can exceed
+        // n_steps; bound them so repeated spikes cannot loop forever
+        // (the monitor's own intervention cap normally halts first)
+        let max_exec = n_steps.saturating_mul(4).max(n_steps.saturating_add(64));
+        let mut cur = start_step;
+        while cur < target {
+            if steps_done >= max_exec {
+                crate::info!("train", "re-run budget exhausted ({max_exec} steps executed)");
+                // refresh the host mirror so the result (and any
+                // checkpoint a caller takes) reflects the steps that
+                // actually ran since the last readback
+                self.sync()?;
+                self.last_ring_step = self.last_host.step();
+                halted = true;
+                break;
+            }
             let batch = batches.next_batch_ref();
             let out = self.backend.step(&self.state_buf, batch)?;
             self.state_buf = out;
-            steps_done = k + 1;
+            steps_done += 1;
+            cur += 1;
 
-            let is_last = k + 1 == n_steps;
-            if (k + 1) % read_every == 0 || is_last {
+            if cur % read_every == 0 || cur == target {
                 self.sync()?;
                 let host = &self.last_host;
                 let ring = host.ring_losses(self.last_ring_step);
                 self.last_ring_step = host.step();
-                let rec = Record {
-                    step: host.step(),
-                    loss: host.loss() as f64,
-                    lr: host.lr() as f64,
-                    grad_norm: host.grad_norm() as f64,
-                    tokens_seen: host.tokens_seen(),
-                    telemetry: host.telemetry(),
-                    wall_s: t0.elapsed().as_secs_f64(),
-                };
+                let rec = crate::monitor::record_from_host(host, t0.elapsed().as_secs_f64());
                 all_losses.extend(ring.iter().copied());
                 all_records.push(rec.clone());
+                let directive = observer.observe(host, &rec, &ring);
                 metrics.push(rec, ring);
-                if !host.is_finite() || host.loss() > 30.0 {
-                    diverged = true;
-                    break;
+                match directive {
+                    Directive::Continue => {
+                        if !host.is_finite() || host.loss() > 30.0 {
+                            diverged = true;
+                            break;
+                        }
+                    }
+                    Directive::Halt { reason } => {
+                        crate::info!("train", "observer halt: {reason}");
+                        halted = true;
+                        break;
+                    }
+                    Directive::CutLr { factor } => {
+                        observer.applied(&Directive::CutLr { factor });
+                        let mut data = self.last_host.data.clone();
+                        data[slots::BASE_LR] *= factor as f32;
+                        self.state_buf = self.backend.upload_state(&data)?;
+                        self.last_host = StateHost::new(data, &self.manifest)?;
+                    }
+                    Directive::Rollback { to_step, state, skip_batches } => {
+                        crate::info!(
+                            "train",
+                            "rolling back {} -> {} (skip {} batches)",
+                            cur,
+                            to_step,
+                            skip_batches
+                        );
+                        self.state_buf = self.backend.upload_state(&state)?;
+                        self.last_host = StateHost::new(state, &self.manifest)?;
+                        self.last_ring_step = self.last_host.step();
+                        cur = self.last_host.step();
+                        for _ in 0..skip_batches {
+                            let _ = batches.next_batch_ref();
+                        }
+                        observer.applied(&Directive::Rollback {
+                            to_step,
+                            state: Vec::new(), // notification only
+                            skip_batches,
+                        });
+                    }
                 }
             }
         }
@@ -215,6 +286,7 @@ impl Trainer {
             records: all_records,
             final_loss,
             diverged,
+            halted,
             wall_s: wall,
             steps_done,
             tokens_seen: self.last_host.tokens_seen(),

@@ -61,6 +61,12 @@ impl Json {
             _ => None,
         }
     }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -258,7 +264,15 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity tokens; emitting them
+                    // would wedge our own parser on re-read (a crashed
+                    // sweep manifest or a diverged run's metrics row
+                    // must stay loadable). `null` is the lossless-enough
+                    // stand-in: accessors return None and callers keep
+                    // their defaults.
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -309,6 +323,21 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null_and_reparse() {
+        let j = Json::obj(vec![
+            ("nan", Json::num(f64::NAN)),
+            ("inf", Json::num(f64::INFINITY)),
+            ("ninf", Json::num(f64::NEG_INFINITY)),
+            ("x", Json::num(1.5)),
+        ]);
+        let back = Json::parse(&j.to_string()).expect("non-finite rows must stay parseable");
+        assert_eq!(back.get("nan"), Some(&Json::Null));
+        assert_eq!(back.get("inf"), Some(&Json::Null));
+        assert_eq!(back.get("ninf"), Some(&Json::Null));
+        assert_eq!(back.get("x").unwrap().as_f64(), Some(1.5));
+    }
 
     #[test]
     fn roundtrip_nested() {

@@ -22,11 +22,14 @@ use spectron::data::dataset::{Dataset, Split};
 use spectron::data::prefetch::Prefetcher;
 use spectron::eval::{downstream, perplexity, Evaluator};
 use spectron::linalg;
+use spectron::monitor::{
+    Directive, GuardKind, Monitor, MonitorCfg, Policy, Signal, SpikeInjector, StepObserver,
+};
 use spectron::runtime::backend::{Backend, BackendKind};
 use spectron::runtime::state as slots;
 use spectron::runtime::{layout, ArtifactIndex, NativeBackend, PjrtBackend, Runtime, StateHost};
 use spectron::train::schedule::Schedule;
-use spectron::train::{checkpoint, Trainer};
+use spectron::train::{checkpoint, MetricsLog, Record, Trainer};
 use spectron::util::rng::Pcg64;
 
 const VARIANT: &str = "fact-z0-spectron";
@@ -382,6 +385,208 @@ fn parallel_dp_matches_sequential() {
             assert_eq!(seq.state().unwrap().step(), 3);
         }
     }
+}
+
+/// A log-policy monitor observes without perturbing: monitored training
+/// is bit-identical to unmonitored training — the observer rides the
+/// readbacks the loop already performs
+/// (DESIGN.md §Monitoring and sweeps).
+#[test]
+fn monitored_training_is_bit_identical_when_logging() {
+    let reg = Registry::load().unwrap();
+    let v = z0(&reg);
+    let ds = tiny_dataset(v.model.vocab);
+    for kind in backends() {
+        let mut plain =
+            Trainer::with_backend(make_backend(kind, v), v, run_cfg(14)).unwrap();
+        let mut b1 = ds.batches(Split::Train, v.batch, 2);
+        plain.train(&mut b1, 14).unwrap();
+
+        let mut watched =
+            Trainer::with_backend(make_backend(kind, v), v, run_cfg(14)).unwrap();
+        let mut b2 = ds.batches(Split::Train, v.batch, 2);
+        let mut monitor = Monitor::new(MonitorCfg {
+            guards: vec![
+                GuardKind::LossSpike,
+                GuardKind::SpectronBound,
+                GuardKind::RhoCollapse,
+                GuardKind::SigmaCollapse,
+            ],
+            policy: Policy::Log,
+            ..MonitorCfg::default()
+        });
+        let mut metrics = MetricsLog::in_memory("watched");
+        watched.train_observed(&mut b2, 14, &mut metrics, &mut monitor).unwrap();
+
+        assert_eq!(monitor.events_seen, 0, "{kind}: healthy run must be event-free");
+        let a = plain.state_vec().unwrap();
+        let b = watched.state_vec().unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{kind}: slot {i}");
+        }
+    }
+}
+
+/// Records the rollback directive the monitor issues so the test can
+/// compare its payload against an independent reference trajectory.
+struct RollbackSpy<'m> {
+    inner: &'m mut Monitor,
+    rollback: Option<(usize, Vec<f32>)>,
+}
+
+impl StepObserver for RollbackSpy<'_> {
+    fn observe(&mut self, host: &StateHost, rec: &Record, ring: &[(usize, f32)]) -> Directive {
+        let d = self.inner.observe(host, rec, ring);
+        if let Directive::Rollback { to_step, state, .. } = &d {
+            self.rollback = Some((*to_step, state.clone()));
+        }
+        d
+    }
+}
+
+/// The end-to-end stability scenario on the artifact-free native
+/// backend: a non-Spectron variant with an injected gradient spike
+/// triggers detection, rolls back to the last healthy checkpoint
+/// bit-for-bit, resumes, and completes — while the same seed under
+/// Spectron (its own spectral guards on) completes with zero events.
+#[test]
+fn stability_scenario_spike_rollback_and_clean_spectron() {
+    let reg = Registry::load().unwrap();
+    // the baseline: z0 architecture trained with plain momentum SGD (the
+    // native backend builds any VariantCfg, registry entry or not)
+    let mut sgd = reg.variant("fact-z0-spectron").unwrap().clone();
+    sgd.name = "fact-z0-sgd-injected".into();
+    sgd.optimizer = "sgd".into();
+    let ds = tiny_dataset(sgd.model.vocab);
+    let run = RunCfg { read_interval: 2, ..run_cfg(20) };
+
+    // reference trajectory, no injection: pins the pre-spike state
+    let mut reference =
+        Trainer::with_backend(Box::new(NativeBackend::new(&sgd).unwrap()), &sgd, run.clone())
+            .unwrap();
+    let mut bref = ds.batches(Split::Train, sgd.batch, 0);
+    reference.train(&mut bref, 12).unwrap();
+    let pre_spike = reference.state_vec().unwrap();
+    assert_eq!(reference.state().step(), 12);
+
+    // injected run: gradient x1e4 on step 13 wrecks the params; the
+    // huge loss lands in the ring at the step-14 readback
+    let inner = Box::new(NativeBackend::new(&sgd).unwrap());
+    let injector = Box::new(SpikeInjector::new(inner, 13, 1e4).unwrap());
+    let mut trainer = Trainer::with_backend(injector, &sgd, run.clone()).unwrap();
+    let mut monitor = Monitor::new(MonitorCfg {
+        guards: vec![GuardKind::LossSpike],
+        policy: Policy::Rollback { skip_batches: 0 },
+        cooldown_obs: 2,
+        max_interventions: 3,
+        keep_ckpts: 2,
+    });
+    let mut spy = RollbackSpy { inner: &mut monitor, rollback: None };
+    let mut batches = ds.batches(Split::Train, sgd.batch, 0);
+    let mut metrics = MetricsLog::in_memory("scenario");
+    let res = trainer.train_observed(&mut batches, 20, &mut metrics, &mut spy).unwrap();
+
+    // detection fired and the rollback payload IS the pre-spike state,
+    // bit for bit
+    let (to_step, rolled) = spy.rollback.expect("spike must trigger a rollback");
+    assert_eq!(to_step, 12, "rollback targets the last healthy readback");
+    assert_eq!(rolled.len(), pre_spike.len());
+    for (i, (a, b)) in rolled.iter().zip(&pre_spike).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "rollback state differs at slot {i}");
+    }
+    assert!(monitor.events_seen >= 1);
+    assert_eq!(monitor.interventions, 1);
+
+    // and the run then completed to its target on fresh batches
+    assert!(!res.halted && !res.diverged, "run must finish after the intervention");
+    assert_eq!(trainer.state().step(), 20);
+    assert!(
+        res.final_loss.is_finite() && res.final_loss < 8.0,
+        "post-rollback loss recovered: {}",
+        res.final_loss
+    );
+    assert!(res.steps_done > 20, "the rolled-back window re-ran");
+
+    // the same seed under Spectron, full spectral guard set: zero events
+    let spectron = reg.variant("fact-z0-spectron").unwrap();
+    let mut clean = Trainer::with_backend(
+        Box::new(NativeBackend::new(spectron).unwrap()),
+        spectron,
+        run.clone(),
+    )
+    .unwrap();
+    let mut cmon = Monitor::new(MonitorCfg {
+        guards: vec![
+            GuardKind::LossSpike,
+            GuardKind::SpectronBound,
+            GuardKind::RhoCollapse,
+            GuardKind::SigmaCollapse,
+        ],
+        policy: Policy::Rollback { skip_batches: 0 },
+        ..MonitorCfg::default()
+    });
+    let mut bclean = ds.batches(Split::Train, spectron.batch, 0);
+    let mut cmetrics = MetricsLog::in_memory("clean");
+    let cres = clean.train_observed(&mut bclean, 20, &mut cmetrics, &mut cmon).unwrap();
+    assert_eq!(cmon.events_seen, 0, "spectron must respect its own bound");
+    assert_eq!(cmon.interventions, 0);
+    assert!(!cres.halted && !cres.diverged);
+    assert_eq!(clean.state().step(), 20);
+    assert_eq!(cres.steps_done, 20, "no re-runs on the clean trajectory");
+}
+
+/// The observer hook is honored by the coordinator loops too: a halt
+/// directive stops an accumulation run, and the DP coordinator applies
+/// an lr cut to the replicated state every worker sees next step.
+#[test]
+fn coordinator_loops_honor_observer() {
+    let reg = Registry::load().unwrap();
+    let v = z0(&reg);
+    let ds = tiny_dataset(v.model.vocab);
+
+    // halt-on-first-observation observer
+    struct HaltNow;
+    impl StepObserver for HaltNow {
+        fn observe(&mut self, _h: &StateHost, _r: &Record, _ring: &[(usize, f32)]) -> Directive {
+            Directive::Halt { reason: "test".into() }
+        }
+    }
+    let mut acc =
+        GradAccumulator::with_backend(Box::new(NativeBackend::new(v).unwrap()), run_cfg(10))
+            .unwrap();
+    let mut batches = ds.batches(Split::Train, v.batch, 0);
+    let (loss, sig) = acc.step_observed(&mut batches, 2, &mut HaltNow).unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(sig, Signal::Halted);
+
+    // lr-cut lands in the replicated state's header
+    struct CutOnce {
+        done: bool,
+    }
+    impl StepObserver for CutOnce {
+        fn observe(&mut self, _h: &StateHost, _r: &Record, _ring: &[(usize, f32)]) -> Directive {
+            if self.done {
+                Directive::Continue
+            } else {
+                self.done = true;
+                Directive::CutLr { factor: 0.5 }
+            }
+        }
+    }
+    let mut dp = DataParallelSim::native(v, run_cfg(10), &ds, 2, false).unwrap();
+    let base_lr = dp.state().unwrap().slot(slots::BASE_LR);
+    let mut cut = CutOnce { done: false };
+    let (_stats, sig) = dp.step_observed(&mut cut, 0.0).unwrap();
+    assert_eq!(sig, Signal::Continue);
+    let after = dp.state().unwrap().slot(slots::BASE_LR);
+    assert!(
+        (after - base_lr * 0.5).abs() < 1e-12,
+        "lr cut must halve the replicated base lr: {base_lr} -> {after}"
+    );
+    // and the sim keeps stepping normally afterwards
+    let (_stats, sig) = dp.step_observed(&mut cut, 0.0).unwrap();
+    assert_eq!(sig, Signal::Continue);
+    assert_eq!(dp.state().unwrap().step(), 2);
 }
 
 /// Divergence is observed, not fatal: absurd lr on the spectron variant.

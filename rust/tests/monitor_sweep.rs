@@ -1,0 +1,184 @@
+//! Cross-layer tests for the crash-safe sweep orchestrator
+//! (DESIGN.md §Monitoring and sweeps): registry skip/resume semantics,
+//! config-hash invalidation, and the durable per-run trails — all on the
+//! artifact-free native backend, so the suite runs in any container.
+
+use std::sync::Arc;
+
+use spectron::config::{Registry, RunCfg};
+use spectron::data::bpe::Bpe;
+use spectron::data::corpus::{Corpus, CorpusCfg};
+use spectron::data::dataset::{Dataset, Split};
+use spectron::monitor::sweep::{
+    self, config_hash, hash_hex, ExecBackend, GridSpec, RunManifest, RunSpec, SweepOpts,
+};
+use spectron::monitor::{GuardKind, Policy};
+use spectron::runtime::NativeBackend;
+use spectron::train::checkpoint::RollingCheckpoints;
+use spectron::train::Trainer;
+
+const VARIANT: &str = "fact-z0-spectron";
+
+fn tiny_dataset(vocab: usize) -> Arc<Dataset> {
+    let corpus = Corpus::new(CorpusCfg::default());
+    let sample = corpus.text_range(1, 120);
+    let bpe = Bpe::train(&sample, vocab);
+    Arc::new(Dataset::build_with(&corpus, &bpe, 500, 128))
+}
+
+fn run_cfg(steps: usize) -> RunCfg {
+    RunCfg {
+        total_steps: steps,
+        base_lr: 0.01,
+        weight_decay: 0.01,
+        warmup_frac: 0.05,
+        seed: 0,
+        read_interval: 2,
+    }
+}
+
+fn grid(name: &str, steps: &[usize]) -> GridSpec {
+    GridSpec {
+        name: name.to_string(),
+        docs: 400,
+        guards: vec![GuardKind::LossSpike],
+        policy: Policy::Log,
+        runs: steps
+            .iter()
+            .map(|&s| RunSpec {
+                id: format!("z0-s{s}"),
+                variant: VARIANT.into(),
+                run: run_cfg(s),
+            })
+            .collect(),
+    }
+}
+
+fn native_opts(workers: usize, max_runs: Option<usize>) -> SweepOpts {
+    SweepOpts { workers, max_runs, backend: ExecBackend::Native }
+}
+
+fn cleanup(name: &str) {
+    std::fs::remove_dir_all(sweep::registry_root(name)).ok();
+}
+
+/// The headline property: kill the sweep mid-grid (simulated by
+/// `max_runs`), rerun, and finished runs are skipped — never retrained —
+/// while the registry keeps a complete durable trail per run.
+#[test]
+fn sweep_is_crash_safe_and_incremental() {
+    let name = format!("itest-incr-{}", std::process::id());
+    cleanup(&name);
+    let reg = Registry::load().unwrap();
+    let ds = tiny_dataset(reg.variant(VARIANT).unwrap().model.vocab);
+    let g = grid(&name, &[4, 6]);
+
+    // session 1 "crashes" after one run
+    let s1 = sweep::run_sweep(&g, &reg, &ds, &native_opts(1, Some(1))).unwrap();
+    assert_eq!((s1.executed, s1.skipped, s1.failed), (1, 0, 0));
+
+    // session 2 finishes only the unfinished run
+    let s2 = sweep::run_sweep(&g, &reg, &ds, &native_opts(2, None)).unwrap();
+    assert_eq!((s2.executed, s2.skipped, s2.failed), (1, 1, 0));
+
+    // session 3 is a no-op: everything done, nothing retrains
+    let s3 = sweep::run_sweep(&g, &reg, &ds, &native_opts(2, None)).unwrap();
+    assert_eq!((s3.executed, s3.skipped, s3.failed), (0, 2, 0));
+
+    let runs = sweep::report(&name).unwrap();
+    assert_eq!(runs.len(), 2);
+    for m in &runs {
+        assert_eq!(m.status, "done", "{}", m.id);
+        assert_eq!(m.steps_done, m.total_steps, "{}", m.id);
+        assert!(m.final_loss.is_finite(), "{}", m.id);
+        let dir = sweep::registry_root(&name).join("runs").join(&m.id);
+        assert!(dir.join("manifest.json").exists());
+        assert!(dir.join("metrics.jsonl").exists(), "{}: metrics trail", m.id);
+        assert!(dir.join("monitor.json").exists(), "{}: monitor state", m.id);
+        assert!(
+            std::fs::read_dir(dir.join("ckpts")).unwrap().count() > 0,
+            "{}: rolling checkpoints",
+            m.id
+        );
+    }
+    cleanup(&name);
+}
+
+/// A run left `running` with a rolling checkpoint (what a killed process
+/// leaves behind) resumes from that checkpoint instead of restarting,
+/// and finishes with the correct step count.
+#[test]
+fn interrupted_run_resumes_from_its_checkpoint() {
+    let name = format!("itest-resume-{}", std::process::id());
+    cleanup(&name);
+    let reg = Registry::load().unwrap();
+    let v = reg.variant(VARIANT).unwrap().clone();
+    let ds = tiny_dataset(v.model.vocab);
+    let g = grid(&name, &[6]);
+    let spec = &g.runs[0];
+    let dir = sweep::registry_root(&name).join("runs").join(&spec.id);
+
+    // fabricate the crash site: 3 steps trained, checkpointed, manifest
+    // still "running" under the current config hash
+    let mut trainer =
+        Trainer::with_backend(Box::new(NativeBackend::new(&v).unwrap()), &v, spec.run.clone())
+            .unwrap();
+    let mut batches = ds.batches(Split::Train, v.batch, spec.run.seed);
+    trainer.train(&mut batches, 3).unwrap();
+    let state = trainer.state_vec().unwrap();
+    RollingCheckpoints::new(dir.join("ckpts"), VARIANT, 3)
+        .unwrap()
+        .save(3, &state)
+        .unwrap();
+    let hash = hash_hex(config_hash(&v, &spec.run, g.docs));
+    let mut m = RunManifest::fresh(&spec.id, VARIANT, &hash, spec.run.total_steps);
+    m.status = "running".into();
+    m.steps_done = 3;
+    m.save(&dir).unwrap();
+
+    let s = sweep::run_sweep(&g, &reg, &ds, &native_opts(1, None)).unwrap();
+    assert_eq!((s.executed, s.failed), (1, 0));
+    assert_eq!(s.resumed, 1, "the run must resume, not restart");
+
+    let m = RunManifest::load(&dir).unwrap().unwrap();
+    assert_eq!(m.status, "done");
+    assert_eq!(m.steps_done, 6);
+    assert_eq!(m.resumed_from, Some(3));
+    cleanup(&name);
+}
+
+/// Editing a run's config (here: weight decay, which is not part of the
+/// run id) changes its hash: the registry retrains instead of silently
+/// reusing the stale result, and the manifest re-keys to the new hash.
+#[test]
+fn config_change_invalidates_finished_run() {
+    let name = format!("itest-inval-{}", std::process::id());
+    cleanup(&name);
+    let reg = Registry::load().unwrap();
+    let ds = tiny_dataset(reg.variant(VARIANT).unwrap().model.vocab);
+
+    let g1 = grid(&name, &[4]);
+    let s1 = sweep::run_sweep(&g1, &reg, &ds, &native_opts(1, None)).unwrap();
+    assert_eq!((s1.executed, s1.skipped), (1, 0));
+
+    // same id, different config
+    let mut g2 = grid(&name, &[4]);
+    g2.runs[0].run.weight_decay = 0.05;
+    let s2 = sweep::run_sweep(&g2, &reg, &ds, &native_opts(1, None)).unwrap();
+    assert_eq!(
+        (s2.executed, s2.skipped),
+        (1, 0),
+        "a config edit must retrain, not reuse"
+    );
+
+    let dir = sweep::registry_root(&name).join("runs").join(&g2.runs[0].id);
+    let m = RunManifest::load(&dir).unwrap().unwrap();
+    let v = reg.variant(VARIANT).unwrap();
+    assert_eq!(m.cfg, hash_hex(config_hash(v, &g2.runs[0].run, g2.docs)));
+    assert_eq!(m.status, "done");
+
+    // and an unchanged rerun of the edited grid is again a no-op
+    let s3 = sweep::run_sweep(&g2, &reg, &ds, &native_opts(1, None)).unwrap();
+    assert_eq!((s3.executed, s3.skipped), (0, 1));
+    cleanup(&name);
+}

@@ -5,6 +5,7 @@
 
 use spectron::coordinator::parallel::tree_allreduce_mean;
 use spectron::linalg::{self, Mat};
+use spectron::monitor::detect::LossSpikeDetector;
 use spectron::runtime::native::kernels::{power_iter, K_NS};
 use spectron::runtime::native::optim::spectron_pair_update;
 use spectron::data::bpe::Bpe;
@@ -99,6 +100,37 @@ fn prop_dataset_shards_partition_windows() {
                 seen.iter().filter(|&&c| c > 1).count()
             ))
         }
+    });
+}
+
+/// The loss-spike detector's core soundness property: a monotone
+/// non-increasing loss curve — any mix of plateaus, slow decay, and
+/// cliff drops, at any scale — NEVER raises a spike, because the
+/// z-score only fires above the trailing window mean
+/// (DESIGN.md §Monitoring and sweeps).
+#[test]
+fn prop_loss_spike_never_fires_on_monotone_nonincreasing() {
+    check("loss-spike monotone", |rng| {
+        let mut d = LossSpikeDetector::default();
+        let n = usize_in(rng, 1, 300);
+        let mut loss = f64_in(rng, 1e-3, 20.0);
+        for step in 0..n {
+            // plateaus (no change), gentle decay, and occasional cliffs
+            let dec = match rng.below(4) {
+                0 => 0.0,
+                1 => f64_in(rng, 0.0, 0.01) * loss,
+                2 => f64_in(rng, 0.0, 0.1) * loss,
+                _ => f64_in(rng, 0.0, 0.9) * loss,
+            };
+            loss = (loss - dec).max(0.0);
+            if let Some(det) = d.push_loss(step, loss) {
+                return Err(format!(
+                    "fired at step {step} on a non-increasing curve: {}",
+                    det.detail
+                ));
+            }
+        }
+        Ok(())
     });
 }
 
