@@ -2,7 +2,7 @@
 # needs Python; everything after runs from the self-contained `repro`
 # binary (DESIGN.md).
 
-.PHONY: artifacts build test ci docs bench serve-bench sweep-smoke clean
+.PHONY: artifacts build test ci docs bench bench-native serve-bench sweep-smoke clean
 
 # Lower every variant's programs to HLO text + manifests.
 artifacts:
@@ -44,9 +44,16 @@ docs:
 bench:
 	BENCH_JSON=BENCH_step_latency.json cargo bench --bench step_latency
 	BENCH_JSON=BENCH_data_pipeline.json cargo bench --bench data_pipeline
+	BENCH_JSON=BENCH_native_math.json cargo bench --bench native_math
 	cargo bench --bench runtime_io
 	cargo bench --bench scaling_fits
 	cargo bench --bench serve_latency
+
+# Tensor-core microbenches alone (DESIGN.md §Native tensor core): matmul /
+# Newton-Schulz / power-iter across threads and alloc-reuse. No artifacts
+# needed; CI smokes it with BENCH_FAST=1.
+bench-native:
+	BENCH_JSON=BENCH_native_math.json cargo bench --bench native_math
 
 serve-bench:
 	cargo run --release --example serve_bench

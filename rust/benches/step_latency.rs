@@ -48,6 +48,22 @@ fn main() {
         }
     }
 
+    // tensor-core scaling: the same native step at explicit thread
+    // budgets (bit-identical states — the rows measure wall time only;
+    // DESIGN.md §Native tensor core)
+    header("native tensor-core train-step scaling (fact-s-spectron)");
+    for threads in [1usize, 2, 4] {
+        let v = reg.variant("fact-s-spectron").unwrap();
+        let run = RunCfg { total_steps: 1000, read_interval: 64, ..RunCfg::default() };
+        let mut trainer = Trainer::native_with_threads(v, run, threads).unwrap();
+        let mut batches = ds.batches(Split::Train, v.batch, 0);
+        trainer.train(&mut batches, 1).unwrap();
+        Bench::new(&format!("native step [threads={threads}]"))
+            .warmup(1)
+            .iters(3)
+            .run(|| trainer.train(&mut batches, 1).unwrap());
+    }
+
     // stability-monitor overhead: the same trainer stepped with the
     // observer hook off vs on (loss-spike + spectron-bound guards, log
     // policy). The observer runs on the readback cadence only, so the

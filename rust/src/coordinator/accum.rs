@@ -37,6 +37,10 @@ impl GradAccumulator {
     }
 
     /// Native path: every non-selfguided variant has the split step.
+    /// Tensor-core budget from `REPRO_THREADS` (else serial); for an
+    /// explicit budget, compose [`GradAccumulator::with_backend`] with
+    /// [`NativeBackend::with_threads`] (what `repro accum-demo
+    /// --threads` does via the launcher's backend selector).
     pub fn native(variant: &VariantCfg, run: RunCfg) -> Result<GradAccumulator> {
         Self::with_backend(Box::new(NativeBackend::new(variant)?), run)
     }

@@ -16,18 +16,25 @@
 //! * **sequential** ([`DataParallelSim::new`]) — per-worker grads run one
 //!   after another on the coordinator's backend, as a real single-process
 //!   simulator would; the reference for equivalence tests.
-//! * **threaded** ([`DataParallelSim::new_threaded`]) — per-worker grads
-//!   fan out to persistent worker threads. The xla wrapper types are
-//!   `!Send` (one PJRT client per thread, DESIGN.md §Conventions), so
+//! * **threaded, PJRT** ([`DataParallelSim::new_threaded`]) — per-worker
+//!   grads fan out to persistent worker threads. The xla wrapper types
+//!   are `!Send` (one PJRT client per thread, DESIGN.md §Conventions), so
 //!   each worker constructs its own backend from a [`BackendFactory`] and
 //!   owns it for its whole life, receiving only `Send` data: an `Arc` of
 //!   the replicated state (the per-step broadcast a real DP runtime
 //!   performs) and a recycled token buffer. Gradients return in worker
 //!   order, so the tree reduction consumes them exactly as the sequential
 //!   path does and the two modes stay bit-identical.
+//! * **threaded, native** ([`DataParallelSim::native`] with
+//!   `threaded = true`) — native backends are `Sync` plain data, so the
+//!   per-worker grads fan out on the shared tensor-core pool
+//!   ([`crate::util::pool`], DESIGN.md §Native tensor core) instead of
+//!   ad-hoc OS threads: worker `w` owns result slot `w`, grads collect in
+//!   worker order, and each worker's math is the serial kernel — the
+//!   whole step stays bit-identical to the sequential reference.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
@@ -38,12 +45,16 @@ use crate::monitor::{self, Signal, StepObserver};
 use crate::runtime::backend::{self, Backend, BackendFactory, StateBuf};
 use crate::runtime::state as slots;
 use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime, StateHost};
+use crate::util::pool;
 
 pub struct DataParallelSim<'d> {
     /// declared first: fields drop in declaration order, and the worker
     /// pool's join-on-drop must finish (worker backends torn down) before
     /// the coordinator's own backend can go away
     pool: Option<WorkerPool>,
+    /// native threaded mode: per-worker backends the shared tensor-core
+    /// pool fans grads across (plain `Sync` data — no teardown hazards)
+    native_workers: Option<Vec<NativeBackend>>,
     backend: Box<dyn Backend>,
     manifest: Manifest,
     state_buf: StateBuf,
@@ -90,6 +101,7 @@ impl<'d> DataParallelSim<'d> {
     }
 
     /// Native simulator, sequential or threaded — no artifacts involved.
+    /// Thread budget from `REPRO_THREADS` (else serial kernels).
     pub fn native(
         variant: &VariantCfg,
         run: RunCfg,
@@ -97,16 +109,51 @@ impl<'d> DataParallelSim<'d> {
         n_workers: usize,
         threaded: bool,
     ) -> Result<DataParallelSim<'d>> {
-        let coord = Box::new(NativeBackend::new(variant)?);
-        let factory = threaded.then(|| backend::native_factory(variant.clone()));
-        Self::with_backend(coord, factory, variant, run, ds, n_workers)
+        Self::native_with_threads(variant, run, ds, n_workers, threaded, pool::env_threads())
+    }
+
+    /// Native simulator with an explicit tensor-core budget. In threaded
+    /// mode the per-worker grads fan across the SHARED pool (each worker
+    /// backend keeps serial kernels — the parallelism is one level up),
+    /// while the coordinator's own init/apply use `threads`.
+    pub fn native_with_threads(
+        variant: &VariantCfg,
+        run: RunCfg,
+        ds: &'d Dataset,
+        n_workers: usize,
+        threaded: bool,
+        threads: usize,
+    ) -> Result<DataParallelSim<'d>> {
+        let coord = Box::new(NativeBackend::with_threads(variant, threads)?);
+        let workers = if threaded {
+            let mut v = Vec::with_capacity(n_workers);
+            for _ in 0..n_workers {
+                v.push(NativeBackend::with_threads(variant, 1)?);
+            }
+            Some(v)
+        } else {
+            None
+        };
+        Self::build(coord, None, workers, variant, run, ds, n_workers)
     }
 
     /// Generic constructor: a coordinator backend plus, for threaded
     /// mode, a factory each worker thread builds its own backend from.
     pub fn with_backend(
+        coord: Box<dyn Backend>,
+        worker_factory: Option<BackendFactory>,
+        variant: &VariantCfg,
+        run: RunCfg,
+        ds: &'d Dataset,
+        n_workers: usize,
+    ) -> Result<DataParallelSim<'d>> {
+        Self::build(coord, worker_factory, None, variant, run, ds, n_workers)
+    }
+
+    fn build(
         mut coord: Box<dyn Backend>,
         worker_factory: Option<BackendFactory>,
+        native_workers: Option<Vec<NativeBackend>>,
         variant: &VariantCfg,
         run: RunCfg,
         ds: &'d Dataset,
@@ -127,6 +174,7 @@ impl<'d> DataParallelSim<'d> {
         let pool = worker_factory.map(|f| WorkerPool::spawn(f, n_workers));
         Ok(DataParallelSim {
             pool,
+            native_workers,
             backend: coord,
             manifest,
             state_buf,
@@ -142,7 +190,7 @@ impl<'d> DataParallelSim<'d> {
     }
 
     pub fn is_threaded(&self) -> bool {
-        self.pool.is_some()
+        self.pool.is_some() || self.native_workers.is_some()
     }
 
     /// One data-parallel step: per-worker grads, tree all-reduce, one
@@ -150,7 +198,9 @@ impl<'d> DataParallelSim<'d> {
     /// quarantined inside the backend (DESIGN.md §Hot-loop pipeline).
     pub fn step(&mut self) -> Result<DpStepStats> {
         let g_len = 1 + self.manifest.n_params;
-        let worker_grads = if self.pool.is_some() {
+        let worker_grads = if self.native_workers.is_some() {
+            self.grads_native_pool(g_len)?
+        } else if self.pool.is_some() {
             self.grads_threaded(g_len)?
         } else {
             self.grads_sequential(g_len)?
@@ -177,6 +227,46 @@ impl<'d> DataParallelSim<'d> {
             let buf = &mut self.token_bufs[wid];
             shard.next_batch_into(buf);
             let g = self.backend.grad(&self.state_buf, buf)?;
+            anyhow::ensure!(g.len() == g_len, "worker {wid}: grad length {}", g.len());
+            grads.push(g);
+        }
+        Ok(grads)
+    }
+
+    /// Native threaded mode: fan the per-worker grads across the shared
+    /// tensor-core pool. One state readback is the broadcast; worker `w`
+    /// computes into result slot `w` (disjoint by construction), and
+    /// collection walks slots in worker order — so the tree reduction
+    /// consumes exactly the sequential path's stream, bit for bit. Batch
+    /// draws happen serially up front, preserving each shard iterator's
+    /// sequence.
+    fn grads_native_pool(&mut self, g_len: usize) -> Result<Vec<Vec<f32>>> {
+        let state = self.backend.download(&self.state_buf)?;
+        for (wid, shard) in self.shards.iter_mut().enumerate() {
+            let buf = &mut self.token_bufs[wid];
+            shard.next_batch_into(buf);
+        }
+        let workers = self.native_workers.as_ref().expect("native pool mode");
+        let n = workers.len();
+        let results: Vec<Mutex<Option<Result<Vec<f32>, String>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        {
+            let state_ref = &state;
+            let bufs = &self.token_bufs;
+            let results_ref = &results;
+            pool::parallel_for(n, n, &|w| {
+                let r = workers[w]
+                    .grad_vec(state_ref, &bufs[w])
+                    .map_err(|e| format!("{e:#}"));
+                *results_ref[w].lock().unwrap() = Some(r);
+            });
+        }
+        let mut grads = Vec::with_capacity(n);
+        for (wid, cell) in results.into_iter().enumerate() {
+            let slot = cell.into_inner().unwrap_or_else(|p| p.into_inner());
+            let g = slot
+                .ok_or_else(|| anyhow!("dp worker {wid} produced no result"))?
+                .map_err(|e| anyhow!("dp worker {wid}: {e}"))?;
             anyhow::ensure!(g.len() == g_len, "worker {wid}: grad length {}", g.len());
             grads.push(g);
         }

@@ -33,9 +33,18 @@ impl Evaluator {
         Ok(Self::with_backend(Box::new(backend)))
     }
 
-    /// Native path: no artifacts involved.
+    /// Native path: no artifacts involved. Tensor-core budget from
+    /// `REPRO_THREADS` (else serial).
     pub fn native(variant: &VariantCfg) -> Result<Evaluator> {
         Ok(Self::with_backend(Box::new(NativeBackend::new(variant)?)))
+    }
+
+    /// [`Evaluator::native`] with an explicit tensor-core thread budget
+    /// (serve's native engine and the bench rows land here).
+    pub fn native_with_threads(variant: &VariantCfg, threads: usize) -> Result<Evaluator> {
+        Ok(Self::with_backend(Box::new(NativeBackend::with_threads(
+            variant, threads,
+        )?)))
     }
 
     pub fn with_backend(backend: Box<dyn Backend>) -> Evaluator {

@@ -1,10 +1,32 @@
-//! Host-side dense linear algebra (f64, row-major).
+//! Dense linear algebra (f64, row-major) — the native tensor core
+//! (DESIGN.md §Native tensor core).
 //!
-//! Used by the scaling-law fits, the coordinator's host-side cross-checks
-//! of the in-graph spectral telemetry, and the test suite. This is NOT the
-//! hot path — model math runs inside the AOT-compiled XLA programs.
+//! Since the native backend became the artifact-free substrate for
+//! training, eval, serve, and the un-gated test suite (PR 3), this IS a
+//! hot path: every native matmul, transpose, and power-iteration matvec
+//! lands here. Two disciplines keep it fast without giving up the
+//! repo-wide bit-identity invariant:
+//!
+//! * **in-place ops** ([`Mat::matmul_into`], [`Mat::t_into`],
+//!   [`Mat::matvec_into`], …) write into caller-owned storage so the
+//!   step loop recycles buffers through an [`Arena`] instead of
+//!   allocating per op;
+//! * **row-parallel ops** ([`Mat::matmul_par`] and friends) fan
+//!   contiguous output-row blocks across the persistent pool
+//!   ([`crate::util::pool`]). Ownership is fixed by `(index, nthreads)`
+//!   and every output element's k-accumulation order is exactly the
+//!   serial loop's, so parallel results are **bit-identical** to serial
+//!   at every thread count (docs/adr/005-parallel-tensor-core.md).
+//!
+//! NOTE the deliberate absence of zero-skip shortcuts: a `continue` on a
+//! `0.0` operand would also skip `0.0 * NaN` and so hide a diverged
+//! state's non-finite weights from the loss and the stability monitor's
+//! detectors. IEEE propagation is load-bearing here; the
+//! `nan_propagates_through_zero_operands` regression pins it.
 
 pub mod lbfgs;
+
+use crate::util::pool::{self, DisjointMut};
 
 /// Tile edge for the blocked transpose / tiled matmul: 64 f64 = 512 B per
 /// row segment, a few tiles fit in L1 alongside the output rows.
@@ -49,12 +71,49 @@ impl Mat {
         &mut self.data[i * self.cols + j]
     }
 
+    /// Reshape to `(rows, cols)` zeros, reusing the existing allocation:
+    /// the in-place ops' way of "allocating" their output. For
+    /// accumulating consumers (matmul) the zero-fill is load-bearing.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape for consumers that overwrite EVERY element before any
+    /// read (`t_into`, the head-view extraction): skips the zero-fill
+    /// when the buffer already has the right length, halving store
+    /// traffic on those ops. Callers must write the full extent — stale
+    /// values are exposed otherwise.
+    pub fn reset_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        let len = rows * cols;
+        if self.data.len() != len {
+            self.data.clear();
+            self.data.resize(len, 0.0);
+        }
+    }
+
     /// Blocked transpose: walks `BLOCK x BLOCK` tiles so reads and writes
     /// both stay within a cache-resident window on the larger test shapes
     /// (the naive column-strided write thrashes once a row of the output
     /// exceeds L1). Pure permutation — bit-identical to the naive loop.
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
+        self.t_write(&mut out);
+        out
+    }
+
+    /// [`Mat::t`] into a reused buffer (`t_write` assigns every element,
+    /// so the reshape skips zero-filling).
+    pub fn t_into(&self, out: &mut Mat) {
+        out.reset_for_overwrite(self.cols, self.rows);
+        self.t_write(out);
+    }
+
+    fn t_write(&self, out: &mut Mat) {
         for i0 in (0..self.rows).step_by(BLOCK) {
             let i1 = (i0 + BLOCK).min(self.rows);
             for j0 in (0..self.cols).step_by(BLOCK) {
@@ -66,31 +125,31 @@ impl Mat {
                 }
             }
         }
-        out
     }
 
-    /// Tiled ikj matmul: the `(i, k)` loops are blocked so the touched
-    /// rows of `other` and `out` stay cache-resident while a tile is
-    /// consumed. For each output element the k-accumulation still runs in
-    /// ascending k order (tiles ascend, k ascends within a tile), so the
-    /// f32/f64 sums — and the Newton-Schulz mirrors built on them — are
-    /// bit-identical to the untiled loop.
-    pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+    /// Tiled ikj matmul over output rows `[i_lo, i_hi)`, accumulating
+    /// into `out_rows` (that row range's storage, zero-initialized by the
+    /// caller). The `(i, k)` loops are blocked so the touched rows of
+    /// `other` and `out` stay cache-resident while a tile is consumed.
+    /// For each output element the k-accumulation runs in ascending k
+    /// order (tiles ascend, k ascends within a tile) — independent of
+    /// `i_lo`/`i_hi` — so the sums, and the Newton-Schulz mirrors built
+    /// on them, are bit-identical to the untiled serial loop no matter
+    /// how the row range is partitioned.
+    ///
+    /// No zero-skip on `a`: `0.0 * NaN` must stay NaN (module docs).
+    fn matmul_rows(&self, other: &Mat, out_rows: &mut [f64], i_lo: usize, i_hi: usize) {
         let nc = other.cols;
-        let mut out = Mat::zeros(self.rows, nc);
-        for i0 in (0..self.rows).step_by(BLOCK) {
-            let i1 = (i0 + BLOCK).min(self.rows);
+        debug_assert_eq!(out_rows.len(), (i_hi - i_lo) * nc);
+        for i0 in (i_lo..i_hi).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(i_hi);
             for k0 in (0..self.cols).step_by(BLOCK) {
                 let k1 = (k0 + BLOCK).min(self.cols);
                 for i in i0..i1 {
                     let arow = &self.data[i * self.cols..(i + 1) * self.cols];
-                    let out_row = &mut out.data[i * nc..(i + 1) * nc];
+                    let out_row = &mut out_rows[(i - i_lo) * nc..(i - i_lo + 1) * nc];
                     for k in k0..k1 {
                         let a = arow[k];
-                        if a == 0.0 {
-                            continue;
-                        }
                         let orow = &other.data[k * nc..(k + 1) * nc];
                         for (o, &b) in out_row.iter_mut().zip(orow) {
                             *o += a * b;
@@ -99,35 +158,98 @@ impl Mat {
                 }
             }
         }
+    }
+
+    /// Serial tiled matmul (see `matmul_rows` above for the order
+    /// guarantees). Prefer [`Mat::matmul_into`] / [`Mat::matmul_par_into`]
+    /// on hot paths.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_rows(other, &mut out.data, 0, self.rows);
         out
     }
 
+    /// [`Mat::matmul`] into a reused buffer — bit-identical output.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        out.reset(self.rows, other.cols);
+        self.matmul_rows(other, &mut out.data, 0, self.rows);
+    }
+
+    /// Row-parallel matmul: output rows are split into `threads`
+    /// contiguous blocks (`pool::chunk_bounds` — ownership fixed by
+    /// `(index, nthreads)`) and fanned across the persistent pool. Each
+    /// block runs the serial tiled loop over its own rows, so the result
+    /// is bit-identical to [`Mat::matmul`] at every thread count
+    /// (DESIGN.md §Native tensor core).
+    pub fn matmul_par(&self, other: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_par_write(other, threads, &mut out);
+        out
+    }
+
+    /// [`Mat::matmul_par`] into a reused buffer.
+    pub fn matmul_par_into(&self, other: &Mat, threads: usize, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        out.reset(self.rows, other.cols);
+        self.matmul_par_write(other, threads, out);
+    }
+
+    fn matmul_par_write(&self, other: &Mat, threads: usize, out: &mut Mat) {
+        let nc = other.cols;
+        let slots = DisjointMut::new(&mut out.data);
+        pool::chunked_for(threads, self.rows, &|lo, hi| {
+            // disjoint by chunked_for's contiguous row partition
+            let out_rows = unsafe { slots.range_mut(lo * nc, (hi - lo) * nc) };
+            self.matmul_rows(other, out_rows, lo, hi);
+        });
+    }
+
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.rows);
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// `out = W x` into a reused buffer (resized to `rows`).
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|i| {
-                self.data[i * self.cols..(i + 1) * self.cols]
-                    .iter()
-                    .zip(x)
-                    .map(|(a, b)| a * b)
-                    .sum()
-            })
-            .collect()
+        out.clear();
+        out.extend((0..self.rows).map(|i| {
+            self.data[i * self.cols..(i + 1) * self.cols]
+                .iter()
+                .zip(x)
+                .map(|(a, b)| a * b)
+                .sum::<f64>()
+        }));
     }
 
     pub fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
-        assert_eq!(self.rows, y.len());
         let mut out = vec![0.0; self.cols];
+        self.matvec_t_write(y, &mut out);
+        out
+    }
+
+    /// `out = Wᵀ y` into a reused buffer (resized to `cols`). Row
+    /// accumulation ascends in `i` exactly as the allocating version —
+    /// and no `y[i] == 0.0` skip: a NaN row must poison the output
+    /// (module docs).
+    pub fn matvec_t_into(&self, y: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.cols, 0.0);
+        self.matvec_t_write(y, out);
+    }
+
+    fn matvec_t_write(&self, y: &[f64], out: &mut [f64]) {
+        assert_eq!(self.rows, y.len());
         for i in 0..self.rows {
             let yi = y[i];
-            if yi == 0.0 {
-                continue;
-            }
             for j in 0..self.cols {
                 out[j] += self.at(i, j) * yi;
             }
         }
-        out
     }
 
     pub fn sub(&self, other: &Mat) -> Mat {
@@ -147,8 +269,108 @@ impl Mat {
         }
     }
 
+    /// `self *= s` in place — same per-element arithmetic as
+    /// [`Mat::scale`], no allocation.
+    pub fn scale_assign(&mut self, s: f64) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// `self += other` elementwise, in place.
+    pub fn add_assign(&mut self, other: &Mat) {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (o, v) in self.data.iter_mut().zip(&other.data) {
+            *o += v;
+        }
+    }
+
+    /// Become a copy of `src`, reusing this matrix's allocation.
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
+    }
+
     pub fn fro(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+/// Buffer pool for the step loop's intermediate matrices: `take`/`put`
+/// recycling turns the native forward/backward's per-op allocations into
+/// steady-state reuse (capacity ratchets up to the high-water set of
+/// live buffers and stays there). The free list is bucketed by capacity
+/// with best-fit checkout, so a tiny request can never capture (and
+/// orphan) the multi-MB logits buffer and force a regrow. Checked-out
+/// values are plain [`Mat`]/`Vec<f64>` — dropping one instead of
+/// returning it is merely a lost reuse, never a leak or an error.
+#[derive(Default)]
+pub struct Arena {
+    free: std::collections::BTreeMap<usize, Vec<Vec<f64>>>,
+}
+
+impl Arena {
+    /// Best-fit checkout: the smallest recycled capacity already holding
+    /// `len`, else the largest available (regrows once and re-buckets at
+    /// put), else a fresh empty vector.
+    fn pop_fit(&mut self, len: usize) -> Vec<f64> {
+        let key = self
+            .free
+            .range(len..)
+            .next()
+            .map(|(k, _)| *k)
+            .or_else(|| self.free.keys().next_back().copied());
+        match key {
+            Some(k) => {
+                let bucket = self.free.get_mut(&k).expect("keyed bucket");
+                let v = bucket.pop().expect("non-empty bucket");
+                if bucket.is_empty() {
+                    self.free.remove(&k);
+                }
+                v
+            }
+            None => Vec::new(),
+        }
+    }
+
+    fn put_raw(&mut self, v: Vec<f64>) {
+        self.free.entry(v.capacity()).or_default().push(v);
+    }
+
+    /// A zeroed vector of length `len`, recycled when possible.
+    pub fn vec(&mut self, len: usize) -> Vec<f64> {
+        let mut v = self.pop_fit(len);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// A vector holding a copy of `src` (no intermediate zero-fill).
+    pub fn vec_from(&mut self, src: &[f64]) -> Vec<f64> {
+        let mut v = self.pop_fit(src.len());
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    pub fn put_vec(&mut self, v: Vec<f64>) {
+        self.put_raw(v);
+    }
+
+    /// A zeroed `(rows, cols)` matrix, recycled when possible.
+    pub fn mat(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: self.vec(rows * cols) }
+    }
+
+    /// A recycled copy of `src`.
+    pub fn mat_from(&mut self, src: &Mat) -> Mat {
+        Mat { rows: src.rows, cols: src.cols, data: self.vec_from(&src.data) }
+    }
+
+    pub fn put(&mut self, m: Mat) {
+        self.put_raw(m.data);
     }
 }
 
@@ -327,15 +549,19 @@ mod tests {
         for i in 0..a.rows {
             for k in 0..a.cols {
                 let v = a.at(i, k);
-                if v == 0.0 {
-                    continue;
-                }
                 for j in 0..b.cols {
                     out.data[i * b.cols + j] += v * b.data[k * b.cols + j];
                 }
             }
         }
         out
+    }
+
+    fn assert_bits_eq(want: &Mat, got: &Mat, what: &str) {
+        assert_eq!((want.rows, want.cols), (got.rows, got.cols), "{what}: shape");
+        for (i, (x, y)) in want.data.iter().zip(&got.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: drifted at flat index {i}");
+        }
     }
 
     #[test]
@@ -346,17 +572,118 @@ mod tests {
             let a = Mat::randn(m, k, &mut rng);
             let b = Mat::randn(k, n, &mut rng);
             let t_want = t_naive(&a);
-            let t_got = a.t();
-            assert_eq!(t_want.rows, t_got.rows);
-            for (x, y) in t_want.data.iter().zip(&t_got.data) {
-                assert_eq!(x.to_bits(), y.to_bits(), "t() drifted at {m}x{k}");
-            }
+            assert_bits_eq(&t_want, &a.t(), &format!("t() {m}x{k}"));
+            let mut t_got = Mat::zeros(1, 1);
+            a.t_into(&mut t_got);
+            assert_bits_eq(&t_want, &t_got, &format!("t_into {m}x{k}"));
             let mm_want = matmul_naive(&a, &b);
-            let mm_got = a.matmul(&b);
-            for (x, y) in mm_want.data.iter().zip(&mm_got.data) {
-                assert_eq!(x.to_bits(), y.to_bits(), "matmul drifted at {m}x{k}x{n}");
+            assert_bits_eq(&mm_want, &a.matmul(&b), &format!("matmul {m}x{k}x{n}"));
+        }
+    }
+
+    /// The tentpole invariant: the parallel and in-place matmuls are
+    /// bit-identical to the serial allocating one at every thread count,
+    /// for shapes straddling the tile edge — including reused (dirty)
+    /// output buffers.
+    #[test]
+    fn parallel_and_in_place_matmul_bit_match_serial() {
+        let mut rng = Pcg64::new(43);
+        let mut reused = Mat::zeros(3, 3);
+        reused.data.fill(7.5); // dirty buffer: reset must erase history
+        for (m, k, n) in [(1, 1, 1), (3, 5, 4), (64, 64, 64), (70, 130, 65), (129, 64, 63)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let want = a.matmul(&b);
+            a.matmul_into(&b, &mut reused);
+            assert_bits_eq(&want, &reused, &format!("matmul_into {m}x{k}x{n}"));
+            for threads in [1usize, 2, 3, 8] {
+                let got = a.matmul_par(&b, threads);
+                assert_bits_eq(&want, &got, &format!("matmul_par t={threads} {m}x{k}x{n}"));
+                a.matmul_par_into(&b, threads, &mut reused);
+                assert_bits_eq(
+                    &want,
+                    &reused,
+                    &format!("matmul_par_into t={threads} {m}x{k}x{n}"),
+                );
             }
         }
+    }
+
+    /// Regression for the removed zero-skip: a NaN in one operand must
+    /// reach the output even when the matching element of the other
+    /// operand is exactly 0.0 (the old `if a == 0.0 {{ continue }}`
+    /// suppressed IEEE propagation and could hide a diverged state).
+    #[test]
+    fn nan_propagates_through_zero_operands() {
+        // A's first row is all zeros; B's first row holds a NaN — every
+        // element of out's first row goes through 0.0 * finite + 0.0 *
+        // NaN and must be NaN
+        let a = Mat::from_rows(vec![vec![0.0, 0.0], vec![1.0, 2.0]]);
+        let b = Mat::from_rows(vec![vec![f64::NAN, 1.0], vec![3.0, 4.0]]);
+        let out = a.matmul(&b);
+        assert!(out.at(0, 0).is_nan(), "zero row must not mask NaN");
+        assert!(out.at(1, 0).is_nan());
+        assert_eq!(out.at(0, 1), 0.0, "finite column stays finite");
+        for threads in [2usize, 4] {
+            let par = a.matmul_par(&b, threads);
+            assert!(par.at(0, 0).is_nan(), "parallel path must propagate too");
+        }
+        // matvec_t: zero dual vector element against a NaN row
+        let w = Mat::from_rows(vec![vec![f64::NAN, 1.0], vec![2.0, 3.0]]);
+        let out = w.matvec_t(&[0.0, 1.0]);
+        assert!(out[0].is_nan(), "matvec_t zero-skip would mask the NaN row");
+    }
+
+    #[test]
+    fn matvec_into_and_matvec_t_into_match_allocating() {
+        let mut rng = Pcg64::new(44);
+        let w = Mat::randn(67, 130, &mut rng);
+        let x: Vec<f64> = (0..130).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..67).map(|_| rng.normal()).collect();
+        let mut buf = vec![5.0; 3]; // dirty + wrong size
+        w.matvec_into(&x, &mut buf);
+        for (a, b) in w.matvec(&x).iter().zip(&buf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        w.matvec_t_into(&y, &mut buf);
+        for (a, b) in w.matvec_t(&y).iter().zip(&buf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn arena_recycles_and_zeroes() {
+        let mut ar = Arena::default();
+        let mut m = ar.mat(4, 5);
+        m.data.fill(9.0);
+        let cap_before = m.data.capacity();
+        ar.put(m);
+        let m2 = ar.mat(2, 3); // smaller: same buffer (best fit), zeroed
+        assert!(m2.data.iter().all(|&v| v == 0.0));
+        assert_eq!(m2.data.capacity(), cap_before);
+        let src = Mat::from_rows(vec![vec![1.0, 2.0]]);
+        ar.put(m2);
+        let c = ar.mat_from(&src);
+        assert_eq!(c.data, vec![1.0, 2.0]);
+        assert_eq!((c.rows, c.cols), (1, 2));
+    }
+
+    /// Best-fit checkout: a small request must not capture a much larger
+    /// recycled buffer when a right-sized one is available.
+    #[test]
+    fn arena_best_fit_prefers_smallest_sufficient_buffer() {
+        let mut ar = Arena::default();
+        let big = ar.vec(1 << 16);
+        let big_cap = big.capacity();
+        let small = ar.vec(8);
+        let small_cap = small.capacity();
+        assert!(small_cap < big_cap);
+        ar.put_vec(big);
+        ar.put_vec(small);
+        let tiny = ar.vec(4);
+        assert!(tiny.capacity() <= small_cap, "tiny take grabbed the big buffer");
+        let big2 = ar.vec(1 << 16);
+        assert_eq!(big2.capacity(), big_cap, "big buffer must still be available");
     }
 
     #[test]

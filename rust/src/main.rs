@@ -19,7 +19,11 @@
 //! §Backends): `pjrt` runs the AOT artifacts, `native` the pure-Rust
 //! interpreter (no artifacts, no Python), and `auto` — the default —
 //! picks pjrt when `artifacts/index.json` exists and falls back to
-//! native otherwise, so a fresh checkout trains out of the box.
+//! native otherwise, so a fresh checkout trains out of the box. The
+//! native backend also takes `--threads N|auto` (default: REPRO_THREADS,
+//! else auto): the tensor-core budget (DESIGN.md §Native tensor core) —
+//! results are bit-identical at every thread count, only wall time
+//! changes.
 
 use std::sync::Arc;
 
@@ -76,30 +80,33 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
   repro info                         variants + artifact/backend status
   repro train --variant V [--steps N --lr F --wd F --seed N --docs N]
               [--ckpt out.ckpt] [--resume in.ckpt] [--read-interval N]
-              [--backend pjrt|native|auto] [--no-prefetch]
+              [--backend pjrt|native|auto] [--threads N|auto] [--no-prefetch]
               [--guard loss-spike,spectron-bound,rho-collapse,sigma-collapse]
               [--on-spike log|halt|lr-cut|rollback] [--inject-spike STEP:SCALE]
               (async batch prefetch is on by default; --backend native
                needs no artifacts, no Python — pure Rust end to end;
-               --guard turns the stability monitor on: detections land in
-               results/train-V/events.jsonl and --on-spike picks the
-               response)
+               --threads sets its tensor-core budget, bit-identical at
+               every value; --guard turns the stability monitor on:
+               detections land in results/train-V/events.jsonl and
+               --on-spike picks the response)
   repro eval  --ckpt in.ckpt [--docs N] [--items N] [--backend ...]
+              [--threads N|auto]
   repro exp   <fig1|fig2|fig3|fig4|tab1|fig6|fig9|fig8|tab2|tab3|fig12|fig13|appd|all>
               [--smoke] [--docs N] [--force]
   repro serve --ckpt a.ckpt[,b.ckpt,...] [--addr HOST:PORT] [--max-batch N]
               [--max-wait-ms F] [--workers N] [--cache N] [--docs N]
-              [--backend ...] [--mock]
+              [--backend ...] [--threads N|auto] [--mock]
               (line-delimited JSON; ops: generate, score, stats, shutdown;
                --docs must match training so the tokenizers agree)
   repro sweep [--grid grid.toml | --smoke] [--workers N] [--max-runs N]
-              [--backend ...]
+              [--backend ...] [--threads N|auto]
               (crash-safe grid: per-run registry under results/sweeps/;
                kill it mid-grid and rerun — finished runs are skipped,
                interrupted ones resume from their last checkpoint)
   repro sweep-report --name N        (registry table for one sweep)
-  repro dp-demo    [--workers N --steps N --variant V --sequential --backend ...]
-  repro accum-demo [--micro N --steps N --variant V --backend ...]
+  repro dp-demo    [--workers N --steps N --variant V --sequential
+                    --backend ... --threads N|auto]
+  repro accum-demo [--micro N --steps N --variant V --backend ... --threads N|auto]
   repro data  [--docs N]
 ";
 
@@ -113,11 +120,17 @@ struct BackendSel {
     auto: bool,
     idx: Option<ArtifactIndex>,
     rt: Option<Runtime>,
+    /// native tensor-core budget (`--threads N|auto`, then REPRO_THREADS,
+    /// then auto — results are bit-identical at every value); ignored by
+    /// the pjrt backend
+    threads: usize,
 }
 
 impl BackendSel {
     fn resolve(args: &mut Args) -> Result<BackendSel> {
         let choice = args.str("backend", "auto");
+        let threads = spectron::util::pool::cli_threads(args.opt_str("threads").as_deref())
+            .map_err(|e| anyhow!(e))?;
         let auto = choice == "auto";
         let root = ArtifactIndex::default_root();
         let kind = match choice.as_str() {
@@ -150,7 +163,7 @@ impl BackendSel {
             }
             BackendKind::Native => (BackendKind::Native, None, None),
         };
-        Ok(BackendSel { kind, auto, idx, rt })
+        Ok(BackendSel { kind, auto, idx, rt, threads })
     }
 
     fn pjrt_parts(root: &std::path::Path) -> Result<(ArtifactIndex, Runtime)> {
@@ -175,12 +188,12 @@ impl BackendSel {
                             "artifacts unusable for {} ({e:#}) — falling back to native",
                             v.name
                         );
-                        Ok(Box::new(NativeBackend::new(v)?))
+                        Ok(Box::new(NativeBackend::with_threads(v, self.threads)?))
                     }
                     Err(e) => Err(e),
                 }
             }
-            BackendKind::Native => Ok(Box::new(NativeBackend::new(v)?)),
+            BackendKind::Native => Ok(Box::new(NativeBackend::with_threads(v, self.threads)?)),
         }
     }
 }
@@ -444,9 +457,10 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     let docs = args.usize("docs", 6000);
     let mock = args.flag("mock");
     let backend = if mock {
-        // --mock never touches a backend; consume the flag so it is not
-        // reported as unknown, but don't force artifact resolution
+        // --mock never touches a backend; consume the flags so they are
+        // not reported as unknown, but don't force artifact resolution
         let _ = args.str("backend", "auto");
+        let _ = args.opt_str("threads");
         None
     } else {
         Some(BackendSel::resolve(args)?)
@@ -489,7 +503,7 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
             }
             BackendKind::Native => {
                 info!("serve", "NATIVE engine (no artifacts required)");
-                NativeEngine::factory(ckpts, cache, docs as u64)
+                NativeEngine::factory_with_threads(ckpts, cache, docs as u64, sel.threads)
             }
         }
     };
@@ -538,6 +552,7 @@ fn sweep_cmd(args: &mut Args) -> Result<()> {
         workers,
         max_runs: (max_runs > 0).then_some(max_runs),
         backend,
+        threads: sel.threads,
     };
     let summary = sweep::run_sweep(&grid, &reg, &ds, &opts)?;
     for (id, r) in &summary.rows {
@@ -619,7 +634,9 @@ fn dp_demo(args: &mut Args) -> Result<()> {
     let (_corpus, _bpe, ds) = build_data(docs as u64);
     let run = RunCfg { total_steps: steps, ..RunCfg::default() };
     let mut dp = match sel.kind {
-        BackendKind::Native => DataParallelSim::native(v, run, &ds, workers, !sequential)?,
+        BackendKind::Native => {
+            DataParallelSim::native_with_threads(v, run, &ds, workers, !sequential, sel.threads)?
+        }
         BackendKind::Pjrt => {
             let (rt, idx) = (sel.rt.as_ref().unwrap(), sel.idx.as_ref().unwrap());
             let built = if sequential {
@@ -633,7 +650,14 @@ fn dp_demo(args: &mut Args) -> Result<()> {
                 // the other commands (stale artifacts, missing variant)
                 Err(e) if sel.auto => {
                     info!("dp", "artifacts unusable ({e:#}) — falling back to native");
-                    DataParallelSim::native(v, run, &ds, workers, !sequential)?
+                    DataParallelSim::native_with_threads(
+                        v,
+                        run,
+                        &ds,
+                        workers,
+                        !sequential,
+                        sel.threads,
+                    )?
                 }
                 Err(e) => return Err(e),
             }

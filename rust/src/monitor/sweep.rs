@@ -365,11 +365,19 @@ pub struct SweepOpts {
     /// smoke uses 1 to simulate "killed after the first run")
     pub max_runs: Option<usize>,
     pub backend: ExecBackend,
+    /// tensor-core budget per native run (`--threads`; sweep workers
+    /// share the one process pool, so oversubscription self-limits)
+    pub threads: usize,
 }
 
 impl Default for SweepOpts {
     fn default() -> Self {
-        SweepOpts { workers: 2, max_runs: None, backend: ExecBackend::Native }
+        SweepOpts {
+            workers: 2,
+            max_runs: None,
+            backend: ExecBackend::Native,
+            threads: crate::util::pool::env_threads(),
+        }
     }
 }
 
@@ -440,9 +448,12 @@ pub fn run_sweep(
         let policy = grid.policy;
         let ds = ds.clone();
         let backend = opts.backend.clone();
+        let threads = opts.threads;
         let id = spec.id.clone();
         jobs.push(Job::new(id, move |cx| {
-            execute_run(cx, &grid_name, &spec, &v, cfg_hex, guards, policy, &ds, &backend)
+            execute_run(
+                cx, &grid_name, &spec, &v, cfg_hex, guards, policy, &ds, &backend, threads,
+            )
         }));
     }
 
@@ -482,6 +493,7 @@ fn execute_run(
     policy: Policy,
     ds: &Arc<Dataset>,
     backend: &ExecBackend,
+    threads: usize,
 ) -> Result<Json> {
     let run_name = format!("sweeps/{grid_name}/runs/{}", spec.id);
     let dir = registry_root(grid_name).join("runs").join(&spec.id);
@@ -489,7 +501,9 @@ fn execute_run(
 
     let make = || -> Result<Box<dyn Backend>> {
         Ok(match backend {
-            ExecBackend::Native => Box::new(NativeBackend::new(v)?) as Box<dyn Backend>,
+            ExecBackend::Native => {
+                Box::new(NativeBackend::with_threads(v, threads)?) as Box<dyn Backend>
+            }
             ExecBackend::Pjrt(idx) => {
                 Box::new(PjrtBackend::new(cx.runtime()?, idx, &v.name)?) as Box<dyn Backend>
             }

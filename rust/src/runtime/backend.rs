@@ -27,7 +27,6 @@ use anyhow::{anyhow, Context, Result};
 use super::artifact::ArtifactIndex;
 use super::client::{self, Runtime, StagingPool};
 use super::Manifest;
-use crate::config::VariantCfg;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
@@ -138,18 +137,14 @@ pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync
 
 /// Factory producing one PJRT backend per call, each with its OWN client
 /// (`Runtime::new`, not the thread-local shared one): the worker owns it
-/// for its whole life, mirroring the old dp-worker setup.
+/// for its whole life, mirroring the old dp-worker setup. (There is no
+/// native counterpart anymore: native backends are `Sync` plain data, so
+/// the DP fan-out holds them directly and shares the tensor-core pool —
+/// DESIGN.md §Native tensor core.)
 pub fn pjrt_factory(idx: ArtifactIndex, variant: String) -> BackendFactory {
     Arc::new(move || {
         let rt = Runtime::new()?;
         Ok(Box::new(PjrtBackend::new(&rt, &idx, &variant)?) as Box<dyn Backend>)
-    })
-}
-
-/// Factory producing native backends (pure data, cheap to construct).
-pub fn native_factory(variant: VariantCfg) -> BackendFactory {
-    Arc::new(move || {
-        Ok(Box::new(super::native::NativeBackend::new(&variant)?) as Box<dyn Backend>)
     })
 }
 

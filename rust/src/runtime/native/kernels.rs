@@ -6,8 +6,15 @@
 //! stacked-over-layers conveniences the optimizer uses. Property tests in
 //! `rust/tests/proptests.rs` pin orthogonality, convergence, and the
 //! Spectron update bound on these exact functions.
+//!
+//! Tensor-core integration (DESIGN.md §Native tensor core): the stacked
+//! Newton-Schulz fans layer blocks across the persistent pool and the
+//! iteration body runs on scratch-reusing in-place matmuls — both
+//! bit-identical to the serial allocating mirrors at every thread count
+//! (the `parallel == serial` proptests pin it).
 
-use crate::linalg::{newton_schulz, Mat};
+use crate::linalg::{Mat, NS_COEFFS};
+use crate::util::pool::{self, DisjointMut};
 
 /// Newton-Schulz iteration count (paper default, `optim.K_NS`).
 pub const K_NS: usize = 5;
@@ -27,40 +34,129 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// Paper Algorithm 3: approximate `sigma_max(w)` with a persisted left
-/// vector. Returns `(sigma, u')`; `w` is `(p, q)`, `u0` is `(p,)`.
-/// Mirrors `power_iter_ref` exactly (same normalization epsilons, same
-/// final Rayleigh-style product).
-pub fn power_iter(w: &Mat, u0: &[f64], iters: usize) -> (f64, Vec<f64>) {
-    assert_eq!(u0.len(), w.rows, "power_iter u/W shape mismatch");
-    let mut u = u0.to_vec();
-    normalize_eps(&mut u);
-    let mut v = vec![0.0; w.cols];
+/// Reusable buffers for [`power_iter_inplace`]: one right vector and one
+/// matvec output, persisted by the optimizer across layers and steps.
+#[derive(Default)]
+pub struct PowerScratch {
+    v: Vec<f64>,
+    tmp: Vec<f64>,
+}
+
+/// Paper Algorithm 3 with the persisted left vector updated IN PLACE:
+/// `u` (length `w.rows`) is both the warm start and the output; returns
+/// `sigma`. Exactly the arithmetic of [`power_iter`] (same normalization
+/// epsilons, same final Rayleigh-style product), zero allocations in
+/// steady state.
+pub fn power_iter_inplace(w: &Mat, u: &mut [f64], iters: usize, s: &mut PowerScratch) -> f64 {
+    assert_eq!(u.len(), w.rows, "power_iter u/W shape mismatch");
+    normalize_eps(u);
     for _ in 0..iters.max(1) {
-        v = w.matvec_t(&u);
-        normalize_eps(&mut v);
-        u = w.matvec(&v);
-        normalize_eps(&mut u);
+        w.matvec_t_into(u, &mut s.v);
+        normalize_eps(&mut s.v);
+        w.matvec_into(&s.v, &mut s.tmp);
+        u.copy_from_slice(&s.tmp);
+        normalize_eps(u);
     }
-    let sigma = dot(&u, &w.matvec(&v));
+    // the final loop iteration left `tmp = W v` (computed before u's
+    // normalization, from exactly the v the Rayleigh product needs), so
+    // the legacy recompute of `W v` here would be bit-identical busywork
+    dot(u, &s.tmp)
+}
+
+/// Allocating wrapper over [`power_iter_inplace`] (the property-test and
+/// single-pair API): returns `(sigma, u')` for `w (p, q)`, `u0 (p,)`.
+pub fn power_iter(w: &Mat, u0: &[f64], iters: usize) -> (f64, Vec<f64>) {
+    let mut u = u0.to_vec();
+    let mut s = PowerScratch::default();
+    let sigma = power_iter_inplace(w, &mut u, iters, &mut s);
     (sigma, u)
+}
+
+/// Scratch for one [`newton_schulz_into`] call chain, reused across
+/// iterations, layers, and steps.
+#[derive(Default)]
+pub struct NsScratch {
+    x: Mat,
+    xt: Mat,
+    gram: Mat,
+    gram2: Mat,
+    bmat: Mat,
+    xb: Mat,
+}
+
+/// [`crate::linalg::newton_schulz`] on reused storage with row-parallel
+/// matmuls: writes the orthogonalized `g` into `out`. Bit-identical to
+/// the allocating serial mirror — same coefficient arithmetic, same
+/// accumulation orders — at every thread count.
+pub fn newton_schulz_into(g: &Mat, steps: usize, threads: usize, s: &mut NsScratch, out: &mut Mat) {
+    let (ca, cb, cc) = NS_COEFFS;
+    let NsScratch { x, xt, gram, gram2, bmat, xb } = s;
+    let transposed = g.rows < g.cols;
+    if transposed {
+        g.t_into(x);
+    } else {
+        x.copy_from(g);
+    }
+    let f = x.fro() + 1e-7;
+    x.scale_assign(1.0 / f);
+    for _ in 0..steps {
+        x.t_into(xt);
+        xt.matmul_par_into(x, threads, gram);
+        gram.matmul_par_into(gram, threads, gram2);
+        bmat.copy_from(gram);
+        bmat.scale_assign(cb);
+        for (o, g2) in bmat.data.iter_mut().zip(&gram2.data) {
+            *o += cc * g2;
+        }
+        x.matmul_par_into(bmat, threads, xb);
+        x.scale_assign(ca);
+        x.add_assign(xb);
+    }
+    if transposed {
+        x.t_into(out);
+    } else {
+        out.copy_from(x);
+    }
 }
 
 /// Newton-Schulz orthogonalization of one stacked `(layers, m, n)` tensor
 /// (flat storage), vmapped over the leading layer axis like the build
-/// side's kernel.
-pub fn newton_schulz_stacked(data: &[f64], layers: usize, m: usize, n: usize) -> Vec<f64> {
+/// side's kernel. Layer blocks fan across the pool (ownership fixed by
+/// `(index, nthreads)`; each layer's quintic is serial within its task),
+/// so the output is bit-identical to the serial loop at every `threads`.
+pub fn newton_schulz_stacked(
+    data: &[f64],
+    layers: usize,
+    m: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f64> {
     let per = m * n;
     assert_eq!(data.len(), layers * per);
-    let mut out = Vec::with_capacity(data.len());
-    for l in 0..layers {
-        let g = Mat {
-            rows: m,
-            cols: n,
-            data: data[l * per..(l + 1) * per].to_vec(),
-        };
-        out.extend_from_slice(&newton_schulz(&g, K_NS).data);
+    let mut out = vec![0.0; data.len()];
+    if layers == 1 {
+        // a single layer cannot use the layer fan-out; parallelize the
+        // quintic's matmuls instead (same bits either way)
+        let g = Mat { rows: m, cols: n, data: data.to_vec() };
+        let mut s = NsScratch::default();
+        let mut o = Mat::zeros(0, 0);
+        newton_schulz_into(&g, K_NS, threads, &mut s, &mut o);
+        out.copy_from_slice(&o.data);
+        return out;
     }
+    let slots = DisjointMut::new(&mut out);
+    pool::chunked_for(threads, layers, &|lo, hi| {
+        let mut s = NsScratch::default();
+        let mut o = Mat::zeros(0, 0);
+        let mut g = Mat::zeros(0, 0);
+        for l in lo..hi {
+            layer_mat_into(data, l, m, n, &mut g);
+            newton_schulz_into(&g, K_NS, 1, &mut s, &mut o);
+            // disjoint: layer l belongs to exactly this chunk
+            let dst = unsafe { slots.range_mut(l * per, per) };
+            dst.copy_from_slice(&o.data);
+        }
+    });
     out
 }
 
@@ -71,5 +167,79 @@ pub fn layer_mat(data: &[f64], l: usize, m: usize, n: usize) -> Mat {
         rows: m,
         cols: n,
         data: data[l * per..(l + 1) * per].to_vec(),
+    }
+}
+
+/// [`layer_mat`] into a reused buffer.
+pub fn layer_mat_into(data: &[f64], l: usize, m: usize, n: usize, out: &mut Mat) {
+    let per = m * n;
+    out.rows = m;
+    out.cols = n;
+    out.data.clear();
+    out.data.extend_from_slice(&data[l * per..(l + 1) * per]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::newton_schulz;
+    use crate::util::rng::Pcg64;
+
+    /// The in-place/parallel NS must match the serial allocating mirror
+    /// bitwise — tall, wide, and square, across thread counts.
+    #[test]
+    fn newton_schulz_into_bit_matches_serial_mirror() {
+        let mut rng = Pcg64::new(11);
+        for (m, n) in [(32, 8), (8, 32), (16, 16), (70, 65)] {
+            let g = Mat::randn(m, n, &mut rng);
+            let want = newton_schulz(&g, K_NS);
+            for threads in [1usize, 2, 3, 8] {
+                let mut s = NsScratch::default();
+                let mut out = Mat::zeros(0, 0);
+                newton_schulz_into(&g, K_NS, threads, &mut s, &mut out);
+                assert_eq!((want.rows, want.cols), (out.rows, out.cols));
+                for (a, b) in want.data.iter().zip(&out.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{m}x{n} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_ns_bit_matches_per_layer_serial_across_threads() {
+        let mut rng = Pcg64::new(12);
+        for layers in [1usize, 2, 3, 5] {
+            let (m, n) = (24, 6);
+            let data: Vec<f64> = (0..layers * m * n).map(|_| rng.normal()).collect();
+            let want: Vec<f64> = (0..layers)
+                .flat_map(|l| newton_schulz(&layer_mat(&data, l, m, n), K_NS).data)
+                .collect();
+            for threads in [1usize, 2, 3, 8] {
+                let got = newton_schulz_stacked(&data, layers, m, n, threads);
+                assert_eq!(want.len(), got.len());
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "layers={layers} threads={threads} flat={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn power_iter_inplace_matches_wrapper() {
+        let mut rng = Pcg64::new(13);
+        let w = Mat::randn(20, 12, &mut rng);
+        let u0: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let (sigma, u) = power_iter(&w, &u0, 7);
+        let mut u2 = u0.clone();
+        let mut s = PowerScratch::default();
+        let sigma2 = power_iter_inplace(&w, &mut u2, 7, &mut s);
+        assert_eq!(sigma.to_bits(), sigma2.to_bits());
+        for (a, b) in u.iter().zip(&u2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

@@ -25,20 +25,39 @@ pub mod optim;
 
 use anyhow::{anyhow, Result};
 
+use std::sync::Mutex;
+
 use super::backend::{Backend, BackendKind, StateBuf};
 use super::layout::{self, is_factorized, matrix_dims, param_names, MATRIX_NAMES};
 use super::state as slots;
 use super::Manifest;
 use crate::config::VariantCfg;
-use crate::linalg::Mat;
+use crate::linalg::{Arena, Mat};
+use crate::util::pool;
 use crate::util::rng::Pcg64;
 
-use model::Model;
+use model::{Ctx, Model};
 use optim::TenMap;
+
+/// Per-backend reusable storage (DESIGN.md §Native tensor core): the
+/// fwd/bwd arena plus the optimizer's decoded f64 mirrors, all recycled
+/// across steps so the steady-state step loop stops allocating. Behind a
+/// `Mutex` (not `RefCell`) so a backend is `Sync` and the DP fan-out can
+/// share a worker set by reference; contention is nil — one lock per op.
+#[derive(Default)]
+struct Scratch {
+    arena: Arena,
+    tensors: Option<TenMap>,
+    grads: Option<std::collections::BTreeMap<String, Vec<f64>>>,
+}
 
 pub struct NativeBackend {
     manifest: Manifest,
     cfg: VariantCfg,
+    /// tensor-core thread budget (1 = serial; results are bit-identical
+    /// at every value — only wall time changes)
+    threads: usize,
+    scratch: Mutex<Scratch>,
 }
 
 impl NativeBackend {
@@ -47,9 +66,36 @@ impl NativeBackend {
     /// `selfguided` (its dense-auxiliary training path is build-side
     /// only, matching the `grad` program's restriction); eval/logits on a
     /// selfguided checkpoint still work since they read only params.
+    ///
+    /// Thread budget: the `REPRO_THREADS` env override when set, else
+    /// serial (the CI matrix runs the suite under both 1 and 4 — the
+    /// determinism contract makes that a pure re-run, not a tolerance).
     pub fn new(v: &VariantCfg) -> Result<NativeBackend> {
+        Self::with_threads(v, pool::env_threads())
+    }
+
+    /// [`NativeBackend::new`] with an explicit thread budget
+    /// (`repro ... --threads N|auto` lands here via the launcher).
+    pub fn with_threads(v: &VariantCfg, threads: usize) -> Result<NativeBackend> {
         let manifest = layout::build_manifest(v)?;
-        Ok(NativeBackend { manifest, cfg: v.clone() })
+        Ok(NativeBackend {
+            manifest,
+            cfg: v.clone(),
+            threads: threads.max(1),
+            scratch: Mutex::new(Scratch::default()),
+        })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Poison-tolerant scratch access: the scratch holds only reusable
+    /// buffers and mirrors that are fully overwritten from `state` at
+    /// each use, so a panic mid-step cannot leave value-corrupting
+    /// residue behind.
+    fn scratch(&self) -> std::sync::MutexGuard<'_, Scratch> {
+        self.scratch.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     fn batch_dims(&self) -> (usize, usize) {
@@ -118,10 +164,11 @@ impl NativeBackend {
                 let sigma_tgt = ((om as f64).sqrt() + (on as f64).sqrt()) / (on as f64).sqrt();
                 let sa = sigma_tgt.sqrt() * res_scale;
                 let sb = sigma_tgt.sqrt();
+                let threads = self.threads;
                 let mut ortho_init = |name: String, rows: usize, scale: f64| {
                     fill(&mut state, &name, &mut |rng, v| {
                         let g: Vec<f64> = (0..v.len()).map(|_| rng.normal()).collect();
-                        let o = kernels::newton_schulz_stacked(&g, l, rows, r);
+                        let o = kernels::newton_schulz_stacked(&g, l, rows, r, threads);
                         for (x, val) in v.iter_mut().zip(&o) {
                             *x = (scale * val) as f32;
                         }
@@ -221,11 +268,16 @@ impl NativeBackend {
             inputs.extend_from_slice(&tokens[row * w..row * w + t]);
             targets.extend_from_slice(&tokens[row * w + 1..row * w + w]);
         }
-        let (logits, cache) = model.forward(&inputs, b, t)?;
+        let mut sc = self.scratch();
+        let mut cx = Ctx { threads: self.threads, arena: &mut sc.arena };
+        let (logits, cache) = model.forward_ctx(&inputs, b, t, &mut cx)?;
         let nll = model::token_nll(&logits, &targets);
         let loss = nll.iter().sum::<f64>() / nll.len() as f64;
-        let dlogits = model::mean_nll_backward(&logits, &targets);
-        let grads = model.backward(&cache, &dlogits);
+        let dlogits = model::mean_nll_backward_ar(&logits, &targets, cx.arena);
+        let grads = model.backward_ctx(&cache, &dlogits, &mut cx);
+        cache.recycle(cx.arena);
+        cx.arena.put(dlogits);
+        cx.arena.put(logits);
 
         let mut out = Vec::with_capacity(1 + self.manifest.n_params);
         out.push(loss as f32);
@@ -255,22 +307,30 @@ impl NativeBackend {
             1 + self.manifest.n_params
         );
         let loss = gradvec[0] as f64;
-        let mut grads = std::collections::BTreeMap::new();
+        let mut sc = self.scratch();
+        // recycle the previous step's decoded-f64 grad map: entries are
+        // fully overwritten below, so reuse is invisible to the values
+        let mut grads = sc.grads.take().unwrap_or_default();
         let mut off = 1usize;
         let mut gnorm_sq = 0.0f64;
         for name in param_names(&self.cfg) {
             let spec = self.manifest.tensor(&name)?;
-            let g: Vec<f64> = gradvec[off..off + spec.size()].iter().map(|&x| x as f64).collect();
+            let view = &gradvec[off..off + spec.size()];
+            let g = grads.entry(name).or_default();
+            g.clear();
+            g.extend(view.iter().map(|&x| x as f64));
             gnorm_sq += g.iter().map(|x| x * x).sum::<f64>();
-            grads.insert(name, g);
             off += spec.size();
         }
         let gnorm = gnorm_sq.sqrt();
 
         let header: Vec<f64> = state[..slots::HDR].iter().map(|&x| x as f64).collect();
-        let mut tensors: TenMap = optim::state_to_tensors(&self.manifest, state);
+        // same recycling for the optimizer's f64 state mirror: every
+        // tensor is re-decoded from `state` before use
+        let mut tensors: TenMap =
+            optim::state_to_tensors_reuse(&self.manifest, state, sc.tensors.take());
         let tracked_old = self.cfg.telemetry.then(|| optim::capture_tracked(&self.cfg, &tensors));
-        let info = optim::optimizer_step(&self.cfg, &mut tensors, &grads, &header)?;
+        let info = optim::optimizer_step(&self.cfg, &mut tensors, &grads, &header, self.threads)?;
         let step = header[slots::STEP] as usize;
         let (w_spec, dw_spec, dy_rms) = match tracked_old {
             Some(old) => {
@@ -282,6 +342,8 @@ impl NativeBackend {
 
         let mut out = state.to_vec();
         optim::write_back(&self.manifest, &tensors, &mut out);
+        sc.tensors = Some(tensors);
+        sc.grads = Some(grads);
         out[slots::STEP] = (step + 1) as f32;
         out[slots::LOSS] = loss as f32;
         out[slots::LR] = info.lr as f32;
@@ -322,8 +384,12 @@ impl NativeBackend {
             inputs.extend_from_slice(&tokens[row * w..row * w + t]);
             targets.extend_from_slice(&tokens[row * w + 1..row * w + w]);
         }
-        let (logits, _cache) = model.forward(&inputs, b, t)?;
+        let mut sc = self.scratch();
+        let mut cx = Ctx { threads: self.threads, arena: &mut sc.arena };
+        let (logits, cache) = model.forward_ctx(&inputs, b, t, &mut cx)?;
         let nll = model::token_nll(&logits, &targets);
+        cache.recycle(cx.arena);
+        cx.arena.put(logits);
         let mut per_nll = vec![0f32; b];
         let mut per_cnt = vec![0f32; b];
         for row in 0..b {
@@ -354,7 +420,9 @@ impl NativeBackend {
         anyhow::ensure!(tokens.len() == b * t, "logits tokens shape");
         anyhow::ensure!(pos.len() == b, "logits pos shape");
         let model = Model::from_prefix(&self.cfg, &self.manifest, prefix)?;
-        let (logits, _cache) = model.forward(tokens, b, t)?;
+        let mut sc = self.scratch();
+        let mut cx = Ctx { threads: self.threads, arena: &mut sc.arena };
+        let (logits, cache) = model.forward_ctx(tokens, b, t, &mut cx)?;
         let mut out = vec![0f32; b * v];
         for row in 0..b {
             let p = (pos[row].clamp(0, t as i32 - 1)) as usize;
@@ -363,6 +431,8 @@ impl NativeBackend {
                 *dst = val as f32;
             }
         }
+        cache.recycle(cx.arena);
+        cx.arena.put(logits);
         Ok(out)
     }
 }
@@ -592,6 +662,53 @@ mod tests {
         let lg = be.logits_at(prefix, &gen_toks, &pos).unwrap();
         assert_eq!(lg.len(), b * 32);
         assert!(lg.iter().all(|x| x.is_finite()));
+    }
+
+    /// Tensor-core acceptance: init and the full step (fwd + bwd +
+    /// optimizer + telemetry bookkeeping) are bit-identical across
+    /// thread budgets.
+    #[test]
+    fn threaded_step_is_bit_identical_to_serial() {
+        let v = z0();
+        let knobs = [50.0, 0.02, 0.01, 0.1, 0.0, 0.0, 0.0, 0.0];
+        let serial = NativeBackend::with_threads(&v, 1).unwrap();
+        let state0 = serial.init_state(3, &knobs);
+        let (b, w) = serial.batch_dims();
+        let toks = tiny_tokens(b, w, serial.manifest.vocab, 7);
+        let mut want = state0.clone();
+        for _ in 0..2 {
+            want = serial.step_state(&want, &toks).unwrap();
+        }
+        for threads in [2usize, 3, 8] {
+            let par = NativeBackend::with_threads(&v, threads).unwrap();
+            let init = par.init_state(3, &knobs);
+            for (i, (a, c)) in state0.iter().zip(&init).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "init slot {i}, threads {threads}");
+            }
+            let mut got = init;
+            for _ in 0..2 {
+                got = par.step_state(&got, &toks).unwrap();
+            }
+            for (i, (a, c)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "state slot {i}, threads {threads}");
+            }
+        }
+    }
+
+    /// Divergence observability: a NaN-poisoned weight must surface as a
+    /// NaN loss (the old matmul zero-skip could suppress IEEE
+    /// propagation and hide a diverged state from the monitor).
+    #[test]
+    fn nan_poisoned_weight_yields_nan_loss() {
+        let be = NativeBackend::new(&z0()).unwrap();
+        let knobs = [10.0, 0.01, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let mut state = be.init_state(0, &knobs);
+        let spec = be.manifest.tensor("attn_q_a").unwrap().clone();
+        state[spec.offset] = f32::NAN;
+        let (b, w) = be.batch_dims();
+        let toks = tiny_tokens(b, w, be.manifest.vocab, 2);
+        let gv = be.grad_vec(&state, &toks).unwrap();
+        assert!(gv[0].is_nan(), "NaN weight must yield NaN loss, got {}", gv[0]);
     }
 
     #[test]

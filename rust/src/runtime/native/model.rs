@@ -8,18 +8,36 @@
 //! forward graph — gradients land in the same tensor order the build
 //! side's `grad` program emits, so the two backends' grad vectors are
 //! directly comparable.
+//!
+//! Tensor-core integration (DESIGN.md §Native tensor core): every pass
+//! threads a [`Ctx`] — a thread budget plus a borrowed
+//! [`crate::linalg::Arena`] — so the hot loop's matmuls run row-parallel
+//! on the persistent pool and its intermediates recycle instead of
+//! allocating per step. Per-`(batch, head)` attention work fans out with
+//! each head owning its output slot. All of it is bit-identical to the
+//! serial allocating path at every thread count (the `parallel == serial`
+//! suite pins a whole train step).
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::VariantCfg;
-use crate::linalg::Mat;
+use crate::linalg::{Arena, Mat};
 use crate::runtime::layout::{is_factorized, matrix_dims, MATRIX_NAMES};
 use crate::runtime::Manifest;
+use crate::util::pool::{self, DisjointMut};
 
 const RMS_EPS: f64 = 1e-6;
 const ROPE_BASE: f64 = 10000.0;
+
+/// Execution context for the native fwd/bwd path: how many pool
+/// participants the row-parallel ops may use, and the arena the step
+/// loop recycles intermediates through.
+pub struct Ctx<'a> {
+    pub threads: usize,
+    pub arena: &'a mut Arena,
+}
 
 /// One per-layer matrix: dense `(m, n)` or a factor pair `A (m, r)`,
 /// `B (n, r)` with `y = (x B) Aᵀ`.
@@ -31,9 +49,33 @@ pub enum MatParam {
 impl MatParam {
     /// `y = W x` for a row-batch `x (tok, n)` -> `(tok, m)`.
     pub fn apply(&self, x: &Mat) -> Mat {
+        let mut ar = Arena::default();
+        self.apply_ctx(x, &mut Ctx { threads: 1, arena: &mut ar })
+    }
+
+    /// [`MatParam::apply`] on the tensor core: arena-backed output,
+    /// row-parallel matmuls — bit-identical to the serial path.
+    pub fn apply_ctx(&self, x: &Mat, cx: &mut Ctx) -> Mat {
         match self {
-            MatParam::Dense(w) => x.matmul(&w.t()),
-            MatParam::Fact { a, b } => x.matmul(b).matmul(&a.t()),
+            MatParam::Dense(w) => {
+                let mut wt = cx.arena.mat(0, 0);
+                w.t_into(&mut wt);
+                let mut out = cx.arena.mat(0, 0);
+                x.matmul_par_into(&wt, cx.threads, &mut out);
+                cx.arena.put(wt);
+                out
+            }
+            MatParam::Fact { a, b } => {
+                let mut u = cx.arena.mat(0, 0);
+                x.matmul_par_into(b, cx.threads, &mut u);
+                let mut at = cx.arena.mat(0, 0);
+                a.t_into(&mut at);
+                let mut out = cx.arena.mat(0, 0);
+                u.matmul_par_into(&at, cx.threads, &mut out);
+                cx.arena.put(u);
+                cx.arena.put(at);
+                out
+            }
         }
     }
 }
@@ -164,10 +206,11 @@ impl Model {
 
 /// Row-wise RMSNorm: `y = x * rsqrt(mean(x^2) + eps) * gain`. Returns
 /// `(y, inv)` with `inv` the per-row `rsqrt` (cached for backward).
-fn rms_norm(x: &Mat, gain: &[f64]) -> (Mat, Vec<f64>) {
+/// Output storage comes from the arena.
+fn rms_norm(x: &Mat, gain: &[f64], ar: &mut Arena) -> (Mat, Vec<f64>) {
     let d = x.cols;
-    let mut y = Mat::zeros(x.rows, d);
-    let mut invs = Vec::with_capacity(x.rows);
+    let mut y = ar.mat(x.rows, d);
+    let mut invs = ar.vec(x.rows);
     for i in 0..x.rows {
         let row = &x.data[i * d..(i + 1) * d];
         let ms = row.iter().map(|v| v * v).sum::<f64>() / d as f64;
@@ -176,15 +219,22 @@ fn rms_norm(x: &Mat, gain: &[f64]) -> (Mat, Vec<f64>) {
         for j in 0..d {
             out[j] = row[j] * inv * gain[j];
         }
-        invs.push(inv);
+        invs[i] = inv;
     }
     (y, invs)
 }
 
 /// Backward of [`rms_norm`]: returns `dx`, accumulates `dgain`.
-fn rms_norm_back(x: &Mat, gain: &[f64], inv: &[f64], dy: &Mat, dgain: &mut [f64]) -> Mat {
+fn rms_norm_back(
+    x: &Mat,
+    gain: &[f64],
+    inv: &[f64],
+    dy: &Mat,
+    dgain: &mut [f64],
+    ar: &mut Arena,
+) -> Mat {
     let d = x.cols;
-    let mut dx = Mat::zeros(x.rows, d);
+    let mut dx = ar.mat(x.rows, d);
     for i in 0..x.rows {
         let xr = &x.data[i * d..(i + 1) * d];
         let dyr = &dy.data[i * d..(i + 1) * d];
@@ -204,11 +254,11 @@ fn rms_norm_back(x: &Mat, gain: &[f64], inv: &[f64], dy: &Mat, dgain: &mut [f64]
     dx
 }
 
-/// RoPE cos/sin tables, `(seq, head_dim/2)` each.
-fn rope_tables(seq: usize, head_dim: usize) -> (Vec<f64>, Vec<f64>) {
+/// RoPE cos/sin tables, `(seq, head_dim/2)` each, arena-backed.
+fn rope_tables(seq: usize, head_dim: usize, ar: &mut Arena) -> (Vec<f64>, Vec<f64>) {
     let half = head_dim / 2;
-    let mut cos = vec![0.0; seq * half];
-    let mut sin = vec![0.0; seq * half];
+    let mut cos = ar.vec(seq * half);
+    let mut sin = ar.vec(seq * half);
     for t in 0..seq {
         for j in 0..half {
             let freq = ROPE_BASE.powf(-(j as f64) / half as f64);
@@ -244,14 +294,14 @@ fn apply_rope(x: &mut Mat, seq: usize, heads: usize, head_dim: usize, cos: &[f64
 }
 
 /// Extract the `(T, hd)` head view of batch `b`, head `h` from a flat
-/// `(B*T, d)` activation.
-fn head_view(x: &Mat, b: usize, h: usize, seq: usize, head_dim: usize) -> Mat {
-    let mut out = Mat::zeros(seq, head_dim);
+/// `(B*T, d)` activation into a reused buffer (every element is
+/// copy-overwritten, so the reshape skips zero-filling).
+fn head_view_into(x: &Mat, b: usize, h: usize, seq: usize, head_dim: usize, out: &mut Mat) {
+    out.reset_for_overwrite(seq, head_dim);
     for t in 0..seq {
         let src = &x.data[(b * seq + t) * x.cols + h * head_dim..];
         out.data[t * head_dim..(t + 1) * head_dim].copy_from_slice(&src[..head_dim]);
     }
-    out
 }
 
 /// Scatter-add a `(T, hd)` head gradient back into the flat layout.
@@ -301,17 +351,57 @@ pub struct Cache {
     hf: Mat,           // final-norm output
 }
 
+impl Cache {
+    /// Hand every buffer back to the arena so the next step reuses it.
+    /// Optional: dropping the cache instead merely loses the reuse.
+    pub fn recycle(self, ar: &mut Arena) {
+        for lc in self.layers {
+            for m in [
+                lc.x_in, lc.n1, lc.q, lc.k, lc.v, lc.ctx, lc.h_mid, lc.n2, lc.gate, lc.up,
+                lc.inner,
+            ] {
+                ar.put(m);
+            }
+            for p in lc.probs {
+                ar.put(p);
+            }
+            ar.put_vec(lc.inv1);
+            ar.put_vec(lc.inv2);
+        }
+        ar.put(self.h_last);
+        ar.put(self.hf);
+        ar.put_vec(self.invf);
+        ar.put_vec(self.cos);
+        ar.put_vec(self.sin);
+    }
+}
+
 impl Model {
     /// Forward over flat `(bsz, seq)` input ids; returns `(logits, cache)`
-    /// with logits `(bsz*seq, vocab)`.
+    /// with logits `(bsz*seq, vocab)`. Serial compatibility wrapper over
+    /// [`Model::forward_ctx`].
     pub fn forward(&self, ids: &[i32], bsz: usize, seq: usize) -> Result<(Mat, Cache)> {
+        let mut ar = Arena::default();
+        self.forward_ctx(ids, bsz, seq, &mut Ctx { threads: 1, arena: &mut ar })
+    }
+
+    /// The tensor-core forward: arena-recycled intermediates, row-parallel
+    /// matmuls, per-`(batch, head)` attention fan-out — bit-identical to
+    /// the serial path at every `cx.threads`.
+    pub fn forward_ctx(
+        &self,
+        ids: &[i32],
+        bsz: usize,
+        seq: usize,
+        cx: &mut Ctx,
+    ) -> Result<(Mat, Cache)> {
         anyhow::ensure!(ids.len() == bsz * seq, "token shape mismatch");
         let d = self.hidden;
-        let (cos, sin) = rope_tables(seq, self.head_dim);
+        let (cos, sin) = rope_tables(seq, self.head_dim, cx.arena);
         let scale = 1.0 / (self.head_dim as f64).sqrt();
 
         // embedding lookup
-        let mut h = Mat::zeros(bsz * seq, d);
+        let mut h = cx.arena.mat(bsz * seq, d);
         for (i, &id) in ids.iter().enumerate() {
             anyhow::ensure!(
                 (0..self.vocab as i32).contains(&id),
@@ -324,68 +414,94 @@ impl Model {
 
         let mut layers = Vec::with_capacity(self.layers);
         for block in &self.blocks {
-            let x_in = h.clone();
-            let (n1, inv1) = rms_norm(&h, &block.rms1);
-            let mut q = block.mats[mat_idx("attn_q")].apply(&n1);
-            let mut k = block.mats[mat_idx("attn_k")].apply(&n1);
-            let v = block.mats[mat_idx("attn_v")].apply(&n1);
+            // the entry activation moves into the cache (the pre-refactor
+            // code cloned it; the values are identical)
+            let x_in = h;
+            let (n1, inv1) = rms_norm(&x_in, &block.rms1, cx.arena);
+            let mut q = block.mats[mat_idx("attn_q")].apply_ctx(&n1, cx);
+            let mut k = block.mats[mat_idx("attn_k")].apply_ctx(&n1, cx);
+            let v = block.mats[mat_idx("attn_v")].apply_ctx(&n1, cx);
             apply_rope(&mut q, seq, self.heads, self.head_dim, &cos, &sin, 1.0);
             apply_rope(&mut k, seq, self.heads, self.head_dim, &cos, &sin, 1.0);
 
-            let mut probs = Vec::with_capacity(bsz * self.heads);
-            let mut ctx = Mat::zeros(bsz * seq, d);
-            for b in 0..bsz {
-                for hh in 0..self.heads {
-                    let qh = head_view(&q, b, hh, seq, self.head_dim);
-                    let kh = head_view(&k, b, hh, seq, self.head_dim);
-                    let vh = head_view(&v, b, hh, seq, self.head_dim);
-                    // causal softmax over s <= t
-                    let mut p = Mat::zeros(seq, seq);
-                    for t in 0..seq {
-                        let qrow = &qh.data[t * self.head_dim..(t + 1) * self.head_dim];
-                        let mut mx = f64::NEG_INFINITY;
-                        let mut srow = vec![0.0; t + 1];
-                        for (s, sv) in srow.iter_mut().enumerate() {
-                            let krow = &kh.data[s * self.head_dim..(s + 1) * self.head_dim];
-                            *sv = super::kernels::dot(qrow, krow) * scale;
-                            if *sv > mx {
-                                mx = *sv;
+            // per-(batch, head) fan-out: each index owns its probs slot
+            // and its (T, hd) context slot; the serial scatter below
+            // assembles them in the fixed b-major order
+            let nh = bsz * self.heads;
+            let mut probs: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(seq, seq)).collect();
+            let mut ctx_heads: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
+            {
+                let pslots = DisjointMut::new(&mut probs);
+                let cslots = DisjointMut::new(&mut ctx_heads);
+                let (heads, hd) = (self.heads, self.head_dim);
+                let (q_ref, k_ref, v_ref) = (&q, &k, &v);
+                // per-chunk scratch: head views allocate once per chunk
+                // and are fully overwritten per index, so reuse across
+                // the chunk's bh range is invisible to the values
+                pool::chunked_for(cx.threads, nh, &|lo, hi| {
+                    let mut qh = Mat::zeros(0, 0);
+                    let mut kh = Mat::zeros(0, 0);
+                    let mut vh = Mat::zeros(0, 0);
+                    let mut srow = Vec::new();
+                    for bh in lo..hi {
+                        let (b, hh) = (bh / heads, bh % heads);
+                        // disjoint: slot bh belongs to this chunk alone
+                        let p = unsafe { pslots.item_mut(bh) };
+                        let ch = unsafe { cslots.item_mut(bh) };
+                        head_view_into(q_ref, b, hh, seq, hd, &mut qh);
+                        head_view_into(k_ref, b, hh, seq, hd, &mut kh);
+                        head_view_into(v_ref, b, hh, seq, hd, &mut vh);
+                        // causal softmax over s <= t
+                        for t in 0..seq {
+                            let qrow = &qh.data[t * hd..(t + 1) * hd];
+                            let mut mx = f64::NEG_INFINITY;
+                            srow.clear();
+                            srow.resize(t + 1, 0.0);
+                            for (s, sv) in srow.iter_mut().enumerate() {
+                                let krow = &kh.data[s * hd..(s + 1) * hd];
+                                *sv = super::kernels::dot(qrow, krow) * scale;
+                                if *sv > mx {
+                                    mx = *sv;
+                                }
+                            }
+                            let mut z = 0.0;
+                            for sv in srow.iter_mut() {
+                                *sv = (*sv - mx).exp();
+                                z += *sv;
+                            }
+                            for (s, sv) in srow.iter().enumerate() {
+                                p.data[t * seq + s] = sv / z;
                             }
                         }
-                        let mut z = 0.0;
-                        for sv in srow.iter_mut() {
-                            *sv = (*sv - mx).exp();
-                            z += *sv;
-                        }
-                        for (s, sv) in srow.iter().enumerate() {
-                            p.data[t * seq + s] = sv / z;
-                        }
+                        p.matmul_into(&vh, ch); // (T, hd)
                     }
-                    let ctx_h = p.matmul(&vh); // (T, hd)
-                    head_scatter(&mut ctx, &ctx_h, b, hh, seq, self.head_dim);
-                    probs.push(p);
-                }
+                });
+            }
+            let mut ctx = cx.arena.mat(bsz * seq, d);
+            for (bh, ch) in ctx_heads.iter().enumerate() {
+                head_scatter(&mut ctx, ch, bh / self.heads, bh % self.heads, seq, self.head_dim);
+            }
+            for ch in ctx_heads {
+                cx.arena.put(ch);
             }
 
-            let attn_out = block.mats[mat_idx("attn_o")].apply(&ctx);
-            let mut h_mid = x_in.clone();
-            for (o, a) in h_mid.data.iter_mut().zip(&attn_out.data) {
-                *o += a;
-            }
+            let attn_out = block.mats[mat_idx("attn_o")].apply_ctx(&ctx, cx);
+            let mut h_mid = cx.arena.mat_from(&x_in);
+            h_mid.add_assign(&attn_out);
+            cx.arena.put(attn_out);
 
-            let (n2, inv2) = rms_norm(&h_mid, &block.rms2);
-            let gate = block.mats[mat_idx("ffn_gate")].apply(&n2);
-            let up = block.mats[mat_idx("ffn_up")].apply(&n2);
-            let mut inner = Mat::zeros(gate.rows, gate.cols);
+            let (n2, inv2) = rms_norm(&h_mid, &block.rms2, cx.arena);
+            let gate = block.mats[mat_idx("ffn_gate")].apply_ctx(&n2, cx);
+            let up = block.mats[mat_idx("ffn_up")].apply_ctx(&n2, cx);
+            let mut inner = cx.arena.mat(gate.rows, gate.cols);
             for i in 0..inner.data.len() {
                 let g = gate.data[i];
                 inner.data[i] = g * sigmoid(g) * up.data[i];
             }
-            let down = block.mats[mat_idx("ffn_down")].apply(&inner);
-            let mut h_out = h_mid.clone();
-            for (o, a) in h_out.data.iter_mut().zip(&down.data) {
-                *o += a;
-            }
+            let down = block.mats[mat_idx("ffn_down")].apply_ctx(&inner, cx);
+            let mut h_out = cx.arena.mat_from(&h_mid);
+            h_out.add_assign(&down);
+            cx.arena.put(down);
 
             layers.push(LayerCache {
                 x_in,
@@ -406,8 +522,12 @@ impl Model {
             h = h_out;
         }
 
-        let (hf, invf) = rms_norm(&h, &self.rms_f);
-        let logits = hf.matmul(&self.head.t()); // (B*T, V)
+        let (hf, invf) = rms_norm(&h, &self.rms_f, cx.arena);
+        let mut headt = cx.arena.mat(0, 0);
+        self.head.t_into(&mut headt);
+        let mut logits = cx.arena.mat(0, 0);
+        hf.matmul_par_into(&headt, cx.threads, &mut logits); // (B*T, V)
+        cx.arena.put(headt);
         let cache = Cache {
             bsz,
             seq,
@@ -424,8 +544,19 @@ impl Model {
 
     /// Reverse-mode pass from `dlogits` `(B*T, V)`; returns flat f64
     /// gradients keyed by parameter tensor name (stacked layer layout,
-    /// same shapes as the manifest).
+    /// same shapes as the manifest). Serial wrapper over
+    /// [`Model::backward_ctx`].
     pub fn backward(&self, cache: &Cache, dlogits: &Mat) -> BTreeMap<String, Vec<f64>> {
+        let mut ar = Arena::default();
+        self.backward_ctx(cache, dlogits, &mut Ctx { threads: 1, arena: &mut ar })
+    }
+
+    pub fn backward_ctx(
+        &self,
+        cache: &Cache,
+        dlogits: &Mat,
+        cx: &mut Ctx,
+    ) -> BTreeMap<String, Vec<f64>> {
         let d = self.hidden;
         let (bsz, seq) = (cache.bsz, cache.seq);
         let scale = 1.0 / (self.head_dim as f64).sqrt();
@@ -438,14 +569,21 @@ impl Model {
         let mut drms_f = vec![0.0; d];
 
         // head: logits = hf @ headᵀ
-        let dhf = dlogits.matmul(&self.head); // (BT, d)
+        let mut dhf = cx.arena.mat(0, 0);
+        dlogits.matmul_par_into(&self.head, cx.threads, &mut dhf); // (BT, d)
         {
-            let dh = dlogits.t().matmul(&cache.hf); // (V, d)
-            for (o, v) in dhead.iter_mut().zip(&dh.data) {
+            let mut dlt = cx.arena.mat(0, 0);
+            dlogits.t_into(&mut dlt);
+            let mut dh_head = cx.arena.mat(0, 0);
+            dlt.matmul_par_into(&cache.hf, cx.threads, &mut dh_head); // (V, d)
+            for (o, v) in dhead.iter_mut().zip(&dh_head.data) {
                 *o += v;
             }
+            cx.arena.put(dlt);
+            cx.arena.put(dh_head);
         }
-        let mut dh = rms_norm_back(&cache.h_last, &self.rms_f, &cache.invf, &dhf, &mut drms_f);
+        let mut dh = rms_norm_back(&cache.h_last, &self.rms_f, &cache.invf, &dhf, &mut drms_f, cx.arena);
+        cx.arena.put(dhf);
 
         // per-matrix stacked grads, allocated lazily per layer below
         let mut mat_grads: BTreeMap<String, Vec<f64>> = BTreeMap::new();
@@ -460,10 +598,11 @@ impl Model {
                 &lc.inner,
                 &dh,
                 &mut mat_grads,
+                cx,
             );
             // inner = silu(gate) * up
-            let mut dgate = Mat::zeros(lc.gate.rows, lc.gate.cols);
-            let mut dup = Mat::zeros(lc.up.rows, lc.up.cols);
+            let mut dgate = cx.arena.mat(lc.gate.rows, lc.gate.cols);
+            let mut dup = cx.arena.mat(lc.up.rows, lc.up.cols);
             for i in 0..dinner.data.len() {
                 let gt = lc.gate.data[i];
                 let sg = sigmoid(gt);
@@ -471,6 +610,7 @@ impl Model {
                 dup.data[i] = dinner.data[i] * silu;
                 dgate.data[i] = dinner.data[i] * lc.up.data[i] * (sg * (1.0 + gt * (1.0 - sg)));
             }
+            cx.arena.put(dinner);
             let mut dn2 = self.mat_backward(
                 lyr,
                 "ffn_gate",
@@ -478,6 +618,7 @@ impl Model {
                 &lc.n2,
                 &dgate,
                 &mut mat_grads,
+                cx,
             );
             let dn2_up = self.mat_backward(
                 lyr,
@@ -486,10 +627,12 @@ impl Model {
                 &lc.n2,
                 &dup,
                 &mut mat_grads,
+                cx,
             );
-            for (o, v) in dn2.data.iter_mut().zip(&dn2_up.data) {
-                *o += v;
-            }
+            dn2.add_assign(&dn2_up);
+            cx.arena.put(dn2_up);
+            cx.arena.put(dgate);
+            cx.arena.put(dup);
             // h_mid feeds rms2 AND the residual skip
             let mut dh_mid = rms_norm_back(
                 &lc.h_mid,
@@ -497,10 +640,11 @@ impl Model {
                 &lc.inv2,
                 &dn2,
                 &mut drms2[lyr * d..(lyr + 1) * d],
+                cx.arena,
             );
-            for (o, v) in dh_mid.data.iter_mut().zip(&dh.data) {
-                *o += v;
-            }
+            dh_mid.add_assign(&dh);
+            cx.arena.put(dn2);
+            cx.arena.put(dh);
 
             // ---- attention ----
             // h_mid = x_in + attn_o(ctx)
@@ -511,40 +655,82 @@ impl Model {
                 &lc.ctx,
                 &dh_mid,
                 &mut mat_grads,
+                cx,
             );
-            let mut dq = Mat::zeros(bsz * seq, d);
-            let mut dk = Mat::zeros(bsz * seq, d);
-            let mut dv = Mat::zeros(bsz * seq, d);
-            for b in 0..bsz {
-                for hh in 0..self.heads {
-                    let p = &lc.probs[b * self.heads + hh];
-                    let qh = head_view(&lc.q, b, hh, seq, self.head_dim);
-                    let kh = head_view(&lc.k, b, hh, seq, self.head_dim);
-                    let vh = head_view(&lc.v, b, hh, seq, self.head_dim);
-                    let dctx_h = head_view(&dctx, b, hh, seq, self.head_dim);
-                    // ctx_h = P V ; dV = Pᵀ dctx ; dPin = dctx Vᵀ
-                    let dvh = p.t().matmul(&dctx_h);
-                    let dpin = dctx_h.matmul(&vh.t()); // (T, T)
-                    // softmax backward row-wise: dS = P ∘ (dPin - Σ P∘dPin)
-                    let mut ds = Mat::zeros(seq, seq);
-                    for t in 0..seq {
-                        let mut row_dot = 0.0;
-                        for s in 0..=t {
-                            row_dot += p.data[t * seq + s] * dpin.data[t * seq + s];
+            // per-(batch, head) fan-out: head gradients land in per-slot
+            // buffers, then scatter serially in the fixed order
+            let nh = bsz * self.heads;
+            let mut dqhs: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
+            let mut dkhs: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
+            let mut dvhs: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
+            {
+                let qslots = DisjointMut::new(&mut dqhs);
+                let kslots = DisjointMut::new(&mut dkhs);
+                let vslots = DisjointMut::new(&mut dvhs);
+                let (heads, hd) = (self.heads, self.head_dim);
+                let dctx_ref = &dctx;
+                // per-chunk scratch, fully overwritten per index (ds is
+                // reset explicitly: only its lower triangle is written
+                // but its matmuls read whole rows)
+                pool::chunked_for(cx.threads, nh, &|lo, hi| {
+                    let mut qh = Mat::zeros(0, 0);
+                    let mut kh = Mat::zeros(0, 0);
+                    let mut vh = Mat::zeros(0, 0);
+                    let mut dctx_h = Mat::zeros(0, 0);
+                    let mut pt = Mat::zeros(0, 0);
+                    let mut vt = Mat::zeros(0, 0);
+                    let mut dpin = Mat::zeros(0, 0);
+                    let mut ds = Mat::zeros(0, 0);
+                    let mut dst = Mat::zeros(0, 0);
+                    for bh in lo..hi {
+                        let (b, hh) = (bh / heads, bh % heads);
+                        let p = &lc.probs[bh];
+                        head_view_into(&lc.q, b, hh, seq, hd, &mut qh);
+                        head_view_into(&lc.k, b, hh, seq, hd, &mut kh);
+                        head_view_into(&lc.v, b, hh, seq, hd, &mut vh);
+                        head_view_into(dctx_ref, b, hh, seq, hd, &mut dctx_h);
+                        // ctx_h = P V ; dV = Pᵀ dctx ; dPin = dctx Vᵀ
+                        let dvh = unsafe { vslots.item_mut(bh) };
+                        p.t_into(&mut pt);
+                        pt.matmul_into(&dctx_h, dvh);
+                        vh.t_into(&mut vt);
+                        dctx_h.matmul_into(&vt, &mut dpin); // (T, T)
+                        // softmax backward row-wise: dS = P ∘ (dPin - Σ P∘dPin)
+                        ds.reset(seq, seq);
+                        for t in 0..seq {
+                            let mut row_dot = 0.0;
+                            for s in 0..=t {
+                                row_dot += p.data[t * seq + s] * dpin.data[t * seq + s];
+                            }
+                            for s in 0..=t {
+                                ds.data[t * seq + s] =
+                                    p.data[t * seq + s] * (dpin.data[t * seq + s] - row_dot);
+                            }
                         }
-                        for s in 0..=t {
-                            ds.data[t * seq + s] =
-                                p.data[t * seq + s] * (dpin.data[t * seq + s] - row_dot);
-                        }
+                        // S = (Q Kᵀ) * scale
+                        let dqh = unsafe { qslots.item_mut(bh) };
+                        ds.matmul_into(&kh, dqh);
+                        dqh.scale_assign(scale);
+                        let dkh = unsafe { kslots.item_mut(bh) };
+                        ds.t_into(&mut dst);
+                        dst.matmul_into(&qh, dkh);
+                        dkh.scale_assign(scale);
                     }
-                    // S = (Q Kᵀ) * scale
-                    let dqh = ds.matmul(&kh).scale(scale);
-                    let dkh = ds.t().matmul(&qh).scale(scale);
-                    head_scatter(&mut dq, &dqh, b, hh, seq, self.head_dim);
-                    head_scatter(&mut dk, &dkh, b, hh, seq, self.head_dim);
-                    head_scatter(&mut dv, &dvh, b, hh, seq, self.head_dim);
-                }
+                });
             }
+            let mut dq = cx.arena.mat(bsz * seq, d);
+            let mut dk = cx.arena.mat(bsz * seq, d);
+            let mut dv = cx.arena.mat(bsz * seq, d);
+            for bh in 0..nh {
+                let (b, hh) = (bh / self.heads, bh % self.heads);
+                head_scatter(&mut dq, &dqhs[bh], b, hh, seq, self.head_dim);
+                head_scatter(&mut dk, &dkhs[bh], b, hh, seq, self.head_dim);
+                head_scatter(&mut dv, &dvhs[bh], b, hh, seq, self.head_dim);
+            }
+            for m in dqhs.into_iter().chain(dkhs).chain(dvhs) {
+                cx.arena.put(m);
+            }
+            cx.arena.put(dctx);
             // inverse rotation (RoPE backward)
             apply_rope(&mut dq, seq, self.heads, self.head_dim, &cache.cos, &cache.sin, -1.0);
             apply_rope(&mut dk, seq, self.heads, self.head_dim, &cache.cos, &cache.sin, -1.0);
@@ -556,6 +742,7 @@ impl Model {
                 &lc.n1,
                 &dq,
                 &mut mat_grads,
+                cx,
             );
             for (name, dyy) in [("attn_k", &dk), ("attn_v", &dv)] {
                 let part = self.mat_backward(
@@ -565,21 +752,25 @@ impl Model {
                     &lc.n1,
                     dyy,
                     &mut mat_grads,
+                    cx,
                 );
-                for (o, v) in dn1.data.iter_mut().zip(&part.data) {
-                    *o += v;
-                }
+                dn1.add_assign(&part);
+                cx.arena.put(part);
             }
+            cx.arena.put(dq);
+            cx.arena.put(dk);
+            cx.arena.put(dv);
             let mut dx = rms_norm_back(
                 &lc.x_in,
                 &block.rms1,
                 &lc.inv1,
                 &dn1,
                 &mut drms1[lyr * d..(lyr + 1) * d],
+                cx.arena,
             );
-            for (o, v) in dx.data.iter_mut().zip(&dh_mid.data) {
-                *o += v;
-            }
+            dx.add_assign(&dh_mid);
+            cx.arena.put(dn1);
+            cx.arena.put(dh_mid);
             dh = dx;
         }
 
@@ -590,6 +781,7 @@ impl Model {
                 dembed[row + j] += dh.data[i * d + j];
             }
         }
+        cx.arena.put(dh);
 
         grads.insert("embed".into(), dembed);
         grads.insert("head".into(), dhead);
@@ -601,7 +793,8 @@ impl Model {
     }
 
     /// Backward through one per-layer matrix apply: accumulates the
-    /// stacked weight gradient(s), returns `dx`.
+    /// stacked weight gradient(s), returns `dx` (arena-backed).
+    #[allow(clippy::too_many_arguments)]
     fn mat_backward(
         &self,
         lyr: usize,
@@ -610,25 +803,41 @@ impl Model {
         x: &Mat,
         dy: &Mat,
         mat_grads: &mut BTreeMap<String, Vec<f64>>,
+        cx: &mut Ctx,
     ) -> Mat {
         match p {
             MatParam::Dense(w) => {
                 let per = w.rows * w.cols;
+                let mut dyt = cx.arena.mat(0, 0);
+                dy.t_into(&mut dyt);
+                let mut dw = cx.arena.mat(0, 0);
+                dyt.matmul_par_into(x, cx.threads, &mut dw); // (m, n)
                 let gw = mat_grads
                     .entry(name.to_string())
                     .or_insert_with(|| vec![0.0; self.layers * per]);
-                let dw = dy.t().matmul(x); // (m, n)
                 for (o, v) in gw[lyr * per..(lyr + 1) * per].iter_mut().zip(&dw.data) {
                     *o += v;
                 }
-                dy.matmul(w)
+                cx.arena.put(dyt);
+                cx.arena.put(dw);
+                let mut dx = cx.arena.mat(0, 0);
+                dy.matmul_par_into(w, cx.threads, &mut dx);
+                dx
             }
             MatParam::Fact { a, b } => {
                 let (pa, pb) = (a.rows * a.cols, b.rows * b.cols);
-                let u = x.matmul(b); // (tok, r)
-                let da = dy.t().matmul(&u); // (m, r)
-                let du = dy.matmul(a); // (tok, r)
-                let db = x.t().matmul(&du); // (n, r)
+                let mut u = cx.arena.mat(0, 0);
+                x.matmul_par_into(b, cx.threads, &mut u); // (tok, r)
+                let mut dyt = cx.arena.mat(0, 0);
+                dy.t_into(&mut dyt);
+                let mut da = cx.arena.mat(0, 0);
+                dyt.matmul_par_into(&u, cx.threads, &mut da); // (m, r)
+                let mut du = cx.arena.mat(0, 0);
+                dy.matmul_par_into(a, cx.threads, &mut du); // (tok, r)
+                let mut xt = cx.arena.mat(0, 0);
+                x.t_into(&mut xt);
+                let mut db = cx.arena.mat(0, 0);
+                xt.matmul_par_into(&du, cx.threads, &mut db); // (n, r)
                 {
                     let ga = mat_grads
                         .entry(format!("{name}_a"))
@@ -645,7 +854,14 @@ impl Model {
                         *o += v;
                     }
                 }
-                du.matmul(&b.t())
+                let mut bt = cx.arena.mat(0, 0);
+                b.t_into(&mut bt);
+                let mut dx = cx.arena.mat(0, 0);
+                du.matmul_par_into(&bt, cx.threads, &mut dx);
+                for m in [u, dyt, da, du, xt, db, bt] {
+                    cx.arena.put(m);
+                }
+                dx
             }
         }
     }
@@ -672,9 +888,15 @@ pub fn token_nll(logits: &Mat, targets: &[i32]) -> Vec<f64> {
 
 /// `d(mean nll)/d logits`: `(softmax - onehot) / n_tok`.
 pub fn mean_nll_backward(logits: &Mat, targets: &[i32]) -> Mat {
+    let mut ar = Arena::default();
+    mean_nll_backward_ar(logits, targets, &mut ar)
+}
+
+/// [`mean_nll_backward`] with arena-backed output.
+pub fn mean_nll_backward_ar(logits: &Mat, targets: &[i32], ar: &mut Arena) -> Mat {
     let v = logits.cols;
     let n = targets.len() as f64;
-    let mut dl = Mat::zeros(logits.rows, v);
+    let mut dl = ar.mat(logits.rows, v);
     for (i, &tgt) in targets.iter().enumerate() {
         let row = &logits.data[i * v..(i + 1) * v];
         let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);

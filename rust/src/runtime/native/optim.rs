@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
-use super::kernels::{self, power_iter, K_NS, K_POWER};
+use super::kernels::{self, power_iter, power_iter_inplace, PowerScratch, K_NS, K_POWER};
 use crate::config::VariantCfg;
 use crate::linalg::{self, newton_schulz, Mat};
 use crate::runtime::layout::{
@@ -22,6 +22,7 @@ use crate::runtime::layout::{
 };
 use crate::runtime::state as slots;
 use crate::runtime::Manifest;
+use crate::util::pool::{self, DisjointMut};
 use crate::util::rng::Pcg64;
 
 pub const ADAM_B1: f64 = 0.9;
@@ -49,17 +50,42 @@ pub type TenMap = BTreeMap<String, Ten>;
 
 /// Decode every manifest tensor of `state` into f64 storage.
 pub fn state_to_tensors(manifest: &Manifest, state: &[f32]) -> TenMap {
-    manifest
-        .tensors
-        .iter()
-        .map(|spec| {
-            let data = state[spec.offset..spec.offset + spec.size()]
-                .iter()
-                .map(|&x| x as f64)
-                .collect();
-            (spec.name.clone(), Ten { shape: spec.shape.clone(), data })
-        })
-        .collect()
+    state_to_tensors_reuse(manifest, state, None)
+}
+
+/// [`state_to_tensors`] recycling a previous step's map: when `reuse`
+/// carries a tensor of the right size its storage is overwritten in
+/// place instead of reallocated — the per-step decode of the whole
+/// optimizer state becomes allocation-free in steady state
+/// (DESIGN.md §Native tensor core).
+pub fn state_to_tensors_reuse(
+    manifest: &Manifest,
+    state: &[f32],
+    reuse: Option<TenMap>,
+) -> TenMap {
+    let mut map = reuse.unwrap_or_default();
+    for spec in &manifest.tensors {
+        let view = &state[spec.offset..spec.offset + spec.size()];
+        match map.get_mut(&spec.name) {
+            Some(t) if t.data.len() == view.len() => {
+                for (d, &s) in t.data.iter_mut().zip(view) {
+                    *d = s as f64;
+                }
+                t.shape.clear();
+                t.shape.extend_from_slice(&spec.shape);
+            }
+            _ => {
+                map.insert(
+                    spec.name.clone(),
+                    Ten {
+                        shape: spec.shape.clone(),
+                        data: view.iter().map(|&x| x as f64).collect(),
+                    },
+                );
+            }
+        }
+    }
+    map
 }
 
 /// Write every tensor back into the flat f32 state.
@@ -105,6 +131,30 @@ pub struct Info {
     pub lr: f64,
 }
 
+/// The element-independent updates below are chunk-parallel: each pool
+/// task owns a contiguous index range (`pool::chunk_bounds`) and every
+/// element's arithmetic is untouched, so results are bit-identical to
+/// the serial loops at any thread count.
+fn adamw_range(
+    p: &mut [f64],
+    g: &[f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    bc1: f64,
+    bc2: f64,
+    lr: f64,
+    wd: f64,
+) {
+    for i in 0..p.len() {
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + wd * p[i]);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn adamw_update(
     p: &mut [f64],
     g: &[f64],
@@ -113,16 +163,49 @@ fn adamw_update(
     t: f64,
     lr: f64,
     wd: f64,
+    threads: usize,
 ) {
     let bc1 = 1.0 - ADAM_B1.powf(t + 1.0);
     let bc2 = 1.0 - ADAM_B2.powf(t + 1.0);
-    for i in 0..p.len() {
-        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
-        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
-        let mhat = m[i] / bc1;
-        let vhat = v[i] / bc2;
-        p[i] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + wd * p[i]);
-    }
+    let n = p.len();
+    let ps = DisjointMut::new(p);
+    let ms = DisjointMut::new(m);
+    let vs = DisjointMut::new(v);
+    pool::chunked_for(threads, n, &|lo, hi| {
+        let pp = unsafe { ps.range_mut(lo, hi - lo) };
+        let mm = unsafe { ms.range_mut(lo, hi - lo) };
+        let vv = unsafe { vs.range_mut(lo, hi - lo) };
+        adamw_range(pp, &g[lo..hi], mm, vv, bc1, bc2, lr, wd);
+    });
+}
+
+/// `mom = MOMENTUM * mom + (1 - MOMENTUM) * g`, chunk-parallel.
+fn momentum_update(mom: &mut [f64], g: &[f64], threads: usize) {
+    let n = mom.len();
+    let moms = DisjointMut::new(mom);
+    pool::chunked_for(threads, n, &|lo, hi| {
+        let mm = unsafe { moms.range_mut(lo, hi - lo) };
+        for (k, m) in mm.iter_mut().enumerate() {
+            *m = MOMENTUM * *m + (1.0 - MOMENTUM) * g[lo + k];
+        }
+    });
+}
+
+/// Fused momentum-SGD update (momentum refresh + decayed step),
+/// chunk-parallel.
+fn sgd_update(p: &mut [f64], mom: &mut [f64], g: &[f64], lr: f64, wdd: f64, threads: usize) {
+    let n = p.len();
+    let ps = DisjointMut::new(p);
+    let ms = DisjointMut::new(mom);
+    pool::chunked_for(threads, n, &|lo, hi| {
+        let pp = unsafe { ps.range_mut(lo, hi - lo) };
+        let mm = unsafe { ms.range_mut(lo, hi - lo) };
+        let gg = &g[lo..hi];
+        for i in 0..pp.len() {
+            mm[i] = MOMENTUM * mm[i] + (1.0 - MOMENTUM) * gg[i];
+            pp[i] -= lr * mm[i] + lr * wdd * pp[i];
+        }
+    });
 }
 
 /// Take a tensor's storage out of the map to mutate alongside siblings
@@ -146,13 +229,14 @@ fn adamw_all(
     t: f64,
     lr_eff: f64,
     wd: f64,
+    threads: usize,
 ) -> Result<()> {
     for n in names {
         let g = grad_of(grads, n)?;
         let mut p = take(tensors, n);
         let mut m = take(tensors, &format!("opt.m.{n}"));
         let mut v = take(tensors, &format!("opt.v.{n}"));
-        adamw_update(&mut p.data, g, &mut m.data, &mut v.data, t, lr_eff, wd * decay(n));
+        adamw_update(&mut p.data, g, &mut m.data, &mut v.data, t, lr_eff, wd * decay(n), threads);
         tensors.insert(n.clone(), p);
         tensors.insert(format!("opt.m.{n}"), m);
         tensors.insert(format!("opt.v.{n}"), v);
@@ -162,12 +246,16 @@ fn adamw_all(
 
 /// One optimizer step, in place over `tensors`. `grads` holds f64
 /// parameter gradients keyed by name (the model's `backward` output or a
-/// decoded grad vector). Mirrors `optim.optimizer_step`.
+/// decoded grad vector). Mirrors `optim.optimizer_step`. `threads` is the
+/// tensor-core budget: per-layer power iterations and Newton-Schulz
+/// blocks fan across the pool, elementwise updates run chunk-parallel —
+/// all bit-identical to `threads = 1` (DESIGN.md §Native tensor core).
 pub fn optimizer_step(
     cfg: &VariantCfg,
     tensors: &mut TenMap,
     grads: &BTreeMap<String, Vec<f64>>,
     header: &[f64],
+    threads: usize,
 ) -> Result<Info> {
     let opt = cfg.optimizer.as_str();
     let t = header[slots::STEP];
@@ -178,7 +266,7 @@ pub fn optimizer_step(
     let pnames = param_names(cfg);
     match opt {
         "adamw" => {
-            adamw_all(tensors, grads, &pnames, t, lr, wd)?;
+            adamw_all(tensors, grads, &pnames, t, lr, wd, threads)?;
             return Ok(info);
         }
         "selfguided" => {
@@ -192,10 +280,7 @@ pub fn optimizer_step(
                 let g = grad_of(grads, n)?;
                 let mut p = take(tensors, n);
                 let mut mom = take(tensors, &format!("opt.mom.{n}"));
-                for i in 0..p.data.len() {
-                    mom.data[i] = MOMENTUM * mom.data[i] + (1.0 - MOMENTUM) * g[i];
-                    p.data[i] -= lr * mom.data[i] + lr * wd * decay(n) * p.data[i];
-                }
+                sgd_update(&mut p.data, &mut mom.data, g, lr, wd * decay(n), threads);
                 tensors.insert(n.clone(), p);
                 tensors.insert(format!("opt.mom.{n}"), mom);
             }
@@ -209,15 +294,13 @@ pub fn optimizer_step(
     let mats = matrix_param_names(cfg);
     let others: Vec<String> =
         pnames.iter().filter(|n| !mats.contains(*n)).cloned().collect();
-    adamw_all(tensors, grads, &others, t, lr * cfg.emb_lr_mult, wd)?;
+    adamw_all(tensors, grads, &others, t, lr * cfg.emb_lr_mult, wd, threads)?;
 
     // momentum for every matrix tensor
     for n in &mats {
         let g = grad_of(grads, n)?;
         let mom = tensors.get_mut(&format!("opt.mom.{n}")).expect("momentum slot");
-        for i in 0..mom.data.len() {
-            mom.data[i] = MOMENTUM * mom.data[i] + (1.0 - MOMENTUM) * g[i];
-        }
+        momentum_update(&mut mom.data, g, threads);
     }
 
     let pairs = factor_pairs(cfg);
@@ -235,7 +318,7 @@ pub fn optimizer_step(
         let mom = &tensors[&format!("opt.mom.{n}")];
         let layers = mom.shape[0];
         let (mm, nn) = (mom.shape[1], mom.shape[2]);
-        let ortho = kernels::newton_schulz_stacked(&mom.data, layers, mm, nn);
+        let ortho = kernels::newton_schulz_stacked(&mom.data, layers, mm, nn, threads);
         let p = tensors.get_mut(n).expect("matrix param");
         for i in 0..p.data.len() {
             p.data[i] -= lr * ortho[i] + lr * wd * p.data[i];
@@ -259,21 +342,39 @@ pub fn optimizer_step(
 
         let mut sig_a = vec![0.0; layers];
         let mut sig_b = vec![0.0; layers];
-        for l in 0..layers {
-            let (sa, ua) = power_iter(&a_t.layer(l), &u_a.data[l * am..(l + 1) * am], K_POWER);
-            let (sb, ub) = power_iter(&b_t.layer(l), &u_b.data[l * bm..(l + 1) * bm], K_POWER);
-            u_a.data[l * am..(l + 1) * am].copy_from_slice(&ua);
-            u_b.data[l * bm..(l + 1) * bm].copy_from_slice(&ub);
-            sig_a[l] = sa;
-            sig_b[l] = sb;
+        {
+            // per-layer fan-out: layer l owns sig_[ab][l] and its own
+            // slice of the persisted u vectors, updated in place — the
+            // arithmetic per layer is exactly the serial power_iter's
+            let sa_slots = DisjointMut::new(&mut sig_a);
+            let sb_slots = DisjointMut::new(&mut sig_b);
+            let ua_slots = DisjointMut::new(&mut u_a.data);
+            let ub_slots = DisjointMut::new(&mut u_b.data);
+            let (a_ref, b_ref) = (&a_t, &b_t);
+            pool::parallel_for(threads, layers, &|l| {
+                let mut ps = PowerScratch::default();
+                let mut w = Mat::zeros(0, 0);
+                kernels::layer_mat_into(&a_ref.data, l, am, ar, &mut w);
+                let ua = unsafe { ua_slots.range_mut(l * am, am) };
+                let sa = power_iter_inplace(&w, ua, K_POWER, &mut ps);
+                unsafe {
+                    *sa_slots.item_mut(l) = sa;
+                }
+                kernels::layer_mat_into(&b_ref.data, l, bm, br, &mut w);
+                let ub = unsafe { ub_slots.range_mut(l * bm, bm) };
+                let sb = power_iter_inplace(&w, ub, K_POWER, &mut ps);
+                unsafe {
+                    *sb_slots.item_mut(l) = sb;
+                }
+            });
         }
 
         let (oa, ob) = if opt == "spectron" {
             let ma = &tensors[&format!("opt.mom.{na}")];
             let mb = &tensors[&format!("opt.mom.{nb}")];
             (
-                kernels::newton_schulz_stacked(&ma.data, layers, am, ar),
-                kernels::newton_schulz_stacked(&mb.data, layers, bm, br),
+                kernels::newton_schulz_stacked(&ma.data, layers, am, ar, threads),
+                kernels::newton_schulz_stacked(&mb.data, layers, bm, br, threads),
             )
         } else {
             // renorm: momentum normalized to unit spectral norm via its

@@ -63,8 +63,20 @@ impl ModelSession {
     }
 
     /// Native session: the same checkpoint, no artifacts involved.
+    /// Tensor-core budget from `REPRO_THREADS` (else serial).
     pub fn load_native(variant: &VariantCfg, ckpt: &std::path::Path) -> Result<ModelSession> {
-        let ev = Evaluator::native(variant)?;
+        Self::load_native_threads(variant, ckpt, crate::util::pool::env_threads())
+    }
+
+    /// [`ModelSession::load_native`] with an explicit tensor-core thread
+    /// budget (`repro serve --backend native --threads N`): batched
+    /// eval/decode executes fan their matmuls across the pool.
+    pub fn load_native_threads(
+        variant: &VariantCfg,
+        ckpt: &std::path::Path,
+        threads: usize,
+    ) -> Result<ModelSession> {
+        let ev = Evaluator::native_with_threads(variant, threads)?;
         let manifest = crate::runtime::layout::build_manifest(variant)?;
         Self::finish(manifest, ev, &variant.name, ckpt)
     }
@@ -349,6 +361,9 @@ pub struct NativeEngine {
     bpe: Arc<Bpe>,
     ckpts: BTreeMap<String, PathBuf>,
     sessions: LruCache<String, ModelSession>,
+    /// tensor-core budget per session (worker threads share the one
+    /// process pool, so oversubscription self-limits)
+    threads: usize,
 }
 
 impl NativeEngine {
@@ -357,9 +372,24 @@ impl NativeEngine {
         ckpts: BTreeMap<String, PathBuf>,
         cache_cap: usize,
     ) -> Result<NativeEngine> {
+        Self::with_threads(bpe, ckpts, cache_cap, crate::util::pool::env_threads())
+    }
+
+    pub fn with_threads(
+        bpe: Arc<Bpe>,
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+        threads: usize,
+    ) -> Result<NativeEngine> {
         anyhow::ensure!(!ckpts.is_empty(), "serve: no checkpoints registered");
         let reg = Registry::load().map_err(|e| anyhow!(e))?;
-        Ok(NativeEngine { reg, bpe, ckpts, sessions: LruCache::new(cache_cap) })
+        Ok(NativeEngine {
+            reg,
+            bpe,
+            ckpts,
+            sessions: LruCache::new(cache_cap),
+            threads: threads.max(1),
+        })
     }
 
     pub fn factory(
@@ -367,10 +397,23 @@ impl NativeEngine {
         cache_cap: usize,
         docs: u64,
     ) -> super::engine::EngineFactory {
+        Self::factory_with_threads(ckpts, cache_cap, docs, crate::util::pool::env_threads())
+    }
+
+    /// [`NativeEngine::factory`] with an explicit tensor-core thread
+    /// budget (`repro serve --backend native --threads N`).
+    pub fn factory_with_threads(
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+        docs: u64,
+        threads: usize,
+    ) -> super::engine::EngineFactory {
         let bpe = serving_bpe(docs);
         Arc::new(move || {
-            Ok(Box::new(NativeEngine::new(bpe.clone(), ckpts.clone(), cache_cap)?)
-                as Box<dyn BatchEngine>)
+            Ok(
+                Box::new(NativeEngine::with_threads(bpe.clone(), ckpts.clone(), cache_cap, threads)?)
+                    as Box<dyn BatchEngine>,
+            )
         })
     }
 
@@ -387,6 +430,7 @@ impl NativeEngine {
             .clone();
         let v = self.reg.variant(variant).map_err(|e| anyhow!(e))?.clone();
         let bpe = self.bpe.clone();
+        let threads = self.threads;
         let session = self
             .sessions
             .get_or_try_insert(&variant.to_string(), || {
@@ -395,7 +439,7 @@ impl NativeEngine {
                     "loading native session {variant} from {}",
                     ckpt.display()
                 );
-                ModelSession::load_native(&v, &ckpt)
+                ModelSession::load_native_threads(&v, &ckpt, threads)
             })?;
         session.run(&bpe, kind, batch)
     }

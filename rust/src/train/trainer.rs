@@ -62,8 +62,24 @@ impl Trainer {
     }
 
     /// Native path: no artifacts, no PJRT — the zero-dependency fallback.
+    /// Tensor-core budget from `REPRO_THREADS` (else serial).
     pub fn native(variant: &VariantCfg, run: RunCfg) -> Result<Trainer> {
         Self::with_backend(Box::new(NativeBackend::new(variant)?), variant, run)
+    }
+
+    /// [`Trainer::native`] with an explicit tensor-core thread budget
+    /// (`--threads`; bit-identical at every value,
+    /// DESIGN.md §Native tensor core).
+    pub fn native_with_threads(
+        variant: &VariantCfg,
+        run: RunCfg,
+        threads: usize,
+    ) -> Result<Trainer> {
+        Self::with_backend(
+            Box::new(NativeBackend::with_threads(variant, threads)?),
+            variant,
+            run,
+        )
     }
 
     /// Any backend: run `init` and mirror the fresh state to the host.

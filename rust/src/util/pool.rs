@@ -1,0 +1,501 @@
+//! Persistent worker pool for the native tensor core
+//! (DESIGN.md §Native tensor core; docs/adr/005-parallel-tensor-core.md).
+//!
+//! The dependency policy forbids rayon, so this is the in-tree substrate
+//! the parallel linalg/kernel paths fan out on: one process-global pool
+//! of parked threads and a single primitive, [`parallel_for`], that runs
+//! `f(0), f(1), …, f(n-1)` across them and blocks until every index has
+//! executed.
+//!
+//! ## Determinism contract
+//!
+//! The pool adds **no** nondeterminism by construction:
+//!
+//! * work is identified by *index*, never by thread — callers partition
+//!   their output into disjoint regions owned by `(index, nthreads)` and
+//!   each region's inner arithmetic (in particular every k-accumulation
+//!   order in the matmuls) is exactly the serial loop's, so results are
+//!   bit-identical to serial at every thread count;
+//! * the pool never splits, reorders, or merges a task's work — it only
+//!   decides *which thread* runs an index, which a correctly partitioned
+//!   caller cannot observe;
+//! * nested [`parallel_for`] calls (a parallel op invoked from inside a
+//!   pool task) degrade to the inline serial loop — same bits, no
+//!   deadlock — as does contention from a second concurrent submitter.
+//!
+//! The submitting thread always participates, so a pool with zero spare
+//! workers (single-core hosts) degenerates to the serial loop.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// Set on pool worker threads (and on a submitter while it drains its
+    /// own job): nested parallel_for calls run inline instead of
+    /// re-submitting, which would deadlock the single job slot.
+    static IN_POOL: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// One submitted job. `f` is a lifetime-erased borrow of the submitter's
+/// closure: sound because [`Pool::run`] blocks until `completed ==
+/// n_tasks`, and an index is only claimed (and `f` only called) before
+/// that point — a stale worker that wakes after the job retires can still
+/// touch the heap-owned atomics through its `Arc`, but its claim comes
+/// back `>= n_tasks` and `f` is never dereferenced again.
+struct JobState {
+    f: &'static (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+    /// how many *extra* workers may join (requested threads minus the
+    /// submitter); workers decrement to claim a participation slot
+    slots: AtomicUsize,
+    next: AtomicUsize,
+    completed: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+#[derive(Clone)]
+struct Job {
+    state: Arc<JobState>,
+    epoch: u64,
+}
+
+struct Shared {
+    job: Mutex<Option<Job>>,
+    work_cv: Condvar,
+    /// signaled (after serializing on `job`) by a participant that
+    /// observes a job's final task completed — the submitter parks here
+    /// instead of burning a core on a yield spin
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+pub struct Pool {
+    shared: Arc<Shared>,
+    epoch: AtomicUsize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// A pool with `workers` parked threads (the submitter participates
+    /// too, so total parallelism is `workers + 1`).
+    pub fn new(workers: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            job: Mutex::new(None),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("tensor-pool-{i}"))
+                    .spawn(move || worker_main(shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { shared, epoch: AtomicUsize::new(0), handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(0..n_tasks)` with up to `threads` participants; blocks
+    /// until every index has executed. Falls back to the inline serial
+    /// loop — identical bits — when parallelism is unavailable
+    /// (`threads <= 1`, one task, no workers, nested call, or the pool
+    /// busy with another submitter). Panics (after all tasks finish or
+    /// are claimed-out) if any task panicked.
+    pub fn run(&self, threads: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let nested = IN_POOL.with(|c| c.get());
+        if threads <= 1 || n_tasks <= 1 || self.handles.is_empty() || nested {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+        // erase the borrow's lifetime: see the JobState safety comment
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+        let state = Arc::new(JobState {
+            f: f_static,
+            n_tasks,
+            slots: AtomicUsize::new(threads - 1),
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) as u64 + 1;
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            if slot.is_some() {
+                // another thread's job is in flight: run inline rather
+                // than queue (bit-identical either way)
+                drop(slot);
+                for i in 0..n_tasks {
+                    f(i);
+                }
+                return;
+            }
+            *slot = Some(Job { state: state.clone(), epoch });
+        }
+        self.shared.work_cv.notify_all();
+        // the submitter is participant 0; its own f-calls must not
+        // re-submit nested jobs
+        IN_POOL.with(|c| c.set(true));
+        run_tasks(&state);
+        IN_POOL.with(|c| c.set(false));
+        // tail wait: park until the last participant finishes. The
+        // check-then-wait holds the job mutex and the signaler serializes
+        // on it before notifying, so the wakeup cannot be lost; the
+        // Acquire load pairs with the workers' Release increments, making
+        // all task writes visible before we return.
+        {
+            let mut guard = self.shared.job.lock().unwrap();
+            while state.completed.load(Ordering::Acquire) < n_tasks {
+                guard = self.shared.done_cv.wait(guard).unwrap();
+            }
+            *guard = None;
+        }
+        if state.panicked.load(Ordering::Relaxed) {
+            panic!("pool task panicked (see worker stderr for the payload)");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: Arc<Shared>) {
+    // everything on this thread is pool work: nested parallel ops run
+    // inline (see IN_POOL)
+    IN_POOL.with(|c| c.set(true));
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut guard = shared.job.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                let fresh = match guard.as_ref() {
+                    Some(j) if j.epoch != last_epoch => Some(j.clone()),
+                    _ => None,
+                };
+                if let Some(j) = fresh {
+                    break j;
+                }
+                guard = shared.work_cv.wait(guard).unwrap();
+            }
+        };
+        last_epoch = job.epoch;
+        // claim a participation slot (the requested thread count caps
+        // how many workers join; losers go back to waiting)
+        let claimed = job
+            .state
+            .slots
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| s.checked_sub(1))
+            .is_ok();
+        if claimed {
+            run_tasks(&job.state);
+            if job.state.completed.load(Ordering::Acquire) >= job.state.n_tasks {
+                // this participant saw the job fully drained (it may have
+                // completed the final task itself); serialize on the job
+                // mutex so the submitter's check-then-wait cannot miss
+                // the signal, then wake it. If the submitter drained the
+                // tail itself, its own pre-wait check covers it.
+                drop(shared.job.lock().unwrap());
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by the submitter and the workers: each
+/// claim is one index, each index runs exactly once.
+fn run_tasks(state: &JobState) {
+    loop {
+        let i = state.next.fetch_add(1, Ordering::Relaxed);
+        if i >= state.n_tasks {
+            break;
+        }
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| (state.f)(i)));
+        if r.is_err() {
+            state.panicked.store(true, Ordering::Relaxed);
+        }
+        state.completed.fetch_add(1, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-global pool + the parallel_for entry point
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-global pool: spare-core sized (`available_parallelism - 1`,
+/// capped at 15 spare workers), spawned on first use.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| Pool::new(auto_threads().saturating_sub(1).min(15)))
+}
+
+/// Run `f(0..n_tasks)` on the global pool with up to `threads`
+/// participants. THE determinism-preserving fan-out primitive: callers
+/// must give each index a disjoint output region and keep each region's
+/// inner arithmetic order serial (DESIGN.md §Native tensor core).
+pub fn parallel_for(threads: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if threads <= 1 || n_tasks <= 1 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    global().run(threads, n_tasks, f);
+}
+
+/// Contiguous chunk `t` of `0..n` split into `parts` ceil-sized blocks:
+/// the fixed `(index, nthreads) -> row range` ownership map of the
+/// determinism contract. Returns an empty range for trailing parts when
+/// `parts` does not divide `n`.
+pub fn chunk_bounds(n: usize, parts: usize, t: usize) -> (usize, usize) {
+    let parts = parts.max(1);
+    let per = (n + parts - 1) / parts;
+    let lo = (t * per).min(n);
+    (lo, (lo + per).min(n))
+}
+
+/// Range fan-out over `0..n`: calls `f(lo, hi)` once per non-empty
+/// contiguous chunk (at most `threads` of them, `chunk_bounds`
+/// partition). The one place the chunks-calc / empty-chunk-guard idiom
+/// lives — element-independent callers get bit-identical results at
+/// every thread count for free.
+pub fn chunked_for(threads: usize, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    let chunks = threads.max(1).min(n.max(1));
+    if chunks <= 1 {
+        if n > 0 {
+            f(0, n);
+        }
+        return;
+    }
+    parallel_for(threads, chunks, &|c| {
+        let (lo, hi) = chunk_bounds(n, chunks, c);
+        if lo < hi {
+            f(lo, hi);
+        }
+    });
+}
+
+/// Shared-mutable slice handle for disjoint parallel writes: tasks on
+/// different indices borrow non-overlapping ranges of one `&mut [T]`.
+///
+/// Safety contract (all methods `unsafe`): across every concurrent user,
+/// requested ranges must be pairwise disjoint — exactly what the
+/// `chunk_bounds` / per-index ownership discipline guarantees.
+pub struct DisjointMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+
+impl<'a, T> DisjointMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> DisjointMut<'a, T> {
+        DisjointMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// # Safety
+    /// `[start, start+len)` must be in bounds and disjoint from every
+    /// range any other thread takes from this handle.
+    pub unsafe fn range_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// # Safety
+    /// Index `i` must be in bounds and claimed by exactly one thread.
+    pub unsafe fn item_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread-count resolution (--threads flag / REPRO_THREADS env)
+// ---------------------------------------------------------------------------
+
+/// What the host offers: `available_parallelism`, floor 1.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Parse a thread-count spec: `"auto"` or a positive integer.
+pub fn parse_threads(spec: &str) -> Result<usize, String> {
+    if spec == "auto" {
+        return Ok(auto_threads());
+    }
+    match spec.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(format!("invalid thread count '{spec}' (expected a positive integer or 'auto')")),
+    }
+}
+
+/// Library/test default: the `REPRO_THREADS` env override when set
+/// (CI runs the suite under both 1 and 4 to enforce
+/// determinism-under-threading), else 1 — serial. A malformed value is 1,
+/// not an error: tests must not fail on a stray env var.
+pub fn env_threads() -> usize {
+    match std::env::var("REPRO_THREADS") {
+        Ok(v) => parse_threads(&v).unwrap_or(1),
+        Err(_) => 1,
+    }
+}
+
+/// CLI default: explicit `--threads` value first, then `REPRO_THREADS`,
+/// then `auto` — the launcher commands default to using the machine
+/// (results are bit-identical at every count; only wall time changes).
+pub fn cli_threads(flag: Option<&str>) -> Result<usize, String> {
+    if let Some(spec) = flag {
+        return parse_threads(spec);
+    }
+    if let Ok(v) = std::env::var("REPRO_THREADS") {
+        return parse_threads(&v);
+    }
+    Ok(auto_threads())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_for_runs_every_index_exactly_once() {
+        for threads in [1usize, 2, 3, 8] {
+            for n in [0usize, 1, 2, 7, 64, 257] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                parallel_for(threads, n, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "threads={threads} n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_land_and_are_visible() {
+        let mut data = vec![0u64; 1000];
+        {
+            let slots = DisjointMut::new(&mut data);
+            parallel_for(4, 8, &|t| {
+                let (lo, hi) = chunk_bounds(1000, 8, t);
+                let part = unsafe { slots.range_mut(lo, hi - lo) };
+                for (k, v) in part.iter_mut().enumerate() {
+                    *v = (lo + k) as u64 * 3;
+                }
+            });
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let outer = AtomicUsize::new(0);
+        let inner = AtomicUsize::new(0);
+        parallel_for(4, 6, &|_| {
+            outer.fetch_add(1, Ordering::Relaxed);
+            parallel_for(4, 5, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 6);
+        assert_eq!(inner.load(Ordering::Relaxed), 30);
+    }
+
+    #[test]
+    fn chunked_for_covers_every_index_once() {
+        for threads in [1usize, 2, 3, 8] {
+            for n in [0usize, 1, 7, 64, 257] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                chunked_for(threads, n, &|lo, hi| {
+                    assert!(lo < hi && hi <= n, "empty or out-of-range chunk");
+                    for h in &hits[lo..hi] {
+                        h.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "threads={threads} n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_partition() {
+        for n in [0usize, 1, 5, 64, 129, 1000] {
+            for parts in [1usize, 2, 3, 7, 16] {
+                let mut covered = 0;
+                let mut prev_hi = 0;
+                for t in 0..parts {
+                    let (lo, hi) = chunk_bounds(n, parts, t);
+                    assert!(lo <= hi && hi <= n);
+                    assert!(lo >= prev_hi, "chunks overlap or reorder");
+                    covered += hi - lo;
+                    prev_hi = hi.max(prev_hi);
+                }
+                assert_eq!(covered, n, "n={n} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let pool = Pool::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, 8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "submitter must observe the task panic");
+        // the pool stays usable afterwards
+        let n = AtomicUsize::new(0);
+        pool.run(2, 4, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn parse_and_resolve_thread_specs() {
+        assert_eq!(parse_threads("3").unwrap(), 3);
+        assert!(parse_threads("auto").unwrap() >= 1);
+        assert!(parse_threads("0").is_err());
+        assert!(parse_threads("-2").is_err());
+        assert!(parse_threads("lots").is_err());
+        assert_eq!(cli_threads(Some("2")).unwrap(), 2);
+        assert!(cli_threads(None).unwrap() >= 1);
+    }
+}

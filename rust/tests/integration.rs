@@ -387,6 +387,39 @@ fn parallel_dp_matches_sequential() {
     }
 }
 
+/// Tensor-core acceptance (DESIGN.md §Native tensor core;
+/// docs/adr/005-parallel-tensor-core.md): a MONITORED native train run
+/// at any `--threads` value is bit-identical (state vector `to_bits`)
+/// to the serial run — the pool only reassigns work, never arithmetic.
+#[test]
+fn threaded_native_training_is_bit_identical() {
+    let reg = Registry::load().unwrap();
+    let v = z0(&reg);
+    let ds = tiny_dataset(v.model.vocab);
+    let monitor_cfg = || MonitorCfg {
+        guards: vec![GuardKind::LossSpike, GuardKind::SpectronBound],
+        policy: Policy::Log,
+        ..MonitorCfg::default()
+    };
+    let run_at = |threads: usize| {
+        let mut t = Trainer::native_with_threads(v, run_cfg(10), threads).unwrap();
+        let mut batches = ds.batches(Split::Train, v.batch, 5);
+        let mut monitor = Monitor::new(monitor_cfg());
+        let mut metrics = MetricsLog::in_memory("thread-bits");
+        let res = t.train_observed(&mut batches, 10, &mut metrics, &mut monitor).unwrap();
+        assert_eq!(res.steps_done, 10, "threads {threads}: run did not complete");
+        t.state_vec().unwrap()
+    };
+    let want = run_at(1);
+    for threads in [2usize, 4, 8] {
+        let got = run_at(threads);
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads {threads}: state slot {i}");
+        }
+    }
+}
+
 /// A log-policy monitor observes without perturbing: monitored training
 /// is bit-identical to unmonitored training — the observer rides the
 /// readbacks the loop already performs

@@ -55,7 +55,7 @@ fn grid(name: &str, steps: &[usize]) -> GridSpec {
 }
 
 fn native_opts(workers: usize, max_runs: Option<usize>) -> SweepOpts {
-    SweepOpts { workers, max_runs, backend: ExecBackend::Native }
+    SweepOpts { workers, max_runs, backend: ExecBackend::Native, ..SweepOpts::default() }
 }
 
 fn cleanup(name: &str) {

@@ -3,11 +3,13 @@
 //! in `spectron::util::prop`
 //! (replay any failure with `PROP_REPLAY=1 PROP_SEED=<seed> cargo test`).
 
+use spectron::config::Registry;
 use spectron::coordinator::parallel::tree_allreduce_mean;
 use spectron::linalg::{self, Mat};
 use spectron::monitor::detect::LossSpikeDetector;
-use spectron::runtime::native::kernels::{power_iter, K_NS};
+use spectron::runtime::native::kernels::{newton_schulz_stacked, power_iter, K_NS};
 use spectron::runtime::native::optim::spectron_pair_update;
+use spectron::runtime::NativeBackend;
 use spectron::data::bpe::Bpe;
 use spectron::data::corpus::{Corpus, CorpusCfg};
 use spectron::data::dataset::{Dataset, Split};
@@ -409,6 +411,96 @@ fn prop_spectron_update_respects_spectral_bound() {
         let sdb = linalg::spectral_norm(&db, 50, rng);
         if sda > 1.35 * rho || sdb > 1.35 * rho {
             return Err(format!("factor step too big: {sda}/{sdb} vs rho {rho}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// tensor core: parallel == serial bit-identity
+// (DESIGN.md §Native tensor core; docs/adr/005-parallel-tensor-core.md)
+// ---------------------------------------------------------------------------
+
+/// Row-parallel and in-place matmuls are bit-identical to the serial
+/// allocating kernel at every thread count, across random shapes
+/// straddling the 64-wide tile edge.
+#[test]
+fn prop_matmul_parallel_and_inplace_bit_identical() {
+    check("matmul parallel bits", |rng| {
+        let m = usize_in(rng, 1, 150);
+        let k = usize_in(rng, 1, 150);
+        let n = usize_in(rng, 1, 150);
+        let a = Mat::randn(m, k, rng);
+        let b = Mat::randn(k, n, rng);
+        let want = a.matmul(&b);
+        for &threads in &[1usize, 2, 3, 8] {
+            let got = a.matmul_par(&b, threads);
+            for (x, y) in want.data.iter().zip(&got.data) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{m}x{k}x{n} threads={threads}"));
+                }
+            }
+        }
+        let mut reused = Mat::zeros(2, 2);
+        reused.data.fill(3.0); // dirty buffer must not leak into the result
+        a.matmul_into(&b, &mut reused);
+        for (x, y) in want.data.iter().zip(&reused.data) {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("matmul_into {m}x{k}x{n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The stacked Newton-Schulz layer fan-out is bit-identical to the
+/// serial per-layer loop at every thread count.
+#[test]
+fn prop_stacked_newton_schulz_parallel_matches_serial() {
+    check("stacked NS parallel bits", |rng| {
+        let layers = usize_in(rng, 1, 5);
+        let r = usize_in(rng, 1, 8);
+        let m = usize_in(rng, 1, 40);
+        let data: Vec<f64> = (0..layers * m * r).map(|_| rng.normal()).collect();
+        let want = newton_schulz_stacked(&data, layers, m, r, 1);
+        for &threads in &[2usize, 3, 8] {
+            let got = newton_schulz_stacked(&data, layers, m, r, threads);
+            for (x, y) in want.iter().zip(&got) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("layers={layers} {m}x{r} threads={threads}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A FULL native train step — forward, hand-derived backward, Spectron
+/// optimizer, telemetry — is bit-identical across thread budgets, for
+/// random seeds and batches on a shrunken z0 model.
+#[test]
+fn prop_native_train_step_parallel_bit_identity() {
+    let reg = Registry::load().unwrap();
+    let mut cfg = reg.variant("fact-z0-spectron").unwrap().clone();
+    cfg.model.vocab = 48;
+    cfg.model.seq_len = 10;
+    cfg.batch = 2;
+    let serial = NativeBackend::with_threads(&cfg, 1).unwrap();
+    let (b, w) = (cfg.batch, cfg.model.seq_len + 1);
+    let vocab = cfg.model.vocab;
+    check("native step parallel bits", |rng| {
+        let threads = *rng.choice(&[2usize, 3, 8]);
+        let seed = rng.below(1000);
+        let knobs = [20.0, 0.02, 0.01, 0.1, 0.0, 0.0, 0.0, 0.0];
+        let s0 = serial.init_state(seed, &knobs);
+        let toks: Vec<i32> = (0..b * w).map(|_| rng.below(vocab as u64) as i32).collect();
+        let want = serial.step_state(&s0, &toks).map_err(|e| e.to_string())?;
+        let par = NativeBackend::with_threads(&cfg, threads).map_err(|e| e.to_string())?;
+        let got = par.step_state(&s0, &toks).map_err(|e| e.to_string())?;
+        for (i, (a, c)) in want.iter().zip(&got).enumerate() {
+            if a.to_bits() != c.to_bits() {
+                return Err(format!("state slot {i} differs at threads={threads}"));
+            }
         }
         Ok(())
     });
