@@ -2,7 +2,7 @@
 # needs Python; everything after runs from the self-contained `repro`
 # binary (DESIGN.md).
 
-.PHONY: artifacts build test ci docs bench bench-native serve-bench sweep-smoke clean
+.PHONY: artifacts build test ci docs bench bench-native serve-bench serve-test sweep-smoke clean
 
 # Lower every variant's programs to HLO text + manifests.
 artifacts:
@@ -55,8 +55,19 @@ bench:
 bench-native:
 	BENCH_JSON=BENCH_native_math.json cargo bench --bench native_math
 
+# Open-loop serving latency (examples/serve_bench.rs): generate traffic
+# at fixed arrival rates against the native engine, KV-cache continuous
+# batching vs the lockstep baseline; p50/p95/p99 per (rate, mode) land in
+# BENCH_serve_latency.json (docs/adr/006).
 serve-bench:
-	cargo run --release --example serve_bench
+	BENCH_JSON=BENCH_serve_latency.json cargo run --release --example serve_bench
+
+# The serving integration suite under both thread budgets: the KV-cache
+# decode path promises bit-identity with the full forward, so a threaded
+# tensor core must reproduce the exact serial transcripts (docs/adr/006).
+serve-test:
+	REPRO_THREADS=1 cargo test -q --test serve_integration
+	REPRO_THREADS=4 cargo test -q --test serve_integration
 
 # Sweep resumability smoke (DESIGN.md §Monitoring and sweeps): run the
 # built-in grid with a simulated kill after the first run, rerun twice,

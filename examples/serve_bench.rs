@@ -1,132 +1,162 @@
-//! serve_bench — load generator for `repro serve` (DESIGN.md §Serving).
+//! serve_bench — open-loop load generator for `repro serve`
+//! (DESIGN.md §Serving, docs/adr/006).
 //!
-//! Spawns an in-process server, fires concurrent generate traffic at it,
-//! and reports client-side p50/p99 latency, throughput and server-side
-//! batch occupancy; then repeats with batching disabled (max_batch 1) so
-//! the batched-vs-sequential throughput ratio is read off directly —
-//! the serving analogue of the paper's inference-efficiency claim.
+//! Closed-loop clients hide queueing delay: a slow server slows the
+//! arrival process down with it. This harness instead fires generate
+//! requests at fixed arrival rates — each request on its own connection,
+//! dispatched on schedule regardless of how the previous one is doing —
+//! against the native engine in two configurations:
 //!
-//!     cargo run --release --example serve_bench
+//!   cache=on   continuous batching: KV-cache decode slots
+//!              (`--slots DECODE_SLOTS_DEFAULT`), requests join and leave
+//!              the decode loop per step
+//!   cache=off  lockstep baseline (`--slots 0`): full-forward generate
+//!              batches, a short request waits for the whole batch
 //!
-//! Env knobs: SERVE_BENCH_CLIENTS (8), SERVE_BENCH_REQS (25) per client,
-//! SERVE_BENCH_CKPT (checkpoint path -> real PJRT engine; default mock
-//! engine with a simulated 3 ms device cost so the harness runs
-//! anywhere) and SERVE_BENCH_DOCS (tokenizer --docs match, 6000).
+//! Client-side p50/p95/p99 per (rate, mode) is printed and recorded, and
+//! the run ends with [`bench::write_json`], so
+//! `make serve-bench` lands `BENCH_serve_latency.json`. The acceptance
+//! signal is the p99 gap between the two modes at equal arrival rates.
+//!
+//!     cargo run --release --example serve_bench        (BENCH_FAST=1 to smoke)
+//!
+//! Env knobs: SERVE_BENCH_RATES (req/s list, "20,50"), SERVE_BENCH_REQS
+//! per rate (40; 12 under BENCH_FAST), SERVE_BENCH_MAX_TOKENS (8).
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
-use std::sync::{Arc, Mutex};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
-use spectron::serve::{MockEngine, ServeCfg, Server, ServerHandle};
+use spectron::config::{Registry, RunCfg};
+use spectron::data::bpe::Bpe;
+use spectron::data::corpus::Corpus;
+use spectron::serve::{
+    BatchEngine, EngineFactory, NativeEngine, ServeCfg, Server, ServerHandle,
+    DECODE_SLOTS_DEFAULT,
+};
+use spectron::train::{checkpoint, Trainer};
+use spectron::util::bench::{self, header, BenchResult};
 use spectron::util::json::Json;
-use spectron::util::stats::quantile;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn spawn_server(max_batch: usize) -> Result<ServerHandle> {
+/// In-process native server over a fresh z0 init checkpoint. `slots > 0`
+/// enables continuous batching; `slots == 0` is the lockstep baseline.
+fn spawn_native(slots: usize) -> Result<(ServerHandle, std::path::PathBuf)> {
+    let reg = Registry::load().map_err(|e| anyhow!(e))?;
+    let variant = "fact-z0-spectron";
+    let v = reg.variant(variant).map_err(|e| anyhow!(e))?;
+    let mut trainer = Trainer::native(v, RunCfg::default())?;
+    let ckpt = std::env::temp_dir().join(format!(
+        "spectron-serve-bench-{slots}-{}.ckpt",
+        std::process::id()
+    ));
+    checkpoint::save(&ckpt, variant, &trainer.state_vec()?)?;
+
+    let corpus = Corpus::new(Default::default());
+    let bpe = Arc::new(Bpe::train(&corpus.text_range(1, 60), v.model.vocab));
+    let mut ckpts = BTreeMap::new();
+    ckpts.insert(variant.to_string(), ckpt.clone());
+    let factory: EngineFactory = Arc::new(move || {
+        Ok(Box::new(NativeEngine::with_opts(
+            bpe.clone(),
+            ckpts.clone(),
+            2,
+            1,
+            slots,
+        )?) as Box<dyn BatchEngine>)
+    });
     let cfg = ServeCfg {
         addr: "127.0.0.1:0".into(),
-        max_batch,
-        max_wait: Duration::from_millis(10),
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
         workers: 1,
-        default_variant: Some("mock".into()),
+        default_variant: Some(variant.to_string()),
         metrics_name: None,
+        queue_cap: 1024,
     };
-    match std::env::var("SERVE_BENCH_CKPT") {
-        Ok(ckpt) => {
-            use spectron::runtime::ArtifactIndex;
-            use spectron::serve::PjrtEngine;
-            use spectron::train::checkpoint;
-            let idx = ArtifactIndex::load(&ArtifactIndex::default_root())
-                .map_err(|e| anyhow!("{e}\n  hint: run `make artifacts`"))?;
-            let variant = checkpoint::peek_variant(std::path::Path::new(&ckpt))?;
-            println!("engine: PJRT ({variant} from {ckpt})");
-            let mut ckpts = std::collections::BTreeMap::new();
-            ckpts.insert(variant.clone(), std::path::PathBuf::from(&ckpt));
-            let mut cfg = cfg;
-            cfg.default_variant = Some(variant);
-            let docs = env_usize("SERVE_BENCH_DOCS", 6000) as u64;
-            Server::spawn(cfg, PjrtEngine::factory(idx, ckpts, 2, docs))
-        }
-        Err(_) => {
-            let seen = Arc::new(Mutex::new(Vec::new()));
-            Server::spawn(cfg, MockEngine::factory(Duration::from_millis(3), seen))
-        }
-    }
+    Ok((Server::spawn(cfg, factory)?, ckpt))
 }
 
-/// One client worker: sequential request/response over its own
-/// connection; concurrency comes from running many clients.
-fn client(addr: std::net::SocketAddr, reqs: usize, cid: usize) -> Result<Vec<f64>> {
+/// One open-loop arrival: its own connection, one generate, one reply.
+/// Returns end-to-end latency in seconds (connect included — that is what
+/// a client sees).
+fn one_request(addr: SocketAddr, id: usize, max_tokens: usize) -> Result<f64> {
+    let t0 = Instant::now();
     let stream = TcpStream::connect(addr).context("connect")?;
     stream.set_read_timeout(Some(Duration::from_secs(60)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut lat_ms = Vec::with_capacity(reqs);
-    for i in 0..reqs {
-        let t0 = Instant::now();
-        writeln!(
-            writer,
-            r#"{{"id":{i},"op":"generate","prompt":"client {cid} turn {i} of many","max_tokens":8,"temperature":0.7,"seed":{cid}}}"#
-        )?;
-        writer.flush()?;
-        let mut line = String::new();
-        anyhow::ensure!(reader.read_line(&mut line)? > 0, "server closed");
-        let j = Json::parse(line.trim()).map_err(|e| anyhow!(e))?;
-        anyhow::ensure!(
-            j.get("ok") == Some(&Json::Bool(true)),
-            "request failed: {line}"
-        );
-        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-    }
-    Ok(lat_ms)
+    writeln!(
+        writer,
+        r#"{{"id":{id},"op":"generate","prompt":"the cat sat on request {id}","max_tokens":{max_tokens},"temperature":0.9,"seed":{id}}}"#
+    )?;
+    writer.flush()?;
+    let mut line = String::new();
+    anyhow::ensure!(reader.read_line(&mut line)? > 0, "server closed");
+    let j = Json::parse(line.trim()).map_err(|e| anyhow!(e))?;
+    anyhow::ensure!(
+        j.get("ok") == Some(&Json::Bool(true)),
+        "request failed: {line}"
+    );
+    Ok(t0.elapsed().as_secs_f64())
 }
 
-fn run_phase(name: &str, max_batch: usize, clients: usize, reqs: usize) -> Result<f64> {
-    let handle = spawn_server(max_batch)?;
-    let addr = handle.addr;
-    let t0 = Instant::now();
-    let lats: Vec<f64> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..clients)
-            .map(|cid| scope.spawn(move || client(addr, reqs, cid)))
-            .collect();
+/// Fire `reqs` requests at `rate` arrivals/second and join them all.
+fn run_phase(
+    addr: SocketAddr,
+    rate: f64,
+    reqs: usize,
+    max_tokens: usize,
+) -> Result<Vec<f64>> {
+    let interval = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(reqs);
+        for i in 0..reqs {
+            handles.push(scope.spawn(move || one_request(addr, i, max_tokens)));
+            std::thread::sleep(interval);
+        }
         handles
             .into_iter()
-            .flat_map(|h| h.join().expect("client thread").expect("client io"))
+            .map(|h| h.join().expect("client thread"))
             .collect()
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    let stats = handle.shutdown();
-    let total = (clients * reqs) as f64;
-    let thr = total / wall;
-    println!(
-        "{name:<28} {total:>5.0} reqs in {wall:>6.2}s  {thr:>8.1} req/s   \
-         p50 {:>7.2} ms  p99 {:>7.2} ms  occupancy {:>4.2}",
-        quantile(&lats, 0.50),
-        quantile(&lats, 0.99),
-        stats.get("batch_occupancy_mean").and_then(|j| j.as_f64()).unwrap_or(0.0),
-    );
-    Ok(thr)
+    })
 }
 
 fn main() -> Result<()> {
-    let clients = env_usize("SERVE_BENCH_CLIENTS", 8);
-    let reqs = env_usize("SERVE_BENCH_REQS", 25);
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let reqs = env_usize("SERVE_BENCH_REQS", if fast { 12 } else { 40 });
+    let max_tokens = env_usize("SERVE_BENCH_MAX_TOKENS", 8);
+    let rates: Vec<f64> = std::env::var("SERVE_BENCH_RATES")
+        .unwrap_or_else(|_| "20,50".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    anyhow::ensure!(!rates.is_empty(), "SERVE_BENCH_RATES parsed to nothing");
+
     println!(
-        "== serve_bench: {clients} concurrent clients x {reqs} generate requests ==\n"
+        "== serve_bench: open-loop, {reqs} generate reqs per rate, \
+         rates {rates:?}/s, max_tokens {max_tokens} =="
     );
-
-    let batched = run_phase("batched (max_batch=8)", 8, clients, reqs)?;
-    let sequential = run_phase("sequential (max_batch=1)", 1, clients, reqs)?;
-
-    let ratio = batched / sequential;
-    println!("\nbatched / sequential throughput: {ratio:.2}x");
-    if ratio <= 1.0 {
-        println!("WARNING: batching did not win — check max_wait vs execute cost");
+    header("serve: open-loop generate latency (native engine)");
+    for (slots, label) in [(DECODE_SLOTS_DEFAULT, "on"), (0usize, "off")] {
+        let (handle, ckpt) = spawn_native(slots)?;
+        for &rate in &rates {
+            let lats = run_phase(handle.addr, rate, reqs, max_tokens)?;
+            bench::record(BenchResult::from_samples(
+                &format!("open-loop rate={rate:.0}/s cache={label}"),
+                &lats,
+            ));
+        }
+        handle.shutdown();
+        std::fs::remove_file(&ckpt).ok();
     }
+
+    bench::write_json("serve_latency");
     Ok(())
 }

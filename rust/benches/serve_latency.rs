@@ -33,6 +33,7 @@ fn main() {
         workers: 1,
         default_variant: Some("mock".into()),
         metrics_name: None,
+        queue_cap: 1024,
     };
     let handle =
         Server::spawn(cfg, MockEngine::factory(Duration::ZERO, seen)).expect("spawn");

@@ -12,7 +12,7 @@ use std::cell::RefCell;
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::VariantCfg;
-use crate::runtime::backend::{Backend, StateBuf};
+use crate::runtime::backend::{Backend, DecodeModel, DecodeSession, StateBuf};
 use crate::runtime::{ArtifactIndex, Manifest, NativeBackend, PjrtBackend, Runtime};
 
 /// Handle on an eval-capable backend plus its shapes. Interior
@@ -120,5 +120,47 @@ impl Evaluator {
     /// predate it; native always has it).
     pub fn has_logits(&self) -> bool {
         self.backend.borrow().has_logits()
+    }
+
+    // ---- incremental decode (KV cache) ---------------------------------
+
+    /// Prepare a resident prefix for incremental decode (natively: the
+    /// f64 model, decoded once per upload and shared across sessions).
+    pub fn decode_model(&self, prefix: &StateBuf) -> Result<DecodeModel> {
+        self.backend.borrow_mut().decode_model(prefix)
+    }
+
+    /// Open a per-request decode session (a K/V cache natively, a token
+    /// history under the full-forward fallback).
+    pub fn decode_open(&self, model: &DecodeModel) -> Result<DecodeSession> {
+        self.backend.borrow_mut().decode_open(model)
+    }
+
+    /// Feed the whole prompt once; returns the last position's
+    /// next-token logits.
+    pub fn decode_prefill(
+        &self,
+        prefix: &StateBuf,
+        model: &DecodeModel,
+        st: &mut DecodeSession,
+        ids: &[i32],
+    ) -> Result<Vec<f32>> {
+        self.backend.borrow_mut().decode_prefill(prefix, model, st, ids)
+    }
+
+    /// Consume one sampled token; returns the next-token logits.
+    pub fn decode_step(
+        &self,
+        prefix: &StateBuf,
+        model: &DecodeModel,
+        st: &mut DecodeSession,
+        tok: i32,
+    ) -> Result<Vec<f32>> {
+        self.backend.borrow_mut().decode_step(prefix, model, st, tok)
+    }
+
+    /// Retire a session, recycling its buffers where applicable.
+    pub fn decode_close(&self, st: DecodeSession) {
+        self.backend.borrow_mut().decode_close(st)
     }
 }

@@ -95,9 +95,13 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
               [--smoke] [--docs N] [--force]
   repro serve --ckpt a.ckpt[,b.ckpt,...] [--addr HOST:PORT] [--max-batch N]
               [--max-wait-ms F] [--workers N] [--cache N] [--docs N]
+              [--slots N] [--queue-cap N]
               [--backend ...] [--threads N|auto] [--mock]
               (line-delimited JSON; ops: generate, score, stats, shutdown;
-               --docs must match training so the tokenizers agree)
+               --docs must match training so the tokenizers agree;
+               --slots 0 disables KV-cached continuous batching and decodes
+               lockstep; past --queue-cap pending requests new ones are
+               shed with an "overloaded" error)
   repro sweep [--grid grid.toml | --smoke] [--workers N] [--max-runs N]
               [--backend ...] [--threads N|auto]
               (crash-safe grid: per-run registry under results/sweeps/;
@@ -455,6 +459,8 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     // must match the --docs the checkpoints were trained with (the BPE
     // sample is 400.min(docs) documents, same as exp::Ctx::new)
     let docs = args.usize("docs", 6000);
+    let slots = args.usize("slots", spectron::serve::DECODE_SLOTS_DEFAULT);
+    let queue_cap = args.usize("queue-cap", ServeCfg::default().queue_cap);
     let mock = args.flag("mock");
     let backend = if mock {
         // --mock never touches a backend; consume the flags so they are
@@ -473,6 +479,7 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
         max_wait: std::time::Duration::from_secs_f64(max_wait_ms.max(0.0) / 1e3),
         workers,
         metrics_name: Some("serve".into()),
+        queue_cap,
         ..ServeCfg::default()
     };
 
@@ -503,7 +510,7 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
             }
             BackendKind::Native => {
                 info!("serve", "NATIVE engine (no artifacts required)");
-                NativeEngine::factory_with_threads(ckpts, cache, docs as u64, sel.threads)
+                NativeEngine::factory_opts(ckpts, cache, docs as u64, sel.threads, slots)
             }
         }
     };

@@ -20,12 +20,14 @@
 //! host vector natively. Handles are only valid with the backend that
 //! created them — crossing them over is a contract error, caught at use.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::artifact::ArtifactIndex;
 use super::client::{self, Runtime, StagingPool};
+use super::native::model::{KvCache, Model};
 use super::Manifest;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,19 +54,34 @@ enum Repr {
     /// host upload pinned with its source literal (lifetime rule of
     /// [`crate::runtime::client::HostBuffer`])
     PjrtHost(client::HostBuffer),
-    /// native backend: the state IS the host vector
-    Native(Vec<f32>),
+    /// native backend: the state IS the host vector; `id` is a
+    /// process-unique handle identity so per-prefix caches (the decoded
+    /// f64 model, DESIGN.md §Serving) can key on the upload instead of
+    /// hashing megabytes of parameters
+    Native { id: u64, data: Vec<f32> },
 }
+
+/// Process-wide id source for native state handles.
+static NATIVE_BUF_ID: AtomicU64 = AtomicU64::new(1);
 
 impl StateBuf {
     pub(crate) fn native_vec(data: Vec<f32>) -> StateBuf {
-        StateBuf(Repr::Native(data))
+        StateBuf(Repr::Native { id: NATIVE_BUF_ID.fetch_add(1, Ordering::Relaxed), data })
     }
 
     pub(crate) fn as_native(&self) -> Result<&[f32]> {
         match &self.0 {
-            Repr::Native(v) => Ok(v),
+            Repr::Native { data, .. } => Ok(data),
             _ => Err(anyhow!("state handle belongs to the pjrt backend")),
+        }
+    }
+
+    /// Identity of a native handle (None for PJRT buffers): stable for
+    /// the handle's lifetime, never reused within a process.
+    pub(crate) fn native_id(&self) -> Option<u64> {
+        match &self.0 {
+            Repr::Native { id, .. } => Some(*id),
+            _ => None,
         }
     }
 
@@ -72,9 +89,72 @@ impl StateBuf {
         match &self.0 {
             Repr::PjrtDevice(b) => Ok(b),
             Repr::PjrtHost(h) => Ok(h.buffer()),
-            Repr::Native(_) => Err(anyhow!("state handle belongs to the native backend")),
+            Repr::Native { .. } => Err(anyhow!("state handle belongs to the native backend")),
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// incremental decode API
+// ---------------------------------------------------------------------------
+
+/// A checkpoint prepared for incremental decode ([`Backend::decode_model`]).
+pub enum DecodeModel {
+    /// Native path: f64 parameters decoded once from the prefix and
+    /// shared (`Arc`) across every session on that checkpoint.
+    Native(Arc<Model>),
+    /// Fallback for backends without an incremental path (PJRT): each
+    /// step re-runs the full `logits` program over the token history.
+    Full,
+}
+
+/// Per-session decode state: cached K/V natively, the raw token history
+/// under the full-forward fallback. Sessions are plain data — they hold
+/// no backend borrow — so a serve slot can own one across steps and hand
+/// it back through [`Backend::decode_close`] when the request retires.
+pub struct DecodeSession(pub(crate) DecodeSt);
+
+pub(crate) enum DecodeSt {
+    Native { kv: KvCache },
+    Full { ids: Vec<i32>, cap: usize },
+}
+
+impl DecodeSession {
+    /// Positions consumed so far (prompt + generated).
+    pub fn positions(&self) -> usize {
+        match &self.0 {
+            DecodeSt::Native { kv } => kv.len(),
+            DecodeSt::Full { ids, .. } => ids.len(),
+        }
+    }
+
+    /// Maximum positions this session can hold.
+    pub fn capacity(&self) -> usize {
+        match &self.0 {
+            DecodeSt::Native { kv } => kv.capacity(),
+            DecodeSt::Full { cap, .. } => *cap,
+        }
+    }
+}
+
+/// Full-forward fallback shared by the default `decode_*` methods: pad
+/// the history into row 0 of a `(batch, seq_len)` token block and read
+/// that row's next-token logits back.
+fn fallback_logits<B: Backend + ?Sized>(
+    be: &mut B,
+    prefix: &StateBuf,
+    ids: &[i32],
+) -> Result<Vec<f32>> {
+    let (b, t) = (be.manifest().batch, be.manifest().seq_len);
+    anyhow::ensure!(!ids.is_empty(), "decode on an empty history");
+    anyhow::ensure!(ids.len() <= t, "history {} exceeds decode window {t}", ids.len());
+    let mut toks = vec![0i32; b * t];
+    toks[..ids.len()].copy_from_slice(ids);
+    let mut pos = vec![0i32; b];
+    pos[0] = ids.len() as i32 - 1;
+    let v = be.logits(prefix, &toks, &pos)?;
+    let vocab = v.len() / b.max(1);
+    Ok(v[..vocab].to_vec())
 }
 
 /// The program family plus transfer semantics. Methods take `&mut self`
@@ -114,6 +194,66 @@ pub trait Backend {
     fn has_logits(&self) -> bool {
         true
     }
+
+    /// Prepare a resident prefix for incremental decode. Native overrides
+    /// this to decode (and cache) the f64 model once per uploaded prefix;
+    /// the default is the full-forward fallback, which works wherever
+    /// [`Backend::logits`] does.
+    fn decode_model(&mut self, _prefix: &StateBuf) -> Result<DecodeModel> {
+        Ok(DecodeModel::Full)
+    }
+
+    /// Open a fresh per-request decode session for `model`.
+    fn decode_open(&mut self, model: &DecodeModel) -> Result<DecodeSession> {
+        match model {
+            DecodeModel::Full => Ok(DecodeSession(DecodeSt::Full {
+                ids: Vec::new(),
+                cap: self.manifest().seq_len,
+            })),
+            DecodeModel::Native(_) => {
+                Err(anyhow!("native decode model on a fallback backend"))
+            }
+        }
+    }
+
+    /// Feed the whole prompt through the session; returns the last
+    /// position's next-token logits (`vocab` floats). Natively this is
+    /// one full forward that also populates the K/V cache, so the prompt
+    /// prefix is computed exactly once per session.
+    fn decode_prefill(
+        &mut self,
+        prefix: &StateBuf,
+        _model: &DecodeModel,
+        st: &mut DecodeSession,
+        ids: &[i32],
+    ) -> Result<Vec<f32>> {
+        let DecodeSt::Full { ids: hist, cap } = &mut st.0 else {
+            return Err(anyhow!("decode session does not belong to this backend"));
+        };
+        anyhow::ensure!(ids.len() <= *cap, "prompt exceeds decode window {cap}");
+        hist.clear();
+        hist.extend_from_slice(ids);
+        fallback_logits(self, prefix, ids)
+    }
+
+    /// Consume one sampled token; returns the next-token logits.
+    fn decode_step(
+        &mut self,
+        prefix: &StateBuf,
+        _model: &DecodeModel,
+        st: &mut DecodeSession,
+        tok: i32,
+    ) -> Result<Vec<f32>> {
+        let DecodeSt::Full { ids: hist, cap } = &mut st.0 else {
+            return Err(anyhow!("decode session does not belong to this backend"));
+        };
+        anyhow::ensure!(hist.len() < *cap, "decode window full at {}", cap);
+        hist.push(tok);
+        fallback_logits(self, prefix, hist)
+    }
+
+    /// Retire a session, recycling its buffers where applicable.
+    fn decode_close(&mut self, _st: DecodeSession) {}
 
     /// Upload a full state vector (resume / DP broadcast). On PJRT the
     /// upload is staged: the source literal stays pinned until the next

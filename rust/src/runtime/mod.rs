@@ -34,7 +34,9 @@ pub mod native;
 pub mod state;
 
 pub use artifact::{ArtifactIndex, Manifest, TensorSpec};
-pub use backend::{Backend, BackendFactory, BackendKind, PjrtBackend, StateBuf};
+pub use backend::{
+    Backend, BackendFactory, BackendKind, DecodeModel, DecodeSession, PjrtBackend, StateBuf,
+};
 pub use client::{HostBuffer, Program, Runtime, StagingPool};
 pub use native::NativeBackend;
 pub use state::StateHost;

@@ -868,6 +868,244 @@ impl Model {
 }
 
 // ---------------------------------------------------------------------------
+// incremental decode (KV cache)
+// ---------------------------------------------------------------------------
+
+/// Per-session attention state for incremental decode: one `(seq_cap, d)`
+/// key matrix (post-RoPE) and one value matrix per layer, with the first
+/// `len` rows valid. Storage checks out of the step loop's [`Arena`] on
+/// open and recycles on [`KvCache::recycle`], so a serve slot churning
+/// through sessions reuses the same buffers (DESIGN.md §Serving).
+pub struct KvCache {
+    seq_cap: usize,
+    len: usize,
+    k: Vec<Mat>, // per layer: (seq_cap, d), rows [0, len) valid, post-RoPE
+    v: Vec<Mat>, // per layer: (seq_cap, d), rows [0, len) valid
+}
+
+impl KvCache {
+    /// An empty cache with room for `seq_cap` positions across `layers`
+    /// layers of width `d`, arena-backed.
+    pub fn new(layers: usize, seq_cap: usize, d: usize, ar: &mut Arena) -> KvCache {
+        KvCache {
+            seq_cap,
+            len: 0,
+            k: (0..layers).map(|_| ar.mat(seq_cap, d)).collect(),
+            v: (0..layers).map(|_| ar.mat(seq_cap, d)).collect(),
+        }
+    }
+
+    /// Number of positions currently cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum number of positions this cache can hold.
+    pub fn capacity(&self) -> usize {
+        self.seq_cap
+    }
+
+    /// Forget all cached positions (storage is kept for reuse).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Hand every buffer back to the arena so the next session reuses it.
+    pub fn recycle(self, ar: &mut Arena) {
+        for m in self.k.into_iter().chain(self.v) {
+            ar.put(m);
+        }
+    }
+}
+
+impl Model {
+    /// Run the full forward over a prompt and harvest each layer's
+    /// post-RoPE K and raw V rows into `kv`, leaving it positioned for
+    /// [`Model::forward_incremental`] at position `ids.len()`. Returns the
+    /// prompt logits `(n, vocab)` (arena-backed; caller recycles), so
+    /// prompt scoring rides the same pass. Exactness is by construction:
+    /// the prefill IS [`Model::forward_ctx`], and row `s` of a forward at
+    /// any length depends only on rows `<= s`, so the harvested rows are
+    /// the ones any longer forward would recompute.
+    pub fn prefill(&self, ids: &[i32], kv: &mut KvCache, cx: &mut Ctx) -> Result<Mat> {
+        let n = ids.len();
+        anyhow::ensure!(n >= 1, "prefill needs at least one token");
+        anyhow::ensure!(
+            n <= kv.seq_cap,
+            "prompt length {n} exceeds kv capacity {}",
+            kv.seq_cap
+        );
+        let (logits, cache) = self.forward_ctx(ids, 1, n, cx)?;
+        let d = self.hidden;
+        for (lc, (kd, vd)) in cache.layers.iter().zip(kv.k.iter_mut().zip(kv.v.iter_mut())) {
+            kd.data[..n * d].copy_from_slice(&lc.k.data[..n * d]);
+            vd.data[..n * d].copy_from_slice(&lc.v.data[..n * d]);
+        }
+        kv.len = n;
+        cache.recycle(cx.arena);
+        Ok(logits)
+    }
+
+    /// One decode step: consume `tok` at absolute position `kv.len()`
+    /// against the cached K/V, append this position's K/V rows, and
+    /// return the final-norm hidden row `(1, hidden)` (arena-backed).
+    ///
+    /// Bit-identity contract (the serving analogue of PR-5's
+    /// parallel == serial suite): with `t = kv.len()`, the resulting
+    /// logits row equals row `t` of `forward_ctx(&ids[..=t], 1, t+1)` by
+    /// `to_bits`, at every thread count. Every reduction below replays
+    /// the full forward's operation order on the single live row: the
+    /// matmuls accumulate in ascending-k order from zero (the tiled
+    /// kernel's own order), the attention max/exp/sum walk `s = 0..=t`
+    /// ascending, and RoPE evaluates the same per-position expression
+    /// `rope_tables` does.
+    pub fn forward_incremental(&self, tok: i32, kv: &mut KvCache, cx: &mut Ctx) -> Result<Mat> {
+        let d = self.hidden;
+        let pos = kv.len;
+        anyhow::ensure!(pos < kv.seq_cap, "kv cache full at {pos} of {}", kv.seq_cap);
+        anyhow::ensure!(
+            (0..self.vocab as i32).contains(&tok),
+            "token id {tok} outside vocab {}",
+            self.vocab
+        );
+        anyhow::ensure!(kv.k.len() == self.layers, "kv cache layer mismatch");
+        let (heads, hd) = (self.heads, self.head_dim);
+        let half = hd / 2;
+        let scale = 1.0 / (hd as f64).sqrt();
+
+        // this position's RoPE row — same expression as rope_tables at t=pos
+        let mut cosr = cx.arena.vec(half);
+        let mut sinr = cx.arena.vec(half);
+        for j in 0..half {
+            let freq = ROPE_BASE.powf(-(j as f64) / half as f64);
+            let ang = pos as f64 * freq;
+            cosr[j] = ang.cos();
+            sinr[j] = ang.sin();
+        }
+
+        let mut h = cx.arena.mat(1, d);
+        h.data
+            .copy_from_slice(&self.embed.data[tok as usize * d..(tok as usize + 1) * d]);
+        let mut srow = cx.arena.vec(pos + 1);
+
+        for (l, block) in self.blocks.iter().enumerate() {
+            let x_in = h;
+            let (n1, inv1) = rms_norm(&x_in, &block.rms1, cx.arena);
+            cx.arena.put_vec(inv1);
+            let mut q = block.mats[mat_idx("attn_q")].apply_ctx(&n1, cx);
+            let mut k = block.mats[mat_idx("attn_k")].apply_ctx(&n1, cx);
+            let v = block.mats[mat_idx("attn_v")].apply_ctx(&n1, cx);
+            cx.arena.put(n1);
+            // rotate q and k at absolute position pos (apply_rope would
+            // index its tables at t = 0 for a one-row activation)
+            for row in [&mut q, &mut k] {
+                for hh in 0..heads {
+                    let base = hh * hd;
+                    for j in 0..half {
+                        let c = cosr[j];
+                        let s = sinr[j];
+                        let x1 = row.data[base + j];
+                        let x2 = row.data[base + j + half];
+                        row.data[base + j] = x1 * c - x2 * s;
+                        row.data[base + j + half] = x1 * s + x2 * c;
+                    }
+                }
+            }
+            kv.k[l].data[pos * d..(pos + 1) * d].copy_from_slice(&k.data);
+            kv.v[l].data[pos * d..(pos + 1) * d].copy_from_slice(&v.data);
+
+            // causal attention row t = pos over s = 0..=pos, per head
+            let mut ctxr = cx.arena.mat(1, d);
+            let (kl, vl) = (&kv.k[l], &kv.v[l]);
+            for hh in 0..heads {
+                let base = hh * hd;
+                let qrow = &q.data[base..base + hd];
+                let mut mx = f64::NEG_INFINITY;
+                for (s, sv) in srow.iter_mut().enumerate() {
+                    let krow = &kl.data[s * d + base..s * d + base + hd];
+                    *sv = super::kernels::dot(qrow, krow) * scale;
+                    if *sv > mx {
+                        mx = *sv;
+                    }
+                }
+                let mut z = 0.0;
+                for sv in srow.iter_mut() {
+                    *sv = (*sv - mx).exp();
+                    z += *sv;
+                }
+                // ctx row = Σ_s (p_s · v_s): ascending s from zero is the
+                // probs × V matmul's own accumulation order
+                let out = &mut ctxr.data[base..base + hd];
+                for (s, sv) in srow.iter().enumerate() {
+                    let w = sv / z;
+                    let vrow = &vl.data[s * d + base..s * d + base + hd];
+                    for (o, &ve) in out.iter_mut().zip(vrow) {
+                        *o += w * ve;
+                    }
+                }
+            }
+            cx.arena.put(q);
+            cx.arena.put(k);
+            cx.arena.put(v);
+
+            let attn_out = block.mats[mat_idx("attn_o")].apply_ctx(&ctxr, cx);
+            cx.arena.put(ctxr);
+            let mut h_mid = cx.arena.mat_from(&x_in);
+            h_mid.add_assign(&attn_out);
+            cx.arena.put(attn_out);
+            cx.arena.put(x_in);
+
+            let (n2, inv2) = rms_norm(&h_mid, &block.rms2, cx.arena);
+            cx.arena.put_vec(inv2);
+            let gate = block.mats[mat_idx("ffn_gate")].apply_ctx(&n2, cx);
+            let up = block.mats[mat_idx("ffn_up")].apply_ctx(&n2, cx);
+            cx.arena.put(n2);
+            let mut inner = cx.arena.mat(gate.rows, gate.cols);
+            for i in 0..inner.data.len() {
+                let g = gate.data[i];
+                inner.data[i] = g * sigmoid(g) * up.data[i];
+            }
+            let down = block.mats[mat_idx("ffn_down")].apply_ctx(&inner, cx);
+            let mut h_out = cx.arena.mat_from(&h_mid);
+            h_out.add_assign(&down);
+            for m in [gate, up, inner, down, h_mid] {
+                cx.arena.put(m);
+            }
+            h = h_out;
+        }
+        kv.len = pos + 1;
+        cx.arena.put_vec(srow);
+        cx.arena.put_vec(cosr);
+        cx.arena.put_vec(sinr);
+
+        let (hf, invf) = rms_norm(&h, &self.rms_f, cx.arena);
+        cx.arena.put(h);
+        cx.arena.put_vec(invf);
+        Ok(hf)
+    }
+
+    /// [`Model::forward_incremental`] through the output head: the
+    /// next-token logits row (length `vocab`). Each logit is a `dot`
+    /// against a `head` row — the same multiply pairs, in the same
+    /// ascending-k order from zero, as the full forward's `hf · headᵀ`
+    /// matmul, without materializing the transpose every step.
+    pub fn logits_incremental(&self, tok: i32, kv: &mut KvCache, cx: &mut Ctx) -> Result<Vec<f64>> {
+        let d = self.hidden;
+        let hf = self.forward_incremental(tok, kv, cx)?;
+        let mut logits = Vec::with_capacity(self.vocab);
+        for j in 0..self.vocab {
+            logits.push(super::kernels::dot(&hf.data, &self.head.data[j * d..(j + 1) * d]));
+        }
+        cx.arena.put(hf);
+        Ok(logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // losses on top of the forward
 // ---------------------------------------------------------------------------
 

@@ -58,6 +58,16 @@ impl<T> DeadlineBatcher<T> {
             || self.deadline().map(|d| now >= d).unwrap_or(false)
     }
 
+    /// Pop the single oldest item regardless of deadlines — continuous
+    /// batching admits queued requests into decode slots one at a time,
+    /// the moment a slot frees (docs/adr/006-kv-cache-continuous-batching.md).
+    pub fn pop_oldest(&mut self) -> Option<T> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        Some(self.queue.remove(0).0)
+    }
+
     /// Flush up to `max_batch` items if the batch is full or the deadline
     /// has passed (or unconditionally with `force`, for drain-on-shutdown).
     pub fn take(&mut self, now: Instant, force: bool) -> Option<Batch<T>> {
@@ -115,10 +125,23 @@ impl<K: Ord + Clone, T> KeyedBatcher<K, T> {
     /// removed — client-supplied variant names must not grow the map
     /// (they are only validated downstream, in the engine).
     pub fn take_ready(&mut self, now: Instant, force: bool) -> Option<(K, Batch<T>)> {
+        self.take_ready_where(now, force, |_| true)
+    }
+
+    /// [`KeyedBatcher::take_ready`] restricted to keys matching `keep`.
+    /// The continuous-batching worker flushes score traffic in lockstep
+    /// batches while generate keys bypass the deadline machinery through
+    /// [`KeyedBatcher::pop_where`] instead.
+    pub fn take_ready_where(
+        &mut self,
+        now: Instant,
+        force: bool,
+        keep: impl Fn(&K) -> bool,
+    ) -> Option<(K, Batch<T>)> {
         let key = self
             .queues
             .iter()
-            .filter(|(_, q)| !q.is_empty())
+            .filter(|(k, q)| !q.is_empty() && keep(k))
             .max_by_key(|(_, q)| {
                 (q.len() >= self.max_batch, std::cmp::Reverse(q.deadline()))
             })
@@ -129,6 +152,24 @@ impl<K: Ord + Clone, T> KeyedBatcher<K, T> {
             self.queues.remove(&key);
         }
         batch.map(|b| (key, b))
+    }
+
+    /// Pop the single oldest item across keys matching `keep` (ties go to
+    /// the earliest deadline, i.e. the oldest queue head). Used for slot
+    /// admission: one request per free decode slot, no deadline wait.
+    pub fn pop_where(&mut self, keep: impl Fn(&K) -> bool) -> Option<(K, T)> {
+        let key = self
+            .queues
+            .iter()
+            .filter(|(k, q)| !q.is_empty() && keep(k))
+            .min_by_key(|(_, q)| q.deadline())
+            .map(|(k, _)| k.clone())?;
+        let queue = self.queues.get_mut(&key)?;
+        let item = queue.pop_oldest();
+        if queue.is_empty() {
+            self.queues.remove(&key);
+        }
+        item.map(|x| (key, x))
     }
 }
 
@@ -230,6 +271,43 @@ mod tests {
         assert_eq!(kb.queues.len(), 100);
         while kb.take_ready(t0 + 20 * MS, false).is_some() {}
         assert_eq!(kb.queues.len(), 0, "drained keys must be evicted");
+    }
+
+    #[test]
+    fn pop_where_takes_oldest_matching_item_only() {
+        let t0 = Instant::now();
+        let mut kb = KeyedBatcher::new(4, 10 * MS);
+        kb.push(("gen", 1), 100, t0 + MS);
+        kb.push(("score", 1), 200, t0);
+        kb.push(("gen", 2), 101, t0 + 2 * MS);
+        // only generate keys are eligible; oldest generate queue wins
+        let (k, item) = kb.pop_where(|k| k.0 == "gen").unwrap();
+        assert_eq!((k, item), (("gen", 1), 100));
+        let (k, item) = kb.pop_where(|k| k.0 == "gen").unwrap();
+        assert_eq!((k, item), (("gen", 2), 101));
+        assert!(kb.pop_where(|k| k.0 == "gen").is_none());
+        // drained generate keys are evicted; score traffic is untouched
+        assert_eq!(kb.pending(), 1);
+        let (k, batch) = kb.take_ready(t0 + 20 * MS, false).unwrap();
+        assert_eq!(k, ("score", 1));
+        assert_eq!(batch.items, vec![200]);
+        assert!(kb.is_empty());
+    }
+
+    #[test]
+    fn take_ready_where_skips_filtered_keys() {
+        let t0 = Instant::now();
+        let mut kb = KeyedBatcher::new(2, 10 * MS);
+        kb.push("gen", 1, t0);
+        kb.push("gen", 2, t0);
+        kb.push("score", 3, t0 + MS);
+        // the full generate batch would win, but it is filtered out
+        let got = kb.take_ready_where(t0 + 20 * MS, false, |&k| k != "gen");
+        let (k, batch) = got.unwrap();
+        assert_eq!(k, "score");
+        assert_eq!(batch.items, vec![3]);
+        assert!(kb.take_ready_where(t0 + 20 * MS, true, |&k| k != "gen").is_none());
+        assert_eq!(kb.pending(), 2, "filtered items stay queued");
     }
 
     #[test]

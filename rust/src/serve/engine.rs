@@ -11,6 +11,7 @@
 //!   batcher/protocol/socket machinery in tests and benches, and stands
 //!   in when artifacts are not built (DESIGN.md §Serving).
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -26,11 +27,54 @@ pub struct BatchKey {
     pub kind: OpKind,
 }
 
+/// A decode slot that finished this step: its admission ticket plus the
+/// reply to render (per-slot failures are values, same contract as
+/// [`BatchEngine::execute`]).
+#[derive(Debug)]
+pub struct SlotDone {
+    pub ticket: u64,
+    pub reply: Result<Reply>,
+}
+
 /// One engine instance per worker thread. `execute` returns exactly one
 /// reply per request, in order; per-request failures are values, not a
 /// batch-level error, so one bad prompt can't fail its batchmates.
+///
+/// Engines may additionally expose a fixed table of *decode slots* for
+/// continuous batching (docs/adr/006-kv-cache-continuous-batching.md):
+/// generate requests join a free slot the moment one opens, every active
+/// slot advances one token per [`BatchEngine::step_slots`] call, and
+/// finished or cancelled slots free immediately — no request waits for
+/// unrelated batchmates to finish decoding. The defaults opt out
+/// (`decode_slots() == 0`), which keeps lockstep engines working
+/// unchanged.
 pub trait BatchEngine {
     fn execute(&mut self, key: &BatchKey, batch: &[Request]) -> Vec<Result<Reply>>;
+
+    /// Decode-slot capacity; 0 means lockstep-only (the default).
+    fn decode_slots(&self) -> usize {
+        0
+    }
+
+    /// Currently occupied decode slots.
+    fn slots_active(&self) -> usize {
+        0
+    }
+
+    /// Admit one generate request into a free slot (runs the prompt
+    /// prefill). Returns the slot ticket and the prefill token count.
+    fn slot_admit(&mut self, _key: &BatchKey, _req: &Request) -> Result<(u64, usize)> {
+        anyhow::bail!("engine has no decode slots")
+    }
+
+    /// Advance every active slot by one decode step; slots that finish
+    /// (or fail) this step are retired and returned.
+    fn step_slots(&mut self) -> Vec<SlotDone> {
+        Vec::new()
+    }
+
+    /// Drop a slot without a reply (its client disconnected).
+    fn slot_cancel(&mut self, _ticket: u64) {}
 }
 
 /// Factory the server clones into each worker thread.
@@ -46,18 +90,55 @@ pub struct MockEngine {
     pub exec_cost: Duration,
     /// batch sizes seen, shared with tests asserting coalescing
     pub seen: Arc<Mutex<Vec<usize>>>,
+    /// decode-slot capacity; 0 (the default constructors) = lockstep,
+    /// so the coalescing tests keep their exact batch-size assertions
+    slots: usize,
+    active: BTreeMap<u64, MockSlot>,
+    next_ticket: u64,
+}
+
+/// One streaming mock session: echoes one prompt word per decode step.
+struct MockSlot {
+    words: Vec<String>,
+    out: Vec<String>,
+    budget: usize,
 }
 
 impl MockEngine {
     pub fn new(exec_cost: Duration) -> MockEngine {
-        MockEngine { exec_cost, seen: Arc::new(Mutex::new(Vec::new())) }
+        MockEngine {
+            exec_cost,
+            seen: Arc::new(Mutex::new(Vec::new())),
+            slots: 0,
+            active: BTreeMap::new(),
+            next_ticket: 1,
+        }
+    }
+
+    /// A streaming mock: `slots` decode slots, one echoed word per step,
+    /// `exec_cost` charged per step across all slots. Exercises the
+    /// continuous-batching server machinery without a model.
+    pub fn streaming(exec_cost: Duration, slots: usize) -> MockEngine {
+        let mut e = MockEngine::new(exec_cost);
+        e.slots = slots;
+        e
     }
 
     /// A factory producing engines that share one `seen` log.
     pub fn factory(exec_cost: Duration, seen: Arc<Mutex<Vec<usize>>>) -> EngineFactory {
+        Self::factory_streaming(exec_cost, 0, seen)
+    }
+
+    /// [`MockEngine::factory`] with `slots` decode slots per engine.
+    pub fn factory_streaming(
+        exec_cost: Duration,
+        slots: usize,
+        seen: Arc<Mutex<Vec<usize>>>,
+    ) -> EngineFactory {
         Arc::new(move || {
-            Ok(Box::new(MockEngine { exec_cost, seen: seen.clone() })
-                as Box<dyn BatchEngine>)
+            let mut e = MockEngine::streaming(exec_cost, slots);
+            e.seen = seen.clone();
+            Ok(Box::new(e) as Box<dyn BatchEngine>)
         })
     }
 }
@@ -101,6 +182,72 @@ impl BatchEngine for MockEngine {
             })
             .collect()
     }
+
+    fn decode_slots(&self) -> usize {
+        self.slots
+    }
+
+    fn slots_active(&self) -> usize {
+        self.active.len()
+    }
+
+    fn slot_admit(&mut self, _key: &BatchKey, req: &Request) -> Result<(u64, usize)> {
+        anyhow::ensure!(self.active.len() < self.slots, "no free decode slot");
+        anyhow::ensure!(req.kind == OpKind::Generate, "slots only decode");
+        if req.text.contains("\u{0}fail") {
+            anyhow::bail!("mock engine: poisoned request");
+        }
+        let words: Vec<String> =
+            req.text.split_whitespace().map(str::to_string).collect();
+        let tokens_in = words.len();
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.active.insert(
+            ticket,
+            MockSlot { words, out: Vec::new(), budget: req.max_tokens },
+        );
+        Ok((ticket, tokens_in))
+    }
+
+    fn step_slots(&mut self) -> Vec<SlotDone> {
+        if self.active.is_empty() {
+            return Vec::new();
+        }
+        if !self.exec_cost.is_zero() {
+            std::thread::sleep(self.exec_cost); // one simulated device step
+        }
+        let mut done = Vec::new();
+        let finished: Vec<u64> = self
+            .active
+            .iter_mut()
+            .filter_map(|(&ticket, slot)| {
+                let i = slot.out.len();
+                let w = slot
+                    .words
+                    .get(i % slot.words.len().max(1))
+                    .cloned()
+                    .unwrap_or_else(|| "pad".into());
+                slot.out.push(w);
+                (slot.out.len() >= slot.budget).then_some(ticket)
+            })
+            .collect();
+        for ticket in finished {
+            let slot = self.active.remove(&ticket).expect("finished slot");
+            done.push(SlotDone {
+                ticket,
+                reply: Ok(Reply::Generated {
+                    text: slot.out.join(" "),
+                    tokens_in: slot.words.len(),
+                    tokens_out: slot.out.len(),
+                }),
+            });
+        }
+        done
+    }
+
+    fn slot_cancel(&mut self, ticket: u64) {
+        self.active.remove(&ticket);
+    }
 }
 
 #[cfg(test)]
@@ -135,5 +282,53 @@ mod tests {
         assert_eq!((*tokens_in, *tokens_out), (2, 4));
         assert!(out[1].is_err(), "poisoned request fails alone");
         assert_eq!(*e.seen.lock().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn streaming_mock_joins_steps_and_leaves_per_slot() {
+        let mut e = MockEngine::streaming(Duration::ZERO, 2);
+        assert_eq!(e.decode_slots(), 2);
+        let key = BatchKey { variant: "m".into(), kind: OpKind::Generate };
+        let mut long = req(OpKind::Generate, "x y");
+        long.max_tokens = 4;
+        let mut short = req(OpKind::Generate, "a b c");
+        short.max_tokens = 1;
+        let (t_long, tin) = e.slot_admit(&key, &long).unwrap();
+        assert_eq!(tin, 2);
+        let (t_short, _) = e.slot_admit(&key, &short).unwrap();
+        assert_eq!(e.slots_active(), 2);
+        assert!(e.slot_admit(&key, &short).is_err(), "table is full");
+
+        // step 1: the short request finishes while the long one decodes
+        let done = e.step_slots();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].ticket, t_short);
+        let Reply::Generated { text, tokens_out, .. } =
+            done[0].reply.as_ref().unwrap()
+        else {
+            panic!("wrong reply kind")
+        };
+        assert_eq!((text.as_str(), *tokens_out), ("a", 1));
+        assert_eq!(e.slots_active(), 1);
+
+        // the freed slot admits the next request immediately
+        e.slot_admit(&key, &short).unwrap();
+        for _ in 0..2 {
+            e.step_slots();
+        }
+        let done = e.step_slots();
+        assert_eq!(done.len(), 1, "long request retires on its 4th step");
+        assert_eq!(done[0].ticket, t_long);
+        let Reply::Generated { text, .. } = done[0].reply.as_ref().unwrap() else {
+            panic!()
+        };
+        assert_eq!(text, "x y x y");
+        assert_eq!(e.slots_active(), 0);
+
+        // cancel frees without a reply
+        let (t, _) = e.slot_admit(&key, &long).unwrap();
+        e.slot_cancel(t);
+        assert_eq!(e.slots_active(), 0);
+        assert!(e.step_slots().is_empty());
     }
 }

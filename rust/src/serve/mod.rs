@@ -12,8 +12,10 @@
 //! * [`cache`]     — LRU of hot model sessions, keyed by variant,
 //! * [`engine`]    — the worker-side execution boundary + mock engine,
 //! * [`session`]   — the real engines (checkpoint loading, batched
-//!   score, lockstep batched decode) over either backend: PJRT or the
-//!   artifact-free native interpreter (DESIGN.md §Backends),
+//!   score, KV-cached continuous-batching decode with a lockstep
+//!   fallback) over either backend: PJRT or the artifact-free native
+//!   interpreter (DESIGN.md §Backends,
+//!   docs/adr/006-kv-cache-continuous-batching.md),
 //! * [`server`]    — TCP accept loop, connection handlers, engine worker
 //!   pool,
 //! * [`telemetry`] — latency percentiles, batch occupancy, tokens/sec.
@@ -31,8 +33,8 @@ pub mod telemetry;
 
 pub use batcher::{Batch, DeadlineBatcher, KeyedBatcher};
 pub use cache::LruCache;
-pub use engine::{BatchEngine, BatchKey, EngineFactory, MockEngine};
+pub use engine::{BatchEngine, BatchKey, EngineFactory, MockEngine, SlotDone};
 pub use protocol::{OpKind, Reply, Request};
 pub use server::{ServeCfg, Server, ServerHandle};
-pub use session::{ModelSession, NativeEngine, PjrtEngine};
+pub use session::{GenSlot, ModelSession, NativeEngine, PjrtEngine, DECODE_SLOTS_DEFAULT};
 pub use telemetry::ServeStats;

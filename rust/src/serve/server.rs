@@ -18,7 +18,18 @@
 //! shutdown the queue is drained with forced flushes before workers drop
 //! their engines together (PJRT client teardown must not race executes —
 //! the barrier mirrors the scheduler's).
+//!
+//! When the worker's engine exposes decode slots
+//! (docs/adr/006-kv-cache-continuous-batching.md), generate traffic
+//! bypasses the deadline batcher: queued requests are admitted into free
+//! slots one at a time, every active slot advances one token per loop
+//! iteration, and finished or disconnected slots free immediately — score
+//! traffic still coalesces into lockstep batches alongside. Admission
+//! control bounds the queue: past `queue_cap` pending requests, new model
+//! ops are answered with an `overloaded` error instead of queueing
+//! without bound.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -29,7 +40,7 @@ use anyhow::{Context, Result};
 
 use super::batcher::KeyedBatcher;
 use super::engine::{BatchKey, EngineFactory};
-use super::protocol::{self, Parsed, Request, ResponseMeta};
+use super::protocol::{self, OpKind, Parsed, Request, ResponseMeta};
 use super::telemetry::ServeStats;
 use crate::train::MetricsLog;
 use crate::util::json::Json;
@@ -49,6 +60,9 @@ pub struct ServeCfg {
     pub default_variant: Option<String>,
     /// tee per-batch telemetry rows to `results/<name>/metrics.jsonl`
     pub metrics_name: Option<String>,
+    /// admission-control bound: model ops past this many pending queue
+    /// entries are shed with an `overloaded` error instead of queueing
+    pub queue_cap: usize,
 }
 
 impl Default for ServeCfg {
@@ -60,6 +74,7 @@ impl Default for ServeCfg {
             workers: 1,
             default_variant: None,
             metrics_name: None,
+            queue_cap: 1024,
         }
     }
 }
@@ -69,6 +84,10 @@ struct Pending {
     req: Request,
     enqueued: Instant,
     reply: mpsc::Sender<String>,
+    /// cleared by the connection's reader on EOF/error; an mpsc sender
+    /// can't observe the peer closing, so in-flight decode slots poll
+    /// this to reclaim slots whose client vanished mid-decode
+    alive: Arc<AtomicBool>,
 }
 
 struct Shared {
@@ -210,6 +229,9 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     let peer = stream.peer_addr().ok();
     crate::debug!("serve", "connection from {peer:?}");
     let (tx, rx) = mpsc::channel::<String>();
+    // cleared when the reader exits, however it exits — decode slots
+    // opened for this connection poll it to free themselves
+    let alive = Arc::new(AtomicBool::new(true));
 
     // writer half: drains the response channel until every sender is gone
     let writer_stream = stream.try_clone().context("cloning stream")?;
@@ -223,8 +245,11 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     });
 
     // reader half: parse, answer control ops inline, submit model ops
+    // (closure so every exit path — EOF, parse I/O error, shutdown —
+    // still clears the alive flag below)
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    let res = (|| -> Result<()> {
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
@@ -268,16 +293,23 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                     continue;
                 };
                 let key = BatchKey { variant, kind: req.kind };
-                let pending =
-                    Pending { req, enqueued: Instant::now(), reply: tx.clone() };
+                let pending = Pending {
+                    req,
+                    enqueued: Instant::now(),
+                    reply: tx.clone(),
+                    alive: alive.clone(),
+                };
                 let now = pending.enqueued;
                 // check the flag UNDER the queue lock: workers only exit
                 // after a force-drain under this lock with the flag set,
-                // so an accepted push is guaranteed a living worker
+                // so an accepted push is guaranteed a living worker; the
+                // same lock makes the queue_cap check race-free
                 let rejected = {
                     let mut q = shared.queue.lock().unwrap();
                     if shared.shutdown.load(Ordering::SeqCst) {
-                        Some(pending)
+                        Some((pending, "server is shutting down", false))
+                    } else if q.pending() >= shared.cfg.queue_cap {
+                        Some((pending, "overloaded", true))
                     } else {
                         q.push(key, pending, now);
                         None
@@ -285,20 +317,24 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                 };
                 match rejected {
                     None => shared.wake.notify_one(),
-                    Some(p) => {
-                        let _ = p.reply.send(protocol::render_error(
-                            &p.req.id,
-                            "server is shutting down",
-                        ));
-                        shared.stats.record_rejected();
+                    Some((p, msg, overloaded)) => {
+                        let _ = p.reply.send(protocol::render_error(&p.req.id, msg));
+                        if overloaded {
+                            shared.stats.record_overloaded();
+                        } else {
+                            shared.stats.record_rejected();
+                        }
                     }
                 }
             }
         }
     }
+    Ok(())
+    })();
+    alive.store(false, Ordering::SeqCst);
     drop(tx);
     let _ = writer.join();
-    Ok(())
+    res
 }
 
 fn engine_worker(
@@ -324,17 +360,44 @@ fn engine_worker(
     };
     crate::debug!("serve", "worker {wid} ready");
 
+    // continuous batching state: tickets this worker's engine is decoding
+    // (docs/adr/006-kv-cache-continuous-batching.md). slots_cap == 0 is
+    // the lockstep-only engine and reduces this loop to the original one.
+    let slots_cap = engine.decode_slots();
+    let mut active: HashMap<u64, Pending> = HashMap::new();
+
     loop {
-        // take a ready batch, or sleep until the next deadline / wakeup
+        // collect work under the lock: queued generate requests for free
+        // decode slots, plus a ready lockstep batch — or sleep until the
+        // next deadline / wakeup when there is nothing at all to do
+        let mut admits: Vec<(BatchKey, Pending)> = Vec::new();
+        let mut exit = false;
         let taken = {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 let stopping = shared.shutdown.load(Ordering::SeqCst);
-                if let Some(kb) = q.take_ready(Instant::now(), stopping) {
+                if slots_cap > 0 {
+                    while active.len() + admits.len() < slots_cap {
+                        match q.pop_where(|k: &BatchKey| k.kind == OpKind::Generate) {
+                            Some((k, p)) => admits.push((k, p)),
+                            None => break,
+                        }
+                    }
+                }
+                // generate keys never flush as lockstep batches while the
+                // slot table handles them; score traffic batches as before
+                let kb = q.take_ready_where(Instant::now(), stopping, |k| {
+                    slots_cap == 0 || k.kind != OpKind::Generate
+                });
+                if let Some(kb) = kb {
                     break Some(kb);
                 }
+                if !admits.is_empty() || !active.is_empty() {
+                    break None; // slot work waits outside the lock
+                }
                 if stopping {
-                    break None; // queue fully drained
+                    exit = true;
+                    break None; // queue fully drained, slots empty
                 }
                 q = match q.next_deadline() {
                     Some(d) => {
@@ -345,20 +408,59 @@ fn engine_worker(
                 };
             }
         };
-        let Some((key, batch)) = taken else { break };
+        if exit {
+            break;
+        }
 
-        let t0 = Instant::now();
-        let replies = engine.execute(&key, &batch.items);
-        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let wait_ms = batch.waited.as_secs_f64() * 1e3;
-        debug_assert_eq!(replies.len(), batch.items.len());
+        // admissions: prefill each popped request into a decode slot; a
+        // failed admit answers that one request without touching others
+        for (key, p) in admits {
+            if !p.alive.load(Ordering::SeqCst) {
+                // client vanished while queued: nobody to answer
+                shared.stats.record_rejected();
+                continue;
+            }
+            match engine.slot_admit(&key, &p.req) {
+                Ok((ticket, tokens_in)) => {
+                    shared.stats.record_slot_join(tokens_in as u64);
+                    active.insert(ticket, p);
+                }
+                Err(e) => {
+                    let latency_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+                    let _ = p
+                        .reply
+                        .send(protocol::render_error(&p.req.id, &format!("{e:#}")));
+                    shared.stats.record_request(latency_ms, false, 0, 0);
+                }
+            }
+        }
 
-        let done = Instant::now();
-        for (pending, reply) in batch.items.iter().zip(&replies) {
-            let latency_ms =
-                done.saturating_duration_since(pending.enqueued).as_secs_f64() * 1e3;
-            let meta = ResponseMeta { latency_ms, batch: batch.items.len() };
-            let (line, ok, tin, tout) = match reply {
+        if let Some((key, batch)) = taken {
+            execute_lockstep(&shared, engine.as_mut(), &key, batch);
+        }
+
+        if active.is_empty() {
+            continue;
+        }
+        // reclaim slots whose client disconnected mid-decode, then
+        // advance every remaining slot one token
+        let dead: Vec<u64> = active
+            .iter()
+            .filter(|(_, p)| !p.alive.load(Ordering::SeqCst))
+            .map(|(&t, _)| t)
+            .collect();
+        for t in dead {
+            engine.slot_cancel(t);
+            active.remove(&t);
+            shared.stats.record_slot_disconnect();
+            crate::debug!("serve", "worker {wid}: freed slot of vanished client");
+        }
+        let n_active = active.len();
+        for d in engine.step_slots() {
+            let Some(p) = active.remove(&d.ticket) else { continue };
+            let latency_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+            let meta = ResponseMeta { latency_ms, batch: n_active };
+            let (line, ok, tin, tout) = match &d.reply {
                 Ok(r) => {
                     let (tin, tout) = match r {
                         protocol::Reply::Generated { tokens_in, tokens_out, .. } => {
@@ -366,25 +468,15 @@ fn engine_worker(
                         }
                         protocol::Reply::Scored { tokens, .. } => (*tokens as u64, 0),
                     };
-                    (protocol::render_reply(&pending.req.id, r, meta), true, tin, tout)
+                    (protocol::render_reply(&p.req.id, r, meta), true, tin, tout)
                 }
                 Err(e) => {
-                    (protocol::render_error(&pending.req.id, &format!("{e:#}")), false, 0, 0)
+                    (protocol::render_error(&p.req.id, &format!("{e:#}")), false, 0, 0)
                 }
             };
-            let _ = pending.reply.send(line);
+            let _ = p.reply.send(line);
             shared.stats.record_request(latency_ms, ok, tin, tout);
-        }
-        shared.stats.record_batch(batch.occupancy, wait_ms, exec_ms);
-        if let Some(m) = shared.metrics.lock().unwrap().as_mut() {
-            m.log_json(&ServeStats::batch_row(
-                &key.variant,
-                key.kind.name(),
-                batch.items.len(),
-                batch.occupancy,
-                wait_ms,
-                exec_ms,
-            ));
+            shared.stats.record_slot_free(tout);
         }
     }
 
@@ -392,6 +484,56 @@ fn engine_worker(
     // executes in sibling clients (see coordinator::sched)
     teardown.wait();
     crate::debug!("serve", "worker {wid} stopped");
+}
+
+/// One flushed lockstep batch through the engine: execute, render every
+/// reply, record telemetry. Factored out of [`engine_worker`] so the
+/// continuous-batching loop stays readable.
+fn execute_lockstep(
+    shared: &Shared,
+    engine: &mut dyn super::engine::BatchEngine,
+    key: &BatchKey,
+    batch: super::batcher::Batch<Pending>,
+) {
+    let t0 = Instant::now();
+    let replies = engine.execute(key, &batch.items);
+    let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let wait_ms = batch.waited.as_secs_f64() * 1e3;
+    debug_assert_eq!(replies.len(), batch.items.len());
+
+    let done = Instant::now();
+    for (pending, reply) in batch.items.iter().zip(&replies) {
+        let latency_ms =
+            done.saturating_duration_since(pending.enqueued).as_secs_f64() * 1e3;
+        let meta = ResponseMeta { latency_ms, batch: batch.items.len() };
+        let (line, ok, tin, tout) = match reply {
+            Ok(r) => {
+                let (tin, tout) = match r {
+                    protocol::Reply::Generated { tokens_in, tokens_out, .. } => {
+                        (*tokens_in as u64, *tokens_out as u64)
+                    }
+                    protocol::Reply::Scored { tokens, .. } => (*tokens as u64, 0),
+                };
+                (protocol::render_reply(&pending.req.id, r, meta), true, tin, tout)
+            }
+            Err(e) => {
+                (protocol::render_error(&pending.req.id, &format!("{e:#}")), false, 0, 0)
+            }
+        };
+        let _ = pending.reply.send(line);
+        shared.stats.record_request(latency_ms, ok, tin, tout);
+    }
+    shared.stats.record_batch(batch.occupancy, wait_ms, exec_ms);
+    if let Some(m) = shared.metrics.lock().unwrap().as_mut() {
+        m.log_json(&ServeStats::batch_row(
+            &key.variant,
+            key.kind.name(),
+            batch.items.len(),
+            batch.occupancy,
+            wait_ms,
+            exec_ms,
+        ));
+    }
 }
 
 fn drain_with_error(shared: &Shared, msg: &str) {

@@ -18,11 +18,26 @@
 //!   --backend native` serves real checkpoints with no artifacts
 //!   directory and no Python (docs/adr/003-native-backend.md).
 //!
-//! Batched decode runs all generate requests of a batch in lockstep: one
-//! `logits` call per decode step scores every sequence's next token at
-//! once; slots that finish early are masked out host-side. There is no KV
-//! cache — each step re-runs the full forward, which is the honest
-//! CPU-testbed trade recorded in docs/adr/001-serve-batching.md.
+//! Decode runs two ways (docs/adr/006-kv-cache-continuous-batching.md):
+//!
+//! * **continuous batching** (the default on the native engine): each
+//!   generate request owns a [`GenSlot`] — a per-session KV cache opened
+//!   through the backend's incremental-decode API — and advances one
+//!   token per [`BatchEngine::step_slots`] call. Requests join a free
+//!   slot the moment one opens and leave the moment they finish, so a
+//!   short request never waits out a long batchmate. The prompt is
+//!   prefilled into the cache exactly once per session; every later step
+//!   consumes a single token.
+//! * **lockstep** ([`ModelSession::generate_chunk`], the PJRT engine and
+//!   the cache-off baseline): one `logits` call per decode step scores
+//!   every sequence's next token at once, re-running the full forward
+//!   over the whole window — the honest no-KV-cache trade recorded in
+//!   docs/adr/001-serve-batching.md, kept as the bench baseline.
+//!
+//! Both paths share the sampling loop semantics (BOS prompt framing,
+//! tail truncation, budget clamping, per-request seeding), and on the
+//! native backend the KV-cached logits are bit-identical to the full
+//! forward, so the two paths produce identical transcripts.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -31,21 +46,28 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use super::cache::LruCache;
-use super::engine::{BatchEngine, BatchKey};
+use super::engine::{BatchEngine, BatchKey, SlotDone};
 use super::protocol::{OpKind, Reply, Request};
 use crate::config::{Registry, VariantCfg};
 use crate::data::bpe::{Bpe, BOS};
 use crate::eval::Evaluator;
 use crate::runtime::backend::StateBuf;
-use crate::runtime::{ArtifactIndex, Manifest, Runtime};
+use crate::runtime::{ArtifactIndex, DecodeModel, Manifest, Runtime};
 use crate::train::checkpoint;
 use crate::util::rng::Pcg64;
+
+/// Default decode-slot table size for the native engine (per worker).
+pub const DECODE_SLOTS_DEFAULT: usize = 8;
 
 /// One hot (variant, checkpoint) pair on some backend.
 pub struct ModelSession {
     pub manifest: Manifest,
     ev: Evaluator,
     prefix: StateBuf,
+    /// the decode-ready model handle, resolved once per session — the
+    /// native backend decodes the f64 model here and every eval, logits
+    /// and decode call against this prefix reuses it
+    dec: DecodeModel,
     has_gen: bool,
 }
 
@@ -101,6 +123,7 @@ impl ModelSession {
             manifest.state_len
         );
         let prefix = ev.upload_prefix(&state[..manifest.params_end])?;
+        let dec = ev.decode_model(&prefix)?;
         let has_gen = ev.has_logits();
         if !has_gen {
             crate::warn_!(
@@ -109,7 +132,7 @@ impl ModelSession {
                  re-run `make artifacts` to enable generate)"
             );
         }
-        Ok(ModelSession { manifest, ev, prefix, has_gen })
+        Ok(ModelSession { manifest, ev, prefix, dec, has_gen })
     }
 
     /// Score a chunk (<= manifest.batch requests): one eval execute.
@@ -229,6 +252,61 @@ impl ModelSession {
             .collect())
     }
 
+    // ---- continuous batching: per-request decode slots -----------------
+
+    /// Admit one generate request: open a decode session (a KV cache on
+    /// the native backend), prefill the prompt ONCE, and sample the first
+    /// token. Prompt framing, truncation, budget and seeding mirror
+    /// [`ModelSession::generate_chunk`] exactly, so slot transcripts
+    /// match lockstep/solo runs bit for bit.
+    pub fn slot_open(&self, bpe: &Bpe, req: &Request) -> Result<GenSlot> {
+        anyhow::ensure!(
+            self.has_gen,
+            "variant has no decode program; re-run `make artifacts`"
+        );
+        let t = self.manifest.seq_len;
+        let mut ids = vec![BOS];
+        ids.extend(bpe.encode(&req.text));
+        // conditioning beats budget: tail-truncate past the window,
+        // always leaving one position to generate (see generate_chunk)
+        if ids.len() > t - 1 {
+            ids.drain(..ids.len() - (t - 1));
+        }
+        let budget = req.max_tokens.min(t - ids.len()).max(1);
+        let mut st = self.ev.decode_open(&self.dec)?;
+        let logits = self.ev.decode_prefill(&self.prefix, &self.dec, &mut st, &ids)?;
+        let mut slot = GenSlot {
+            st: Some(st),
+            rng: Pcg64::new(req.seed),
+            out: Vec::new(),
+            prompt_len: ids.len(),
+            len: ids.len(),
+            budget,
+            temperature: req.temperature,
+            window: t,
+            next: None,
+        };
+        slot.consume(&logits);
+        Ok(slot)
+    }
+
+    /// Advance one slot by one decode step (one token through the KV
+    /// cache). Returns `true` when the slot finished.
+    pub fn slot_step(&self, slot: &mut GenSlot) -> Result<bool> {
+        let Some(tok) = slot.next.take() else { return Ok(true) };
+        let st = slot.st.as_mut().expect("open slot has a session");
+        let logits = self.ev.decode_step(&self.prefix, &self.dec, st, tok)?;
+        slot.consume(&logits);
+        Ok(slot.next.is_none())
+    }
+
+    /// Retire a slot, recycling its cache buffers where applicable.
+    pub fn slot_close(&self, mut slot: GenSlot) {
+        if let Some(st) = slot.st.take() {
+            self.ev.decode_close(st);
+        }
+    }
+
     /// Run one batch through the session in manifest-batch chunks.
     fn run(&self, bpe: &Bpe, kind: OpKind, batch: &[Request]) -> Result<Vec<Result<Reply>>> {
         let b = self.manifest.batch;
@@ -241,6 +319,59 @@ impl ModelSession {
             out.extend(replies);
         }
         Ok(out)
+    }
+}
+
+/// One in-flight generate request on a decode slot: its backend decode
+/// session (KV cache), sampler state, and the transcript so far.
+pub struct GenSlot {
+    st: Option<crate::runtime::DecodeSession>,
+    rng: Pcg64,
+    /// generated tokens (prompt excluded)
+    out: Vec<i32>,
+    prompt_len: usize,
+    /// prompt + generated length
+    len: usize,
+    budget: usize,
+    temperature: f64,
+    window: usize,
+    /// sampled token not yet fed to the cache; `None` = finished
+    next: Option<i32>,
+}
+
+impl GenSlot {
+    /// Sample from `logits` and update progress — the exact loop body of
+    /// [`ModelSession::generate_chunk`]: a sampled BOS is a natural stop,
+    /// otherwise the token lands in the transcript and decoding continues
+    /// until the budget or the window is exhausted.
+    fn consume(&mut self, logits: &[f32]) {
+        let tok = sample(logits, self.temperature, &mut self.rng) as i32;
+        if tok == BOS {
+            return; // document boundary = natural stop; next stays None
+        }
+        self.out.push(tok);
+        self.len += 1;
+        if self.out.len() >= self.budget || self.len >= self.window {
+            return;
+        }
+        self.next = Some(tok);
+    }
+
+    pub fn finished(&self) -> bool {
+        self.next.is_none()
+    }
+
+    pub fn prompt_tokens(&self) -> usize {
+        self.prompt_len
+    }
+
+    /// The finished transcript as a protocol reply.
+    pub fn reply(&self, bpe: &Bpe) -> Reply {
+        Reply::Generated {
+            text: bpe.decode(&self.out),
+            tokens_in: self.prompt_len,
+            tokens_out: self.out.len(),
+        }
     }
 }
 
@@ -356,6 +487,9 @@ impl BatchEngine for PjrtEngine {
 
 /// The artifact-free engine: native-backend sessions over the same
 /// checkpoints, batcher and protocol. `repro serve --backend native`.
+/// Generate traffic streams through a fixed decode-slot table by default
+/// (KV-cached continuous batching); `slots = 0` falls back to lockstep
+/// full-forward decode — the bench baseline.
 pub struct NativeEngine {
     reg: Registry,
     bpe: Arc<Bpe>,
@@ -364,6 +498,11 @@ pub struct NativeEngine {
     /// tensor-core budget per session (worker threads share the one
     /// process pool, so oversubscription self-limits)
     threads: usize,
+    /// decode-slot capacity (0 = lockstep decode)
+    slots: usize,
+    /// ticket -> (variant, in-flight slot)
+    active: BTreeMap<u64, (String, GenSlot)>,
+    next_ticket: u64,
 }
 
 impl NativeEngine {
@@ -381,6 +520,18 @@ impl NativeEngine {
         cache_cap: usize,
         threads: usize,
     ) -> Result<NativeEngine> {
+        Self::with_opts(bpe, ckpts, cache_cap, threads, DECODE_SLOTS_DEFAULT)
+    }
+
+    /// Full-knob constructor; `slots = 0` disables continuous batching
+    /// (generate runs lockstep, the no-KV-cache baseline).
+    pub fn with_opts(
+        bpe: Arc<Bpe>,
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+        threads: usize,
+        slots: usize,
+    ) -> Result<NativeEngine> {
         anyhow::ensure!(!ckpts.is_empty(), "serve: no checkpoints registered");
         let reg = Registry::load().map_err(|e| anyhow!(e))?;
         Ok(NativeEngine {
@@ -389,6 +540,9 @@ impl NativeEngine {
             ckpts,
             sessions: LruCache::new(cache_cap),
             threads: threads.max(1),
+            slots,
+            active: BTreeMap::new(),
+            next_ticket: 1,
         })
     }
 
@@ -408,13 +562,49 @@ impl NativeEngine {
         docs: u64,
         threads: usize,
     ) -> super::engine::EngineFactory {
+        Self::factory_opts(ckpts, cache_cap, docs, threads, DECODE_SLOTS_DEFAULT)
+    }
+
+    /// Full-knob factory; `slots = 0` serves generate lockstep (the
+    /// cache-off baseline `examples/serve_bench.rs` measures against).
+    pub fn factory_opts(
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+        docs: u64,
+        threads: usize,
+        slots: usize,
+    ) -> super::engine::EngineFactory {
         let bpe = serving_bpe(docs);
         Arc::new(move || {
-            Ok(
-                Box::new(NativeEngine::with_threads(bpe.clone(), ckpts.clone(), cache_cap, threads)?)
-                    as Box<dyn BatchEngine>,
-            )
+            Ok(Box::new(NativeEngine::with_opts(
+                bpe.clone(),
+                ckpts.clone(),
+                cache_cap,
+                threads,
+                slots,
+            )?) as Box<dyn BatchEngine>)
         })
+    }
+
+    /// The hot session for `variant`, loading it on first use.
+    fn session(&mut self, variant: &str) -> Result<&ModelSession> {
+        let ckpt = self
+            .ckpts
+            .get(variant)
+            .ok_or_else(|| anyhow!("variant '{variant}' not registered (see --ckpt)"))?
+            .clone();
+        let v = self.reg.variant(variant).map_err(|e| anyhow!(e))?.clone();
+        let threads = self.threads;
+        self.sessions
+            .get_or_try_insert(&variant.to_string(), || {
+                crate::info!(
+                    "serve",
+                    "loading native session {variant} from {}",
+                    ckpt.display()
+                );
+                ModelSession::load_native_threads(&v, &ckpt, threads)
+            })
+            .map(|s| &*s)
     }
 
     fn chunked(
@@ -423,24 +613,8 @@ impl NativeEngine {
         kind: OpKind,
         batch: &[Request],
     ) -> Result<Vec<Result<Reply>>> {
-        let ckpt = self
-            .ckpts
-            .get(variant)
-            .ok_or_else(|| anyhow!("variant '{variant}' not registered (see --ckpt)"))?
-            .clone();
-        let v = self.reg.variant(variant).map_err(|e| anyhow!(e))?.clone();
         let bpe = self.bpe.clone();
-        let threads = self.threads;
-        let session = self
-            .sessions
-            .get_or_try_insert(&variant.to_string(), || {
-                crate::info!(
-                    "serve",
-                    "loading native session {variant} from {}",
-                    ckpt.display()
-                );
-                ModelSession::load_native_threads(&v, &ckpt, threads)
-            })?;
+        let session = self.session(variant)?;
         session.run(&bpe, kind, batch)
     }
 }
@@ -450,6 +624,65 @@ impl BatchEngine for NativeEngine {
         match self.chunked(&key.variant, key.kind, batch) {
             Ok(replies) => replies,
             Err(e) => batch.iter().map(|_| Err(anyhow!("{e:#}"))).collect(),
+        }
+    }
+
+    fn decode_slots(&self) -> usize {
+        self.slots
+    }
+
+    fn slots_active(&self) -> usize {
+        self.active.len()
+    }
+
+    fn slot_admit(&mut self, key: &BatchKey, req: &Request) -> Result<(u64, usize)> {
+        anyhow::ensure!(self.active.len() < self.slots, "no free decode slot");
+        anyhow::ensure!(key.kind == OpKind::Generate, "slots only decode");
+        let bpe = self.bpe.clone();
+        let slot = self.session(&key.variant)?.slot_open(&bpe, req)?;
+        let tokens_in = slot.prompt_tokens();
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.active.insert(ticket, (key.variant.clone(), slot));
+        Ok((ticket, tokens_in))
+    }
+
+    fn step_slots(&mut self) -> Vec<SlotDone> {
+        // take the table out so `self.session` can borrow the LRU while
+        // slots are being stepped; unfinished slots go straight back
+        let table = std::mem::take(&mut self.active);
+        let bpe = self.bpe.clone();
+        let mut done = Vec::new();
+        for (ticket, (variant, mut slot)) in table {
+            let fin = if slot.finished() {
+                // finished at admission (BOS on the first sample, or a
+                // one-token budget): retire without another step
+                Ok(true)
+            } else {
+                self.session(&variant).and_then(|s| s.slot_step(&mut slot))
+            };
+            match fin {
+                Ok(false) => {
+                    self.active.insert(ticket, (variant, slot));
+                }
+                Ok(true) => {
+                    let reply = slot.reply(&bpe);
+                    if let Ok(sess) = self.session(&variant) {
+                        sess.slot_close(slot);
+                    }
+                    done.push(SlotDone { ticket, reply: Ok(reply) });
+                }
+                Err(e) => done.push(SlotDone { ticket, reply: Err(e) }),
+            }
+        }
+        done
+    }
+
+    fn slot_cancel(&mut self, ticket: u64) {
+        if let Some((variant, slot)) = self.active.remove(&ticket) {
+            if let Ok(sess) = self.session(&variant) {
+                sess.slot_close(slot);
+            }
         }
     }
 }

@@ -28,6 +28,15 @@ struct Inner {
     batches: u64,
     tokens_in: u64,
     tokens_out: u64,
+    // continuous-batching slot accounting
+    // (docs/adr/006-kv-cache-continuous-batching.md): joins - frees is
+    // the live slot count, so a post-drain snapshot exposes slot leaks
+    slot_joins: u64,
+    slot_frees: u64,
+    slot_disconnect_frees: u64,
+    overloaded: u64,
+    prefill_tokens: u64,
+    decode_tokens: u64,
 }
 
 /// Thread-shared collector. All methods take `&self`; the lock is
@@ -85,8 +94,46 @@ impl ServeStats {
         g.latency_next += 1;
     }
 
+    /// A request shed by admission control (bounded queue full): counted
+    /// like a rejection, plus its own counter so load shedding is
+    /// distinguishable from client error traffic.
+    pub fn record_overloaded(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.errors += 1;
+        g.overloaded += 1;
+    }
+
+    /// A request admitted into a decode slot; `prefill_tokens` is the
+    /// prompt length fed to the cache exactly once per session.
+    pub fn record_slot_join(&self, prefill_tokens: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.slot_joins += 1;
+        g.prefill_tokens += prefill_tokens;
+    }
+
+    /// A slot retired normally (reply rendered, ok or per-request error).
+    pub fn record_slot_free(&self, decode_tokens: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.slot_frees += 1;
+        g.decode_tokens += decode_tokens;
+    }
+
+    /// A slot reclaimed because its client disconnected mid-decode.
+    pub fn record_slot_disconnect(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.slot_frees += 1;
+        g.slot_disconnect_frees += 1;
+    }
+
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
+    }
+
+    /// Live decode slots (joins minus frees); 0 after a clean drain.
+    pub fn slots_active(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.slot_joins - g.slot_frees
     }
 
     /// Snapshot for the `stats` op and final server report.
@@ -115,6 +162,15 @@ impl ServeStats {
             ("batch_exec_ms_mean", Json::num(zero_if_nan(g.exec_ms.mean()))),
             ("tokens_in", Json::num(g.tokens_in as f64)),
             ("tokens_out", Json::num(g.tokens_out as f64)),
+            ("slots_active", Json::num((g.slot_joins - g.slot_frees) as f64)),
+            ("slot_joins", Json::num(g.slot_joins as f64)),
+            (
+                "slot_disconnect_frees",
+                Json::num(g.slot_disconnect_frees as f64),
+            ),
+            ("overloaded", Json::num(g.overloaded as f64)),
+            ("prefill_tokens", Json::num(g.prefill_tokens as f64)),
+            ("decode_tokens", Json::num(g.decode_tokens as f64)),
             (
                 "tokens_per_s",
                 Json::num((g.tokens_in + g.tokens_out) as f64 / uptime.max(1e-9)),
@@ -198,6 +254,32 @@ mod tests {
         assert_eq!(j.get("errors").unwrap().as_f64(), Some(50.0));
         // the lone real sample defines the percentiles; rejections don't
         assert_eq!(j.get("latency_p50_ms").unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn slot_accounting_balances_joins_and_frees() {
+        let s = ServeStats::new();
+        s.record_slot_join(5);
+        s.record_slot_join(3);
+        s.record_slot_join(7);
+        assert_eq!(s.slots_active(), 3);
+        s.record_slot_free(12);
+        s.record_slot_disconnect();
+        let j = s.snapshot();
+        assert_eq!(j.get("slots_active").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("slot_joins").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("slot_disconnect_frees").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("prefill_tokens").unwrap().as_f64(), Some(15.0));
+        assert_eq!(j.get("decode_tokens").unwrap().as_f64(), Some(12.0));
+        s.record_slot_free(4);
+        assert_eq!(s.slots_active(), 0, "drained table must read zero");
+        // overload sheds count as errored requests with their own counter
+        s.record_overloaded();
+        let j = s.snapshot();
+        assert_eq!(j.get("overloaded").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("errors").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("latency_p50_ms").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

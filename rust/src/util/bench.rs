@@ -1,6 +1,6 @@
 //! Mini-criterion: the benchmark harness behind `cargo bench`
 //! (criterion itself is not vendored). Warms up, runs timed iterations,
-//! reports mean / std / p50 / p95 and optional throughput; `BENCH_FAST=1`
+//! reports mean / std / p50 / p95 / p99 and optional throughput; `BENCH_FAST=1`
 //! shrinks iteration counts for smoke runs.
 //!
 //! Machine-readable output: every result is recorded process-wide, and a
@@ -30,6 +30,7 @@ pub struct BenchResult {
     pub std_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+    pub p99_s: f64,
     pub iters: usize,
 }
 
@@ -69,24 +70,8 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
         }
-        let r = BenchResult {
-            name: self.name.clone(),
-            mean_s: mean(&samples),
-            std_s: std(&samples),
-            p50_s: quantile(&samples, 0.5),
-            p95_s: quantile(&samples, 0.95),
-            iters: self.iters,
-        };
-        println!(
-            "{:<44} {:>10} {:>10} {:>10} {:>10}  n={}",
-            r.name,
-            fmt_dur(r.mean_s),
-            fmt_dur(r.std_s),
-            fmt_dur(r.p50_s),
-            fmt_dur(r.p95_s),
-            r.iters
-        );
-        RECORDED.lock().unwrap().push(r.clone());
+        let r = BenchResult::from_samples(&self.name, &samples);
+        record(r.clone());
         r
     }
 
@@ -103,6 +88,21 @@ impl Bench {
 }
 
 impl BenchResult {
+    /// Summarise externally collected timings (seconds). Lets load
+    /// generators that measure per-request latency — rather than timing a
+    /// closure N times — feed the same recording/JSON pipeline.
+    pub fn from_samples(name: &str, samples_s: &[f64]) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            mean_s: mean(samples_s),
+            std_s: std(samples_s),
+            p50_s: quantile(samples_s, 0.5),
+            p95_s: quantile(samples_s, 0.95),
+            p99_s: quantile(samples_s, 0.99),
+            iters: samples_s.len(),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -110,9 +110,27 @@ impl BenchResult {
             ("std_s", Json::num(self.std_s)),
             ("p50_s", Json::num(self.p50_s)),
             ("p95_s", Json::num(self.p95_s)),
+            ("p99_s", Json::num(self.p99_s)),
             ("iters", Json::num(self.iters as f64)),
         ])
     }
+}
+
+/// Print one result row and add it to the process-wide record, so it is
+/// included in the next [`write_json`] dump. [`Bench::run`] calls this;
+/// open-loop harnesses call it directly with [`BenchResult::from_samples`].
+pub fn record(r: BenchResult) {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10} {:>10}  n={}",
+        r.name,
+        fmt_dur(r.mean_s),
+        fmt_dur(r.std_s),
+        fmt_dur(r.p50_s),
+        fmt_dur(r.p95_s),
+        fmt_dur(r.p99_s),
+        r.iters
+    );
+    RECORDED.lock().unwrap().push(r);
 }
 
 /// Dump every result recorded so far to the file named by `BENCH_JSON`
@@ -144,8 +162,8 @@ pub fn write_json_to(suite: &str, path: &std::path::Path) {
 pub fn header(title: &str) {
     println!("\n== {title} ==");
     println!(
-        "{:<44} {:>10} {:>10} {:>10} {:>10}",
-        "benchmark", "mean", "std", "p50", "p95"
+        "{:<44} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "std", "p50", "p95", "p99"
     );
 }
 

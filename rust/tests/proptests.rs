@@ -506,6 +506,88 @@ fn prop_native_train_step_parallel_bit_identity() {
     });
 }
 
+/// The serving KV-cache invariant
+/// (docs/adr/006-kv-cache-continuous-batching.md): incremental decode
+/// through the Backend API — prefill once, then one token per step — is
+/// bit-identical to re-running the full forward over the whole history,
+/// at EVERY decode position, for random shrunken variants across two
+/// optimizer state layouts, random prompts, and thread budgets 1/2/4.
+#[test]
+fn prop_kv_cache_matches_full_forward() {
+    use spectron::runtime::{Backend, DecodeModel};
+    let reg = Registry::load().unwrap();
+    let bases = ["fact-z0-spectron", "fact-s-sgd"];
+    check("kv cache vs full forward bits", |rng| {
+        let base = *rng.choice(&bases);
+        let mut cfg = reg.variant(base).map_err(|e| e.to_string())?.clone();
+        cfg.model.vocab = usize_in(rng, 24, 48);
+        cfg.model.seq_len = usize_in(rng, 6, 12);
+        cfg.batch = 2;
+        let vocab = cfg.model.vocab as u64;
+        let seed = rng.below(1000);
+        let knobs = [20.0, 0.02, 0.01, 0.1, 0.0, 0.0, 0.0, 0.0];
+        let prompt: Vec<i32> =
+            (0..usize_in(rng, 1, 4)).map(|_| rng.below(vocab) as i32).collect();
+        // pre-draw the decode continuation so every thread budget replays
+        // the exact same token sequence
+        let steps = usize_in(rng, 2, 4);
+        let cont: Vec<i32> = (0..steps).map(|_| rng.below(vocab) as i32).collect();
+        for &threads in &[1usize, 2, 4] {
+            let mut be =
+                NativeBackend::with_threads(&cfg, threads).map_err(|e| e.to_string())?;
+            let state = be.init_state(seed, &knobs);
+            let params_end = be.manifest().params_end;
+            let prefix =
+                be.upload_prefix(&state[..params_end]).map_err(|e| e.to_string())?;
+            let dm = be.decode_model(&prefix).map_err(|e| e.to_string())?;
+            let DecodeModel::Native(m) = &dm else {
+                return Err("native backend must decode natively".into());
+            };
+            let m = m.clone();
+            let mut st = be.decode_open(&dm).map_err(|e| e.to_string())?;
+            let mut hist = prompt.clone();
+            let mut got = be
+                .decode_prefill(&prefix, &dm, &mut st, &prompt)
+                .map_err(|e| e.to_string())?;
+            // step 0 checks the prefill logits; steps 1..=N each feed one
+            // continuation token through the cache first
+            for step in 0..=steps {
+                if step > 0 {
+                    let tok = cont[step - 1];
+                    hist.push(tok);
+                    got = be
+                        .decode_step(&prefix, &dm, &mut st, tok)
+                        .map_err(|e| e.to_string())?;
+                }
+                if st.positions() != hist.len() {
+                    return Err(format!(
+                        "{base}: cache holds {} positions, history has {}",
+                        st.positions(),
+                        hist.len()
+                    ));
+                }
+                let (logits, _) =
+                    m.forward(&hist, 1, hist.len()).map_err(|e| e.to_string())?;
+                let v = m.vocab;
+                let want = &logits.data[(hist.len() - 1) * v..hist.len() * v];
+                if got.len() != v {
+                    return Err(format!("{base}: logits len {} != {v}", got.len()));
+                }
+                for (j, (a, b)) in got.iter().zip(want).enumerate() {
+                    if a.to_bits() != (*b as f32).to_bits() {
+                        return Err(format!(
+                            "{base}: threads={threads} step={step} logit {j}: \
+                             cached {a} vs full {b}"
+                        ));
+                    }
+                }
+            }
+            be.decode_close(st);
+        }
+        Ok(())
+    });
+}
+
 fn normalize(x: &mut [f64]) {
     let n = x.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
     for v in x.iter_mut() {

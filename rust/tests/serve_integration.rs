@@ -60,6 +60,7 @@ fn mock_server(
         workers: 1,
         default_variant: Some("mock".into()),
         metrics_name: None,
+        queue_cap: 1024,
     };
     let handle = Server::spawn(cfg, MockEngine::factory(Duration::ZERO, seen.clone()))
         .expect("spawn server");
@@ -200,6 +201,7 @@ fn engine_init_failure_answers_instead_of_hanging() {
         workers: 1,
         default_variant: Some("mock".into()),
         metrics_name: None,
+        queue_cap: 1024,
     };
     let factory: spectron::serve::EngineFactory =
         Arc::new(|| anyhow::bail!("no engine for you"));
@@ -260,6 +262,7 @@ fn pjrt_engine_scores_over_the_wire() {
         workers: 1,
         default_variant: Some(variant.to_string()),
         metrics_name: None,
+        queue_cap: 1024,
     };
     let handle = Server::spawn(cfg, factory).expect("spawn");
     let mut c = Client::connect(handle.addr);
@@ -333,6 +336,7 @@ fn native_engine_serves_over_the_wire() {
         workers: 1,
         default_variant: Some(variant.to_string()),
         metrics_name: None,
+        queue_cap: 1024,
     };
     let handle = Server::spawn(cfg, factory).expect("spawn");
     let mut c = Client::connect(handle.addr);
@@ -357,4 +361,233 @@ fn native_engine_serves_over_the_wire() {
     c.roundtrip(r#"{"id":3,"op":"shutdown"}"#);
     handle.wait();
     std::fs::remove_file(&ckpt).ok();
+}
+
+/// Build a native-engine server over a fresh init checkpoint with the
+/// given decode-slot count (0 = lockstep baseline). Returns the handle
+/// plus the checkpoint path for cleanup.
+fn native_server(slots: usize, tag: &str) -> (ServerHandle, std::path::PathBuf) {
+    use spectron::config::{Registry, RunCfg};
+    use spectron::train::{checkpoint, Trainer};
+
+    let reg = Registry::load().unwrap();
+    let variant = "fact-z0-spectron";
+    let v = reg.variant(variant).unwrap();
+    let mut trainer = Trainer::native(v, RunCfg::default()).unwrap();
+    let ckpt = std::env::temp_dir().join(format!(
+        "spectron-serve-cb-{tag}-{}.ckpt",
+        std::process::id()
+    ));
+    checkpoint::save(&ckpt, variant, &trainer.state_vec().unwrap()).unwrap();
+
+    let corpus = spectron::data::corpus::Corpus::new(Default::default());
+    let bpe = Arc::new(spectron::data::bpe::Bpe::train(
+        &corpus.text_range(1, 60),
+        v.model.vocab,
+    ));
+    let mut ckpts = std::collections::BTreeMap::new();
+    ckpts.insert(variant.to_string(), ckpt.clone());
+    let factory: spectron::serve::EngineFactory = Arc::new(move || {
+        Ok(Box::new(spectron::serve::NativeEngine::with_opts(
+            bpe.clone(),
+            ckpts.clone(),
+            2,
+            1,
+            slots,
+        )?) as Box<dyn BatchEngine>)
+    });
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+        workers: 1,
+        default_variant: Some(variant.to_string()),
+        metrics_name: None,
+        queue_cap: 1024,
+    };
+    (Server::spawn(cfg, factory).expect("spawn"), ckpt)
+}
+
+fn gen_req(id: usize, prompt: &str, max_tokens: usize, seed: u64) -> String {
+    format!(
+        r#"{{"id":{id},"op":"generate","prompt":"{prompt}","max_tokens":{max_tokens},"temperature":0.9,"seed":{seed}}}"#
+    )
+}
+
+/// Continuous batching over the wire: concurrent sessions produce the
+/// same transcripts as solo runs AND as the lockstep (slots = 0)
+/// baseline — the KV cache changes scheduling, never output — and short
+/// requests retire before a long batchmate finishes decoding.
+#[test]
+fn continuous_batching_join_leave() {
+    let (handle, ckpt) = native_server(4, "slots");
+    let (lockstep, ckpt2) = native_server(0, "lockstep");
+    let mut c = Client::connect(handle.addr);
+
+    // pick a long-request seed whose solo transcript is comfortably long
+    // (an untrained model is near-uniform, so BOS-stops are ~0.1%/step;
+    // the retry loop makes the test robust to the unlucky ones)
+    let prompt = "the cat sat on";
+    let mut long_seed = None;
+    for seed in [5u64, 11, 17, 23] {
+        let r = c.roundtrip(&gen_req(0, prompt, 64, seed));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        if r.get("tokens_out").unwrap().as_usize().unwrap() >= 8 {
+            long_seed = Some(seed);
+            break;
+        }
+    }
+    let long_seed = long_seed.expect("some seed decodes >= 8 tokens");
+
+    // solo transcripts on the continuous-batching server, one at a time
+    let reqs = [
+        gen_req(1, prompt, 64, long_seed),
+        gen_req(2, "a b c", 1, 6),
+        gen_req(3, "one two", 2, 7),
+    ];
+    let mut solo = HashMap::new();
+    for req in &reqs {
+        let r = c.roundtrip(req);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        solo.insert(
+            r.get("id").unwrap().as_usize().unwrap(),
+            r.get("text").unwrap().as_str().unwrap().to_string(),
+        );
+    }
+
+    // the lockstep full-forward baseline must produce the same text:
+    // cached logits are bit-identical, so sampling walks the same path
+    let mut lc = Client::connect(lockstep.addr);
+    for req in &reqs {
+        let r = lc.roundtrip(req);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let id = r.get("id").unwrap().as_usize().unwrap();
+        assert_eq!(
+            r.get("text").unwrap().as_str().unwrap(),
+            solo[&id],
+            "lockstep transcript diverged for id {id}"
+        );
+    }
+    lockstep.shutdown();
+    std::fs::remove_file(&ckpt2).ok();
+
+    // concurrent phase: pipeline all three; the short sessions join while
+    // the long one decodes and must retire first
+    for req in &reqs {
+        c.send(req);
+    }
+    let mut arrival = Vec::new();
+    for _ in 0..3 {
+        let r = c.recv();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let id = r.get("id").unwrap().as_usize().unwrap();
+        assert_eq!(
+            r.get("text").unwrap().as_str().unwrap(),
+            solo[&id],
+            "concurrent transcript diverged for id {id}"
+        );
+        arrival.push(id);
+    }
+    assert_eq!(
+        arrival[2], 1,
+        "short requests must finish while the long one still decodes; \
+         arrival order {arrival:?}"
+    );
+
+    // drained server leaks no slots; sessions really joined the table
+    let r = c.roundtrip(r#"{"id":9,"op":"stats"}"#);
+    let stats = r.get("stats").unwrap();
+    assert_eq!(stats.get("slots_active").unwrap().as_usize(), Some(0));
+    assert!(stats.get("slot_joins").unwrap().as_usize().unwrap() >= 7);
+    assert!(stats.get("prefill_tokens").unwrap().as_usize().unwrap() > 0);
+    handle.shutdown();
+    std::fs::remove_file(&ckpt).ok();
+}
+
+/// A client that vanishes mid-decode must free its slot for the next
+/// request instead of decoding to a dead socket forever.
+#[test]
+fn disconnect_mid_decode_frees_slot() {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+        queue_cap: 1024,
+    };
+    // ONE slot, 20ms per decode step: the doomed request would take ~2s
+    let factory =
+        MockEngine::factory_streaming(Duration::from_millis(20), 1, seen.clone());
+    let handle = Server::spawn(cfg, factory).expect("spawn");
+
+    let mut a = Client::connect(handle.addr);
+    a.send(r#"{"id":1,"op":"generate","prompt":"doomed request","max_tokens":100}"#);
+    // let it get admitted and decode a few steps, then vanish
+    std::thread::sleep(Duration::from_millis(120));
+    drop(a);
+
+    let mut b = Client::connect(handle.addr);
+    let t0 = std::time::Instant::now();
+    let r = b.roundtrip(r#"{"id":2,"op":"generate","prompt":"quick one","max_tokens":2}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("text").unwrap().as_str(), Some("quick one"));
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "freed slot should admit the next request promptly"
+    );
+
+    let r = b.roundtrip(r#"{"id":3,"op":"stats"}"#);
+    let stats = r.get("stats").unwrap();
+    assert_eq!(
+        stats.get("slot_disconnect_frees").unwrap().as_usize(),
+        Some(1),
+        "{stats}"
+    );
+    assert_eq!(stats.get("slots_active").unwrap().as_usize(), Some(0));
+    handle.shutdown();
+}
+
+/// Admission control: a full queue sheds load with an `overloaded` error
+/// instead of queueing without bound (or hanging the client).
+#[test]
+fn queue_full_returns_overloaded() {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+        queue_cap: 2,
+    };
+    let factory = MockEngine::factory(Duration::from_millis(50), seen.clone());
+    let handle = Server::spawn(cfg, factory).expect("spawn");
+    let mut c = Client::connect(handle.addr);
+
+    for i in 0..10 {
+        c.send(&format!(r#"{{"id":{i},"op":"score","text":"w{i}"}}"#));
+    }
+    let mut served = 0;
+    let mut shed = 0;
+    for _ in 0..10 {
+        let r = c.recv(); // read timeout turns a hang into a failure
+        if r.get("ok") == Some(&Json::Bool(true)) {
+            served += 1;
+        } else {
+            assert_eq!(r.get("error").unwrap().as_str(), Some("overloaded"), "{r}");
+            shed += 1;
+        }
+    }
+    assert_eq!(served + shed, 10, "every request answered exactly once");
+    assert!(served >= 1, "the worker should serve at least the first request");
+    assert!(shed >= 1, "a 10-deep burst over a 2-deep queue must shed load");
+
+    let r = c.roundtrip(r#"{"id":99,"op":"stats"}"#);
+    let stats = r.get("stats").unwrap();
+    assert_eq!(stats.get("overloaded").unwrap().as_usize(), Some(shed));
+    handle.shutdown();
 }
