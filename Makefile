@@ -2,7 +2,7 @@
 # needs Python; everything after runs from the self-contained `repro`
 # binary (DESIGN.md).
 
-.PHONY: artifacts build test ci docs bench bench-native serve-bench serve-test sweep-smoke clean
+.PHONY: artifacts build test ci docs bench bench-native serve-bench serve-test route-test route-bench sweep-smoke clean
 
 # Lower every variant's programs to HLO text + manifests.
 artifacts:
@@ -68,6 +68,21 @@ serve-bench:
 serve-test:
 	REPRO_THREADS=1 cargo test -q --test serve_integration
 	REPRO_THREADS=4 cargo test -q --test serve_integration
+
+# The router suite under both thread budgets (DESIGN.md §Routing,
+# docs/adr/007): byte-identical pass-through, retry/backoff on sheds,
+# drain/resume cycles, chaos-proxy outages, and the SIGKILL failover
+# test against supervised child replicas.
+route-test:
+	REPRO_THREADS=1 cargo test -q --test route_integration
+	REPRO_THREADS=4 cargo test -q --test route_integration
+
+# Open-loop routed score latency (examples/serve_bench.rs under
+# ROUTE_BENCH=1): 1 replica, 2 replicas, and 2 replicas with a mid-run
+# chaos outage; rows land in BENCH_route_latency.json. The outage row's
+# acceptance signal: zero failed requests, failover cost in the tail.
+route-bench:
+	ROUTE_BENCH=1 BENCH_JSON=BENCH_route_latency.json cargo run --release --example serve_bench
 
 # Sweep resumability smoke (DESIGN.md §Monitoring and sweeps): run the
 # built-in grid with a simulated kill after the first run, rerun twice,

@@ -20,6 +20,14 @@
 //!
 //!     cargo run --release --example serve_bench        (BENCH_FAST=1 to smoke)
 //!
+//! With `ROUTE_BENCH=1` (DESIGN.md §Routing, `make route-bench`) the
+//! harness instead drives open-loop *score* traffic through the replica
+//! router over mock replicas — 1 replica, 2 replicas, and 2 replicas
+//! with a mid-run outage injected by the chaos proxy — and lands
+//! `BENCH_route_latency.json`. Scores are the idempotent op: the outage
+//! row's acceptance signal is that every request still succeeds and the
+//! failover cost shows up only in the latency tail.
+//!
 //! Env knobs: SERVE_BENCH_RATES (req/s list, "20,50"), SERVE_BENCH_REQS
 //! per rate (40; 12 under BENCH_FAST), SERVE_BENCH_MAX_TOKENS (8).
 
@@ -34,8 +42,8 @@ use spectron::config::{Registry, RunCfg};
 use spectron::data::bpe::Bpe;
 use spectron::data::corpus::Corpus;
 use spectron::serve::{
-    BatchEngine, EngineFactory, NativeEngine, ServeCfg, Server, ServerHandle,
-    DECODE_SLOTS_DEFAULT,
+    BatchEngine, ChaosPlan, ChaosProxy, EngineFactory, MockEngine, NativeEngine,
+    RouteCfg, Router, ServeCfg, Server, ServerHandle, DECODE_SLOTS_DEFAULT,
 };
 use spectron::train::{checkpoint, Trainer};
 use spectron::util::bench::{self, header, BenchResult};
@@ -78,6 +86,7 @@ fn spawn_native(slots: usize) -> Result<(ServerHandle, std::path::PathBuf)> {
         workers: 1,
         default_variant: Some(variant.to_string()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 1024,
     };
     Ok((Server::spawn(cfg, factory)?, ckpt))
@@ -128,6 +137,137 @@ fn run_phase(
     })
 }
 
+/// A mock replica for the routed rows: routing overhead and failover
+/// cost are the signal, so the engine is a constant 2 ms stand-in.
+fn spawn_mock() -> Result<ServerHandle> {
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+        idle_timeout: None,
+        queue_cap: 1024,
+    };
+    Server::spawn(
+        cfg,
+        MockEngine::factory(
+            Duration::from_millis(2),
+            Arc::new(std::sync::Mutex::new(Vec::new())),
+        ),
+    )
+}
+
+fn bench_route_cfg() -> RouteCfg {
+    RouteCfg {
+        addr: "127.0.0.1:0".into(),
+        retries: 8,
+        retry_base: Duration::from_millis(20),
+        retry_cap: Duration::from_millis(100),
+        health_interval: Duration::from_millis(50),
+        ..RouteCfg::default()
+    }
+}
+
+/// One open-loop score through the router: own connection, must succeed
+/// even mid-outage (failover is the router's job, not the client's).
+fn one_score(addr: SocketAddr, id: usize) -> Result<f64> {
+    let t0 = Instant::now();
+    let stream = TcpStream::connect(addr).context("connect")?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writeln!(writer, r#"{{"id":{id},"op":"score","text":"the cat sat on request {id}"}}"#)?;
+    writer.flush()?;
+    let mut line = String::new();
+    anyhow::ensure!(reader.read_line(&mut line)? > 0, "router closed");
+    let j = Json::parse(line.trim()).map_err(|e| anyhow!(e))?;
+    anyhow::ensure!(
+        j.get("ok") == Some(&Json::Bool(true)),
+        "routed score failed: {line}"
+    );
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+fn run_score_phase(addr: SocketAddr, rate: f64, reqs: usize) -> Result<Vec<f64>> {
+    let interval = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(reqs);
+        for i in 0..reqs {
+            handles.push(scope.spawn(move || one_score(addr, i)));
+            std::thread::sleep(interval);
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect()
+    })
+}
+
+fn route_bench(reqs: usize, rates: &[f64]) -> Result<()> {
+    println!(
+        "== route_bench: open-loop routed scores, {reqs} reqs per rate, \
+         rates {rates:?}/s =="
+    );
+    header("route: open-loop score latency through the replica router");
+
+    // routing overhead: 1 replica vs 2 (default-variant traffic spreads)
+    for replicas in [1usize, 2] {
+        let servers = (0..replicas).map(|_| spawn_mock()).collect::<Result<Vec<_>>>()?;
+        let addrs = servers.iter().map(|s| s.addr.to_string()).collect();
+        let handle = Router::spawn(bench_route_cfg(), addrs, None)?;
+        for &rate in rates {
+            let lats = run_score_phase(handle.addr, rate, reqs)?;
+            bench::record(BenchResult::from_samples(
+                &format!("routed replicas={replicas} rate={rate:.0}/s"),
+                &lats,
+            ));
+        }
+        handle.shutdown();
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    // failover row: replica 0 sits behind the chaos proxy, which blinks
+    // the link down for 250 ms a third of the way into each phase
+    let (s0, s1) = (spawn_mock()?, spawn_mock()?);
+    let plan = ChaosPlan::new();
+    let proxy = ChaosProxy::spawn(&s0.addr.to_string(), plan.clone())
+        .context("chaos proxy")?;
+    let handle = Router::spawn(
+        bench_route_cfg(),
+        vec![proxy.addr.to_string(), s1.addr.to_string()],
+        None,
+    )?;
+    for &rate in rates {
+        let phase_secs = reqs as f64 / rate.max(1e-9);
+        let blink = {
+            let plan = plan.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_secs_f64(phase_secs / 3.0));
+                plan.set_down(true);
+                std::thread::sleep(Duration::from_millis(250));
+                plan.set_down(false);
+            })
+        };
+        let lats = run_score_phase(handle.addr, rate, reqs)?;
+        blink.join().expect("blink thread");
+        bench::record(BenchResult::from_samples(
+            &format!("routed replicas=2 mid-run-outage rate={rate:.0}/s"),
+            &lats,
+        ));
+    }
+    handle.shutdown();
+    proxy.stop();
+    s0.shutdown();
+    s1.shutdown();
+
+    bench::write_json("route_latency");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let fast = std::env::var("BENCH_FAST").is_ok();
     let reqs = env_usize("SERVE_BENCH_REQS", if fast { 12 } else { 40 });
@@ -138,6 +278,10 @@ fn main() -> Result<()> {
         .filter_map(|s| s.trim().parse().ok())
         .collect();
     anyhow::ensure!(!rates.is_empty(), "SERVE_BENCH_RATES parsed to nothing");
+
+    if std::env::var("ROUTE_BENCH").is_ok() {
+        return route_bench(reqs, &rates);
+    }
 
     println!(
         "== serve_bench: open-loop, {reqs} generate reqs per rate, \

@@ -33,6 +33,7 @@ fn main() {
         workers: 1,
         default_variant: Some("mock".into()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 1024,
     };
     let handle =

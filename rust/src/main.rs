@@ -8,6 +8,7 @@
 //!        ids: fig1 fig2 fig3 fig4 tab1 fig6 fig9 fig8 tab2 tab3 fig12
 //!             fig13 appd all
 //! repro serve --ckpt a.ckpt[,b.ckpt] batched inference server (NDJSON/TCP)
+//! repro route --spawn N | --replicas health-checked multi-replica router
 //! repro sweep --grid g.toml          crash-safe monitored training grid
 //! repro sweep-report --name N        registry status for a sweep
 //! repro dp-demo [--workers N]        simulated data-parallel training
@@ -62,6 +63,7 @@ fn run() -> Result<()> {
         "eval" => eval_cmd(&mut args),
         "exp" => exp_cmd(&mut args),
         "serve" => serve_cmd(&mut args),
+        "route" => route_cmd(&mut args),
         "sweep" => sweep_cmd(&mut args),
         "sweep-report" => sweep_report_cmd(&mut args),
         "dp-demo" => dp_demo(&mut args),
@@ -101,7 +103,21 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
                --docs must match training so the tokenizers agree;
                --slots 0 disables KV-cached continuous batching and decodes
                lockstep; past --queue-cap pending requests new ones are
-               shed with an "overloaded" error)
+               shed with an 'overloaded' error carrying a retry_after_ms
+               hint; --idle-timeout-ms drops silent connections that owe
+               no replies)
+  repro route --spawn N | --replicas HOST:PORT,... [--addr HOST:PORT]
+              [--retries N] [--deadline-ms F] [--health-interval-ms F]
+              [--probe-timeout-ms F] [--fail-threshold N]
+              [serve flags passed through under --spawn: --ckpt --mock
+               --backend --threads --slots --queue-cap --max-batch
+               --max-wait-ms --docs --workers --cache --idle-timeout-ms]
+              (same NDJSON protocol fanned across N serve replicas:
+               health-checked circuit breakers, session affinity,
+               retry/backoff + failover for idempotent ops, per-request
+               deadlines; extra ops: ping, drain/resume {'replica': i};
+               --spawn supervises child replicas and restarts crashes
+               with capped backoff — DESIGN.md section Routing)
   repro sweep [--grid grid.toml | --smoke] [--workers N] [--max-runs N]
               [--backend ...] [--threads N|auto]
               (crash-safe grid: per-run registry under results/sweeps/;
@@ -461,6 +477,10 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     let docs = args.usize("docs", 6000);
     let slots = args.usize("slots", spectron::serve::DECODE_SLOTS_DEFAULT);
     let queue_cap = args.usize("queue-cap", ServeCfg::default().queue_cap);
+    // 0 (the default) = no idle timeout; connections owing no replies
+    // that stay silent past the window are dropped (frees their reader
+    // thread and, transitively, any decode slot they pinned)
+    let idle_timeout_ms = args.f64("idle-timeout-ms", 0.0);
     let mock = args.flag("mock");
     let backend = if mock {
         // --mock never touches a backend; consume the flags so they are
@@ -480,6 +500,8 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
         workers,
         metrics_name: Some("serve".into()),
         queue_cap,
+        idle_timeout: (idle_timeout_ms > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(idle_timeout_ms / 1e3)),
         ..ServeCfg::default()
     };
 
@@ -519,6 +541,102 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     println!("serving on {}  (send {{\"op\":\"shutdown\"}} to stop)", handle.addr);
     let stats = handle.wait();
     println!("server stopped; final stats: {stats}");
+    Ok(())
+}
+
+/// The multi-replica router (DESIGN.md §Routing,
+/// docs/adr/007-replica-router.md): same NDJSON protocol on the front,
+/// N serve replicas on the back. `--replicas` routes to externally
+/// managed servers; `--spawn N` launches and supervises child `repro
+/// serve` processes (serve flags pass through), restarting crashes with
+/// capped exponential backoff.
+fn route_cmd(args: &mut Args) -> Result<()> {
+    use spectron::serve::{RouteCfg, Router, SpawnSpec, Supervisor};
+
+    let addr = args.str("addr", "127.0.0.1:7400");
+    let replicas = args.opt_str("replicas");
+    let spawn_n = args.usize("spawn", 0);
+    let retries = args.usize("retries", 3);
+    let deadline_ms = args.f64("deadline-ms", 30_000.0);
+    let health_interval_ms = args.f64("health-interval-ms", 100.0);
+    let probe_timeout_ms = args.f64("probe-timeout-ms", 1_000.0);
+    let fail_threshold = args.usize("fail-threshold", 3);
+
+    // serve flags forwarded verbatim to spawned replicas; ports are
+    // owned by the supervisor, so --addr is deliberately not in the list
+    let mut serve_args: Vec<String> = Vec::new();
+    for key in [
+        "ckpt", "backend", "threads", "slots", "queue-cap", "max-batch",
+        "max-wait-ms", "docs", "workers", "cache", "idle-timeout-ms",
+    ] {
+        if let Some(v) = args.opt_str(key) {
+            serve_args.push(format!("--{key}"));
+            serve_args.push(v);
+        }
+    }
+    if args.flag("mock") {
+        serve_args.push("--mock".into());
+    }
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let mut cfg = RouteCfg {
+        addr,
+        retries,
+        deadline: std::time::Duration::from_secs_f64(deadline_ms.max(1.0) / 1e3),
+        health_interval: std::time::Duration::from_secs_f64(
+            health_interval_ms.max(1.0) / 1e3,
+        ),
+        probe_timeout: std::time::Duration::from_secs_f64(
+            probe_timeout_ms.max(1.0) / 1e3,
+        ),
+        ..RouteCfg::default()
+    };
+    cfg.breaker.fail_threshold = fail_threshold.max(1) as u32;
+
+    let (replica_addrs, supervisor) = match (replicas, spawn_n) {
+        (Some(_), n) if n > 0 => {
+            return Err(anyhow!("--replicas and --spawn are exclusive"))
+        }
+        (Some(list), _) => {
+            if !serve_args.is_empty() {
+                return Err(anyhow!(
+                    "serve flags ({}) only apply with --spawn",
+                    serve_args.join(" ")
+                ));
+            }
+            let addrs: Vec<String> = list
+                .split(',')
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .map(String::from)
+                .collect();
+            (addrs, None)
+        }
+        (None, 0) => {
+            return Err(anyhow!(
+                "usage: repro route --spawn N | --replicas HOST:PORT,..."
+            ))
+        }
+        (None, n) => {
+            let spec = SpawnSpec {
+                bin: std::env::current_exe().context("locating repro binary")?,
+                serve_args,
+                count: n,
+                ..SpawnSpec::default()
+            };
+            let sup = Supervisor::spawn(spec)?;
+            (sup.addrs(), Some(sup))
+        }
+    };
+
+    let handle = Router::spawn(cfg, replica_addrs, supervisor)?;
+    println!(
+        "routing on {} across {} replicas  (send {{\"op\":\"shutdown\"}} to stop)",
+        handle.addr,
+        handle.pool().len()
+    );
+    let stats = handle.wait();
+    println!("router stopped; final stats: {stats}");
     Ok(())
 }
 

@@ -143,6 +143,101 @@ impl MockEngine {
     }
 }
 
+/// Deterministic fault schedule for [`FaultyEngine`] — counts requests
+/// and batches, so the same spec injects the same faults in every run
+/// (no probabilistic flake in CI).
+#[derive(Debug, Clone, Default)]
+pub struct FaultSpec {
+    /// added to every execute and every slot step (injected service
+    /// latency; drives deadline / retry paths in the router tests)
+    pub latency: Duration,
+    /// every Nth model request is answered with an injected error reply
+    /// (0 = never)
+    pub fail_every: usize,
+    /// every Nth lockstep batch stalls for `stall` before executing
+    /// (0 = never)
+    pub stall_every: usize,
+    pub stall: Duration,
+}
+
+/// Engine-side half of the chaos harness (DESIGN.md §Routing): wraps any
+/// [`BatchEngine`] and injects latency, stalls, and error replies on a
+/// deterministic schedule. Transport faults (connection drops, dead
+/// sockets) live in `serve::route::chaos` — together they exercise every
+/// router failover path.
+pub struct FaultyEngine {
+    inner: Box<dyn BatchEngine>,
+    spec: FaultSpec,
+    requests: usize,
+    batches: usize,
+}
+
+impl FaultyEngine {
+    pub fn wrap(inner: Box<dyn BatchEngine>, spec: FaultSpec) -> FaultyEngine {
+        FaultyEngine { inner, spec, requests: 0, batches: 0 }
+    }
+
+    /// Wrap every engine an inner factory produces.
+    pub fn factory(inner: EngineFactory, spec: FaultSpec) -> EngineFactory {
+        Arc::new(move || {
+            Ok(Box::new(FaultyEngine::wrap(inner()?, spec.clone()))
+                as Box<dyn BatchEngine>)
+        })
+    }
+
+    /// True for the request counted `n` (1-based) under this spec.
+    fn injects_failure(&self, n: usize) -> bool {
+        self.spec.fail_every > 0 && n % self.spec.fail_every == 0
+    }
+}
+
+impl BatchEngine for FaultyEngine {
+    fn execute(&mut self, key: &BatchKey, batch: &[Request]) -> Vec<Result<Reply>> {
+        self.batches += 1;
+        if self.spec.stall_every > 0 && self.batches % self.spec.stall_every == 0 {
+            std::thread::sleep(self.spec.stall);
+        }
+        if !self.spec.latency.is_zero() {
+            std::thread::sleep(self.spec.latency);
+        }
+        let mut replies = self.inner.execute(key, batch);
+        for reply in replies.iter_mut() {
+            self.requests += 1;
+            if self.injects_failure(self.requests) {
+                *reply = Err(anyhow::anyhow!("injected fault"));
+            }
+        }
+        replies
+    }
+
+    fn decode_slots(&self) -> usize {
+        self.inner.decode_slots()
+    }
+
+    fn slots_active(&self) -> usize {
+        self.inner.slots_active()
+    }
+
+    fn slot_admit(&mut self, key: &BatchKey, req: &Request) -> Result<(u64, usize)> {
+        self.requests += 1;
+        if self.injects_failure(self.requests) {
+            anyhow::bail!("injected fault");
+        }
+        self.inner.slot_admit(key, req)
+    }
+
+    fn step_slots(&mut self) -> Vec<SlotDone> {
+        if !self.spec.latency.is_zero() && self.inner.slots_active() > 0 {
+            std::thread::sleep(self.spec.latency);
+        }
+        self.inner.step_slots()
+    }
+
+    fn slot_cancel(&mut self, ticket: u64) {
+        self.inner.slot_cancel(ticket);
+    }
+}
+
 impl BatchEngine for MockEngine {
     fn execute(&mut self, _key: &BatchKey, batch: &[Request]) -> Vec<Result<Reply>> {
         if !self.exec_cost.is_zero() {
@@ -330,5 +425,37 @@ mod tests {
         e.slot_cancel(t);
         assert_eq!(e.slots_active(), 0);
         assert!(e.step_slots().is_empty());
+    }
+
+    #[test]
+    fn faulty_engine_injects_on_schedule_and_delegates_the_rest() {
+        let spec = FaultSpec { fail_every: 2, ..FaultSpec::default() };
+        let mut e = FaultyEngine::wrap(
+            Box::new(MockEngine::new(Duration::ZERO)),
+            spec.clone(),
+        );
+        let key = BatchKey { variant: "m".into(), kind: OpKind::Score };
+        let batch: Vec<Request> = (0..4).map(|_| req(OpKind::Score, "a b c")).collect();
+        let out = e.execute(&key, &batch);
+        assert!(out[0].is_ok() && out[2].is_ok(), "odd requests pass through");
+        assert!(out[1].is_err() && out[3].is_err(), "every 2nd request fails");
+        assert!(format!("{:#}", out[1].as_ref().unwrap_err()).contains("injected"));
+
+        // slot path counts on the same schedule; delegation keeps the
+        // inner engine's slot table semantics intact
+        let mut e = FaultyEngine::wrap(
+            Box::new(MockEngine::streaming(Duration::ZERO, 2)),
+            spec,
+        );
+        assert_eq!(e.decode_slots(), 2);
+        let gkey = BatchKey { variant: "m".into(), kind: OpKind::Generate };
+        let g = req(OpKind::Generate, "x y");
+        assert!(e.slot_admit(&gkey, &g).is_ok(), "request 1 admitted");
+        assert!(e.slot_admit(&gkey, &g).is_err(), "request 2 injected");
+        assert_eq!(e.slots_active(), 1);
+        for _ in 0..4 {
+            e.step_slots();
+        }
+        assert_eq!(e.slots_active(), 0, "admitted slot still retires");
     }
 }

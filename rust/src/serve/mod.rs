@@ -18,7 +18,11 @@
 //!   docs/adr/006-kv-cache-continuous-batching.md),
 //! * [`server`]    — TCP accept loop, connection handlers, engine worker
 //!   pool,
-//! * [`telemetry`] — latency percentiles, batch occupancy, tokens/sec.
+//! * [`telemetry`] — latency percentiles, batch occupancy, tokens/sec,
+//! * [`route`]     — the `repro route` multi-replica router: health
+//!   checks, circuit breakers, session affinity, failover, graceful
+//!   drain, replica supervision, and the chaos harness (DESIGN.md
+//!   §Routing, docs/adr/007-replica-router.md).
 //!
 //! Python never runs on this path: everything the server executes was
 //! AOT-lowered at build time, same as training.
@@ -27,14 +31,18 @@ pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod protocol;
+pub mod route;
 pub mod server;
 pub mod session;
 pub mod telemetry;
 
 pub use batcher::{Batch, DeadlineBatcher, KeyedBatcher};
 pub use cache::LruCache;
-pub use engine::{BatchEngine, BatchKey, EngineFactory, MockEngine, SlotDone};
+pub use engine::{BatchEngine, BatchKey, EngineFactory, FaultSpec, FaultyEngine, MockEngine, SlotDone};
 pub use protocol::{OpKind, Reply, Request};
+pub use route::{
+    ChaosPlan, ChaosProxy, RouteCfg, Router, RouterHandle, SpawnSpec, Supervisor,
+};
 pub use server::{ServeCfg, Server, ServerHandle};
 pub use session::{GenSlot, ModelSession, NativeEngine, PjrtEngine, DECODE_SLOTS_DEFAULT};
-pub use telemetry::ServeStats;
+pub use telemetry::{RouteStats, ServeStats};

@@ -12,7 +12,16 @@
 //! <- {"id":2,"ok":true,"nll":9.31,"tokens":4,"ppl":10.25,...}
 //! -> {"id":3,"op":"stats"}          server telemetry snapshot
 //! -> {"id":4,"op":"shutdown"}       graceful stop (drains the queue)
+//! -> {"id":5,"op":"ping"}           liveness probe (router health checks)
+//! -> {"id":6,"op":"drain"}          stop admitting, answer once in-flight
+//!                                   work quiesces (rolling restarts)
+//! -> {"id":7,"op":"resume"}         re-admit after a drain
 //! ```
+//!
+//! The same format rides unchanged through `repro route`
+//! (DESIGN.md §Routing): the router classifies each line with
+//! [`parse_line`] and forwards model ops verbatim, so a routed replica
+//! answers with exactly the bytes a direct connection would see.
 
 use crate::util::json::Json;
 
@@ -50,12 +59,19 @@ pub struct Request {
     pub seed: u64,
 }
 
-/// Control ops handled outside the batch queue.
+/// Control ops handled outside the batch queue. `Ping` is the router's
+/// health probe; `Drain`/`Resume` drive zero-downtime rolling restarts
+/// (DESIGN.md §Routing). `Drain` and `Resume` keep the whole parsed
+/// object: the router reads an optional `replica` field off it to
+/// address one member of its pool.
 #[derive(Debug, Clone)]
 pub enum Parsed {
     Model(Request),
     Stats(Json),
     Shutdown(Json),
+    Ping(Json),
+    Drain { id: Json, body: Json },
+    Resume { id: Json, body: Json },
 }
 
 /// Per-request engine result, rendered into the response line.
@@ -77,6 +93,9 @@ pub fn parse_line(line: &str) -> Result<Parsed, String> {
         "score" => OpKind::Score,
         "stats" => return Ok(Parsed::Stats(id)),
         "shutdown" => return Ok(Parsed::Shutdown(id)),
+        "ping" => return Ok(Parsed::Ping(id)),
+        "drain" => return Ok(Parsed::Drain { id, body: j }),
+        "resume" => return Ok(Parsed::Resume { id, body: j }),
         other => return Err(format!("unknown op '{other}'")),
     };
     let text_key = match kind {
@@ -130,12 +149,20 @@ pub fn render_reply(id: &Json, reply: &Reply, meta: ResponseMeta) -> String {
 }
 
 pub fn render_error(id: &Json, msg: &str) -> String {
-    Json::obj(vec![
+    render_error_with(id, msg, vec![])
+}
+
+/// [`render_error`] plus extra machine-readable fields — the `overloaded`
+/// shed attaches `retry_after_ms` here so clients (and the router's
+/// backoff) retry on schedule instead of blind exponential guessing.
+pub fn render_error_with(id: &Json, msg: &str, extra: Vec<(&str, Json)>) -> String {
+    let mut pairs = vec![
         ("id", id.clone()),
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg)),
-    ])
-    .to_string()
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs).to_string()
 }
 
 pub fn render_ok(id: &Json, extra: Vec<(&str, Json)>) -> String {
@@ -172,6 +199,41 @@ mod tests {
             parse_line(r#"{"id":"x","op":"shutdown"}"#).unwrap(),
             Parsed::Shutdown(Json::Str(_))
         ));
+    }
+
+    #[test]
+    fn parses_router_control_ops() {
+        assert!(matches!(
+            parse_line(r#"{"id":9,"op":"ping"}"#).unwrap(),
+            Parsed::Ping(Json::Num(_))
+        ));
+        let Parsed::Drain { id, body } =
+            parse_line(r#"{"id":1,"op":"drain","replica":2}"#).unwrap()
+        else {
+            panic!("not a drain")
+        };
+        assert_eq!(id.as_usize(), Some(1));
+        assert_eq!(body.get("replica").and_then(|r| r.as_usize()), Some(2));
+        let Parsed::Resume { body, .. } = parse_line(r#"{"op":"resume"}"#).unwrap()
+        else {
+            panic!("not a resume")
+        };
+        assert!(body.get("replica").is_none());
+    }
+
+    #[test]
+    fn error_extras_ride_alongside_the_message() {
+        let line = render_error_with(
+            &Json::num(3.0),
+            "overloaded",
+            vec![("retry_after_ms", Json::num(45.0))],
+        );
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_f64(), Some(45.0));
+        // the plain renderer stays byte-stable: no extra keys appear
+        assert!(!render_error(&Json::Null, "x").contains("retry_after_ms"));
     }
 
     #[test]

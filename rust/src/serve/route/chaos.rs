@@ -1,0 +1,234 @@
+//! Chaos harness, transport half: a line-level TCP proxy that sits
+//! between the router and a replica and injects faults on demand
+//! (DESIGN.md §Routing). The engine half — faults *inside* a replica —
+//! is [`super::super::engine::FaultyEngine`].
+//!
+//! Faults are flipped at runtime through the shared [`ChaosPlan`]
+//! (plain atomics, no locks on the data path):
+//!
+//! * `down`        — refuse new connections and cut live ones at the
+//!   next line boundary or idle tick: a blackhole outage,
+//! * `latency_ms`  — added to every replica→router reply line: a slow
+//!   replica without touching the replica,
+//! * `drop_every`  — cut the connection after every Nth forwarded reply
+//!   line: a flaky link that keeps coming back.
+//!
+//! Forwarding is byte-exact (raw line bytes, no re-rendering), so the
+//! proxy is invisible when no fault is armed — the byte-identity test
+//! routes through it on purpose. Faults are deterministic given the
+//! same traffic order (counters, not randomness), so chaos tests don't
+//! flake in CI.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// How often an idle pump wakes to check the fault flags.
+const PUMP_TICK: Duration = Duration::from_millis(50);
+
+/// Shared fault switchboard; clone the `Arc` and flip from the test.
+#[derive(Debug, Default)]
+pub struct ChaosPlan {
+    down: AtomicBool,
+    latency_ms: AtomicU64,
+    drop_every: AtomicUsize,
+    replies: AtomicUsize,
+}
+
+impl ChaosPlan {
+    pub fn new() -> Arc<ChaosPlan> {
+        Arc::new(ChaosPlan::default())
+    }
+
+    /// Blackhole the link (true) or restore it (false).
+    pub fn set_down(&self, v: bool) {
+        self.down.store(v, Ordering::SeqCst);
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::SeqCst)
+    }
+
+    /// Delay every forwarded reply line by `ms`.
+    pub fn set_latency_ms(&self, ms: u64) {
+        self.latency_ms.store(ms, Ordering::SeqCst);
+    }
+
+    /// Cut the connection after every `n`th reply line (0 disarms).
+    pub fn set_drop_every(&self, n: usize) {
+        self.drop_every.store(n, Ordering::SeqCst);
+        self.replies.store(0, Ordering::SeqCst);
+    }
+
+    /// Count a forwarded reply; true = the drop fault fires now.
+    fn reply_drops(&self) -> bool {
+        let every = self.drop_every.load(Ordering::SeqCst);
+        if every == 0 {
+            return false;
+        }
+        let n = self.replies.fetch_add(1, Ordering::SeqCst) + 1;
+        n % every == 0
+    }
+}
+
+/// A running proxy in front of one replica; connect the router to
+/// `proxy.addr` instead of the replica.
+pub struct ChaosProxy {
+    pub addr: SocketAddr,
+    plan: Arc<ChaosPlan>,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind an ephemeral local port and start proxying to `upstream`
+    /// (`host:port`) under `plan`'s faults.
+    pub fn spawn(upstream: &str, plan: Arc<ChaosPlan>) -> Result<ChaosProxy> {
+        let upstream_sa = upstream
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {upstream}"))?
+            .next()
+            .with_context(|| format!("resolving {upstream}"))?;
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding chaos proxy")?;
+        let addr = listener.local_addr()?;
+        // accept must wake to see the stop flag
+        listener.set_nonblocking(true).context("nonblocking accept")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let plan = plan.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, upstream_sa, plan, stop)
+            })
+        };
+        Ok(ChaosProxy { addr, plan, stop, accept: Some(accept) })
+    }
+
+    pub fn plan(&self) -> Arc<ChaosPlan> {
+        self.plan.clone()
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    upstream: SocketAddr,
+    plan: Arc<ChaosPlan>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((client, _)) => {
+                if plan.is_down() {
+                    drop(client); // connection reset: the outage fault
+                    continue;
+                }
+                let plan = plan.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = bridge(client, upstream, plan, stop) {
+                        crate::debug!("chaos", "bridge ended: {e:#}");
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(PUMP_TICK);
+            }
+            Err(e) => {
+                crate::debug!("chaos", "accept error: {e}");
+                std::thread::sleep(PUMP_TICK);
+            }
+        }
+    }
+}
+
+/// Wire one client connection to one fresh upstream connection with a
+/// pump thread per direction. Either pump tripping a fault (or the
+/// link dying) shuts both sockets down, which the peer sees as a
+/// connection loss — exactly the failure the router must survive.
+fn bridge(
+    client: TcpStream,
+    upstream: SocketAddr,
+    plan: Arc<ChaosPlan>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let server = TcpStream::connect_timeout(&upstream, Duration::from_secs(1))
+        .with_context(|| format!("connecting upstream {upstream}"))?;
+    client.set_nodelay(true).ok();
+    server.set_nodelay(true).ok();
+    let c2 = client.try_clone().context("cloning client")?;
+    let s2 = server.try_clone().context("cloning server")?;
+    let forward = {
+        let plan = plan.clone();
+        let stop = stop.clone();
+        // router → replica: requests, forwarded without faults (faults
+        // on the reply path exercise strictly more router machinery)
+        std::thread::spawn(move || pump(client, s2, plan, stop, false))
+    };
+    pump(server, c2, plan, stop, true);
+    let _ = forward.join();
+    Ok(())
+}
+
+/// Copy NDJSON lines `from` → `to`, byte-exact, applying reply-path
+/// faults when `is_reply`. Returns when the link dies, a fault cuts it,
+/// `down` flips, or `stop` is set; shuts both streams so the twin pump
+/// exits too.
+fn pump(
+    from: TcpStream,
+    mut to: TcpStream,
+    plan: Arc<ChaosPlan>,
+    stop: Arc<AtomicBool>,
+    is_reply: bool,
+) {
+    from.set_read_timeout(Some(PUMP_TICK)).ok();
+    let mut reader = BufReader::new(&from);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) || plan.is_down() {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line.ends_with('\n') => {
+                if is_reply {
+                    let ms = plan.latency_ms.load(Ordering::SeqCst);
+                    if ms > 0 {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+                if to.write_all(line.as_bytes()).and_then(|_| to.flush()).is_err() {
+                    break;
+                }
+                if is_reply && plan.reply_drops() {
+                    break; // flaky-link fault: cut after this reply
+                }
+                line.clear();
+            }
+            // mid-line bytes: keep accumulating
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(_) => break,
+        }
+    }
+    let _ = from.shutdown(std::net::Shutdown::Both);
+    let _ = to.shutdown(std::net::Shutdown::Both);
+}

@@ -1,0 +1,113 @@
+//! Health probing: a background thread pings every replica on a fixed
+//! interval and feeds the results to the pool's circuit breaker
+//! (DESIGN.md §Routing).
+//!
+//! The prober is the only traffic an `Open`/`HalfOpen` replica sees —
+//! data-path requests never probe. [`super::pool::ReplicaPool::probe_targets`]
+//! decides who gets pinged each round (Closed and Draining replicas for
+//! liveness, plus Open ones whose dwell elapsed, which it moves to
+//! HalfOpen). A successful pong in HalfOpen counts toward closing the
+//! breaker; a failed probe reopens it with a doubled dwell.
+//!
+//! Pongs carry the replica's own `draining` flag, so drains initiated
+//! directly on a replica (not through this router) still take it out of
+//! rotation here, and a resumed replica re-enters without router help.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::pool::BreakerState;
+use super::router::RouterShared;
+use crate::util::json::Json;
+
+/// One-shot NDJSON call: connect, send `line`, read one reply line,
+/// parse it. Used by probes and by the router's `drain`/`resume`
+/// control path.
+pub(crate) fn call(addr: &str, line: &str, timeout: Duration) -> Result<Json> {
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .with_context(|| format!("resolving {addr}"))?;
+    let stream = TcpStream::connect_timeout(&sa, timeout)
+        .with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).context("read timeout")?;
+    stream.set_write_timeout(Some(timeout)).context("write timeout")?;
+    let mut w = stream.try_clone().context("cloning stream")?;
+    writeln!(w, "{line}").context("writing request")?;
+    w.flush().context("flushing request")?;
+    let mut reply = String::new();
+    BufReader::new(stream)
+        .read_line(&mut reply)
+        .context("reading reply")?;
+    anyhow::ensure!(!reply.trim().is_empty(), "empty reply from {addr}");
+    Json::parse(reply.trim()).map_err(|e| anyhow::anyhow!("bad reply json: {e}"))
+}
+
+fn probe(addr: &str, timeout: Duration) -> Result<Json> {
+    call(addr, r#"{"op":"ping"}"#, timeout)
+}
+
+/// Start the prober thread; exits when `shared.shutdown` is set.
+pub(crate) fn spawn_prober(shared: Arc<RouterShared>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while !shared.shutdown.load(Ordering::SeqCst) {
+            let targets = shared.pool.probe_targets(Instant::now());
+            for (i, addr) in targets {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let Some(was) = shared.pool.state(i) else { continue };
+                match probe(&addr, shared.cfg.probe_timeout) {
+                    Ok(pong) => {
+                        let replica_draining = pong
+                            .get("draining")
+                            .and_then(|d| d.as_bool())
+                            .unwrap_or(false);
+                        if shared.pool.record_success(i) {
+                            shared.stats.record_breaker_close();
+                            crate::info!(
+                                "route",
+                                "replica {i} ({addr}) recovered (breaker closed)"
+                            );
+                        }
+                        // sync drain state both directions with the
+                        // replica's own flag
+                        if replica_draining && was == BreakerState::Closed {
+                            crate::info!(
+                                "route",
+                                "replica {i} ({addr}) reports draining; removing from rotation"
+                            );
+                            shared.pool.mark_draining(i);
+                        } else if !replica_draining && was == BreakerState::Draining {
+                            crate::info!(
+                                "route",
+                                "replica {i} ({addr}) resumed; back in rotation"
+                            );
+                            shared.pool.mark_resumed(i);
+                        }
+                    }
+                    Err(e) => {
+                        crate::debug!("route", "probe {i} ({addr}) failed: {e:#}");
+                        if shared.pool.record_failure(i) {
+                            shared.stats.record_breaker_open();
+                            crate::warn_!(
+                                "route",
+                                "replica {i} ({addr}) unhealthy (breaker open)"
+                            );
+                        }
+                    }
+                }
+            }
+            // interruptible-enough sleep: the interval is short (100 ms
+            // default), bound shutdown latency to one interval
+            std::thread::sleep(shared.cfg.health_interval);
+        }
+    })
+}

@@ -1,0 +1,42 @@
+//! `repro route` — a health-checked multi-replica router in front of
+//! `repro serve` (DESIGN.md §Routing).
+//!
+//! The router speaks the exact [`super::protocol`] NDJSON wire format on
+//! the front and fans model ops across N serve replicas on the back,
+//! forwarding request and response lines *verbatim* — a routed replica
+//! answers with byte-for-byte the same lines a direct connection would
+//! see (pinned by `rust/tests/route_integration.rs`). Replicas are either
+//! externally addressed (`--replicas host:port,...`) or self-spawned
+//! child processes restarted on crash with capped exponential backoff
+//! (`--spawn N`, [`supervise`]).
+//!
+//! Robustness machinery, one module each:
+//!
+//! * [`pool`]      — replica records, the per-replica circuit breaker
+//!   (closed → open on a failure threshold → half-open probes → closed),
+//!   and deterministic rendezvous-hash session affinity: a session key
+//!   maps to the same healthy replica on every router, and losing a
+//!   replica only rehashes the sessions that lived on it,
+//! * [`router`]    — accept loop, per-connection fan-out, retry with
+//!   jittered capped backoff (honoring server `retry_after_ms` hints)
+//!   for work that never started or is idempotent, fail-fast clean
+//!   errors for non-resumable mid-stream `generate`s, per-request
+//!   deadlines,
+//! * [`health`]    — the periodic `ping` prober feeding the breaker,
+//! * [`supervise`] — child-process replica supervision (spawn, ready
+//!   wait, restart-on-crash with capped exponential backoff, SIGKILL
+//!   test hook),
+//! * [`chaos`]     — the transport half of the fault-injection harness
+//!   (a line proxy injecting latency, stalls, outages and connection
+//!   drops); the engine half is [`super::engine::FaultyEngine`].
+
+pub mod chaos;
+pub mod health;
+pub mod pool;
+pub mod router;
+pub mod supervise;
+
+pub use chaos::{ChaosPlan, ChaosProxy};
+pub use pool::{rendezvous_pick, BreakerCfg, BreakerState, ReplicaPool};
+pub use router::{RouteCfg, Router, RouterHandle};
+pub use supervise::{SpawnSpec, Supervisor};

@@ -1,0 +1,436 @@
+//! Replica pool: per-replica circuit breakers plus deterministic
+//! rendezvous-hash session affinity (DESIGN.md §Routing).
+//!
+//! Breaker states per replica:
+//!
+//! ```text
+//! Closed ──(fail_threshold consecutive failures)──> Open
+//! Open ──(dwell elapses; capped exponential in consecutive opens)──> HalfOpen
+//! HalfOpen ──(half_open_successes probe successes)──> Closed
+//! HalfOpen ──(any failure; dwell doubles)──> Open
+//! Draining ──(resume / pong without the draining flag)──> Closed
+//! ```
+//!
+//! Only `Closed` replicas take traffic. `HalfOpen` replicas receive
+//! health probes ([`super::health`]) but no requests, so a flapping
+//! replica is re-admitted by evidence, not hope. `Draining` is the
+//! rolling-restart state: healthy, finishing in-flight work, not
+//! admitting — the prober moves a replica here whenever its pong carries
+//! `draining:true`, so externally drained replicas leave rotation too.
+//!
+//! Affinity is rendezvous hashing (highest-random-weight) over the
+//! *closed* replicas: each (key, replica) pair gets a deterministic
+//! score and the key goes to the highest scorer. Two properties the
+//! proptests pin: placement is ~uniform across replicas, and removing a
+//! replica only moves the keys that lived on it — every other session
+//! stays put, which is the whole point of keeping KV/session state hot.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Per-replica breaker state; see the module docs for the transitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+    Draining,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Draining => "draining",
+        }
+    }
+}
+
+/// Breaker tuning; defaults suit the integration tests and a local fleet.
+#[derive(Debug, Clone)]
+pub struct BreakerCfg {
+    /// consecutive failures that open the breaker
+    pub fail_threshold: u32,
+    /// consecutive probe successes that close a half-open breaker
+    pub half_open_successes: u32,
+    /// open-state dwell before the first half-open probe; doubles per
+    /// consecutive open, capped at `open_cap`
+    pub open_base: Duration,
+    pub open_cap: Duration,
+}
+
+impl Default for BreakerCfg {
+    fn default() -> BreakerCfg {
+        BreakerCfg {
+            fail_threshold: 3,
+            half_open_successes: 1,
+            open_base: Duration::from_millis(250),
+            open_cap: Duration::from_secs(5),
+        }
+    }
+}
+
+struct Replica {
+    addr: String,
+    state: BreakerState,
+    consecutive_failures: u32,
+    /// consecutive opens without an intervening close — scales the dwell
+    opens: u32,
+    open_until: Instant,
+    half_open_successes: u32,
+}
+
+impl Replica {
+    fn new(addr: String) -> Replica {
+        Replica {
+            addr,
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            opens: 0,
+            open_until: Instant::now(),
+            half_open_successes: 0,
+        }
+    }
+}
+
+/// Thread-shared replica set. All methods take `&self`; the lock is
+/// private and never held across I/O.
+pub struct ReplicaPool {
+    replicas: Mutex<Vec<Replica>>,
+    cfg: BreakerCfg,
+}
+
+impl ReplicaPool {
+    pub fn new(addrs: Vec<String>, cfg: BreakerCfg) -> ReplicaPool {
+        ReplicaPool {
+            replicas: Mutex::new(addrs.into_iter().map(Replica::new).collect()),
+            cfg,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn addr(&self, i: usize) -> Option<String> {
+        self.replicas.lock().unwrap().get(i).map(|r| r.addr.clone())
+    }
+
+    pub fn state(&self, i: usize) -> Option<BreakerState> {
+        self.replicas.lock().unwrap().get(i).map(|r| r.state)
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.replicas
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.state == BreakerState::Closed)
+            .count()
+    }
+
+    /// Route `key` to a closed replica: rendezvous over the closed set
+    /// minus `exclude` (replicas this request already failed on). When
+    /// exclusion would leave nothing, it is ignored — a possibly-bad
+    /// replica beats a guaranteed error.
+    pub fn pick(&self, key: &str, exclude: &[usize]) -> Option<usize> {
+        let g = self.replicas.lock().unwrap();
+        let closed: Vec<usize> = (0..g.len())
+            .filter(|&i| g[i].state == BreakerState::Closed)
+            .collect();
+        let preferred: Vec<usize> =
+            closed.iter().copied().filter(|i| !exclude.contains(i)).collect();
+        let candidates = if preferred.is_empty() { &closed } else { &preferred };
+        rendezvous_pick(key, candidates)
+    }
+
+    /// A successful request or probe against replica `i`. Returns true
+    /// when this success closed a half-open breaker (re-entry event).
+    pub fn record_success(&self, i: usize) -> bool {
+        let mut g = self.replicas.lock().unwrap();
+        let Some(r) = g.get_mut(i) else { return false };
+        r.consecutive_failures = 0;
+        if r.state == BreakerState::HalfOpen {
+            r.half_open_successes += 1;
+            if r.half_open_successes >= self.cfg.half_open_successes {
+                r.state = BreakerState::Closed;
+                r.opens = 0;
+                crate::info!("route", "replica {i} ({}) re-entered (breaker closed)", r.addr);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// A failed request or probe against replica `i`. Returns true when
+    /// this failure opened the breaker (the replica just left rotation).
+    pub fn record_failure(&self, i: usize) -> bool {
+        let mut g = self.replicas.lock().unwrap();
+        let Some(r) = g.get_mut(i) else { return false };
+        r.consecutive_failures += 1;
+        let opens_now = match r.state {
+            // Draining counts like Closed: a replica that dies mid-drain
+            // must still leave via Open, not linger as "draining"
+            BreakerState::Closed | BreakerState::Draining => {
+                r.consecutive_failures >= self.cfg.fail_threshold
+            }
+            // a half-open replica failed its probe: straight back to
+            // open with a doubled dwell
+            BreakerState::HalfOpen => true,
+            BreakerState::Open => false,
+        };
+        if opens_now {
+            r.state = BreakerState::Open;
+            r.opens = r.opens.saturating_add(1);
+            r.half_open_successes = 0;
+            let dwell = open_dwell(&self.cfg, r.opens);
+            r.open_until = Instant::now() + dwell;
+            crate::warn_!(
+                "route",
+                "replica {i} ({}) breaker OPEN ({} consecutive failures, probe in {:?})",
+                r.addr,
+                r.consecutive_failures,
+                dwell
+            );
+        }
+        opens_now
+    }
+
+    /// Probe targets for the health loop: every closed / draining replica
+    /// (to catch silent death and external resume), plus open replicas
+    /// whose dwell elapsed — those transition to half-open here.
+    pub fn probe_targets(&self, now: Instant) -> Vec<(usize, String)> {
+        let mut g = self.replicas.lock().unwrap();
+        let mut out = Vec::new();
+        for (i, r) in g.iter_mut().enumerate() {
+            match r.state {
+                BreakerState::Open if now >= r.open_until => {
+                    r.state = BreakerState::HalfOpen;
+                    r.half_open_successes = 0;
+                    out.push((i, r.addr.clone()));
+                }
+                BreakerState::Closed | BreakerState::HalfOpen | BreakerState::Draining => {
+                    out.push((i, r.addr.clone()));
+                }
+                BreakerState::Open => {}
+            }
+        }
+        out
+    }
+
+    /// Move a healthy replica out of rotation for a drain (rolling
+    /// restart, or its pong announced `draining:true`).
+    pub fn mark_draining(&self, i: usize) {
+        let mut g = self.replicas.lock().unwrap();
+        if let Some(r) = g.get_mut(i) {
+            if r.state == BreakerState::Closed {
+                r.state = BreakerState::Draining;
+            }
+        }
+    }
+
+    /// A drained replica resumed: it just answered, so it re-enters
+    /// rotation directly (no half-open detour).
+    pub fn mark_resumed(&self, i: usize) {
+        let mut g = self.replicas.lock().unwrap();
+        if let Some(r) = g.get_mut(i) {
+            if r.state == BreakerState::Draining {
+                r.state = BreakerState::Closed;
+                r.consecutive_failures = 0;
+            }
+        }
+    }
+
+    /// Per-replica rows for the router's `stats` op.
+    pub fn snapshot(&self) -> Json {
+        let g = self.replicas.lock().unwrap();
+        Json::Arr(
+            g.iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("addr", Json::str(r.addr.clone())),
+                        ("state", Json::str(r.state.name())),
+                        (
+                            "consecutive_failures",
+                            Json::num(r.consecutive_failures as f64),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+fn open_dwell(cfg: &BreakerCfg, opens: u32) -> Duration {
+    let factor = 1u32 << opens.saturating_sub(1).min(8);
+    (cfg.open_base * factor).min(cfg.open_cap)
+}
+
+/// Deterministic highest-random-weight choice: every (key, candidate)
+/// pair scores independently, the max wins. Removing a candidate leaves
+/// every other pair's score unchanged — only the removed candidate's
+/// keys move. Pure, so the proptests drive it directly.
+pub fn rendezvous_pick(key: &str, candidates: &[usize]) -> Option<usize> {
+    let kh = key_hash(key);
+    candidates
+        .iter()
+        .copied()
+        .max_by_key(|&i| (mix64(kh ^ mix64(i as u64 ^ 0x9e3779b97f4a7c15)), i))
+}
+
+/// FNV-1a over the key bytes, finished with one mix round — cheap,
+/// deterministic across runs and processes (no RandomState).
+fn key_hash(key: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    mix64(h)
+}
+
+/// splitmix64 finalizer (same constants as `util::rng`'s seeder).
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Jittered capped exponential backoff: `base * 2^attempt`, capped, then
+/// scaled by a deterministic jitter in [0.75, 1.25) derived from `seed`
+/// — retries across replicas and requests decorrelate without a shared
+/// RNG, and a given (request, attempt) pair replays identically.
+pub fn backoff_delay(base: Duration, cap: Duration, attempt: u32, seed: u64) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.min(10)).min(cap);
+    let jitter = 0.75 + 0.5 * (mix64(seed ^ attempt as u64) >> 11) as f64 / (1u64 << 53) as f64;
+    exp.mul_f64(jitter).min(cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(n: usize) -> ReplicaPool {
+        let addrs = (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect();
+        ReplicaPool::new(addrs, BreakerCfg::default())
+    }
+
+    #[test]
+    fn breaker_opens_at_threshold_and_recovers_via_half_open() {
+        let p = pool(2);
+        assert_eq!(p.state(0), Some(BreakerState::Closed));
+        assert!(!p.record_failure(0));
+        assert!(!p.record_failure(0));
+        assert!(p.record_failure(0), "third consecutive failure opens");
+        assert_eq!(p.state(0), Some(BreakerState::Open));
+        assert_eq!(p.healthy_count(), 1);
+
+        // before the dwell elapses the open replica is not probed
+        let soon = Instant::now();
+        let targets = p.probe_targets(soon);
+        assert!(targets.iter().all(|(i, _)| *i != 0), "{targets:?}");
+
+        // after the dwell it transitions to half-open and gets probed
+        let later = Instant::now() + Duration::from_secs(1);
+        let targets = p.probe_targets(later);
+        assert!(targets.iter().any(|(i, _)| *i == 0));
+        assert_eq!(p.state(0), Some(BreakerState::HalfOpen));
+        // still takes no traffic while half-open
+        assert_eq!(p.pick("session", &[]), Some(1));
+
+        assert!(p.record_success(0), "probe success closes the breaker");
+        assert_eq!(p.state(0), Some(BreakerState::Closed));
+        assert_eq!(p.healthy_count(), 2);
+    }
+
+    #[test]
+    fn half_open_failure_reopens_with_longer_dwell() {
+        let p = pool(1);
+        for _ in 0..3 {
+            p.record_failure(0);
+        }
+        let until1 = p.replicas.lock().unwrap()[0].open_until;
+        p.probe_targets(Instant::now() + Duration::from_secs(10));
+        assert_eq!(p.state(0), Some(BreakerState::HalfOpen));
+        assert!(p.record_failure(0), "half-open failure reopens immediately");
+        let until2 = p.replicas.lock().unwrap()[0].open_until;
+        assert!(until2 > until1, "dwell grew");
+    }
+
+    #[test]
+    fn pick_excludes_failed_replicas_until_it_cannot() {
+        let p = pool(3);
+        let chosen = p.pick("k", &[]).unwrap();
+        let second = p.pick("k", &[chosen]).unwrap();
+        assert_ne!(chosen, second, "exclusion forces a different replica");
+        // excluding everyone falls back to the full closed set
+        assert!(p.pick("k", &[0, 1, 2]).is_some());
+        // a dead replica is out regardless of exclusion
+        for _ in 0..3 {
+            p.record_failure(chosen);
+        }
+        assert_ne!(p.pick("k", &[]), Some(chosen));
+    }
+
+    #[test]
+    fn draining_leaves_rotation_and_resume_reenters() {
+        let p = pool(2);
+        let target = p.pick("s", &[]).unwrap();
+        p.mark_draining(target);
+        assert_eq!(p.state(target), Some(BreakerState::Draining));
+        assert_ne!(p.pick("s", &[]), Some(target), "drained replica takes nothing");
+        // draining replicas stay on the probe list (external resume)
+        assert!(p.probe_targets(Instant::now()).iter().any(|(i, _)| *i == target));
+        p.mark_resumed(target);
+        assert_eq!(p.pick("s", &[]), Some(target), "same key returns home");
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_rehash_is_minimal() {
+        let all = [0usize, 1, 2];
+        for key in ["a", "b", "variant-7", ""] {
+            let first = rendezvous_pick(key, &all);
+            assert_eq!(first, rendezvous_pick(key, &all), "stable across calls");
+        }
+        // removing one candidate only moves keys that lived on it
+        let keys: Vec<String> = (0..200).map(|i| format!("session-{i}")).collect();
+        let dead = 1usize;
+        let survivors = [0usize, 2];
+        for k in &keys {
+            let before = rendezvous_pick(k, &all).unwrap();
+            let after = rendezvous_pick(k, &survivors).unwrap();
+            if before != dead {
+                assert_eq!(before, after, "{k} moved although its replica lived");
+            } else {
+                assert!(survivors.contains(&after));
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_capped_and_jittered_deterministically() {
+        let base = Duration::from_millis(20);
+        let cap = Duration::from_millis(500);
+        let d0 = backoff_delay(base, cap, 0, 42);
+        let d1 = backoff_delay(base, cap, 1, 42);
+        let d9 = backoff_delay(base, cap, 9, 42);
+        assert_eq!(d0, backoff_delay(base, cap, 0, 42), "deterministic");
+        assert!(d0 >= Duration::from_millis(15) && d0 <= Duration::from_millis(25));
+        assert!(d1 > d0, "grows");
+        assert!(d9 <= cap, "capped");
+        assert_ne!(
+            backoff_delay(base, cap, 0, 1),
+            backoff_delay(base, cap, 0, 2),
+            "seeds decorrelate"
+        );
+    }
+}

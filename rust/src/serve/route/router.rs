@@ -1,0 +1,786 @@
+//! Router core: front accept loop, per-connection fan-out to replicas,
+//! retry/backoff, failover, and per-request deadlines
+//! (DESIGN.md §Routing).
+//!
+//! Forwarding is *verbatim* in both directions — the router never
+//! re-renders a model request or a replica reply, so a routed transcript
+//! is byte-identical to a direct `repro serve` one. Each client
+//! connection owns one upstream connection per replica it touches
+//! (opened lazily, rebuilt on failure), which keeps the replica's view of
+//! pipelining identical to a direct client; like direct serve, a client
+//! that pipelines must use distinct `id`s for requests in flight.
+//!
+//! The retry matrix (also in DESIGN.md §Routing):
+//!
+//! | failure                         | `score`            | `generate`         |
+//! |---------------------------------|--------------------|--------------------|
+//! | shed (`overloaded` / `draining`)| retry (never ran)  | retry (never ran)  |
+//! | connection lost mid-flight      | fail over + retry  | clean error (fast) |
+//! | per-request deadline exceeded   | clean error        | clean error        |
+//! | genuine per-request error reply | forwarded verbatim | forwarded verbatim |
+//!
+//! `overloaded` retries honor the server's `retry_after_ms` hint; every
+//! other retry uses jittered capped exponential backoff
+//! ([`super::pool::backoff_delay`]). A request whose budget or attempt
+//! allowance runs out gets the last shed line verbatim or a clean
+//! router-rendered NDJSON error — it never hangs.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::super::protocol::{self, OpKind, Parsed};
+use super::super::telemetry::RouteStats;
+use super::health;
+use super::pool::{backoff_delay, BreakerCfg, ReplicaPool};
+use super::supervise::Supervisor;
+use crate::util::json::Json;
+
+/// Router knobs (CLI flags map 1:1; see `repro route --help`).
+#[derive(Debug, Clone)]
+pub struct RouteCfg {
+    pub addr: String,
+    /// re-dispatches per request past the first attempt
+    pub retries: usize,
+    /// end-to-end budget per request, all attempts included
+    pub deadline: Duration,
+    /// un-hinted retry backoff: base and cap of the jittered exponential
+    pub retry_base: Duration,
+    pub retry_cap: Duration,
+    /// health probe period
+    pub health_interval: Duration,
+    /// per-probe connect/read budget
+    pub probe_timeout: Duration,
+    /// upstream connect budget on the data path
+    pub connect_timeout: Duration,
+    pub breaker: BreakerCfg,
+}
+
+impl Default for RouteCfg {
+    fn default() -> RouteCfg {
+        RouteCfg {
+            addr: "127.0.0.1:7400".into(),
+            retries: 3,
+            deadline: Duration::from_secs(30),
+            retry_base: Duration::from_millis(20),
+            retry_cap: Duration::from_millis(500),
+            health_interval: Duration::from_millis(100),
+            probe_timeout: Duration::from_secs(1),
+            connect_timeout: Duration::from_secs(1),
+            breaker: BreakerCfg::default(),
+        }
+    }
+}
+
+/// How often a blocked upstream read wakes to expire deadlines and check
+/// liveness flags.
+const UPSTREAM_TICK: Duration = Duration::from_millis(50);
+
+/// Read budget for a replica-addressed `drain` call: the replica itself
+/// waits up to its quiesce bound (30 s) before answering.
+const DRAIN_CALL_TIMEOUT: Duration = Duration::from_secs(35);
+
+pub(crate) struct RouterShared {
+    pub(crate) cfg: RouteCfg,
+    pub(crate) pool: Arc<ReplicaPool>,
+    pub(crate) stats: RouteStats,
+    pub(crate) shutdown: AtomicBool,
+}
+
+/// A running router; obtain via [`Router::spawn`], stop via the wire
+/// `shutdown` op or [`RouterHandle::shutdown`].
+pub struct RouterHandle {
+    pub addr: SocketAddr,
+    shared: Arc<RouterShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    prober: Option<std::thread::JoinHandle<()>>,
+    supervisor: Option<Supervisor>,
+}
+
+impl RouterHandle {
+    pub fn shutdown(mut self) -> Json {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        unblock_accept(self.addr);
+        self.join()
+    }
+
+    /// Block until a wire `shutdown` arrives.
+    pub fn wait(mut self) -> Json {
+        self.join()
+    }
+
+    fn join(&mut self) -> Json {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.prober.take() {
+            let _ = h.join();
+        }
+        if let Some(s) = self.supervisor.take() {
+            s.stop();
+        }
+        router_stats_json(&self.shared)
+    }
+
+    /// The supervised replica set, when `--spawn` built one (test and
+    /// rolling-restart hook).
+    pub fn supervisor(&self) -> Option<&Supervisor> {
+        self.supervisor.as_ref()
+    }
+
+    /// SIGKILL supervised replica `i` (chaos hook; the supervisor
+    /// restarts it with backoff and the breaker re-admits it via
+    /// half-open probes).
+    pub fn kill_replica(&self, i: usize) -> Result<()> {
+        self.supervisor
+            .as_ref()
+            .context("router has no supervised replicas (--spawn)")?
+            .kill(i)
+    }
+
+    /// Drain replica `i`: out of rotation, then a synchronous `drain`
+    /// call that returns once the replica's in-flight work quiesced.
+    pub fn drain_replica(&self, i: usize) -> Result<Json> {
+        drain_one(&self.shared, i)
+    }
+
+    /// Resume a drained replica into rotation.
+    pub fn resume_replica(&self, i: usize) -> Result<Json> {
+        resume_one(&self.shared, i)
+    }
+
+    pub fn pool(&self) -> &Arc<ReplicaPool> {
+        &self.shared.pool
+    }
+
+    pub fn stats_json(&self) -> Json {
+        router_stats_json(&self.shared)
+    }
+}
+
+fn unblock_accept(addr: SocketAddr) {
+    let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+}
+
+pub struct Router;
+
+impl Router {
+    /// Bind the front address and start routing across `replicas`
+    /// (`host:port` each). When the replicas are self-spawned, pass the
+    /// [`Supervisor`] so shutdown tears the children down.
+    pub fn spawn(
+        cfg: RouteCfg,
+        replicas: Vec<String>,
+        supervisor: Option<Supervisor>,
+    ) -> Result<RouterHandle> {
+        anyhow::ensure!(!replicas.is_empty(), "router needs at least one replica");
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let pool = Arc::new(ReplicaPool::new(replicas, cfg.breaker.clone()));
+        let stats = RouteStats::new(pool.len());
+        let shared = Arc::new(RouterShared {
+            cfg,
+            pool,
+            stats,
+            shutdown: AtomicBool::new(false),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        let prober = health::spawn_prober(shared.clone());
+        crate::info!(
+            "route",
+            "routing on {addr} across {} replicas",
+            shared.pool.len()
+        );
+        Ok(RouterHandle {
+            addr,
+            shared,
+            accept: Some(accept),
+            prober: Some(prober),
+            supervisor,
+        })
+    }
+}
+
+fn router_stats_json(shared: &RouterShared) -> Json {
+    let mut j = shared.stats.snapshot();
+    if let Json::Obj(m) = &mut j {
+        m.insert("replicas".into(), shared.pool.snapshot());
+        m.insert(
+            "healthy".into(),
+            Json::num(shared.pool.healthy_count() as f64),
+        );
+    }
+    j
+}
+
+pub(crate) fn drain_one(shared: &RouterShared, i: usize) -> Result<Json> {
+    let addr = shared.pool.addr(i).context("no such replica")?;
+    // out of rotation first, so racing requests shed at the replica are
+    // already being re-dispatched elsewhere while it quiesces
+    shared.pool.mark_draining(i);
+    health::call(&addr, r#"{"op":"drain"}"#, DRAIN_CALL_TIMEOUT)
+        .with_context(|| format!("draining replica {i} ({addr})"))
+}
+
+pub(crate) fn resume_one(shared: &RouterShared, i: usize) -> Result<Json> {
+    let addr = shared.pool.addr(i).context("no such replica")?;
+    let reply = health::call(&addr, r#"{"op":"resume"}"#, shared.cfg.probe_timeout)
+        .with_context(|| format!("resuming replica {i} ({addr})"))?;
+    shared.pool.mark_resumed(i);
+    Ok(reply)
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<RouterShared>) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_client(stream, shared) {
+                        crate::debug!("route", "client connection ended: {e:#}");
+                    }
+                });
+            }
+            Err(e) => {
+                crate::warn_!("route", "accept error (continuing): {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    shared.shutdown.store(true, Ordering::SeqCst);
+}
+
+/// One queued-or-in-flight request as the router tracks it. `raw` is the
+/// client's original line, forwarded byte-for-byte.
+#[derive(Clone)]
+struct Job {
+    raw: String,
+    id: Json,
+    /// rendered id — the key replies are matched on
+    id_key: String,
+    kind: OpKind,
+    /// session affinity key: the variant for explicit-variant traffic
+    /// (sessions are keyed by variant server-side), the id otherwise
+    affinity: String,
+    attempt: usize,
+    /// replicas this request already failed on (excluded on re-pick)
+    tried: Vec<usize>,
+    t0: Instant,
+    deadline: Instant,
+}
+
+impl Job {
+    fn latency_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Deterministic jitter seed: the id bytes folded, so a given
+    /// (request, attempt) pair replays the same delay.
+    fn jitter_seed(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in self.id_key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// One lazily-opened connection from this client to one replica.
+struct Upstream {
+    replica: usize,
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<String, Job>>,
+    dead: AtomicBool,
+}
+
+/// Per-client-connection routing state, shared with that client's
+/// upstream reader threads and any in-flight retry timers.
+struct ClientCtx {
+    shared: Arc<RouterShared>,
+    /// the client's writer channel (same shape as serve's)
+    tx: mpsc::Sender<String>,
+    upstreams: Mutex<HashMap<usize, Arc<Upstream>>>,
+    alive: Arc<AtomicBool>,
+}
+
+impl ClientCtx {
+    /// The live upstream for replica `r`, (re)connecting as needed.
+    fn upstream(self: &Arc<Self>, r: usize) -> Result<Arc<Upstream>> {
+        let mut map = self.upstreams.lock().unwrap();
+        if let Some(u) = map.get(&r) {
+            if !u.dead.load(Ordering::SeqCst) {
+                return Ok(u.clone());
+            }
+        }
+        let addr = self.shared.pool.addr(r).context("no such replica")?;
+        let sa = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .with_context(|| format!("resolving {addr}"))?;
+        let stream = TcpStream::connect_timeout(&sa, self.shared.cfg.connect_timeout)
+            .with_context(|| format!("connecting replica {r} ({addr})"))?;
+        stream.set_nodelay(true).ok();
+        let reader = stream.try_clone().context("cloning upstream")?;
+        reader.set_read_timeout(Some(UPSTREAM_TICK)).context("read timeout")?;
+        let up = Arc::new(Upstream {
+            replica: r,
+            writer: Mutex::new(stream),
+            pending: Mutex::new(HashMap::new()),
+            dead: AtomicBool::new(false),
+        });
+        map.insert(r, up.clone());
+        let ctx = self.clone();
+        let up2 = up.clone();
+        std::thread::spawn(move || upstream_reader(ctx, up2, reader));
+        Ok(up)
+    }
+}
+
+fn handle_client(stream: TcpStream, shared: Arc<RouterShared>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let peer = stream.peer_addr().ok();
+    crate::debug!("route", "client from {peer:?}");
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer_stream = stream.try_clone().context("cloning stream")?;
+    let writer = std::thread::spawn(move || {
+        let mut w = std::io::BufWriter::new(writer_stream);
+        while let Ok(line) = rx.recv() {
+            if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+                break;
+            }
+        }
+    });
+    let ctx = Arc::new(ClientCtx {
+        shared: shared.clone(),
+        tx: tx.clone(),
+        upstreams: Mutex::new(HashMap::new()),
+        alive: Arc::new(AtomicBool::new(true)),
+    });
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let res = (|| -> Result<()> {
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break; // EOF
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            match protocol::parse_line(trimmed) {
+                // identical renderer + message to direct serve, so even
+                // the router's local parse errors are byte-compatible
+                Err(e) => {
+                    let _ = tx.send(protocol::render_error(&Json::Null, &e));
+                }
+                Ok(Parsed::Stats(id)) => {
+                    let _ = tx.send(protocol::render_ok(
+                        &id,
+                        vec![("stats", router_stats_json(&shared))],
+                    ));
+                }
+                Ok(Parsed::Ping(id)) => {
+                    let _ = tx.send(protocol::render_ok(
+                        &id,
+                        vec![
+                            ("pong", Json::Bool(true)),
+                            (
+                                "healthy",
+                                Json::num(shared.pool.healthy_count() as f64),
+                            ),
+                        ],
+                    ));
+                }
+                Ok(Parsed::Shutdown(id)) => {
+                    let _ = tx.send(protocol::render_ok(&id, vec![]));
+                    crate::info!("route", "shutdown requested by {peer:?}");
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    unblock_accept(
+                        reader.get_ref().local_addr().context("local addr")?,
+                    );
+                    break;
+                }
+                Ok(Parsed::Drain { id, body }) => {
+                    let reply = match body.get("replica").and_then(|r| r.as_usize()) {
+                        None => protocol::render_error(
+                            &id,
+                            "drain: missing 'replica' index",
+                        ),
+                        Some(i) => match drain_one(&shared, i) {
+                            Ok(r) => protocol::render_ok(
+                                &id,
+                                vec![("replica", Json::num(i as f64)), ("reply", r)],
+                            ),
+                            Err(e) => {
+                                protocol::render_error(&id, &format!("{e:#}"))
+                            }
+                        },
+                    };
+                    let _ = tx.send(reply);
+                }
+                Ok(Parsed::Resume { id, body }) => {
+                    let reply = match body.get("replica").and_then(|r| r.as_usize()) {
+                        None => protocol::render_error(
+                            &id,
+                            "resume: missing 'replica' index",
+                        ),
+                        Some(i) => match resume_one(&shared, i) {
+                            Ok(r) => protocol::render_ok(
+                                &id,
+                                vec![("replica", Json::num(i as f64)), ("reply", r)],
+                            ),
+                            Err(e) => {
+                                protocol::render_error(&id, &format!("{e:#}"))
+                            }
+                        },
+                    };
+                    let _ = tx.send(reply);
+                }
+                Ok(Parsed::Model(req)) => {
+                    // session affinity: explicit-variant traffic sticks
+                    // to one replica (its model session stays hot
+                    // there); default-variant traffic spreads by id —
+                    // still deterministic, but load-balanced
+                    let affinity = match &req.variant {
+                        Some(v) => format!("v:{v}"),
+                        None => format!("r:{}", req.id),
+                    };
+                    let job = Job {
+                        raw: trimmed.to_string(),
+                        id: req.id.clone(),
+                        id_key: req.id.to_string(),
+                        kind: req.kind,
+                        affinity,
+                        attempt: 0,
+                        tried: Vec::new(),
+                        t0: Instant::now(),
+                        deadline: Instant::now() + shared.cfg.deadline,
+                    };
+                    dispatch(&ctx, job);
+                }
+            }
+        }
+        Ok(())
+    })();
+    // upstream readers poll this and exit, closing their replica
+    // connections — which propagates disconnect reclaim to replica-side
+    // decode slots, same as a direct client vanishing
+    ctx.alive.store(false, Ordering::SeqCst);
+    drop(tx);
+    let _ = writer.join();
+    res
+}
+
+/// Hand `job` to a replica: pick by affinity (excluding replicas it
+/// already failed on), connect/register/write, and on transport errors
+/// burn an attempt and try the next candidate. Exhausted budgets always
+/// produce a clean NDJSON error — never a hang.
+fn dispatch(ctx: &Arc<ClientCtx>, mut job: Job) {
+    let shared = &ctx.shared;
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            let _ = ctx
+                .tx
+                .send(protocol::render_error(&job.id, "router is shutting down"));
+            shared.stats.record_done(job.latency_ms(), false);
+            return;
+        }
+        if Instant::now() >= job.deadline {
+            let _ = ctx
+                .tx
+                .send(protocol::render_error(&job.id, "deadline exceeded"));
+            shared.stats.record_deadline_exceeded();
+            shared.stats.record_done(job.latency_ms(), false);
+            return;
+        }
+        let Some(r) = shared.pool.pick(&job.affinity, &job.tried) else {
+            let _ = ctx
+                .tx
+                .send(protocol::render_error(&job.id, "no healthy replica"));
+            shared.stats.record_done(job.latency_ms(), false);
+            return;
+        };
+        let up = match ctx.upstream(r) {
+            Ok(u) => u,
+            Err(e) => {
+                crate::debug!("route", "upstream {r} connect failed: {e:#}");
+                if shared.pool.record_failure(r) {
+                    shared.stats.record_breaker_open();
+                }
+                if !job.tried.contains(&r) {
+                    job.tried.push(r);
+                }
+                job.attempt += 1;
+                if job.attempt > shared.cfg.retries {
+                    let _ = ctx.tx.send(protocol::render_error(
+                        &job.id,
+                        "no healthy replica (connect failed)",
+                    ));
+                    shared.stats.record_done(job.latency_ms(), false);
+                    return;
+                }
+                shared.stats.record_retry(false);
+                // pace transport retries: an instant loop would burn the
+                // whole budget inside a sub-millisecond outage
+                std::thread::sleep(transport_retry_delay(shared, &job));
+                continue;
+            }
+        };
+        // register before writing: the reply may race back immediately
+        up.pending.lock().unwrap().insert(job.id_key.clone(), job.clone());
+        let wrote = {
+            let mut w = up.writer.lock().unwrap();
+            writeln!(&mut *w, "{}", job.raw).and_then(|_| w.flush()).is_ok()
+        };
+        if !wrote {
+            up.dead.store(true, Ordering::SeqCst);
+            up.pending.lock().unwrap().remove(&job.id_key);
+            if shared.pool.record_failure(r) {
+                shared.stats.record_breaker_open();
+            }
+            if !job.tried.contains(&r) {
+                job.tried.push(r);
+            }
+            job.attempt += 1;
+            if job.attempt > shared.cfg.retries {
+                let _ = ctx.tx.send(protocol::render_error(
+                    &job.id,
+                    "replica unreachable (write failed)",
+                ));
+                shared.stats.record_done(job.latency_ms(), false);
+                return;
+            }
+            shared.stats.record_retry(false);
+            std::thread::sleep(transport_retry_delay(shared, &job));
+            continue;
+        }
+        shared.stats.record_forward(r);
+        return;
+    }
+}
+
+/// Jittered backoff for transport-level retries, clipped so the sleep
+/// never overshoots the request's remaining deadline budget.
+fn transport_retry_delay(shared: &RouterShared, job: &Job) -> Duration {
+    let d = backoff_delay(
+        shared.cfg.retry_base,
+        shared.cfg.retry_cap,
+        (job.attempt.max(1) - 1) as u32,
+        job.jitter_seed(),
+    );
+    d.min(job.deadline.saturating_duration_since(Instant::now()))
+}
+
+/// Re-dispatch after a backoff delay without blocking the calling
+/// (upstream reader) thread. Retries are rare relative to traffic, so a
+/// short-lived timer thread per retry is the simple correct thing.
+fn dispatch_after(ctx: Arc<ClientCtx>, job: Job, delay: Duration) {
+    if delay.is_zero() {
+        dispatch(&ctx, job);
+        return;
+    }
+    std::thread::spawn(move || {
+        std::thread::sleep(delay);
+        dispatch(&ctx, job);
+    });
+}
+
+/// Drains one replica connection: match replies to pending jobs by id,
+/// forward real answers verbatim, convert sheds into scheduled retries,
+/// expire deadlines on idle ticks, and on connection loss fail score
+/// traffic over while failing generates fast.
+fn upstream_reader(ctx: Arc<ClientCtx>, up: Arc<Upstream>, stream: TcpStream) {
+    let shared = ctx.shared.clone();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let failure: Option<String> = loop {
+        if shared.shutdown.load(Ordering::SeqCst) || !ctx.alive.load(Ordering::SeqCst) {
+            break None;
+        }
+        if up.dead.load(Ordering::SeqCst) {
+            break Some("replica connection lost".into());
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break Some("replica closed connection".into()),
+            Ok(_) if line.ends_with('\n') => {
+                handle_replica_line(&ctx, &up, line.trim());
+                line.clear();
+            }
+            // bytes without a newline at EOF: a mid-line cut
+            Ok(_) => break Some("replica connection cut mid-line".into()),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // idle tick: partial bytes (if any) stay accumulated
+                expire_deadlines(&ctx, &up);
+            }
+            Err(e) => break Some(format!("replica connection error: {e}")),
+        }
+    };
+    up.dead.store(true, Ordering::SeqCst);
+    {
+        // unregister, but only our own entry (a reconnect may have
+        // already replaced it)
+        let mut map = ctx.upstreams.lock().unwrap();
+        if map.get(&up.replica).map(|u| Arc::ptr_eq(u, &up)).unwrap_or(false) {
+            map.remove(&up.replica);
+        }
+    }
+    match failure {
+        Some(msg) => fail_over_pending(&ctx, &up, &msg),
+        // client gone or router stopping: nobody left to answer
+        None => up.pending.lock().unwrap().clear(),
+    }
+}
+
+fn handle_replica_line(ctx: &Arc<ClientCtx>, up: &Arc<Upstream>, line: &str) {
+    let shared = &ctx.shared;
+    let Ok(j) = Json::parse(line) else {
+        // a real serve never emits unparseable lines; a stub might —
+        // pass-through keeps the router transparent
+        let _ = ctx.tx.send(line.to_string());
+        return;
+    };
+    let id_key = j.get("id").cloned().unwrap_or(Json::Null).to_string();
+    let Some(mut job) = up.pending.lock().unwrap().remove(&id_key) else {
+        // late reply for a request we already answered (deadline): drop
+        return;
+    };
+    let ok = j.get("ok") == Some(&Json::Bool(true));
+    let err = j.get("error").and_then(|e| e.as_str()).unwrap_or("");
+    let shed = !ok && (err == "overloaded" || err == "draining");
+    if !shed {
+        // a real answer — success or a genuine per-request error —
+        // forwarded byte-for-byte
+        if shared.pool.record_success(up.replica) {
+            shared.stats.record_breaker_close();
+        }
+        let _ = ctx.tx.send(line.to_string());
+        shared.stats.record_done(job.latency_ms(), ok);
+        return;
+    }
+    // shed: the work never started, so any op kind may retry. A
+    // `draining` replica won't re-admit until resumed — exclude it; an
+    // `overloaded` one asked us back, so it stays eligible.
+    if err == "draining" && !job.tried.contains(&up.replica) {
+        job.tried.push(up.replica);
+    }
+    job.attempt += 1;
+    if job.attempt > shared.cfg.retries || Instant::now() >= job.deadline {
+        // budget exhausted: the shed error itself is the clean answer
+        let _ = ctx.tx.send(line.to_string());
+        shared.stats.record_done(job.latency_ms(), false);
+        return;
+    }
+    let hint_ms = j.get("retry_after_ms").and_then(|v| v.as_f64());
+    let delay = match hint_ms {
+        Some(ms) => Duration::from_secs_f64(ms.max(0.0) / 1e3),
+        None => backoff_delay(
+            shared.cfg.retry_base,
+            shared.cfg.retry_cap,
+            (job.attempt - 1) as u32,
+            job.jitter_seed(),
+        ),
+    };
+    shared.stats.record_retry(hint_ms.is_some());
+    dispatch_after(ctx.clone(), job, delay);
+}
+
+/// Answer every pending job whose deadline passed with a clean error.
+/// Expiry also counts as a replica failure: a stalled replica that
+/// swallows requests without closing the socket must still trip the
+/// breaker.
+fn expire_deadlines(ctx: &Arc<ClientCtx>, up: &Arc<Upstream>) {
+    let now = Instant::now();
+    let expired: Vec<Job> = {
+        let mut g = up.pending.lock().unwrap();
+        let keys: Vec<String> = g
+            .iter()
+            .filter(|(_, j)| now >= j.deadline)
+            .map(|(k, _)| k.clone())
+            .collect();
+        keys.iter().filter_map(|k| g.remove(k)).collect()
+    };
+    if expired.is_empty() {
+        return;
+    }
+    let shared = &ctx.shared;
+    if shared.pool.record_failure(up.replica) {
+        shared.stats.record_breaker_open();
+    }
+    for job in expired {
+        let _ = ctx
+            .tx
+            .send(protocol::render_error(&job.id, "deadline exceeded"));
+        shared.stats.record_deadline_exceeded();
+        shared.stats.record_done(job.latency_ms(), false);
+    }
+}
+
+/// The upstream connection died with requests in flight: idempotent
+/// `score`s fail over to another replica; a mid-stream `generate` is not
+/// resumable (tokens may already have been decoded), so it gets a clean
+/// fail-fast error instead of a silent duplicate execution.
+fn fail_over_pending(ctx: &Arc<ClientCtx>, up: &Arc<Upstream>, msg: &str) {
+    let jobs: Vec<Job> = {
+        let mut g = up.pending.lock().unwrap();
+        g.drain().map(|(_, j)| j).collect()
+    };
+    let shared = &ctx.shared;
+    if shared.pool.record_failure(up.replica) {
+        shared.stats.record_breaker_open();
+    }
+    for mut job in jobs {
+        match job.kind {
+            OpKind::Score => {
+                if !job.tried.contains(&up.replica) {
+                    job.tried.push(up.replica);
+                }
+                job.attempt += 1;
+                if job.attempt > shared.cfg.retries {
+                    let _ = ctx.tx.send(protocol::render_error(&job.id, msg));
+                    shared.stats.record_done(job.latency_ms(), false);
+                    continue;
+                }
+                shared.stats.record_failover();
+                shared.stats.record_retry(false);
+                // short jittered dwell: if another replica is up the
+                // cost is ~ms; if the whole link blinked it keeps the
+                // retry budget from burning out inside the blink
+                let delay = backoff_delay(
+                    shared.cfg.retry_base,
+                    shared.cfg.retry_cap,
+                    (job.attempt.max(1) - 1) as u32,
+                    job.jitter_seed(),
+                );
+                dispatch_after(ctx.clone(), job, delay);
+            }
+            OpKind::Generate => {
+                let _ = ctx.tx.send(protocol::render_error(
+                    &job.id,
+                    &format!("replica failed mid-generate: {msg}"),
+                ));
+                shared.stats.record_done(job.latency_ms(), false);
+            }
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Child-process replica supervision for `repro route --spawn N`
+//! (DESIGN.md §Routing).
+//!
+//! Each replica slot gets a fixed local port (picked once by binding
+//! `:0` and dropping the listener) and runs `repro serve ... --addr
+//! 127.0.0.1:PORT` as a child process. A monitor thread per slot polls
+//! for exit and restarts the child with capped exponential backoff,
+//! jittered per slot; an uptime above [`STABLE_UPTIME`] resets the
+//! backoff, so a crash loop backs off but a one-off crash restarts
+//! fast. The port is stable across restarts, so the router's pool never
+//! re-addresses — the restarted replica simply starts answering probes
+//! again and re-enters rotation through the breaker's half-open path.
+//!
+//! [`Supervisor::kill`] SIGKILLs a child (std's `Child::kill` on Unix),
+//! which is exactly the chaos-test hook: no shutdown handshake, the
+//! socket just dies.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::pool::backoff_delay;
+
+/// Uptime after which a restart counts as "was stable": resets backoff.
+const STABLE_UPTIME: Duration = Duration::from_secs(5);
+/// Child exit poll period.
+const MONITOR_TICK: Duration = Duration::from_millis(100);
+
+/// What to spawn and how patiently.
+#[derive(Debug, Clone)]
+pub struct SpawnSpec {
+    /// the `repro` binary (tests use `env!("CARGO_BIN_EXE_repro")`;
+    /// the CLI uses `std::env::current_exe()`)
+    pub bin: PathBuf,
+    /// args after `serve`, minus `--addr` (the supervisor owns ports)
+    pub serve_args: Vec<String>,
+    pub count: usize,
+    /// budget for a fresh child to start accepting
+    pub ready_timeout: Duration,
+    /// restart backoff: base and cap of the jittered exponential
+    pub restart_base: Duration,
+    pub restart_cap: Duration,
+}
+
+impl Default for SpawnSpec {
+    fn default() -> SpawnSpec {
+        SpawnSpec {
+            bin: PathBuf::new(),
+            serve_args: Vec::new(),
+            count: 2,
+            ready_timeout: Duration::from_secs(10),
+            restart_base: Duration::from_millis(200),
+            restart_cap: Duration::from_secs(5),
+        }
+    }
+}
+
+struct Slot {
+    addr: String,
+    child: Mutex<Option<Child>>,
+}
+
+/// A supervised set of serve replicas. Dropping without [`Supervisor::stop`]
+/// leaks children; the router handle calls `stop` on shutdown.
+pub struct Supervisor {
+    spec: SpawnSpec,
+    slots: Vec<Arc<Slot>>,
+    stopping: Arc<AtomicBool>,
+    monitors: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Reserve a free local port: bind `:0`, read it back, drop the
+/// listener. Tiny race window before the child binds it, acceptable for
+/// local replicas.
+fn free_port() -> Result<u16> {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").context("probing free port")?;
+    Ok(l.local_addr()?.port())
+}
+
+fn launch(spec: &SpawnSpec, addr: &str) -> Result<Child> {
+    let mut cmd = Command::new(&spec.bin);
+    cmd.arg("serve").args(&spec.serve_args).arg("--addr").arg(addr);
+    cmd.stdin(Stdio::null()).stdout(Stdio::null());
+    // child logs are noise under test; opt in when debugging
+    if std::env::var("REPRO_ROUTE_CHILD_LOG").is_err() {
+        cmd.stderr(Stdio::null());
+    }
+    cmd.spawn().with_context(|| format!("spawning {:?} for {addr}", spec.bin))
+}
+
+/// Poll-connect until the child accepts or the budget runs out.
+fn wait_ready(addr: &str, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    let sa: std::net::SocketAddr = addr.parse().context("parsing replica addr")?;
+    loop {
+        match std::net::TcpStream::connect_timeout(&sa, Duration::from_millis(200)) {
+            Ok(_) => return Ok(()),
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(25))
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("replica {addr} never came up"))
+            }
+        }
+    }
+}
+
+impl Supervisor {
+    /// Spawn `spec.count` replicas, wait for each to accept, and start
+    /// their restart monitors.
+    pub fn spawn(spec: SpawnSpec) -> Result<Supervisor> {
+        anyhow::ensure!(spec.count > 0, "--spawn needs at least one replica");
+        let mut slots = Vec::with_capacity(spec.count);
+        for i in 0..spec.count {
+            let addr = format!("127.0.0.1:{}", free_port()?);
+            let child = launch(&spec, &addr)?;
+            wait_ready(&addr, spec.ready_timeout)
+                .with_context(|| format!("replica {i}"))?;
+            crate::info!("route", "spawned replica {i} on {addr}");
+            slots.push(Arc::new(Slot { addr, child: Mutex::new(Some(child)) }));
+        }
+        let sup = Supervisor {
+            spec,
+            slots,
+            stopping: Arc::new(AtomicBool::new(false)),
+            monitors: Mutex::new(Vec::new()),
+        };
+        let mut monitors = Vec::with_capacity(sup.slots.len());
+        for (i, slot) in sup.slots.iter().enumerate() {
+            let slot = slot.clone();
+            let spec = sup.spec.clone();
+            let stopping = sup.stopping.clone();
+            monitors.push(std::thread::spawn(move || {
+                monitor(i, slot, spec, stopping)
+            }));
+        }
+        *sup.monitors.lock().unwrap() = monitors;
+        Ok(sup)
+    }
+
+    /// Replica addresses, index-aligned with the router's pool.
+    pub fn addrs(&self) -> Vec<String> {
+        self.slots.iter().map(|s| s.addr.clone()).collect()
+    }
+
+    /// SIGKILL replica `i`'s current child (chaos hook). The monitor
+    /// notices the exit and restarts it with backoff.
+    pub fn kill(&self, i: usize) -> Result<()> {
+        let slot = self.slots.get(i).context("no such replica slot")?;
+        let mut g = slot.child.lock().unwrap();
+        let child = g.as_mut().context("replica has no live child")?;
+        child.kill().context("killing child")?;
+        crate::info!("route", "killed replica {i} ({})", slot.addr);
+        Ok(())
+    }
+
+    /// Stop monitoring, kill every child, reap them, join monitors.
+    pub fn stop(self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        for slot in &self.slots {
+            let mut g = slot.child.lock().unwrap();
+            if let Some(mut child) = g.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+        let monitors = std::mem::take(&mut *self.monitors.lock().unwrap());
+        for m in monitors {
+            let _ = m.join();
+        }
+    }
+}
+
+/// Watch one slot: reap exits and relaunch with capped exponential
+/// backoff (reset after [`STABLE_UPTIME`] of good behavior). Launch
+/// failures burn an attempt and back off the same way.
+fn monitor(i: usize, slot: Arc<Slot>, spec: SpawnSpec, stopping: Arc<AtomicBool>) {
+    let mut attempt: u32 = 0;
+    let mut started = Instant::now();
+    loop {
+        if stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        let exited = {
+            let mut g = slot.child.lock().unwrap();
+            match g.as_mut() {
+                None => true, // launch failed last round; retry below
+                Some(child) => match child.try_wait() {
+                    Ok(Some(status)) => {
+                        crate::warn_!(
+                            "route",
+                            "replica {i} ({}) exited: {status}",
+                            slot.addr
+                        );
+                        g.take();
+                        true
+                    }
+                    Ok(None) => false,
+                    Err(e) => {
+                        crate::warn_!("route", "replica {i} wait error: {e}");
+                        false
+                    }
+                },
+            }
+        };
+        if !exited {
+            std::thread::sleep(MONITOR_TICK);
+            continue;
+        }
+        if started.elapsed() >= STABLE_UPTIME {
+            attempt = 0;
+        }
+        let delay = backoff_delay(
+            spec.restart_base,
+            spec.restart_cap,
+            attempt,
+            0x5e7e_u64 ^ i as u64,
+        );
+        attempt = attempt.saturating_add(1);
+        crate::info!(
+            "route",
+            "restarting replica {i} ({}) in {:.0} ms (attempt {attempt})",
+            slot.addr,
+            delay.as_secs_f64() * 1e3
+        );
+        // interruptible backoff sleep
+        let until = Instant::now() + delay;
+        while Instant::now() < until {
+            if stopping.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(MONITOR_TICK.min(Duration::from_millis(50)));
+        }
+        if stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        started = Instant::now();
+        match launch(&spec, &slot.addr) {
+            Ok(child) => {
+                if let Err(e) = wait_ready(&slot.addr, spec.ready_timeout) {
+                    crate::warn_!("route", "replica {i} restart not ready: {e:#}");
+                    // leave the child in place; if it's wedged the next
+                    // probe failure keeps it out of rotation and exit
+                    // detection will recycle it
+                }
+                *slot.child.lock().unwrap() = Some(child);
+                crate::info!("route", "replica {i} ({}) restarted", slot.addr);
+            }
+            Err(e) => {
+                crate::warn_!("route", "replica {i} relaunch failed: {e:#}");
+                // slot stays empty; loop sees None and backs off again
+            }
+        }
+    }
+}

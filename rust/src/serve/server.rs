@@ -26,8 +26,15 @@
 //! iteration, and finished or disconnected slots free immediately — score
 //! traffic still coalesces into lockstep batches alongside. Admission
 //! control bounds the queue: past `queue_cap` pending requests, new model
-//! ops are answered with an `overloaded` error instead of queueing
+//! ops are answered with an `overloaded` error (carrying a
+//! `retry_after_ms` hint derived from queue depth) instead of queueing
 //! without bound.
+//!
+//! Three robustness hooks serve the router tier (DESIGN.md §Routing): a
+//! `ping` op for health probes, a `drain`/`resume` pair for zero-downtime
+//! rolling restarts (stop admitting, quiesce in-flight work, answer —
+//! then re-admit), and an optional per-connection idle read timeout so a
+//! stalled client cannot pin a reader thread forever.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -63,6 +70,13 @@ pub struct ServeCfg {
     /// admission-control bound: model ops past this many pending queue
     /// entries are shed with an `overloaded` error instead of queueing
     pub queue_cap: usize,
+    /// per-connection idle read timeout (None = off, the default). A
+    /// connection that sends no bytes for this long *while owing no
+    /// replies* is dropped, so a stalled client cannot pin its reader
+    /// thread — and through PR 6's disconnect reclaim, its decode slot —
+    /// forever. Connections quietly waiting on an in-flight request are
+    /// never timed out.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for ServeCfg {
@@ -75,7 +89,29 @@ impl Default for ServeCfg {
             default_variant: None,
             metrics_name: None,
             queue_cap: 1024,
+            idle_timeout: None,
         }
+    }
+}
+
+/// RAII gauge: increments on creation, decrements on drop. [`Pending`]
+/// carries one for the server-wide in-flight count (what `drain` waits
+/// on) and one for its connection's owed-reply count (what the idle
+/// timeout consults) — tying the decrement to `Drop` means every exit
+/// path (replied, errored, client vanished, batch discarded) balances
+/// the gauge without per-site bookkeeping.
+struct GaugeGuard(Arc<AtomicUsize>);
+
+impl GaugeGuard {
+    fn new(gauge: &Arc<AtomicUsize>) -> GaugeGuard {
+        gauge.fetch_add(1, Ordering::SeqCst);
+        GaugeGuard(gauge.clone())
+    }
+}
+
+impl Drop for GaugeGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -88,12 +124,23 @@ struct Pending {
     /// can't observe the peer closing, so in-flight decode slots poll
     /// this to reclaim slots whose client vanished mid-decode
     alive: Arc<AtomicBool>,
+    /// server-wide in-flight gauge (queued + executing); `drain` waits
+    /// for it to reach zero
+    _inflight: GaugeGuard,
+    /// this connection's owed-reply gauge; the idle timeout only fires
+    /// when it reads zero
+    _conn_owed: GaugeGuard,
 }
 
 struct Shared {
     queue: Mutex<KeyedBatcher<BatchKey, Pending>>,
     wake: Condvar,
     shutdown: AtomicBool,
+    /// `drain` op in effect: model ops are shed with a `draining` error
+    /// (retryable elsewhere — the work never started); cleared by `resume`
+    draining: AtomicBool,
+    /// queued + executing model requests (see [`GaugeGuard`])
+    inflight: Arc<AtomicUsize>,
     /// workers whose engine factory succeeded (a failed worker only
     /// error-drains the queue once no healthy sibling remains)
     healthy: AtomicUsize,
@@ -171,6 +218,8 @@ impl Server {
             queue: Mutex::new(KeyedBatcher::new(cfg.max_batch, cfg.max_wait)),
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            inflight: Arc::new(AtomicUsize::new(0)),
             healthy: AtomicUsize::new(n_workers),
             stats: ServeStats::new(),
             metrics: Mutex::new(metrics),
@@ -224,14 +273,38 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     shared.request_shutdown();
 }
 
+/// Upper bound on how long a `drain` op may block its connection before
+/// answering `drained:false` — a wedged engine must not hang the caller.
+const DRAIN_WAIT_MAX: Duration = Duration::from_secs(30);
+
+/// `retry_after_ms` attached to the `overloaded` shed: a queue-depth
+/// estimate of when capacity frees — batches queued ahead of the caller
+/// times the flush cadence, clamped to a sane retry delay. The router's
+/// backoff honors this instead of blind exponential guessing.
+fn retry_after_hint(pending: usize, cfg: &ServeCfg) -> f64 {
+    let per_batch = cfg.max_batch.max(1);
+    let batches_ahead = (pending + per_batch - 1) / per_batch;
+    let per_batch_ms = (cfg.max_wait.as_secs_f64() * 1e3).max(1.0);
+    (batches_ahead as f64 * per_batch_ms).clamp(10.0, 2000.0)
+}
+
 fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     stream.set_nodelay(true).ok();
+    if shared.cfg.idle_timeout.is_some() {
+        stream
+            .set_read_timeout(shared.cfg.idle_timeout)
+            .context("setting idle timeout")?;
+    }
     let peer = stream.peer_addr().ok();
     crate::debug!("serve", "connection from {peer:?}");
     let (tx, rx) = mpsc::channel::<String>();
     // cleared when the reader exits, however it exits — decode slots
     // opened for this connection poll it to free themselves
     let alive = Arc::new(AtomicBool::new(true));
+    // replies this connection is still owed; the idle timeout never
+    // fires while nonzero (a client quietly awaiting a long generate is
+    // not stalled)
+    let conn_owed = Arc::new(AtomicUsize::new(0));
 
     // writer half: drains the response channel until every sender is gone
     let writer_stream = stream.try_clone().context("cloning stream")?;
@@ -250,9 +323,31 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     let res = (|| -> Result<()> {
-    loop {
+    'conn: loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
+        // Read one line, riding out idle timeouts while replies are owed.
+        // A timed-out `read_line` keeps any partial bytes accumulated in
+        // `line`, so a slow-but-live client trickling a long request is
+        // never corrupted — only a connection owing nothing and sending
+        // nothing for the full window is dropped.
+        let n = loop {
+            match reader.read_line(&mut line) {
+                Ok(n) => break n,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if conn_owed.load(Ordering::SeqCst) == 0 {
+                        crate::debug!("serve", "idle timeout, dropping {peer:?}");
+                        break 'conn;
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        if n == 0 {
             break; // EOF
         }
         let trimmed = line.trim();
@@ -279,6 +374,50 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                 );
                 break;
             }
+            Ok(Parsed::Ping(id)) => {
+                let _ = tx.send(protocol::render_ok(
+                    &id,
+                    vec![
+                        ("pong", Json::Bool(true)),
+                        ("draining", Json::Bool(shared.draining.load(Ordering::SeqCst))),
+                    ],
+                ));
+            }
+            Ok(Parsed::Drain { id, .. }) => {
+                // stop admitting (model ops shed with a retryable
+                // `draining` error), then answer once in-flight work —
+                // queued and executing, decode slots included — quiesces
+                shared.draining.store(true, Ordering::SeqCst);
+                crate::info!("serve", "drain requested by {peer:?}");
+                let t0 = Instant::now();
+                let drained = loop {
+                    if shared.inflight.load(Ordering::SeqCst) == 0 {
+                        break true;
+                    }
+                    if t0.elapsed() > DRAIN_WAIT_MAX {
+                        break false;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                };
+                let _ = tx.send(protocol::render_ok(
+                    &id,
+                    vec![
+                        ("drained", Json::Bool(drained)),
+                        (
+                            "inflight",
+                            Json::num(shared.inflight.load(Ordering::SeqCst) as f64),
+                        ),
+                    ],
+                ));
+            }
+            Ok(Parsed::Resume { id, .. }) => {
+                shared.draining.store(false, Ordering::SeqCst);
+                crate::info!("serve", "resumed after drain (by {peer:?})");
+                let _ = tx.send(protocol::render_ok(
+                    &id,
+                    vec![("draining", Json::Bool(false))],
+                ));
+            }
             Ok(Parsed::Model(req)) => {
                 let variant = req
                     .variant
@@ -298,18 +437,26 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                     enqueued: Instant::now(),
                     reply: tx.clone(),
                     alive: alive.clone(),
+                    _inflight: GaugeGuard::new(&shared.inflight),
+                    _conn_owed: GaugeGuard::new(&conn_owed),
                 };
                 let now = pending.enqueued;
-                // check the flag UNDER the queue lock: workers only exit
+                // check the flags UNDER the queue lock: workers only exit
                 // after a force-drain under this lock with the flag set,
                 // so an accepted push is guaranteed a living worker; the
                 // same lock makes the queue_cap check race-free
                 let rejected = {
                     let mut q = shared.queue.lock().unwrap();
                     if shared.shutdown.load(Ordering::SeqCst) {
-                        Some((pending, "server is shutting down", false))
+                        Some((pending, "server is shutting down", None, false))
+                    } else if shared.draining.load(Ordering::SeqCst) {
+                        // shed, not queued: the work never started, so
+                        // callers (the router included) may retry it
+                        // elsewhere regardless of op kind
+                        Some((pending, "draining", None, false))
                     } else if q.pending() >= shared.cfg.queue_cap {
-                        Some((pending, "overloaded", true))
+                        let hint = retry_after_hint(q.pending(), &shared.cfg);
+                        Some((pending, "overloaded", Some(hint), true))
                     } else {
                         q.push(key, pending, now);
                         None
@@ -317,8 +464,14 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                 };
                 match rejected {
                     None => shared.wake.notify_one(),
-                    Some((p, msg, overloaded)) => {
-                        let _ = p.reply.send(protocol::render_error(&p.req.id, msg));
+                    Some((p, msg, hint, overloaded)) => {
+                        let extra = match hint {
+                            Some(ms) => vec![("retry_after_ms", Json::num(ms))],
+                            None => vec![],
+                        };
+                        let _ = p
+                            .reply
+                            .send(protocol::render_error_with(&p.req.id, msg, extra));
                         if overloaded {
                             shared.stats.record_overloaded();
                         } else {
@@ -564,5 +717,35 @@ fn drain_with_error(shared: &Shared, msg: &str) {
             let _ = p.reply.send(protocol::render_error(&p.req.id, msg));
             shared.stats.record_rejected();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_after_hint_scales_with_depth_and_clamps() {
+        let cfg = ServeCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(15),
+            ..ServeCfg::default()
+        };
+        assert_eq!(retry_after_hint(1, &cfg), 15.0); // one batch ahead
+        assert_eq!(retry_after_hint(16, &cfg), 30.0); // two batches ahead
+        assert!(retry_after_hint(0, &cfg) >= 10.0, "floor holds");
+        assert_eq!(retry_after_hint(100_000, &cfg), 2000.0, "ceiling holds");
+    }
+
+    #[test]
+    fn gauge_guard_balances_on_drop() {
+        let g = Arc::new(AtomicUsize::new(0));
+        let a = GaugeGuard::new(&g);
+        let b = GaugeGuard::new(&g);
+        assert_eq!(g.load(Ordering::SeqCst), 2);
+        drop(a);
+        assert_eq!(g.load(Ordering::SeqCst), 1);
+        drop(b);
+        assert_eq!(g.load(Ordering::SeqCst), 0);
     }
 }

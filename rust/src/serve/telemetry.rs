@@ -202,6 +202,132 @@ impl ServeStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// router telemetry (DESIGN.md §Routing)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct RouteInner {
+    latencies_ms: Vec<f64>,
+    latency_next: usize,
+    requests: u64,
+    errors: u64,
+    /// re-dispatches after a shed or transport failure (idempotent ops)
+    retries: u64,
+    /// retries whose delay came from a server `retry_after_ms` hint
+    hinted_backoffs: u64,
+    /// requests moved off a replica that died mid-flight
+    failovers: u64,
+    /// requests answered with a clean error because their budget ran out
+    deadline_exceeded: u64,
+    breaker_opens: u64,
+    breaker_closes: u64,
+    /// forwards per replica index — the affinity/rehash tests read this
+    per_replica: Vec<u64>,
+}
+
+/// Thread-shared router counters, mirroring [`ServeStats`]'s shape:
+/// `&self` methods over a private lock, a bounded latency ring, and one
+/// `snapshot()` feeding the router's `stats` op.
+pub struct RouteStats {
+    inner: Mutex<RouteInner>,
+    t0: Instant,
+}
+
+impl RouteStats {
+    pub fn new(replicas: usize) -> RouteStats {
+        RouteStats {
+            inner: Mutex::new(RouteInner {
+                per_replica: vec![0; replicas],
+                ..RouteInner::default()
+            }),
+            t0: Instant::now(),
+        }
+    }
+
+    /// One request line handed to a replica (counted per attempt).
+    pub fn record_forward(&self, replica: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(n) = g.per_replica.get_mut(replica) {
+            *n += 1;
+        }
+    }
+
+    /// One request answered to the client (however many attempts it took).
+    pub fn record_done(&self, latency_ms: f64, ok: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        if !ok {
+            g.errors += 1;
+        }
+        if g.latencies_ms.len() < LATENCY_RING {
+            g.latencies_ms.push(latency_ms);
+        } else {
+            let i = g.latency_next;
+            g.latencies_ms[i % LATENCY_RING] = latency_ms;
+        }
+        g.latency_next += 1;
+    }
+
+    pub fn record_retry(&self, hinted: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.retries += 1;
+        if hinted {
+            g.hinted_backoffs += 1;
+        }
+    }
+
+    pub fn record_failover(&self) {
+        self.inner.lock().unwrap().failovers += 1;
+    }
+
+    pub fn record_deadline_exceeded(&self) {
+        self.inner.lock().unwrap().deadline_exceeded += 1;
+    }
+
+    pub fn record_breaker_open(&self) {
+        self.inner.lock().unwrap().breaker_opens += 1;
+    }
+
+    pub fn record_breaker_close(&self) {
+        self.inner.lock().unwrap().breaker_closes += 1;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let uptime = self.t0.elapsed().as_secs_f64();
+        let (p50, p90, p99) = if g.latencies_ms.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                quantile(&g.latencies_ms, 0.50),
+                quantile(&g.latencies_ms, 0.90),
+                quantile(&g.latencies_ms, 0.99),
+            )
+        };
+        let per_replica: Vec<f64> = g.per_replica.iter().map(|&n| n as f64).collect();
+        Json::obj(vec![
+            ("uptime_s", Json::num(uptime)),
+            ("requests", Json::num(g.requests as f64)),
+            ("errors", Json::num(g.errors as f64)),
+            ("retries", Json::num(g.retries as f64)),
+            ("hinted_backoffs", Json::num(g.hinted_backoffs as f64)),
+            ("failovers", Json::num(g.failovers as f64)),
+            ("deadline_exceeded", Json::num(g.deadline_exceeded as f64)),
+            ("breaker_opens", Json::num(g.breaker_opens as f64)),
+            ("breaker_closes", Json::num(g.breaker_closes as f64)),
+            ("latency_p50_ms", Json::num(p50)),
+            ("latency_p90_ms", Json::num(p90)),
+            ("latency_p99_ms", Json::num(p99)),
+            ("forwards_per_replica", Json::arr_f64(&per_replica)),
+        ])
+    }
+}
+
 fn zero_if_nan(x: f64) -> f64 {
     if x.is_nan() {
         0.0
@@ -280,6 +406,37 @@ mod tests {
         assert_eq!(j.get("errors").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("latency_p50_ms").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn route_stats_counters_and_snapshot() {
+        let s = RouteStats::new(2);
+        s.record_forward(0);
+        s.record_forward(1);
+        s.record_forward(1);
+        s.record_forward(9); // out-of-range replica index is ignored
+        s.record_done(5.0, true);
+        s.record_done(8.0, false);
+        s.record_retry(true);
+        s.record_retry(false);
+        s.record_failover();
+        s.record_deadline_exceeded();
+        s.record_breaker_open();
+        s.record_breaker_close();
+        let j = s.snapshot();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("errors").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("retries").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("hinted_backoffs").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("failovers").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("deadline_exceeded").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("breaker_opens").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("breaker_closes").unwrap().as_f64(), Some(1.0));
+        let Json::Arr(per) = j.get("forwards_per_replica").unwrap() else {
+            panic!("not an array")
+        };
+        let per: Vec<f64> = per.iter().filter_map(|v| v.as_f64()).collect();
+        assert_eq!(per, vec![1.0, 2.0]);
     }
 
     #[test]

@@ -1,0 +1,637 @@
+//! End-to-end router tests (DESIGN.md §Routing): byte-exact pass-through
+//! against a stub replica, routed mock fleets, retry/backoff on sheds,
+//! drain/resume rolling-restart cycles, transport chaos through the
+//! [`ChaosProxy`], and a real SIGKILL failover test against supervised
+//! child `repro serve --mock` processes.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use spectron::serve::route::pool::rendezvous_pick;
+use spectron::serve::{
+    ChaosPlan, ChaosProxy, MockEngine, RouteCfg, Router, RouterHandle, ServeCfg,
+    Server, ServerHandle, SpawnSpec, Supervisor,
+};
+use spectron::util::json::Json;
+
+/// Line client with a read timeout so a router bug fails instead of
+/// hanging; `recv_raw` exposes the exact bytes for identity checks.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: impl std::net::ToSocketAddrs) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .expect("read timeout");
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone")),
+            writer: stream,
+        }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+    }
+
+    fn recv_raw(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "connection closed unexpectedly");
+        line.trim_end_matches('\n').to_string()
+    }
+
+    fn recv(&mut self) -> Json {
+        let raw = self.recv_raw();
+        Json::parse(&raw).expect("response is json")
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+}
+
+const PONG: &str = r#"{"ok":true,"pong":true,"draining":false}"#;
+
+/// A scripted replica: every non-empty line goes through `handler`;
+/// `Some(reply)` is written back verbatim, `None` drops the connection.
+/// Records every received line (probes included) in `seen`.
+struct StubReplica {
+    addr: String,
+    seen: Arc<Mutex<Vec<String>>>,
+    stop: Arc<AtomicBool>,
+}
+
+fn stub_replica<F>(handler: F) -> StubReplica
+where
+    F: Fn(&str) -> Option<String> + Send + Sync + 'static,
+{
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind stub");
+    let addr = listener.local_addr().unwrap().to_string();
+    listener.set_nonblocking(true).expect("nonblocking");
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let handler = Arc::new(handler);
+    {
+        let (seen, stop) = (seen.clone(), stop.clone());
+        std::thread::spawn(move || loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match listener.accept() {
+                Ok((conn, _)) => {
+                    let (seen, stop, handler) =
+                        (seen.clone(), stop.clone(), handler.clone());
+                    std::thread::spawn(move || {
+                        conn.set_read_timeout(Some(Duration::from_millis(50))).ok();
+                        let mut w = conn.try_clone().expect("clone");
+                        let mut reader = BufReader::new(conn);
+                        let mut line = String::new();
+                        loop {
+                            if stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            match reader.read_line(&mut line) {
+                                Ok(0) => return,
+                                Ok(_) if line.ends_with('\n') => {
+                                    let t = line.trim().to_string();
+                                    line.clear();
+                                    if t.is_empty() {
+                                        continue;
+                                    }
+                                    seen.lock().unwrap().push(t.clone());
+                                    match handler(&t) {
+                                        Some(reply) => {
+                                            if writeln!(w, "{reply}")
+                                                .and_then(|_| w.flush())
+                                                .is_err()
+                                            {
+                                                return;
+                                            }
+                                        }
+                                        None => return, // scripted drop
+                                    }
+                                }
+                                Ok(_) => {} // partial line, keep reading
+                                Err(e)
+                                    if matches!(
+                                        e.kind(),
+                                        std::io::ErrorKind::WouldBlock
+                                            | std::io::ErrorKind::TimedOut
+                                    ) => {}
+                                Err(_) => return,
+                            }
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        });
+    }
+    StubReplica { addr, seen, stop }
+}
+
+fn mock_server(max_batch: usize, max_wait: Duration) -> ServerHandle {
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch,
+        max_wait,
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+        idle_timeout: None,
+        queue_cap: 1024,
+    };
+    Server::spawn(
+        cfg,
+        MockEngine::factory(Duration::ZERO, Arc::new(Mutex::new(Vec::new()))),
+    )
+    .expect("spawn mock server")
+}
+
+/// Router config tuned for tests: fast probes, patient retries.
+fn test_cfg() -> RouteCfg {
+    let mut cfg = RouteCfg {
+        addr: "127.0.0.1:0".into(),
+        retries: 8,
+        deadline: Duration::from_secs(10),
+        retry_base: Duration::from_millis(20),
+        retry_cap: Duration::from_millis(100),
+        health_interval: Duration::from_millis(25),
+        probe_timeout: Duration::from_millis(500),
+        connect_timeout: Duration::from_millis(500),
+        ..RouteCfg::default()
+    };
+    cfg.breaker.fail_threshold = 2;
+    cfg.breaker.open_base = Duration::from_millis(50);
+    cfg
+}
+
+fn router_over(addrs: Vec<String>, cfg: RouteCfg) -> RouterHandle {
+    Router::spawn(cfg, addrs, None).expect("spawn router")
+}
+
+fn stat(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .unwrap_or_else(|| panic!("stat {key} missing in {j}"))
+        .as_f64()
+        .unwrap()
+}
+
+fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+#[test]
+fn routed_replies_are_byte_identical_to_direct_ones() {
+    // the stub answers with deliberately odd (but valid-JSON) bytes the
+    // router would never produce itself; any re-rendering shows up as a
+    // byte diff. The error reply is a *genuine* per-request error (not a
+    // shed), so it must be forwarded, not retried.
+    const WEIRD_OK: &str =
+        r#"{ "id":"a" ,"ok":true,"nll": 1.50,  "note":"  spaced  out  " }"#;
+    const WEIRD_ERR: &str = r#"{"id":"b","ok":false,"error":"model exploded (kept verbatim)"}"#;
+    let route_reply = |line: &str| {
+        if line.contains(r#""op":"ping""#) {
+            Some(PONG.to_string())
+        } else if line.contains(r#""id":"a""#) {
+            Some(WEIRD_OK.to_string())
+        } else if line.contains(r#""id":"b""#) {
+            Some(WEIRD_ERR.to_string())
+        } else {
+            None
+        }
+    };
+    let req_a = r#"{"id":"a","op":"score","text":"one two"}"#;
+    let req_b = r#"{"id":"b","op":"generate","prompt":"x","max_tokens":3}"#;
+
+    // direct transcript
+    let direct = stub_replica(route_reply);
+    let mut c = Client::connect(&direct.addr as &str);
+    c.send(req_a);
+    let direct_a = c.recv_raw();
+    c.send(req_b);
+    let direct_b = c.recv_raw();
+    assert_eq!(direct_a, WEIRD_OK);
+    assert_eq!(direct_b, WEIRD_ERR);
+
+    // routed transcript — and routed *through a fault-free chaos proxy*,
+    // which pins the proxy's transparency at the same time
+    let routed = stub_replica(route_reply);
+    let proxy = ChaosProxy::spawn(&routed.addr, ChaosPlan::new()).expect("proxy");
+    let handle = router_over(vec![proxy.addr.to_string()], test_cfg());
+    let mut c = Client::connect(handle.addr);
+    c.send(req_a);
+    assert_eq!(c.recv_raw(), direct_a, "ok reply must pass through verbatim");
+    c.send(req_b);
+    assert_eq!(c.recv_raw(), direct_b, "error reply must pass through verbatim");
+
+    // the request lines the replica saw are byte-identical too
+    let model_lines = |seen: &Arc<Mutex<Vec<String>>>| -> Vec<String> {
+        seen.lock()
+            .unwrap()
+            .iter()
+            .filter(|l| !l.contains(r#""op":"ping""#))
+            .cloned()
+            .collect()
+    };
+    assert_eq!(model_lines(&routed.seen), model_lines(&direct.seen));
+
+    handle.shutdown();
+    proxy.stop();
+    direct.stop.store(true, Ordering::SeqCst);
+    routed.stop.store(true, Ordering::SeqCst);
+}
+
+#[test]
+fn router_parse_errors_match_serve_parse_errors() {
+    // local router-side errors use the same renderer + messages as
+    // serve, so even the failure surface is protocol-compatible
+    let server = mock_server(4, Duration::from_millis(5));
+    let mut direct = Client::connect(server.addr);
+    direct.send("this is not json");
+    let direct_bad = direct.recv_raw();
+    direct.send(r#"{"id":1,"op":"fly"}"#);
+    let direct_unknown = direct.recv_raw();
+
+    let handle = router_over(vec![server.addr.to_string()], test_cfg());
+    let mut routed = Client::connect(handle.addr);
+    routed.send("this is not json");
+    assert_eq!(routed.recv_raw(), direct_bad);
+    routed.send(r#"{"id":1,"op":"fly"}"#);
+    assert_eq!(routed.recv_raw(), direct_unknown);
+
+    handle.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn routes_across_two_replicas_and_answers_everything() {
+    let (s0, s1) = (
+        mock_server(4, Duration::from_millis(5)),
+        mock_server(4, Duration::from_millis(5)),
+    );
+    let handle = router_over(
+        vec![s0.addr.to_string(), s1.addr.to_string()],
+        test_cfg(),
+    );
+    let mut c = Client::connect(handle.addr);
+
+    // router-level ping and stats answer locally
+    let r = c.roundtrip(r#"{"id":"p","op":"ping"}"#);
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("healthy").unwrap().as_usize(), Some(2));
+
+    // default-variant traffic spreads by id, every request answered once
+    let n = 40;
+    for i in 0..n {
+        c.send(&format!(r#"{{"id":{i},"op":"score","text":"w{i}"}}"#));
+    }
+    let mut got = HashMap::new();
+    for _ in 0..n {
+        let r = c.recv();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        *got.entry(r.get("id").unwrap().as_usize().unwrap()).or_insert(0) += 1;
+    }
+    assert_eq!(got.len(), n, "every id answered exactly once");
+
+    let r = c.roundtrip(r#"{"id":"s","op":"stats"}"#);
+    let stats = r.get("stats").unwrap();
+    assert_eq!(stat(stats, "requests") as usize, n);
+    assert_eq!(stat(stats, "errors") as usize, 0);
+    let per = match stats.get("forwards_per_replica") {
+        Some(Json::Arr(a)) => a.iter().map(|v| v.as_f64().unwrap()).collect::<Vec<_>>(),
+        other => panic!("forwards_per_replica missing: {other:?}"),
+    };
+    assert_eq!(per.len(), 2);
+    assert!(
+        per[0] >= 5.0 && per[1] >= 5.0,
+        "40 distinct ids should spread across both replicas, got {per:?}"
+    );
+
+    // explicit-variant traffic pins to one replica (session affinity)
+    let before = per.clone();
+    for i in 0..10 {
+        c.send(&format!(
+            r#"{{"id":"v{i}","op":"score","text":"x","variant":"mock"}}"#
+        ));
+    }
+    for _ in 0..10 {
+        let r = c.recv();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    }
+    let r = c.roundtrip(r#"{"id":"s2","op":"stats"}"#);
+    let stats = r.get("stats").unwrap();
+    let after = match stats.get("forwards_per_replica") {
+        Some(Json::Arr(a)) => a.iter().map(|v| v.as_f64().unwrap()).collect::<Vec<_>>(),
+        _ => unreachable!(),
+    };
+    let deltas: Vec<f64> = after.iter().zip(&before).map(|(a, b)| a - b).collect();
+    assert!(
+        deltas.contains(&10.0) && deltas.contains(&0.0),
+        "same-variant requests must all land on one replica, got {deltas:?}"
+    );
+
+    handle.shutdown();
+    s0.shutdown();
+    s1.shutdown();
+}
+
+#[test]
+fn overloaded_shed_is_retried_honoring_the_hint() {
+    let attempts = Arc::new(AtomicUsize::new(0));
+    let stub = {
+        let attempts = attempts.clone();
+        stub_replica(move |line| {
+            if line.contains(r#""op":"ping""#) {
+                return Some(PONG.to_string());
+            }
+            // first attempt: shed with a hint; second: serve it
+            if attempts.fetch_add(1, Ordering::SeqCst) == 0 {
+                Some(
+                    r#"{"id":7,"ok":false,"error":"overloaded","retry_after_ms":40}"#
+                        .to_string(),
+                )
+            } else {
+                Some(r#"{"id":7,"ok":true,"nll":2.0,"tokens":2.0}"#.to_string())
+            }
+        })
+    };
+    let handle = router_over(vec![stub.addr.clone()], test_cfg());
+    let mut c = Client::connect(handle.addr);
+    let t0 = Instant::now();
+    let r = c.roundtrip(r#"{"id":7,"op":"score","text":"a b"}"#);
+    // the shed never reaches the client — only the retried success does
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("nll").unwrap().as_f64(), Some(2.0));
+    assert!(
+        t0.elapsed() >= Duration::from_millis(35),
+        "retry_after_ms hint not honored: answered in {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(attempts.load(Ordering::SeqCst), 2, "exactly one retry");
+
+    let stats = handle.shutdown();
+    assert_eq!(stat(&stats, "hinted_backoffs") as usize, 1, "{stats}");
+    stub.stop.store(true, Ordering::SeqCst);
+}
+
+#[test]
+fn drain_resume_cycle_keeps_serving_and_syncs_direct_drains() {
+    let (s0, s1) = (
+        mock_server(4, Duration::from_millis(5)),
+        mock_server(4, Duration::from_millis(5)),
+    );
+    let cfg = test_cfg();
+    let health_interval = cfg.health_interval;
+    let handle = router_over(vec![s0.addr.to_string(), s1.addr.to_string()], cfg);
+    let mut c = Client::connect(handle.addr);
+
+    // drain replica 0 through the router: it leaves rotation healthy
+    let r = c.roundtrip(r#"{"id":1,"op":"drain","replica":0}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(
+        r.get("reply").unwrap().get("drained"),
+        Some(&Json::Bool(true)),
+        "{r}"
+    );
+    assert_eq!(handle.pool().healthy_count(), 1);
+
+    // traffic keeps flowing on the survivor — zero errors during the
+    // rolling-restart window
+    for i in 0..10 {
+        let r = c.roundtrip(&format!(r#"{{"id":{i},"op":"score","text":"w"}}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    }
+
+    // resume: back in rotation
+    let r = c.roundtrip(r#"{"id":2,"op":"resume","replica":0}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(handle.pool().healthy_count(), 2);
+
+    // a drain issued DIRECTLY on a replica (not via the router) is
+    // picked up from the pong's draining flag by the prober...
+    let mut direct = Client::connect(s1.addr);
+    let r = direct.roundtrip(r#"{"id":3,"op":"drain"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    wait_until("prober to see the direct drain", health_interval * 40, || {
+        handle.pool().healthy_count() == 1
+    });
+    // ...and so is the direct resume
+    let r = direct.roundtrip(r#"{"id":4,"op":"resume"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    wait_until("prober to see the direct resume", health_interval * 40, || {
+        handle.pool().healthy_count() == 2
+    });
+
+    handle.shutdown();
+    s0.shutdown();
+    s1.shutdown();
+}
+
+#[test]
+fn chaos_proxy_outage_fails_generates_fast_and_scores_over() {
+    // one mock replica behind the chaos proxy; slow batching window so a
+    // request is reliably in flight when the link is cut
+    let server = mock_server(64, Duration::from_millis(200));
+    let plan = ChaosPlan::new();
+    let proxy = ChaosProxy::spawn(&server.addr.to_string(), plan.clone()).expect("proxy");
+    let mut cfg = test_cfg();
+    // this test is about retry/failover, not the breaker: keep it shut
+    cfg.breaker.fail_threshold = 1000;
+    cfg.retries = 10;
+    let handle = router_over(vec![proxy.addr.to_string()], cfg);
+    let mut c = Client::connect(handle.addr);
+
+    // baseline through the fault-free proxy
+    let r = c.roundtrip(r#"{"id":0,"op":"score","text":"warm"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+
+    // cut the link while a generate is in flight: fail-fast clean error,
+    // no silent duplicate execution
+    c.send(r#"{"id":"g","op":"generate","prompt":"a b","max_tokens":4}"#);
+    std::thread::sleep(Duration::from_millis(60));
+    plan.set_down(true);
+    let r = c.recv();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+    assert_eq!(r.get("id").unwrap().as_str(), Some("g"));
+    assert!(
+        r.get("error").unwrap().as_str().unwrap().contains("mid-generate"),
+        "{r}"
+    );
+
+    // restore the link; an idempotent score sent into the outage window
+    // survives via paced retries once the link is back
+    std::thread::sleep(Duration::from_millis(30));
+    plan.set_down(false);
+    let r = c.roundtrip(r#"{"id":"s","op":"score","text":"back again"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+
+    // a score cut *mid-flight* fails over (same replica after recovery)
+    c.send(r#"{"id":"s2","op":"score","text":"cut me"}"#);
+    std::thread::sleep(Duration::from_millis(60));
+    plan.set_down(true);
+    std::thread::sleep(Duration::from_millis(100));
+    plan.set_down(false);
+    let r = c.recv();
+    assert_eq!(
+        r.get("ok"),
+        Some(&Json::Bool(true)),
+        "idempotent score must survive a mid-flight cut: {r}"
+    );
+    assert_eq!(r.get("id").unwrap().as_str(), Some("s2"));
+
+    let stats = handle.shutdown();
+    assert!(stat(&stats, "failovers") >= 1.0, "{stats}");
+    assert!(stat(&stats, "retries") >= 1.0, "{stats}");
+    proxy.stop();
+    server.shutdown();
+}
+
+/// The headline chaos test: two supervised `repro serve --mock` child
+/// processes, SIGKILL one under open-loop load. Every idempotent score
+/// must be answered successfully (failover), the killed replica must be
+/// restarted by the supervisor, and the breaker must re-admit it via
+/// half-open probes.
+#[test]
+fn sigkill_failover_loses_no_scores_and_readmits_the_replica() {
+    let spec = SpawnSpec {
+        bin: std::path::PathBuf::from(env!("CARGO_BIN_EXE_repro")),
+        serve_args: vec!["--mock".into()],
+        count: 2,
+        restart_base: Duration::from_millis(100),
+        ..SpawnSpec::default()
+    };
+    let sup = Supervisor::spawn(spec).expect("spawn replicas");
+    let addrs = sup.addrs();
+    let handle = Router::spawn(test_cfg(), addrs, Some(sup)).expect("spawn router");
+    let c = Client::connect(handle.addr);
+    let Client { mut reader, mut writer } = c;
+
+    // reader thread: collect every reply (replies interleave across
+    // replicas, so order is not guaranteed — match by id)
+    let n = 120;
+    let collector = std::thread::spawn(move || {
+        let mut answered: HashMap<usize, Json> = HashMap::new();
+        let mut line = String::new();
+        while answered.len() < n {
+            line.clear();
+            let got = reader.read_line(&mut line).expect("recv under load");
+            assert!(got > 0, "router closed the connection under load");
+            let r = Json::parse(line.trim()).expect("json");
+            let id = r.get("id").unwrap().as_usize().unwrap();
+            assert!(
+                r.get("ok") == Some(&Json::Bool(true)),
+                "score {id} lost during failover: {r}"
+            );
+            assert!(answered.insert(id, r).is_none(), "id {id} answered twice");
+        }
+        answered
+    });
+
+    // open-loop sender: keeps the load coming straight through the kill
+    for i in 0..n {
+        writeln!(writer, r#"{{"id":{i},"op":"score","text":"w{i} x"}}"#).expect("send");
+        writer.flush().expect("flush");
+        if i == 30 {
+            handle.kill_replica(0).expect("kill replica 0");
+        }
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    let answered = collector.join().expect("collector");
+    assert_eq!(answered.len(), n, "every score answered exactly once");
+    let mut c = Client {
+        reader: BufReader::new(writer.try_clone().expect("clone")),
+        writer,
+    };
+
+    // the supervisor restarts the victim and the breaker re-admits it
+    wait_until(
+        "killed replica to restart and re-enter rotation",
+        Duration::from_secs(15),
+        || handle.pool().healthy_count() == 2,
+    );
+
+    // traffic uses both replicas again
+    for i in 0..10 {
+        let r = c.roundtrip(&format!(r#"{{"id":"post{i}","op":"score","text":"y"}}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    }
+
+    let stats = handle.shutdown();
+    assert!(
+        stat(&stats, "breaker_opens") >= 1.0,
+        "the kill must open the breaker: {stats}"
+    );
+    assert!(
+        stat(&stats, "breaker_closes") >= 1.0,
+        "the restart must close it again: {stats}"
+    );
+}
+
+#[test]
+fn rendezvous_placement_is_stable_uniform_and_minimally_disruptive() {
+    spectron::util::prop::check("rendezvous_placement", |rng| {
+        let n = 2 + rng.below(6) as usize; // 2..=7 replicas
+        let candidates: Vec<usize> = (0..n).collect();
+        for _ in 0..40 {
+            let key = format!("k{}", rng.next_u64());
+            let a = rendezvous_pick(&key, &candidates)
+                .ok_or("pick returned None on a non-empty set")?;
+            if rendezvous_pick(&key, &candidates) != Some(a) {
+                return Err(format!("pick not deterministic for {key}"));
+            }
+            // removing a replica the key is NOT on never moves the key
+            let other = rng.below(n as u64) as usize;
+            if other != a {
+                let without: Vec<usize> =
+                    candidates.iter().copied().filter(|&c| c != other).collect();
+                if rendezvous_pick(&key, &without) != Some(a) {
+                    return Err(format!(
+                        "removing replica {other} moved key {key} off replica {a}"
+                    ));
+                }
+            }
+            // removing its own replica rehashes it to a survivor
+            let without_a: Vec<usize> =
+                candidates.iter().copied().filter(|&c| c != a).collect();
+            match rendezvous_pick(&key, &without_a) {
+                Some(b) if b != a => {}
+                other => return Err(format!("bad rehash for {key}: {other:?}")),
+            }
+        }
+        Ok(())
+    });
+
+    // balance: deterministic hash, so fixed generous bounds can't flake
+    let candidates: Vec<usize> = (0..4).collect();
+    let mut counts = [0usize; 4];
+    for i in 0..2000 {
+        counts[rendezvous_pick(&format!("session-{i}"), &candidates).unwrap()] += 1;
+    }
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(
+            (250..=750).contains(&c),
+            "replica {i} got {c}/2000 keys (expected ~500): {counts:?}"
+        );
+    }
+}

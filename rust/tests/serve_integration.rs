@@ -60,6 +60,7 @@ fn mock_server(
         workers: 1,
         default_variant: Some("mock".into()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 1024,
     };
     let handle = Server::spawn(cfg, MockEngine::factory(Duration::ZERO, seen.clone()))
@@ -201,6 +202,7 @@ fn engine_init_failure_answers_instead_of_hanging() {
         workers: 1,
         default_variant: Some("mock".into()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 1024,
     };
     let factory: spectron::serve::EngineFactory =
@@ -262,6 +264,7 @@ fn pjrt_engine_scores_over_the_wire() {
         workers: 1,
         default_variant: Some(variant.to_string()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 1024,
     };
     let handle = Server::spawn(cfg, factory).expect("spawn");
@@ -336,6 +339,7 @@ fn native_engine_serves_over_the_wire() {
         workers: 1,
         default_variant: Some(variant.to_string()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 1024,
     };
     let handle = Server::spawn(cfg, factory).expect("spawn");
@@ -403,6 +407,7 @@ fn native_server(slots: usize, tag: &str) -> (ServerHandle, std::path::PathBuf) 
         workers: 1,
         default_variant: Some(variant.to_string()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 1024,
     };
     (Server::spawn(cfg, factory).expect("spawn"), ckpt)
@@ -516,6 +521,7 @@ fn disconnect_mid_decode_frees_slot() {
         workers: 1,
         default_variant: Some("mock".into()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 1024,
     };
     // ONE slot, 20ms per decode step: the doomed request would take ~2s
@@ -562,6 +568,7 @@ fn queue_full_returns_overloaded() {
         workers: 1,
         default_variant: Some("mock".into()),
         metrics_name: None,
+        idle_timeout: None,
         queue_cap: 2,
     };
     let factory = MockEngine::factory(Duration::from_millis(50), seen.clone());
@@ -589,5 +596,118 @@ fn queue_full_returns_overloaded() {
     let r = c.roundtrip(r#"{"id":99,"op":"stats"}"#);
     let stats = r.get("stats").unwrap();
     assert_eq!(stats.get("overloaded").unwrap().as_usize(), Some(shed));
+    handle.shutdown();
+}
+
+#[test]
+fn overloaded_shed_carries_a_retry_after_hint() {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        max_wait: Duration::from_millis(20),
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+        idle_timeout: None,
+        queue_cap: 2,
+    };
+    let factory = MockEngine::factory(Duration::from_millis(50), seen.clone());
+    let handle = Server::spawn(cfg, factory).expect("spawn");
+    let mut c = Client::connect(handle.addr);
+
+    for i in 0..10 {
+        c.send(&format!(r#"{{"id":{i},"op":"score","text":"w{i}"}}"#));
+    }
+    let mut hints = 0;
+    for _ in 0..10 {
+        let r = c.recv();
+        if r.get("ok") == Some(&Json::Bool(false)) {
+            assert_eq!(r.get("error").unwrap().as_str(), Some("overloaded"), "{r}");
+            let ms = r
+                .get("retry_after_ms")
+                .expect("overloaded shed carries retry_after_ms")
+                .as_f64()
+                .unwrap();
+            // clamped band from server::retry_after_hint, scaled by depth
+            assert!((10.0..=2000.0).contains(&ms), "hint {ms} out of band");
+            hints += 1;
+        }
+    }
+    assert!(hints >= 1, "burst must shed at least one request");
+    handle.shutdown();
+}
+
+#[test]
+fn idle_timeout_reaps_silent_connections_but_not_active_ones() {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let cfg = ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+        workers: 1,
+        default_variant: Some("mock".into()),
+        metrics_name: None,
+        idle_timeout: Some(Duration::from_millis(100)),
+        queue_cap: 1024,
+    };
+    let handle = Server::spawn(cfg, MockEngine::factory(Duration::ZERO, seen))
+        .expect("spawn");
+
+    // an active client keeps working across several idle windows as
+    // long as each gap stays under the timeout
+    let mut active = Client::connect(handle.addr);
+    for i in 0..3 {
+        let r = active.roundtrip(&format!(r#"{{"id":{i},"op":"score","text":"x"}}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        std::thread::sleep(Duration::from_millis(40));
+    }
+
+    // a silent client that owes no replies is dropped: read sees EOF
+    let silent = TcpStream::connect(handle.addr).expect("connect");
+    silent
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .expect("read timeout");
+    let mut buf = String::new();
+    let n = BufReader::new(silent).read_line(&mut buf).expect("idle read");
+    assert_eq!(n, 0, "silent idle connection should be closed, got {buf:?}");
+
+    // the active client's connection survived the whole time
+    let r = active.roundtrip(r#"{"id":9,"op":"score","text":"still here"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    handle.shutdown();
+}
+
+#[test]
+fn drain_and_resume_cycle_over_the_wire() {
+    let (handle, _) = mock_server(4, Duration::from_millis(5));
+    let mut c = Client::connect(handle.addr);
+
+    // ping reports not draining
+    let r = c.roundtrip(r#"{"id":1,"op":"ping"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("draining"), Some(&Json::Bool(false)));
+
+    // drain: quiesces (nothing in flight) and flips the flag
+    let r = c.roundtrip(r#"{"id":2,"op":"drain"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("drained"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("inflight").unwrap().as_usize(), Some(0));
+
+    // while draining: model ops shed with the retryable "draining"
+    // error, control ops still answer
+    let r = c.roundtrip(r#"{"id":3,"op":"score","text":"x"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("error").unwrap().as_str(), Some("draining"), "{r}");
+    let r = c.roundtrip(r#"{"id":4,"op":"ping"}"#);
+    assert_eq!(r.get("draining"), Some(&Json::Bool(true)));
+
+    // resume: admitting again
+    let r = c.roundtrip(r#"{"id":5,"op":"resume"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("draining"), Some(&Json::Bool(false)));
+    let r = c.roundtrip(r#"{"id":6,"op":"score","text":"x"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
     handle.shutdown();
 }
