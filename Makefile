@@ -50,8 +50,10 @@ bench:
 	cargo bench --bench serve_latency
 
 # Tensor-core microbenches alone (DESIGN.md §Native tensor core): matmul /
-# Newton-Schulz / power-iter across threads and alloc-reuse. No artifacts
-# needed; CI smokes it with BENCH_FAST=1.
+# Newton-Schulz / power-iter across threads and alloc-reuse, plus the
+# dense-baseline vs factored-apply rows in both compute precisions
+# (docs/adr/008). No artifacts needed; CI smokes it with BENCH_FAST=1 and
+# BENCH_ASSERT_FACTORED=1 (factored must beat dense at the logits shape).
 bench-native:
 	BENCH_JSON=BENCH_native_math.json cargo bench --bench native_math
 

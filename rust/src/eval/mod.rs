@@ -40,10 +40,23 @@ impl Evaluator {
     }
 
     /// [`Evaluator::native`] with an explicit tensor-core thread budget
-    /// (serve's native engine and the bench rows land here).
+    /// (serve's native engine and the bench rows land here); precision
+    /// still follows `REPRO_PRECISION`.
     pub fn native_with_threads(variant: &VariantCfg, threads: usize) -> Result<Evaluator> {
         Ok(Self::with_backend(Box::new(NativeBackend::with_threads(
             variant, threads,
+        )?)))
+    }
+
+    /// [`Evaluator::native_with_threads`] with an explicit compute
+    /// precision (`repro serve --precision f32` lands here).
+    pub fn native_with_opts(
+        variant: &VariantCfg,
+        threads: usize,
+        precision: crate::runtime::native::Precision,
+    ) -> Result<Evaluator> {
+        Ok(Self::with_backend(Box::new(NativeBackend::with_opts(
+            variant, threads, precision,
         )?)))
     }
 

@@ -1,10 +1,10 @@
-//! Dense linear algebra (f64, row-major) — the native tensor core
-//! (DESIGN.md §Native tensor core).
+//! Dense linear algebra (row-major, generic over [`Elem`]) — the native
+//! tensor core (DESIGN.md §Native tensor core).
 //!
 //! Since the native backend became the artifact-free substrate for
 //! training, eval, serve, and the un-gated test suite (PR 3), this IS a
 //! hot path: every native matmul, transpose, and power-iteration matvec
-//! lands here. Two disciplines keep it fast without giving up the
+//! lands here. Three disciplines keep it fast without giving up the
 //! repo-wide bit-identity invariant:
 //!
 //! * **in-place ops** ([`Mat::matmul_into`], [`Mat::t_into`],
@@ -16,7 +16,15 @@
 //!   ([`crate::util::pool`]). Ownership is fixed by `(index, nthreads)`
 //!   and every output element's k-accumulation order is exactly the
 //!   serial loop's, so parallel results are **bit-identical** to serial
-//!   at every thread count (docs/adr/005-parallel-tensor-core.md).
+//!   at every thread count (docs/adr/005-parallel-tensor-core.md);
+//! * **element genericity**: [`Mat<T>`] runs the same kernels over `f64`
+//!   (the optimizer's domain, where the bit-identity proptests live) and
+//!   `f32` (the forward/backward/decode compute path — state is f32 at
+//!   rest, so the f32 path halves memory bandwidth). The kernels are one
+//!   generic body, so the f32 path inherits the partition/accumulation
+//!   contract verbatim: f32 results are bit-identical to *themselves*
+//!   across thread counts, and agree with f64 within a proptested band
+//!   (docs/adr/008-f32-compute-path.md).
 //!
 //! NOTE the deliberate absence of zero-skip shortcuts: a `continue` on a
 //! `0.0` operand would also skip `0.0 * NaN` and so hide a diverged
@@ -29,45 +37,198 @@ pub mod lbfgs;
 use crate::util::pool::{self, DisjointMut};
 
 /// Tile edge for the blocked transpose / tiled matmul: 64 f64 = 512 B per
-/// row segment, a few tiles fit in L1 alongside the output rows.
+/// row segment, a few tiles fit in L1 alongside the output rows (f32
+/// tiles are half that — still tuned for the f64 worst case).
 const BLOCK: usize = 64;
 
-#[derive(Debug, Clone, PartialEq)]
-pub struct Mat {
-    pub rows: usize,
-    pub cols: usize,
-    pub data: Vec<f64>,
+/// Element scalar for the tensor core: the closed set of arithmetic the
+/// kernels and the native model need, implemented for `f64` and `f32`.
+/// Everything is a thin inherent-method forward, so a `Mat<f64>`
+/// monomorphization compiles to exactly the pre-generic code (same ops,
+/// same order — the f64 bit-identity suite is the proof).
+pub trait Elem:
+    Copy
+    + std::fmt::Debug
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + std::ops::DivAssign
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const NEG_INF: Self;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn from_f32(x: f32) -> Self;
+    fn to_f32(self) -> f32;
+    fn sqrt(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn sin(self) -> Self;
+    fn cos(self) -> Self;
+    fn powf(self, p: Self) -> Self;
+    fn abs(self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn is_nan(self) -> bool;
+    fn is_finite(self) -> bool;
+    /// Bit pattern widened to u64 (f32 zero-extends) — the currency of
+    /// the bits-equality tests, which must not depend on `T`.
+    fn to_bits_u64(self) -> u64;
 }
 
-impl Mat {
-    pub fn zeros(rows: usize, cols: usize) -> Mat {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+impl Elem for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const NEG_INF: Self = f64::NEG_INFINITY;
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn from_f32(x: f32) -> Self {
+        x as f64
+    }
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+    fn ln(self) -> Self {
+        f64::ln(self)
+    }
+    fn sin(self) -> Self {
+        f64::sin(self)
+    }
+    fn cos(self) -> Self {
+        f64::cos(self)
+    }
+    fn powf(self, p: Self) -> Self {
+        f64::powf(self, p)
+    }
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    fn is_nan(self) -> bool {
+        f64::is_nan(self)
+    }
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+    fn to_bits_u64(self) -> u64 {
+        self.to_bits()
+    }
+}
+
+impl Elem for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const NEG_INF: Self = f32::NEG_INFINITY;
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    fn exp(self) -> Self {
+        f32::exp(self)
+    }
+    fn ln(self) -> Self {
+        f32::ln(self)
+    }
+    fn sin(self) -> Self {
+        f32::sin(self)
+    }
+    fn cos(self) -> Self {
+        f32::cos(self)
+    }
+    fn powf(self, p: Self) -> Self {
+        f32::powf(self, p)
+    }
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    fn is_nan(self) -> bool {
+        f32::is_nan(self)
+    }
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+    fn to_bits_u64(self) -> u64 {
+        self.to_bits() as u64
+    }
+}
+
+/// Row-major dense matrix. The default element keeps the pre-generic
+/// spelling alive: plain `Mat` *is* `Mat<f64>`, so the optimizer and the
+/// bit-identity proptests read unchanged while the forward path
+/// instantiates `Mat<f32>`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Mat<T = f64> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Elem> Mat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Mat<T> {
+        Mat { rows, cols, data: vec![T::ZERO; rows * cols] }
     }
 
-    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+    pub fn from_rows(rows: Vec<Vec<T>>) -> Mat<T> {
         let r = rows.len();
         let c = rows.first().map(|x| x.len()).unwrap_or(0);
         assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
         Mat { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
     }
 
-    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat<T> {
         assert_eq!(data.len(), rows * cols);
-        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+        Mat { rows, cols, data: data.iter().map(|&x| T::from_f32(x)).collect() }
     }
 
-    pub fn randn(rows: usize, cols: usize, rng: &mut crate::util::rng::Pcg64) -> Mat {
-        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+    pub fn randn(rows: usize, cols: usize, rng: &mut crate::util::rng::Pcg64) -> Mat<T> {
+        let data = (0..rows * cols).map(|_| T::from_f64(rng.normal())).collect();
         Mat { rows, cols, data }
     }
 
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> T {
         self.data[i * self.cols + j]
     }
 
     #[inline]
-    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut T {
         &mut self.data[i * self.cols + j]
     }
 
@@ -78,7 +239,7 @@ impl Mat {
         self.rows = rows;
         self.cols = cols;
         self.data.clear();
-        self.data.resize(rows * cols, 0.0);
+        self.data.resize(rows * cols, T::ZERO);
     }
 
     /// Reshape for consumers that overwrite EVERY element before any
@@ -92,7 +253,7 @@ impl Mat {
         let len = rows * cols;
         if self.data.len() != len {
             self.data.clear();
-            self.data.resize(len, 0.0);
+            self.data.resize(len, T::ZERO);
         }
     }
 
@@ -100,20 +261,20 @@ impl Mat {
     /// both stay within a cache-resident window on the larger test shapes
     /// (the naive column-strided write thrashes once a row of the output
     /// exceeds L1). Pure permutation — bit-identical to the naive loop.
-    pub fn t(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
+    pub fn t(&self) -> Mat<T> {
+        let mut out = Self::zeros(self.cols, self.rows);
         self.t_write(&mut out);
         out
     }
 
     /// [`Mat::t`] into a reused buffer (`t_write` assigns every element,
     /// so the reshape skips zero-filling).
-    pub fn t_into(&self, out: &mut Mat) {
+    pub fn t_into(&self, out: &mut Mat<T>) {
         out.reset_for_overwrite(self.cols, self.rows);
         self.t_write(out);
     }
 
-    fn t_write(&self, out: &mut Mat) {
+    fn t_write(&self, out: &mut Mat<T>) {
         for i0 in (0..self.rows).step_by(BLOCK) {
             let i1 = (i0 + BLOCK).min(self.rows);
             for j0 in (0..self.cols).step_by(BLOCK) {
@@ -138,7 +299,7 @@ impl Mat {
     /// how the row range is partitioned.
     ///
     /// No zero-skip on `a`: `0.0 * NaN` must stay NaN (module docs).
-    fn matmul_rows(&self, other: &Mat, out_rows: &mut [f64], i_lo: usize, i_hi: usize) {
+    fn matmul_rows(&self, other: &Mat<T>, out_rows: &mut [T], i_lo: usize, i_hi: usize) {
         let nc = other.cols;
         debug_assert_eq!(out_rows.len(), (i_hi - i_lo) * nc);
         for i0 in (i_lo..i_hi).step_by(BLOCK) {
@@ -163,15 +324,15 @@ impl Mat {
     /// Serial tiled matmul (see `matmul_rows` above for the order
     /// guarantees). Prefer [`Mat::matmul_into`] / [`Mat::matmul_par_into`]
     /// on hot paths.
-    pub fn matmul(&self, other: &Mat) -> Mat {
+    pub fn matmul(&self, other: &Mat<T>) -> Mat<T> {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Mat::zeros(self.rows, other.cols);
+        let mut out = Self::zeros(self.rows, other.cols);
         self.matmul_rows(other, &mut out.data, 0, self.rows);
         out
     }
 
     /// [`Mat::matmul`] into a reused buffer — bit-identical output.
-    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+    pub fn matmul_into(&self, other: &Mat<T>, out: &mut Mat<T>) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         out.reset(self.rows, other.cols);
         self.matmul_rows(other, &mut out.data, 0, self.rows);
@@ -183,21 +344,21 @@ impl Mat {
     /// block runs the serial tiled loop over its own rows, so the result
     /// is bit-identical to [`Mat::matmul`] at every thread count
     /// (DESIGN.md §Native tensor core).
-    pub fn matmul_par(&self, other: &Mat, threads: usize) -> Mat {
+    pub fn matmul_par(&self, other: &Mat<T>, threads: usize) -> Mat<T> {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Mat::zeros(self.rows, other.cols);
+        let mut out = Self::zeros(self.rows, other.cols);
         self.matmul_par_write(other, threads, &mut out);
         out
     }
 
     /// [`Mat::matmul_par`] into a reused buffer.
-    pub fn matmul_par_into(&self, other: &Mat, threads: usize, out: &mut Mat) {
+    pub fn matmul_par_into(&self, other: &Mat<T>, threads: usize, out: &mut Mat<T>) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         out.reset(self.rows, other.cols);
         self.matmul_par_write(other, threads, out);
     }
 
-    fn matmul_par_write(&self, other: &Mat, threads: usize, out: &mut Mat) {
+    fn matmul_par_write(&self, other: &Mat<T>, threads: usize, out: &mut Mat<T>) {
         let nc = other.cols;
         let slots = DisjointMut::new(&mut out.data);
         pool::chunked_for(threads, self.rows, &|lo, hi| {
@@ -207,27 +368,28 @@ impl Mat {
         });
     }
 
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
         let mut out = Vec::with_capacity(self.rows);
         self.matvec_into(x, &mut out);
         out
     }
 
-    /// `out = W x` into a reused buffer (resized to `rows`).
-    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
+    /// `out = W x` into a reused buffer (resized to `rows`). The fold is
+    /// the same ascending-k left fold `sum::<f64>()` lowered to — bits
+    /// did not move when this went generic.
+    pub fn matvec_into(&self, x: &[T], out: &mut Vec<T>) {
         assert_eq!(self.cols, x.len());
         out.clear();
         out.extend((0..self.rows).map(|i| {
             self.data[i * self.cols..(i + 1) * self.cols]
                 .iter()
                 .zip(x)
-                .map(|(a, b)| a * b)
-                .sum::<f64>()
+                .fold(T::ZERO, |acc, (a, b)| acc + *a * *b)
         }));
     }
 
-    pub fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; self.cols];
+    pub fn matvec_t(&self, y: &[T]) -> Vec<T> {
+        let mut out = vec![T::ZERO; self.cols];
         self.matvec_t_write(y, &mut out);
         out
     }
@@ -236,13 +398,13 @@ impl Mat {
     /// accumulation ascends in `i` exactly as the allocating version —
     /// and no `y[i] == 0.0` skip: a NaN row must poison the output
     /// (module docs).
-    pub fn matvec_t_into(&self, y: &[f64], out: &mut Vec<f64>) {
+    pub fn matvec_t_into(&self, y: &[T], out: &mut Vec<T>) {
         out.clear();
-        out.resize(self.cols, 0.0);
+        out.resize(self.cols, T::ZERO);
         self.matvec_t_write(y, out);
     }
 
-    fn matvec_t_write(&self, y: &[f64], out: &mut [f64]) {
+    fn matvec_t_write(&self, y: &[T], out: &mut [T]) {
         assert_eq!(self.rows, y.len());
         for i in 0..self.rows {
             let yi = y[i];
@@ -252,49 +414,49 @@ impl Mat {
         }
     }
 
-    pub fn sub(&self, other: &Mat) -> Mat {
+    pub fn sub(&self, other: &Mat<T>) -> Mat<T> {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
             rows: self.rows,
             cols: self.cols,
-            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| *a - *b).collect(),
         }
     }
 
-    pub fn scale(&self, s: f64) -> Mat {
+    pub fn scale(&self, s: T) -> Mat<T> {
         Mat {
             rows: self.rows,
             cols: self.cols,
-            data: self.data.iter().map(|a| a * s).collect(),
+            data: self.data.iter().map(|a| *a * s).collect(),
         }
     }
 
     /// `self *= s` in place — same per-element arithmetic as
     /// [`Mat::scale`], no allocation.
-    pub fn scale_assign(&mut self, s: f64) {
+    pub fn scale_assign(&mut self, s: T) {
         for v in self.data.iter_mut() {
             *v *= s;
         }
     }
 
     /// `self += other` elementwise, in place.
-    pub fn add_assign(&mut self, other: &Mat) {
+    pub fn add_assign(&mut self, other: &Mat<T>) {
         debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (o, v) in self.data.iter_mut().zip(&other.data) {
-            *o += v;
+            *o += *v;
         }
     }
 
     /// Become a copy of `src`, reusing this matrix's allocation.
-    pub fn copy_from(&mut self, src: &Mat) {
+    pub fn copy_from(&mut self, src: &Mat<T>) {
         self.rows = src.rows;
         self.cols = src.cols;
         self.data.clear();
         self.data.extend_from_slice(&src.data);
     }
 
-    pub fn fro(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    pub fn fro(&self) -> T {
+        self.data.iter().fold(T::ZERO, |acc, x| acc + *x * *x).sqrt()
     }
 }
 
@@ -304,18 +466,60 @@ impl Mat {
 /// live buffers and stays there). The free list is bucketed by capacity
 /// with best-fit checkout, so a tiny request can never capture (and
 /// orphan) the multi-MB logits buffer and force a regrow. Checked-out
-/// values are plain [`Mat`]/`Vec<f64>` — dropping one instead of
+/// values are plain [`Mat`]/`Vec<T>` — dropping one instead of
 /// returning it is merely a lost reuse, never a leak or an error.
-#[derive(Default)]
-pub struct Arena {
-    free: std::collections::BTreeMap<usize, Vec<Vec<f64>>>,
+///
+/// **Bounded**: mixed-shape churn (decode sessions of many lengths
+/// cycling through one arena) used to grow the free list without limit —
+/// every novel capacity left a buffer behind. Retained (free) bytes are
+/// now capped at [`Arena::with_limit`] (default 256 MiB); on `put`, the
+/// *smallest* free buffers are evicted first until the cap holds, so the
+/// expensive multi-MB buffers stay recycled and only cheap-to-rebuild
+/// small ones are dropped. Checked-out buffers never count against the
+/// cap — it bounds idle footprint, not working set.
+pub struct Arena<T = f64> {
+    free: std::collections::BTreeMap<usize, Vec<Vec<T>>>,
+    /// sum of `capacity * size_of::<T>()` over every free buffer
+    retained_bytes: usize,
+    limit_bytes: usize,
 }
 
-impl Arena {
+/// Default idle-footprint cap: generous next to the largest per-step
+/// buffer (vocab-sized logits at f64 ≈ tens of MB) so steady-state
+/// training/serving never evicts, while runaway mixed-shape churn is
+/// bounded.
+const ARENA_DEFAULT_LIMIT_BYTES: usize = 256 << 20;
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Arena {
+            free: std::collections::BTreeMap::new(),
+            retained_bytes: 0,
+            limit_bytes: ARENA_DEFAULT_LIMIT_BYTES,
+        }
+    }
+}
+
+impl<T: Elem> Arena<T> {
+    /// An arena whose *free* (idle) footprint is capped at `limit_bytes`.
+    pub fn with_limit(limit_bytes: usize) -> Arena<T> {
+        Arena { limit_bytes, ..Arena::default() }
+    }
+
+    /// Bytes currently retained on the free list (checked-out buffers
+    /// excluded). The mixed-shape churn tests assert this holds steady.
+    pub fn retained_bytes(&self) -> usize {
+        self.retained_bytes
+    }
+
+    pub fn limit_bytes(&self) -> usize {
+        self.limit_bytes
+    }
+
     /// Best-fit checkout: the smallest recycled capacity already holding
     /// `len`, else the largest available (regrows once and re-buckets at
     /// put), else a fresh empty vector.
-    fn pop_fit(&mut self, len: usize) -> Vec<f64> {
+    fn pop_fit(&mut self, len: usize) -> Vec<T> {
         let key = self
             .free
             .range(len..)
@@ -329,47 +533,63 @@ impl Arena {
                 if bucket.is_empty() {
                     self.free.remove(&k);
                 }
+                self.retained_bytes -= v.capacity() * std::mem::size_of::<T>();
                 v
             }
             None => Vec::new(),
         }
     }
 
-    fn put_raw(&mut self, v: Vec<f64>) {
+    fn put_raw(&mut self, v: Vec<T>) {
+        if v.capacity() == 0 {
+            return; // nothing to recycle; don't grow the zero bucket
+        }
+        self.retained_bytes += v.capacity() * std::mem::size_of::<T>();
         self.free.entry(v.capacity()).or_default().push(v);
+        // Evict smallest-first until the idle cap holds: large buffers
+        // are the expensive ones to reallocate, so they are kept.
+        while self.retained_bytes > self.limit_bytes {
+            let k = *self.free.keys().next().expect("over-limit arena has buffers");
+            let bucket = self.free.get_mut(&k).expect("keyed bucket");
+            let dropped = bucket.pop().expect("non-empty bucket");
+            if bucket.is_empty() {
+                self.free.remove(&k);
+            }
+            self.retained_bytes -= dropped.capacity() * std::mem::size_of::<T>();
+        }
     }
 
     /// A zeroed vector of length `len`, recycled when possible.
-    pub fn vec(&mut self, len: usize) -> Vec<f64> {
+    pub fn vec(&mut self, len: usize) -> Vec<T> {
         let mut v = self.pop_fit(len);
         v.clear();
-        v.resize(len, 0.0);
+        v.resize(len, T::ZERO);
         v
     }
 
     /// A vector holding a copy of `src` (no intermediate zero-fill).
-    pub fn vec_from(&mut self, src: &[f64]) -> Vec<f64> {
+    pub fn vec_from(&mut self, src: &[T]) -> Vec<T> {
         let mut v = self.pop_fit(src.len());
         v.clear();
         v.extend_from_slice(src);
         v
     }
 
-    pub fn put_vec(&mut self, v: Vec<f64>) {
+    pub fn put_vec(&mut self, v: Vec<T>) {
         self.put_raw(v);
     }
 
     /// A zeroed `(rows, cols)` matrix, recycled when possible.
-    pub fn mat(&mut self, rows: usize, cols: usize) -> Mat {
+    pub fn mat(&mut self, rows: usize, cols: usize) -> Mat<T> {
         Mat { rows, cols, data: self.vec(rows * cols) }
     }
 
     /// A recycled copy of `src`.
-    pub fn mat_from(&mut self, src: &Mat) -> Mat {
+    pub fn mat_from(&mut self, src: &Mat<T>) -> Mat<T> {
         Mat { rows: src.rows, cols: src.cols, data: self.vec_from(&src.data) }
     }
 
-    pub fn put(&mut self, m: Mat) {
+    pub fn put(&mut self, m: Mat<T>) {
         self.put_raw(m.data);
     }
 }
@@ -388,9 +608,47 @@ pub fn normalize(x: &mut [f64]) -> f64 {
     n
 }
 
+/// Reused iteration vectors for [`spectral_norm_op_into`]: the telemetry
+/// path calls it every logged step, so the two power-iteration vectors
+/// live here instead of being reallocated per call (mirrors the
+/// persisted-u `PowerScratch` discipline of the optimizer path).
+#[derive(Default)]
+pub struct SpecScratch {
+    v: Vec<f64>,
+    u: Vec<f64>,
+}
+
+/// Spectral norm via power iteration on an implicit operator
+/// (matvec, matvec_t) : R^n -> R^m, writing through caller scratch. The
+/// closures fill a reused output buffer instead of returning a fresh
+/// `Vec`, so a telemetry step allocates nothing. Arithmetic (including
+/// the normalize order) is exactly [`spectral_norm_op`]'s — the
+/// bits-equality test pins the two together.
+pub fn spectral_norm_op_into(
+    mut matvec: impl FnMut(&[f64], &mut Vec<f64>),
+    mut matvec_t: impl FnMut(&[f64], &mut Vec<f64>),
+    n: usize,
+    iters: usize,
+    rng: &mut crate::util::rng::Pcg64,
+    s: &mut SpecScratch,
+) -> f64 {
+    s.v.clear();
+    s.v.extend((0..n).map(|_| rng.normal()));
+    normalize(&mut s.v);
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        matvec(&s.v, &mut s.u);
+        normalize(&mut s.u);
+        matvec_t(&s.u, &mut s.v);
+        sigma = normalize(&mut s.v);
+    }
+    sigma
+}
+
 /// Spectral norm via power iteration on an implicit operator
 /// (matvec, matvec_t) : R^n -> R^m — mirrors the in-graph telemetry so the
-/// Rust tests can cross-check HLO-computed values.
+/// Rust tests can cross-check HLO-computed values. Allocating convenience
+/// wrapper over [`spectral_norm_op_into`].
 pub fn spectral_norm_op(
     matvec: impl Fn(&[f64]) -> Vec<f64>,
     matvec_t: impl Fn(&[f64]) -> Vec<f64>,
@@ -398,16 +656,21 @@ pub fn spectral_norm_op(
     iters: usize,
     rng: &mut crate::util::rng::Pcg64,
 ) -> f64 {
-    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    normalize(&mut v);
-    let mut sigma = 0.0;
-    for _ in 0..iters {
-        let mut u = matvec(&v);
-        normalize(&mut u);
-        v = matvec_t(&u);
-        sigma = normalize(&mut v);
-    }
-    sigma
+    let mut s = SpecScratch::default();
+    spectral_norm_op_into(
+        |x, out| {
+            out.clear();
+            out.extend_from_slice(&matvec(x));
+        },
+        |y, out| {
+            out.clear();
+            out.extend_from_slice(&matvec_t(y));
+        },
+        n,
+        iters,
+        rng,
+        &mut s,
+    )
 }
 
 pub fn spectral_norm(m: &Mat, iters: usize, rng: &mut crate::util::rng::Pcg64) -> f64 {
@@ -505,6 +768,31 @@ mod tests {
         let mut rng = Pcg64::new(4);
         let s = spectral_norm_op(mv, mt, 2, 30, &mut rng);
         assert!((s - 15.0).abs() < 1e-9, "{s}");
+    }
+
+    /// The scratch-routed telemetry power iteration must be bit-identical
+    /// to the allocating wrapper — the telemetry stream is diffed across
+    /// runs, so the allocation fix must not move a single bit.
+    #[test]
+    fn spectral_norm_op_into_bit_matches_allocating() {
+        let mut rng = Pcg64::new(40);
+        let w: Mat = Mat::randn(9, 6, &mut rng);
+        let mut rng_a = Pcg64::new(41);
+        let want = spectral_norm_op(|x| w.matvec(x), |y| w.matvec_t(y), w.cols, 12, &mut rng_a);
+        let mut rng_b = Pcg64::new(41);
+        let mut scratch = SpecScratch::default();
+        // dirty scratch from an unrelated earlier shape: must not leak in
+        scratch.v = vec![99.0; 17];
+        scratch.u = vec![-3.0; 2];
+        let got = spectral_norm_op_into(
+            |x, out| w.matvec_into(x, out),
+            |y, out| w.matvec_t_into(y, out),
+            w.cols,
+            12,
+            &mut rng_b,
+            &mut scratch,
+        );
+        assert_eq!(want.to_bits(), got.to_bits(), "{want} vs {got}");
     }
 
     #[test]
@@ -609,6 +897,56 @@ mod tests {
         }
     }
 
+    /// The f32 instantiation inherits the same partition/accumulation
+    /// contract: bit-identical to its own serial loop at every thread
+    /// count (docs/adr/008), and within float tolerance of the f64 path
+    /// on the same values.
+    #[test]
+    fn f32_kernels_bit_match_serial_and_track_f64() {
+        let mut rng = Pcg64::new(45);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 4), (64, 64, 64), (70, 130, 65)] {
+            let a64: Mat<f64> = Mat::randn(m, k, &mut rng);
+            let b64: Mat<f64> = Mat::randn(k, n, &mut rng);
+            let a32: Mat<f32> = Mat::from_f32(
+                m,
+                k,
+                &a64.data.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+            );
+            let b32: Mat<f32> = Mat::from_f32(
+                k,
+                n,
+                &b64.data.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+            );
+            let want32 = a32.matmul(&b32);
+            let mut reused: Mat<f32> = Mat::zeros(2, 2);
+            reused.data.fill(7.5f32);
+            for threads in [1usize, 2, 3, 8] {
+                let got = a32.matmul_par(&b32, threads);
+                for (x, y) in want32.data.iter().zip(&got.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "f32 par t={threads} {m}x{k}x{n}");
+                }
+                a32.matmul_par_into(&b32, threads, &mut reused);
+                for (x, y) in want32.data.iter().zip(&reused.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "f32 par_into t={threads}");
+                }
+            }
+            // transpose is a pure permutation in both widths
+            let t32 = a32.t();
+            for i in 0..m {
+                for j in 0..k {
+                    assert_eq!(t32.at(j, i).to_bits(), a32.at(i, j).to_bits());
+                }
+            }
+            // f32 tracks f64 within a k-scaled relative band
+            let want64 = a64.matmul(&b64);
+            let tol = 1e-5 * (k as f64) + 1e-6;
+            for (x64, x32) in want64.data.iter().zip(&want32.data) {
+                let diff = (x64 - *x32 as f64).abs();
+                assert!(diff <= tol * (1.0 + x64.abs()), "{x64} vs {x32} (tol {tol})");
+            }
+        }
+    }
+
     /// Regression for the removed zero-skip: a NaN in one operand must
     /// reach the output even when the matching element of the other
     /// operand is exactly 0.0 (the old `if a == 0.0 {{ continue }}`
@@ -632,6 +970,10 @@ mod tests {
         let w = Mat::from_rows(vec![vec![f64::NAN, 1.0], vec![2.0, 3.0]]);
         let out = w.matvec_t(&[0.0, 1.0]);
         assert!(out[0].is_nan(), "matvec_t zero-skip would mask the NaN row");
+        // and the f32 instantiation must not regress it either
+        let a32: Mat<f32> = Mat::from_rows(vec![vec![0.0f32, 0.0], vec![1.0, 2.0]]);
+        let b32: Mat<f32> = Mat::from_rows(vec![vec![f32::NAN, 1.0], vec![3.0, 4.0]]);
+        assert!(a32.matmul(&b32).at(0, 0).is_nan(), "f32 path must propagate NaN");
     }
 
     #[test]
@@ -684,6 +1026,56 @@ mod tests {
         assert!(tiny.capacity() <= small_cap, "tiny take grabbed the big buffer");
         let big2 = ar.vec(1 << 16);
         assert_eq!(big2.capacity(), big_cap, "big buffer must still be available");
+    }
+
+    /// The unbounded-growth bugfix: mixed-shape churn (every put a novel
+    /// capacity, the decode-session pattern) must hold retained bytes at
+    /// or under the configured cap, evicting smallest-first so the
+    /// largest buffer survives.
+    #[test]
+    fn arena_eviction_bounds_mixed_shape_churn() {
+        let limit = 4096 * std::mem::size_of::<f64>();
+        let mut ar: Arena<f64> = Arena::with_limit(limit);
+        assert_eq!(ar.limit_bytes(), limit);
+        // 200 distinct capacities cycling through: unbounded before the cap
+        for i in 0..200usize {
+            let v: Vec<f64> = Vec::with_capacity(17 + 13 * i);
+            ar.put_vec(v);
+            assert!(
+                ar.retained_bytes() <= limit,
+                "iteration {i}: retained {} > limit {}",
+                ar.retained_bytes(),
+                limit
+            );
+        }
+        // the largest resident buffer survived eviction (smallest-first)
+        let biggest = ar.vec(1);
+        assert!(
+            biggest.capacity() * std::mem::size_of::<f64>() > limit / 2,
+            "eviction dropped the expensive large buffer (cap {})",
+            biggest.capacity()
+        );
+        // accounting: checkout decremented what the checkout removed
+        assert!(ar.retained_bytes() <= limit);
+        // zero-capacity puts are dropped, not bucketed
+        ar.put_vec(Vec::new());
+        let before = ar.retained_bytes();
+        ar.put_vec(Vec::new());
+        assert_eq!(ar.retained_bytes(), before);
+    }
+
+    #[test]
+    fn arena_f32_recycles_independently() {
+        let mut ar: Arena<f32> = Arena::default();
+        let mut v = ar.vec(16);
+        v.fill(3.0);
+        let cap = v.capacity();
+        ar.put_vec(v);
+        assert_eq!(ar.retained_bytes(), cap * std::mem::size_of::<f32>());
+        let v2 = ar.vec(10);
+        assert_eq!(v2.capacity(), cap);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        assert_eq!(ar.retained_bytes(), 0);
     }
 
     #[test]

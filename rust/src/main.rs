@@ -24,7 +24,9 @@
 //! native backend also takes `--threads N|auto` (default: REPRO_THREADS,
 //! else auto): the tensor-core budget (DESIGN.md §Native tensor core) —
 //! results are bit-identical at every thread count, only wall time
-//! changes.
+//! changes — and `--precision f64|f32` (default: REPRO_PRECISION, else
+//! f64): the model-compute element type (docs/adr/008-f32-compute-path.md;
+//! the optimizer always runs f64).
 
 use std::sync::Arc;
 
@@ -83,22 +85,25 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
   repro train --variant V [--steps N --lr F --wd F --seed N --docs N]
               [--ckpt out.ckpt] [--resume in.ckpt] [--read-interval N]
               [--backend pjrt|native|auto] [--threads N|auto] [--no-prefetch]
+              [--precision f64|f32]
               [--guard loss-spike,spectron-bound,rho-collapse,sigma-collapse]
               [--on-spike log|halt|lr-cut|rollback] [--inject-spike STEP:SCALE]
               (async batch prefetch is on by default; --backend native
                needs no artifacts, no Python — pure Rust end to end;
                --threads sets its tensor-core budget, bit-identical at
-               every value; --guard turns the stability monitor on:
-               detections land in results/train-V/events.jsonl and
-               --on-spike picks the response)
+               every value; --precision f32 runs the native model compute
+               in f32 — optimizer stays f64; --guard turns the stability
+               monitor on: detections land in results/train-V/events.jsonl
+               and --on-spike picks the response)
   repro eval  --ckpt in.ckpt [--docs N] [--items N] [--backend ...]
-              [--threads N|auto]
+              [--threads N|auto] [--precision f64|f32]
   repro exp   <fig1|fig2|fig3|fig4|tab1|fig6|fig9|fig8|tab2|tab3|fig12|fig13|appd|all>
               [--smoke] [--docs N] [--force]
   repro serve --ckpt a.ckpt[,b.ckpt,...] [--addr HOST:PORT] [--max-batch N]
               [--max-wait-ms F] [--workers N] [--cache N] [--docs N]
               [--slots N] [--queue-cap N]
-              [--backend ...] [--threads N|auto] [--mock]
+              [--backend ...] [--threads N|auto] [--precision f64|f32]
+              [--mock]
               (line-delimited JSON; ops: generate, score, stats, shutdown;
                --docs must match training so the tokenizers agree;
                --slots 0 disables KV-cached continuous batching and decodes
@@ -110,8 +115,9 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
               [--retries N] [--deadline-ms F] [--health-interval-ms F]
               [--probe-timeout-ms F] [--fail-threshold N]
               [serve flags passed through under --spawn: --ckpt --mock
-               --backend --threads --slots --queue-cap --max-batch
-               --max-wait-ms --docs --workers --cache --idle-timeout-ms]
+               --backend --threads --precision --slots --queue-cap
+               --max-batch --max-wait-ms --docs --workers --cache
+               --idle-timeout-ms]
               (same NDJSON protocol fanned across N serve replicas:
                health-checked circuit breakers, session affinity,
                retry/backoff + failover for idempotent ops, per-request
@@ -144,6 +150,10 @@ struct BackendSel {
     /// then auto — results are bit-identical at every value); ignored by
     /// the pjrt backend
     threads: usize,
+    /// native model-compute precision (`--precision f64|f32`, then
+    /// REPRO_PRECISION, then f64); the optimizer always runs f64 and the
+    /// pjrt backend ignores it
+    precision: spectron::runtime::Precision,
 }
 
 impl BackendSel {
@@ -151,6 +161,10 @@ impl BackendSel {
         let choice = args.str("backend", "auto");
         let threads = spectron::util::pool::cli_threads(args.opt_str("threads").as_deref())
             .map_err(|e| anyhow!(e))?;
+        let precision = match args.opt_str("precision") {
+            Some(p) => spectron::runtime::Precision::parse(&p)?,
+            None => spectron::runtime::Precision::from_env(),
+        };
         let auto = choice == "auto";
         let root = ArtifactIndex::default_root();
         let kind = match choice.as_str() {
@@ -183,7 +197,7 @@ impl BackendSel {
             }
             BackendKind::Native => (BackendKind::Native, None, None),
         };
-        Ok(BackendSel { kind, auto, idx, rt, threads })
+        Ok(BackendSel { kind, auto, idx, rt, threads, precision })
     }
 
     fn pjrt_parts(root: &std::path::Path) -> Result<(ArtifactIndex, Runtime)> {
@@ -208,12 +222,14 @@ impl BackendSel {
                             "artifacts unusable for {} ({e:#}) — falling back to native",
                             v.name
                         );
-                        Ok(Box::new(NativeBackend::with_threads(v, self.threads)?))
+                        Ok(Box::new(NativeBackend::with_opts(v, self.threads, self.precision)?))
                     }
                     Err(e) => Err(e),
                 }
             }
-            BackendKind::Native => Ok(Box::new(NativeBackend::with_threads(v, self.threads)?)),
+            BackendKind::Native => {
+                Ok(Box::new(NativeBackend::with_opts(v, self.threads, self.precision)?))
+            }
         }
     }
 }
@@ -487,6 +503,7 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
         // not reported as unknown, but don't force artifact resolution
         let _ = args.str("backend", "auto");
         let _ = args.opt_str("threads");
+        let _ = args.opt_str("precision");
         None
     } else {
         Some(BackendSel::resolve(args)?)
@@ -532,7 +549,14 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
             }
             BackendKind::Native => {
                 info!("serve", "NATIVE engine (no artifacts required)");
-                NativeEngine::factory_opts(ckpts, cache, docs as u64, sel.threads, slots)
+                NativeEngine::factory_precision(
+                    ckpts,
+                    cache,
+                    docs as u64,
+                    sel.threads,
+                    slots,
+                    sel.precision,
+                )
             }
         }
     };
@@ -566,7 +590,7 @@ fn route_cmd(args: &mut Args) -> Result<()> {
     // owned by the supervisor, so --addr is deliberately not in the list
     let mut serve_args: Vec<String> = Vec::new();
     for key in [
-        "ckpt", "backend", "threads", "slots", "queue-cap", "max-batch",
+        "ckpt", "backend", "threads", "precision", "slots", "queue-cap", "max-batch",
         "max-wait-ms", "docs", "workers", "cache", "idle-timeout-ms",
     ] {
         if let Some(v) = args.opt_str(key) {

@@ -103,6 +103,9 @@ pub enum DecodeModel {
     /// Native path: f64 parameters decoded once from the prefix and
     /// shared (`Arc`) across every session on that checkpoint.
     Native(Arc<Model>),
+    /// Native f32 compute path (docs/adr/008-f32-compute-path.md):
+    /// same decode-once sharing, half the resident parameter bytes.
+    NativeF32(Arc<Model<f32>>),
     /// Fallback for backends without an incremental path (PJRT): each
     /// step re-runs the full `logits` program over the token history.
     Full,
@@ -116,6 +119,7 @@ pub struct DecodeSession(pub(crate) DecodeSt);
 
 pub(crate) enum DecodeSt {
     Native { kv: KvCache },
+    NativeF32 { kv: KvCache<f32> },
     Full { ids: Vec<i32>, cap: usize },
 }
 
@@ -124,6 +128,7 @@ impl DecodeSession {
     pub fn positions(&self) -> usize {
         match &self.0 {
             DecodeSt::Native { kv } => kv.len(),
+            DecodeSt::NativeF32 { kv } => kv.len(),
             DecodeSt::Full { ids, .. } => ids.len(),
         }
     }
@@ -132,6 +137,7 @@ impl DecodeSession {
     pub fn capacity(&self) -> usize {
         match &self.0 {
             DecodeSt::Native { kv } => kv.capacity(),
+            DecodeSt::NativeF32 { kv } => kv.capacity(),
             DecodeSt::Full { cap, .. } => *cap,
         }
     }
@@ -210,7 +216,7 @@ pub trait Backend {
                 ids: Vec::new(),
                 cap: self.manifest().seq_len,
             })),
-            DecodeModel::Native(_) => {
+            DecodeModel::Native(_) | DecodeModel::NativeF32(_) => {
                 Err(anyhow!("native decode model on a fallback backend"))
             }
         }

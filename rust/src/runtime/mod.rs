@@ -38,5 +38,5 @@ pub use backend::{
     Backend, BackendFactory, BackendKind, DecodeModel, DecodeSession, PjrtBackend, StateBuf,
 };
 pub use client::{HostBuffer, Program, Runtime, StagingPool};
-pub use native::NativeBackend;
+pub use native::{NativeBackend, Precision};
 pub use state::StateHost;

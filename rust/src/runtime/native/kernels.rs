@@ -13,7 +13,7 @@
 //! bit-identical to the serial allocating mirrors at every thread count
 //! (the `parallel == serial` proptests pin it).
 
-use crate::linalg::{Mat, NS_COEFFS};
+use crate::linalg::{Elem, Mat, NS_COEFFS};
 use crate::util::pool::{self, DisjointMut};
 
 /// Newton-Schulz iteration count (paper default, `optim.K_NS`).
@@ -30,8 +30,11 @@ pub fn normalize_eps(x: &mut [f64]) {
     }
 }
 
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+/// Ascending-index inner product — generic so the f32 forward path and
+/// the f64 optimizer share one accumulation order (same left fold
+/// `sum::<f64>()` lowered to; f64 bits did not move going generic).
+pub fn dot<T: Elem>(a: &[T], b: &[T]) -> T {
+    a.iter().zip(b).fold(T::ZERO, |acc, (x, y)| acc + *x * *y)
 }
 
 /// Reusable buffers for [`power_iter_inplace`]: one right vector and one
@@ -121,19 +124,27 @@ pub fn newton_schulz_into(g: &Mat, steps: usize, threads: usize, s: &mut NsScrat
 
 /// Newton-Schulz orthogonalization of one stacked `(layers, m, n)` tensor
 /// (flat storage), vmapped over the leading layer axis like the build
-/// side's kernel. Layer blocks fan across the pool (ownership fixed by
-/// `(index, nthreads)`; each layer's quintic is serial within its task),
-/// so the output is bit-identical to the serial loop at every `threads`.
-pub fn newton_schulz_stacked(
+/// side's kernel, written into a caller-recycled buffer. Layer blocks fan
+/// across the pool (ownership fixed by `(index, nthreads)`; each layer's
+/// quintic is serial within its task), so the output is bit-identical to
+/// the serial loop at every `threads`.
+///
+/// The `clear` + `resize` reset is an *explicit overwrite-reset*: every
+/// element of `out` is `copy_from_slice`-assigned below, so the zero-fill
+/// only fixes the length — the optimizer recycles `out` across steps
+/// ([`super::optim::OptScratch`]) and stale data can never leak through.
+pub fn newton_schulz_stacked_into(
     data: &[f64],
     layers: usize,
     m: usize,
     n: usize,
     threads: usize,
-) -> Vec<f64> {
+    out: &mut Vec<f64>,
+) {
     let per = m * n;
     assert_eq!(data.len(), layers * per);
-    let mut out = vec![0.0; data.len()];
+    out.clear();
+    out.resize(data.len(), 0.0);
     if layers == 1 {
         // a single layer cannot use the layer fan-out; parallelize the
         // quintic's matmuls instead (same bits either way)
@@ -142,9 +153,9 @@ pub fn newton_schulz_stacked(
         let mut o = Mat::zeros(0, 0);
         newton_schulz_into(&g, K_NS, threads, &mut s, &mut o);
         out.copy_from_slice(&o.data);
-        return out;
+        return;
     }
-    let slots = DisjointMut::new(&mut out);
+    let slots = DisjointMut::new(out.as_mut_slice());
     pool::chunked_for(threads, layers, &|lo, hi| {
         let mut s = NsScratch::default();
         let mut o = Mat::zeros(0, 0);
@@ -157,11 +168,24 @@ pub fn newton_schulz_stacked(
             dst.copy_from_slice(&o.data);
         }
     });
+}
+
+/// Allocating wrapper over [`newton_schulz_stacked_into`] (tests and the
+/// orthogonal-init path, which run once, keep the short spelling).
+pub fn newton_schulz_stacked(
+    data: &[f64],
+    layers: usize,
+    m: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    newton_schulz_stacked_into(data, layers, m, n, threads, &mut out);
     out
 }
 
 /// View layer `l` of a stacked `(layers, m, n)` flat tensor as a `Mat`.
-pub fn layer_mat(data: &[f64], l: usize, m: usize, n: usize) -> Mat {
+pub fn layer_mat<T: Elem>(data: &[T], l: usize, m: usize, n: usize) -> Mat<T> {
     let per = m * n;
     Mat {
         rows: m,
@@ -171,7 +195,7 @@ pub fn layer_mat(data: &[f64], l: usize, m: usize, n: usize) -> Mat {
 }
 
 /// [`layer_mat`] into a reused buffer.
-pub fn layer_mat_into(data: &[f64], l: usize, m: usize, n: usize, out: &mut Mat) {
+pub fn layer_mat_into<T: Elem>(data: &[T], l: usize, m: usize, n: usize, out: &mut Mat<T>) {
     let per = m * n;
     out.rows = m;
     out.cols = n;
@@ -225,6 +249,22 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// The optimizer recycles one output buffer across steps: a dirty,
+    /// wrong-length buffer must produce the same bits as a fresh one.
+    #[test]
+    fn stacked_ns_into_recycles_dirty_buffer_bitwise() {
+        let mut rng = Pcg64::new(14);
+        let (layers, m, n) = (3usize, 24, 6);
+        let data: Vec<f64> = (0..layers * m * n).map(|_| rng.normal()).collect();
+        let want = newton_schulz_stacked(&data, layers, m, n, 1);
+        let mut out = vec![f64::NAN; 7]; // dirty + wrong length
+        newton_schulz_stacked_into(&data, layers, m, n, 2, &mut out);
+        assert_eq!(want.len(), out.len());
+        for (a, b) in want.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

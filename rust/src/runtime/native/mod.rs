@@ -5,13 +5,22 @@
 //! header slots, loss ring, params, optimizer tensors, all at the exact
 //! offsets of `python/compile/state.py` (re-derived by
 //! [`crate::runtime::layout`], pinned by the golden fixture) — and
-//! implements the whole program family in f64 over [`crate::linalg::Mat`]:
+//! implements the whole program family over [`crate::linalg::Mat`]:
 //!
 //! * [`model`]   — low-rank transformer forward + hand-derived backward,
 //! * [`optim`]   — AdamW/SGD/Muon/renorm and the full Spectron update
 //!   (power-iteration sigma estimates, Newton-Schulz orthogonalization,
 //!   spectral renormalization) plus the spectral telemetry,
 //! * [`kernels`] — the L1 kernel mirrors the property tests pin.
+//!
+//! Precision split (docs/adr/008-f32-compute-path.md): the model-side
+//! tensor work (fwd/bwd/eval/decode) runs in the element type selected
+//! by [`Precision`] — f64 by default (bit-identical to serial at every
+//! thread count), f32 on request (half the memory traffic of the
+//! f64 mirror; bit-identical to *itself* across thread counts, agrees
+//! with f64 within the proptested tolerance band). The optimizer always
+//! runs in f64: that is where the Spectron/NS/power-iteration
+//! bit-identity proptests live, and the state at rest is f32 either way.
 //!
 //! `step` is literally `grad` composed with `apply` (including the f32
 //! round-trip of the grad vector), so the fused and split paths are
@@ -32,35 +41,114 @@ use super::layout::{self, is_factorized, matrix_dims, param_names, MATRIX_NAMES}
 use super::state as slots;
 use super::Manifest;
 use crate::config::VariantCfg;
-use crate::linalg::{Arena, Mat};
+use crate::linalg::{Arena, Elem, Mat};
 use crate::util::pool;
 use crate::util::rng::Pcg64;
 
-use model::{Ctx, KvCache, Model};
+use model::{BwdScratch, Ctx, KvCache, Model};
 use optim::TenMap;
 
-/// How many decoded-f64 models a backend keeps keyed by prefix handle:
-/// serve engines hold one checkpoint per variant plus the occasional
-/// re-upload, so a small MRU list covers the working set.
+/// How many decoded models a backend keeps keyed by prefix handle (per
+/// precision): serve engines hold one checkpoint per variant plus the
+/// occasional re-upload, so a small MRU list covers the working set.
 const MODEL_CACHE: usize = 4;
 
+/// Element type the model-side tensor work (fwd/bwd/eval/decode) runs
+/// in. The optimizer always runs in f64 regardless — that is where the
+/// bit-identity contract lives (docs/adr/008-f32-compute-path.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// f64 model compute: bit-identical to serial at every thread count.
+    #[default]
+    F64,
+    /// f32 model compute: half the memory traffic of the f64 mirror;
+    /// bit-identical to itself across thread counts, agrees with f64
+    /// within the proptested tolerance band.
+    F32,
+}
+
+impl Precision {
+    /// `REPRO_PRECISION=f32` opts the process into the f32 compute
+    /// path; anything else (or unset) keeps the f64 default.
+    pub fn from_env() -> Precision {
+        match std::env::var("REPRO_PRECISION") {
+            Ok(v) if v.eq_ignore_ascii_case("f32") => Precision::F32,
+            _ => Precision::F64,
+        }
+    }
+
+    /// Parse a CLI spelling (`--precision f32|f64`).
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "f64" => Ok(Precision::F64),
+            _ => Err(anyhow!("unknown precision '{s}' (expected f32 or f64)")),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
 /// Per-backend reusable storage (DESIGN.md §Native tensor core): the
-/// fwd/bwd arena plus the optimizer's decoded f64 mirrors, all recycled
+/// fwd/bwd arenas and backward accumulators (one set per element type),
+/// the optimizer's decoded f64 mirrors and its scratch, all recycled
 /// across steps so the steady-state step loop stops allocating. Behind a
 /// `Mutex` (not `RefCell`) so a backend is `Sync` and the DP fan-out can
 /// share a worker set by reference; contention is nil — one lock per op.
 #[derive(Default)]
 struct Scratch {
     arena: Arena,
+    arena32: Arena<f32>,
+    bwd: BwdScratch,
+    bwd32: BwdScratch<f32>,
+    opt: optim::OptScratch,
+    telem: optim::TelemetryScratch,
     tensors: Option<TenMap>,
     grads: Option<std::collections::BTreeMap<String, Vec<f64>>>,
-    /// MRU cache of decoded f64 models keyed by prefix handle id, so
-    /// eval/logits/decode on a resident prefix pay the f32 -> f64 decode
-    /// once per upload instead of once per call (DESIGN.md §Serving).
+    /// MRU cache of decoded models keyed by prefix handle id, so
+    /// eval/logits/decode on a resident prefix pay the at-rest -> compute
+    /// decode once per upload instead of once per call (DESIGN.md
+    /// §Serving). One list per precision.
     models: Vec<(u64, Arc<Model>)>,
-    /// How many `Model::from_prefix` decodes the cache has performed —
+    models32: Vec<(u64, Arc<Model<f32>>)>,
+    /// How many `Model::from_prefix` decodes the caches have performed —
     /// the observable the prefix-reuse regression test pins.
     model_decodes: u64,
+}
+
+/// Element types the backend can run model compute in: routes a generic
+/// op to the scratch fields of its precision (arena + backward
+/// accumulators + model cache) without duplicating the op bodies.
+trait NativeElem: Elem {
+    /// The arena and backward scratch of this precision, borrowed
+    /// together (one call, so the borrow checker sees one split of
+    /// `Scratch` instead of two sequential `&mut` takes).
+    fn bufs(sc: &mut Scratch) -> (&mut Arena<Self>, &mut BwdScratch<Self>);
+    /// The decoded-model MRU cache of this precision.
+    fn models(sc: &mut Scratch) -> &mut Vec<(u64, Arc<Model<Self>>)>;
+}
+
+impl NativeElem for f64 {
+    fn bufs(sc: &mut Scratch) -> (&mut Arena<f64>, &mut BwdScratch<f64>) {
+        (&mut sc.arena, &mut sc.bwd)
+    }
+    fn models(sc: &mut Scratch) -> &mut Vec<(u64, Arc<Model<f64>>)> {
+        &mut sc.models
+    }
+}
+
+impl NativeElem for f32 {
+    fn bufs(sc: &mut Scratch) -> (&mut Arena<f32>, &mut BwdScratch<f32>) {
+        (&mut sc.arena32, &mut sc.bwd32)
+    }
+    fn models(sc: &mut Scratch) -> &mut Vec<(u64, Arc<Model<f32>>)> {
+        &mut sc.models32
+    }
 }
 
 pub struct NativeBackend {
@@ -69,6 +157,8 @@ pub struct NativeBackend {
     /// tensor-core thread budget (1 = serial; results are bit-identical
     /// at every value — only wall time changes)
     threads: usize,
+    /// element type for model-side compute (optimizer stays f64)
+    precision: Precision,
     scratch: Mutex<Scratch>,
 }
 
@@ -82,24 +172,45 @@ impl NativeBackend {
     /// Thread budget: the `REPRO_THREADS` env override when set, else
     /// serial (the CI matrix runs the suite under both 1 and 4 — the
     /// determinism contract makes that a pure re-run, not a tolerance).
+    /// Precision: the `REPRO_PRECISION` env override, else f64.
     pub fn new(v: &VariantCfg) -> Result<NativeBackend> {
         Self::with_threads(v, pool::env_threads())
     }
 
     /// [`NativeBackend::new`] with an explicit thread budget
-    /// (`repro ... --threads N|auto` lands here via the launcher).
+    /// (`repro ... --threads N|auto` lands here via the launcher);
+    /// precision still comes from the environment, so every existing
+    /// caller picks up `REPRO_PRECISION` without a signature change.
     pub fn with_threads(v: &VariantCfg, threads: usize) -> Result<NativeBackend> {
+        Self::with_opts(v, threads, Precision::from_env())
+    }
+
+    /// Fully explicit constructor: thread budget and compute precision
+    /// (`repro ... --precision f32` lands here via the launcher).
+    pub fn with_opts(v: &VariantCfg, threads: usize, precision: Precision) -> Result<NativeBackend> {
         let manifest = layout::build_manifest(v)?;
         Ok(NativeBackend {
             manifest,
             cfg: v.clone(),
             threads: threads.max(1),
+            precision,
             scratch: Mutex::new(Scratch::default()),
         })
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Bytes currently retained by the fwd/bwd arenas (both precisions)
+    /// — the observable the arena-bound serve churn test pins.
+    pub fn arena_retained_bytes(&self) -> usize {
+        let sc = self.scratch();
+        sc.arena.retained_bytes() + sc.arena32.retained_bytes()
     }
 
     /// Poison-tolerant scratch access: the scratch holds only reusable
@@ -261,7 +372,20 @@ impl NativeBackend {
 
     /// `[loss | flat grads]` (f32), gradients in `param_names` order —
     /// the exact layout of the build side's `grad` program output.
+    /// Dispatches the fwd/bwd tensor work to the configured precision.
     pub fn grad_vec(&self, state: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        match self.precision {
+            Precision::F64 => self.grad_vec_t::<f64>(state, tokens),
+            Precision::F32 => self.grad_vec_t::<f32>(state, tokens),
+        }
+    }
+
+    /// [`NativeBackend::grad_vec`] in element type `T`. Zero net
+    /// per-step heap growth in steady state: the fwd activations come
+    /// from the precision's arena, the grad accumulators live in the
+    /// persistent [`BwdScratch`] (explicitly reset each call), and the
+    /// transient decode/output vectors free exactly what they allocate.
+    fn grad_vec_t<T: NativeElem>(&self, state: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
         self.check_trainable()?;
         anyhow::ensure!(
             state.len() == self.manifest.state_len,
@@ -273,7 +397,8 @@ impl NativeBackend {
         anyhow::ensure!(tokens.len() == b * w, "token batch shape mismatch");
         let t = self.manifest.seq_len;
 
-        let model = Model::from_prefix(&self.cfg, &self.manifest, &state[..self.manifest.params_end])?;
+        let model: Model<T> =
+            Model::from_prefix(&self.cfg, &self.manifest, &state[..self.manifest.params_end])?;
         let mut inputs = Vec::with_capacity(b * t);
         let mut targets = Vec::with_capacity(b * t);
         for row in 0..b {
@@ -281,12 +406,14 @@ impl NativeBackend {
             targets.extend_from_slice(&tokens[row * w + 1..row * w + w]);
         }
         let mut sc = self.scratch();
-        let mut cx = Ctx { threads: self.threads, arena: &mut sc.arena };
+        let (arena, bwd) = T::bufs(&mut sc);
+        let mut cx = Ctx { threads: self.threads, arena };
         let (logits, cache) = model.forward_ctx(&inputs, b, t, &mut cx)?;
         let nll = model::token_nll(&logits, &targets);
-        let loss = nll.iter().sum::<f64>() / nll.len() as f64;
+        // same left fold `sum::<f64>()` lowers to, so f64 bits are unmoved
+        let loss = nll.iter().fold(0.0f64, |acc, x| acc + x.to_f64()) / nll.len() as f64;
         let dlogits = model::mean_nll_backward_ar(&logits, &targets, cx.arena);
-        let grads = model.backward_ctx(&cache, &dlogits, &mut cx);
+        model.backward_ctx_into(&cache, &dlogits, &mut cx, bwd);
         cache.recycle(cx.arena);
         cx.arena.put(dlogits);
         cx.arena.put(logits);
@@ -294,12 +421,12 @@ impl NativeBackend {
         let mut out = Vec::with_capacity(1 + self.manifest.n_params);
         out.push(loss as f32);
         for name in param_names(&self.cfg) {
-            let g = grads
-                .get(&name)
+            let g = bwd
+                .grad(&name)
                 .ok_or_else(|| anyhow!("backward produced no grad for '{name}'"))?;
             let spec = self.manifest.tensor(&name)?;
             anyhow::ensure!(g.len() == spec.size(), "grad '{name}' size mismatch");
-            out.extend(g.iter().map(|&x| x as f32));
+            out.extend(g.iter().map(|x| x.to_f32()));
         }
         Ok(out)
     }
@@ -342,12 +469,19 @@ impl NativeBackend {
         let mut tensors: TenMap =
             optim::state_to_tensors_reuse(&self.manifest, state, sc.tensors.take());
         let tracked_old = self.cfg.telemetry.then(|| optim::capture_tracked(&self.cfg, &tensors));
-        let info = optim::optimizer_step(&self.cfg, &mut tensors, &grads, &header, self.threads)?;
+        let info = optim::optimizer_step_scratch(
+            &self.cfg,
+            &mut tensors,
+            &grads,
+            &header,
+            self.threads,
+            &mut sc.opt,
+        )?;
         let step = header[slots::STEP] as usize;
         let (w_spec, dw_spec, dy_rms) = match tracked_old {
             Some(old) => {
                 let new = optim::capture_tracked(&self.cfg, &tensors);
-                optim::spectral_telemetry(&old, &new, step)
+                optim::spectral_telemetry_into(&old, &new, step, &mut sc.telem)
             }
             None => (0.0, 0.0, 0.0),
         };
@@ -382,12 +516,12 @@ impl NativeBackend {
 
     // ---- eval / logits --------------------------------------------------
 
-    /// Decoded f64 model for a resident prefix, cached per handle id:
-    /// repeated eval/logits/decode calls against one upload share a
-    /// single `Model::from_prefix`. The decode itself runs outside the
-    /// scratch lock (it needs no scratch, and the `_with` callees
-    /// re-lock for the arena).
-    fn model_for(&self, prefix: &StateBuf) -> Result<Arc<Model>> {
+    /// Decoded model (in element type `T`) for a resident prefix,
+    /// cached per handle id: repeated eval/logits/decode calls against
+    /// one upload share a single `Model::from_prefix`. The decode
+    /// itself runs outside the scratch lock (it needs no scratch, and
+    /// the `_with` callees re-lock for the arena).
+    fn model_for_t<T: NativeElem>(&self, prefix: &StateBuf) -> Result<Arc<Model<T>>> {
         let data = prefix.as_native()?;
         anyhow::ensure!(
             data.len() >= self.manifest.params_end,
@@ -400,10 +534,11 @@ impl NativeBackend {
             .ok_or_else(|| anyhow!("native handle without identity"))?;
         {
             let mut sc = self.scratch();
-            if let Some(pos) = sc.models.iter().position(|(k, _)| *k == id) {
-                let hit = sc.models.remove(pos);
+            let models = T::models(&mut sc);
+            if let Some(pos) = models.iter().position(|(k, _)| *k == id) {
+                let hit = models.remove(pos);
                 let m = hit.1.clone();
-                sc.models.push(hit);
+                models.push(hit);
                 return Ok(m);
             }
         }
@@ -411,14 +546,15 @@ impl NativeBackend {
             Arc::new(Model::from_prefix(&self.cfg, &self.manifest, &data[..self.manifest.params_end])?);
         let mut sc = self.scratch();
         sc.model_decodes += 1;
-        if let Some((_, cached)) = sc.models.iter().find(|(k, _)| *k == id) {
+        let models = T::models(&mut sc);
+        if let Some((_, cached)) = models.iter().find(|(k, _)| *k == id) {
             // raced with another session decoding the same prefix
             return Ok(cached.clone());
         }
-        if sc.models.len() >= MODEL_CACHE {
-            sc.models.remove(0);
+        if models.len() >= MODEL_CACHE {
+            models.remove(0);
         }
-        sc.models.push((id, model.clone()));
+        models.push((id, model.clone()));
         Ok(model)
     }
 
@@ -431,11 +567,24 @@ impl NativeBackend {
     /// Mirror of `programs.make_eval`: `[sum_nll, sum_cnt | nll_b | cnt_b]`.
     pub fn eval_spans(&self, prefix: &[f32], tokens: &[i32], spans: &[i32]) -> Result<Vec<f32>> {
         anyhow::ensure!(prefix.len() == self.manifest.params_end, "eval prefix length");
-        let model = Model::from_prefix(&self.cfg, &self.manifest, prefix)?;
-        self.eval_spans_with(&model, tokens, spans)
+        match self.precision {
+            Precision::F64 => {
+                let model: Model = Model::from_prefix(&self.cfg, &self.manifest, prefix)?;
+                self.eval_spans_with(&model, tokens, spans)
+            }
+            Precision::F32 => {
+                let model: Model<f32> = Model::from_prefix(&self.cfg, &self.manifest, prefix)?;
+                self.eval_spans_with(&model, tokens, spans)
+            }
+        }
     }
 
-    fn eval_spans_with(&self, model: &Model, tokens: &[i32], spans: &[i32]) -> Result<Vec<f32>> {
+    fn eval_spans_with<T: NativeElem>(
+        &self,
+        model: &Model<T>,
+        tokens: &[i32],
+        spans: &[i32],
+    ) -> Result<Vec<f32>> {
         let (b, w) = self.batch_dims();
         let t = self.manifest.seq_len;
         anyhow::ensure!(tokens.len() == b * w, "eval tokens shape");
@@ -447,7 +596,8 @@ impl NativeBackend {
             targets.extend_from_slice(&tokens[row * w + 1..row * w + w]);
         }
         let mut sc = self.scratch();
-        let mut cx = Ctx { threads: self.threads, arena: &mut sc.arena };
+        let (arena, _) = T::bufs(&mut sc);
+        let mut cx = Ctx { threads: self.threads, arena };
         let (logits, cache) = model.forward_ctx(&inputs, b, t, &mut cx)?;
         let nll = model::token_nll(&logits, &targets);
         cache.recycle(cx.arena);
@@ -458,7 +608,7 @@ impl NativeBackend {
             let (start, end) = (spans[row * 2], spans[row * 2 + 1]);
             for pos in 0..t as i32 {
                 if pos >= start && pos < end - 1 {
-                    per_nll[row] += nll[row * t + pos as usize] as f32;
+                    per_nll[row] += nll[row * t + pos as usize].to_f32();
                     per_cnt[row] += 1.0;
                 }
             }
@@ -476,30 +626,79 @@ impl NativeBackend {
     /// flattened `(batch * vocab)`.
     pub fn logits_at(&self, prefix: &[f32], tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
         anyhow::ensure!(prefix.len() == self.manifest.params_end, "logits prefix length");
-        let model = Model::from_prefix(&self.cfg, &self.manifest, prefix)?;
-        self.logits_at_with(&model, tokens, pos)
+        match self.precision {
+            Precision::F64 => {
+                let model: Model = Model::from_prefix(&self.cfg, &self.manifest, prefix)?;
+                self.logits_at_with(&model, tokens, pos)
+            }
+            Precision::F32 => {
+                let model: Model<f32> = Model::from_prefix(&self.cfg, &self.manifest, prefix)?;
+                self.logits_at_with(&model, tokens, pos)
+            }
+        }
     }
 
-    fn logits_at_with(&self, model: &Model, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+    fn logits_at_with<T: NativeElem>(
+        &self,
+        model: &Model<T>,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<f32>> {
         let b = self.manifest.batch;
         let t = self.manifest.seq_len;
         let v = self.manifest.vocab;
         anyhow::ensure!(tokens.len() == b * t, "logits tokens shape");
         anyhow::ensure!(pos.len() == b, "logits pos shape");
         let mut sc = self.scratch();
-        let mut cx = Ctx { threads: self.threads, arena: &mut sc.arena };
+        let (arena, _) = T::bufs(&mut sc);
+        let mut cx = Ctx { threads: self.threads, arena };
         let (logits, cache) = model.forward_ctx(tokens, b, t, &mut cx)?;
         let mut out = vec![0f32; b * v];
         for row in 0..b {
             let p = (pos[row].clamp(0, t as i32 - 1)) as usize;
             let src = &logits.data[(row * t + p) * v..(row * t + p + 1) * v];
             for (dst, &val) in out[row * v..(row + 1) * v].iter_mut().zip(src) {
-                *dst = val as f32;
+                *dst = val.to_f32();
             }
         }
         cache.recycle(cx.arena);
         cx.arena.put(logits);
         Ok(out)
+    }
+
+    /// Shared body of [`Backend::decode_prefill`] for either precision.
+    fn decode_prefill_t<T: NativeElem>(
+        &self,
+        m: &Model<T>,
+        kv: &mut KvCache<T>,
+        ids: &[i32],
+    ) -> Result<Vec<f32>> {
+        let mut sc = self.scratch();
+        let (arena, _) = T::bufs(&mut sc);
+        let mut cx = Ctx { threads: self.threads, arena };
+        kv.clear();
+        let logits = m.prefill(ids, kv, &mut cx)?;
+        let v = m.vocab;
+        let out = logits.data[(ids.len() - 1) * v..ids.len() * v]
+            .iter()
+            .map(|x| x.to_f32())
+            .collect();
+        cx.arena.put(logits);
+        Ok(out)
+    }
+
+    /// Shared body of [`Backend::decode_step`] for either precision.
+    fn decode_step_t<T: NativeElem>(
+        &self,
+        m: &Model<T>,
+        kv: &mut KvCache<T>,
+        tok: i32,
+    ) -> Result<Vec<f32>> {
+        let mut sc = self.scratch();
+        let (arena, _) = T::bufs(&mut sc);
+        let mut cx = Ctx { threads: self.threads, arena };
+        let logits = m.logits_incremental(tok, kv, &mut cx)?;
+        Ok(logits.iter().map(|x| x.to_f32()).collect())
     }
 }
 
@@ -529,26 +728,52 @@ impl Backend for NativeBackend {
     }
 
     fn eval(&mut self, prefix: &StateBuf, tokens: &[i32], spans: &[i32]) -> Result<Vec<f32>> {
-        let model = self.model_for(prefix)?;
-        self.eval_spans_with(&model, tokens, spans)
+        match self.precision {
+            Precision::F64 => {
+                let model = self.model_for_t::<f64>(prefix)?;
+                self.eval_spans_with(&model, tokens, spans)
+            }
+            Precision::F32 => {
+                let model = self.model_for_t::<f32>(prefix)?;
+                self.eval_spans_with(&model, tokens, spans)
+            }
+        }
     }
 
     fn logits(&mut self, prefix: &StateBuf, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
-        let model = self.model_for(prefix)?;
-        self.logits_at_with(&model, tokens, pos)
+        match self.precision {
+            Precision::F64 => {
+                let model = self.model_for_t::<f64>(prefix)?;
+                self.logits_at_with(&model, tokens, pos)
+            }
+            Precision::F32 => {
+                let model = self.model_for_t::<f32>(prefix)?;
+                self.logits_at_with(&model, tokens, pos)
+            }
+        }
     }
 
     fn decode_model(&mut self, prefix: &StateBuf) -> Result<DecodeModel> {
-        Ok(DecodeModel::Native(self.model_for(prefix)?))
+        match self.precision {
+            Precision::F64 => Ok(DecodeModel::Native(self.model_for_t::<f64>(prefix)?)),
+            Precision::F32 => Ok(DecodeModel::NativeF32(self.model_for_t::<f32>(prefix)?)),
+        }
     }
 
     fn decode_open(&mut self, model: &DecodeModel) -> Result<DecodeSession> {
-        let DecodeModel::Native(m) = model else {
-            return Err(anyhow!("fallback decode model on the native backend"));
-        };
         let mut sc = self.scratch();
-        let kv = KvCache::new(m.layers, self.manifest.seq_len + 1, m.hidden, &mut sc.arena);
-        Ok(DecodeSession(DecodeSt::Native { kv }))
+        match model {
+            DecodeModel::Native(m) => {
+                let kv = KvCache::new(m.layers, self.manifest.seq_len + 1, m.hidden, &mut sc.arena);
+                Ok(DecodeSession(DecodeSt::Native { kv }))
+            }
+            DecodeModel::NativeF32(m) => {
+                let kv =
+                    KvCache::new(m.layers, self.manifest.seq_len + 1, m.hidden, &mut sc.arena32);
+                Ok(DecodeSession(DecodeSt::NativeF32 { kv }))
+            }
+            DecodeModel::Full => Err(anyhow!("fallback decode model on the native backend")),
+        }
     }
 
     fn decode_prefill(
@@ -558,23 +783,14 @@ impl Backend for NativeBackend {
         st: &mut DecodeSession,
         ids: &[i32],
     ) -> Result<Vec<f32>> {
-        let DecodeModel::Native(m) = model else {
-            return Err(anyhow!("fallback decode model on the native backend"));
-        };
-        let DecodeSt::Native { kv } = &mut st.0 else {
-            return Err(anyhow!("decode session does not belong to this backend"));
-        };
-        let mut sc = self.scratch();
-        let mut cx = Ctx { threads: self.threads, arena: &mut sc.arena };
-        kv.clear();
-        let logits = m.prefill(ids, kv, &mut cx)?;
-        let v = m.vocab;
-        let out = logits.data[(ids.len() - 1) * v..ids.len() * v]
-            .iter()
-            .map(|&x| x as f32)
-            .collect();
-        cx.arena.put(logits);
-        Ok(out)
+        match (model, &mut st.0) {
+            (DecodeModel::Native(m), DecodeSt::Native { kv }) => self.decode_prefill_t(m, kv, ids),
+            (DecodeModel::NativeF32(m), DecodeSt::NativeF32 { kv }) => {
+                self.decode_prefill_t(m, kv, ids)
+            }
+            (DecodeModel::Full, _) => Err(anyhow!("fallback decode model on the native backend")),
+            _ => Err(anyhow!("decode session does not belong to this backend")),
+        }
     }
 
     fn decode_step(
@@ -584,21 +800,21 @@ impl Backend for NativeBackend {
         st: &mut DecodeSession,
         tok: i32,
     ) -> Result<Vec<f32>> {
-        let DecodeModel::Native(m) = model else {
-            return Err(anyhow!("fallback decode model on the native backend"));
-        };
-        let DecodeSt::Native { kv } = &mut st.0 else {
-            return Err(anyhow!("decode session does not belong to this backend"));
-        };
-        let mut sc = self.scratch();
-        let mut cx = Ctx { threads: self.threads, arena: &mut sc.arena };
-        let logits = m.logits_incremental(tok, kv, &mut cx)?;
-        Ok(logits.iter().map(|&x| x as f32).collect())
+        match (model, &mut st.0) {
+            (DecodeModel::Native(m), DecodeSt::Native { kv }) => self.decode_step_t(m, kv, tok),
+            (DecodeModel::NativeF32(m), DecodeSt::NativeF32 { kv }) => {
+                self.decode_step_t(m, kv, tok)
+            }
+            (DecodeModel::Full, _) => Err(anyhow!("fallback decode model on the native backend")),
+            _ => Err(anyhow!("decode session does not belong to this backend")),
+        }
     }
 
     fn decode_close(&mut self, st: DecodeSession) {
-        if let DecodeSt::Native { kv } = st.0 {
-            kv.recycle(&mut self.scratch().arena);
+        match st.0 {
+            DecodeSt::Native { kv } => kv.recycle(&mut self.scratch().arena),
+            DecodeSt::NativeF32 { kv } => kv.recycle(&mut self.scratch().arena32),
+            DecodeSt::Full { .. } => {}
         }
     }
 
@@ -916,6 +1132,102 @@ mod tests {
         let prefix2 = be.upload_prefix(&state[..be.manifest.params_end]).unwrap();
         Backend::eval(&mut be, &prefix2, &toks, &spans).unwrap();
         assert_eq!(be.model_decodes(), 2, "a re-upload is a new identity");
+    }
+
+    /// The persistent `BwdScratch` is reused across grad calls: a second
+    /// call on the same inputs must produce the same bits as the first
+    /// (pins the explicit accumulator resets in `backward_ctx_into`).
+    #[test]
+    fn repeated_grad_vec_is_bit_identical() {
+        let be = NativeBackend::new(&z0()).unwrap();
+        let knobs = [10.0, 0.01, 0.01, 0.1, 0.0, 0.0, 0.0, 0.0];
+        let state = be.init_state(6, &knobs);
+        let (b, w) = be.batch_dims();
+        let toks = tiny_tokens(b, w, be.manifest.vocab, 13);
+        let first = be.grad_vec(&state, &toks).unwrap();
+        // dirty the scratch further with a different batch in between
+        let other = tiny_tokens(b, w, be.manifest.vocab, 14);
+        be.grad_vec(&state, &other).unwrap();
+        let second = be.grad_vec(&state, &toks).unwrap();
+        assert_eq!(first.len(), second.len());
+        for (i, (a, c)) in first.iter().zip(&second).enumerate() {
+            assert_eq!(a.to_bits(), c.to_bits(), "grad slot {i}");
+        }
+    }
+
+    /// f32 compute path contract: training steps are bit-identical
+    /// across thread budgets (to themselves), and the f32 loss tracks
+    /// the f64 loss within the tolerance band.
+    #[test]
+    fn f32_step_is_bit_identical_across_threads_and_tracks_f64() {
+        let v = z0();
+        let knobs = [50.0, 0.02, 0.01, 0.1, 0.0, 0.0, 0.0, 0.0];
+        let serial = NativeBackend::with_opts(&v, 1, Precision::F32).unwrap();
+        assert_eq!(serial.precision(), Precision::F32);
+        let state0 = serial.init_state(3, &knobs);
+        let (b, w) = serial.batch_dims();
+        let toks = tiny_tokens(b, w, serial.manifest.vocab, 7);
+        let mut want = state0.clone();
+        for _ in 0..2 {
+            want = serial.step_state(&want, &toks).unwrap();
+        }
+        for threads in [2usize, 4] {
+            let par = NativeBackend::with_opts(&v, threads, Precision::F32).unwrap();
+            let mut got = par.init_state(3, &knobs);
+            for _ in 0..2 {
+                got = par.step_state(&got, &toks).unwrap();
+            }
+            for (i, (a, c)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "f32 state slot {i}, threads {threads}");
+            }
+        }
+        let f64_be = NativeBackend::with_opts(&v, 1, Precision::F64).unwrap();
+        let g64 = f64_be.grad_vec(&state0, &toks).unwrap();
+        let g32 = serial.grad_vec(&state0, &toks).unwrap();
+        let (l64, l32) = (g64[0] as f64, g32[0] as f64);
+        assert!(
+            (l64 - l32).abs() < 1e-3 * (1.0 + l64.abs()),
+            "f32 loss {l32} drifted from f64 loss {l64}"
+        );
+    }
+
+    /// The f32 decode path (KV-cached) is bit-identical to the f32 full
+    /// forward — same contract as the f64 decode test, one tier down.
+    #[test]
+    fn f32_incremental_decode_matches_full_forward_bitwise() {
+        let mut cfg = z0();
+        cfg.model.vocab = 48;
+        cfg.model.seq_len = 12;
+        cfg.batch = 2;
+        let mut be = NativeBackend::with_opts(&cfg, 1, Precision::F32).unwrap();
+        let state = be.init_state(4, &[10.0, 0.01, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let prefix = be.upload_prefix(&state[..be.manifest.params_end]).unwrap();
+        let dm = be.decode_model(&prefix).unwrap();
+        let mut st = be.decode_open(&dm).unwrap();
+        let prompt = tiny_tokens(1, 4, 48, 7);
+        let mut hist = prompt.clone();
+        let mut got = be.decode_prefill(&prefix, &dm, &mut st, &prompt).unwrap();
+        for step in 0..4 {
+            let DecodeModel::NativeF32(m) = &dm else {
+                panic!("f32 backend must hand out an f32 decode model")
+            };
+            let (logits, _cache) = m.forward(&hist, 1, hist.len()).unwrap();
+            let v = m.vocab;
+            let want = &logits.data[(hist.len() - 1) * v..hist.len() * v];
+            assert_eq!(got.len(), want.len());
+            for (j, (a, b)) in got.iter().zip(want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "step {step} logit {j}");
+            }
+            let next = got
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            hist.push(next);
+            got = be.decode_step(&prefix, &dm, &mut st, next).unwrap();
+        }
+        be.decode_close(st);
     }
 
     #[test]

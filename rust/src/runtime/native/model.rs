@@ -1,13 +1,17 @@
 //! Native low-rank transformer: forward + hand-derived backward.
 //!
 //! Mirrors `python/compile/model.py` (RMSNorm pre-norm, RoPE attention,
-//! SwiGLU FFN, untied embed/head, no biases, `W = A Bᵀ` factorization) in
-//! f64 over [`crate::linalg::Mat`]. Activations are flat `(B*T, features)`
-//! matrices; attention runs per `(batch, head)` on `(T, hd)` views. The
-//! backward pass is the standard reverse-mode derivation of exactly the
-//! forward graph — gradients land in the same tensor order the build
-//! side's `grad` program emits, so the two backends' grad vectors are
-//! directly comparable.
+//! SwiGLU FFN, untied embed/head, no biases, `W = A Bᵀ` factorization)
+//! over [`crate::linalg::Mat`], generic in the compute element
+//! ([`crate::linalg::Elem`]): the optimizer path instantiates `f64` (the
+//! bit-identity domain), the forward/eval/decode path may instantiate
+//! `f32` — state is f32 at rest, so the f32 model halves decode memory
+//! bandwidth (docs/adr/008-f32-compute-path.md). Activations are flat
+//! `(B*T, features)` matrices; attention runs per `(batch, head)` on
+//! `(T, hd)` views. The backward pass is the standard reverse-mode
+//! derivation of exactly the forward graph — gradients land in the same
+//! tensor order the build side's `grad` program emits, so the two
+//! backends' grad vectors are directly comparable.
 //!
 //! Tensor-core integration (DESIGN.md §Native tensor core): every pass
 //! threads a [`Ctx`] — a thread budget plus a borrowed
@@ -15,15 +19,24 @@
 //! on the persistent pool and its intermediates recycle instead of
 //! allocating per step. Per-`(batch, head)` attention work fans out with
 //! each head owning its output slot. All of it is bit-identical to the
-//! serial allocating path at every thread count (the `parallel == serial`
-//! suite pins a whole train step).
+//! serial path (of the same element type) at every thread count (the
+//! `parallel == serial` suite pins a whole train step).
+//!
+//! Decode-time transpose caching: a [`MatParam`] stores `Wᵀ` (dense) /
+//! `Aᵀ` (factored, plus `Bᵀ` for backward), and the [`Model`] stores
+//! `headᵀ`, all computed **once** when the prefix is decoded — the old
+//! code re-transposed per apply, a per-step O(params) copy on the
+//! hottest path. A transpose is a pure permutation, so the cached-form
+//! matmuls see identical operand values in identical accumulation order:
+//! bit-equality with the per-call-transpose arithmetic is pinned by
+//! `cached_transposes_bit_match_per_call_transpose`.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::VariantCfg;
-use crate::linalg::{Arena, Mat};
+use crate::linalg::{Arena, Elem, Mat};
 use crate::runtime::layout::{is_factorized, matrix_dims, MATRIX_NAMES};
 use crate::runtime::Manifest;
 use crate::util::pool::{self, DisjointMut};
@@ -34,76 +47,91 @@ const ROPE_BASE: f64 = 10000.0;
 /// Execution context for the native fwd/bwd path: how many pool
 /// participants the row-parallel ops may use, and the arena the step
 /// loop recycles intermediates through.
-pub struct Ctx<'a> {
+pub struct Ctx<'a, T = f64> {
     pub threads: usize,
-    pub arena: &'a mut Arena,
+    pub arena: &'a mut Arena<T>,
 }
 
 /// One per-layer matrix: dense `(m, n)` or a factor pair `A (m, r)`,
-/// `B (n, r)` with `y = (x B) Aᵀ`.
-pub enum MatParam {
-    Dense(Mat),
-    Fact { a: Mat, b: Mat },
+/// `B (n, r)` with `y = (x B) Aᵀ`. Transposes the hot paths need are
+/// computed at construction (model decode) and cached alongside —
+/// forward applies read `wt`/`at`, backward reads `bt` — so no pass
+/// re-materializes a transpose per call.
+pub enum MatParam<T = f64> {
+    Dense { w: Mat<T>, wt: Mat<T> },
+    Fact { a: Mat<T>, at: Mat<T>, b: Mat<T>, bt: Mat<T> },
 }
 
-impl MatParam {
+impl<T: Elem> MatParam<T> {
+    /// Dense parameter; caches `Wᵀ` once.
+    pub fn dense(w: Mat<T>) -> MatParam<T> {
+        let wt = w.t();
+        MatParam::Dense { w, wt }
+    }
+
+    /// Factored parameter; caches `Aᵀ` (forward) and `Bᵀ` (backward) once.
+    pub fn fact(a: Mat<T>, b: Mat<T>) -> MatParam<T> {
+        let at = a.t();
+        let bt = b.t();
+        MatParam::Fact { a, at, b, bt }
+    }
+
     /// `y = W x` for a row-batch `x (tok, n)` -> `(tok, m)`.
-    pub fn apply(&self, x: &Mat) -> Mat {
+    pub fn apply(&self, x: &Mat<T>) -> Mat<T> {
         let mut ar = Arena::default();
         self.apply_ctx(x, &mut Ctx { threads: 1, arena: &mut ar })
     }
 
     /// [`MatParam::apply`] on the tensor core: arena-backed output,
-    /// row-parallel matmuls — bit-identical to the serial path.
-    pub fn apply_ctx(&self, x: &Mat, cx: &mut Ctx) -> Mat {
+    /// row-parallel matmuls over the cached transposes — bit-identical
+    /// to the serial per-call-transpose path.
+    pub fn apply_ctx(&self, x: &Mat<T>, cx: &mut Ctx<T>) -> Mat<T> {
         match self {
-            MatParam::Dense(w) => {
-                let mut wt = cx.arena.mat(0, 0);
-                w.t_into(&mut wt);
+            MatParam::Dense { wt, .. } => {
                 let mut out = cx.arena.mat(0, 0);
-                x.matmul_par_into(&wt, cx.threads, &mut out);
-                cx.arena.put(wt);
+                x.matmul_par_into(wt, cx.threads, &mut out);
                 out
             }
-            MatParam::Fact { a, b } => {
+            MatParam::Fact { at, b, .. } => {
                 let mut u = cx.arena.mat(0, 0);
                 x.matmul_par_into(b, cx.threads, &mut u);
-                let mut at = cx.arena.mat(0, 0);
-                a.t_into(&mut at);
                 let mut out = cx.arena.mat(0, 0);
-                u.matmul_par_into(&at, cx.threads, &mut out);
+                u.matmul_par_into(at, cx.threads, &mut out);
                 cx.arena.put(u);
-                cx.arena.put(at);
                 out
             }
         }
     }
 }
 
-struct Layer {
-    mats: Vec<MatParam>, // indexed like MATRIX_NAMES
-    rms1: Vec<f64>,
-    rms2: Vec<f64>,
+struct Layer<T> {
+    mats: Vec<MatParam<T>>, // indexed like MATRIX_NAMES
+    rms1: Vec<T>,
+    rms2: Vec<T>,
 }
 
-/// Model parameters decoded (f32 -> f64) from a header+params prefix.
-pub struct Model {
+/// Model parameters decoded (f32 at rest -> `T`) from a header+params
+/// prefix. `Model` (no type argument) is the f64 instantiation the
+/// optimizer-side tests pin; `Model<f32>` is the decode/eval compute
+/// path (docs/adr/008).
+pub struct Model<T = f64> {
     pub hidden: usize,
     pub heads: usize,
     pub head_dim: usize,
     pub layers: usize,
     pub vocab: usize,
-    embed: Mat, // (V, d)
-    head: Mat,  // (V, d)
-    rms_f: Vec<f64>,
-    blocks: Vec<Layer>,
+    embed: Mat<T>,  // (V, d)
+    head: Mat<T>,   // (V, d)
+    head_t: Mat<T>, // (d, V), cached once at decode
+    rms_f: Vec<T>,
+    blocks: Vec<Layer<T>>,
 }
 
 fn mat_idx(name: &str) -> usize {
     MATRIX_NAMES.iter().position(|m| *m == name).expect("known matrix")
 }
 
-fn tensor_f64(manifest: &Manifest, prefix: &[f32], name: &str) -> Result<Vec<f64>> {
+fn tensor_elems<T: Elem>(manifest: &Manifest, prefix: &[f32], name: &str) -> Result<Vec<T>> {
     let spec = manifest.tensor(name)?;
     anyhow::ensure!(
         spec.offset + spec.size() <= prefix.len(),
@@ -111,12 +139,12 @@ fn tensor_f64(manifest: &Manifest, prefix: &[f32], name: &str) -> Result<Vec<f64
     );
     Ok(prefix[spec.offset..spec.offset + spec.size()]
         .iter()
-        .map(|&x| x as f64)
+        .map(|&x| T::from_f32(x))
         .collect())
 }
 
-impl Model {
-    pub fn from_prefix(cfg: &VariantCfg, manifest: &Manifest, prefix: &[f32]) -> Result<Model> {
+impl<T: Elem> Model<T> {
+    pub fn from_prefix(cfg: &VariantCfg, manifest: &Manifest, prefix: &[f32]) -> Result<Model<T>> {
         anyhow::ensure!(
             prefix.len() >= manifest.params_end,
             "prefix length {} < params_end {}",
@@ -129,39 +157,40 @@ impl Model {
         let embed = Mat {
             rows: m.vocab,
             cols: d,
-            data: tensor_f64(manifest, prefix, "embed")?,
+            data: tensor_elems(manifest, prefix, "embed")?,
         };
         let head = Mat {
             rows: m.vocab,
             cols: d,
-            data: tensor_f64(manifest, prefix, "head")?,
+            data: tensor_elems(manifest, prefix, "head")?,
         };
-        let rms_f = tensor_f64(manifest, prefix, "rms_f")?;
-        let rms1 = tensor_f64(manifest, prefix, "rms1")?;
-        let rms2 = tensor_f64(manifest, prefix, "rms2")?;
+        let head_t = head.t();
+        let rms_f = tensor_elems(manifest, prefix, "rms_f")?;
+        let rms1: Vec<T> = tensor_elems(manifest, prefix, "rms1")?;
+        let rms2: Vec<T> = tensor_elems(manifest, prefix, "rms2")?;
 
-        let mut stacked: BTreeMap<String, (Vec<f64>, usize, usize)> = BTreeMap::new();
+        let mut stacked: BTreeMap<String, (Vec<T>, usize, usize)> = BTreeMap::new();
         for mat in MATRIX_NAMES {
             let (om, on) = matrix_dims(cfg, mat);
             if is_factorized(cfg, mat) {
                 let r = cfg.rank(on);
                 stacked.insert(
                     format!("{mat}_a"),
-                    (tensor_f64(manifest, prefix, &format!("{mat}_a"))?, om, r),
+                    (tensor_elems(manifest, prefix, &format!("{mat}_a"))?, om, r),
                 );
                 stacked.insert(
                     format!("{mat}_b"),
-                    (tensor_f64(manifest, prefix, &format!("{mat}_b"))?, on, r),
+                    (tensor_elems(manifest, prefix, &format!("{mat}_b"))?, on, r),
                 );
             } else {
                 stacked.insert(
                     mat.to_string(),
-                    (tensor_f64(manifest, prefix, mat)?, om, on),
+                    (tensor_elems(manifest, prefix, mat)?, om, on),
                 );
             }
         }
 
-        let take_layer = |name: &str, lyr: usize| -> Mat {
+        let take_layer = |name: &str, lyr: usize| -> Mat<T> {
             let (data, rows, cols) = &stacked[name];
             super::kernels::layer_mat(data, lyr, *rows, *cols)
         };
@@ -171,12 +200,12 @@ impl Model {
                 .iter()
                 .map(|mat| {
                     if is_factorized(cfg, mat) {
-                        MatParam::Fact {
-                            a: take_layer(&format!("{mat}_a"), lyr),
-                            b: take_layer(&format!("{mat}_b"), lyr),
-                        }
+                        MatParam::fact(
+                            take_layer(&format!("{mat}_a"), lyr),
+                            take_layer(&format!("{mat}_b"), lyr),
+                        )
                     } else {
-                        MatParam::Dense(take_layer(mat, lyr))
+                        MatParam::dense(take_layer(mat, lyr))
                     }
                 })
                 .collect();
@@ -194,6 +223,7 @@ impl Model {
             vocab: m.vocab,
             embed,
             head,
+            head_t,
             rms_f,
             blocks,
         })
@@ -207,14 +237,16 @@ impl Model {
 /// Row-wise RMSNorm: `y = x * rsqrt(mean(x^2) + eps) * gain`. Returns
 /// `(y, inv)` with `inv` the per-row `rsqrt` (cached for backward).
 /// Output storage comes from the arena.
-fn rms_norm(x: &Mat, gain: &[f64], ar: &mut Arena) -> (Mat, Vec<f64>) {
+fn rms_norm<T: Elem>(x: &Mat<T>, gain: &[T], ar: &mut Arena<T>) -> (Mat<T>, Vec<T>) {
     let d = x.cols;
+    let eps = T::from_f64(RMS_EPS);
+    let dn = T::from_f64(d as f64);
     let mut y = ar.mat(x.rows, d);
     let mut invs = ar.vec(x.rows);
     for i in 0..x.rows {
         let row = &x.data[i * d..(i + 1) * d];
-        let ms = row.iter().map(|v| v * v).sum::<f64>() / d as f64;
-        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        let ms = row.iter().fold(T::ZERO, |acc, v| acc + *v * *v) / dn;
+        let inv = T::ONE / (ms + eps).sqrt();
         let out = &mut y.data[i * d..(i + 1) * d];
         for j in 0..d {
             out[j] = row[j] * inv * gain[j];
@@ -225,27 +257,28 @@ fn rms_norm(x: &Mat, gain: &[f64], ar: &mut Arena) -> (Mat, Vec<f64>) {
 }
 
 /// Backward of [`rms_norm`]: returns `dx`, accumulates `dgain`.
-fn rms_norm_back(
-    x: &Mat,
-    gain: &[f64],
-    inv: &[f64],
-    dy: &Mat,
-    dgain: &mut [f64],
-    ar: &mut Arena,
-) -> Mat {
+fn rms_norm_back<T: Elem>(
+    x: &Mat<T>,
+    gain: &[T],
+    inv: &[T],
+    dy: &Mat<T>,
+    dgain: &mut [T],
+    ar: &mut Arena<T>,
+) -> Mat<T> {
     let d = x.cols;
+    let dn = T::from_f64(d as f64);
     let mut dx = ar.mat(x.rows, d);
     for i in 0..x.rows {
         let xr = &x.data[i * d..(i + 1) * d];
         let dyr = &dy.data[i * d..(i + 1) * d];
         let iv = inv[i];
         // s = sum_k dy_k * g_k * x_k
-        let mut s = 0.0;
+        let mut s = T::ZERO;
         for j in 0..d {
             s += dyr[j] * gain[j] * xr[j];
             dgain[j] += dyr[j] * xr[j] * iv;
         }
-        let c = iv * iv * iv * s / d as f64;
+        let c = iv * iv * iv * s / dn;
         let dxr = &mut dx.data[i * d..(i + 1) * d];
         for j in 0..d {
             dxr[j] = iv * gain[j] * dyr[j] - c * xr[j];
@@ -254,8 +287,11 @@ fn rms_norm_back(
     dx
 }
 
-/// RoPE cos/sin tables, `(seq, head_dim/2)` each, arena-backed.
-fn rope_tables(seq: usize, head_dim: usize, ar: &mut Arena) -> (Vec<f64>, Vec<f64>) {
+/// RoPE cos/sin tables, `(seq, head_dim/2)` each, arena-backed. Angles
+/// are evaluated in f64 regardless of `T` (then narrowed), so the f32
+/// path does not lose position precision at long contexts — and the
+/// incremental decode's inline row matches this table bit-for-bit.
+fn rope_tables<T: Elem>(seq: usize, head_dim: usize, ar: &mut Arena<T>) -> (Vec<T>, Vec<T>) {
     let half = head_dim / 2;
     let mut cos = ar.vec(seq * half);
     let mut sin = ar.vec(seq * half);
@@ -263,17 +299,25 @@ fn rope_tables(seq: usize, head_dim: usize, ar: &mut Arena) -> (Vec<f64>, Vec<f6
         for j in 0..half {
             let freq = ROPE_BASE.powf(-(j as f64) / half as f64);
             let ang = t as f64 * freq;
-            cos[t * half + j] = ang.cos();
-            sin[t * half + j] = ang.sin();
+            cos[t * half + j] = T::from_f64(ang.cos());
+            sin[t * half + j] = T::from_f64(ang.sin());
         }
     }
     (cos, sin)
 }
 
 /// Rotate pairs in place on a flat `(B*T, d)` activation viewed as
-/// `(B, T, H, hd)`. `dir = +1.0` applies RoPE, `-1.0` the inverse
+/// `(B, T, H, hd)`. `dir = +1` applies RoPE, `-1` the inverse
 /// rotation (exactly the transpose, used in backward).
-fn apply_rope(x: &mut Mat, seq: usize, heads: usize, head_dim: usize, cos: &[f64], sin: &[f64], dir: f64) {
+fn apply_rope<T: Elem>(
+    x: &mut Mat<T>,
+    seq: usize,
+    heads: usize,
+    head_dim: usize,
+    cos: &[T],
+    sin: &[T],
+    dir: T,
+) {
     let half = head_dim / 2;
     let d = x.cols;
     for i in 0..x.rows {
@@ -296,7 +340,14 @@ fn apply_rope(x: &mut Mat, seq: usize, heads: usize, head_dim: usize, cos: &[f64
 /// Extract the `(T, hd)` head view of batch `b`, head `h` from a flat
 /// `(B*T, d)` activation into a reused buffer (every element is
 /// copy-overwritten, so the reshape skips zero-filling).
-fn head_view_into(x: &Mat, b: usize, h: usize, seq: usize, head_dim: usize, out: &mut Mat) {
+fn head_view_into<T: Elem>(
+    x: &Mat<T>,
+    b: usize,
+    h: usize,
+    seq: usize,
+    head_dim: usize,
+    out: &mut Mat<T>,
+) {
     out.reset_for_overwrite(seq, head_dim);
     for t in 0..seq {
         let src = &x.data[(b * seq + t) * x.cols + h * head_dim..];
@@ -305,7 +356,14 @@ fn head_view_into(x: &Mat, b: usize, h: usize, seq: usize, head_dim: usize, out:
 }
 
 /// Scatter-add a `(T, hd)` head gradient back into the flat layout.
-fn head_scatter(dst: &mut Mat, src: &Mat, b: usize, h: usize, seq: usize, head_dim: usize) {
+fn head_scatter<T: Elem>(
+    dst: &mut Mat<T>,
+    src: &Mat<T>,
+    b: usize,
+    h: usize,
+    seq: usize,
+    head_dim: usize,
+) {
     for t in 0..seq {
         let drow = (b * seq + t) * dst.cols + h * head_dim;
         for e in 0..head_dim {
@@ -314,47 +372,47 @@ fn head_scatter(dst: &mut Mat, src: &Mat, b: usize, h: usize, seq: usize, head_d
     }
 }
 
-fn sigmoid(x: f64) -> f64 {
-    1.0 / (1.0 + (-x).exp())
+fn sigmoid<T: Elem>(x: T) -> T {
+    T::ONE / (T::ONE + (-x).exp())
 }
 
 // ---------------------------------------------------------------------------
 // forward (with cache) and backward
 // ---------------------------------------------------------------------------
 
-struct LayerCache {
-    x_in: Mat,             // h at layer entry
-    n1: Mat,               // rms1 output
-    inv1: Vec<f64>,        // rms1 row rsqrts
-    q: Mat,                // post-RoPE
-    k: Mat,                // post-RoPE
-    v: Mat,                // (B*T, d)
-    probs: Vec<Mat>,       // per (b*H + h): (T, T)
-    ctx: Mat,              // (B*T, d)
-    h_mid: Mat,            // after attention residual
-    n2: Mat,
-    inv2: Vec<f64>,
-    gate: Mat,             // (B*T, ffn)
-    up: Mat,
-    inner: Mat,            // silu(gate) * up
+struct LayerCache<T> {
+    x_in: Mat<T>,       // h at layer entry
+    n1: Mat<T>,         // rms1 output
+    inv1: Vec<T>,       // rms1 row rsqrts
+    q: Mat<T>,          // post-RoPE
+    k: Mat<T>,          // post-RoPE
+    v: Mat<T>,          // (B*T, d)
+    probs: Vec<Mat<T>>, // per (b*H + h): (T, T)
+    ctx: Mat<T>,        // (B*T, d)
+    h_mid: Mat<T>,      // after attention residual
+    n2: Mat<T>,
+    inv2: Vec<T>,
+    gate: Mat<T>,       // (B*T, ffn)
+    up: Mat<T>,
+    inner: Mat<T>,      // silu(gate) * up
 }
 
-pub struct Cache {
+pub struct Cache<T = f64> {
     bsz: usize,
     seq: usize,
-    ids: Vec<i32>,     // flattened input ids (B*T)
-    cos: Vec<f64>,
-    sin: Vec<f64>,
-    layers: Vec<LayerCache>,
-    h_last: Mat,       // before the final norm
-    invf: Vec<f64>,
-    hf: Mat,           // final-norm output
+    ids: Vec<i32>, // flattened input ids (B*T)
+    cos: Vec<T>,
+    sin: Vec<T>,
+    layers: Vec<LayerCache<T>>,
+    h_last: Mat<T>, // before the final norm
+    invf: Vec<T>,
+    hf: Mat<T>,     // final-norm output
 }
 
-impl Cache {
+impl<T: Elem> Cache<T> {
     /// Hand every buffer back to the arena so the next step reuses it.
     /// Optional: dropping the cache instead merely loses the reuse.
-    pub fn recycle(self, ar: &mut Arena) {
+    pub fn recycle(self, ar: &mut Arena<T>) {
         for lc in self.layers {
             for m in [
                 lc.x_in, lc.n1, lc.q, lc.k, lc.v, lc.ctx, lc.h_mid, lc.n2, lc.gate, lc.up,
@@ -376,11 +434,45 @@ impl Cache {
     }
 }
 
-impl Model {
+/// Reusable storage for one [`Model::backward_ctx_into`] call chain: the
+/// parameter-sized gradient accumulators (`dembed`/`dhead`/the stacked
+/// per-matrix grads) used to be allocated per step — on the training hot
+/// path that was the largest remaining per-step allocation. The backend
+/// persists one `BwdScratch` per training loop; `backward_ctx_into`
+/// resets every accumulator **explicitly** at entry (the zero-fills are
+/// load-bearing: all of these are `+=` targets), so recycled storage is
+/// indistinguishable from fresh — `repeated_grad_vec_is_bit_identical`
+/// pins it.
+#[derive(Default)]
+pub struct BwdScratch<T = f64> {
+    dembed: Vec<T>,
+    dhead: Vec<T>,
+    drms1: Vec<T>,
+    drms2: Vec<T>,
+    drms_f: Vec<T>,
+    mat_grads: BTreeMap<String, Vec<T>>,
+}
+
+impl<T: Elem> BwdScratch<T> {
+    /// The gradient tensor computed by the last backward pass, by
+    /// manifest tensor name (same stacked layouts as the parameters).
+    pub fn grad(&self, name: &str) -> Option<&[T]> {
+        match name {
+            "embed" => Some(&self.dembed),
+            "head" => Some(&self.dhead),
+            "rms1" => Some(&self.drms1),
+            "rms2" => Some(&self.drms2),
+            "rms_f" => Some(&self.drms_f),
+            _ => self.mat_grads.get(name).map(|v| v.as_slice()),
+        }
+    }
+}
+
+impl<T: Elem> Model<T> {
     /// Forward over flat `(bsz, seq)` input ids; returns `(logits, cache)`
     /// with logits `(bsz*seq, vocab)`. Serial compatibility wrapper over
     /// [`Model::forward_ctx`].
-    pub fn forward(&self, ids: &[i32], bsz: usize, seq: usize) -> Result<(Mat, Cache)> {
+    pub fn forward(&self, ids: &[i32], bsz: usize, seq: usize) -> Result<(Mat<T>, Cache<T>)> {
         let mut ar = Arena::default();
         self.forward_ctx(ids, bsz, seq, &mut Ctx { threads: 1, arena: &mut ar })
     }
@@ -393,12 +485,12 @@ impl Model {
         ids: &[i32],
         bsz: usize,
         seq: usize,
-        cx: &mut Ctx,
-    ) -> Result<(Mat, Cache)> {
+        cx: &mut Ctx<T>,
+    ) -> Result<(Mat<T>, Cache<T>)> {
         anyhow::ensure!(ids.len() == bsz * seq, "token shape mismatch");
         let d = self.hidden;
         let (cos, sin) = rope_tables(seq, self.head_dim, cx.arena);
-        let scale = 1.0 / (self.head_dim as f64).sqrt();
+        let scale = T::from_f64(1.0 / (self.head_dim as f64).sqrt());
 
         // embedding lookup
         let mut h = cx.arena.mat(bsz * seq, d);
@@ -421,15 +513,15 @@ impl Model {
             let mut q = block.mats[mat_idx("attn_q")].apply_ctx(&n1, cx);
             let mut k = block.mats[mat_idx("attn_k")].apply_ctx(&n1, cx);
             let v = block.mats[mat_idx("attn_v")].apply_ctx(&n1, cx);
-            apply_rope(&mut q, seq, self.heads, self.head_dim, &cos, &sin, 1.0);
-            apply_rope(&mut k, seq, self.heads, self.head_dim, &cos, &sin, 1.0);
+            apply_rope(&mut q, seq, self.heads, self.head_dim, &cos, &sin, T::ONE);
+            apply_rope(&mut k, seq, self.heads, self.head_dim, &cos, &sin, T::ONE);
 
             // per-(batch, head) fan-out: each index owns its probs slot
             // and its (T, hd) context slot; the serial scatter below
             // assembles them in the fixed b-major order
             let nh = bsz * self.heads;
-            let mut probs: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(seq, seq)).collect();
-            let mut ctx_heads: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
+            let mut probs: Vec<Mat<T>> = (0..nh).map(|_| cx.arena.mat(seq, seq)).collect();
+            let mut ctx_heads: Vec<Mat<T>> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
             {
                 let pslots = DisjointMut::new(&mut probs);
                 let cslots = DisjointMut::new(&mut ctx_heads);
@@ -442,7 +534,7 @@ impl Model {
                     let mut qh = Mat::zeros(0, 0);
                     let mut kh = Mat::zeros(0, 0);
                     let mut vh = Mat::zeros(0, 0);
-                    let mut srow = Vec::new();
+                    let mut srow: Vec<T> = Vec::new();
                     for bh in lo..hi {
                         let (b, hh) = (bh / heads, bh % heads);
                         // disjoint: slot bh belongs to this chunk alone
@@ -454,9 +546,9 @@ impl Model {
                         // causal softmax over s <= t
                         for t in 0..seq {
                             let qrow = &qh.data[t * hd..(t + 1) * hd];
-                            let mut mx = f64::NEG_INFINITY;
+                            let mut mx = T::NEG_INF;
                             srow.clear();
-                            srow.resize(t + 1, 0.0);
+                            srow.resize(t + 1, T::ZERO);
                             for (s, sv) in srow.iter_mut().enumerate() {
                                 let krow = &kh.data[s * hd..(s + 1) * hd];
                                 *sv = super::kernels::dot(qrow, krow) * scale;
@@ -464,13 +556,13 @@ impl Model {
                                     mx = *sv;
                                 }
                             }
-                            let mut z = 0.0;
+                            let mut z = T::ZERO;
                             for sv in srow.iter_mut() {
                                 *sv = (*sv - mx).exp();
                                 z += *sv;
                             }
                             for (s, sv) in srow.iter().enumerate() {
-                                p.data[t * seq + s] = sv / z;
+                                p.data[t * seq + s] = *sv / z;
                             }
                         }
                         p.matmul_into(&vh, ch); // (T, hd)
@@ -523,11 +615,10 @@ impl Model {
         }
 
         let (hf, invf) = rms_norm(&h, &self.rms_f, cx.arena);
-        let mut headt = cx.arena.mat(0, 0);
-        self.head.t_into(&mut headt);
         let mut logits = cx.arena.mat(0, 0);
-        hf.matmul_par_into(&headt, cx.threads, &mut logits); // (B*T, V)
-        cx.arena.put(headt);
+        // headᵀ is cached at decode (pure permutation: same matmul bits
+        // as the old per-call transpose)
+        hf.matmul_par_into(&self.head_t, cx.threads, &mut logits); // (B*T, V)
         let cache = Cache {
             bsz,
             seq,
@@ -542,31 +633,71 @@ impl Model {
         Ok((logits, cache))
     }
 
-    /// Reverse-mode pass from `dlogits` `(B*T, V)`; returns flat f64
+    /// Reverse-mode pass from `dlogits` `(B*T, V)`; returns flat
     /// gradients keyed by parameter tensor name (stacked layer layout,
     /// same shapes as the manifest). Serial wrapper over
     /// [`Model::backward_ctx`].
-    pub fn backward(&self, cache: &Cache, dlogits: &Mat) -> BTreeMap<String, Vec<f64>> {
+    pub fn backward(&self, cache: &Cache<T>, dlogits: &Mat<T>) -> BTreeMap<String, Vec<T>> {
         let mut ar = Arena::default();
         self.backward_ctx(cache, dlogits, &mut Ctx { threads: 1, arena: &mut ar })
     }
 
+    /// Allocating wrapper over [`Model::backward_ctx_into`] (tests and
+    /// one-shot callers keep the map-returning API; the training loop
+    /// threads a persistent [`BwdScratch`] instead).
     pub fn backward_ctx(
         &self,
-        cache: &Cache,
-        dlogits: &Mat,
-        cx: &mut Ctx,
-    ) -> BTreeMap<String, Vec<f64>> {
+        cache: &Cache<T>,
+        dlogits: &Mat<T>,
+        cx: &mut Ctx<T>,
+    ) -> BTreeMap<String, Vec<T>> {
+        let mut s = BwdScratch::default();
+        self.backward_ctx_into(cache, dlogits, cx, &mut s);
+        let BwdScratch { dembed, dhead, drms1, drms2, drms_f, mut mat_grads } = s;
+        let mut grads: BTreeMap<String, Vec<T>> = BTreeMap::new();
+        grads.insert("embed".into(), dembed);
+        grads.insert("head".into(), dhead);
+        grads.insert("rms1".into(), drms1);
+        grads.insert("rms2".into(), drms2);
+        grads.insert("rms_f".into(), drms_f);
+        grads.append(&mut mat_grads);
+        grads
+    }
+
+    /// The backward pass proper, accumulating into recycled scratch. The
+    /// `clear`/`resize` and in-place zeroing below are the explicit form
+    /// of the zero-fills the old per-step `vec![0.0; …]` allocations
+    /// performed implicitly — every accumulator is a `+=` target, so
+    /// these resets are load-bearing, not hygiene.
+    pub fn backward_ctx_into(
+        &self,
+        cache: &Cache<T>,
+        dlogits: &Mat<T>,
+        cx: &mut Ctx<T>,
+        s: &mut BwdScratch<T>,
+    ) {
         let d = self.hidden;
         let (bsz, seq) = (cache.bsz, cache.seq);
-        let scale = 1.0 / (self.head_dim as f64).sqrt();
+        let scale = T::from_f64(1.0 / (self.head_dim as f64).sqrt());
 
-        let mut grads: BTreeMap<String, Vec<f64>> = BTreeMap::new();
-        let mut dembed = vec![0.0; self.vocab * d];
-        let mut dhead = vec![0.0; self.vocab * d];
-        let mut drms1 = vec![0.0; self.layers * d];
-        let mut drms2 = vec![0.0; self.layers * d];
-        let mut drms_f = vec![0.0; d];
+        let BwdScratch { dembed, dhead, drms1, drms2, drms_f, mat_grads } = s;
+        dembed.clear();
+        dembed.resize(self.vocab * d, T::ZERO);
+        dhead.clear();
+        dhead.resize(self.vocab * d, T::ZERO);
+        drms1.clear();
+        drms1.resize(self.layers * d, T::ZERO);
+        drms2.clear();
+        drms2.resize(self.layers * d, T::ZERO);
+        drms_f.clear();
+        drms_f.resize(d, T::ZERO);
+        // recycled per-matrix accumulators from the previous step keep
+        // their storage; new names are zero-allocated lazily below
+        for g in mat_grads.values_mut() {
+            for x in g.iter_mut() {
+                *x = T::ZERO;
+            }
+        }
 
         // head: logits = hf @ headᵀ
         let mut dhf = cx.arena.mat(0, 0);
@@ -577,16 +708,14 @@ impl Model {
             let mut dh_head = cx.arena.mat(0, 0);
             dlt.matmul_par_into(&cache.hf, cx.threads, &mut dh_head); // (V, d)
             for (o, v) in dhead.iter_mut().zip(&dh_head.data) {
-                *o += v;
+                *o += *v;
             }
             cx.arena.put(dlt);
             cx.arena.put(dh_head);
         }
-        let mut dh = rms_norm_back(&cache.h_last, &self.rms_f, &cache.invf, &dhf, &mut drms_f, cx.arena);
+        let mut dh =
+            rms_norm_back(&cache.h_last, &self.rms_f, &cache.invf, &dhf, drms_f, cx.arena);
         cx.arena.put(dhf);
-
-        // per-matrix stacked grads, allocated lazily per layer below
-        let mut mat_grads: BTreeMap<String, Vec<f64>> = BTreeMap::new();
 
         for (lyr, (block, lc)) in self.blocks.iter().zip(&cache.layers).enumerate().rev() {
             // ---- FFN ----
@@ -597,7 +726,7 @@ impl Model {
                 &block.mats[mat_idx("ffn_down")],
                 &lc.inner,
                 &dh,
-                &mut mat_grads,
+                mat_grads,
                 cx,
             );
             // inner = silu(gate) * up
@@ -608,7 +737,8 @@ impl Model {
                 let sg = sigmoid(gt);
                 let silu = gt * sg;
                 dup.data[i] = dinner.data[i] * silu;
-                dgate.data[i] = dinner.data[i] * lc.up.data[i] * (sg * (1.0 + gt * (1.0 - sg)));
+                dgate.data[i] =
+                    dinner.data[i] * lc.up.data[i] * (sg * (T::ONE + gt * (T::ONE - sg)));
             }
             cx.arena.put(dinner);
             let mut dn2 = self.mat_backward(
@@ -617,7 +747,7 @@ impl Model {
                 &block.mats[mat_idx("ffn_gate")],
                 &lc.n2,
                 &dgate,
-                &mut mat_grads,
+                mat_grads,
                 cx,
             );
             let dn2_up = self.mat_backward(
@@ -626,7 +756,7 @@ impl Model {
                 &block.mats[mat_idx("ffn_up")],
                 &lc.n2,
                 &dup,
-                &mut mat_grads,
+                mat_grads,
                 cx,
             );
             dn2.add_assign(&dn2_up);
@@ -654,15 +784,15 @@ impl Model {
                 &block.mats[mat_idx("attn_o")],
                 &lc.ctx,
                 &dh_mid,
-                &mut mat_grads,
+                mat_grads,
                 cx,
             );
             // per-(batch, head) fan-out: head gradients land in per-slot
             // buffers, then scatter serially in the fixed order
             let nh = bsz * self.heads;
-            let mut dqhs: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
-            let mut dkhs: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
-            let mut dvhs: Vec<Mat> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
+            let mut dqhs: Vec<Mat<T>> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
+            let mut dkhs: Vec<Mat<T>> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
+            let mut dvhs: Vec<Mat<T>> = (0..nh).map(|_| cx.arena.mat(0, 0)).collect();
             {
                 let qslots = DisjointMut::new(&mut dqhs);
                 let kslots = DisjointMut::new(&mut dkhs);
@@ -698,7 +828,7 @@ impl Model {
                         // softmax backward row-wise: dS = P ∘ (dPin - Σ P∘dPin)
                         ds.reset(seq, seq);
                         for t in 0..seq {
-                            let mut row_dot = 0.0;
+                            let mut row_dot = T::ZERO;
                             for s in 0..=t {
                                 row_dot += p.data[t * seq + s] * dpin.data[t * seq + s];
                             }
@@ -732,8 +862,8 @@ impl Model {
             }
             cx.arena.put(dctx);
             // inverse rotation (RoPE backward)
-            apply_rope(&mut dq, seq, self.heads, self.head_dim, &cache.cos, &cache.sin, -1.0);
-            apply_rope(&mut dk, seq, self.heads, self.head_dim, &cache.cos, &cache.sin, -1.0);
+            apply_rope(&mut dq, seq, self.heads, self.head_dim, &cache.cos, &cache.sin, -T::ONE);
+            apply_rope(&mut dk, seq, self.heads, self.head_dim, &cache.cos, &cache.sin, -T::ONE);
 
             let mut dn1 = self.mat_backward(
                 lyr,
@@ -741,7 +871,7 @@ impl Model {
                 &block.mats[mat_idx("attn_q")],
                 &lc.n1,
                 &dq,
-                &mut mat_grads,
+                mat_grads,
                 cx,
             );
             for (name, dyy) in [("attn_k", &dk), ("attn_v", &dv)] {
@@ -751,7 +881,7 @@ impl Model {
                     &block.mats[mat_idx(name)],
                     &lc.n1,
                     dyy,
-                    &mut mat_grads,
+                    mat_grads,
                     cx,
                 );
                 dn1.add_assign(&part);
@@ -782,31 +912,25 @@ impl Model {
             }
         }
         cx.arena.put(dh);
-
-        grads.insert("embed".into(), dembed);
-        grads.insert("head".into(), dhead);
-        grads.insert("rms1".into(), drms1);
-        grads.insert("rms2".into(), drms2);
-        grads.insert("rms_f".into(), drms_f);
-        grads.append(&mut mat_grads);
-        grads
     }
 
     /// Backward through one per-layer matrix apply: accumulates the
-    /// stacked weight gradient(s), returns `dx` (arena-backed).
+    /// stacked weight gradient(s), returns `dx` (arena-backed). Reads the
+    /// construction-time transpose caches (`bt`) instead of
+    /// re-transposing per call.
     #[allow(clippy::too_many_arguments)]
     fn mat_backward(
         &self,
         lyr: usize,
         name: &str,
-        p: &MatParam,
-        x: &Mat,
-        dy: &Mat,
-        mat_grads: &mut BTreeMap<String, Vec<f64>>,
-        cx: &mut Ctx,
-    ) -> Mat {
+        p: &MatParam<T>,
+        x: &Mat<T>,
+        dy: &Mat<T>,
+        mat_grads: &mut BTreeMap<String, Vec<T>>,
+        cx: &mut Ctx<T>,
+    ) -> Mat<T> {
         match p {
-            MatParam::Dense(w) => {
+            MatParam::Dense { w, .. } => {
                 let per = w.rows * w.cols;
                 let mut dyt = cx.arena.mat(0, 0);
                 dy.t_into(&mut dyt);
@@ -814,9 +938,10 @@ impl Model {
                 dyt.matmul_par_into(x, cx.threads, &mut dw); // (m, n)
                 let gw = mat_grads
                     .entry(name.to_string())
-                    .or_insert_with(|| vec![0.0; self.layers * per]);
+                    .or_insert_with(|| vec![T::ZERO; self.layers * per]);
+                debug_assert_eq!(gw.len(), self.layers * per);
                 for (o, v) in gw[lyr * per..(lyr + 1) * per].iter_mut().zip(&dw.data) {
-                    *o += v;
+                    *o += *v;
                 }
                 cx.arena.put(dyt);
                 cx.arena.put(dw);
@@ -824,7 +949,7 @@ impl Model {
                 dy.matmul_par_into(w, cx.threads, &mut dx);
                 dx
             }
-            MatParam::Fact { a, b } => {
+            MatParam::Fact { a, b, bt, .. } => {
                 let (pa, pb) = (a.rows * a.cols, b.rows * b.cols);
                 let mut u = cx.arena.mat(0, 0);
                 x.matmul_par_into(b, cx.threads, &mut u); // (tok, r)
@@ -841,24 +966,24 @@ impl Model {
                 {
                     let ga = mat_grads
                         .entry(format!("{name}_a"))
-                        .or_insert_with(|| vec![0.0; self.layers * pa]);
+                        .or_insert_with(|| vec![T::ZERO; self.layers * pa]);
+                    debug_assert_eq!(ga.len(), self.layers * pa);
                     for (o, v) in ga[lyr * pa..(lyr + 1) * pa].iter_mut().zip(&da.data) {
-                        *o += v;
+                        *o += *v;
                     }
                 }
                 {
                     let gb = mat_grads
                         .entry(format!("{name}_b"))
-                        .or_insert_with(|| vec![0.0; self.layers * pb]);
+                        .or_insert_with(|| vec![T::ZERO; self.layers * pb]);
+                    debug_assert_eq!(gb.len(), self.layers * pb);
                     for (o, v) in gb[lyr * pb..(lyr + 1) * pb].iter_mut().zip(&db.data) {
-                        *o += v;
+                        *o += *v;
                     }
                 }
-                let mut bt = cx.arena.mat(0, 0);
-                b.t_into(&mut bt);
                 let mut dx = cx.arena.mat(0, 0);
-                du.matmul_par_into(&bt, cx.threads, &mut dx);
-                for m in [u, dyt, da, du, xt, db, bt] {
+                du.matmul_par_into(bt, cx.threads, &mut dx);
+                for m in [u, dyt, da, du, xt, db] {
                     cx.arena.put(m);
                 }
                 dx
@@ -876,17 +1001,17 @@ impl Model {
 /// `len` rows valid. Storage checks out of the step loop's [`Arena`] on
 /// open and recycles on [`KvCache::recycle`], so a serve slot churning
 /// through sessions reuses the same buffers (DESIGN.md §Serving).
-pub struct KvCache {
+pub struct KvCache<T = f64> {
     seq_cap: usize,
     len: usize,
-    k: Vec<Mat>, // per layer: (seq_cap, d), rows [0, len) valid, post-RoPE
-    v: Vec<Mat>, // per layer: (seq_cap, d), rows [0, len) valid
+    k: Vec<Mat<T>>, // per layer: (seq_cap, d), rows [0, len) valid, post-RoPE
+    v: Vec<Mat<T>>, // per layer: (seq_cap, d), rows [0, len) valid
 }
 
-impl KvCache {
+impl<T: Elem> KvCache<T> {
     /// An empty cache with room for `seq_cap` positions across `layers`
     /// layers of width `d`, arena-backed.
-    pub fn new(layers: usize, seq_cap: usize, d: usize, ar: &mut Arena) -> KvCache {
+    pub fn new(layers: usize, seq_cap: usize, d: usize, ar: &mut Arena<T>) -> KvCache<T> {
         KvCache {
             seq_cap,
             len: 0,
@@ -915,14 +1040,14 @@ impl KvCache {
     }
 
     /// Hand every buffer back to the arena so the next session reuses it.
-    pub fn recycle(self, ar: &mut Arena) {
+    pub fn recycle(self, ar: &mut Arena<T>) {
         for m in self.k.into_iter().chain(self.v) {
             ar.put(m);
         }
     }
 }
 
-impl Model {
+impl<T: Elem> Model<T> {
     /// Run the full forward over a prompt and harvest each layer's
     /// post-RoPE K and raw V rows into `kv`, leaving it positioned for
     /// [`Model::forward_incremental`] at position `ids.len()`. Returns the
@@ -931,7 +1056,7 @@ impl Model {
     /// the prefill IS [`Model::forward_ctx`], and row `s` of a forward at
     /// any length depends only on rows `<= s`, so the harvested rows are
     /// the ones any longer forward would recompute.
-    pub fn prefill(&self, ids: &[i32], kv: &mut KvCache, cx: &mut Ctx) -> Result<Mat> {
+    pub fn prefill(&self, ids: &[i32], kv: &mut KvCache<T>, cx: &mut Ctx<T>) -> Result<Mat<T>> {
         let n = ids.len();
         anyhow::ensure!(n >= 1, "prefill needs at least one token");
         anyhow::ensure!(
@@ -957,13 +1082,14 @@ impl Model {
     /// Bit-identity contract (the serving analogue of PR-5's
     /// parallel == serial suite): with `t = kv.len()`, the resulting
     /// logits row equals row `t` of `forward_ctx(&ids[..=t], 1, t+1)` by
-    /// `to_bits`, at every thread count. Every reduction below replays
-    /// the full forward's operation order on the single live row: the
-    /// matmuls accumulate in ascending-k order from zero (the tiled
-    /// kernel's own order), the attention max/exp/sum walk `s = 0..=t`
-    /// ascending, and RoPE evaluates the same per-position expression
-    /// `rope_tables` does.
-    pub fn forward_incremental(&self, tok: i32, kv: &mut KvCache, cx: &mut Ctx) -> Result<Mat> {
+    /// `to_bits`, at every thread count — within one element type `T`.
+    /// Every reduction below replays the full forward's operation order
+    /// on the single live row: the matmuls accumulate in ascending-k
+    /// order from zero (the tiled kernel's own order), the attention
+    /// max/exp/sum walk `s = 0..=t` ascending, and RoPE evaluates the
+    /// same per-position expression `rope_tables` does (f64 angles,
+    /// narrowed once).
+    pub fn forward_incremental(&self, tok: i32, kv: &mut KvCache<T>, cx: &mut Ctx<T>) -> Result<Mat<T>> {
         let d = self.hidden;
         let pos = kv.len;
         anyhow::ensure!(pos < kv.seq_cap, "kv cache full at {pos} of {}", kv.seq_cap);
@@ -975,7 +1101,7 @@ impl Model {
         anyhow::ensure!(kv.k.len() == self.layers, "kv cache layer mismatch");
         let (heads, hd) = (self.heads, self.head_dim);
         let half = hd / 2;
-        let scale = 1.0 / (hd as f64).sqrt();
+        let scale = T::from_f64(1.0 / (hd as f64).sqrt());
 
         // this position's RoPE row — same expression as rope_tables at t=pos
         let mut cosr = cx.arena.vec(half);
@@ -983,8 +1109,8 @@ impl Model {
         for j in 0..half {
             let freq = ROPE_BASE.powf(-(j as f64) / half as f64);
             let ang = pos as f64 * freq;
-            cosr[j] = ang.cos();
-            sinr[j] = ang.sin();
+            cosr[j] = T::from_f64(ang.cos());
+            sinr[j] = T::from_f64(ang.sin());
         }
 
         let mut h = cx.arena.mat(1, d);
@@ -1024,7 +1150,7 @@ impl Model {
             for hh in 0..heads {
                 let base = hh * hd;
                 let qrow = &q.data[base..base + hd];
-                let mut mx = f64::NEG_INFINITY;
+                let mut mx = T::NEG_INF;
                 for (s, sv) in srow.iter_mut().enumerate() {
                     let krow = &kl.data[s * d + base..s * d + base + hd];
                     *sv = super::kernels::dot(qrow, krow) * scale;
@@ -1032,7 +1158,7 @@ impl Model {
                         mx = *sv;
                     }
                 }
-                let mut z = 0.0;
+                let mut z = T::ZERO;
                 for sv in srow.iter_mut() {
                     *sv = (*sv - mx).exp();
                     z += *sv;
@@ -1041,7 +1167,7 @@ impl Model {
                 // probs × V matmul's own accumulation order
                 let out = &mut ctxr.data[base..base + hd];
                 for (s, sv) in srow.iter().enumerate() {
-                    let w = sv / z;
+                    let w = *sv / z;
                     let vrow = &vl.data[s * d + base..s * d + base + hd];
                     for (o, &ve) in out.iter_mut().zip(vrow) {
                         *o += w * ve;
@@ -1092,8 +1218,10 @@ impl Model {
     /// next-token logits row (length `vocab`). Each logit is a `dot`
     /// against a `head` row — the same multiply pairs, in the same
     /// ascending-k order from zero, as the full forward's `hf · headᵀ`
-    /// matmul, without materializing the transpose every step.
-    pub fn logits_incremental(&self, tok: i32, kv: &mut KvCache, cx: &mut Ctx) -> Result<Vec<f64>> {
+    /// matmul, without materializing a per-step transpose (and without
+    /// touching the decode-time `head_t` cache: row-major `head` rows
+    /// are exactly the dot operands).
+    pub fn logits_incremental(&self, tok: i32, kv: &mut KvCache<T>, cx: &mut Ctx<T>) -> Result<Vec<T>> {
         let d = self.hidden;
         let hf = self.forward_incremental(tok, kv, cx)?;
         let mut logits = Vec::with_capacity(self.vocab);
@@ -1110,40 +1238,130 @@ impl Model {
 // ---------------------------------------------------------------------------
 
 /// Per-token next-token NLL for `logits (n_tok, V)` against `targets`.
-pub fn token_nll(logits: &Mat, targets: &[i32]) -> Vec<f64> {
+pub fn token_nll<T: Elem>(logits: &Mat<T>, targets: &[i32]) -> Vec<T> {
     let v = logits.cols;
     targets
         .iter()
         .enumerate()
         .map(|(i, &tgt)| {
             let row = &logits.data[i * v..(i + 1) * v];
-            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            let z: f64 = row.iter().map(|l| (l - mx).exp()).sum();
+            let mx = row.iter().cloned().fold(T::NEG_INF, T::max);
+            let z = row.iter().fold(T::ZERO, |acc, l| acc + (*l - mx).exp());
             (mx + z.ln()) - row[tgt as usize]
         })
         .collect()
 }
 
 /// `d(mean nll)/d logits`: `(softmax - onehot) / n_tok`.
-pub fn mean_nll_backward(logits: &Mat, targets: &[i32]) -> Mat {
+pub fn mean_nll_backward<T: Elem>(logits: &Mat<T>, targets: &[i32]) -> Mat<T> {
     let mut ar = Arena::default();
     mean_nll_backward_ar(logits, targets, &mut ar)
 }
 
 /// [`mean_nll_backward`] with arena-backed output.
-pub fn mean_nll_backward_ar(logits: &Mat, targets: &[i32], ar: &mut Arena) -> Mat {
+pub fn mean_nll_backward_ar<T: Elem>(logits: &Mat<T>, targets: &[i32], ar: &mut Arena<T>) -> Mat<T> {
     let v = logits.cols;
-    let n = targets.len() as f64;
+    let n = T::from_f64(targets.len() as f64);
     let mut dl = ar.mat(logits.rows, v);
     for (i, &tgt) in targets.iter().enumerate() {
         let row = &logits.data[i * v..(i + 1) * v];
-        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let z: f64 = row.iter().map(|l| (l - mx).exp()).sum();
+        let mx = row.iter().cloned().fold(T::NEG_INF, T::max);
+        let z = row.iter().fold(T::ZERO, |acc, l| acc + (*l - mx).exp());
         let out = &mut dl.data[i * v..(i + 1) * v];
         for j in 0..v {
             out[j] = (row[j] - mx).exp() / z / n;
         }
-        out[tgt as usize] -= 1.0 / n;
+        out[tgt as usize] -= T::ONE / n;
     }
     dl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Satellite regression for the per-apply transpose bug: the
+    /// decode-time `wt`/`at`/`bt` caches must make `apply_ctx` (and the
+    /// factored backward's `du·Bᵀ`) produce the *same bits* as the old
+    /// transpose-per-call arithmetic — a transpose is a pure permutation,
+    /// so the matmul sees identical operands in identical accumulation
+    /// order. A drift here means the accumulation order changed.
+    #[test]
+    fn cached_transposes_bit_match_per_call_transpose() {
+        let mut rng = Pcg64::new(21);
+        let w: Mat = Mat::randn(12, 9, &mut rng);
+        let x: Mat = Mat::randn(5, 9, &mut rng);
+        let dense = MatParam::dense(w.clone());
+        for threads in [1usize, 2, 4] {
+            let mut ar = Arena::default();
+            let got = dense.apply_ctx(&x, &mut Ctx { threads, arena: &mut ar });
+            let want = x.matmul(&w.t()); // the pre-cache arithmetic
+            assert_eq!((want.rows, want.cols), (got.rows, got.cols));
+            for (p, q) in want.data.iter().zip(&got.data) {
+                assert_eq!(p.to_bits(), q.to_bits(), "dense t={threads}");
+            }
+        }
+        let fa: Mat = Mat::randn(12, 4, &mut rng);
+        let fb: Mat = Mat::randn(9, 4, &mut rng);
+        let fact = MatParam::fact(fa.clone(), fb.clone());
+        for threads in [1usize, 2, 4] {
+            let mut ar = Arena::default();
+            let got = fact.apply_ctx(&x, &mut Ctx { threads, arena: &mut ar });
+            let want = x.matmul(&fb).matmul(&fa.t()); // (x·B)·Aᵀ per call
+            assert_eq!((want.rows, want.cols), (got.rows, got.cols));
+            for (p, q) in want.data.iter().zip(&got.data) {
+                assert_eq!(p.to_bits(), q.to_bits(), "fact t={threads}");
+            }
+        }
+    }
+
+    /// The caches are immutable after construction: applying twice must
+    /// give the same bits (no in-place state in the hot path).
+    #[test]
+    fn repeated_apply_reuses_cache_unchanged() {
+        let mut rng = Pcg64::new(22);
+        let fa: Mat = Mat::randn(8, 3, &mut rng);
+        let fb: Mat = Mat::randn(6, 3, &mut rng);
+        let x: Mat = Mat::randn(4, 6, &mut rng);
+        let p = MatParam::fact(fa, fb);
+        let first = p.apply(&x);
+        let second = p.apply(&x);
+        for (a, b) in first.data.iter().zip(&second.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// The f32 instantiation of the same `MatParam` arithmetic tracks
+    /// f64 within tolerance and is deterministic across thread counts.
+    #[test]
+    fn f32_mat_param_tracks_f64() {
+        let mut rng = Pcg64::new(23);
+        let fa: Mat = Mat::randn(10, 4, &mut rng);
+        let fb: Mat = Mat::randn(7, 4, &mut rng);
+        let x: Mat = Mat::randn(5, 7, &mut rng);
+        let to32 = |m: &Mat| -> Mat<f32> {
+            Mat {
+                rows: m.rows,
+                cols: m.cols,
+                data: m.data.iter().map(|&v| v as f32).collect(),
+            }
+        };
+        let p64 = MatParam::fact(fa.clone(), fb.clone());
+        let p32 = MatParam::fact(to32(&fa), to32(&fb));
+        let want = p64.apply(&x);
+        let x32 = to32(&x);
+        let got_t1 = p32.apply(&x32);
+        for threads in [2usize, 4] {
+            let mut ar: Arena<f32> = Arena::default();
+            let got = p32.apply_ctx(&x32, &mut Ctx { threads, arena: &mut ar });
+            for (a, b) in got_t1.data.iter().zip(&got.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "f32 nondeterministic at t={threads}");
+            }
+        }
+        for (a, b) in want.data.iter().zip(&got_t1.data) {
+            let diff = (a - *b as f64).abs();
+            assert!(diff <= 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
 }

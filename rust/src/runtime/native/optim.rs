@@ -208,6 +208,19 @@ fn sgd_update(p: &mut [f64], mom: &mut [f64], g: &[f64], lr: f64, wdd: f64, thre
     });
 }
 
+/// Reusable buffers for [`optimizer_step`], persisted by the backend
+/// across steps: the stacked Newton-Schulz outputs (`oa`/`ob`) are
+/// parameter-sized and used to be freshly allocated for every matrix on
+/// every step — the optimizer-side half of the per-step allocation bug
+/// this scratch retires. [`super::kernels::newton_schulz_stacked_into`]
+/// performs the explicit overwrite-reset, so recycled storage can never
+/// leak a previous step's values.
+#[derive(Default)]
+pub struct OptScratch {
+    oa: Vec<f64>,
+    ob: Vec<f64>,
+}
+
 /// Take a tensor's storage out of the map to mutate alongside siblings
 /// (BTreeMap cannot lend two `&mut` at once). Panics on unknown name —
 /// the layout built the map, so a miss is a bug, not an input error.
@@ -256,6 +269,21 @@ pub fn optimizer_step(
     grads: &BTreeMap<String, Vec<f64>>,
     header: &[f64],
     threads: usize,
+) -> Result<Info> {
+    let mut scratch = OptScratch::default();
+    optimizer_step_scratch(cfg, tensors, grads, header, threads, &mut scratch)
+}
+
+/// [`optimizer_step`] over caller-persisted [`OptScratch`] — the training
+/// loop's spelling (the backend keeps one scratch per instance, so the
+/// steady-state step allocates nothing here).
+pub fn optimizer_step_scratch(
+    cfg: &VariantCfg,
+    tensors: &mut TenMap,
+    grads: &BTreeMap<String, Vec<f64>>,
+    header: &[f64],
+    threads: usize,
+    scratch: &mut OptScratch,
 ) -> Result<Info> {
     let opt = cfg.optimizer.as_str();
     let t = header[slots::STEP];
@@ -318,10 +346,10 @@ pub fn optimizer_step(
         let mom = &tensors[&format!("opt.mom.{n}")];
         let layers = mom.shape[0];
         let (mm, nn) = (mom.shape[1], mom.shape[2]);
-        let ortho = kernels::newton_schulz_stacked(&mom.data, layers, mm, nn, threads);
+        kernels::newton_schulz_stacked_into(&mom.data, layers, mm, nn, threads, &mut scratch.oa);
         let p = tensors.get_mut(n).expect("matrix param");
-        for i in 0..p.data.len() {
-            p.data[i] -= lr * ortho[i] + lr * wd * p.data[i];
+        for (pv, ov) in p.data.iter_mut().zip(&scratch.oa) {
+            *pv -= lr * *ov + lr * wd * *pv;
         }
     }
     if opt == "muon" {
@@ -369,13 +397,11 @@ pub fn optimizer_step(
             });
         }
 
-        let (oa, ob) = if opt == "spectron" {
+        if opt == "spectron" {
             let ma = &tensors[&format!("opt.mom.{na}")];
             let mb = &tensors[&format!("opt.mom.{nb}")];
-            (
-                kernels::newton_schulz_stacked(&ma.data, layers, am, ar, threads),
-                kernels::newton_schulz_stacked(&mb.data, layers, bm, br, threads),
-            )
+            kernels::newton_schulz_stacked_into(&ma.data, layers, am, ar, threads, &mut scratch.oa);
+            kernels::newton_schulz_stacked_into(&mb.data, layers, bm, br, threads, &mut scratch.ob);
         } else {
             // renorm: momentum normalized to unit spectral norm via its
             // own persisted power-iteration vectors (2 iters)
@@ -383,25 +409,29 @@ pub fn optimizer_step(
             let mut um_b = take(tensors, &format!("opt.um.{nb}"));
             let ma = &tensors[&format!("opt.mom.{na}")];
             let mb = &tensors[&format!("opt.mom.{nb}")];
-            let mut oa = ma.data.clone();
-            let mut ob = mb.data.clone();
+            // overwrite-reset of the recycled scratch: every element is
+            // copied from the momentum before the in-place rescale
+            scratch.oa.clear();
+            scratch.oa.extend_from_slice(&ma.data);
+            scratch.ob.clear();
+            scratch.ob.extend_from_slice(&mb.data);
             for l in 0..layers {
                 let (sma, uma) = power_iter(&ma.layer(l), &um_a.data[l * am..(l + 1) * am], 2);
                 let (smb, umb) = power_iter(&mb.layer(l), &um_b.data[l * bm..(l + 1) * bm], 2);
                 um_a.data[l * am..(l + 1) * am].copy_from_slice(&uma);
                 um_b.data[l * bm..(l + 1) * bm].copy_from_slice(&umb);
                 let (ia, ib) = (1.0 / (sma.abs() + 1e-8), 1.0 / (smb.abs() + 1e-8));
-                for v in oa[l * am * ar..(l + 1) * am * ar].iter_mut() {
+                for v in scratch.oa[l * am * ar..(l + 1) * am * ar].iter_mut() {
                     *v *= ia;
                 }
-                for v in ob[l * bm * br..(l + 1) * bm * br].iter_mut() {
+                for v in scratch.ob[l * bm * br..(l + 1) * bm * br].iter_mut() {
                     *v *= ib;
                 }
             }
             tensors.insert(format!("opt.um.{na}"), um_a);
             tensors.insert(format!("opt.um.{nb}"), um_b);
-            (oa, ob)
-        };
+        }
+        let (oa, ob) = (&scratch.oa, &scratch.ob);
 
         for l in 0..layers {
             let rho = lr / (sig_a[l] + sig_b[l] + 1.0);
@@ -443,16 +473,25 @@ pub enum Tracked {
 }
 
 impl Tracked {
-    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+    /// `W x` into `out` through a reused rank-space buffer `tmp` (the
+    /// factored path needs one intermediate; dense writes straight out).
+    fn matvec_into(&self, x: &[f64], tmp: &mut Vec<f64>, out: &mut Vec<f64>) {
         match self {
-            Tracked::Fact { a, b } => a.matvec(&b.matvec_t(x)),
-            Tracked::Dense(w) => w.matvec(x),
+            Tracked::Fact { a, b } => {
+                b.matvec_t_into(x, tmp);
+                a.matvec_into(tmp, out);
+            }
+            Tracked::Dense(w) => w.matvec_into(x, out),
         }
     }
-    fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
+    /// `Wᵀ y` into `out`; same buffer discipline as [`Tracked::matvec_into`].
+    fn matvec_t_into(&self, y: &[f64], tmp: &mut Vec<f64>, out: &mut Vec<f64>) {
         match self {
-            Tracked::Fact { a, b } => b.matvec(&a.matvec_t(y)),
-            Tracked::Dense(w) => w.matvec_t(y),
+            Tracked::Fact { a, b } => {
+                a.matvec_t_into(y, tmp);
+                b.matvec_into(tmp, out);
+            }
+            Tracked::Dense(w) => w.matvec_t_into(y, out),
         }
     }
     fn in_dim(&self) -> usize {
@@ -478,35 +517,94 @@ pub fn capture_tracked(cfg: &VariantCfg, tensors: &TenMap) -> Tracked {
     }
 }
 
+/// Every buffer one [`spectral_telemetry_into`] call touches, recycled
+/// by the backend across telemetry steps. The forward/transpose operator
+/// sides get *separate* tmp buffers (`tmp_f`/`tmp_t`, `old_f`/`old_t`)
+/// because [`linalg::spectral_norm_op_into`] holds both closures alive at
+/// once, so they cannot share one `&mut` capture.
+#[derive(Default)]
+pub struct TelemetryScratch {
+    spec: linalg::SpecScratch,
+    tmp_f: Vec<f64>,
+    tmp_t: Vec<f64>,
+    old_f: Vec<f64>,
+    old_t: Vec<f64>,
+    probe: Vec<f64>,
+    dy: Vec<f64>,
+}
+
 /// `(w_spec, dw_spec, dy_rms)` for old -> new tracked snapshots. The
 /// probe vectors come from a step-seeded [`Pcg64`] rather than the build
 /// side's jax PRNG — same estimator, different (documented) randomness;
 /// the values are measurements, not part of the update.
-pub fn spectral_telemetry(old: &Tracked, new: &Tracked, step: usize) -> (f64, f64, f64) {
+///
+/// Allocation-free in steady state: every intermediate lives in `s`, and
+/// the delta operator computes `new·x` and `old·x` into disjoint scratch
+/// then subtracts in place — the same left-to-right `a - b` arithmetic
+/// as the old allocating `zip(...).map(|(a, b)| a - b)` path, so the
+/// reported values are bit-identical to it.
+pub fn spectral_telemetry_into(
+    old: &Tracked,
+    new: &Tracked,
+    step: usize,
+    s: &mut TelemetryScratch,
+) -> (f64, f64, f64) {
     let n = new.in_dim();
     let base = Pcg64::new(1234).fold_in(step as u64);
     let mut k_w = base.fold_in(0);
     let mut k_dw = base.fold_in(1);
     let mut k_probe = base.fold_in(2);
+    let TelemetryScratch { spec, tmp_f, tmp_t, old_f, old_t, probe, dy } = s;
 
-    let w_spec =
-        linalg::spectral_norm_op(|x| new.matvec(x), |y| new.matvec_t(y), n, POWER_ITERS, &mut k_w);
-    let dmv = |x: &[f64]| -> Vec<f64> {
-        new.matvec(x).iter().zip(&old.matvec(x)).map(|(a, b)| a - b).collect()
-    };
-    let dmt = |y: &[f64]| -> Vec<f64> {
-        new.matvec_t(y).iter().zip(&old.matvec_t(y)).map(|(a, b)| a - b).collect()
-    };
-    let dw_spec = linalg::spectral_norm_op(&dmv, &dmt, n, POWER_ITERS, &mut k_dw);
+    let w_spec = linalg::spectral_norm_op_into(
+        |x, out| new.matvec_into(x, tmp_f, out),
+        |y, out| new.matvec_t_into(y, tmp_t, out),
+        n,
+        POWER_ITERS,
+        &mut k_w,
+        spec,
+    );
+    let dw_spec = linalg::spectral_norm_op_into(
+        |x, out| {
+            new.matvec_into(x, tmp_f, out);
+            old.matvec_into(x, tmp_f, old_f);
+            for (o, b) in out.iter_mut().zip(old_f.iter()) {
+                *o -= *b;
+            }
+        },
+        |y, out| {
+            new.matvec_t_into(y, tmp_t, out);
+            old.matvec_t_into(y, tmp_t, old_t);
+            for (o, b) in out.iter_mut().zip(old_t.iter()) {
+                *o -= *b;
+            }
+        },
+        n,
+        POWER_ITERS,
+        &mut k_dw,
+        spec,
+    );
 
-    let mut x: Vec<f64> = (0..n).map(|_| k_probe.normal()).collect();
-    let rms = (x.iter().map(|v| v * v).sum::<f64>() / n as f64).sqrt() + 1e-20;
-    for v in x.iter_mut() {
+    probe.clear();
+    probe.extend((0..n).map(|_| k_probe.normal()));
+    let rms = (probe.iter().map(|v| v * v).sum::<f64>() / n as f64).sqrt() + 1e-20;
+    for v in probe.iter_mut() {
         *v /= rms;
     }
-    let dy = dmv(&x);
+    new.matvec_into(probe, tmp_f, dy);
+    old.matvec_into(probe, tmp_f, old_f);
+    for (o, b) in dy.iter_mut().zip(old_f.iter()) {
+        *o -= *b;
+    }
     let dy_rms = (dy.iter().map(|v| v * v).sum::<f64>() / dy.len() as f64).sqrt();
     (w_spec, dw_spec, dy_rms)
+}
+
+/// Allocating wrapper over [`spectral_telemetry_into`] (one-shot callers
+/// and tests; the backend threads its persistent [`TelemetryScratch`]).
+pub fn spectral_telemetry(old: &Tracked, new: &Tracked, step: usize) -> (f64, f64, f64) {
+    let mut s = TelemetryScratch::default();
+    spectral_telemetry_into(old, new, step, &mut s)
 }
 
 // ---------------------------------------------------------------------------
@@ -540,4 +638,41 @@ pub fn spectron_pair_update(
         b2.data[i] -= rho * ob.data[i] + lr * wd * b.data[i];
     }
     (a2, b2, rho)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Telemetry through a dirty, reused [`TelemetryScratch`] must report
+    /// the same bits as the allocating wrapper on fresh buffers — for
+    /// both the factored and the dense tracked shapes, and after the
+    /// scratch has been dirtied by a different shape/step.
+    #[test]
+    fn telemetry_scratch_reuse_is_bit_stable() {
+        let mut rng = Pcg64::new(77);
+        let new = Tracked::Fact {
+            a: Mat::randn(12, 4, &mut rng),
+            b: Mat::randn(9, 4, &mut rng),
+        };
+        let old = Tracked::Fact {
+            a: Mat::randn(12, 4, &mut rng),
+            b: Mat::randn(9, 4, &mut rng),
+        };
+        let want = spectral_telemetry(&old, &new, 3);
+        let mut s = TelemetryScratch::default();
+        let _ = spectral_telemetry_into(&old, &new, 9, &mut s); // dirty it
+        let got = spectral_telemetry_into(&old, &new, 3, &mut s);
+        assert_eq!(want.0.to_bits(), got.0.to_bits());
+        assert_eq!(want.1.to_bits(), got.1.to_bits());
+        assert_eq!(want.2.to_bits(), got.2.to_bits());
+
+        let new_d = Tracked::Dense(Mat::randn(8, 6, &mut rng));
+        let old_d = Tracked::Dense(Mat::randn(8, 6, &mut rng));
+        let want_d = spectral_telemetry(&old_d, &new_d, 5);
+        let got_d = spectral_telemetry_into(&old_d, &new_d, 5, &mut s);
+        assert_eq!(want_d.0.to_bits(), got_d.0.to_bits());
+        assert_eq!(want_d.1.to_bits(), got_d.1.to_bits());
+        assert_eq!(want_d.2.to_bits(), got_d.2.to_bits());
+    }
 }

@@ -93,12 +93,26 @@ impl ModelSession {
     /// [`ModelSession::load_native`] with an explicit tensor-core thread
     /// budget (`repro serve --backend native --threads N`): batched
     /// eval/decode executes fan their matmuls across the pool.
+    /// Precision follows `REPRO_PRECISION`.
     pub fn load_native_threads(
         variant: &VariantCfg,
         ckpt: &std::path::Path,
         threads: usize,
     ) -> Result<ModelSession> {
-        let ev = Evaluator::native_with_threads(variant, threads)?;
+        Self::load_native_opts(variant, ckpt, threads, crate::runtime::Precision::from_env())
+    }
+
+    /// [`ModelSession::load_native_threads`] with an explicit compute
+    /// precision (`repro serve --backend native --precision f32`): eval
+    /// and KV-cached decode run in f32, halving resident model bytes
+    /// (docs/adr/008-f32-compute-path.md).
+    pub fn load_native_opts(
+        variant: &VariantCfg,
+        ckpt: &std::path::Path,
+        threads: usize,
+        precision: crate::runtime::Precision,
+    ) -> Result<ModelSession> {
+        let ev = Evaluator::native_with_opts(variant, threads, precision)?;
         let manifest = crate::runtime::layout::build_manifest(variant)?;
         Self::finish(manifest, ev, &variant.name, ckpt)
     }
@@ -498,6 +512,9 @@ pub struct NativeEngine {
     /// tensor-core budget per session (worker threads share the one
     /// process pool, so oversubscription self-limits)
     threads: usize,
+    /// compute precision for eval/decode (optimizerless path, so f32 is
+    /// purely a memory-bandwidth knob here)
+    precision: crate::runtime::Precision,
     /// decode-slot capacity (0 = lockstep decode)
     slots: usize,
     /// ticket -> (variant, in-flight slot)
@@ -524,13 +541,34 @@ impl NativeEngine {
     }
 
     /// Full-knob constructor; `slots = 0` disables continuous batching
-    /// (generate runs lockstep, the no-KV-cache baseline).
+    /// (generate runs lockstep, the no-KV-cache baseline). Precision
+    /// follows `REPRO_PRECISION`.
     pub fn with_opts(
         bpe: Arc<Bpe>,
         ckpts: BTreeMap<String, PathBuf>,
         cache_cap: usize,
         threads: usize,
         slots: usize,
+    ) -> Result<NativeEngine> {
+        Self::with_precision(
+            bpe,
+            ckpts,
+            cache_cap,
+            threads,
+            slots,
+            crate::runtime::Precision::from_env(),
+        )
+    }
+
+    /// [`NativeEngine::with_opts`] with an explicit compute precision
+    /// for every session this engine loads.
+    pub fn with_precision(
+        bpe: Arc<Bpe>,
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+        threads: usize,
+        slots: usize,
+        precision: crate::runtime::Precision,
     ) -> Result<NativeEngine> {
         anyhow::ensure!(!ckpts.is_empty(), "serve: no checkpoints registered");
         let reg = Registry::load().map_err(|e| anyhow!(e))?;
@@ -540,6 +578,7 @@ impl NativeEngine {
             ckpts,
             sessions: LruCache::new(cache_cap),
             threads: threads.max(1),
+            precision,
             slots,
             active: BTreeMap::new(),
             next_ticket: 1,
@@ -567,6 +606,7 @@ impl NativeEngine {
 
     /// Full-knob factory; `slots = 0` serves generate lockstep (the
     /// cache-off baseline `examples/serve_bench.rs` measures against).
+    /// Precision follows `REPRO_PRECISION`.
     pub fn factory_opts(
         ckpts: BTreeMap<String, PathBuf>,
         cache_cap: usize,
@@ -574,14 +614,35 @@ impl NativeEngine {
         threads: usize,
         slots: usize,
     ) -> super::engine::EngineFactory {
+        Self::factory_precision(
+            ckpts,
+            cache_cap,
+            docs,
+            threads,
+            slots,
+            crate::runtime::Precision::from_env(),
+        )
+    }
+
+    /// [`NativeEngine::factory_opts`] with an explicit compute precision
+    /// (`repro serve --backend native --precision f32`).
+    pub fn factory_precision(
+        ckpts: BTreeMap<String, PathBuf>,
+        cache_cap: usize,
+        docs: u64,
+        threads: usize,
+        slots: usize,
+        precision: crate::runtime::Precision,
+    ) -> super::engine::EngineFactory {
         let bpe = serving_bpe(docs);
         Arc::new(move || {
-            Ok(Box::new(NativeEngine::with_opts(
+            Ok(Box::new(NativeEngine::with_precision(
                 bpe.clone(),
                 ckpts.clone(),
                 cache_cap,
                 threads,
                 slots,
+                precision,
             )?) as Box<dyn BatchEngine>)
         })
     }
@@ -595,6 +656,7 @@ impl NativeEngine {
             .clone();
         let v = self.reg.variant(variant).map_err(|e| anyhow!(e))?.clone();
         let threads = self.threads;
+        let precision = self.precision;
         self.sessions
             .get_or_try_insert(&variant.to_string(), || {
                 crate::info!(
@@ -602,7 +664,7 @@ impl NativeEngine {
                     "loading native session {variant} from {}",
                     ckpt.display()
                 );
-                ModelSession::load_native_threads(&v, &ckpt, threads)
+                ModelSession::load_native_opts(&v, &ckpt, threads, precision)
             })
             .map(|s| &*s)
     }

@@ -1,0 +1,98 @@
+//! Zero net per-step heap growth in the native training loop
+//! (docs/adr/008-f32-compute-path.md, DESIGN.md §Native tensor core).
+//!
+//! A counting global allocator tracks *live* bytes. After a short
+//! warmup (which populates the arena, the backward scratch, the
+//! optimizer's decoded mirrors, and the NS/telemetry buffers), repeated
+//! identical steps must return the allocator to exactly the same live
+//! footprint: everything parameter-sized is recycled, and what little
+//! still allocates per step (the transient model decode, the output
+//! vector) frees exactly what it takes.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicIsize, Ordering};
+
+use spectron::config::Registry;
+use spectron::runtime::{NativeBackend, Precision};
+use spectron::util::rng::Pcg64;
+
+/// System allocator wrapped with a live-byte counter. `Relaxed` is
+/// enough: the test reads the counter only while the loop is quiescent.
+struct Counting;
+
+static LIVE: AtomicIsize = AtomicIsize::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            LIVE.fetch_add(layout.size() as isize, Ordering::Relaxed);
+        }
+        p
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size() as isize, Ordering::Relaxed);
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            LIVE.fetch_add(new_size as isize - layout.size() as isize, Ordering::Relaxed);
+        }
+        p
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            LIVE.fetch_add(layout.size() as isize, Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: Counting = Counting;
+
+fn steady_loop(precision: Precision) {
+    let reg = Registry::load().unwrap();
+    let mut cfg = reg.variant("fact-z0-spectron").unwrap().clone();
+    cfg.model.vocab = 48;
+    cfg.model.seq_len = 10;
+    cfg.batch = 2;
+    // threads = 1 keeps the whole loop on this thread (no pool workers
+    // with their own stacks/queues muddying the counter)
+    let be = NativeBackend::with_opts(&cfg, 1, precision).unwrap();
+    let knobs = [100.0, 0.02, 0.01, 0.1, 0.0, 0.0, 0.0, 0.0];
+    let mut state = be.init_state(1, &knobs);
+    let (b, w) = (cfg.batch, cfg.model.seq_len + 1);
+    let mut rng = Pcg64::new(5);
+    let toks: Vec<i32> =
+        (0..b * w).map(|_| rng.below(cfg.model.vocab as u64) as i32).collect();
+
+    // warmup: grows the arena, backward scratch, decoded optimizer
+    // mirrors, grad map, NS/telemetry scratch to their steady shapes
+    for _ in 0..3 {
+        state = be.step_state(&state, &toks).unwrap();
+    }
+    let baseline = LIVE.load(Ordering::Relaxed);
+    for k in 0..10 {
+        state = be.step_state(&state, &toks).unwrap();
+        let now = LIVE.load(Ordering::Relaxed);
+        assert_eq!(
+            now - baseline,
+            0,
+            "step {k} leaked {} net bytes ({precision:?})",
+            now - baseline
+        );
+    }
+}
+
+/// One test, both precisions in sequence: the live-byte counter is
+/// process-global, so a concurrently running sibling test (or the
+/// harness thread printing its result) would race the baseline. A
+/// single test keeps the whole binary quiescent during measurement.
+#[test]
+fn training_loop_has_zero_net_per_step_heap_growth() {
+    steady_loop(Precision::F64);
+    steady_loop(Precision::F32);
+}

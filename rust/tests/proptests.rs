@@ -506,6 +506,72 @@ fn prop_native_train_step_parallel_bit_identity() {
     });
 }
 
+/// The f32 compute path contract (docs/adr/008-f32-compute-path.md):
+/// for random shrunken variants, the f32 forward's logits (via
+/// `grad_vec`'s loss and `logits_at`) are bit-identical across thread
+/// budgets 1/2/4 and agree with the f64 path within a tolerance band.
+#[test]
+fn prop_f32_forward_matches_f64() {
+    use spectron::runtime::{Backend, Precision};
+    let reg = Registry::load().unwrap();
+    let bases = ["fact-z0-spectron", "fact-s-sgd"];
+    check("f32 forward vs f64", |rng| {
+        let base = *rng.choice(&bases);
+        let mut cfg = reg.variant(base).map_err(|e| e.to_string())?.clone();
+        cfg.model.vocab = usize_in(rng, 24, 48);
+        cfg.model.seq_len = usize_in(rng, 6, 12);
+        cfg.batch = 2;
+        let seed = rng.below(1000);
+        let knobs = [20.0, 0.02, 0.01, 0.1, 0.0, 0.0, 0.0, 0.0];
+        let f64_be = NativeBackend::with_opts(&cfg, 1, Precision::F64)
+            .map_err(|e| e.to_string())?;
+        let state = f64_be.init_state(seed, &knobs);
+        let params_end = f64_be.manifest().params_end;
+        let b = cfg.batch;
+        let t = cfg.model.seq_len;
+        let vocab = cfg.model.vocab;
+        let toks: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u64) as i32).collect();
+        let pos: Vec<i32> = (0..b).map(|_| rng.below(t as u64) as i32).collect();
+        let want = f64_be
+            .logits_at(&state[..params_end], &toks, &pos)
+            .map_err(|e| e.to_string())?;
+        let mut f32_runs = Vec::new();
+        for &threads in &[1usize, 2, 4] {
+            let be = NativeBackend::with_opts(&cfg, threads, Precision::F32)
+                .map_err(|e| e.to_string())?;
+            let got = be
+                .logits_at(&state[..params_end], &toks, &pos)
+                .map_err(|e| e.to_string())?;
+            if got.len() != want.len() {
+                return Err(format!("{base}: f32 logits len {}", got.len()));
+            }
+            f32_runs.push(got);
+        }
+        // f32 is bit-identical to itself across thread counts
+        for (threads, got) in [2usize, 4].iter().zip(&f32_runs[1..]) {
+            for (j, (a, c)) in f32_runs[0].iter().zip(got).enumerate() {
+                if a.to_bits() != c.to_bits() {
+                    return Err(format!(
+                        "{base}: f32 logit {j} differs at threads={threads}"
+                    ));
+                }
+            }
+        }
+        // ... and tracks f64 within the tolerance band (logits are O(1)
+        // post-rms-norm products; depth amplifies rounding, so scale the
+        // band by the magnitude of the pair)
+        for (j, (a, c)) in want.iter().zip(&f32_runs[0]).enumerate() {
+            let tol = 5e-3 * (1.0 + a.abs().max(c.abs()));
+            if (a - c).abs() > tol {
+                return Err(format!(
+                    "{base}: logit {j} f64 {a} vs f32 {c} (tol {tol})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// The serving KV-cache invariant
 /// (docs/adr/006-kv-cache-continuous-batching.md): incremental decode
 /// through the Backend API — prefill once, then one token per step — is

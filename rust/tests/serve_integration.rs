@@ -711,3 +711,61 @@ fn drain_and_resume_cycle_over_the_wire() {
     assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
     handle.shutdown();
 }
+
+/// A long mixed-shape serve run holds the arena footprint steady.
+///
+/// This drives the native backend's decode path directly — the exact
+/// calls `NativeEngine` issues per request — because the observable
+/// (`NativeBackend::arena_retained_bytes`) lives on the backend. Prompt
+/// lengths cycle through every size the server could see, interleaved
+/// with incremental decode steps, in both precisions. The best-fit free
+/// list used to grow without bound under this churn: every novel
+/// intermediate shape left another buffer behind. With the bounded
+/// arena (`linalg::Arena`, default 256 MiB idle cap) the footprint must
+/// stop growing once every shape has been seen: after a warmup cycle,
+/// each later cycle ends at exactly the same retained-byte count.
+#[test]
+fn mixed_shape_decode_churn_holds_arena_footprint_steady() {
+    use spectron::config::Registry;
+    use spectron::runtime::{Backend, NativeBackend, Precision};
+
+    let reg = Registry::load().unwrap();
+    let mut cfg = reg.variant("fact-z0-spectron").unwrap().clone();
+    cfg.model.vocab = 48;
+    cfg.model.seq_len = 12;
+    cfg.batch = 2;
+
+    for precision in [Precision::F64, Precision::F32] {
+        let mut be = NativeBackend::with_opts(&cfg, 1, precision).unwrap();
+        let state = be.init_state(9, &[10.0, 0.01, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let params_end = be.manifest().params_end;
+        let prefix = be.upload_prefix(&state[..params_end]).unwrap();
+        let dm = be.decode_model(&prefix).unwrap();
+
+        let cap = cfg.model.seq_len + 1; // KV capacity per decode session
+        let mut warm = None;
+        for cycle in 0..4 {
+            for len in 1..=cfg.model.seq_len {
+                let mut st = be.decode_open(&dm).unwrap();
+                let prompt: Vec<i32> =
+                    (0..len).map(|i| ((i * 7 + len) % cfg.model.vocab) as i32).collect();
+                be.decode_prefill(&prefix, &dm, &mut st, &prompt).unwrap();
+                for t in 0..(cap - len).min(3) {
+                    let tok = ((len + t) % cfg.model.vocab) as i32;
+                    be.decode_step(&prefix, &dm, &mut st, tok).unwrap();
+                }
+                be.decode_close(st);
+            }
+            let retained = be.arena_retained_bytes();
+            match warm {
+                // warmup cycle: every shape is now cached
+                None => warm = Some(retained),
+                Some(w) => assert_eq!(
+                    retained, w,
+                    "cycle {cycle} moved the arena footprint ({precision:?}): {w} -> {retained}"
+                ),
+            }
+        }
+        assert!(warm.unwrap() > 0, "churn should exercise the arena ({precision:?})");
+    }
+}
