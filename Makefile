@@ -2,7 +2,7 @@
 # needs Python; everything after runs from the self-contained `repro`
 # binary (DESIGN.md).
 
-.PHONY: artifacts build test ci docs bench bench-native serve-bench serve-test route-test route-bench sweep-smoke clean
+.PHONY: artifacts build test ci docs bench bench-native serve-bench serve-test route-test route-bench obs-test sweep-smoke clean
 
 # Lower every variant's programs to HLO text + manifests.
 artifacts:
@@ -78,6 +78,13 @@ serve-test:
 route-test:
 	REPRO_THREADS=1 cargo test -q --test route_integration
 	REPRO_THREADS=4 cargo test -q --test route_integration
+
+# The observability suite (DESIGN.md §Observability, docs/adr/009):
+# exact counters under contention, consistent snapshots, bit-identical
+# traced training at both thread budgets and precisions, and
+# schema-valid Chrome trace export.
+obs-test:
+	cargo test -q --test obs
 
 # Open-loop routed score latency (examples/serve_bench.rs under
 # ROUTE_BENCH=1): 1 replica, 2 replicas, and 2 replicas with a mid-run

@@ -111,6 +111,52 @@ fn main() {
         }
     }
 
+    // observability overhead: the same trainer stepped with span tracing
+    // disabled vs enabled (memory sink, so file I/O noise stays out of
+    // the row). Spans only read the clock at phase boundaries, so the
+    // enabled row must land within a few percent — the acceptance gate
+    // recorded in BENCH_obs_overhead.json (BENCH_ASSERT_OBS=1 makes the
+    // 5% ceiling a hard failure; docs/adr/009-observability-layer.md).
+    header("observability overhead (native z0, 8 steps per iter)");
+    {
+        let v = reg.variant("fact-z0-spectron").unwrap();
+        let run = RunCfg { total_steps: 100_000, read_interval: 64, ..RunCfg::default() };
+        let mut trainer = Trainer::native(v, run).unwrap();
+        let mut batches = ds.batches(Split::Train, v.batch, 0);
+        trainer.train(&mut batches, 2).unwrap();
+        let off = Bench::new("train step x8 [tracing off]")
+            .warmup(2)
+            .iters(10)
+            .run(|| trainer.train(&mut batches, 8).unwrap());
+        spectron::obs::trace::install_memory();
+        let on = Bench::new("train step x8 [tracing on]")
+            .warmup(2)
+            .iters(10)
+            .run(|| trainer.train(&mut batches, 8).unwrap());
+        let spans = spectron::obs::trace::drain_memory().len();
+        spectron::obs::trace::uninstall();
+        let pct = (on.mean_s / off.mean_s - 1.0) * 100.0;
+        println!("  tracing-on vs tracing-off mean: {pct:+.2}% (target: within 5%)");
+        println!("  spans recorded on the traced iters: {spans}");
+        let row = Json::obj(vec![
+            ("suite", Json::str("obs_overhead")),
+            ("untraced_s", Json::num(off.mean_s)),
+            ("traced_s", Json::num(on.mean_s)),
+            ("overhead_pct", Json::num(pct)),
+            ("spans", Json::num(spans as f64)),
+        ]);
+        match std::fs::write("BENCH_obs_overhead.json", row.to_string()) {
+            Ok(()) => println!("obs overhead json -> BENCH_obs_overhead.json"),
+            Err(e) => eprintln!("obs overhead json: {e}"),
+        }
+        if std::env::var("BENCH_ASSERT_OBS").is_ok() {
+            assert!(
+                pct <= 5.0,
+                "span overhead {pct:+.2}% exceeds the 5% ceiling (BENCH_ASSERT_OBS)"
+            );
+        }
+    }
+
     let root = ArtifactIndex::default_root();
     if !root.join("index.json").exists() {
         println!("step_latency: artifacts missing, pjrt rows skipped (run `make artifacts`)");

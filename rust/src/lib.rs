@@ -29,6 +29,7 @@ pub mod eval;
 pub mod exp;
 pub mod linalg;
 pub mod monitor;
+pub mod obs;
 pub mod runtime;
 pub mod scaling;
 pub mod serve;

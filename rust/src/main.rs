@@ -14,7 +14,13 @@
 //! repro dp-demo [--workers N]        simulated data-parallel training
 //! repro accum-demo [--micro N]       gradient-accumulation training
 //! repro data [--docs N]              dataset/tokenizer statistics
+//! repro trace-export --name RUN      span log -> Chrome trace JSON
 //! ```
+//!
+//! `train`, `serve` and `route` take `--trace`: phase/request spans are
+//! appended to `results/<run>/trace.jsonl` (DESIGN.md §Observability)
+//! and `trace-export` converts that log into Chrome trace-event JSON
+//! viewable in Perfetto or chrome://tracing.
 //!
 //! Most commands take `--backend {pjrt,native,auto}` (DESIGN.md
 //! §Backends): `pjrt` runs the AOT artifacts, `native` the pure-Rust
@@ -44,11 +50,11 @@ use spectron::runtime::backend::{Backend, BackendKind};
 use spectron::runtime::{ArtifactIndex, NativeBackend, PjrtBackend, Runtime};
 use spectron::train::{checkpoint, MetricsLog, Trainer};
 use spectron::util::cli::Args;
-use spectron::{info, util};
+use spectron::{error, info, util};
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        error!("repro", "{e:#}");
         std::process::exit(1);
     }
 }
@@ -71,6 +77,7 @@ fn run() -> Result<()> {
         "dp-demo" => dp_demo(&mut args),
         "accum-demo" => accum_demo(&mut args),
         "data" => data_cmd(&mut args),
+        "trace-export" => trace_export_cmd(&mut args),
         _ => {
             print!("{}", HELP);
             Ok(())
@@ -88,6 +95,7 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
               [--precision f64|f32]
               [--guard loss-spike,spectron-bound,rho-collapse,sigma-collapse]
               [--on-spike log|halt|lr-cut|rollback] [--inject-spike STEP:SCALE]
+              [--trace]
               (async batch prefetch is on by default; --backend native
                needs no artifacts, no Python — pure Rust end to end;
                --threads sets its tensor-core budget, bit-identical at
@@ -103,8 +111,9 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
               [--max-wait-ms F] [--workers N] [--cache N] [--docs N]
               [--slots N] [--queue-cap N]
               [--backend ...] [--threads N|auto] [--precision f64|f32]
-              [--mock]
-              (line-delimited JSON; ops: generate, score, stats, shutdown;
+              [--mock] [--trace]
+              (line-delimited JSON; ops: generate, score, stats, metrics,
+               shutdown — metrics returns Prometheus-style text;
                --docs must match training so the tokenizers agree;
                --slots 0 disables KV-cached continuous batching and decodes
                lockstep; past --queue-cap pending requests new ones are
@@ -113,7 +122,7 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
                no replies)
   repro route --spawn N | --replicas HOST:PORT,... [--addr HOST:PORT]
               [--retries N] [--deadline-ms F] [--health-interval-ms F]
-              [--probe-timeout-ms F] [--fail-threshold N]
+              [--probe-timeout-ms F] [--fail-threshold N] [--trace]
               [serve flags passed through under --spawn: --ckpt --mock
                --backend --threads --precision --slots --queue-cap
                --max-batch --max-wait-ms --docs --workers --cache
@@ -121,7 +130,8 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
               (same NDJSON protocol fanned across N serve replicas:
                health-checked circuit breakers, session affinity,
                retry/backoff + failover for idempotent ops, per-request
-               deadlines; extra ops: ping, drain/resume {'replica': i};
+               deadlines; extra ops: ping, metrics, drain/resume
+               {'replica': i};
                --spawn supervises child replicas and restarts crashes
                with capped backoff — DESIGN.md section Routing)
   repro sweep [--grid grid.toml | --smoke] [--workers N] [--max-runs N]
@@ -134,6 +144,13 @@ repro — Spectron (native low-rank LLM pretraining) reproduction
                     --backend ... --threads N|auto]
   repro accum-demo [--micro N --steps N --variant V --backend ... --threads N|auto]
   repro data  [--docs N]
+  repro trace-export --name RUN [--out FILE]
+              (convert results/RUN/trace.jsonl — written under --trace —
+               into Chrome trace-event JSON for Perfetto/chrome://tracing;
+               default output results/RUN/trace.chrome.json)
+
+  REPRO_LOG=debug,serve=trace sets log verbosity (level, or per-target
+  overrides); --trace appends span timings to results/<run>/trace.jsonl.
 ";
 
 /// Backend selection shared by the launcher commands: `auto` prefers the
@@ -290,6 +307,7 @@ fn train_cmd(args: &mut Args) -> Result<()> {
     let guard = args.opt_str("guard");
     let on_spike = args.opt_str("on-spike");
     let inject = args.opt_str("inject-spike");
+    let trace = args.flag("trace");
     let sel = BackendSel::resolve(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
     // validate eagerly: a typo'd policy (or a policy with no guards to
@@ -328,6 +346,10 @@ fn train_cmd(args: &mut Args) -> Result<()> {
         None => Trainer::with_backend(make_backend()?, v, run.clone())?,
     };
     let run_name = format!("train-{variant}");
+    if trace {
+        let p = spectron::obs::trace::install_file(&run_name)?;
+        info!("train", "span tracing on -> {}", p.display());
+    }
     let mut metrics = MetricsLog::with_file(&run_name)?;
     let mut monitor = match &guard {
         Some(list) => {
@@ -395,6 +417,10 @@ fn train_cmd(args: &mut Args) -> Result<()> {
     if let Some(path) = ckpt_out {
         checkpoint::save(std::path::Path::new(&path), &variant, &state)?;
         println!("checkpoint -> {path}");
+    }
+    if trace {
+        spectron::obs::trace::uninstall(); // flush the span log
+        println!("trace -> results/{run_name}/trace.jsonl  (repro trace-export --name {run_name})");
     }
     Ok(())
 }
@@ -498,6 +524,7 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     // thread and, transitively, any decode slot they pinned)
     let idle_timeout_ms = args.f64("idle-timeout-ms", 0.0);
     let mock = args.flag("mock");
+    let trace = args.flag("trace");
     let backend = if mock {
         // --mock never touches a backend; consume the flags so they are
         // not reported as unknown, but don't force artifact resolution
@@ -561,9 +588,16 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
         }
     };
 
+    if trace {
+        let p = spectron::obs::trace::install_file("serve")?;
+        info!("serve", "span tracing on -> {}", p.display());
+    }
     let handle = Server::spawn(cfg, factory)?;
     println!("serving on {}  (send {{\"op\":\"shutdown\"}} to stop)", handle.addr);
     let stats = handle.wait();
+    if trace {
+        spectron::obs::trace::uninstall(); // flush the span log
+    }
     println!("server stopped; final stats: {stats}");
     Ok(())
 }
@@ -585,6 +619,7 @@ fn route_cmd(args: &mut Args) -> Result<()> {
     let health_interval_ms = args.f64("health-interval-ms", 100.0);
     let probe_timeout_ms = args.f64("probe-timeout-ms", 1_000.0);
     let fail_threshold = args.usize("fail-threshold", 3);
+    let trace = args.flag("trace");
 
     // serve flags forwarded verbatim to spawned replicas; ports are
     // owned by the supervisor, so --addr is deliberately not in the list
@@ -653,6 +688,10 @@ fn route_cmd(args: &mut Args) -> Result<()> {
         }
     };
 
+    if trace {
+        let p = spectron::obs::trace::install_file("route")?;
+        info!("route", "span tracing on -> {}", p.display());
+    }
     let handle = Router::spawn(cfg, replica_addrs, supervisor)?;
     println!(
         "routing on {} across {} replicas  (send {{\"op\":\"shutdown\"}} to stop)",
@@ -660,6 +699,9 @@ fn route_cmd(args: &mut Args) -> Result<()> {
         handle.pool().len()
     );
     let stats = handle.wait();
+    if trace {
+        spectron::obs::trace::uninstall(); // flush the span log
+    }
     println!("router stopped; final stats: {stats}");
     Ok(())
 }
@@ -891,5 +933,31 @@ fn data_cmd(args: &mut Args) -> Result<()> {
         enc.len(),
         sample.len() as f64 / enc.len() as f64
     );
+    Ok(())
+}
+
+/// Convert a run's span log (`results/<name>/trace.jsonl`, written under
+/// `--trace`) into Chrome trace-event JSON for Perfetto or
+/// chrome://tracing (DESIGN.md §Observability).
+fn trace_export_cmd(args: &mut Args) -> Result<()> {
+    let name = args
+        .opt_str("name")
+        .ok_or_else(|| anyhow!("usage: repro trace-export --name <run> [--out file]"))?;
+    let out = args.opt_str("out");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let src = spectron::repo_path(&format!("results/{name}/trace.jsonl"));
+    let chrome = spectron::obs::expo::chrome_from_jsonl(&src)?;
+    spectron::obs::expo::validate_chrome(&chrome).map_err(|e| anyhow!(e))?;
+    let n = chrome
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .map_or(0, |a| a.len());
+    let out = out
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| spectron::repo_path(&format!("results/{name}/trace.chrome.json")));
+    std::fs::write(&out, chrome.to_string())
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("{n} span(s) -> {}  (open in Perfetto or chrome://tracing)", out.display());
     Ok(())
 }

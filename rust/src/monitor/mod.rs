@@ -187,6 +187,10 @@ pub struct Monitor {
     pub events_seen: usize,
     pub interventions: usize,
     halted: bool,
+    /// registry mirrors (DESIGN.md §Observability); handles cached here so
+    /// the observe path never takes the registry's family-map lock
+    obs_events: std::sync::Arc<crate::obs::Counter>,
+    obs_interventions: std::sync::Arc<crate::obs::Counter>,
 }
 
 const TRACE_LEN: usize = 16;
@@ -206,6 +210,9 @@ impl Monitor {
             events_seen: 0,
             interventions: 0,
             halted: false,
+            obs_events: crate::obs::global().counter("monitor_events_total", &[]),
+            obs_interventions: crate::obs::global()
+                .counter("monitor_interventions_total", &[]),
         }
     }
 
@@ -250,6 +257,7 @@ impl Monitor {
 
     fn log_event(&mut self, det: &Detection, action: &str) {
         self.events_seen += 1;
+        self.obs_events.inc();
         crate::info!(
             "monitor",
             "{} at step {}: {} -> {action}",
@@ -370,6 +378,7 @@ impl StepObserver for Monitor {
             Policy::LrCut { factor } => {
                 self.log_event(&det, "lr-cut");
                 self.interventions += 1;
+                self.obs_interventions.inc();
                 self.cooldown_left = self.cfg.cooldown_obs;
                 Directive::CutLr { factor }
             }
@@ -377,6 +386,7 @@ impl StepObserver for Monitor {
                 Some((to_step, state)) => {
                     self.log_event(&det, "rollback");
                     self.interventions += 1;
+                    self.obs_interventions.inc();
                     // the re-run window gets a grace period (counted in
                     // readbacks) before the monitor can intervene again
                     self.cooldown_left = self.cfg.cooldown_obs;

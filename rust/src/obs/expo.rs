@@ -1,0 +1,187 @@
+//! Exposition converters: recorded trace rows → Chrome trace-event JSON
+//! (loadable in Perfetto / `chrome://tracing`), plus a small
+//! Prometheus-text parser used by tests to assert the `metrics` wire op
+//! returns well-formed output (DESIGN.md §Observability).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Convert trace rows (the JSONL schema written by [`super::trace`]) to
+/// a Chrome trace-event document: complete events (`ph:"X"`) with
+/// microsecond `ts`/`dur`, one `pid`, per-thread `tid` tracks.
+pub fn render_chrome(rows: &[Json]) -> Json {
+    let events: Vec<Json> = rows
+        .iter()
+        .filter_map(|row| {
+            let name = row.get("name")?.as_str()?;
+            let mut fields = vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str(row.get("cat").and_then(Json::as_str).unwrap_or("obs"))),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(row.get("ts_us").and_then(Json::as_f64)?)),
+                ("dur", Json::num(row.get("dur_us").and_then(Json::as_f64)?)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(row.get("tid").and_then(Json::as_f64).unwrap_or(0.0))),
+            ];
+            let mut args: Vec<(&str, Json)> = Vec::new();
+            if let Some(id) = row.get("trace").and_then(Json::as_str) {
+                args.push(("trace", Json::str(id)));
+            }
+            if let Some(extra) = row.get("args").and_then(Json::as_obj) {
+                for (k, v) in extra {
+                    args.push((k, v.clone()));
+                }
+            }
+            if !args.is_empty() {
+                fields.push(("args", Json::obj(args)));
+            }
+            Some(Json::obj(fields))
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Read a recorded `trace.jsonl` and convert it. Unparseable lines are
+/// an error (a truncated final line from a killed run is the one
+/// exception — it is dropped, matching how the sweep runner treats
+/// torn JSONL tails).
+pub fn chrome_from_jsonl(path: &Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let mut rows = Vec::new();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    for (i, line) in lines.iter().enumerate() {
+        match Json::parse(line) {
+            Ok(row) => rows.push(row),
+            Err(e) if i + 1 == lines.len() => {
+                crate::warn_!("obs", "dropping torn trace tail: {e}");
+            }
+            Err(e) => {
+                return Err(anyhow::anyhow!("{} line {}: {e}", path.display(), i + 1));
+            }
+        }
+    }
+    Ok(render_chrome(&rows))
+}
+
+/// Validate a document against the Chrome trace-event schema subset we
+/// emit: `traceEvents` is an array and every event carries a string
+/// `name`, `ph == "X"`, and numeric `ts`/`dur`. Unit tests run exported
+/// traces through this.
+pub fn validate_chrome(doc: &Json) -> Result<(), String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    for (i, ev) in events.iter().enumerate() {
+        let ctx = |field: &str| format!("event {i}: bad or missing {field}");
+        ev.get("name").and_then(Json::as_str).ok_or_else(|| ctx("name"))?;
+        let ph = ev.get("ph").and_then(Json::as_str).ok_or_else(|| ctx("ph"))?;
+        if ph != "X" {
+            return Err(format!("event {i}: ph must be \"X\", got {ph:?}"));
+        }
+        ev.get("ts").and_then(Json::as_f64).ok_or_else(|| ctx("ts"))?;
+        ev.get("dur").and_then(Json::as_f64).ok_or_else(|| ctx("dur"))?;
+    }
+    Ok(())
+}
+
+/// Parse Prometheus text exposition into `(sample_name_with_labels,
+/// value)` pairs. Strict about the line shapes [`super::registry`]
+/// renders; tests use it to assert the `metrics` op output is parseable.
+pub fn parse_prometheus(text: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let split = line
+            .rfind(' ')
+            .ok_or_else(|| format!("line {}: no value separator: {line:?}", i + 1))?;
+        let (name, value) = (&line[..split], &line[split + 1..]);
+        if name.is_empty() {
+            return Err(format!("line {}: empty sample name", i + 1));
+        }
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: bad value {value:?}", i + 1))?;
+        out.push((name.to_string(), v));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_render_is_schema_valid() {
+        let rows = vec![
+            Json::obj(vec![
+                ("name", Json::str("forward")),
+                ("cat", Json::str("train")),
+                ("ts_us", Json::num(12.0)),
+                ("dur_us", Json::num(340.5)),
+                ("tid", Json::num(2.0)),
+            ]),
+            Json::obj(vec![
+                ("name", Json::str("serve_request")),
+                ("cat", Json::str("serve")),
+                ("ts_us", Json::num(400.0)),
+                ("dur_us", Json::num(90.0)),
+                ("tid", Json::num(3.0)),
+                ("trace", Json::str("req-7")),
+                ("args", Json::obj(vec![("batch", Json::num(4.0))])),
+            ]),
+        ];
+        let doc = render_chrome(&rows);
+        validate_chrome(&doc).expect("rendered doc must satisfy the schema");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let args = events[1].get("args").expect("trace id lands in args");
+        assert_eq!(args.get("trace").and_then(Json::as_str), Some("req-7"));
+        assert_eq!(args.get("batch").and_then(Json::as_f64), Some(4.0));
+    }
+
+    #[test]
+    fn malformed_rows_are_skipped_not_fatal() {
+        let rows = vec![Json::obj(vec![("cat", Json::str("no-name"))])];
+        let doc = render_chrome(&rows);
+        assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+        validate_chrome(&doc).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_wrong_phase() {
+        let doc = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![Json::obj(vec![
+                ("name", Json::str("x")),
+                ("ph", Json::str("B")),
+                ("ts", Json::num(0.0)),
+                ("dur", Json::num(1.0)),
+            ])]),
+        )]);
+        assert!(validate_chrome(&doc).is_err());
+    }
+
+    #[test]
+    fn prometheus_parser_handles_labels_and_comments() {
+        let text = "# TYPE serve_requests_total counter\n\
+                    serve_requests_total{variant=\"mock\"} 12\n\
+                    # TYPE lat_ms histogram\n\
+                    lat_ms_bucket{le=\"+Inf\"} 3\n\
+                    lat_ms_sum 4.5\n\
+                    lat_ms_count 3\n";
+        let samples = parse_prometheus(text).unwrap();
+        assert_eq!(samples.len(), 4);
+        assert_eq!(samples[0].0, "serve_requests_total{variant=\"mock\"}");
+        assert_eq!(samples[0].1, 12.0);
+        assert_eq!(samples[2], ("lat_ms_sum".to_string(), 4.5));
+        assert!(parse_prometheus("garbage with no value at end x").is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! Unified observability layer (DESIGN.md §Observability, docs/adr/009).
+//!
+//! Three pieces, one contract:
+//!
+//! * [`registry`] — lock-cheap counters/gauges/histograms behind labeled
+//!   families. Subsystems cache `Arc` handles at construction and record
+//!   with relaxed atomics; the process-wide [`registry::global`] snapshot
+//!   is what the `metrics` wire op on serve and route renders as
+//!   Prometheus-style text.
+//! * [`trace`] — span timers over train step phases (prefetch-wait,
+//!   forward, backward, optimizer, telemetry, checkpoint) and the
+//!   request path (router dispatch → serve batcher → slot
+//!   prefill/decode), written as JSONL to `results/<name>/trace.jsonl`.
+//!   A `trace` id supplied by the client rides the NDJSON protocol
+//!   through the router's verbatim forwarder and is echoed in the reply,
+//!   stitching one request's spans across processes.
+//! * [`expo`] — converts recorded trace rows to Chrome trace-event JSON
+//!   (`repro trace-export`, viewable in Perfetto) and parses Prometheus
+//!   text for test assertions.
+//!
+//! The overhead contract: spans no-op when disabled (one relaxed atomic
+//! load), observed training is bit-identical to unobserved (ADR-005
+//! extends here), and `BENCH_obs_overhead.json` pins the enabled-path
+//! cost.
+
+pub mod expo;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{global, Counter, Gauge, Histogram, Registry, LATENCY_MS_BOUNDS};
+pub use trace::Span;

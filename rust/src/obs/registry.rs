@@ -1,0 +1,370 @@
+//! Lock-cheap metrics registry: counters, gauges, and fixed-bucket
+//! histograms behind labeled families, rendered as Prometheus-style
+//! exposition text (DESIGN.md §Observability).
+//!
+//! The hot path is pure atomics: callers obtain an `Arc` handle once (at
+//! construction, never per event) and record with relaxed fetch-adds —
+//! no lock is taken after registration. The registry's internal map is
+//! only locked when a family is first registered and when a snapshot is
+//! rendered, both off the hot path.
+//!
+//! No external deps per the crate's substrate policy (Cargo.toml): the
+//! exposition format is the Prometheus *text* format subset — `# TYPE`
+//! comments, `name{label="value"} number` samples, cumulative
+//! `_bucket{le=...}`/`_sum`/`_count` rows for histograms — enough for
+//! any Prometheus-compatible scraper or a human with `curl`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic event count. `inc`/`add` are single relaxed fetch-adds.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A value that can go up and down (live slots, queue depth).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Default latency bounds in milliseconds: log-ish spacing from 50 µs to
+/// 10 s, matching the range the serve/route/train paths actually span.
+pub const LATENCY_MS_BOUNDS: &[f64] = &[
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0,
+    500.0, 1000.0, 2500.0, 5000.0, 10000.0,
+];
+
+/// Fixed-bucket histogram: one atomic per (non-cumulative) bucket plus
+/// count and an f64 sum carried as bits in an `AtomicU64` (CAS loop —
+/// sums race-free without a lock). Memory is fixed at construction, so a
+/// long-lived server's percentile state cannot grow.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` slots; the last is the +Inf overflow bucket
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let i = self.bounds.partition_point(|&b| v > b);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative bucket counts in `le` order, +Inf last.
+    fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.buckets
+            .iter()
+            .map(|b| {
+                acc += b.load(Ordering::Relaxed);
+                acc
+            })
+            .collect()
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// One family = one metric name; series within it differ by label set.
+struct Family {
+    kind: &'static str,
+    /// keyed by the rendered `{label="value",...}` suffix for stable order
+    series: BTreeMap<String, Metric>,
+}
+
+/// A set of metric families. Most code uses the process-wide [`global`]
+/// registry; tests construct private instances for exact-count checks.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register-or-fetch a counter series. The returned handle is the
+    /// thing to cache; calling this per event would serialize on the map
+    /// lock. A name already registered as a different kind yields a
+    /// detached (never-rendered) handle rather than corrupting the
+    /// family — first registration wins the kind.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.series(name, labels, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            _ => Arc::new(Counter::default()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.series(name, labels, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            _ => Arc::new(Gauge::default()),
+        }
+    }
+
+    /// `bounds` only applies when the series is first created.
+    pub fn histogram(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        match self.series(name, labels, || Metric::Histogram(Arc::new(Histogram::new(bounds))))
+        {
+            Metric::Histogram(h) => h,
+            _ => Arc::new(Histogram::new(bounds)),
+        }
+    }
+
+    fn series(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let key = render_labels(labels);
+        let mut fams = self.families.lock().unwrap();
+        let metric = make();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            kind: metric.kind(),
+            series: BTreeMap::new(),
+        });
+        if fam.kind != metric.kind() {
+            return metric; // detached: kind collision (see counter docs)
+        }
+        fam.series.entry(key).or_insert(metric).clone()
+    }
+
+    /// Render every family as Prometheus text exposition. Values read
+    /// relaxed — a concurrent writer may or may not be included, but
+    /// every sample line is internally consistent.
+    pub fn render(&self) -> String {
+        let fams = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind));
+            for (labels, metric) in &fam.series {
+                match metric {
+                    Metric::Counter(c) => {
+                        out.push_str(&format!("{name}{labels} {}\n", c.get()));
+                    }
+                    Metric::Gauge(g) => {
+                        out.push_str(&format!("{name}{labels} {}\n", g.get()));
+                    }
+                    Metric::Histogram(h) => {
+                        let cum = h.cumulative();
+                        for (i, le) in h.bounds.iter().enumerate() {
+                            out.push_str(&format!(
+                                "{name}_bucket{} {}\n",
+                                merge_label(labels, "le", &trim_float(*le)),
+                                cum[i]
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{name}_bucket{} {}\n",
+                            merge_label(labels, "le", "+Inf"),
+                            cum[h.bounds.len()]
+                        ));
+                        out.push_str(&format!(
+                            "{name}_sum{labels} {}\n",
+                            trim_float(h.sum())
+                        ));
+                        out.push_str(&format!("{name}_count{labels} {}\n", h.count()));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The process-wide registry every subsystem records into; the `metrics`
+/// wire op on serve and route renders this.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Splice an extra label into an already-rendered `{...}` suffix (used
+/// for histogram `le`).
+fn merge_label(rendered: &str, k: &str, v: &str) -> String {
+    let extra = format!("{k}=\"{}\"", escape_label(v));
+    if rendered.is_empty() {
+        format!("{{{extra}}}")
+    } else {
+        format!("{},{extra}}}", &rendered[..rendered.len() - 1])
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Float rendering without trailing noise: `5` not `5.0000`, but `0.25`
+/// kept exact.
+fn trim_float(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render() {
+        let r = Registry::new();
+        let c = r.counter("requests_total", &[("role", "serve")]);
+        c.inc();
+        c.add(4);
+        let g = r.gauge("slots_active", &[]);
+        g.set(3);
+        g.add(-1);
+        let text = r.render();
+        assert!(text.contains("# TYPE requests_total counter"), "{text}");
+        assert!(text.contains("requests_total{role=\"serve\"} 5"), "{text}");
+        assert!(text.contains("slots_active 2"), "{text}");
+    }
+
+    #[test]
+    fn handles_are_shared_per_series_not_per_call() {
+        let r = Registry::new();
+        let a = r.counter("x_total", &[("k", "v")]);
+        let b = r.counter("x_total", &[("k", "v")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same series must share one atomic");
+        let other = r.counter("x_total", &[("k", "w")]);
+        other.inc();
+        assert_eq!(a.get(), 2, "distinct labels are distinct series");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_bounded() {
+        let r = Registry::new();
+        let h = r.histogram("lat_ms", &[], &[1.0, 10.0, 100.0]);
+        for v in [0.5, 0.5, 5.0, 50.0, 5000.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 5056.0).abs() < 1e-9);
+        let text = r.render();
+        assert!(text.contains("lat_ms_bucket{le=\"1\"} 2"), "{text}");
+        assert!(text.contains("lat_ms_bucket{le=\"10\"} 3"), "{text}");
+        assert!(text.contains("lat_ms_bucket{le=\"100\"} 4"), "{text}");
+        assert!(text.contains("lat_ms_bucket{le=\"+Inf\"} 5"), "{text}");
+        assert!(text.contains("lat_ms_count 5"), "{text}");
+    }
+
+    #[test]
+    fn boundary_values_land_in_their_le_bucket() {
+        let h = Histogram::new(&[1.0, 10.0]);
+        h.observe(1.0); // le="1" is inclusive, Prometheus-style
+        h.observe(10.0);
+        let cum = h.cumulative();
+        assert_eq!(cum, vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn kind_collision_detaches_instead_of_corrupting() {
+        let r = Registry::new();
+        let c = r.counter("thing", &[]);
+        c.add(7);
+        let g = r.gauge("thing", &[]); // wrong kind: detached handle
+        g.set(999);
+        let text = r.render();
+        assert!(text.contains("thing 7"), "{text}");
+        assert!(!text.contains("999"), "{text}");
+    }
+}

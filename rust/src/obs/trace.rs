@@ -1,0 +1,229 @@
+//! Structured tracing: span timers over train step phases and the
+//! serve/route request path (DESIGN.md §Observability).
+//!
+//! The overhead contract (docs/adr/009) is enforced structurally:
+//!
+//! * **Disabled is free.** [`Span::begin`] loads one relaxed `AtomicBool`
+//!   and returns an inert value — no clock read, no lock, no allocation.
+//!   Training observed with tracing off is the same machine code path as
+//!   training before this module existed.
+//! * **Enabled never touches math.** Spans only read `Instant::now` and
+//!   append a JSON row to the sink at drop; they hold no references into
+//!   tensor state, so observed training stays bit-identical to
+//!   unobserved (the ADR-005 invariant extends here — pinned by the
+//!   `observed_training_is_bit_identical` test).
+//!
+//! Rows land as JSONL under `results/<name>/trace.jsonl` (file sink) or
+//! in memory (tests, benches). `repro trace-export` converts a recorded
+//! file to Chrome trace-event JSON via [`super::expo`].
+
+use crate::util::json::Json;
+use std::fs;
+use std::io::{BufWriter, Write as _};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+struct Sink {
+    out: Out,
+    t0: Instant,
+}
+
+enum Out {
+    File(BufWriter<fs::File>),
+    Memory(Vec<Json>),
+}
+
+/// Cheap global check; the only cost tracing adds to an untraced run.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install a JSONL file sink at `results/<run>/trace.jsonl` and enable
+/// tracing. Returns the sink path.
+pub fn install_file(run: &str) -> anyhow::Result<PathBuf> {
+    let dir = crate::repo_path(&format!("results/{run}"));
+    fs::create_dir_all(&dir)?;
+    let path = dir.join("trace.jsonl");
+    let f = fs::File::create(&path)?;
+    *SINK.lock().unwrap() = Some(Sink { out: Out::File(BufWriter::new(f)), t0: Instant::now() });
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(path)
+}
+
+/// Install an in-memory sink (tests/benches) and enable tracing.
+pub fn install_memory() {
+    *SINK.lock().unwrap() = Some(Sink { out: Out::Memory(Vec::new()), t0: Instant::now() });
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Disable tracing and drop the sink, flushing a file sink first.
+pub fn uninstall() {
+    ENABLED.store(false, Ordering::Relaxed);
+    if let Some(mut sink) = SINK.lock().unwrap().take() {
+        if let Out::File(w) = &mut sink.out {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Flush a file sink without disabling tracing.
+pub fn flush() {
+    if let Some(sink) = SINK.lock().unwrap().as_mut() {
+        if let Out::File(w) = &mut sink.out {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Take every row recorded by the memory sink (empties it; file sinks
+/// return nothing).
+pub fn drain_memory() -> Vec<Json> {
+    match SINK.lock().unwrap().as_mut() {
+        Some(Sink { out: Out::Memory(rows), .. }) => std::mem::take(rows),
+        _ => Vec::new(),
+    }
+}
+
+/// Stable small integer per OS thread, so exported traces lay phases
+/// out on per-thread tracks.
+fn tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// A timed phase. Construct with [`Span::begin`]; the row is written
+/// when the value drops. When tracing is disabled the span is inert —
+/// `start` stays `None` and drop does nothing.
+pub struct Span {
+    start: Option<Instant>,
+    name: &'static str,
+    cat: &'static str,
+    trace_id: Option<String>,
+    args: Vec<(&'static str, f64)>,
+}
+
+impl Span {
+    #[inline]
+    pub fn begin(name: &'static str, cat: &'static str) -> Span {
+        let start = if enabled() { Some(Instant::now()) } else { None };
+        Span { start, name, cat, trace_id: None, args: Vec::new() }
+    }
+
+    /// Attach the request's `trace_id` (request-path spans only).
+    pub fn with_id(mut self, id: Option<&str>) -> Span {
+        if self.start.is_some() {
+            self.trace_id = id.map(str::to_string);
+        }
+        self
+    }
+
+    /// Attach a numeric annotation (batch size, step index, ...).
+    pub fn arg(mut self, k: &'static str, v: f64) -> Span {
+        if self.start.is_some() {
+            self.args.push((k, v));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let dur_us = start.elapsed().as_secs_f64() * 1e6;
+            write_row(self.name, self.cat, start, dur_us, self.trace_id.as_deref(), &self.args);
+        }
+    }
+}
+
+/// Record a completed interval whose start predates the call — used for
+/// request-lifetime events where the enqueue time is held in a struct
+/// rather than a live `Span`.
+pub fn complete(
+    name: &'static str,
+    cat: &'static str,
+    started: Instant,
+    trace_id: Option<&str>,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    let dur_us = started.elapsed().as_secs_f64() * 1e6;
+    write_row(name, cat, started, dur_us, trace_id, args);
+}
+
+fn write_row(
+    name: &str,
+    cat: &str,
+    start: Instant,
+    dur_us: f64,
+    trace_id: Option<&str>,
+    args: &[(&'static str, f64)],
+) {
+    let mut guard = SINK.lock().unwrap();
+    let Some(sink) = guard.as_mut() else { return };
+    // Span starts always postdate sink install, but belt-and-braces: a
+    // start from before t0 clamps to 0 rather than panicking.
+    let ts_us = start.checked_duration_since(sink.t0).unwrap_or_default().as_secs_f64() * 1e6;
+    let mut fields = vec![
+        ("name", Json::str(name)),
+        ("cat", Json::str(cat)),
+        ("ts_us", Json::num(ts_us)),
+        ("dur_us", Json::num(dur_us)),
+        ("tid", Json::num(tid() as f64)),
+    ];
+    if let Some(id) = trace_id {
+        fields.push(("trace", Json::str(id)));
+    }
+    if !args.is_empty() {
+        fields.push(("args", Json::obj(args.iter().map(|(k, v)| (*k, Json::num(*v))).collect())));
+    }
+    let row = Json::obj(fields);
+    match &mut sink.out {
+        Out::File(w) => {
+            let _ = writeln!(w, "{row}");
+        }
+        Out::Memory(rows) => rows.push(row),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sink state is process-global, so keep everything that installs a
+    // sink inside one test body (Rust's test harness runs tests in the
+    // same process; the integration suite serializes via a mutex).
+    #[test]
+    fn spans_record_when_enabled_and_are_inert_when_disabled() {
+        uninstall();
+        {
+            let _s = Span::begin("off", "test");
+            assert!(!enabled());
+        }
+        install_memory();
+        {
+            let _s = Span::begin("on", "test").with_id(Some("t-1")).arg("n", 3.0);
+        }
+        complete("late", "test", Instant::now(), None, &[]);
+        let rows = drain_memory();
+        uninstall();
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert_eq!(rows[0].get("name").and_then(Json::as_str), Some("on"));
+        assert_eq!(rows[0].get("trace").and_then(Json::as_str), Some("t-1"));
+        let args = rows[0].get("args").expect("args object");
+        assert_eq!(args.get("n").and_then(Json::as_f64), Some(3.0));
+        assert!(rows[0].get("dur_us").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert_eq!(rows[1].get("name").and_then(Json::as_str), Some("late"));
+        assert!(rows.iter().all(|r| r.get("off").is_none()), "disabled span must not record");
+    }
+}

@@ -408,15 +408,24 @@ impl NativeBackend {
         let mut sc = self.scratch();
         let (arena, bwd) = T::bufs(&mut sc);
         let mut cx = Ctx { threads: self.threads, arena };
-        let (logits, cache) = model.forward_ctx(&inputs, b, t, &mut cx)?;
-        let nll = model::token_nll(&logits, &targets);
-        // same left fold `sum::<f64>()` lowers to, so f64 bits are unmoved
-        let loss = nll.iter().fold(0.0f64, |acc, x| acc + x.to_f64()) / nll.len() as f64;
-        let dlogits = model::mean_nll_backward_ar(&logits, &targets, cx.arena);
-        model.backward_ctx_into(&cache, &dlogits, &mut cx, bwd);
-        cache.recycle(cx.arena);
-        cx.arena.put(dlogits);
-        cx.arena.put(logits);
+        // phase spans time the fwd/bwd boundaries only — no tensor data
+        // crosses into them, preserving bit-identity (docs/adr/009)
+        let (logits, cache, loss) = {
+            let _sp = crate::obs::Span::begin("forward", "train");
+            let (logits, cache) = model.forward_ctx(&inputs, b, t, &mut cx)?;
+            let nll = model::token_nll(&logits, &targets);
+            // same left fold `sum::<f64>()` lowers to, so f64 bits are unmoved
+            let loss = nll.iter().fold(0.0f64, |acc, x| acc + x.to_f64()) / nll.len() as f64;
+            (logits, cache, loss)
+        };
+        {
+            let _sp = crate::obs::Span::begin("backward", "train");
+            let dlogits = model::mean_nll_backward_ar(&logits, &targets, cx.arena);
+            model.backward_ctx_into(&cache, &dlogits, &mut cx, bwd);
+            cache.recycle(cx.arena);
+            cx.arena.put(dlogits);
+            cx.arena.put(logits);
+        }
 
         let mut out = Vec::with_capacity(1 + self.manifest.n_params);
         out.push(loss as f32);
@@ -445,6 +454,7 @@ impl NativeBackend {
             gradvec.len(),
             1 + self.manifest.n_params
         );
+        let _sp = crate::obs::Span::begin("optimizer", "train");
         let loss = gradvec[0] as f64;
         let mut sc = self.scratch();
         // recycle the previous step's decoded-f64 grad map: entries are

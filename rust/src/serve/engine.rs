@@ -359,6 +359,7 @@ mod tests {
             max_tokens: 4,
             temperature: 0.0,
             seed: 0,
+            trace: None,
         }
     }
 

@@ -16,7 +16,14 @@
 //! -> {"id":6,"op":"drain"}          stop admitting, answer once in-flight
 //!                                   work quiesces (rolling restarts)
 //! -> {"id":7,"op":"resume"}         re-admit after a drain
+//! -> {"id":8,"op":"metrics"}        Prometheus-style text snapshot of
+//!                                   the process metrics registry
 //! ```
+//!
+//! Any model request may carry an optional `"trace":"<id>"` field: the
+//! server tags that request's spans with it and echoes it in the reply,
+//! and because the router forwards model ops verbatim the id survives
+//! route → serve → reply unchanged (DESIGN.md §Observability).
 //!
 //! The same format rides unchanged through `repro route`
 //! (DESIGN.md §Routing): the router classifies each line with
@@ -57,6 +64,9 @@ pub struct Request {
     pub max_tokens: usize,
     pub temperature: f64,
     pub seed: u64,
+    /// optional client-supplied trace id: tags this request's spans and
+    /// is echoed in the reply (None = untraced)
+    pub trace: Option<String>,
 }
 
 /// Control ops handled outside the batch queue. `Ping` is the router's
@@ -68,6 +78,9 @@ pub struct Request {
 pub enum Parsed {
     Model(Request),
     Stats(Json),
+    /// Prometheus-style snapshot of the process metrics registry,
+    /// answered locally by both serve and route (DESIGN.md §Observability)
+    Metrics(Json),
     Shutdown(Json),
     Ping(Json),
     Drain { id: Json, body: Json },
@@ -92,6 +105,7 @@ pub fn parse_line(line: &str) -> Result<Parsed, String> {
         "generate" => OpKind::Generate,
         "score" => OpKind::Score,
         "stats" => return Ok(Parsed::Stats(id)),
+        "metrics" => return Ok(Parsed::Metrics(id)),
         "shutdown" => return Ok(Parsed::Shutdown(id)),
         "ping" => return Ok(Parsed::Ping(id)),
         "drain" => return Ok(Parsed::Drain { id, body: j }),
@@ -119,14 +133,17 @@ pub fn parse_line(line: &str) -> Result<Parsed, String> {
         max_tokens,
         temperature: j.get("temperature").and_then(|v| v.as_f64()).unwrap_or(0.0),
         seed: j.get("seed").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
+        trace: j.get("trace").and_then(|v| v.as_str()).map(str::to_string),
     }))
 }
 
-/// Extra per-response fields the server attaches (latency, batch size).
-#[derive(Debug, Clone, Copy, Default)]
+/// Extra per-response fields the server attaches (latency, batch size,
+/// and the request's trace id when it carried one).
+#[derive(Debug, Clone, Default)]
 pub struct ResponseMeta {
     pub latency_ms: f64,
     pub batch: usize,
+    pub trace: Option<String>,
 }
 
 pub fn render_reply(id: &Json, reply: &Reply, meta: ResponseMeta) -> String {
@@ -145,6 +162,9 @@ pub fn render_reply(id: &Json, reply: &Reply, meta: ResponseMeta) -> String {
     }
     pairs.push(("latency_ms", Json::num(meta.latency_ms)));
     pairs.push(("batch", Json::num(meta.batch as f64)));
+    if let Some(t) = &meta.trace {
+        pairs.push(("trace", Json::str(t.clone())));
+    }
     Json::obj(pairs).to_string()
 }
 
@@ -185,7 +205,40 @@ mod tests {
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.seed, 0);
         assert!(r.variant.is_none());
+        assert!(r.trace.is_none());
         assert_eq!(r.id.as_usize(), Some(7));
+    }
+
+    #[test]
+    fn trace_id_parses_and_echoes_in_replies() {
+        let p = parse_line(r#"{"id":1,"op":"generate","prompt":"x","trace":"t-42"}"#)
+            .unwrap();
+        let Parsed::Model(r) = p else { panic!("not a model op") };
+        assert_eq!(r.trace.as_deref(), Some("t-42"));
+
+        let line = render_reply(
+            &r.id,
+            &Reply::Generated { text: "y".into(), tokens_in: 1, tokens_out: 1 },
+            ResponseMeta { latency_ms: 1.0, batch: 1, trace: r.trace.clone() },
+        );
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("trace").unwrap().as_str(), Some("t-42"));
+        // untraced requests stay byte-identical to the pre-trace wire
+        // format: no "trace" key materializes
+        let plain = render_reply(
+            &Json::num(2.0),
+            &Reply::Generated { text: "y".into(), tokens_in: 1, tokens_out: 1 },
+            ResponseMeta { latency_ms: 1.0, batch: 1, trace: None },
+        );
+        assert!(!plain.contains("trace"));
+    }
+
+    #[test]
+    fn metrics_op_parses() {
+        assert!(matches!(
+            parse_line(r#"{"id":5,"op":"metrics"}"#).unwrap(),
+            Parsed::Metrics(Json::Num(_))
+        ));
     }
 
     #[test]
@@ -252,7 +305,7 @@ mod tests {
         let line = render_reply(
             &id,
             &Reply::Scored { nll: 9.5, tokens: 4.0, ppl: 10.7 },
-            ResponseMeta { latency_ms: 1.5, batch: 3 },
+            ResponseMeta { latency_ms: 1.5, batch: 3, trace: None },
         );
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("id").unwrap().as_str(), Some("req-1"));

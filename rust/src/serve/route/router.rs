@@ -279,6 +279,9 @@ struct Job {
     tried: Vec<usize>,
     t0: Instant,
     deadline: Instant,
+    /// client-supplied trace id (rides in `raw` to the replica verbatim;
+    /// kept parsed here so router-side spans carry it too)
+    trace: Option<String>,
 }
 
 impl Job {
@@ -296,6 +299,20 @@ impl Job {
         }
         h
     }
+}
+
+/// Every path that answers the client funnels here: one `record_done`
+/// plus one `route_request` trace event per request, however many
+/// attempts/failovers it took (DESIGN.md §Observability).
+fn job_done(shared: &RouterShared, job: &Job, ok: bool) {
+    shared.stats.record_done(job.latency_ms(), ok);
+    crate::obs::trace::complete(
+        "route_request",
+        "route",
+        job.t0,
+        job.trace.as_deref(),
+        &[("attempts", (job.attempt + 1) as f64)],
+    );
 }
 
 /// One lazily-opened connection from this client to one replica.
@@ -395,6 +412,15 @@ fn handle_client(stream: TcpStream, shared: Arc<RouterShared>) -> Result<()> {
                         vec![("stats", router_stats_json(&shared))],
                     ));
                 }
+                Ok(Parsed::Metrics(id)) => {
+                    // answered locally, like `stats`: the router's own
+                    // process registry (route_* families); each replica
+                    // answers its own `metrics` op when asked directly
+                    let _ = tx.send(protocol::render_ok(
+                        &id,
+                        vec![("metrics", Json::str(crate::obs::global().render()))],
+                    ));
+                }
                 Ok(Parsed::Ping(id)) => {
                     let _ = tx.send(protocol::render_ok(
                         &id,
@@ -471,6 +497,7 @@ fn handle_client(stream: TcpStream, shared: Arc<RouterShared>) -> Result<()> {
                         tried: Vec::new(),
                         t0: Instant::now(),
                         deadline: Instant::now() + shared.cfg.deadline,
+                        trace: req.trace.clone(),
                     };
                     dispatch(&ctx, job);
                 }
@@ -493,12 +520,15 @@ fn handle_client(stream: TcpStream, shared: Arc<RouterShared>) -> Result<()> {
 /// produce a clean NDJSON error — never a hang.
 fn dispatch(ctx: &Arc<ClientCtx>, mut job: Job) {
     let shared = &ctx.shared;
+    let _sp = crate::obs::Span::begin("route_dispatch", "route")
+        .with_id(job.trace.as_deref())
+        .arg("attempt", job.attempt as f64);
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             let _ = ctx
                 .tx
                 .send(protocol::render_error(&job.id, "router is shutting down"));
-            shared.stats.record_done(job.latency_ms(), false);
+            job_done(shared, &job, false);
             return;
         }
         if Instant::now() >= job.deadline {
@@ -506,14 +536,14 @@ fn dispatch(ctx: &Arc<ClientCtx>, mut job: Job) {
                 .tx
                 .send(protocol::render_error(&job.id, "deadline exceeded"));
             shared.stats.record_deadline_exceeded();
-            shared.stats.record_done(job.latency_ms(), false);
+            job_done(shared, &job, false);
             return;
         }
         let Some(r) = shared.pool.pick(&job.affinity, &job.tried) else {
             let _ = ctx
                 .tx
                 .send(protocol::render_error(&job.id, "no healthy replica"));
-            shared.stats.record_done(job.latency_ms(), false);
+            job_done(shared, &job, false);
             return;
         };
         let up = match ctx.upstream(r) {
@@ -532,7 +562,7 @@ fn dispatch(ctx: &Arc<ClientCtx>, mut job: Job) {
                         &job.id,
                         "no healthy replica (connect failed)",
                     ));
-                    shared.stats.record_done(job.latency_ms(), false);
+                    job_done(shared, &job, false);
                     return;
                 }
                 shared.stats.record_retry(false);
@@ -563,7 +593,7 @@ fn dispatch(ctx: &Arc<ClientCtx>, mut job: Job) {
                     &job.id,
                     "replica unreachable (write failed)",
                 ));
-                shared.stats.record_done(job.latency_ms(), false);
+                job_done(shared, &job, false);
                 return;
             }
             shared.stats.record_retry(false);
@@ -675,7 +705,7 @@ fn handle_replica_line(ctx: &Arc<ClientCtx>, up: &Arc<Upstream>, line: &str) {
             shared.stats.record_breaker_close();
         }
         let _ = ctx.tx.send(line.to_string());
-        shared.stats.record_done(job.latency_ms(), ok);
+        job_done(shared, &job, ok);
         return;
     }
     // shed: the work never started, so any op kind may retry. A
@@ -688,7 +718,7 @@ fn handle_replica_line(ctx: &Arc<ClientCtx>, up: &Arc<Upstream>, line: &str) {
     if job.attempt > shared.cfg.retries || Instant::now() >= job.deadline {
         // budget exhausted: the shed error itself is the clean answer
         let _ = ctx.tx.send(line.to_string());
-        shared.stats.record_done(job.latency_ms(), false);
+        job_done(shared, &job, false);
         return;
     }
     let hint_ms = j.get("retry_after_ms").and_then(|v| v.as_f64());
@@ -732,7 +762,7 @@ fn expire_deadlines(ctx: &Arc<ClientCtx>, up: &Arc<Upstream>) {
             .tx
             .send(protocol::render_error(&job.id, "deadline exceeded"));
         shared.stats.record_deadline_exceeded();
-        shared.stats.record_done(job.latency_ms(), false);
+        job_done(shared, &job, false);
     }
 }
 
@@ -758,7 +788,7 @@ fn fail_over_pending(ctx: &Arc<ClientCtx>, up: &Arc<Upstream>, msg: &str) {
                 job.attempt += 1;
                 if job.attempt > shared.cfg.retries {
                     let _ = ctx.tx.send(protocol::render_error(&job.id, msg));
-                    shared.stats.record_done(job.latency_ms(), false);
+                    job_done(shared, &job, false);
                     continue;
                 }
                 shared.stats.record_failover();
@@ -779,7 +809,7 @@ fn fail_over_pending(ctx: &Arc<ClientCtx>, up: &Arc<Upstream>, msg: &str) {
                     &job.id,
                     &format!("replica failed mid-generate: {msg}"),
                 ));
-                shared.stats.record_done(job.latency_ms(), false);
+                job_done(shared, &job, false);
             }
         }
     }

@@ -365,6 +365,15 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                     vec![("stats", shared.stats.snapshot())],
                 ));
             }
+            Ok(Parsed::Metrics(id)) => {
+                // Prometheus-style text of the whole process registry —
+                // serve families plus whatever else this process runs
+                // (train counters under `repro demo-serve`, etc.)
+                let _ = tx.send(protocol::render_ok(
+                    &id,
+                    vec![("metrics", Json::str(crate::obs::global().render()))],
+                ));
+            }
             Ok(Parsed::Shutdown(id)) => {
                 let _ = tx.send(protocol::render_ok(&id, vec![]));
                 crate::info!("serve", "shutdown requested by {peer:?}");
@@ -573,7 +582,12 @@ fn engine_worker(
                 shared.stats.record_rejected();
                 continue;
             }
-            match engine.slot_admit(&key, &p.req) {
+            let admitted = {
+                let _sp = crate::obs::Span::begin("slot_prefill", "serve")
+                    .with_id(p.req.trace.as_deref());
+                engine.slot_admit(&key, &p.req)
+            };
+            match admitted {
                 Ok((ticket, tokens_in)) => {
                     shared.stats.record_slot_join(tokens_in as u64);
                     active.insert(ticket, p);
@@ -609,10 +623,19 @@ fn engine_worker(
             crate::debug!("serve", "worker {wid}: freed slot of vanished client");
         }
         let n_active = active.len();
-        for d in engine.step_slots() {
+        let stepped = {
+            let _sp = crate::obs::Span::begin("slot_decode", "serve")
+                .arg("slots", n_active as f64);
+            engine.step_slots()
+        };
+        for d in stepped {
             let Some(p) = active.remove(&d.ticket) else { continue };
             let latency_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
-            let meta = ResponseMeta { latency_ms, batch: n_active };
+            let meta = ResponseMeta {
+                latency_ms,
+                batch: n_active,
+                trace: p.req.trace.clone(),
+            };
             let (line, ok, tin, tout) = match &d.reply {
                 Ok(r) => {
                     let (tin, tout) = match r {
@@ -630,6 +653,13 @@ fn engine_worker(
             let _ = p.reply.send(line);
             shared.stats.record_request(latency_ms, ok, tin, tout);
             shared.stats.record_slot_free(tout);
+            crate::obs::trace::complete(
+                "serve_request",
+                "serve",
+                p.enqueued,
+                p.req.trace.as_deref(),
+                &[("tokens_out", tout as f64)],
+            );
         }
     }
 
@@ -649,7 +679,11 @@ fn execute_lockstep(
     batch: super::batcher::Batch<Pending>,
 ) {
     let t0 = Instant::now();
-    let replies = engine.execute(key, &batch.items);
+    let replies = {
+        let _sp = crate::obs::Span::begin("batch_execute", "serve")
+            .arg("batch", batch.items.len() as f64);
+        engine.execute(key, &batch.items)
+    };
     let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
     let wait_ms = batch.waited.as_secs_f64() * 1e3;
     debug_assert_eq!(replies.len(), batch.items.len());
@@ -658,7 +692,11 @@ fn execute_lockstep(
     for (pending, reply) in batch.items.iter().zip(&replies) {
         let latency_ms =
             done.saturating_duration_since(pending.enqueued).as_secs_f64() * 1e3;
-        let meta = ResponseMeta { latency_ms, batch: batch.items.len() };
+        let meta = ResponseMeta {
+            latency_ms,
+            batch: batch.items.len(),
+            trace: pending.req.trace.clone(),
+        };
         let (line, ok, tin, tout) = match reply {
             Ok(r) => {
                 let (tin, tout) = match r {
@@ -675,17 +713,27 @@ fn execute_lockstep(
         };
         let _ = pending.reply.send(line);
         shared.stats.record_request(latency_ms, ok, tin, tout);
+        crate::obs::trace::complete(
+            "serve_request",
+            "serve",
+            pending.enqueued,
+            pending.req.trace.as_deref(),
+            &[("tokens_out", tout as f64)],
+        );
     }
-    shared.stats.record_batch(batch.occupancy, wait_ms, exec_ms);
+    // single emission path for the per-batch row: `record_batch` updates
+    // the stats + registry once and returns the row the JSONL tee logs —
+    // the counters and `--metrics-name` can never double-count a batch
+    let row = shared.stats.record_batch(
+        &key.variant,
+        key.kind.name(),
+        batch.items.len(),
+        batch.occupancy,
+        wait_ms,
+        exec_ms,
+    );
     if let Some(m) = shared.metrics.lock().unwrap().as_mut() {
-        m.log_json(&ServeStats::batch_row(
-            &key.variant,
-            key.kind.name(),
-            batch.items.len(),
-            batch.occupancy,
-            wait_ms,
-            exec_ms,
-        ));
+        m.log_json(&row);
     }
 }
 

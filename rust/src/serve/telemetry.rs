@@ -5,21 +5,67 @@
 //! with interpolation); per-batch rows optionally tee to a
 //! [`crate::train::MetricsLog`] JSONL sink under `results/`, the same
 //! place train runs log, so one toolchain plots both.
+//!
+//! Every counter is also mirrored into the process-wide
+//! [`crate::obs::registry`] at record time (handles are cached at
+//! construction, so the mirror costs one relaxed atomic per event), so
+//! the `metrics` wire op exposes serve/route families alongside train
+//! and monitor counters (DESIGN.md §Observability).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::obs::registry::{global, Counter, Histogram, LATENCY_MS_BOUNDS};
 use crate::util::json::Json;
 use crate::util::stats::{quantile, OnlineStats};
 
-/// Ring capacity for latency samples: enough for stable p99 estimates,
-/// bounded so a long-lived server never grows.
+/// Reservoir capacity for latency samples: enough for stable p99
+/// estimates, bounded so a long-lived server never grows.
 const LATENCY_RING: usize = 4096;
+
+/// Fixed-footprint latency reservoir: a ring that allocates its full
+/// capacity up front and overwrites oldest-first once full. Shared by
+/// [`ServeStats`] and [`RouteStats`] so neither hand-rolls the bound
+/// (the footprint-pinning regression test lives below).
+struct Reservoir {
+    samples: Vec<f64>,
+    next: usize,
+    cap: usize,
+}
+
+impl Reservoir {
+    fn new(cap: usize) -> Reservoir {
+        Reservoir { samples: Vec::with_capacity(cap), next: 0, cap }
+    }
+
+    fn push(&mut self, v: f64) {
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next % self.cap] = v;
+        }
+        self.next += 1;
+    }
+
+    fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn percentiles(&self) -> (f64, f64, f64) {
+        if self.samples.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                quantile(&self.samples, 0.50),
+                quantile(&self.samples, 0.90),
+                quantile(&self.samples, 0.99),
+            )
+        }
+    }
+}
 
 #[derive(Default)]
 struct Inner {
-    latencies_ms: Vec<f64>,
-    latency_next: usize,
     occupancy: OnlineStats,
     wait_ms: OnlineStats,
     exec_ms: OnlineStats,
@@ -39,10 +85,51 @@ struct Inner {
     decode_tokens: u64,
 }
 
+/// Cached registry handles — obtained once in `new()`, recorded with
+/// relaxed atomics thereafter. Several `ServeStats` instances in one
+/// process (tests spin up many servers) share the same global series;
+/// the authoritative per-server numbers stay in the locked `Inner`.
+struct ServeRegistry {
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    batches: Arc<Counter>,
+    tokens_in: Arc<Counter>,
+    tokens_out: Arc<Counter>,
+    overloaded: Arc<Counter>,
+    slot_joins: Arc<Counter>,
+    slot_frees: Arc<Counter>,
+    slot_disconnect_frees: Arc<Counter>,
+    latency_ms: Arc<Histogram>,
+    batch_wait_ms: Arc<Histogram>,
+    batch_exec_ms: Arc<Histogram>,
+}
+
+impl ServeRegistry {
+    fn new() -> ServeRegistry {
+        let r = global();
+        ServeRegistry {
+            requests: r.counter("serve_requests_total", &[]),
+            errors: r.counter("serve_errors_total", &[]),
+            batches: r.counter("serve_batches_total", &[]),
+            tokens_in: r.counter("serve_tokens_in_total", &[]),
+            tokens_out: r.counter("serve_tokens_out_total", &[]),
+            overloaded: r.counter("serve_overloaded_total", &[]),
+            slot_joins: r.counter("serve_slot_joins_total", &[]),
+            slot_frees: r.counter("serve_slot_frees_total", &[]),
+            slot_disconnect_frees: r.counter("serve_slot_disconnect_frees_total", &[]),
+            latency_ms: r.histogram("serve_request_latency_ms", &[], LATENCY_MS_BOUNDS),
+            batch_wait_ms: r.histogram("serve_batch_wait_ms", &[], LATENCY_MS_BOUNDS),
+            batch_exec_ms: r.histogram("serve_batch_exec_ms", &[], LATENCY_MS_BOUNDS),
+        }
+    }
+}
+
 /// Thread-shared collector. All methods take `&self`; the lock is
 /// private so callers can't deadlock it across an execute.
 pub struct ServeStats {
     inner: Mutex<Inner>,
+    latencies: Mutex<Reservoir>,
+    reg: ServeRegistry,
     t0: Instant,
 }
 
@@ -54,16 +141,45 @@ impl Default for ServeStats {
 
 impl ServeStats {
     pub fn new() -> ServeStats {
-        ServeStats { inner: Mutex::new(Inner::default()), t0: Instant::now() }
+        ServeStats {
+            inner: Mutex::new(Inner::default()),
+            latencies: Mutex::new(Reservoir::new(LATENCY_RING)),
+            reg: ServeRegistry::new(),
+            t0: Instant::now(),
+        }
     }
 
     /// One flushed batch: occupancy in (0,1], queue wait, execute time.
-    pub fn record_batch(&self, occupancy: f64, wait_ms: f64, exec_ms: f64) {
-        let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
-        g.occupancy.push(occupancy);
-        g.wait_ms.push(wait_ms);
-        g.exec_ms.push(exec_ms);
+    /// Returns the per-batch JSONL row — the *only* emission path for
+    /// batch rows, so the `--metrics-name` tee and the registry can
+    /// never double-count a batch.
+    pub fn record_batch(
+        &self,
+        variant: &str,
+        op: &str,
+        batch: usize,
+        occupancy: f64,
+        wait_ms: f64,
+        exec_ms: f64,
+    ) -> Json {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.batches += 1;
+            g.occupancy.push(occupancy);
+            g.wait_ms.push(wait_ms);
+            g.exec_ms.push(exec_ms);
+        }
+        self.reg.batches.inc();
+        self.reg.batch_wait_ms.observe(wait_ms);
+        self.reg.batch_exec_ms.observe(exec_ms);
+        Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("op", Json::str(op)),
+            ("batch", Json::num(batch as f64)),
+            ("occupancy", Json::num(occupancy)),
+            ("wait_ms", Json::num(wait_ms)),
+            ("exec_ms", Json::num(exec_ms)),
+        ])
     }
 
     /// A request answered without reaching an engine (parse error,
@@ -71,59 +187,81 @@ impl ServeStats {
     /// latency sample — fabricated 0 ms entries would drag the
     /// percentiles toward a healthier-looking server.
     pub fn record_rejected(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.requests += 1;
-        g.errors += 1;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.requests += 1;
+            g.errors += 1;
+        }
+        self.reg.requests.inc();
+        self.reg.errors.inc();
     }
 
     /// One finished request (end-to-end latency, enqueue -> response).
     pub fn record_request(&self, latency_ms: f64, ok: bool, tokens_in: u64, tokens_out: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.requests += 1;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.requests += 1;
+            if !ok {
+                g.errors += 1;
+            }
+            g.tokens_in += tokens_in;
+            g.tokens_out += tokens_out;
+        }
+        self.latencies.lock().unwrap().push(latency_ms);
+        self.reg.requests.inc();
         if !ok {
-            g.errors += 1;
+            self.reg.errors.inc();
         }
-        g.tokens_in += tokens_in;
-        g.tokens_out += tokens_out;
-        if g.latencies_ms.len() < LATENCY_RING {
-            g.latencies_ms.push(latency_ms);
-        } else {
-            let i = g.latency_next;
-            g.latencies_ms[i % LATENCY_RING] = latency_ms;
-        }
-        g.latency_next += 1;
+        self.reg.tokens_in.add(tokens_in);
+        self.reg.tokens_out.add(tokens_out);
+        self.reg.latency_ms.observe(latency_ms);
     }
 
     /// A request shed by admission control (bounded queue full): counted
     /// like a rejection, plus its own counter so load shedding is
     /// distinguishable from client error traffic.
     pub fn record_overloaded(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.requests += 1;
-        g.errors += 1;
-        g.overloaded += 1;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.requests += 1;
+            g.errors += 1;
+            g.overloaded += 1;
+        }
+        self.reg.requests.inc();
+        self.reg.errors.inc();
+        self.reg.overloaded.inc();
     }
 
     /// A request admitted into a decode slot; `prefill_tokens` is the
     /// prompt length fed to the cache exactly once per session.
     pub fn record_slot_join(&self, prefill_tokens: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.slot_joins += 1;
-        g.prefill_tokens += prefill_tokens;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.slot_joins += 1;
+            g.prefill_tokens += prefill_tokens;
+        }
+        self.reg.slot_joins.inc();
     }
 
     /// A slot retired normally (reply rendered, ok or per-request error).
     pub fn record_slot_free(&self, decode_tokens: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.slot_frees += 1;
-        g.decode_tokens += decode_tokens;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.slot_frees += 1;
+            g.decode_tokens += decode_tokens;
+        }
+        self.reg.slot_frees.inc();
     }
 
     /// A slot reclaimed because its client disconnected mid-decode.
     pub fn record_slot_disconnect(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.slot_frees += 1;
-        g.slot_disconnect_frees += 1;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.slot_frees += 1;
+            g.slot_disconnect_frees += 1;
+        }
+        self.reg.slot_frees.inc();
+        self.reg.slot_disconnect_frees.inc();
     }
 
     pub fn requests(&self) -> u64 {
@@ -138,17 +276,9 @@ impl ServeStats {
 
     /// Snapshot for the `stats` op and final server report.
     pub fn snapshot(&self) -> Json {
+        let (p50, p90, p99) = self.latencies.lock().unwrap().percentiles();
         let g = self.inner.lock().unwrap();
         let uptime = self.t0.elapsed().as_secs_f64();
-        let (p50, p90, p99) = if g.latencies_ms.is_empty() {
-            (0.0, 0.0, 0.0)
-        } else {
-            (
-                quantile(&g.latencies_ms, 0.50),
-                quantile(&g.latencies_ms, 0.90),
-                quantile(&g.latencies_ms, 0.99),
-            )
-        };
         Json::obj(vec![
             ("uptime_s", Json::num(uptime)),
             ("requests", Json::num(g.requests as f64)),
@@ -181,25 +311,6 @@ impl ServeStats {
             ),
         ])
     }
-
-    /// Per-batch JSONL row for the metrics sink.
-    pub fn batch_row(
-        variant: &str,
-        op: &str,
-        batch: usize,
-        occupancy: f64,
-        wait_ms: f64,
-        exec_ms: f64,
-    ) -> Json {
-        Json::obj(vec![
-            ("variant", Json::str(variant)),
-            ("op", Json::str(op)),
-            ("batch", Json::num(batch as f64)),
-            ("occupancy", Json::num(occupancy)),
-            ("wait_ms", Json::num(wait_ms)),
-            ("exec_ms", Json::num(exec_ms)),
-        ])
-    }
 }
 
 // ---------------------------------------------------------------------------
@@ -208,8 +319,6 @@ impl ServeStats {
 
 #[derive(Default)]
 struct RouteInner {
-    latencies_ms: Vec<f64>,
-    latency_next: usize,
     requests: u64,
     errors: u64,
     /// re-dispatches after a shed or transport failure (idempotent ops)
@@ -226,11 +335,46 @@ struct RouteInner {
     per_replica: Vec<u64>,
 }
 
+struct RouteRegistry {
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    retries: Arc<Counter>,
+    hinted_backoffs: Arc<Counter>,
+    failovers: Arc<Counter>,
+    deadline_exceeded: Arc<Counter>,
+    breaker_opens: Arc<Counter>,
+    breaker_closes: Arc<Counter>,
+    latency_ms: Arc<Histogram>,
+    forwards: Vec<Arc<Counter>>,
+}
+
+impl RouteRegistry {
+    fn new(replicas: usize) -> RouteRegistry {
+        let r = global();
+        RouteRegistry {
+            requests: r.counter("route_requests_total", &[]),
+            errors: r.counter("route_errors_total", &[]),
+            retries: r.counter("route_retries_total", &[]),
+            hinted_backoffs: r.counter("route_hinted_backoffs_total", &[]),
+            failovers: r.counter("route_failovers_total", &[]),
+            deadline_exceeded: r.counter("route_deadline_exceeded_total", &[]),
+            breaker_opens: r.counter("route_breaker_opens_total", &[]),
+            breaker_closes: r.counter("route_breaker_closes_total", &[]),
+            latency_ms: r.histogram("route_request_latency_ms", &[], LATENCY_MS_BOUNDS),
+            forwards: (0..replicas)
+                .map(|i| r.counter("route_forwards_total", &[("replica", &i.to_string())]))
+                .collect(),
+        }
+    }
+}
+
 /// Thread-shared router counters, mirroring [`ServeStats`]'s shape:
-/// `&self` methods over a private lock, a bounded latency ring, and one
-/// `snapshot()` feeding the router's `stats` op.
+/// `&self` methods over a private lock, a bounded latency reservoir, and
+/// one `snapshot()` feeding the router's `stats` op.
 pub struct RouteStats {
     inner: Mutex<RouteInner>,
+    latencies: Mutex<Reservoir>,
+    reg: RouteRegistry,
     t0: Instant,
 }
 
@@ -241,6 +385,8 @@ impl RouteStats {
                 per_replica: vec![0; replicas],
                 ..RouteInner::default()
             }),
+            latencies: Mutex::new(Reservoir::new(LATENCY_RING)),
+            reg: RouteRegistry::new(replicas),
             t0: Instant::now(),
         }
     }
@@ -250,47 +396,60 @@ impl RouteStats {
         let mut g = self.inner.lock().unwrap();
         if let Some(n) = g.per_replica.get_mut(replica) {
             *n += 1;
+            drop(g);
+            self.reg.forwards[replica].inc();
         }
     }
 
     /// One request answered to the client (however many attempts it took).
     pub fn record_done(&self, latency_ms: f64, ok: bool) {
-        let mut g = self.inner.lock().unwrap();
-        g.requests += 1;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.requests += 1;
+            if !ok {
+                g.errors += 1;
+            }
+        }
+        self.latencies.lock().unwrap().push(latency_ms);
+        self.reg.requests.inc();
         if !ok {
-            g.errors += 1;
+            self.reg.errors.inc();
         }
-        if g.latencies_ms.len() < LATENCY_RING {
-            g.latencies_ms.push(latency_ms);
-        } else {
-            let i = g.latency_next;
-            g.latencies_ms[i % LATENCY_RING] = latency_ms;
-        }
-        g.latency_next += 1;
+        self.reg.latency_ms.observe(latency_ms);
     }
 
     pub fn record_retry(&self, hinted: bool) {
-        let mut g = self.inner.lock().unwrap();
-        g.retries += 1;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.retries += 1;
+            if hinted {
+                g.hinted_backoffs += 1;
+            }
+        }
+        self.reg.retries.inc();
         if hinted {
-            g.hinted_backoffs += 1;
+            self.reg.hinted_backoffs.inc();
         }
     }
 
     pub fn record_failover(&self) {
         self.inner.lock().unwrap().failovers += 1;
+        self.reg.failovers.inc();
     }
 
     pub fn record_deadline_exceeded(&self) {
         self.inner.lock().unwrap().deadline_exceeded += 1;
+        self.reg.deadline_exceeded.inc();
     }
 
     pub fn record_breaker_open(&self) {
         self.inner.lock().unwrap().breaker_opens += 1;
+        self.reg.breaker_opens.inc();
     }
 
     pub fn record_breaker_close(&self) {
         self.inner.lock().unwrap().breaker_closes += 1;
+        self.reg.breaker_closes.inc();
     }
 
     pub fn requests(&self) -> u64 {
@@ -298,17 +457,9 @@ impl RouteStats {
     }
 
     pub fn snapshot(&self) -> Json {
+        let (p50, p90, p99) = self.latencies.lock().unwrap().percentiles();
         let g = self.inner.lock().unwrap();
         let uptime = self.t0.elapsed().as_secs_f64();
-        let (p50, p90, p99) = if g.latencies_ms.is_empty() {
-            (0.0, 0.0, 0.0)
-        } else {
-            (
-                quantile(&g.latencies_ms, 0.50),
-                quantile(&g.latencies_ms, 0.90),
-                quantile(&g.latencies_ms, 0.99),
-            )
-        };
         let per_replica: Vec<f64> = g.per_replica.iter().map(|&n| n as f64).collect();
         Json::obj(vec![
             ("uptime_s", Json::num(uptime)),
@@ -355,8 +506,11 @@ mod tests {
         for i in 1..=100 {
             s.record_request(i as f64, i % 10 != 0, 2, 3);
         }
-        s.record_batch(0.5, 4.0, 8.0);
-        s.record_batch(1.0, 0.0, 8.0);
+        let row = s.record_batch("v", "generate", 2, 0.5, 4.0, 8.0);
+        s.record_batch("v", "generate", 4, 1.0, 0.0, 8.0);
+        assert_eq!(row.get("variant").unwrap().as_str(), Some("v"));
+        assert_eq!(row.get("batch").unwrap().as_f64(), Some(2.0));
+        assert_eq!(row.get("wait_ms").unwrap().as_f64(), Some(4.0));
         let j = s.snapshot();
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(100.0));
         assert_eq!(j.get("errors").unwrap().as_f64(), Some(10.0));
@@ -440,14 +594,27 @@ mod tests {
     }
 
     #[test]
-    fn latency_ring_is_bounded() {
+    fn latency_reservoir_footprint_is_pinned() {
+        // regression: the percentile buffer must neither grow past its
+        // cap nor reallocate once warm — a long-lived server's footprint
+        // is fixed at construction
         let s = ServeStats::new();
-        for i in 0..(LATENCY_RING + 100) {
+        for i in 0..(LATENCY_RING * 3) {
             s.record_request(i as f64, true, 0, 0);
         }
-        let g = s.inner.lock().unwrap();
-        assert_eq!(g.latencies_ms.len(), LATENCY_RING);
+        let r = s.latencies.lock().unwrap();
+        assert_eq!(r.samples.len(), LATENCY_RING);
+        assert_eq!(r.samples.capacity(), LATENCY_RING, "ring must not reallocate");
         // newest samples overwrote the oldest slots
-        assert_eq!(g.latencies_ms[0], LATENCY_RING as f64);
+        assert_eq!(r.samples[0], (LATENCY_RING * 2) as f64);
+        drop(r);
+
+        let rt = RouteStats::new(1);
+        for i in 0..(LATENCY_RING + 7) {
+            rt.record_done(i as f64, true);
+        }
+        let r = rt.latencies.lock().unwrap();
+        assert_eq!(r.samples.len(), LATENCY_RING);
+        assert_eq!(r.samples.capacity(), LATENCY_RING);
     }
 }

@@ -14,6 +14,8 @@ use anyhow::{anyhow, Context, Result};
 const MAGIC: &[u8; 8] = b"SPCKPT01";
 
 pub fn save(path: &Path, variant: &str, state: &[f32]) -> Result<()> {
+    let _sp = crate::obs::Span::begin("checkpoint", "train")
+        .arg("len", state.len() as f64);
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }

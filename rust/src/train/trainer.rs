@@ -210,6 +210,11 @@ impl Trainer {
         observer: &mut dyn StepObserver,
     ) -> Result<TrainResult> {
         let read_every = self.run.read_interval.clamp(1, slots::RING);
+        // step-counter handle cached once, not per step (DESIGN.md
+        // §Observability); spans below only time phase boundaries — they
+        // never touch batch or state data, so observed training stays
+        // bit-identical to unobserved (docs/adr/009)
+        let steps_total = crate::obs::global().counter("train_steps_total", &[]);
         let t0 = Instant::now();
         let mut diverged = false;
         let mut halted = false;
@@ -235,13 +240,23 @@ impl Trainer {
                 halted = true;
                 break;
             }
-            let batch = batches.next_batch_ref();
-            let out = self.backend.step(&self.state_buf, batch)?;
+            let batch = {
+                let _sp = crate::obs::Span::begin("prefetch_wait", "train");
+                batches.next_batch_ref()
+            };
+            let out = {
+                let _sp = crate::obs::Span::begin("step", "train")
+                    .arg("step", cur as f64);
+                self.backend.step(&self.state_buf, batch)?
+            };
             self.state_buf = out;
             steps_done += 1;
             cur += 1;
+            steps_total.inc();
 
             if cur % read_every == 0 || cur == target {
+                let _sp = crate::obs::Span::begin("telemetry", "train")
+                    .arg("step", cur as f64);
                 self.sync()?;
                 let host = &self.last_host;
                 let ring = host.ring_losses(self.last_ring_step);

@@ -155,7 +155,7 @@ pub fn write_json_to(suite: &str, path: &std::path::Path) {
     ]);
     match std::fs::write(path, j.to_string()) {
         Ok(()) => println!("\nbench json -> {}", path.display()),
-        Err(e) => eprintln!("bench json: writing {}: {e}", path.display()),
+        Err(e) => crate::warn_!("bench", "json: writing {}: {e}", path.display()),
     }
 }
 

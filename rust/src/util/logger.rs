@@ -1,18 +1,52 @@
-//! Leveled stderr logger with monotonic timestamps (the `log` facade is
-//! not wired to anything in this environment; keep it simple and direct).
+//! Leveled, target-tagged stderr logger with monotonic timestamps (the
+//! `log` facade is not vendored; keep it simple and direct).
+//!
+//! Every line carries a *tag* (the subsystem: `serve`, `route`, `train`,
+//! `monitor`, ...). Verbosity is a default level plus per-tag overrides,
+//! set programmatically via [`set_filter`] or from the environment:
+//!
+//! ```text
+//! REPRO_LOG=debug                  # everything at debug
+//! REPRO_LOG=debug,serve=trace      # debug default, serve at trace
+//! REPRO_LOG=warn,route=debug,serve=trace
+//! ```
+//!
+//! The filter is parsed once on first log call; `--verbose` style flags
+//! can still tighten/loosen the default afterwards via [`set_level`].
+//! The common-case cost of a suppressed line is one relaxed atomic load
+//! plus (only when per-tag overrides exist) a short lock-protected scan.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, Once};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
-    Debug = 0,
-    Info = 1,
-    Warn = 2,
-    Error = 3,
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(1);
+impl Level {
+    fn parse(s: &str) -> Result<Level, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "trace" => Ok(Level::Trace),
+            "debug" => Ok(Level::Debug),
+            "info" => Ok(Level::Info),
+            "warn" => Ok(Level::Warn),
+            "error" => Ok(Level::Error),
+            other => Err(format!("unknown log level {other:?}")),
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+/// True iff TAGS is non-empty — lets the no-override fast path skip the lock.
+static HAS_TAGS: AtomicBool = AtomicBool::new(false);
+static TAGS: Mutex<Vec<(String, Level)>> = Mutex::new(Vec::new());
+static ENV_INIT: Once = Once::new();
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -20,11 +54,59 @@ pub fn set_level(level: Level) {
 
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
-        0 => Level::Debug,
-        1 => Level::Info,
-        2 => Level::Warn,
+        0 => Level::Trace,
+        1 => Level::Debug,
+        2 => Level::Info,
+        3 => Level::Warn,
         _ => Level::Error,
     }
+}
+
+/// Apply a `REPRO_LOG`-style spec: a default level and/or comma-separated
+/// `tag=level` overrides, e.g. `"debug,serve=trace"`. Replaces any
+/// previous per-tag overrides.
+pub fn set_filter(spec: &str) -> Result<(), String> {
+    let mut tags = Vec::new();
+    let mut default = None;
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        match part.split_once('=') {
+            Some((tag, lvl)) => tags.push((tag.trim().to_string(), Level::parse(lvl)?)),
+            None => {
+                if default.replace(Level::parse(part)?).is_some() {
+                    return Err(format!("two default levels in {spec:?}"));
+                }
+            }
+        }
+    }
+    if let Some(d) = default {
+        set_level(d);
+    }
+    HAS_TAGS.store(!tags.is_empty(), Ordering::Relaxed);
+    *TAGS.lock().unwrap() = tags;
+    Ok(())
+}
+
+fn env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("REPRO_LOG") {
+            if let Err(e) = set_filter(&spec) {
+                eprintln!("[logger] ignoring REPRO_LOG: {e}");
+            }
+        }
+    });
+}
+
+/// Would a line at `lvl` for `tag` be emitted? Per-tag overrides win
+/// over the default level.
+pub fn enabled(lvl: Level, tag: &str) -> bool {
+    env_init();
+    if HAS_TAGS.load(Ordering::Relaxed) {
+        let tags = TAGS.lock().unwrap();
+        if let Some((_, t)) = tags.iter().find(|(k, _)| k == tag) {
+            return lvl >= *t;
+        }
+    }
+    lvl >= level()
 }
 
 fn start() -> Instant {
@@ -34,11 +116,12 @@ fn start() -> Instant {
 }
 
 pub fn log(lvl: Level, tag: &str, msg: std::fmt::Arguments<'_>) {
-    if lvl < level() {
+    if !enabled(lvl, tag) {
         return;
     }
     let t = start().elapsed().as_secs_f64();
     let l = match lvl {
+        Level::Trace => "TRC",
         Level::Debug => "DBG",
         Level::Info => "INF",
         Level::Warn => "WRN",
@@ -71,15 +154,53 @@ macro_rules! debug {
     };
 }
 
+#[macro_export]
+macro_rules! trace_log {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Trace, $tag,
+                                  format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Error, $tag,
+                                  format_args!($($arg)*))
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn level_ordering() {
-        assert!(Level::Debug < Level::Info && Level::Info < Level::Error);
+        assert!(Level::Trace < Level::Debug && Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn && Level::Warn < Level::Error);
         set_level(Level::Warn);
         assert_eq!(level(), Level::Warn);
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn filter_spec_sets_default_and_tag_overrides() {
+        // level/filter state is process-global; keep every assertion in
+        // one test body and restore the default at the end.
+        set_filter("debug,serve=trace,route=warn").unwrap();
+        assert_eq!(level(), Level::Debug);
+        assert!(enabled(Level::Trace, "serve"), "serve override to trace");
+        assert!(!enabled(Level::Trace, "train"), "default stays debug");
+        assert!(enabled(Level::Debug, "train"));
+        assert!(!enabled(Level::Debug, "route"), "route tightened to warn");
+        assert!(enabled(Level::Error, "route"));
+
+        assert!(set_filter("nope").is_err());
+        assert!(set_filter("info,debug").is_err(), "two defaults rejected");
+        assert!(set_filter("serve=loud").is_err());
+
+        set_filter("info").unwrap();
+        assert_eq!(level(), Level::Info);
+        assert!(!enabled(Level::Trace, "serve"), "overrides replaced");
     }
 }

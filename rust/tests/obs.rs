@@ -1,0 +1,253 @@
+//! Observability-layer integration tests (DESIGN.md §Observability,
+//! docs/adr/009-observability-layer.md): exact counters under
+//! contention, consistent stats snapshots while writers hammer, the
+//! bit-identity contract for traced training, and schema-valid Chrome
+//! trace export.
+//!
+//! The trace sink is process-global, so exactly one test here
+//! (`observed_training_is_bit_identical`) installs it; everything else
+//! uses private registries or plain files.
+
+use std::sync::Arc;
+
+use spectron::config::{Registry, RunCfg};
+use spectron::data::bpe::Bpe;
+use spectron::data::corpus::{Corpus, CorpusCfg};
+use spectron::data::dataset::{Dataset, Split};
+use spectron::monitor::{Monitor, MonitorCfg};
+use spectron::obs;
+use spectron::runtime::{NativeBackend, Precision};
+use spectron::serve::{RouteStats, ServeStats};
+use spectron::train::Trainer;
+use spectron::util::json::Json;
+
+/// Writers on N threads against one shared counter family plus one
+/// histogram, with renders interleaved mid-flight. After joining, the
+/// totals are exact — no event lost, none double-counted.
+#[test]
+fn concurrent_counters_are_exact_under_contention() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 10_000;
+    let reg = Arc::new(obs::Registry::new());
+    let c = reg.counter("hammer_total", &[]);
+    let h = reg.histogram("hammer_ms", &[], &[1.0, 10.0, 100.0]);
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let (c, h) = (c.clone(), h.clone());
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    h.observe(((t * PER_THREAD + i) % 200) as f64);
+                }
+            })
+        })
+        .collect();
+    // snapshots taken while writers run must stay parseable; exactness
+    // is only asserted after the join
+    for _ in 0..20 {
+        let text = reg.render();
+        obs::expo::parse_prometheus(&text).expect("mid-flight render parses");
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let total = (THREADS * PER_THREAD) as u64;
+    assert_eq!(c.get(), total);
+    assert_eq!(h.count(), total);
+    let text = reg.render();
+    assert!(text.contains(&format!("hammer_total {total}")), "{text}");
+    assert!(
+        text.contains(&format!("hammer_ms_bucket{{le=\"+Inf\"}} {total}")),
+        "{text}"
+    );
+}
+
+/// Serve and route stats stay internally consistent while N threads
+/// record: every mid-flight snapshot parses and never exceeds the final
+/// totals, and the post-join totals are exact.
+#[test]
+fn stats_snapshots_are_consistent_under_concurrency() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 2_000;
+    let stats = Arc::new(ServeStats::new());
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    stats.record_request((i % 50) as f64, i % 10 != 0, 2, 3);
+                    if i % 100 == 0 {
+                        stats.record_batch("v", "score", 4, 0.5, 1.0, 2.0 + t as f64);
+                    }
+                }
+            })
+        })
+        .collect();
+    let total = (THREADS * PER_THREAD) as f64;
+    for _ in 0..50 {
+        let j = stats.snapshot();
+        let seen = j.get("requests").unwrap().as_f64().unwrap();
+        assert!(seen <= total, "snapshot overshot: {seen} > {total}");
+        let errors = j.get("errors").unwrap().as_f64().unwrap();
+        assert!(errors <= seen, "more errors than requests: {errors} > {seen}");
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    let j = stats.snapshot();
+    assert_eq!(j.get("requests").unwrap().as_f64(), Some(total));
+    assert_eq!(j.get("errors").unwrap().as_f64(), Some(total / 10.0));
+    assert_eq!(j.get("tokens_out").unwrap().as_f64(), Some(total * 3.0));
+    assert_eq!(
+        j.get("batches").unwrap().as_f64(),
+        Some((THREADS * PER_THREAD / 100) as f64)
+    );
+
+    let route = Arc::new(RouteStats::new(2));
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let route = route.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    route.record_forward(t % 2);
+                    route.record_done((i % 30) as f64, i % 7 != 0);
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    let j = route.snapshot();
+    assert_eq!(j.get("requests").unwrap().as_f64(), Some(total));
+    let Some(Json::Arr(per)) = j.get("forwards_per_replica") else {
+        panic!("forwards_per_replica missing")
+    };
+    let forwards: f64 = per.iter().filter_map(|v| v.as_f64()).sum();
+    assert_eq!(forwards, total);
+}
+
+/// The ADR-005 invariant extends to tracing (docs/adr/009): a traced
+/// native train run is bit-identical to an untraced one, at every
+/// thread count and both compute precisions — spans time phase
+/// boundaries and never touch batch or state data.
+#[test]
+fn observed_training_is_bit_identical() {
+    let reg = Registry::load().unwrap();
+    let v = reg.variant("fact-z0-spectron").unwrap();
+    let corpus = Corpus::new(CorpusCfg::default());
+    let bpe = Bpe::train(&corpus.text_range(1, 150), v.model.vocab);
+    let ds = Arc::new(Dataset::build_with(&corpus, &bpe, 800, 128));
+    let run = RunCfg {
+        total_steps: 8,
+        base_lr: 0.01,
+        weight_decay: 0.01,
+        warmup_frac: 0.05,
+        seed: 0,
+        read_interval: 4,
+    };
+
+    for precision in [Precision::F64, Precision::F32] {
+        for threads in [1usize, 4] {
+            let run_once = |traced: bool| -> Vec<f32> {
+                let be = NativeBackend::with_opts(v, threads, precision).unwrap();
+                let mut t = Trainer::with_backend(Box::new(be), v, run.clone()).unwrap();
+                let mut batches = ds.batches(Split::Train, v.batch, 0);
+                if traced {
+                    obs::trace::install_memory();
+                }
+                let res = t.train(&mut batches, 8).unwrap();
+                if traced {
+                    let rows = obs::trace::drain_memory();
+                    obs::trace::uninstall();
+                    assert!(
+                        rows.iter().any(|r| {
+                            r.get("name").and_then(Json::as_str) == Some("forward")
+                        }),
+                        "traced run recorded no forward span: {rows:?}"
+                    );
+                }
+                assert_eq!(res.steps_done, 8);
+                t.state_vec().unwrap()
+            };
+            let untraced = run_once(false);
+            let traced = run_once(true);
+            assert_eq!(untraced.len(), traced.len());
+            for (i, (a, b)) in untraced.iter().zip(&traced).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{precision:?} threads={threads}: state diverged at slot {i}"
+                );
+            }
+        }
+    }
+}
+
+/// `repro trace-export`'s conversion path: a recorded JSONL log (with a
+/// torn final line, as a killed run leaves) converts to Chrome
+/// trace-event JSON that passes the schema check; mid-file corruption
+/// stays a hard error.
+#[test]
+fn chrome_export_from_jsonl_is_schema_valid() {
+    let dir = std::env::temp_dir().join(format!("spectron-obs-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    std::fs::write(
+        &path,
+        "{\"name\":\"forward\",\"cat\":\"train\",\"ts_us\":10,\"dur_us\":250,\"tid\":1}\n\
+         {\"name\":\"serve_request\",\"cat\":\"serve\",\"ts_us\":400,\"dur_us\":90,\
+          \"tid\":2,\"trace\":\"req-1\",\"args\":{\"tokens_out\":5}}\n\
+         {\"name\":\"torn tail, killed mid-wri",
+    )
+    .unwrap();
+    let doc = obs::expo::chrome_from_jsonl(&path).unwrap();
+    obs::expo::validate_chrome(&doc).expect("exported doc satisfies the schema");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), 2, "torn tail dropped, valid rows kept");
+    assert_eq!(
+        events[1].get("args").unwrap().get("trace").and_then(Json::as_str),
+        Some("req-1")
+    );
+
+    let bad = dir.join("bad.jsonl");
+    std::fs::write(&bad, "not json\n{\"name\":\"x\",\"ts_us\":0,\"dur_us\":1}\n").unwrap();
+    assert!(
+        obs::expo::chrome_from_jsonl(&bad).is_err(),
+        "mid-file corruption must be fatal, not skipped"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The `metrics` wire op's payload: after train/serve/route/monitor
+/// activity in one process, the global registry renders Prometheus text
+/// that parses and names families from every subsystem.
+#[test]
+fn global_render_covers_every_subsystem() {
+    obs::global().counter("train_steps_total", &[]).inc();
+    let serve = ServeStats::new();
+    serve.record_request(3.0, true, 2, 5);
+    let route = RouteStats::new(1);
+    route.record_forward(0);
+    route.record_done(4.0, true);
+    let _monitor = Monitor::new(MonitorCfg::default()); // registers its families
+
+    let text = obs::global().render();
+    let samples = obs::expo::parse_prometheus(&text).expect("exposition parses");
+    for family in [
+        "train_steps_total",
+        "serve_requests_total",
+        "serve_request_latency_ms_count",
+        "route_requests_total",
+        "route_forwards_total{replica=\"0\"}",
+        "monitor_events_total",
+    ] {
+        assert!(
+            samples.iter().any(|(name, _)| name == family),
+            "{family} missing from exposition:\n{text}"
+        );
+    }
+    assert!(text.contains("# TYPE serve_request_latency_ms histogram"), "{text}");
+}

@@ -263,6 +263,54 @@ fn routed_replies_are_byte_identical_to_direct_ones() {
 }
 
 #[test]
+fn trace_id_propagates_route_to_serve_and_back() {
+    // the router forwards model ops verbatim, so the trace field rides
+    // through to the replica; serve echoes it on the reply and the
+    // router passes that back untouched — end-to-end request tracing
+    // without a protocol version bump
+    let server = mock_server(4, Duration::from_millis(5));
+    let handle = router_over(vec![server.addr.to_string()], test_cfg());
+    let mut c = Client::connect(handle.addr);
+    let r = c.roundtrip(
+        r#"{"id":1,"op":"generate","prompt":"a b","max_tokens":2,"trace":"req-abc-1"}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("trace").and_then(Json::as_str), Some("req-abc-1"));
+    // untraced requests stay untraced end to end — no key fabricated
+    let r = c.roundtrip(r#"{"id":2,"op":"score","text":"x"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert!(r.get("trace").is_none(), "unexpected trace key: {r}");
+    handle.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn router_answers_metrics_op_locally() {
+    let server = mock_server(4, Duration::from_millis(5));
+    let handle = router_over(vec![server.addr.to_string()], test_cfg());
+    let mut c = Client::connect(handle.addr);
+    c.roundtrip(r#"{"id":1,"op":"score","text":"warm"}"#);
+    let r = c.roundtrip(r#"{"id":2,"op":"metrics"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let text = r.get("metrics").unwrap().as_str().expect("metrics is text");
+    let samples =
+        spectron::obs::expo::parse_prometheus(text).expect("exposition parses");
+    // the registry is process-global, so presence (not exact counts) is
+    // the contract; route families prove the router rendered its own
+    let req = samples
+        .iter()
+        .find(|(name, _)| name == "route_requests_total")
+        .expect("route_requests_total present");
+    assert!(req.1 >= 1.0, "routed request not counted: {}", req.1);
+    assert!(
+        samples.iter().any(|(n, _)| n == "route_forwards_total{replica=\"0\"}"),
+        "per-replica forward series missing"
+    );
+    handle.shutdown();
+    server.shutdown();
+}
+
+#[test]
 fn router_parse_errors_match_serve_parse_errors() {
     // local router-side errors use the same renderer + messages as
     // serve, so even the failure surface is protocol-compatible

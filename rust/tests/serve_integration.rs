@@ -172,6 +172,31 @@ fn concurrent_connections_share_batches() {
 }
 
 #[test]
+fn metrics_op_returns_parseable_prometheus_text() {
+    let (handle, _) = mock_server(4, Duration::from_millis(5));
+    let mut c = Client::connect(handle.addr);
+    for i in 0..3 {
+        c.roundtrip(&format!(r#"{{"id":{i},"op":"score","text":"x"}}"#));
+    }
+    let r = c.roundtrip(r#"{"id":9,"op":"metrics"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let text = r.get("metrics").unwrap().as_str().expect("metrics is text");
+    let samples = spectron::obs::expo::parse_prometheus(text).expect("exposition parses");
+    // the process-global registry accumulates across tests in this
+    // binary, so assert presence and a floor, never exact counts
+    let req = samples
+        .iter()
+        .find(|(name, _)| name == "serve_requests_total")
+        .expect("serve_requests_total present");
+    assert!(req.1 >= 3.0, "expected at least this test's requests, got {}", req.1);
+    assert!(
+        samples.iter().any(|(n, _)| n.starts_with("serve_request_latency_ms_bucket")),
+        "latency histogram missing"
+    );
+    handle.shutdown();
+}
+
+#[test]
 fn stats_and_wire_shutdown() {
     let (handle, _) = mock_server(4, Duration::from_millis(5));
     let mut c = Client::connect(handle.addr);
