@@ -11,10 +11,13 @@
 //! factored apply `(x·B)·Aᵀ` at rank 64 must beat the dense baseline
 //! `x·Wᵀ` in both compute precisions (`BENCH_ASSERT_FACTORED`) — the
 //! low-rank FLOP advantage the paper's parameterization is supposed to
-//! buy (docs/adr/008-f32-compute-path.md). Requires no artifacts —
-//! pure Rust.
+//! buy (docs/adr/008-f32-compute-path.md). The simd section pins the
+//! kernel table to scalar vs the detected vector tier at the same
+//! shapes; `BENCH_ASSERT_SIMD` gates the f32 logits-shape pair at
+//! >= 1.5x when AVX2 is present (docs/adr/010-simd-microkernels.md).
+//! Requires no artifacts — pure Rust.
 
-use spectron::linalg::{Elem, Mat};
+use spectron::linalg::{simd, Elem, Mat};
 use spectron::runtime::native::kernels::{
     self, newton_schulz_stacked, power_iter, power_iter_inplace, PowerScratch, K_NS,
 };
@@ -72,6 +75,90 @@ fn main() {
             assert!(
                 speedup >= 2.0,
                 "tensor-core acceptance: matmul speedup {speedup:.2}x < 2x at threads=4"
+            );
+        }
+    }
+
+    // simd dispatch rows: the same serial matmul with the kernel table
+    // pinned to the portable path vs the detected vector tier, both
+    // precisions (docs/adr/010-simd-microkernels.md). threads=1 isolates
+    // the microkernel effect from the pool partition; the two knobs
+    // compose multiplicatively. The logits-shape f32 pair carries the
+    // acceptance gate: >= 1.5x when AVX2 is detected (BENCH_ASSERT_SIMD).
+    header("simd microkernels: scalar vs vectorized (threads=1)");
+    let vec_lvl = simd::detected();
+    println!("  detected tier: {}", vec_lvl.name());
+    let mut f32_gate = (f64::NAN, f64::NAN);
+    for &(m, k, n) in shapes {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let af = Mat::<f32>::randn(m, k, &mut rng);
+        let bf = Mat::<f32>::randn(k, n, &mut rng);
+        let mut out = Mat::zeros(1, 1);
+        let mut outf = Mat::<f32>::zeros(1, 1);
+        simd::force(Some(simd::Level::Scalar));
+        Bench::new(&format!("matmul {m}x{k}x{n} [f64 simd=scalar]"))
+            .warmup(2)
+            .iters(8)
+            .run(|| a.matmul_par_into(&b, 1, &mut out));
+        let s32 = Bench::new(&format!("matmul {m}x{k}x{n} [f32 simd=scalar]"))
+            .warmup(2)
+            .iters(8)
+            .run(|| af.matmul_par_into(&bf, 1, &mut outf));
+        simd::force(Some(vec_lvl));
+        Bench::new(&format!("matmul {m}x{k}x{n} [f64 simd={}]", vec_lvl.name()))
+            .warmup(2)
+            .iters(8)
+            .run(|| a.matmul_par_into(&b, 1, &mut out));
+        let v32 = Bench::new(&format!("matmul {m}x{k}x{n} [f32 simd={}]", vec_lvl.name()))
+            .warmup(2)
+            .iters(8)
+            .run(|| af.matmul_par_into(&bf, 1, &mut outf));
+        simd::force(None);
+        if (m, k, n) == (1024, 256, 1024) {
+            f32_gate = (s32.mean_s, v32.mean_s);
+        }
+    }
+    // matvec at the decode shape (one token row against the big matrix)
+    {
+        let w = Mat::randn(1024, 256, &mut rng);
+        let wf = Mat::<f32>::randn(1024, 256, &mut rng);
+        let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let xf: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let mut out = Vec::new();
+        let mut outf = Vec::new();
+        simd::force(Some(simd::Level::Scalar));
+        Bench::new("matvec 1024x256 [f64 simd=scalar]")
+            .warmup(2)
+            .iters(10)
+            .run(|| w.matvec_into(&x, &mut out));
+        Bench::new("matvec 1024x256 [f32 simd=scalar]")
+            .warmup(2)
+            .iters(10)
+            .run(|| wf.matvec_into(&xf, &mut outf));
+        simd::force(Some(vec_lvl));
+        Bench::new(&format!("matvec 1024x256 [f64 simd={}]", vec_lvl.name()))
+            .warmup(2)
+            .iters(10)
+            .run(|| w.matvec_into(&x, &mut out));
+        Bench::new(&format!("matvec 1024x256 [f32 simd={}]", vec_lvl.name()))
+            .warmup(2)
+            .iters(10)
+            .run(|| wf.matvec_into(&xf, &mut outf));
+        simd::force(None);
+    }
+    if f32_gate.0.is_finite() && f32_gate.1.is_finite() {
+        let speedup = f32_gate.0 / f32_gate.1;
+        println!(
+            "\n  logits-shape f32 simd speedup: {speedup:.2}x \
+             (target when avx2 detected: >= 1.5x)"
+        );
+        // opt-in hard gate: only meaningful where a vector tier exists
+        if std::env::var("BENCH_ASSERT_SIMD").is_ok() && vec_lvl == simd::Level::Avx2 {
+            assert!(
+                speedup >= 1.5,
+                "simd acceptance: f32 matmul speedup {speedup:.2}x < 1.5x \
+                 at 1024x256->1024 under avx2"
             );
         }
     }

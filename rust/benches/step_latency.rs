@@ -1,7 +1,8 @@
 //! Step-latency benchmarks — the repo's version of the paper's Section 5
 //! overhead table: per-optimizer train-step wall time on the same
 //! architecture, from which the Spectron-vs-baseline overhead ratio and
-//! the self-guided FLOP penalty are read directly.
+//! the self-guided FLOP penalty are read directly. Native rows also
+//! print end-to-end tokens/sec (batch x 128-token windows per step).
 //!
 //!     cargo bench --offline [--bench step_latency]    (BENCH_FAST=1 to smoke)
 
@@ -39,10 +40,14 @@ fn main() {
         let mut trainer = Trainer::native(v, run).unwrap();
         let mut batches = ds.batches(Split::Train, v.batch, 0);
         trainer.train(&mut batches, 1).unwrap(); // touch all buffers once
+        // tokens/sec alongside the latency row: one step consumes
+        // `batch` windows of 128 tokens (ROADMAP item 2's end-to-end
+        // throughput measurement)
+        let tokens = (v.batch * 128) as f64;
         let r = Bench::new(&format!("{label} [{name}]"))
             .warmup(1)
             .iters(3)
-            .run(|| trainer.train(&mut batches, 1).unwrap());
+            .run_throughput(tokens, "tok", || trainer.train(&mut batches, 1).unwrap());
         if name == "fact-s-spectron" {
             native_tiny_s = r.mean_s;
         }
@@ -58,10 +63,11 @@ fn main() {
         let mut trainer = Trainer::native_with_threads(v, run, threads).unwrap();
         let mut batches = ds.batches(Split::Train, v.batch, 0);
         trainer.train(&mut batches, 1).unwrap();
+        let tokens = (v.batch * 128) as f64;
         Bench::new(&format!("native step [threads={threads}]"))
             .warmup(1)
             .iters(3)
-            .run(|| trainer.train(&mut batches, 1).unwrap());
+            .run_throughput(tokens, "tok", || trainer.train(&mut batches, 1).unwrap());
     }
 
     // stability-monitor overhead: the same trainer stepped with the

@@ -26,6 +26,16 @@
 //!   across thread counts, and agree with f64 within a proptested band
 //!   (docs/adr/008-f32-compute-path.md).
 //!
+//! * **SIMD microkernels with runtime dispatch** ([`simd`]): the panel,
+//!   matvec, transpose, and optimizer inner loops run through a kernel
+//!   table resolved once from `REPRO_SIMD` + CPU detection (AVX2
+//!   f64x4/f32x8 today, portable chunked fallback everywhere else).
+//!   Lanes map to *distinct output elements*, every per-element
+//!   k-accumulation keeps its ascending scalar order, and no FMA is
+//!   emitted — so the vector path is bit-identical to the scalar path,
+//!   and orthogonal to the thread-count contract above
+//!   (docs/adr/010-simd-microkernels.md).
+//!
 //! NOTE the deliberate absence of zero-skip shortcuts: a `continue` on a
 //! `0.0` operand would also skip `0.0 * NaN` and so hide a diverged
 //! state's non-finite weights from the loss and the stability monitor's
@@ -33,13 +43,9 @@
 //! `nan_propagates_through_zero_operands` regression pins it.
 
 pub mod lbfgs;
+pub mod simd;
 
 use crate::util::pool::{self, DisjointMut};
-
-/// Tile edge for the blocked transpose / tiled matmul: 64 f64 = 512 B per
-/// row segment, a few tiles fit in L1 alongside the output rows (f32
-/// tiles are half that — still tuned for the f64 worst case).
-const BLOCK: usize = 64;
 
 /// Element scalar for the tensor core: the closed set of arithmetic the
 /// kernels and the native model need, implemented for `f64` and `f32`.
@@ -68,6 +74,13 @@ pub trait Elem:
     const ZERO: Self;
     const ONE: Self;
     const NEG_INF: Self;
+    /// Tile edge for the blocked transpose / tiled matmul, sized so one
+    /// row segment is 512 B (a few tiles fit in L1 alongside the output
+    /// rows): 64 for f64, 128 for f32 — the f32 path used to inherit
+    /// the f64 edge and run half-sized tiles. Per-element k order is
+    /// blocking-independent, so the per-width edge moves no bits
+    /// (`block_edge_is_per_elem_and_bit_free` pins it).
+    const BLOCK: usize;
     fn from_f64(x: f64) -> Self;
     fn to_f64(self) -> f64;
     fn from_f32(x: f32) -> Self;
@@ -85,12 +98,54 @@ pub trait Elem:
     /// Bit pattern widened to u64 (f32 zero-extends) — the currency of
     /// the bits-equality tests, which must not depend on `T`.
     fn to_bits_u64(self) -> u64;
+
+    // -- SIMD kernel hooks (forward to the width-matched entry of the
+    //    runtime-dispatched table; see the [`simd`] module docs for the
+    //    bit-identity argument) --
+
+    /// `out[j] += a[k] * b[k * out.len() + j]`, k ascending per element
+    /// — the register-tiled panel behind the matmul inner loop and
+    /// `Wᵀy`.
+    fn mul_add_panel(out: &mut [Self], a: &[Self], b: &[Self]);
+    /// `out[i] = fold(0, acc + w[i*cols + k] * x[k])`, k ascending.
+    fn matvec_fill(w: &[Self], cols: usize, x: &[Self], out: &mut [Self]);
+    /// `dst[j*dcols + i] = src[i*scols + j]` over the given tile.
+    #[allow(clippy::too_many_arguments)]
+    fn transpose_tile(
+        src: &[Self],
+        scols: usize,
+        dst: &mut [Self],
+        dcols: usize,
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+    );
 }
 
 impl Elem for f64 {
     const ZERO: Self = 0.0;
     const ONE: Self = 1.0;
     const NEG_INF: Self = f64::NEG_INFINITY;
+    const BLOCK: usize = 64;
+    fn mul_add_panel(out: &mut [Self], a: &[Self], b: &[Self]) {
+        (simd::ops().mul_add_panel_f64)(out, a, b)
+    }
+    fn matvec_fill(w: &[Self], cols: usize, x: &[Self], out: &mut [Self]) {
+        (simd::ops().matvec_f64)(w, cols, x, out)
+    }
+    fn transpose_tile(
+        src: &[Self],
+        scols: usize,
+        dst: &mut [Self],
+        dcols: usize,
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+    ) {
+        (simd::ops().transpose_f64)(src, scols, dst, dcols, i0, i1, j0, j1)
+    }
     fn from_f64(x: f64) -> Self {
         x
     }
@@ -142,6 +197,25 @@ impl Elem for f32 {
     const ZERO: Self = 0.0;
     const ONE: Self = 1.0;
     const NEG_INF: Self = f32::NEG_INFINITY;
+    const BLOCK: usize = 128;
+    fn mul_add_panel(out: &mut [Self], a: &[Self], b: &[Self]) {
+        (simd::ops().mul_add_panel_f32)(out, a, b)
+    }
+    fn matvec_fill(w: &[Self], cols: usize, x: &[Self], out: &mut [Self]) {
+        (simd::ops().matvec_f32)(w, cols, x, out)
+    }
+    fn transpose_tile(
+        src: &[Self],
+        scols: usize,
+        dst: &mut [Self],
+        dcols: usize,
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+    ) {
+        (simd::ops().transpose_f32)(src, scols, dst, dcols, i0, i1, j0, j1)
+    }
     fn from_f64(x: f64) -> Self {
         x as f32
     }
@@ -257,10 +331,11 @@ impl<T: Elem> Mat<T> {
         }
     }
 
-    /// Blocked transpose: walks `BLOCK x BLOCK` tiles so reads and writes
-    /// both stay within a cache-resident window on the larger test shapes
-    /// (the naive column-strided write thrashes once a row of the output
-    /// exceeds L1). Pure permutation — bit-identical to the naive loop.
+    /// Blocked transpose: walks `T::BLOCK`-square tiles so reads and
+    /// writes both stay within a cache-resident window on the larger test
+    /// shapes (the naive column-strided write thrashes once a row of the
+    /// output exceeds L1). Pure permutation — bit-identical to the naive
+    /// loop at any tile edge and in any vector width.
     pub fn t(&self) -> Mat<T> {
         let mut out = Self::zeros(self.cols, self.rows);
         self.t_write(&mut out);
@@ -275,15 +350,13 @@ impl<T: Elem> Mat<T> {
     }
 
     fn t_write(&self, out: &mut Mat<T>) {
-        for i0 in (0..self.rows).step_by(BLOCK) {
-            let i1 = (i0 + BLOCK).min(self.rows);
-            for j0 in (0..self.cols).step_by(BLOCK) {
-                let j1 = (j0 + BLOCK).min(self.cols);
-                for i in i0..i1 {
-                    for j in j0..j1 {
-                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
-                    }
-                }
+        for i0 in (0..self.rows).step_by(T::BLOCK) {
+            let i1 = (i0 + T::BLOCK).min(self.rows);
+            for j0 in (0..self.cols).step_by(T::BLOCK) {
+                let j1 = (j0 + T::BLOCK).min(self.cols);
+                T::transpose_tile(
+                    &self.data, self.cols, &mut out.data, self.rows, i0, i1, j0, j1,
+                );
             }
         }
     }
@@ -299,23 +372,21 @@ impl<T: Elem> Mat<T> {
     /// how the row range is partitioned.
     ///
     /// No zero-skip on `a`: `0.0 * NaN` must stay NaN (module docs).
+    /// The `(k-block × row)` inner update is one [`Elem::mul_add_panel`]
+    /// call — the SIMD dispatch point; its scalar table entry is this
+    /// loop's historical `for k { for j { out[j] += a*b } }` body.
     fn matmul_rows(&self, other: &Mat<T>, out_rows: &mut [T], i_lo: usize, i_hi: usize) {
         let nc = other.cols;
         debug_assert_eq!(out_rows.len(), (i_hi - i_lo) * nc);
-        for i0 in (i_lo..i_hi).step_by(BLOCK) {
-            let i1 = (i0 + BLOCK).min(i_hi);
-            for k0 in (0..self.cols).step_by(BLOCK) {
-                let k1 = (k0 + BLOCK).min(self.cols);
+        for i0 in (i_lo..i_hi).step_by(T::BLOCK) {
+            let i1 = (i0 + T::BLOCK).min(i_hi);
+            for k0 in (0..self.cols).step_by(T::BLOCK) {
+                let k1 = (k0 + T::BLOCK).min(self.cols);
+                let b_panel = &other.data[k0 * nc..k1 * nc];
                 for i in i0..i1 {
-                    let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+                    let a_col = &self.data[i * self.cols + k0..i * self.cols + k1];
                     let out_row = &mut out_rows[(i - i_lo) * nc..(i - i_lo + 1) * nc];
-                    for k in k0..k1 {
-                        let a = arow[k];
-                        let orow = &other.data[k * nc..(k + 1) * nc];
-                        for (o, &b) in out_row.iter_mut().zip(orow) {
-                            *o += a * b;
-                        }
-                    }
+                    T::mul_add_panel(out_row, a_col, b_panel);
                 }
             }
         }
@@ -374,18 +445,16 @@ impl<T: Elem> Mat<T> {
         out
     }
 
-    /// `out = W x` into a reused buffer (resized to `rows`). The fold is
-    /// the same ascending-k left fold `sum::<f64>()` lowered to — bits
-    /// did not move when this went generic.
+    /// `out = W x` into a reused buffer (resized to `rows`). Each output
+    /// element is the same ascending-k left fold `sum::<f64>()` lowered
+    /// to — bits did not move when this went generic, nor when the
+    /// dispatch landed: SIMD lanes hold distinct output *rows*, never a
+    /// split of one row's reduction.
     pub fn matvec_into(&self, x: &[T], out: &mut Vec<T>) {
         assert_eq!(self.cols, x.len());
         out.clear();
-        out.extend((0..self.rows).map(|i| {
-            self.data[i * self.cols..(i + 1) * self.cols]
-                .iter()
-                .zip(x)
-                .fold(T::ZERO, |acc, (a, b)| acc + *a * *b)
-        }));
+        out.resize(self.rows, T::ZERO);
+        T::matvec_fill(&self.data, self.cols, x, out);
     }
 
     pub fn matvec_t(&self, y: &[T]) -> Vec<T> {
@@ -406,12 +475,11 @@ impl<T: Elem> Mat<T> {
 
     fn matvec_t_write(&self, y: &[T], out: &mut [T]) {
         assert_eq!(self.rows, y.len());
-        for i in 0..self.rows {
-            let yi = y[i];
-            for j in 0..self.cols {
-                out[j] += self.at(i, j) * yi;
-            }
-        }
+        assert_eq!(self.cols, out.len());
+        // Wᵀy IS the panel kernel with a = y and the whole weight matrix
+        // as the row panel: out[j] += y[i] * w[i][j], i ascending per
+        // output element — exactly the historical loop's order.
+        T::mul_add_panel(out, y, &self.data);
     }
 
     pub fn sub(&self, other: &Mat<T>) -> Mat<T> {
@@ -943,6 +1011,58 @@ mod tests {
             for (x64, x32) in want64.data.iter().zip(&want32.data) {
                 let diff = (x64 - *x32 as f64).abs();
                 assert!(diff <= tol * (1.0 + x64.abs()), "{x64} vs {x32} (tol {tol})");
+            }
+        }
+    }
+
+    /// Satellite regression for the per-`Elem` tile edge: f32 must get
+    /// the larger edge (same 512 B row segment as f64's 64), and since
+    /// per-element k order is blocking-independent, the f32 kernels must
+    /// stay bit-identical to naive loops at shapes below / at /
+    /// straddling the NEW 128 edge — if `BLOCK` ever collapses back to a
+    /// shared constant or the edge moves bits, this trips.
+    #[test]
+    fn block_edge_is_per_elem_and_bit_free() {
+        assert_eq!(<f64 as Elem>::BLOCK, 64);
+        assert_eq!(<f32 as Elem>::BLOCK, 128);
+        assert_eq!(
+            <f64 as Elem>::BLOCK * std::mem::size_of::<f64>(),
+            <f32 as Elem>::BLOCK * std::mem::size_of::<f32>(),
+            "row segments should stay cache-size matched across widths"
+        );
+        let mut rng = Pcg64::new(46);
+        for (m, k, n) in [(5usize, 127usize, 3usize), (128, 128, 64), (129, 130, 131)] {
+            let a64: Mat<f64> = Mat::randn(m, k, &mut rng);
+            let b64: Mat<f64> = Mat::randn(k, n, &mut rng);
+            let a: Mat<f32> = Mat::from_f32(
+                m,
+                k,
+                &a64.data.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+            );
+            let b: Mat<f32> = Mat::from_f32(
+                k,
+                n,
+                &b64.data.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+            );
+            // naive f32 references (ascending-k, untiled)
+            let mut mm = Mat::<f32>::zeros(m, n);
+            for i in 0..m {
+                for kk in 0..k {
+                    let v = a.at(i, kk);
+                    for j in 0..n {
+                        mm.data[i * n + j] += v * b.data[kk * n + j];
+                    }
+                }
+            }
+            let got = a.matmul(&b);
+            for (x, y) in mm.data.iter().zip(&got.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "f32 matmul {m}x{k}x{n}");
+            }
+            let t = a.t();
+            for i in 0..m {
+                for j in 0..k {
+                    assert_eq!(t.at(j, i).to_bits(), a.at(i, j).to_bits());
+                }
             }
         }
     }

@@ -1,0 +1,536 @@
+//! Runtime-dispatched SIMD microkernels for the native tensor core
+//! (DESIGN.md §Native tensor core).
+//!
+//! Every kernel here is **bit-identical to the scalar loop by
+//! construction**: a vector lane always holds a *distinct output
+//! element* (output columns `j` for the matmul panel / `Wᵀy`, output
+//! rows `i` for `Wx`, a parameter index for the optimizer updates), so
+//! each element's accumulation stays the exact ascending-k left fold
+//! the serial code performs — only `elements-per-instruction` changes,
+//! never the per-element operation sequence. Two rules keep it that
+//! way:
+//!
+//! * **no FMA**: fused multiply-add contracts `a*b + c` into one
+//!   rounding and moves bits; the AVX2 kernels use separate
+//!   mul/add/sub/div/sqrt intrinsics only, each the same correctly
+//!   rounded IEEE operation its scalar counterpart lowers to;
+//! * **no reduction re-association**: per-element k-reductions are
+//!   never split across lanes (that would reorder the fold); lanes
+//!   parallelize *across* independent outputs instead. Remainder
+//!   elements that don't fill a vector run the scalar fold — same
+//!   arithmetic, fewer at a time.
+//!
+//! Dispatch is resolved **once** into a static kernel table
+//! ([`Ops`]): `REPRO_SIMD=off` forces the portable scalar table,
+//! anything else (`auto`, unset) takes the best tier
+//! `is_x86_feature_detected!` reports. Resolution caches into an
+//! atomic — no per-call feature detection, no allocation, so the
+//! zero-per-step-heap-growth property (`rust/tests/alloc_steady.rs`)
+//! holds with the vector path active. [`force`] pins the level for
+//! tests and benches that need both paths in one process; since both
+//! tables produce identical bits, a concurrent reader only ever
+//! observes a differently-scheduled version of the same result.
+//!
+//! The portable table is not naive either: kernels are written in
+//! fixed-width chunks (local accumulator arrays the autovectorizer can
+//! keep in registers) — chunking across *independent outputs* is
+//! bit-free for the same lane-layout reason.
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::Elem;
+
+/// Vector tier a kernel table targets. `Avx2` exists on every build
+/// (so `Level` round-trips through configs/logs portably) but is only
+/// ever *selected* on x86-64 with runtime AVX2 support.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Portable fixed-width-chunk kernels (also the `REPRO_SIMD=off`
+    /// reference path).
+    Scalar,
+    /// 256-bit kernels: f64x4 / f32x8, mul+add only.
+    Avx2,
+}
+
+impl Level {
+    /// Stable lowercase name (`repro info`, bench row labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The kernel table: one entry per microkernel the tensor core and the
+/// optimizer call through [`ops`]. Plain function pointers — built as
+/// `static`s below, so selecting a table is pointer assignment, never
+/// allocation.
+pub struct Ops {
+    /// Tier this table implements (for `repro info` / bench labels).
+    pub level: Level,
+    /// `out[j] += a[k] * b[k*out.len() + j]`, k ascending — the
+    /// register-tiled panel behind both the matmul inner loop and
+    /// `Wᵀy`.
+    pub mul_add_panel_f64: fn(&mut [f64], &[f64], &[f64]),
+    /// f32 instantiation of [`Ops::mul_add_panel_f64`].
+    pub mul_add_panel_f32: fn(&mut [f32], &[f32], &[f32]),
+    /// `out[i] = Σ_k w[i*cols+k] * x[k]` (fold from zero, k ascending).
+    pub matvec_f64: fn(&[f64], usize, &[f64], &mut [f64]),
+    /// f32 instantiation of [`Ops::matvec_f64`].
+    pub matvec_f32: fn(&[f32], usize, &[f32], &mut [f32]),
+    /// `dst[j*dcols+i] = src[i*scols+j]` over the `(i0..i1, j0..j1)`
+    /// tile — pure permutation.
+    pub transpose_f64: fn(&[f64], usize, &mut [f64], usize, usize, usize, usize, usize),
+    /// f32 instantiation of [`Ops::transpose_f64`].
+    pub transpose_f32: fn(&[f32], usize, &mut [f32], usize, usize, usize, usize, usize),
+    /// AdamW elementwise update (see [`adamw_f64`] for the formula).
+    #[allow(clippy::type_complexity)]
+    pub adamw_f64:
+        fn(&mut [f64], &[f64], &mut [f64], &mut [f64], f64, f64, f64, f64, f64, f64, f64),
+    /// `m = β m + (1-β) g` elementwise.
+    pub momentum_f64: fn(&mut [f64], &[f64], f64),
+    /// Fused momentum-SGD step (see [`sgd_f64`]).
+    pub sgd_f64: fn(&mut [f64], &mut [f64], &[f64], f64, f64, f64),
+    /// `p -= ρ o + (lr·wd) p` elementwise (muon / spectron retraction).
+    pub decayed_step_f64: fn(&mut [f64], &[f64], f64, f64),
+}
+
+const CODE_UNSET: u8 = 0;
+const CODE_SCALAR: u8 = 1;
+const CODE_AVX2: u8 = 2;
+
+/// Test/bench override; [`CODE_UNSET`] defers to [`RESOLVED`].
+static FORCED: AtomicU8 = AtomicU8::new(CODE_UNSET);
+/// Env + CPU detection, computed once on first kernel call.
+static RESOLVED: AtomicU8 = AtomicU8::new(CODE_UNSET);
+
+fn code_of(level: Level) -> u8 {
+    match level {
+        Level::Scalar => CODE_SCALAR,
+        Level::Avx2 => CODE_AVX2,
+    }
+}
+
+/// Highest tier this CPU supports, ignoring `REPRO_SIMD`.
+pub fn detected() -> Level {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Level::Avx2;
+        }
+    }
+    Level::Scalar
+}
+
+/// Resolve env + detection into [`RESOLVED`]. `REPRO_SIMD=off` (also
+/// `0` / `scalar`) forces the portable table; `auto`, unset, or any
+/// other value defers to [`detected`] — an unknown value can only make
+/// the build *slower*, never wrong, so lenience is safe here (unlike
+/// `REPRO_THREADS`, where it would change the partition).
+fn resolve() -> u8 {
+    let level = match std::env::var("REPRO_SIMD").ok().as_deref() {
+        Some("off") | Some("0") | Some("scalar") => Level::Scalar,
+        _ => detected(),
+    };
+    let code = code_of(level);
+    RESOLVED.store(code, Ordering::Relaxed);
+    code
+}
+
+#[inline]
+fn active_code() -> u8 {
+    let forced = FORCED.load(Ordering::Relaxed);
+    if forced != CODE_UNSET {
+        return forced;
+    }
+    let resolved = RESOLVED.load(Ordering::Relaxed);
+    if resolved != CODE_UNSET {
+        resolved
+    } else {
+        resolve()
+    }
+}
+
+fn table_for(code: u8) -> &'static Ops {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if code == CODE_AVX2 {
+            return &AVX2_OPS;
+        }
+    }
+    let _ = code;
+    &SCALAR_OPS
+}
+
+/// The active kernel table. First call resolves `REPRO_SIMD` + CPU
+/// detection; afterwards this is one relaxed atomic load.
+#[inline]
+pub fn ops() -> &'static Ops {
+    table_for(active_code())
+}
+
+/// Tier the next kernel call will use.
+pub fn active() -> Level {
+    table_for(active_code()).level
+}
+
+/// Pin dispatch to `level` (`None` clears back to the env-resolved
+/// tier). Test/bench hook — production code never calls it. Safe at
+/// any time because every table computes identical bits; flipping
+/// mid-run only changes speed.
+pub fn force(level: Option<Level>) {
+    FORCED.store(level.map(code_of).unwrap_or(CODE_UNSET), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// portable table (fixed-width chunks; also the REPRO_SIMD=off reference)
+// ---------------------------------------------------------------------------
+
+/// Chunk width for the portable kernels: 8 elements keeps the local
+/// accumulator array register-resident in both widths for typical
+/// autovectorizer targets (2×f64x2 SSE2 up to f32x8 AVX).
+const PORT_W: usize = 8;
+
+/// Portable `out[j] += Σ-free fold over k of a[k] * b[k*nc + j]`:
+/// j-chunks of [`PORT_W`] are loaded into a local accumulator once,
+/// every k folded in ascending order, stored once. Per element this is
+/// exactly the naive `for k { for j { out[j] += a[k]*b[k][j] } }`
+/// sequence — chunking across j never touches a single element's
+/// k-order.
+fn mul_add_panel_port<T: Elem>(out: &mut [T], a: &[T], b: &[T]) {
+    let nc = out.len();
+    debug_assert_eq!(b.len(), a.len() * nc);
+    let mut j = 0;
+    while j + PORT_W <= nc {
+        let mut acc = [T::ZERO; PORT_W];
+        acc.copy_from_slice(&out[j..j + PORT_W]);
+        for (k, &ak) in a.iter().enumerate() {
+            let brow = &b[k * nc + j..k * nc + j + PORT_W];
+            for l in 0..PORT_W {
+                acc[l] = acc[l] + ak * brow[l];
+            }
+        }
+        out[j..j + PORT_W].copy_from_slice(&acc);
+        j += PORT_W;
+    }
+    // remainder lanes: scalar fold, same ascending-k order
+    for jj in j..nc {
+        let mut acc = out[jj];
+        for (k, &ak) in a.iter().enumerate() {
+            acc = acc + ak * b[k * nc + jj];
+        }
+        out[jj] = acc;
+    }
+}
+
+/// Portable `out[i] = fold(0, acc + w[i][k] * x[k])`, k ascending — the
+/// exact fold `Mat::matvec_into` has always performed.
+fn matvec_port<T: Elem>(w: &[T], cols: usize, x: &[T], out: &mut [T]) {
+    debug_assert_eq!(x.len(), cols);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = w[i * cols..(i + 1) * cols]
+            .iter()
+            .zip(x)
+            .fold(T::ZERO, |acc, (a, b)| acc + *a * *b);
+    }
+}
+
+/// Portable tile transpose (pure permutation — any visit order is
+/// bit-free; this one matches the pre-SIMD blocked loop).
+#[allow(clippy::too_many_arguments)]
+fn transpose_port<T: Elem>(
+    src: &[T],
+    scols: usize,
+    dst: &mut [T],
+    dcols: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    for i in i0..i1 {
+        for j in j0..j1 {
+            dst[j * dcols + i] = src[i * scols + j];
+        }
+    }
+}
+
+/// Portable AdamW update — the exact loop `optim::adamw_range` ran
+/// before dispatch, with the constants passed in:
+/// `m = β₁m + (1-β₁)g; v = β₂v + ((1-β₂)g)g;
+///  p -= lr·(m/bc₁ / (√(v/bc₂) + ε) + wd·p)`.
+#[allow(clippy::too_many_arguments)]
+fn adamw_port(
+    p: &mut [f64],
+    g: &[f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    b1: f64,
+    b2: f64,
+    eps: f64,
+    bc1: f64,
+    bc2: f64,
+    lr: f64,
+    wd: f64,
+) {
+    for i in 0..p.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * p[i]);
+    }
+}
+
+/// Portable `m = β m + (1-β) g`.
+fn momentum_port(m: &mut [f64], g: &[f64], beta: f64) {
+    for (mi, &gi) in m.iter_mut().zip(g) {
+        *mi = beta * *mi + (1.0 - beta) * gi;
+    }
+}
+
+/// Portable fused momentum-SGD:
+/// `m = β m + (1-β) g; p -= lr·m + (lr·wdd)·p`.
+fn sgd_port(p: &mut [f64], m: &mut [f64], g: &[f64], beta: f64, lr: f64, wdd: f64) {
+    for i in 0..p.len() {
+        m[i] = beta * m[i] + (1.0 - beta) * g[i];
+        p[i] -= lr * m[i] + lr * wdd * p[i];
+    }
+}
+
+/// Portable `p -= ρ·o + lrwd·p` (muon step / spectron retraction;
+/// `lrwd` is the caller's `lr * wd` product — same value the inline
+/// loops computed per element).
+fn decayed_step_port(p: &mut [f64], o: &[f64], rho: f64, lrwd: f64) {
+    for (pv, &ov) in p.iter_mut().zip(o) {
+        *pv -= rho * ov + lrwd * *pv;
+    }
+}
+
+static SCALAR_OPS: Ops = Ops {
+    level: Level::Scalar,
+    mul_add_panel_f64: mul_add_panel_port::<f64>,
+    mul_add_panel_f32: mul_add_panel_port::<f32>,
+    matvec_f64: matvec_port::<f64>,
+    matvec_f32: matvec_port::<f32>,
+    transpose_f64: transpose_port::<f64>,
+    transpose_f32: transpose_port::<f32>,
+    adamw_f64: adamw_port,
+    momentum_f64: momentum_port,
+    sgd_f64: sgd_port,
+    decayed_step_f64: decayed_step_port,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_OPS: Ops = Ops {
+    level: Level::Avx2,
+    mul_add_panel_f64: x86::mul_add_panel_f64,
+    mul_add_panel_f32: x86::mul_add_panel_f32,
+    matvec_f64: x86::matvec_f64,
+    matvec_f32: x86::matvec_f32,
+    transpose_f64: x86::transpose_f64,
+    transpose_f32: x86::transpose_f32,
+    adamw_f64: x86::adamw_f64,
+    momentum_f64: x86::momentum_f64,
+    sgd_f64: x86::sgd_f64,
+    decayed_step_f64: x86::decayed_step_f64,
+};
+
+// ---------------------------------------------------------------------------
+// dispatchers the optimizer calls (the Mat kernels go through Elem hooks)
+// ---------------------------------------------------------------------------
+
+/// AdamW elementwise update through the active table (bias corrections
+/// `bc1`/`bc2` precomputed by the caller, as before).
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_f64(
+    p: &mut [f64],
+    g: &[f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    b1: f64,
+    b2: f64,
+    eps: f64,
+    bc1: f64,
+    bc2: f64,
+    lr: f64,
+    wd: f64,
+) {
+    (ops().adamw_f64)(p, g, m, v, b1, b2, eps, bc1, bc2, lr, wd)
+}
+
+/// `m = β m + (1-β) g` through the active table.
+pub fn momentum_f64(m: &mut [f64], g: &[f64], beta: f64) {
+    (ops().momentum_f64)(m, g, beta)
+}
+
+/// Fused momentum-SGD step through the active table.
+pub fn sgd_f64(p: &mut [f64], m: &mut [f64], g: &[f64], beta: f64, lr: f64, wdd: f64) {
+    (ops().sgd_f64)(p, m, g, beta, lr, wdd)
+}
+
+/// `p -= ρ·o + lrwd·p` through the active table.
+pub fn decayed_step_f64(p: &mut [f64], o: &[f64], rho: f64, lrwd: f64) {
+    (ops().decayed_step_f64)(p, o, rho, lrwd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn vals(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// The portable panel must reproduce the naive per-element loop
+    /// exactly (it IS the REPRO_SIMD=off reference, so this pins the
+    /// refactor to the pre-dispatch arithmetic), including remainder
+    /// lanes and NaN/zero operands.
+    #[test]
+    fn portable_panel_bit_matches_naive_loop() {
+        let mut rng = Pcg64::new(91);
+        for (kb, nc) in [(1usize, 1usize), (3, 7), (5, 8), (4, 17), (9, 33)] {
+            let a = vals(&mut rng, kb);
+            let b = vals(&mut rng, kb * nc);
+            let init = vals(&mut rng, nc);
+            let mut naive = init.clone();
+            for k in 0..kb {
+                for j in 0..nc {
+                    naive[j] += a[k] * b[k * nc + j];
+                }
+            }
+            let mut got = init.clone();
+            mul_add_panel_port(&mut got, &a, &b);
+            for (w, g) in naive.iter().zip(&got) {
+                assert_eq!(w.to_bits(), g.to_bits(), "panel {kb}x{nc}");
+            }
+        }
+        // 0.0 * NaN must stay NaN through the chunked path too
+        let mut out = vec![0.0f64; 9];
+        let a = [0.0f64];
+        let b = [f64::NAN; 9];
+        mul_add_panel_port(&mut out, &a, &b);
+        assert!(out.iter().all(|v| v.is_nan()), "zero-skip crept in");
+    }
+
+    /// Every AVX2 table entry must be bit-identical to its portable
+    /// counterpart on shapes exercising full tiles, partial vectors,
+    /// and scalar remainders. Skips (trivially passes) on hardware
+    /// without AVX2 — the proptests in `rust/tests/proptests.rs` cover
+    /// the dispatch-level equivalence there.
+    #[test]
+    fn avx2_table_bit_matches_portable_table() {
+        if detected() != Level::Avx2 {
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            let mut rng = Pcg64::new(92);
+            for (kb, nc) in [(1usize, 1usize), (2, 3), (5, 8), (7, 19), (6, 35), (9, 64)] {
+                let a = vals(&mut rng, kb);
+                let b = vals(&mut rng, kb * nc);
+                let init = vals(&mut rng, nc);
+                let mut want = init.clone();
+                mul_add_panel_port(&mut want, &a, &b);
+                let mut got = init.clone();
+                x86::mul_add_panel_f64(&mut got, &a, &b);
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(w.to_bits(), g.to_bits(), "panel f64 {kb}x{nc}");
+                }
+                let a32: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+                let b32: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+                let init32: Vec<f32> = init.iter().map(|&x| x as f32).collect();
+                let mut want32 = init32.clone();
+                mul_add_panel_port(&mut want32, &a32, &b32);
+                let mut got32 = init32;
+                x86::mul_add_panel_f32(&mut got32, &a32, &b32);
+                for (w, g) in want32.iter().zip(&got32) {
+                    assert_eq!(w.to_bits(), g.to_bits(), "panel f32 {kb}x{nc}");
+                }
+            }
+            for (rows, cols) in [(1usize, 1usize), (4, 5), (5, 3), (9, 16), (13, 31)] {
+                let w = vals(&mut rng, rows * cols);
+                let x = vals(&mut rng, cols);
+                let mut want = vec![0.0f64; rows];
+                matvec_port(&w, cols, &x, &mut want);
+                let mut got = vec![0.0f64; rows];
+                x86::matvec_f64(&w, cols, &x, &mut got);
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "matvec f64 {rows}x{cols}");
+                }
+                let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+                let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                let mut want32 = vec![0.0f32; rows];
+                matvec_port(&w32, cols, &x32, &mut want32);
+                let mut got32 = vec![0.0f32; rows];
+                x86::matvec_f32(&w32, cols, &x32, &mut got32);
+                for (a, b) in want32.iter().zip(&got32) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "matvec f32 {rows}x{cols}");
+                }
+                // transpose: full tile at once
+                let mut wantt = vec![0.0f64; rows * cols];
+                transpose_port(&w, cols, &mut wantt, rows, 0, rows, 0, cols);
+                let mut gott = vec![0.0f64; rows * cols];
+                x86::transpose_f64(&w, cols, &mut gott, rows, 0, rows, 0, cols);
+                assert_eq!(wantt, gott, "transpose f64 {rows}x{cols}");
+                let mut wantt32 = vec![0.0f32; rows * cols];
+                transpose_port(&w32, cols, &mut wantt32, rows, 0, rows, 0, cols);
+                let mut gott32 = vec![0.0f32; rows * cols];
+                x86::transpose_f32(&w32, cols, &mut gott32, rows, 0, rows, 0, cols);
+                assert_eq!(wantt32, gott32, "transpose f32 {rows}x{cols}");
+            }
+            // optimizer updates, remainder-heavy length
+            for n in [1usize, 4, 7, 11, 32, 37] {
+                let g = vals(&mut rng, n);
+                let p0 = vals(&mut rng, n);
+                let m0 = vals(&mut rng, n);
+                let v0: Vec<f64> = vals(&mut rng, n).iter().map(|v| v.abs()).collect();
+                let (mut p1, mut m1, mut v1) = (p0.clone(), m0.clone(), v0.clone());
+                adamw_port(&mut p1, &g, &mut m1, &mut v1, 0.9, 0.95, 1e-8, 0.3, 0.6, 0.01, 0.1);
+                let (mut p2, mut m2, mut v2) = (p0.clone(), m0.clone(), v0.clone());
+                x86::adamw_f64(&mut p2, &g, &mut m2, &mut v2, 0.9, 0.95, 1e-8, 0.3, 0.6, 0.01, 0.1);
+                for (a, b) in p1.iter().zip(&p2).chain(m1.iter().zip(&m2)).chain(v1.iter().zip(&v2)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "adamw n={n}");
+                }
+                let (mut ma, mut mb) = (m0.clone(), m0.clone());
+                momentum_port(&mut ma, &g, 0.95);
+                x86::momentum_f64(&mut mb, &g, 0.95);
+                for (a, b) in ma.iter().zip(&mb) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "momentum n={n}");
+                }
+                let (mut pa, mut pma) = (p0.clone(), m0.clone());
+                sgd_port(&mut pa, &mut pma, &g, 0.95, 0.02, 0.1);
+                let (mut pb, mut pmb) = (p0.clone(), m0.clone());
+                x86::sgd_f64(&mut pb, &mut pmb, &g, 0.95, 0.02, 0.1);
+                for (a, b) in pa.iter().zip(&pb).chain(pma.iter().zip(&pmb)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "sgd n={n}");
+                }
+                let (mut da, mut db) = (p0.clone(), p0.clone());
+                decayed_step_port(&mut da, &g, 0.015, 0.002);
+                x86::decayed_step_f64(&mut db, &g, 0.015, 0.002);
+                for (a, b) in da.iter().zip(&db) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "decayed_step n={n}");
+                }
+            }
+        }
+    }
+
+    /// `force` pins the table and `None` restores env resolution; the
+    /// env itself is not mutated here (threaded-harness convention).
+    #[test]
+    fn force_overrides_and_clears() {
+        let resolved = active();
+        force(Some(Level::Scalar));
+        assert_eq!(active(), Level::Scalar);
+        assert_eq!(ops().level, Level::Scalar);
+        force(Some(detected()));
+        assert_eq!(active(), detected());
+        force(None);
+        assert_eq!(active(), resolved);
+    }
+}

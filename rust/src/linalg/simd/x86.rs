@@ -1,0 +1,593 @@
+//! AVX2 microkernels (f64x4 / f32x8) behind the dispatch table in
+//! [`super`] — see the module docs there for the lane-layout argument
+//! that makes these bit-identical to the portable table.
+//!
+//! **No FMA anywhere in this file**: every multiply-accumulate is a
+//! separate `_mm256_mul_*` + `_mm256_add_*` pair (Rust does not enable
+//! float contraction, so LLVM will not fuse them behind our back), and
+//! `sqrt`/`div` are the correctly rounded IEEE instructions — each
+//! lane performs exactly the scalar operation sequence.
+//!
+//! Safety: every `pub(super)` wrapper is only ever installed in
+//! [`super::Ops`] after `is_x86_feature_detected!("avx2")` succeeded,
+//! which is what makes the inner `#[target_feature]` calls sound.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+/// f64 lanes per 256-bit vector.
+const L64: usize = 4;
+/// f32 lanes per 256-bit vector.
+const L32: usize = 8;
+
+// ---------------------------------------------------------------------------
+// mul_add_panel: out[j] += a[k] * b[k*nc + j], k ascending
+// ---------------------------------------------------------------------------
+
+pub(super) fn mul_add_panel_f64(out: &mut [f64], a: &[f64], b: &[f64]) {
+    debug_assert_eq!(b.len(), a.len() * out.len());
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { mul_add_panel_f64_avx2(out, a, b) }
+}
+
+/// Register-tiled panel: a 4-vector (16 element) j-tile of `out` is
+/// loaded into accumulators once, every k is folded in ascending
+/// order, and the tile stores once — per element the exact add
+/// sequence of the scalar loop (register vs memory round-trips do not
+/// change an IEEE value).
+#[target_feature(enable = "avx2")]
+unsafe fn mul_add_panel_f64_avx2(out: &mut [f64], a: &[f64], b: &[f64]) {
+    let nc = out.len();
+    let kb = a.len();
+    let op = out.as_mut_ptr();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut j = 0usize;
+    while j + 4 * L64 <= nc {
+        let o = op.add(j);
+        let mut acc0 = _mm256_loadu_pd(o);
+        let mut acc1 = _mm256_loadu_pd(o.add(L64));
+        let mut acc2 = _mm256_loadu_pd(o.add(2 * L64));
+        let mut acc3 = _mm256_loadu_pd(o.add(3 * L64));
+        for k in 0..kb {
+            let av = _mm256_set1_pd(*ap.add(k));
+            let brow = bp.add(k * nc + j);
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(av, _mm256_loadu_pd(brow)));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(av, _mm256_loadu_pd(brow.add(L64))));
+            acc2 = _mm256_add_pd(acc2, _mm256_mul_pd(av, _mm256_loadu_pd(brow.add(2 * L64))));
+            acc3 = _mm256_add_pd(acc3, _mm256_mul_pd(av, _mm256_loadu_pd(brow.add(3 * L64))));
+        }
+        _mm256_storeu_pd(o, acc0);
+        _mm256_storeu_pd(o.add(L64), acc1);
+        _mm256_storeu_pd(o.add(2 * L64), acc2);
+        _mm256_storeu_pd(o.add(3 * L64), acc3);
+        j += 4 * L64;
+    }
+    while j + L64 <= nc {
+        let o = op.add(j);
+        let mut acc = _mm256_loadu_pd(o);
+        for k in 0..kb {
+            let av = _mm256_set1_pd(*ap.add(k));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(k * nc + j))));
+        }
+        _mm256_storeu_pd(o, acc);
+        j += L64;
+    }
+    // remainder lanes: scalar fold, same ascending-k order
+    while j < nc {
+        let mut acc = *op.add(j);
+        for k in 0..kb {
+            acc += *ap.add(k) * *bp.add(k * nc + j);
+        }
+        *op.add(j) = acc;
+        j += 1;
+    }
+}
+
+pub(super) fn mul_add_panel_f32(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(b.len(), a.len() * out.len());
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { mul_add_panel_f32_avx2(out, a, b) }
+}
+
+/// f32x8 instantiation of the register-tiled panel (32-element j-tile).
+#[target_feature(enable = "avx2")]
+unsafe fn mul_add_panel_f32_avx2(out: &mut [f32], a: &[f32], b: &[f32]) {
+    let nc = out.len();
+    let kb = a.len();
+    let op = out.as_mut_ptr();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut j = 0usize;
+    while j + 4 * L32 <= nc {
+        let o = op.add(j);
+        let mut acc0 = _mm256_loadu_ps(o);
+        let mut acc1 = _mm256_loadu_ps(o.add(L32));
+        let mut acc2 = _mm256_loadu_ps(o.add(2 * L32));
+        let mut acc3 = _mm256_loadu_ps(o.add(3 * L32));
+        for k in 0..kb {
+            let av = _mm256_set1_ps(*ap.add(k));
+            let brow = bp.add(k * nc + j);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(av, _mm256_loadu_ps(brow)));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(av, _mm256_loadu_ps(brow.add(L32))));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(av, _mm256_loadu_ps(brow.add(2 * L32))));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(av, _mm256_loadu_ps(brow.add(3 * L32))));
+        }
+        _mm256_storeu_ps(o, acc0);
+        _mm256_storeu_ps(o.add(L32), acc1);
+        _mm256_storeu_ps(o.add(2 * L32), acc2);
+        _mm256_storeu_ps(o.add(3 * L32), acc3);
+        j += 4 * L32;
+    }
+    while j + L32 <= nc {
+        let o = op.add(j);
+        let mut acc = _mm256_loadu_ps(o);
+        for k in 0..kb {
+            let av = _mm256_set1_ps(*ap.add(k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(k * nc + j))));
+        }
+        _mm256_storeu_ps(o, acc);
+        j += L32;
+    }
+    while j < nc {
+        let mut acc = *op.add(j);
+        for k in 0..kb {
+            acc += *ap.add(k) * *bp.add(k * nc + j);
+        }
+        *op.add(j) = acc;
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matvec: out[i] = fold(0, acc + w[i][k] * x[k]), k ascending
+// ---------------------------------------------------------------------------
+
+pub(super) fn matvec_f64(w: &[f64], cols: usize, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(w.len(), out.len() * cols);
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { matvec_f64_avx2(w, cols, x, out) }
+}
+
+/// Lane = output row: four rows' folds run in the four lanes of one
+/// accumulator, fed by a strided gather of `w[·][k]` and a broadcast
+/// of `x[k]` — each lane is the row's ascending-k scalar fold from
+/// zero, untouched. The row-reduction itself is never split across
+/// lanes (that would re-associate the sum).
+#[target_feature(enable = "avx2")]
+unsafe fn matvec_f64_avx2(w: &[f64], cols: usize, x: &[f64], out: &mut [f64]) {
+    let rows = out.len();
+    let wp = w.as_ptr();
+    let xp = x.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + L64 <= rows {
+        let r0 = wp.add(i * cols);
+        let r1 = r0.add(cols);
+        let r2 = r1.add(cols);
+        let r3 = r2.add(cols);
+        let mut acc = _mm256_setzero_pd();
+        for k in 0..cols {
+            let wv = _mm256_set_pd(*r3.add(k), *r2.add(k), *r1.add(k), *r0.add(k));
+            let xv = _mm256_set1_pd(*xp.add(k));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(wv, xv));
+        }
+        _mm256_storeu_pd(op.add(i), acc);
+        i += L64;
+    }
+    while i < rows {
+        let row = wp.add(i * cols);
+        let mut acc = 0.0f64;
+        for k in 0..cols {
+            acc += *row.add(k) * *xp.add(k);
+        }
+        *op.add(i) = acc;
+        i += 1;
+    }
+}
+
+pub(super) fn matvec_f32(w: &[f32], cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(w.len(), out.len() * cols);
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { matvec_f32_avx2(w, cols, x, out) }
+}
+
+/// f32x8 instantiation: eight rows per accumulator.
+#[target_feature(enable = "avx2")]
+unsafe fn matvec_f32_avx2(w: &[f32], cols: usize, x: &[f32], out: &mut [f32]) {
+    let rows = out.len();
+    let wp = w.as_ptr();
+    let xp = x.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + L32 <= rows {
+        let r0 = wp.add(i * cols);
+        let r1 = r0.add(cols);
+        let r2 = r1.add(cols);
+        let r3 = r2.add(cols);
+        let r4 = r3.add(cols);
+        let r5 = r4.add(cols);
+        let r6 = r5.add(cols);
+        let r7 = r6.add(cols);
+        let mut acc = _mm256_setzero_ps();
+        for k in 0..cols {
+            let wv = _mm256_set_ps(
+                *r7.add(k),
+                *r6.add(k),
+                *r5.add(k),
+                *r4.add(k),
+                *r3.add(k),
+                *r2.add(k),
+                *r1.add(k),
+                *r0.add(k),
+            );
+            let xv = _mm256_set1_ps(*xp.add(k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+        }
+        _mm256_storeu_ps(op.add(i), acc);
+        i += L32;
+    }
+    while i < rows {
+        let row = wp.add(i * cols);
+        let mut acc = 0.0f32;
+        for k in 0..cols {
+            acc += *row.add(k) * *xp.add(k);
+        }
+        *op.add(i) = acc;
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transpose tile: dst[j*dcols + i] = src[i*scols + j] (pure permutation)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+pub(super) fn transpose_f64(
+    src: &[f64],
+    scols: usize,
+    dst: &mut [f64],
+    dcols: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    // SAFETY: table entry installed only after AVX2 detection; tile
+    // bounds are the caller's (checked) blocked-loop bounds
+    unsafe { transpose_f64_avx2(src, scols, dst, dcols, i0, i1, j0, j1) }
+}
+
+/// 4×4 in-register sub-blocks inside the caller's tile; a permutation
+/// moves no bits regardless of visit order.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn transpose_f64_avx2(
+    src: &[f64],
+    scols: usize,
+    dst: &mut [f64],
+    dcols: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    debug_assert!(i1 * scols <= src.len() || i0 == i1);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut i = i0;
+    while i + 4 <= i1 {
+        let mut j = j0;
+        while j + 4 <= j1 {
+            t4x4_f64(sp.add(i * scols + j), scols, dp.add(j * dcols + i), dcols);
+            j += 4;
+        }
+        while j < j1 {
+            for ii in i..i + 4 {
+                *dp.add(j * dcols + ii) = *sp.add(ii * scols + j);
+            }
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < i1 {
+        for j in j0..j1 {
+            *dp.add(j * dcols + i) = *sp.add(i * scols + j);
+        }
+        i += 1;
+    }
+}
+
+/// Transpose one 4×4 f64 block: rows a,b,c,d → columns.
+#[target_feature(enable = "avx2")]
+unsafe fn t4x4_f64(src: *const f64, scols: usize, dst: *mut f64, dcols: usize) {
+    let ra = _mm256_loadu_pd(src); // a0 a1 a2 a3
+    let rb = _mm256_loadu_pd(src.add(scols)); // b0 b1 b2 b3
+    let rc = _mm256_loadu_pd(src.add(2 * scols));
+    let rd = _mm256_loadu_pd(src.add(3 * scols));
+    let t0 = _mm256_unpacklo_pd(ra, rb); // a0 b0 a2 b2
+    let t1 = _mm256_unpackhi_pd(ra, rb); // a1 b1 a3 b3
+    let t2 = _mm256_unpacklo_pd(rc, rd); // c0 d0 c2 d2
+    let t3 = _mm256_unpackhi_pd(rc, rd); // c1 d1 c3 d3
+    _mm256_storeu_pd(dst, _mm256_permute2f128_pd::<0x20>(t0, t2)); // a0 b0 c0 d0
+    _mm256_storeu_pd(dst.add(dcols), _mm256_permute2f128_pd::<0x20>(t1, t3));
+    _mm256_storeu_pd(dst.add(2 * dcols), _mm256_permute2f128_pd::<0x31>(t0, t2));
+    _mm256_storeu_pd(dst.add(3 * dcols), _mm256_permute2f128_pd::<0x31>(t1, t3));
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(super) fn transpose_f32(
+    src: &[f32],
+    scols: usize,
+    dst: &mut [f32],
+    dcols: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { transpose_f32_avx2(src, scols, dst, dcols, i0, i1, j0, j1) }
+}
+
+/// 8×8 in-register sub-blocks inside the caller's tile.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn transpose_f32_avx2(
+    src: &[f32],
+    scols: usize,
+    dst: &mut [f32],
+    dcols: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut i = i0;
+    while i + 8 <= i1 {
+        let mut j = j0;
+        while j + 8 <= j1 {
+            t8x8_f32(sp.add(i * scols + j), scols, dp.add(j * dcols + i), dcols);
+            j += 8;
+        }
+        while j < j1 {
+            for ii in i..i + 8 {
+                *dp.add(j * dcols + ii) = *sp.add(ii * scols + j);
+            }
+            j += 1;
+        }
+        i += 8;
+    }
+    while i < i1 {
+        for j in j0..j1 {
+            *dp.add(j * dcols + i) = *sp.add(i * scols + j);
+        }
+        i += 1;
+    }
+}
+
+/// Transpose one 8×8 f32 block (rows a..h) via the standard
+/// unpack / shuffle / permute2f128 ladder.
+#[target_feature(enable = "avx2")]
+unsafe fn t8x8_f32(src: *const f32, scols: usize, dst: *mut f32, dcols: usize) {
+    let ra = _mm256_loadu_ps(src);
+    let rb = _mm256_loadu_ps(src.add(scols));
+    let rc = _mm256_loadu_ps(src.add(2 * scols));
+    let rd = _mm256_loadu_ps(src.add(3 * scols));
+    let re = _mm256_loadu_ps(src.add(4 * scols));
+    let rf = _mm256_loadu_ps(src.add(5 * scols));
+    let rg = _mm256_loadu_ps(src.add(6 * scols));
+    let rh = _mm256_loadu_ps(src.add(7 * scols));
+    let t0 = _mm256_unpacklo_ps(ra, rb); // a0 b0 a1 b1 | a4 b4 a5 b5
+    let t1 = _mm256_unpackhi_ps(ra, rb); // a2 b2 a3 b3 | a6 b6 a7 b7
+    let t2 = _mm256_unpacklo_ps(rc, rd);
+    let t3 = _mm256_unpackhi_ps(rc, rd);
+    let t4 = _mm256_unpacklo_ps(re, rf);
+    let t5 = _mm256_unpackhi_ps(re, rf);
+    let t6 = _mm256_unpacklo_ps(rg, rh);
+    let t7 = _mm256_unpackhi_ps(rg, rh);
+    let v0 = _mm256_shuffle_ps::<0x44>(t0, t2); // a0 b0 c0 d0 | a4 b4 c4 d4
+    let v1 = _mm256_shuffle_ps::<0xEE>(t0, t2); // a1 b1 c1 d1 | a5 b5 c5 d5
+    let v2 = _mm256_shuffle_ps::<0x44>(t1, t3); // a2 b2 c2 d2 | a6 b6 c6 d6
+    let v3 = _mm256_shuffle_ps::<0xEE>(t1, t3); // a3 b3 c3 d3 | a7 b7 c7 d7
+    let v4 = _mm256_shuffle_ps::<0x44>(t4, t6); // e0 f0 g0 h0 | e4 f4 g4 h4
+    let v5 = _mm256_shuffle_ps::<0xEE>(t4, t6);
+    let v6 = _mm256_shuffle_ps::<0x44>(t5, t7);
+    let v7 = _mm256_shuffle_ps::<0xEE>(t5, t7);
+    _mm256_storeu_ps(dst, _mm256_permute2f128_ps::<0x20>(v0, v4));
+    _mm256_storeu_ps(dst.add(dcols), _mm256_permute2f128_ps::<0x20>(v1, v5));
+    _mm256_storeu_ps(dst.add(2 * dcols), _mm256_permute2f128_ps::<0x20>(v2, v6));
+    _mm256_storeu_ps(dst.add(3 * dcols), _mm256_permute2f128_ps::<0x20>(v3, v7));
+    _mm256_storeu_ps(dst.add(4 * dcols), _mm256_permute2f128_ps::<0x31>(v0, v4));
+    _mm256_storeu_ps(dst.add(5 * dcols), _mm256_permute2f128_ps::<0x31>(v1, v5));
+    _mm256_storeu_ps(dst.add(6 * dcols), _mm256_permute2f128_ps::<0x31>(v2, v6));
+    _mm256_storeu_ps(dst.add(7 * dcols), _mm256_permute2f128_ps::<0x31>(v3, v7));
+}
+
+// ---------------------------------------------------------------------------
+// optimizer updates (lane = parameter index; div/sqrt are IEEE-exact)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+pub(super) fn adamw_f64(
+    p: &mut [f64],
+    g: &[f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    b1: f64,
+    b2: f64,
+    eps: f64,
+    bc1: f64,
+    bc2: f64,
+    lr: f64,
+    wd: f64,
+) {
+    debug_assert!(g.len() == p.len() && m.len() == p.len() && v.len() == p.len());
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { adamw_f64_avx2(p, g, m, v, b1, b2, eps, bc1, bc2, lr, wd) }
+}
+
+/// Vector mirror of the scalar AdamW loop, operation for operation.
+/// Note the scalar second-moment update parses as `β₂v + ((1-β₂)g)·g`
+/// — multiplication is not associative in IEEE, so the vector form
+/// keeps that exact grouping.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn adamw_f64_avx2(
+    p: &mut [f64],
+    g: &[f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    b1: f64,
+    b2: f64,
+    eps: f64,
+    bc1: f64,
+    bc2: f64,
+    lr: f64,
+    wd: f64,
+) {
+    let n = p.len();
+    let pp = p.as_mut_ptr();
+    let gp = g.as_ptr();
+    let mp = m.as_mut_ptr();
+    let vp = v.as_mut_ptr();
+    let b1v = _mm256_set1_pd(b1);
+    let ob1v = _mm256_set1_pd(1.0 - b1);
+    let b2v = _mm256_set1_pd(b2);
+    let ob2v = _mm256_set1_pd(1.0 - b2);
+    let bc1v = _mm256_set1_pd(bc1);
+    let bc2v = _mm256_set1_pd(bc2);
+    let epsv = _mm256_set1_pd(eps);
+    let lrv = _mm256_set1_pd(lr);
+    let wdv = _mm256_set1_pd(wd);
+    let mut i = 0usize;
+    while i + L64 <= n {
+        let gv = _mm256_loadu_pd(gp.add(i));
+        let pv = _mm256_loadu_pd(pp.add(i));
+        let mnew = _mm256_add_pd(
+            _mm256_mul_pd(b1v, _mm256_loadu_pd(mp.add(i))),
+            _mm256_mul_pd(ob1v, gv),
+        );
+        let vnew = _mm256_add_pd(
+            _mm256_mul_pd(b2v, _mm256_loadu_pd(vp.add(i))),
+            _mm256_mul_pd(_mm256_mul_pd(ob2v, gv), gv),
+        );
+        let mhat = _mm256_div_pd(mnew, bc1v);
+        let vhat = _mm256_div_pd(vnew, bc2v);
+        let denom = _mm256_add_pd(_mm256_sqrt_pd(vhat), epsv);
+        let upd = _mm256_add_pd(_mm256_div_pd(mhat, denom), _mm256_mul_pd(wdv, pv));
+        let pnew = _mm256_sub_pd(pv, _mm256_mul_pd(lrv, upd));
+        _mm256_storeu_pd(mp.add(i), mnew);
+        _mm256_storeu_pd(vp.add(i), vnew);
+        _mm256_storeu_pd(pp.add(i), pnew);
+        i += L64;
+    }
+    while i < n {
+        *mp.add(i) = b1 * *mp.add(i) + (1.0 - b1) * *gp.add(i);
+        *vp.add(i) = b2 * *vp.add(i) + (1.0 - b2) * *gp.add(i) * *gp.add(i);
+        let mhat = *mp.add(i) / bc1;
+        let vhat = *vp.add(i) / bc2;
+        *pp.add(i) -= lr * (mhat / (vhat.sqrt() + eps) + wd * *pp.add(i));
+        i += 1;
+    }
+}
+
+pub(super) fn momentum_f64(m: &mut [f64], g: &[f64], beta: f64) {
+    debug_assert_eq!(m.len(), g.len());
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { momentum_f64_avx2(m, g, beta) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn momentum_f64_avx2(m: &mut [f64], g: &[f64], beta: f64) {
+    let n = m.len();
+    let mp = m.as_mut_ptr();
+    let gp = g.as_ptr();
+    let bv = _mm256_set1_pd(beta);
+    let obv = _mm256_set1_pd(1.0 - beta);
+    let mut i = 0usize;
+    while i + L64 <= n {
+        let mnew = _mm256_add_pd(
+            _mm256_mul_pd(bv, _mm256_loadu_pd(mp.add(i))),
+            _mm256_mul_pd(obv, _mm256_loadu_pd(gp.add(i))),
+        );
+        _mm256_storeu_pd(mp.add(i), mnew);
+        i += L64;
+    }
+    while i < n {
+        *mp.add(i) = beta * *mp.add(i) + (1.0 - beta) * *gp.add(i);
+        i += 1;
+    }
+}
+
+pub(super) fn sgd_f64(p: &mut [f64], m: &mut [f64], g: &[f64], beta: f64, lr: f64, wdd: f64) {
+    debug_assert!(m.len() == p.len() && g.len() == p.len());
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { sgd_f64_avx2(p, m, g, beta, lr, wdd) }
+}
+
+/// `m = β m + (1-β) g; p -= lr·m + (lr·wdd)·p` — the scalar loop's
+/// `lr * wdd * p` groups as `(lr·wdd)·p`, so the product is hoisted
+/// into one broadcast (same IEEE value every element).
+#[target_feature(enable = "avx2")]
+unsafe fn sgd_f64_avx2(p: &mut [f64], m: &mut [f64], g: &[f64], beta: f64, lr: f64, wdd: f64) {
+    let n = p.len();
+    let pp = p.as_mut_ptr();
+    let mp = m.as_mut_ptr();
+    let gp = g.as_ptr();
+    let bv = _mm256_set1_pd(beta);
+    let obv = _mm256_set1_pd(1.0 - beta);
+    let lrv = _mm256_set1_pd(lr);
+    let lrwdv = _mm256_set1_pd(lr * wdd);
+    let mut i = 0usize;
+    while i + L64 <= n {
+        let mnew = _mm256_add_pd(
+            _mm256_mul_pd(bv, _mm256_loadu_pd(mp.add(i))),
+            _mm256_mul_pd(obv, _mm256_loadu_pd(gp.add(i))),
+        );
+        let pv = _mm256_loadu_pd(pp.add(i));
+        let step = _mm256_add_pd(_mm256_mul_pd(lrv, mnew), _mm256_mul_pd(lrwdv, pv));
+        _mm256_storeu_pd(mp.add(i), mnew);
+        _mm256_storeu_pd(pp.add(i), _mm256_sub_pd(pv, step));
+        i += L64;
+    }
+    while i < n {
+        *mp.add(i) = beta * *mp.add(i) + (1.0 - beta) * *gp.add(i);
+        *pp.add(i) -= lr * *mp.add(i) + lr * wdd * *pp.add(i);
+        i += 1;
+    }
+}
+
+pub(super) fn decayed_step_f64(p: &mut [f64], o: &[f64], rho: f64, lrwd: f64) {
+    debug_assert_eq!(p.len(), o.len());
+    // SAFETY: table entry installed only after AVX2 detection
+    unsafe { decayed_step_f64_avx2(p, o, rho, lrwd) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn decayed_step_f64_avx2(p: &mut [f64], o: &[f64], rho: f64, lrwd: f64) {
+    let n = p.len();
+    let pp = p.as_mut_ptr();
+    let op = o.as_ptr();
+    let rv = _mm256_set1_pd(rho);
+    let wv = _mm256_set1_pd(lrwd);
+    let mut i = 0usize;
+    while i + L64 <= n {
+        let pv = _mm256_loadu_pd(pp.add(i));
+        let step = _mm256_add_pd(
+            _mm256_mul_pd(rv, _mm256_loadu_pd(op.add(i))),
+            _mm256_mul_pd(wv, pv),
+        );
+        _mm256_storeu_pd(pp.add(i), _mm256_sub_pd(pv, step));
+        i += L64;
+    }
+    while i < n {
+        *pp.add(i) -= rho * *op.add(i) + lrwd * *pp.add(i);
+        i += 1;
+    }
+}

@@ -269,6 +269,15 @@ fn info_cmd() -> Result<()> {
         }
     );
     println!("native backend: always available (pure Rust, no artifacts)");
+    {
+        use spectron::linalg::simd;
+        println!(
+            "simd: active={} detected={} (REPRO_SIMD={})",
+            simd::active().name(),
+            simd::detected().name(),
+            std::env::var("REPRO_SIMD").unwrap_or_else(|_| "unset".into()),
+        );
+    }
     println!("{:<28} {:>8} {:>11} {:>11} {:>10}", "variant", "model", "opt", "params", "state");
     for (name, v) in &reg.variants {
         let (p, s) = match &built {

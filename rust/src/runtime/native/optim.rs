@@ -16,7 +16,7 @@ use anyhow::{anyhow, Result};
 
 use super::kernels::{self, power_iter, power_iter_inplace, PowerScratch, K_NS, K_POWER};
 use crate::config::VariantCfg;
-use crate::linalg::{self, newton_schulz, Mat};
+use crate::linalg::{self, newton_schulz, simd, Mat};
 use crate::runtime::layout::{
     factor_pairs, is_factorized, matrix_param_names, param_names,
 };
@@ -134,7 +134,10 @@ pub struct Info {
 /// The element-independent updates below are chunk-parallel: each pool
 /// task owns a contiguous index range (`pool::chunk_bounds`) and every
 /// element's arithmetic is untouched, so results are bit-identical to
-/// the serial loops at any thread count.
+/// the serial loops at any thread count. Within a chunk the loops run
+/// through the [`simd`] dispatch table (lane = distinct parameter
+/// index, per-element operation order unchanged — same bit-identity
+/// story one level down, orthogonal to the thread partition).
 fn adamw_range(
     p: &mut [f64],
     g: &[f64],
@@ -145,13 +148,7 @@ fn adamw_range(
     lr: f64,
     wd: f64,
 ) {
-    for i in 0..p.len() {
-        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
-        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
-        let mhat = m[i] / bc1;
-        let vhat = v[i] / bc2;
-        p[i] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + wd * p[i]);
-    }
+    simd::adamw_f64(p, g, m, v, ADAM_B1, ADAM_B2, ADAM_EPS, bc1, bc2, lr, wd);
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -185,9 +182,7 @@ fn momentum_update(mom: &mut [f64], g: &[f64], threads: usize) {
     let moms = DisjointMut::new(mom);
     pool::chunked_for(threads, n, &|lo, hi| {
         let mm = unsafe { moms.range_mut(lo, hi - lo) };
-        for (k, m) in mm.iter_mut().enumerate() {
-            *m = MOMENTUM * *m + (1.0 - MOMENTUM) * g[lo + k];
-        }
+        simd::momentum_f64(mm, &g[lo..hi], MOMENTUM);
     });
 }
 
@@ -200,11 +195,7 @@ fn sgd_update(p: &mut [f64], mom: &mut [f64], g: &[f64], lr: f64, wdd: f64, thre
     pool::chunked_for(threads, n, &|lo, hi| {
         let pp = unsafe { ps.range_mut(lo, hi - lo) };
         let mm = unsafe { ms.range_mut(lo, hi - lo) };
-        let gg = &g[lo..hi];
-        for i in 0..pp.len() {
-            mm[i] = MOMENTUM * mm[i] + (1.0 - MOMENTUM) * gg[i];
-            pp[i] -= lr * mm[i] + lr * wdd * pp[i];
-        }
+        simd::sgd_f64(pp, mm, &g[lo..hi], MOMENTUM, lr, wdd);
     });
 }
 
@@ -348,9 +339,8 @@ pub fn optimizer_step_scratch(
         let (mm, nn) = (mom.shape[1], mom.shape[2]);
         kernels::newton_schulz_stacked_into(&mom.data, layers, mm, nn, threads, &mut scratch.oa);
         let p = tensors.get_mut(n).expect("matrix param");
-        for (pv, ov) in p.data.iter_mut().zip(&scratch.oa) {
-            *pv -= lr * *ov + lr * wd * *pv;
-        }
+        let np = p.data.len();
+        simd::decayed_step_f64(&mut p.data, &scratch.oa[..np], lr, lr * wd);
     }
     if opt == "muon" {
         return Ok(info);
@@ -436,14 +426,18 @@ pub fn optimizer_step_scratch(
         for l in 0..layers {
             let rho = lr / (sig_a[l] + sig_b[l] + 1.0);
             let (pa, pb) = (am * ar, bm * br);
-            for i in 0..pa {
-                let idx = l * pa + i;
-                a_t.data[idx] -= rho * oa[idx] + lr * wd * a_t.data[idx];
-            }
-            for i in 0..pb {
-                let idx = l * pb + i;
-                b_t.data[idx] -= rho * ob[idx] + lr * wd * b_t.data[idx];
-            }
+            simd::decayed_step_f64(
+                &mut a_t.data[l * pa..(l + 1) * pa],
+                &oa[l * pa..(l + 1) * pa],
+                rho,
+                lr * wd,
+            );
+            simd::decayed_step_f64(
+                &mut b_t.data[l * pb..(l + 1) * pb],
+                &ob[l * pb..(l + 1) * pb],
+                rho,
+                lr * wd,
+            );
         }
 
         if *base == cfg.telemetry_matrix || !picked {

@@ -13,6 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicIsize, Ordering};
 
 use spectron::config::Registry;
+use spectron::linalg::simd;
 use spectron::runtime::{NativeBackend, Precision};
 use spectron::util::rng::Pcg64;
 
@@ -87,12 +88,28 @@ fn steady_loop(precision: Precision) {
     }
 }
 
-/// One test, both precisions in sequence: the live-byte counter is
-/// process-global, so a concurrently running sibling test (or the
-/// harness thread printing its result) would race the baseline. A
-/// single test keeps the whole binary quiescent during measurement.
+/// One test, both precisions and both SIMD tiers in sequence: the
+/// live-byte counter is process-global, so a concurrently running
+/// sibling test (or the harness thread printing its result) would race
+/// the baseline. A single test keeps the whole binary quiescent during
+/// measurement.
+///
+/// The SIMD dispatch table is resolved (env read + cpuid) up front,
+/// before any warmup: resolution allocates a transient `String` for
+/// `REPRO_SIMD`, and pulling it forward proves the steady loop itself
+/// stays at zero net growth under both the portable and the detected
+/// vector table (docs/adr/010-simd-microkernels.md).
 #[test]
 fn training_loop_has_zero_net_per_step_heap_growth() {
+    let _ = simd::active(); // resolve REPRO_SIMD + cpuid outside the loop
+    let vec_lvl = simd::detected();
+    simd::force(Some(simd::Level::Scalar));
     steady_loop(Precision::F64);
     steady_loop(Precision::F32);
+    if vec_lvl != simd::Level::Scalar {
+        simd::force(Some(vec_lvl));
+        steady_loop(Precision::F64);
+        steady_loop(Precision::F32);
+    }
+    simd::force(None);
 }

@@ -506,6 +506,147 @@ fn prop_native_train_step_parallel_bit_identity() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// SIMD microkernels: vectorized == forced-scalar bit-identity
+// (DESIGN.md §Native tensor core; docs/adr/010-simd-microkernels.md)
+// ---------------------------------------------------------------------------
+
+/// Serializes tests that pin the process-wide SIMD dispatch override:
+/// `simd::force` is global, so two tests flipping it concurrently under
+/// the threaded harness would observe each other's tier mid-compare.
+static SIMD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn same_bits_f64(want: &[f64], got: &[f64]) -> bool {
+    want.len() == got.len()
+        && want.iter().zip(got).all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+fn same_bits_f32(want: &[f32], got: &[f32]) -> bool {
+    want.len() == got.len()
+        && want.iter().zip(got).all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+/// Every dispatched kernel — matmul (row-parallel at 1/2/4 threads),
+/// matvec, transposed matvec, and the blocked transpose — is
+/// bit-identical to the forced-scalar portable path in both precisions,
+/// across shapes straddling the vector lane widths (4-wide f64 /
+/// 8-wide f32, including remainder lanes) and the per-`Elem` tile
+/// edges (64 / 128). On machines with no vector tier this degenerates
+/// to scalar-vs-scalar, which still exercises the force plumbing.
+#[test]
+fn prop_simd_matches_scalar_bits() {
+    use spectron::linalg::simd;
+    let _guard = SIMD_LOCK.lock().unwrap();
+    let vec_lvl = simd::detected();
+    check("simd vs scalar bits", |rng| {
+        let dims = [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 17, 31, 33, 63, 64, 65, 127, 129];
+        let m = *rng.choice(&dims);
+        let k = *rng.choice(&dims);
+        let n = *rng.choice(&dims);
+        let threads = *rng.choice(&[1usize, 2, 4]);
+
+        let a = Mat::randn(m, k, rng);
+        let b = Mat::randn(k, n, rng);
+        let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let af = Mat::<f32>::randn(m, k, rng);
+        let bf = Mat::<f32>::randn(k, n, rng);
+        let xf: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let yf: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+
+        simd::force(Some(simd::Level::Scalar));
+        let mm_s = a.matmul_par(&b, threads);
+        let mv_s = a.matvec(&x);
+        let mt_s = a.matvec_t(&y);
+        let tr_s = a.t();
+        let fmm_s = af.matmul_par(&bf, threads);
+        let fmv_s = af.matvec(&xf);
+        let fmt_s = af.matvec_t(&yf);
+        let ftr_s = af.t();
+
+        simd::force(Some(vec_lvl));
+        let mm_v = a.matmul_par(&b, threads);
+        let mv_v = a.matvec(&x);
+        let mt_v = a.matvec_t(&y);
+        let tr_v = a.t();
+        let fmm_v = af.matmul_par(&bf, threads);
+        let fmv_v = af.matvec(&xf);
+        let fmt_v = af.matvec_t(&yf);
+        let ftr_v = af.t();
+        simd::force(None);
+
+        let tag = format!("{m}x{k}x{n} threads={threads} tier={}", vec_lvl.name());
+        if !same_bits_f64(&mm_s.data, &mm_v.data) {
+            return Err(format!("matmul f64 {tag}"));
+        }
+        if !same_bits_f64(&mv_s, &mv_v) {
+            return Err(format!("matvec f64 {tag}"));
+        }
+        if !same_bits_f64(&mt_s, &mt_v) {
+            return Err(format!("matvec_t f64 {tag}"));
+        }
+        if !same_bits_f64(&tr_s.data, &tr_v.data) {
+            return Err(format!("transpose f64 {tag}"));
+        }
+        if !same_bits_f32(&fmm_s.data, &fmm_v.data) {
+            return Err(format!("matmul f32 {tag}"));
+        }
+        if !same_bits_f32(&fmv_s, &fmv_v) {
+            return Err(format!("matvec f32 {tag}"));
+        }
+        if !same_bits_f32(&fmt_s, &fmt_v) {
+            return Err(format!("matvec_t f32 {tag}"));
+        }
+        if !same_bits_f32(&ftr_s.data, &ftr_v.data) {
+            return Err(format!("transpose f32 {tag}"));
+        }
+        Ok(())
+    });
+}
+
+/// A FULL native train step — forward, backward, Spectron optimizer
+/// (every elementwise update now routed through the dispatch table),
+/// telemetry — is bit-identical between the forced-scalar table and the
+/// detected vector tier (the `REPRO_SIMD=off` vs `auto` contract), at
+/// thread budgets 1/2/4.
+#[test]
+fn prop_native_train_step_simd_bit_identity() {
+    use spectron::linalg::simd;
+    let _guard = SIMD_LOCK.lock().unwrap();
+    let vec_lvl = simd::detected();
+    let reg = Registry::load().unwrap();
+    let mut cfg = reg.variant("fact-z0-spectron").unwrap().clone();
+    cfg.model.vocab = 48;
+    cfg.model.seq_len = 10;
+    cfg.batch = 2;
+    let (b, w) = (cfg.batch, cfg.model.seq_len + 1);
+    let vocab = cfg.model.vocab;
+    check("native step simd bits", |rng| {
+        let threads = *rng.choice(&[1usize, 2, 4]);
+        let seed = rng.below(1000);
+        let knobs = [20.0, 0.02, 0.01, 0.1, 0.0, 0.0, 0.0, 0.0];
+        let be = NativeBackend::with_threads(&cfg, threads).map_err(|e| e.to_string())?;
+        let s0 = be.init_state(seed, &knobs);
+        let toks: Vec<i32> = (0..b * w).map(|_| rng.below(vocab as u64) as i32).collect();
+        simd::force(Some(simd::Level::Scalar));
+        let want = be.step_state(&s0, &toks);
+        simd::force(Some(vec_lvl));
+        let got = be.step_state(&s0, &toks);
+        simd::force(None);
+        let want = want.map_err(|e| e.to_string())?;
+        let got = got.map_err(|e| e.to_string())?;
+        for (i, (a, c)) in want.iter().zip(&got).enumerate() {
+            if a.to_bits() != c.to_bits() {
+                return Err(format!(
+                    "state slot {i} differs at threads={threads} tier={}",
+                    vec_lvl.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// The f32 compute path contract (docs/adr/008-f32-compute-path.md):
 /// for random shrunken variants, the f32 forward's logits (via
 /// `grad_vec`'s loss and `logits_at`) are bit-identical across thread
